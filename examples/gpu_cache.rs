@@ -1,0 +1,48 @@
+//! GPU caching workload (paper §6.6): device hash table caching a
+//! host-side store with FIFO eviction, sweeping the cache-to-data ratio.
+//!
+//! Run: `cargo run --release --example gpu_cache [data_size]`
+
+use std::sync::Arc;
+
+use warpspeed::apps::caching::{GpuCache, HostStore};
+use warpspeed::tables::{build_table, TableKind};
+use warpspeed::workloads::keys::{distinct_keys, UniverseDraws};
+
+fn main() {
+    let data_size: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let n_queries = data_size * 4;
+    let data = distinct_keys(data_size, 0xDA7A);
+    println!("dataset: {data_size} keys; {n_queries} uniform queries per point\n");
+    println!("{:>7} {:>14} {:>10} {:>9} {:>12}", "ratio%", "table", "Mops/s", "hit-rate", "evictions");
+    for ratio in [0.05, 0.10, 0.25, 0.50, 0.70] {
+        for kind in [TableKind::P2Meta, TableKind::IcebergMeta, TableKind::Double, TableKind::Chaining, TableKind::Cuckoo] {
+            let table = build_table(kind, (data_size as f64 * ratio) as usize + 64);
+            let store = HostStore::new(data.iter().map(|&k| (k, k ^ 0xCAFE)));
+            let Some(mut cache) = GpuCache::new(Arc::clone(&table), store) else {
+                println!("{:>7.0} {:>14} {:>10} (cannot run: unstable design)", ratio * 100.0, kind.paper_name(), "-");
+                continue;
+            };
+            let mut draws = UniverseDraws::new(&data, 0xD1CE);
+            let start = std::time::Instant::now();
+            for _ in 0..n_queries {
+                let k = draws.next_key();
+                let v = cache.get(k).expect("all keys exist in the store");
+                debug_assert_eq!(v, k ^ 0xCAFE);
+            }
+            let dt = start.elapsed().as_secs_f64();
+            println!(
+                "{:>7.0} {:>14} {:>10.2} {:>8.1}% {:>12}",
+                ratio * 100.0,
+                kind.paper_name(),
+                n_queries as f64 / dt / 1e6,
+                cache.hit_rate() * 100.0,
+                cache.evictions
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,88 @@
+//! Quickstart: build a concurrent table, exercise the paper's API
+//! (upsert / query / erase / compound upserts), run concurrent writers,
+//! and finish with the three-layer AOT path (PJRT bulk query) if
+//! artifacts are present.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+use std::thread;
+
+use warpspeed::prng::Xoshiro256pp;
+use warpspeed::runtime::{artifacts_dir, BulkQueryEngine};
+use warpspeed::tables::kernel_table::KernelTable;
+use warpspeed::tables::{build_table, TableKind, UpsertOp, UpsertResult};
+
+fn main() {
+    // 1. Build: pick any of the paper's eight designs.
+    let table = build_table(TableKind::P2Meta, 1 << 16);
+    println!("built {} with capacity {}", table.name(), table.capacity());
+
+    // 2. The API surface (paper §5.1).
+    assert_eq!(
+        table.upsert(42, 1000, &UpsertOp::InsertIfUnique),
+        UpsertResult::Inserted
+    );
+    assert_eq!(table.query(42), Some(1000));
+    // Compound upsert: atomic accumulate (the k-mer-counting use case).
+    table.upsert(42, 17, &UpsertOp::AddAssign);
+    assert_eq!(table.query(42), Some(1017));
+    // Custom merge callback: keep the max.
+    let max_merge = |old: u64, new: u64| old.max(new);
+    table.upsert(42, 500, &UpsertOp::Custom(&max_merge));
+    assert_eq!(table.query(42), Some(1017));
+    assert!(table.erase(42));
+    println!("single-thread API: OK");
+
+    // 3. Full concurrency: simultaneous inserts, queries, deletes.
+    let writers = 4;
+    let per = 10_000usize;
+    let mut hs = Vec::new();
+    for w in 0..writers {
+        let t = Arc::clone(&table);
+        hs.push(thread::spawn(move || {
+            let mut rng = Xoshiro256pp::new(w as u64 + 1);
+            for i in 0..per {
+                let k = (w as u64 + 1) << 48 | i as u64 + 1;
+                t.upsert(k, rng.next_u64() >> 1, &UpsertOp::Overwrite);
+                if i % 3 == 0 {
+                    std::hint::black_box(t.query(k));
+                }
+                if i % 7 == 0 {
+                    t.erase(k);
+                }
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    println!(
+        "concurrent phase: {} live keys, all probes consistent",
+        table.len()
+    );
+
+    // 4. Three-layer path: snapshot → AOT Pallas kernel via PJRT.
+    match BulkQueryEngine::load(&artifacts_dir()) {
+        Ok(engine) => {
+            let mut snap = KernelTable::new(engine.nb, engine.b);
+            let mut rng = Xoshiro256pp::new(9);
+            let mut keys = Vec::new();
+            while keys.len() < 10_000 {
+                let k = (rng.next_u64() as u32) | 1;
+                if snap.insert(k, k ^ 0xAA55) {
+                    keys.push(k);
+                }
+            }
+            let results = engine.query_all(&snap, &keys).expect("bulk query");
+            let hits = results.iter().filter(|r| r.is_some()).count();
+            assert_eq!(hits, keys.len(), "AOT kernel must find every key");
+            for (k, r) in keys.iter().zip(&results) {
+                assert_eq!(*r, Some(k ^ 0xAA55));
+            }
+            println!("AOT PJRT bulk query: {hits}/{} found — parity OK", keys.len());
+        }
+        Err(e) => println!("AOT path skipped ({e:#}); run `make artifacts`"),
+    }
+    println!("quickstart complete");
+}

@@ -1,0 +1,53 @@
+//! YCSB over the coordinator (paper §6.8 as a served workload): the
+//! sharded coordinator executes batched Zipfian A/B/C streams, reporting
+//! throughput per workload — the "database serving" shape of the paper's
+//! evaluation, driven through the L3 router/batcher/executor stack.
+//!
+//! Run: `cargo run --release --example ycsb_server [universe_size]`
+
+use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op};
+use warpspeed::tables::TableKind;
+use warpspeed::workloads::keys::distinct_keys;
+use warpspeed::workloads::ycsb::{Workload, YcsbOp, YcsbStream};
+
+fn main() {
+    let universe_size: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    for kind in [TableKind::Double, TableKind::DoubleMeta, TableKind::P2Meta, TableKind::Chaining] {
+        let coord = Coordinator::new(CoordinatorConfig {
+            kind,
+            total_slots: universe_size * 100 / 85,
+            n_shards: 8,
+            n_workers: 2,
+            max_batch: 4096,
+        });
+        let universe = distinct_keys(universe_size, 0x4C5B);
+        // Pre-load every key (paper setup).
+        let start = std::time::Instant::now();
+        coord.run_stream(universe.iter().map(|&k| Op::Upsert(k, k ^ 9)));
+        let load_dt = start.elapsed().as_secs_f64();
+        print!(
+            "{:14} load {:7.2} Mops/s |",
+            kind.paper_name(),
+            universe.len() as f64 / load_dt / 1e6
+        );
+        for w in Workload::ALL {
+            let mut stream = YcsbStream::new(&universe, w, 7);
+            let n_ops = universe_size;
+            let ops: Vec<Op> = (0..n_ops)
+                .map(|_| match stream.next_op() {
+                    YcsbOp::Read(k) => Op::Query(k),
+                    YcsbOp::Update(k, v) => Op::Upsert(k, v),
+                })
+                .collect();
+            let start = std::time::Instant::now();
+            let results = coord.run_stream(ops);
+            let dt = start.elapsed().as_secs_f64();
+            assert_eq!(results.len(), n_ops);
+            print!(" {}: {:7.2} Mops/s", w.name(), n_ops as f64 / dt / 1e6);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: vectorized MurmurHash3 fmix32.
+
+This is the hash used by the device-format snapshot tables. It MUST stay
+bit-identical to ``rust/src/hash.rs::fmix32`` — the Rust coordinator builds
+table snapshots with that function and the compiled kernel must map keys to
+the same buckets.
+
+Pallas is lowered with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation). The kernel body is pure vector ALU work — on a real
+TPU it maps onto the VPU with the query block resident in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fmix32_math(k):
+    """The fmix32 finalizer on uint32 lanes (shared by kernel and oracle)."""
+    k = k.astype(jnp.uint32)
+    k = k ^ (k >> 16)
+    k = k * jnp.uint32(0x85EBCA6B)
+    k = k ^ (k >> 13)
+    k = k * jnp.uint32(0xC2B2AE35)
+    k = k ^ (k >> 16)
+    return k
+
+
+def _fmix32_kernel(x_ref, o_ref):
+    o_ref[...] = fmix32_math(x_ref[...])
+
+
+def fmix32_pallas(x, *, block: int = 256):
+    """Vectorized fmix32 as a Pallas call, tiled over 1-D blocks.
+
+    The BlockSpec expresses the HBM→VMEM schedule: each grid step hashes
+    one `block`-wide stripe of keys (the tile-per-warp analog of the
+    paper's cooperative groups).
+    """
+    n = x.shape[0]
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    return pl.pallas_call(
+        _fmix32_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(x)

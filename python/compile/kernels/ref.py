@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+No Pallas here: these are straight jnp/numpy implementations the kernels
+are checked against in ``python/tests/`` (pytest + hypothesis).
+``fmix32_ref`` additionally pins known vectors shared with
+``rust/src/hash.rs``.
+"""
+
+import jax.numpy as jnp
+
+from .fmix32 import fmix32_math
+from .probe import MAX_PROBES
+
+
+def fmix32_ref(x):
+    """Reference hash (identical math, no pallas_call)."""
+    return fmix32_math(jnp.asarray(x, dtype=jnp.uint32))
+
+
+# Known vectors shared with rust/src/hash.rs tests.
+FMIX32_VECTORS = [
+    (0, 0),
+    (1, 0x514E28B7),
+    (0xDEADBEEF, 0x0DE5C6A9),
+]
+
+
+def bulk_probe_ref(table_keys, table_vals, queries):
+    """Reference bulk query: per-query scalar walk, mirroring
+    ``KernelTable::query`` in Rust (including the probe cap and the
+    early exit on an EMPTY slot)."""
+    import numpy as np
+
+    tk = np.asarray(table_keys, dtype=np.uint32)
+    tv = np.asarray(table_vals, dtype=np.uint32)
+    qs = np.asarray(queries, dtype=np.uint32)
+    nb, b = tk.shape
+    out_v = np.zeros(qs.shape, dtype=np.uint32)
+    out_f = np.zeros(qs.shape, dtype=np.uint32)
+    h = np.asarray(fmix32_ref(qs)) & np.uint32(nb - 1)
+    for i, q in enumerate(qs):
+        for p in range(MAX_PROBES):
+            row = (int(h[i]) + p) & (nb - 1)
+            hit = False
+            saw_empty = False
+            for s in range(b):
+                if tk[row, s] == q:
+                    out_v[i] = tv[row, s]
+                    out_f[i] = 1
+                    hit = True
+                    break
+                if tk[row, s] == 0:  # EMPTY sentinel
+                    saw_empty = True
+                    break
+            if hit or saw_empty:
+                break
+    return jnp.asarray(out_v), jnp.asarray(out_f)

@@ -1,0 +1,61 @@
+"""L2: the JAX compute graph the coordinator AOT-compiles.
+
+For a hash-table library the analog of the paper's "model" is the BSP
+bulk-query computation: hash a batch of keys and probe a device-format
+table snapshot. The graph calls the L1 Pallas kernels so everything lowers
+into one HLO module per artifact.
+
+AOT shapes (fixed at lowering time — PJRT executables are monomorphic;
+these MUST match ``rust/src/runtime/engine.rs``):
+
+* snapshot: ``keys[NB, B]`` / ``vals[NB, B]`` uint32, NB = 4096, B = 8
+* query batch: ``q[QUERY_BATCH]`` uint32, QUERY_BATCH = 2048
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fmix32 import fmix32_pallas
+from .kernels.probe import bulk_probe_pallas, MAX_PROBES
+
+# Artifact geometry — single source of truth for aot.py and the manifest.
+NB = 4096
+B = 8
+QUERY_BATCH = 2048
+
+
+def bulk_query(table_keys, table_vals, queries):
+    """The serving computation: returns ``(values, found)`` uint32."""
+    v, f = bulk_probe_pallas(table_keys, table_vals, queries)
+    return v, f
+
+
+def hash_batch(queries):
+    """Standalone vectorized hash (artifact used for hash offload and as
+    the smallest end-to-end smoke test of the AOT path)."""
+    return (fmix32_pallas(queries),)
+
+
+def example_args():
+    """ShapeDtypeStructs for lowering ``bulk_query``."""
+    return (
+        jax.ShapeDtypeStruct((NB, B), jnp.uint32),
+        jax.ShapeDtypeStruct((NB, B), jnp.uint32),
+        jax.ShapeDtypeStruct((QUERY_BATCH,), jnp.uint32),
+    )
+
+
+def hash_example_args():
+    return (jax.ShapeDtypeStruct((QUERY_BATCH,), jnp.uint32),)
+
+
+__all__ = [
+    "bulk_query",
+    "hash_batch",
+    "example_args",
+    "hash_example_args",
+    "NB",
+    "B",
+    "QUERY_BATCH",
+    "MAX_PROBES",
+]

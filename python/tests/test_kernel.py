@@ -1,0 +1,131 @@
+"""Kernel vs oracle — the core L1 correctness signal.
+
+Pallas kernels (interpret=True) are compared against the pure-jnp/numpy
+oracles in ``compile.kernels.ref``; hypothesis sweeps shapes and values.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.fmix32 import fmix32_pallas
+from compile.kernels.probe import bulk_probe_pallas, MAX_PROBES, QUERY_BLOCK
+from compile.kernels.ref import bulk_probe_ref, fmix32_ref, FMIX32_VECTORS
+
+
+# ---------------------------------------------------------------- fmix32
+
+def test_fmix32_known_vectors():
+    for x, want in FMIX32_VECTORS:
+        got = int(fmix32_ref(jnp.asarray([x], dtype=jnp.uint32))[0])
+        assert got == want, f"fmix32({x:#x}) = {got:#x}, want {want:#x}"
+
+
+def test_fmix32_pallas_matches_ref_basic():
+    xs = jnp.arange(1024, dtype=jnp.uint32) * jnp.uint32(2654435761)
+    np.testing.assert_array_equal(
+        np.asarray(fmix32_pallas(xs)), np.asarray(fmix32_ref(xs))
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    blocks=st.integers(min_value=1, max_value=8),
+)
+def test_fmix32_pallas_matches_ref_hypothesis(seed, blocks):
+    rng = np.random.default_rng(seed)
+    n = 256 * blocks
+    xs = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(fmix32_pallas(xs)), np.asarray(fmix32_ref(xs))
+    )
+
+
+def test_fmix32_is_a_bijection_on_samples():
+    # Finalizers are bijective; sampled outputs must not collide.
+    xs = np.random.default_rng(7).integers(0, 2**32, size=4096, dtype=np.uint32)
+    ys = np.asarray(fmix32_ref(jnp.asarray(xs)))
+    assert len(np.unique(ys)) == len(np.unique(xs))
+
+
+# ----------------------------------------------------------------- probe
+
+def build_snapshot(rng, nb, b, n_items):
+    """Host-side build identical to KernelTable::insert in Rust."""
+    tk = np.zeros((nb, b), dtype=np.uint32)
+    tv = np.zeros((nb, b), dtype=np.uint32)
+    inserted = {}
+    keys = rng.choice(2**32 - 1, size=n_items * 2, replace=False).astype(np.uint32)
+    keys = keys[keys != 0][:n_items]
+    h = np.asarray(fmix32_ref(jnp.asarray(keys))) & np.uint32(nb - 1)
+    for key, h0 in zip(keys, h):
+        val = np.uint32(int(key) ^ 0xABCD)
+        placed = False
+        for p in range(MAX_PROBES):
+            row = (int(h0) + p) & (nb - 1)
+            for s in range(b):
+                if tk[row, s] == key:
+                    placed = True
+                    break
+                if tk[row, s] == 0:
+                    tk[row, s] = key
+                    tv[row, s] = val
+                    inserted[int(key)] = int(val)
+                    placed = True
+                    break
+            if placed:
+                break
+    return tk, tv, inserted
+
+
+@pytest.mark.parametrize("nb,b,fill", [(64, 8, 0.5), (256, 8, 0.5), (64, 8, 0.25)])
+def test_probe_kernel_matches_ref(nb, b, fill):
+    rng = np.random.default_rng(42)
+    tk, tv, inserted = build_snapshot(rng, nb, b, int(nb * b * fill))
+    present = np.array(list(inserted.keys()), dtype=np.uint32)
+    absent = rng.integers(1, 2**32, size=256, dtype=np.uint32)
+    absent = absent[~np.isin(absent, present)]
+    qs = np.concatenate([present, absent])
+    pad = (-len(qs)) % QUERY_BLOCK
+    qs = np.concatenate([qs, np.ones(pad, dtype=np.uint32)]).astype(np.uint32)
+
+    got_v, got_f = bulk_probe_pallas(jnp.asarray(tk), jnp.asarray(tv), jnp.asarray(qs))
+    want_v, want_f = bulk_probe_ref(tk, tv, qs)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    # Values are only defined where found.
+    f = np.asarray(want_f).astype(bool)
+    np.testing.assert_array_equal(np.asarray(got_v)[f], np.asarray(want_v)[f])
+    # And every inserted key must actually be found with its value.
+    for i, q in enumerate(qs[: len(present)]):
+        assert np.asarray(got_f)[i] == 1, f"key {q:#x} not found"
+        assert int(np.asarray(got_v)[i]) == inserted[int(q)]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    nb_log=st.integers(min_value=4, max_value=8),
+    fill=st.floats(min_value=0.05, max_value=0.5),
+)
+def test_probe_kernel_matches_ref_hypothesis(seed, nb_log, fill):
+    rng = np.random.default_rng(seed)
+    nb, b = 2**nb_log, 8
+    tk, tv, _ = build_snapshot(rng, nb, b, max(1, int(nb * b * fill)))
+    qs = rng.integers(1, 2**32, size=QUERY_BLOCK, dtype=np.uint32)
+    got_v, got_f = bulk_probe_pallas(jnp.asarray(tk), jnp.asarray(tv), jnp.asarray(qs))
+    want_v, want_f = bulk_probe_ref(tk, tv, qs)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    f = np.asarray(want_f).astype(bool)
+    np.testing.assert_array_equal(np.asarray(got_v)[f], np.asarray(want_v)[f])
+
+
+def test_probe_empty_table_finds_nothing():
+    nb, b = 64, 8
+    tk = np.zeros((nb, b), dtype=np.uint32)
+    tv = np.zeros((nb, b), dtype=np.uint32)
+    qs = np.arange(1, QUERY_BLOCK + 1, dtype=np.uint32)
+    _, f = bulk_probe_pallas(jnp.asarray(tk), jnp.asarray(tv), jnp.asarray(qs))
+    assert int(np.asarray(f).sum()) == 0

@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_ablations` — design-choice ablations.
+use warpspeed::bench::{ablations, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", ablations::run(&env));
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_adversarial` — §4.1 adversarial correctness.
+use warpspeed::bench::{adversarial, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", adversarial::run(&env));
+}

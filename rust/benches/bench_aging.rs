@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_aging` — Figure 6.2 (aging).
+use warpspeed::bench::{aging, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", aging::run(&env));
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_caching` — Figure 6.3 (caching workload).
+use warpspeed::bench::{caching, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", caching::run(&env));
+}

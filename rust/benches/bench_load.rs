@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_load` — Figure 6.1 (load-factor sweep).
+use warpspeed::bench::{load, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", load::run(&env));
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_probes` — Table 5.1 (probe counts + BSP overhead).
+use warpspeed::bench::{probes, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", probes::run(&env));
+}

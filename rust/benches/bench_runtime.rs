@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_runtime` — AOT PJRT bulk-query path.
+use warpspeed::bench::{runtime, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", runtime::run(&env));
+}

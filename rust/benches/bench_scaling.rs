@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_scaling` — Figure 6.4 (size scaling).
+use warpspeed::bench::{scaling, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", scaling::run(&env));
+}

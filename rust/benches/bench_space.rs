@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_space` — §6.1 space usage.
+use warpspeed::bench::{space, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", space::run(&env));
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_sptc` — Table 6.1 (sparse tensor contraction).
+use warpspeed::bench::{sptc, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", sptc::run(&env));
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_sweep` — tile/bucket configuration sweep.
+use warpspeed::bench::{sweep, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", sweep::run(&env));
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_ycsb` — Table 6.2 (YCSB A/B/C).
+use warpspeed::bench::{ycsb, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", ycsb::run(&env));
+}

@@ -1,0 +1,241 @@
+//! Gallatin-style GPU slab allocator substrate (McCoy & Pandey, PPoPP'24).
+//!
+//! ChainingHT allocates its linked-list nodes from the "device" at kernel
+//! time; the paper uses the Gallatin allocator for this. We reproduce the
+//! allocator's user-visible behaviour: fixed-size slab allocation out of a
+//! pre-reserved device arena, lock-free alloc/free via an atomic free
+//! list, with node memory living inside a [`SimMem`] so that node accesses
+//! are probe-counted like any other global-memory traffic.
+//!
+//! Layout: the arena is `capacity` nodes of `node_slots` u64 slots each,
+//! aligned so one node == one 128-byte cache line when `node_slots == 16`
+//! (7 KV pairs + next pointer + pad, matching the paper's ChainingHT node).
+//!
+//! The free list is a Treiber stack threaded *through the nodes
+//! themselves* (slot 0 of a free node holds the next free node id + 1).
+//! An ABA tag rides in the high bits of the head word.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::gpusim::{probes, SimMem};
+
+/// Sentinel node id for "null pointer".
+pub const NIL: u64 = 0;
+
+pub struct SlabAllocator {
+    mem: SimMem,
+    node_slots: usize,
+    capacity: usize,
+    /// Treiber stack head: low 40 bits = node id (ids start at 1;
+    /// 0 = empty stack), high 24 bits = ABA tag.
+    head: AtomicU64,
+    /// Bump watermark: nodes never yet allocated.
+    watermark: AtomicU64,
+    live: AtomicU64,
+}
+
+impl SlabAllocator {
+    /// Reserve an arena of `capacity` nodes of `node_slots` 8-byte slots.
+    pub fn new(capacity: usize, node_slots: usize) -> Self {
+        assert!(capacity > 0 && node_slots >= 2);
+        Self {
+            mem: SimMem::new(capacity * node_slots),
+            node_slots,
+            capacity,
+            head: AtomicU64::new(0),
+            watermark: AtomicU64::new(0),
+            live: AtomicU64::new(0),
+        }
+    }
+
+    /// The backing device memory; node `id` occupies slots
+    /// `[base_slot(id), base_slot(id) + node_slots)`.
+    pub fn mem(&self) -> &SimMem {
+        &self.mem
+    }
+
+    #[inline(always)]
+    pub fn node_slots(&self) -> usize {
+        self.node_slots
+    }
+
+    #[inline(always)]
+    pub fn base_slot(&self, node_id: u64) -> usize {
+        debug_assert!(node_id != NIL);
+        (node_id as usize - 1) * self.node_slots
+    }
+
+    /// Number of live (allocated, not freed) nodes.
+    pub fn live(&self) -> u64 {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Total arena bytes (for the space-efficiency benchmark).
+    pub fn arena_bytes(&self) -> usize {
+        self.mem.bytes()
+    }
+
+    /// Allocate a node, returning its id (> 0), or `None` if the arena is
+    /// exhausted. The node's slots are NOT cleared except slot 0 (the
+    /// free-list link), mirroring device allocators; callers initialize.
+    pub fn alloc(&self) -> Option<u64> {
+        // Fast path: pop from the free stack.
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let node_id = head & 0xFF_FFFF_FFFF; // node ids start at 1; 0 = empty stack
+            if node_id == 0 {
+                break; // stack empty → bump
+            }
+            let next = self.mem.load_acquire(self.base_slot(node_id));
+            let tag = head >> 40;
+            let new_head = ((tag + 1) << 40) | next;
+            probes::count_atomic();
+            if self
+                .head
+                .compare_exchange(head, new_head, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.mem.store_relaxed(self.base_slot(node_id), 0);
+                self.live.fetch_add(1, Ordering::Relaxed);
+                return Some(node_id);
+            }
+        }
+        // Slow path: bump the watermark.
+        let w = self.watermark.fetch_add(1, Ordering::AcqRel);
+        probes::count_atomic();
+        if (w as usize) < self.capacity {
+            self.live.fetch_add(1, Ordering::Relaxed);
+            Some(w + 1)
+        } else {
+            self.watermark.fetch_sub(1, Ordering::AcqRel);
+            // Retry the stack once more in case of a concurrent free.
+            let head = self.head.load(Ordering::Acquire);
+            if head & 0xFF_FFFF_FFFF != 0 {
+                return self.alloc();
+            }
+            None
+        }
+    }
+
+    /// Return a node to the free stack. The caller must guarantee no other
+    /// thread still traverses it (the chaining table unlinks under the
+    /// bucket lock before freeing).
+    pub fn free(&self, node_id: u64) {
+        debug_assert!(node_id != NIL && (node_id as usize) <= self.capacity);
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let tag = head >> 40;
+            self.mem
+                .store_release(self.base_slot(node_id), head & 0xFF_FFFF_FFFF);
+            let new_head = ((tag + 1) << 40) | node_id;
+            probes::count_atomic();
+            if self
+                .head
+                .compare_exchange(head, new_head, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn alloc_returns_distinct_ids() {
+        let a = SlabAllocator::new(100, 16);
+        let mut seen = HashSet::new();
+        for _ in 0..100 {
+            let id = a.alloc().expect("arena should not be full");
+            assert!(seen.insert(id), "duplicate id {id}");
+        }
+        assert!(a.alloc().is_none(), "arena should be exhausted");
+        assert_eq!(a.live(), 100);
+    }
+
+    #[test]
+    fn free_then_alloc_reuses() {
+        let a = SlabAllocator::new(4, 16);
+        let ids: Vec<u64> = (0..4).map(|_| a.alloc().unwrap()).collect();
+        assert!(a.alloc().is_none());
+        a.free(ids[2]);
+        a.free(ids[0]);
+        let r1 = a.alloc().unwrap();
+        let r2 = a.alloc().unwrap();
+        assert!(a.alloc().is_none());
+        let mut got = vec![r1, r2];
+        got.sort_unstable();
+        let mut want = vec![ids[0], ids[2]];
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn node_slots_are_disjoint() {
+        let a = SlabAllocator::new(10, 16);
+        let x = a.alloc().unwrap();
+        let y = a.alloc().unwrap();
+        let bx = a.base_slot(x);
+        let by = a.base_slot(y);
+        assert!(bx.abs_diff(by) >= 16);
+        // Write into x's node; y's node must be untouched.
+        for i in 0..16 {
+            a.mem().store_release(bx + i, 0xAB);
+        }
+        for i in 0..16 {
+            assert_eq!(a.mem().load_acquire(by + i), 0);
+        }
+    }
+
+    #[test]
+    fn concurrent_alloc_free_never_duplicates() {
+        let a = Arc::new(SlabAllocator::new(256, 16));
+        let mut hs = vec![];
+        for t in 0..4 {
+            let a = Arc::clone(&a);
+            hs.push(thread::spawn(move || {
+                let mut mine = Vec::new();
+                for round in 0..500 {
+                    if let Some(id) = a.alloc() {
+                        // Stamp ownership and verify before free.
+                        let base = a.base_slot(id);
+                        a.mem().store_release(base + 1, t * 10_000 + round);
+                        mine.push((id, t * 10_000 + round));
+                    }
+                    if mine.len() > 32 {
+                        let (id, stamp) = mine.remove(0);
+                        let base = a.base_slot(id);
+                        assert_eq!(
+                            a.mem().load_acquire(base + 1),
+                            stamp,
+                            "node {id} corrupted — double allocation"
+                        );
+                        a.free(id);
+                    }
+                }
+                for (id, stamp) in mine {
+                    let base = a.base_slot(id);
+                    assert_eq!(a.mem().load_acquire(base + 1), stamp);
+                    a.free(id);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(a.live(), 0);
+    }
+
+    #[test]
+    fn arena_bytes_accounts_full_reservation() {
+        let a = SlabAllocator::new(8, 16);
+        assert_eq!(a.arena_bytes(), 8 * 16 * 8);
+    }
+}

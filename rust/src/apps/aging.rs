@@ -1,0 +1,202 @@
+//! Aging workload driver (paper §6.5, Figure 6.2).
+//!
+//! "All hash tables are first filled to 85% load factor and then items are
+//! inserted and removed in a set pattern... In each iteration, a new slice
+//! of data equal to 1% of the total keys is inserted and the oldest 1% of
+//! keys are removed. Queries are split into positive and negative queries,
+//! and a 1% slice of known positive and negative keys are queried."
+//!
+//! The driver owns the FIFO window of live keys and exposes one
+//! [`AgingDriver::run_iteration`] per benchmark tick, reporting per-kind
+//! operation counts so the harness can compute per-iteration throughput
+//! and probe counts exactly like Figure 6.2 / Table 5.1 (aging columns).
+
+use std::sync::Arc;
+
+use crate::tables::{ConcurrentMap, UpsertOp, UpsertResult};
+use crate::workloads::keys::distinct_keys;
+
+pub struct AgingDriver {
+    table: Arc<dyn ConcurrentMap>,
+    /// All keys that will ever exist, in insertion order.
+    universe: Vec<u64>,
+    /// Keys guaranteed never inserted (negative-query pool).
+    negatives: Vec<u64>,
+    /// FIFO window [oldest, next) of live keys.
+    oldest: usize,
+    next: usize,
+    /// Slice size per iteration (1% of live set).
+    pub slice: usize,
+}
+
+/// Operation counts of one aging iteration (for throughput accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterationOps {
+    pub inserts: u64,
+    pub insert_fails: u64,
+    pub pos_queries: u64,
+    pub pos_misses: u64,
+    pub neg_queries: u64,
+    pub neg_hits: u64,
+    pub deletes: u64,
+    pub delete_misses: u64,
+}
+
+impl IterationOps {
+    pub fn total(&self) -> u64 {
+        self.inserts + self.pos_queries + self.neg_queries + self.deletes
+    }
+}
+
+impl AgingDriver {
+    /// Fill `table` to 85% load factor; reserve enough fresh keys for
+    /// `max_iterations` churn slices.
+    pub fn new(table: Arc<dyn ConcurrentMap>, max_iterations: usize, seed: u64) -> Self {
+        let cap = table.capacity();
+        let fill = (cap as f64 * 0.85) as usize;
+        let slice = (fill / 100).max(1);
+        let universe = distinct_keys(fill + (max_iterations + 2) * slice, seed);
+        let negatives = distinct_keys(slice.max(1), seed ^ 0xFFFF_AAAA)
+            .into_iter()
+            .filter(|k| !universe.contains(k))
+            .collect();
+        let mut d = Self {
+            table,
+            universe,
+            negatives,
+            oldest: 0,
+            next: 0,
+            slice,
+        };
+        for _ in 0..fill {
+            d.insert_next();
+        }
+        d
+    }
+
+    fn insert_next(&mut self) -> bool {
+        if self.next >= self.universe.len() {
+            return false;
+        }
+        let k = self.universe[self.next];
+        let r = self.table.upsert(k, k ^ 0xA9, &UpsertOp::InsertIfUnique);
+        if r == UpsertResult::Inserted {
+            self.next += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Number of live keys in the FIFO window.
+    pub fn live(&self) -> usize {
+        self.next - self.oldest
+    }
+
+    /// Instrumented-mode accessor: insert the next fresh key (used by the
+    /// probe-counting harness to wrap individual ops in probe scopes).
+    pub fn insert_next_public(&mut self) -> bool {
+        self.insert_next()
+    }
+
+    /// Instrumented-mode accessor: some live key, salted for spread.
+    pub fn live_key(&self, salt: usize) -> u64 {
+        let live = self.live().max(1);
+        self.universe[self.oldest + (salt * 7919) % live]
+    }
+
+    /// Instrumented-mode accessor: pop the oldest live key (caller erases).
+    pub fn pop_oldest_key(&mut self) -> Option<u64> {
+        if self.oldest >= self.next {
+            return None;
+        }
+        let k = self.universe[self.oldest];
+        self.oldest += 1;
+        Some(k)
+    }
+
+    /// One aging iteration: insert a slice, query positive + negative
+    /// slices, delete the oldest slice. Returns the op counts.
+    pub fn run_iteration(&mut self, iter_idx: usize) -> IterationOps {
+        let mut ops = IterationOps::default();
+        // Insert 1% fresh keys.
+        for _ in 0..self.slice {
+            ops.inserts += 1;
+            if !self.insert_next() {
+                ops.insert_fails += 1;
+            }
+        }
+        // Positive queries: a 1% slice of live keys spread over the window.
+        let live = self.live().max(1);
+        for i in 0..self.slice {
+            let idx = self.oldest + (i * 7919 + iter_idx) % live;
+            let k = self.universe[idx];
+            ops.pos_queries += 1;
+            if self.table.query(k).is_none() {
+                ops.pos_misses += 1;
+            }
+        }
+        // Negative queries: keys never inserted.
+        for i in 0..self.slice {
+            let k = self.negatives[i % self.negatives.len()];
+            ops.neg_queries += 1;
+            if self.table.query(k).is_some() {
+                ops.neg_hits += 1;
+            }
+        }
+        // Delete the oldest 1%.
+        for _ in 0..self.slice {
+            if self.oldest >= self.next {
+                break;
+            }
+            let k = self.universe[self.oldest];
+            ops.deletes += 1;
+            if !self.table.erase(k) {
+                ops.delete_misses += 1;
+            }
+            self.oldest += 1;
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::{build_table, TableKind};
+
+    #[test]
+    fn aging_preserves_correctness_for_all_concurrent_designs() {
+        for kind in TableKind::CONCURRENT {
+            let t = build_table(kind, 4096);
+            let mut d = AgingDriver::new(t, 30, 0xA61);
+            for it in 0..30 {
+                let ops = d.run_iteration(it);
+                assert_eq!(
+                    ops.pos_misses, 0,
+                    "{kind:?}: live key missing at iteration {it}"
+                );
+                assert_eq!(ops.neg_hits, 0, "{kind:?}: phantom key at iteration {it}");
+                assert_eq!(
+                    ops.delete_misses, 0,
+                    "{kind:?}: delete lost a key at iteration {it}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn window_stays_near_85_percent() {
+        let t = build_table(TableKind::Double, 4096);
+        let cap = t.capacity();
+        let mut d = AgingDriver::new(t, 20, 7);
+        let expected = (cap as f64 * 0.85) as usize;
+        assert!(d.live() >= expected * 98 / 100);
+        for it in 0..20 {
+            d.run_iteration(it);
+        }
+        // Inserts == deletes per iteration → live set stays flat (modulo
+        // insert failures at saturation).
+        assert!(d.live() >= expected * 95 / 100 && d.live() <= expected * 105 / 100);
+    }
+}

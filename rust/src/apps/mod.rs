@@ -1,0 +1,8 @@
+//! Downstream applications (paper §6.5–§6.8 and §4.1):
+//! aging churn, GPU-cache-over-host-store, sparse tensor contraction, and
+//! the adversarial correctness benchmark.
+
+pub mod adversarial;
+pub mod aging;
+pub mod caching;
+pub mod sptc;

@@ -1,0 +1,115 @@
+//! Figure 6.2 — aging benchmark: aggregate per-iteration throughput.
+//!
+//! Tables are filled to 85% and churned (§6.5); per-iteration aggregate
+//! Mops/s is reported. The paper runs 1000 iterations on 100M slots; the
+//! default here is `env.iterations` on `env.slots` (same churn fractions).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::apps::aging::AgingDriver;
+use crate::gpusim::probes;
+use crate::tables::{build_table, TableKind};
+
+use super::{report, BenchEnv};
+
+/// Per-iteration aggregate Mops/s for one design.
+pub fn measure(kind: TableKind, slots: usize, iters: usize, seed: u64) -> Vec<f64> {
+    probes::set_enabled(false);
+    let t = build_table(kind, slots);
+    let mut d = AgingDriver::new(Arc::clone(&t), iters, seed);
+    let mut out = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let start = Instant::now();
+        let ops = d.run_iteration(i);
+        let dt = start.elapsed().as_secs_f64();
+        out.push(ops.total() as f64 / dt / 1e6);
+    }
+    probes::set_enabled(true);
+    out
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let kinds = TableKind::CONCURRENT;
+    let mut names = Vec::new();
+    let mut series = Vec::new();
+    for kind in kinds {
+        names.push(kind.paper_name().to_string());
+        series.push(measure(kind, env.slots, env.iterations, env.seed));
+    }
+    // Downsample to ≤50 x-points for readability.
+    let n = series[0].len();
+    let stride = n.div_ceil(50).max(1);
+    let xs: Vec<String> = (0..n).step_by(stride).map(|i| i.to_string()).collect();
+    let ds: Vec<(&str, Vec<f64>)> = names
+        .iter()
+        .zip(series.iter())
+        .map(|(n, s)| {
+            (
+                n.as_str(),
+                s.iter().step_by(stride).copied().collect::<Vec<f64>>(),
+            )
+        })
+        .collect();
+    let mut out = report::series(
+        "Figure 6.2 — aging: aggregate Mops/s per iteration",
+        "iter",
+        &xs,
+        &ds,
+    );
+    // Also report the averages (the paper quotes 1.35B/1.25B averages)
+    // plus the device-model estimate translated from *measured aging
+    // probe counts* — on this testbed the tables fit in the CPU's L3, so
+    // wall-clock is instruction-bound, while on the A40 throughput is
+    // probe-bound (weak caches); the model restores the paper's metric.
+    // See DESIGN.md §Substitutions.
+    let mut rows = Vec::new();
+    for (kind, (name, s)) in TableKind::CONCURRENT.iter().zip(names.iter().zip(series.iter())) {
+        let avg = s.iter().sum::<f64>() / s.len() as f64;
+        let (ai, apq, anq, ad) =
+            crate::bench::probes::aging_probes(*kind, slots_for_probes(env), 40, env.seed ^ 3);
+        let probes_avg = (ai + apq + anq + ad) / 4.0;
+        let (b, t) = kind.default_geometry();
+        let cfg = crate::gpusim::cost::WarpConfig {
+            bucket_size: b as u32,
+            tile_size: t as u32,
+        };
+        let est = crate::gpusim::cost::device_mops(
+            cfg,
+            &crate::gpusim::cost::OpProfile {
+                probes: probes_avg,
+                atomics: 2.0,
+                buckets_scanned: 1.5,
+            },
+        );
+        rows.push(vec![
+            name.clone(),
+            report::fmt_f(avg, 2),
+            report::fmt_f(probes_avg, 2),
+            report::fmt_f(est, 0),
+        ]);
+    }
+    out.push('\n');
+    out.push_str(&report::table(
+        "Figure 6.2 aggregate — measured avg Mops/s, aging probes/op, modelled A40 Mops",
+        &["table", "cpu-Mops", "probes/op", "est-A40-Mops"],
+        &rows,
+    ));
+    out
+}
+
+fn slots_for_probes(env: &BenchEnv) -> usize {
+    env.slots.min(1 << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aging_measures_positive_throughput() {
+        let s = measure(TableKind::P2Meta, 4096, 10, 1);
+        assert_eq!(s.len(), 10);
+        assert!(s.iter().all(|m| *m > 0.0));
+    }
+}

@@ -1,0 +1,117 @@
+//! Figure 6.3 — caching workload throughput vs cache-to-data ratio.
+//!
+//! "The benchmark uses a [dataset] with uniform-random queries... It runs
+//! multiple times per hash table, varying the table size from 1% to 70% of
+//! total keys." Unstable designs (CuckooHT) cannot run it (§6.6); the
+//! chaining table runs but its footprint grows.
+
+use std::sync::Arc;
+
+use crate::apps::caching::{GpuCache, HostStore};
+use crate::gpusim::probes;
+use crate::tables::{build_table, TableKind};
+use crate::workloads::keys::{distinct_keys, UniverseDraws};
+
+use super::{mops, report, BenchEnv};
+
+/// Throughput (Mops/s) of `n_queries` uniform cache accesses with the
+/// device table sized at `ratio` of the dataset. Returns None for designs
+/// that cannot run the workload.
+pub fn measure(
+    kind: TableKind,
+    data_size: usize,
+    ratio: f64,
+    n_queries: usize,
+    seed: u64,
+) -> Option<(f64, f64, usize)> {
+    probes::set_enabled(false);
+    let data = distinct_keys(data_size, seed);
+    let table = build_table(kind, ((data_size as f64) * ratio) as usize + 64);
+    let store = HostStore::new(data.iter().map(|&k| (k, k ^ 0xCAFE)));
+    let mut cache = GpuCache::new(Arc::clone(&table), store)?;
+    let mut draws = UniverseDraws::new(&data, seed ^ 0xBEEF);
+    // Warm up: one pass over the cache capacity.
+    for _ in 0..((data_size as f64 * ratio) as usize).min(n_queries) {
+        cache.get(draws.next_key());
+    }
+    let m = mops(n_queries, || {
+        for _ in 0..n_queries {
+            std::hint::black_box(cache.get(draws.next_key()));
+        }
+    });
+    probes::set_enabled(true);
+    Some((m, cache.hit_rate(), cache.device_bytes()))
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let data_size = env.slots; // dataset = base size; cache = ratio of it
+    let n_queries = env.slots * 2;
+    let ratios: Vec<f64> = vec![0.05, 0.10, 0.20, 0.35, 0.50, 0.70];
+    let kinds: Vec<TableKind> = TableKind::CONCURRENT.into_iter().collect();
+    let mut names = Vec::new();
+    let mut series = Vec::new();
+    for kind in kinds {
+        let mut ys = Vec::new();
+        let mut any = false;
+        for &r in &ratios {
+            match measure(kind, data_size, r, n_queries, env.seed) {
+                Some((m, _, _)) => {
+                    ys.push(m);
+                    any = true;
+                }
+                None => ys.push(f64::NAN),
+            }
+        }
+        if any {
+            names.push(kind.paper_name().to_string());
+            series.push(ys);
+        } else {
+            names.push(format!("{} (cannot run: unstable)", kind.paper_name()));
+            series.push(ys);
+        }
+    }
+    let xs: Vec<String> = ratios.iter().map(|r| format!("{:.0}", r * 100.0)).collect();
+    let ds: Vec<(&str, Vec<f64>)> = names
+        .iter()
+        .zip(series.iter())
+        .map(|(n, s)| (n.as_str(), s.clone()))
+        .collect();
+    report::series(
+        "Figure 6.3 — caching throughput (Mops/s) vs cache/data ratio %",
+        "ratio%",
+        &xs,
+        &ds,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caching_runs_for_stable_designs() {
+        let r = measure(TableKind::P2Meta, 4096, 0.3, 4000, 1);
+        let (m, hr, _) = r.expect("stable design must run");
+        assert!(m > 0.0);
+        assert!((0.0..=1.0).contains(&hr));
+    }
+
+    #[test]
+    fn caching_rejects_cuckoo() {
+        assert!(measure(TableKind::Cuckoo, 1024, 0.3, 100, 1).is_none());
+    }
+
+    #[test]
+    fn chaining_footprint_grows() {
+        let small = measure(TableKind::Chaining, 4096, 0.10, 6000, 2).unwrap();
+        // Footprint after heavy churn should exceed the nominal 10% table
+        // (the paper's 10% → 28% observation).
+        let nominal = build_table(TableKind::Chaining, 410).device_bytes();
+        assert!(
+            small.2 >= nominal,
+            "churned chaining footprint {} < nominal {}",
+            small.2,
+            nominal
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! Figure 6.1 — insert / query / delete throughput vs load factor.
+//!
+//! "In each iteration, the hash table is loaded to a set fill percentage
+//! ranging from 5% to 90%, incrementing in steps of 5%, and performance is
+//! measured for both insertions and queries at that fill percentage. For
+//! deletions, we remove 5% of existing keys at a time until the hash table
+//! is empty." Includes the Warpcore-like BSP baseline as in §6.3.
+
+use crate::gpusim::probes;
+use crate::prng::Xoshiro256pp;
+use crate::tables::{build_table, TableKind, UpsertOp};
+use crate::workloads::keys::distinct_keys;
+
+use super::{mops, report, BenchEnv};
+
+pub struct LoadCurves {
+    pub load_factors: Vec<f64>,
+    /// Per design: (name, insert Mops at each lf, query Mops, delete Mops).
+    pub curves: Vec<(String, Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+pub fn measure(kind: TableKind, slots: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    probes::set_enabled(false);
+    let t = build_table(kind, slots);
+    let cap = t.capacity();
+    let ks = distinct_keys((cap as f64 * 0.9) as usize, seed);
+    let mut rng = Xoshiro256pp::new(seed ^ 77);
+    let lfs: Vec<f64> = (1..=18).map(|i| i as f64 * 0.05).collect();
+    let mut ins_mops = Vec::new();
+    let mut qry_mops = Vec::new();
+    let mut inserted = 0usize;
+    for &lf in &lfs {
+        let target = ((cap as f64) * lf) as usize;
+        let slice = &ks[inserted..target.min(ks.len())];
+        if slice.is_empty() {
+            ins_mops.push(f64::NAN);
+            qry_mops.push(f64::NAN);
+            continue;
+        }
+        ins_mops.push(mops(slice.len(), || {
+            for &k in slice {
+                t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+            }
+        }));
+        inserted = target.min(ks.len());
+        // Positive queries at this fill: sample uniformly among inserted.
+        let nq = slice.len();
+        let samples: Vec<u64> = (0..nq)
+            .map(|_| ks[rng.next_below(inserted as u64) as usize])
+            .collect();
+        qry_mops.push(mops(nq, || {
+            for &k in &samples {
+                std::hint::black_box(t.query(k));
+            }
+        }));
+    }
+    // Deletions: remove 5% at a time until empty.
+    let mut del_mops = Vec::new();
+    let step = inserted / lfs.len().max(1);
+    let mut removed = 0usize;
+    for _ in &lfs {
+        let hi = (removed + step).min(inserted);
+        let slice = &ks[removed..hi];
+        if slice.is_empty() {
+            del_mops.push(f64::NAN);
+            continue;
+        }
+        del_mops.push(mops(slice.len(), || {
+            for &k in slice {
+                t.erase(k);
+            }
+        }));
+        removed = hi;
+    }
+    probes::set_enabled(true);
+    (lfs, ins_mops, qry_mops, del_mops)
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let kinds: Vec<TableKind> = TableKind::CONCURRENT
+        .into_iter()
+        .chain([TableKind::WarpcoreLike])
+        .collect();
+    let mut lfs_shared: Vec<f64> = Vec::new();
+    let mut ins_series = Vec::new();
+    let mut qry_series = Vec::new();
+    let mut del_series = Vec::new();
+    let mut names = Vec::new();
+    for kind in kinds {
+        let (lfs, ins, qry, del) = measure(kind, env.slots, env.seed);
+        lfs_shared = lfs;
+        names.push(kind.paper_name().to_string());
+        ins_series.push(ins);
+        qry_series.push(qry);
+        del_series.push(del);
+    }
+    let xs: Vec<String> = lfs_shared.iter().map(|l| format!("{:.0}", l * 100.0)).collect();
+    let mut out = String::new();
+    for (title, data) in [
+        ("Figure 6.1a — insertions (Mops/s) vs load factor", &ins_series),
+        ("Figure 6.1b — queries (Mops/s) vs load factor", &qry_series),
+        ("Figure 6.1c — deletions (Mops/s) per removal step", &del_series),
+    ] {
+        let series: Vec<(&str, Vec<f64>)> = names
+            .iter()
+            .zip(data.iter())
+            .map(|(n, d)| (n.as_str(), d.clone()))
+            .collect();
+        out.push_str(&report::series(title, "lf%", &xs, &series));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_full_curves() {
+        let (lfs, ins, qry, del) = measure(TableKind::Double, 8192, 1);
+        assert_eq!(lfs.len(), 18);
+        assert_eq!(ins.len(), 18);
+        assert_eq!(qry.len(), 18);
+        assert_eq!(del.len(), 18);
+        assert!(ins.iter().all(|m| m.is_nan() || *m > 0.0));
+    }
+}

@@ -1,0 +1,98 @@
+//! The unified benchmarking framework (paper §6).
+//!
+//! One submodule per paper exhibit; each exposes a `run(&BenchEnv)` that
+//! measures and prints the corresponding table/figure in the same
+//! rows/series layout the paper uses. The `cargo bench` binaries under
+//! `rust/benches/` are thin wrappers over these, so every experiment is
+//! equally reachable from the `warpspeed` CLI and from `cargo bench`.
+//!
+//! Scaling: the paper's runs use 100M-slot tables and 1B-key workloads;
+//! the default here is 2^17 slots so the full suite completes in minutes
+//! on the 1-core testbed. Set `WARPSPEED_SCALE=<f64>` to scale all sizes
+//! multiplicatively, e.g. `WARPSPEED_SCALE=8` for 2^20-slot tables.
+
+pub mod ablations;
+pub mod aging;
+pub mod adversarial;
+pub mod caching;
+pub mod load;
+pub mod probes;
+pub mod report;
+pub mod runtime;
+pub mod scaling;
+pub mod space;
+pub mod sptc;
+pub mod sweep;
+pub mod ycsb;
+
+use std::time::Instant;
+
+/// Shared environment for all benchmarks.
+#[derive(Clone, Debug)]
+pub struct BenchEnv {
+    /// Base table size in slots.
+    pub slots: usize,
+    /// Aging / caching iteration counts.
+    pub iterations: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for BenchEnv {
+    fn default() -> Self {
+        let scale: f64 = std::env::var("WARPSPEED_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1.0);
+        Self {
+            slots: ((1usize << 17) as f64 * scale) as usize,
+            iterations: std::env::var("WARPSPEED_ITERS")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(100),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Time a closure over `n` operations; returns Mops/s.
+pub fn mops(n: usize, f: impl FnOnce()) -> f64 {
+    let start = Instant::now();
+    f();
+    let dt = start.elapsed().as_secs_f64();
+    if dt == 0.0 {
+        return f64::INFINITY;
+    }
+    n as f64 / dt / 1e6
+}
+
+/// Time a closure; returns seconds.
+pub fn seconds(f: impl FnOnce()) -> f64 {
+    let start = Instant::now();
+    f();
+    start.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mops_measures_throughput() {
+        let m = mops(1_000_000, || {
+            let mut x = 0u64;
+            for i in 0..1_000_000u64 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m > 0.0);
+    }
+
+    #[test]
+    fn env_default_scales() {
+        let e = BenchEnv::default();
+        assert!(e.slots >= 1024);
+        assert!(e.iterations > 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Table 5.1 — average cache-line probes (load + aging) and BSP query
+//! performance with concurrency overhead.
+//!
+//! Load probes: average probes per insert/query/delete as the table loads
+//! to 90%. Aging probes: averages over aging iterations (insert, positive
+//! query, negative query, delete). BSP columns: concurrent vs Phased query
+//! throughput at 90% load and the overhead percentage (§6.2).
+
+use std::sync::Arc;
+
+use crate::apps::aging::AgingDriver;
+use crate::gpusim::probes::{self, OpStats, ProbeScope};
+use crate::tables::{build_table, build_table_with, ConcurrencyMode, TableConfig, TableKind, UpsertOp};
+use crate::workloads::keys::distinct_keys;
+
+use super::{mops, report, BenchEnv};
+
+#[derive(Clone, Debug, Default)]
+pub struct ProbeRow {
+    pub name: String,
+    pub load_insert: f64,
+    pub load_query: f64,
+    pub load_delete: f64,
+    pub age_insert: f64,
+    pub age_pos_query: f64,
+    pub age_neg_query: f64,
+    pub age_delete: f64,
+    pub concurrent_mops: f64,
+    pub phased_mops: f64,
+}
+
+impl ProbeRow {
+    pub fn overhead_pct(&self) -> f64 {
+        if self.phased_mops <= 0.0 {
+            return 0.0;
+        }
+        ((self.phased_mops - self.concurrent_mops) / self.phased_mops * 100.0).max(0.0)
+    }
+}
+
+/// Measure load-phase probe counts for one design.
+pub fn load_probes(kind: TableKind, slots: usize, seed: u64) -> (f64, f64, f64) {
+    probes::set_enabled(true);
+    let t = build_table(kind, slots);
+    let target = (t.capacity() as f64 * 0.9) as usize;
+    let ks = distinct_keys(target, seed);
+    let mut ins = OpStats::default();
+    let mut qry = OpStats::default();
+    let mut del = OpStats::default();
+    for &k in &ks {
+        let s = ProbeScope::begin();
+        t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        ins.record(s.finish());
+    }
+    for &k in &ks {
+        let s = ProbeScope::begin();
+        std::hint::black_box(t.query(k));
+        qry.record(s.finish());
+    }
+    for &k in &ks {
+        let s = ProbeScope::begin();
+        t.erase(k);
+        del.record(s.finish());
+    }
+    (ins.avg(), qry.avg(), del.avg())
+}
+
+/// Measure aging probe counts (after `iters` churn iterations).
+pub fn aging_probes(kind: TableKind, slots: usize, iters: usize, seed: u64) -> (f64, f64, f64, f64) {
+    probes::set_enabled(true);
+    let t = build_table(kind, slots);
+    let mut d = AgingDriver::new(Arc::clone(&t), iters + 4, seed);
+    // Age without measuring first.
+    for i in 0..iters {
+        d.run_iteration(i);
+    }
+    // Then measure a few iterations with probe scopes around each op kind
+    // by re-using the driver slices manually.
+    let mut ins = OpStats::default();
+    let mut posq = OpStats::default();
+    let mut negq = OpStats::default();
+    let mut del = OpStats::default();
+    let negatives = distinct_keys(d.slice, seed ^ 0x99);
+    for extra in 0..2 {
+        // Instrumented iteration: wrap each op kind in its own scope.
+        for _ in 0..d.slice {
+            let s = ProbeScope::begin();
+            d.insert_next_public();
+            ins.record(s.finish());
+        }
+        for i in 0..d.slice {
+            let k = d.live_key(i * 131 + extra);
+            let s = ProbeScope::begin();
+            std::hint::black_box(t.query(k));
+            posq.record(s.finish());
+        }
+        for k in &negatives {
+            let s = ProbeScope::begin();
+            std::hint::black_box(t.query(*k));
+            negq.record(s.finish());
+        }
+        for _ in 0..d.slice {
+            if let Some(k) = d.pop_oldest_key() {
+                let s = ProbeScope::begin();
+                t.erase(k);
+                del.record(s.finish());
+            }
+        }
+    }
+    (ins.avg(), posq.avg(), negq.avg(), del.avg())
+}
+
+/// BSP query throughput comparison at 90% load (§6.2): concurrent vs
+/// phased builds of the same design.
+pub fn bsp_comparison(kind: TableKind, slots: usize, seed: u64) -> (f64, f64) {
+    probes::set_enabled(false);
+    let run = |mode: ConcurrencyMode| {
+        let cfg = TableConfig::for_kind(kind, slots).with_mode(mode);
+        let t = build_table_with(kind, cfg);
+        let target = (t.capacity() as f64 * 0.9) as usize;
+        let ks = distinct_keys(target, seed);
+        for &k in &ks {
+            t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        }
+        mops(ks.len(), || {
+            for &k in &ks {
+                std::hint::black_box(t.query(k));
+            }
+        })
+    };
+    let concurrent = run(ConcurrencyMode::Concurrent);
+    let phased = run(ConcurrencyMode::Phased);
+    probes::set_enabled(true);
+    (concurrent, phased)
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let kinds = TableKind::CONCURRENT;
+    let mut rows = Vec::new();
+    for kind in kinds {
+        let (li, lq, ld) = load_probes(kind, env.slots, env.seed);
+        let (ai, apq, anq, ad) =
+            aging_probes(kind, env.slots, env.iterations.min(50), env.seed ^ 1);
+        let (c, p) = bsp_comparison(kind, env.slots, env.seed ^ 2);
+        let row = ProbeRow {
+            name: kind.paper_name().to_string(),
+            load_insert: li,
+            load_query: lq,
+            load_delete: ld,
+            age_insert: ai,
+            age_pos_query: apq,
+            age_neg_query: anq,
+            age_delete: ad,
+            concurrent_mops: c,
+            phased_mops: p,
+        };
+        rows.push(vec![
+            row.name.clone(),
+            report::fmt_f(row.load_insert, 2),
+            report::fmt_f(row.load_query, 2),
+            report::fmt_f(row.load_delete, 2),
+            report::fmt_f(row.age_insert, 2),
+            report::fmt_f(row.age_pos_query, 2),
+            report::fmt_f(row.age_neg_query, 2),
+            report::fmt_f(row.age_delete, 2),
+            report::fmt_f(row.concurrent_mops, 1),
+            report::fmt_f(row.phased_mops, 1),
+            report::fmt_f(row.overhead_pct(), 2),
+        ]);
+    }
+    report::table(
+        "Table 5.1 — probes per op (load | aging) and BSP query performance",
+        &[
+            "table", "ld-ins", "ld-qry", "ld-del", "ag-ins", "ag-posq", "ag-negq", "ag-del",
+            "conc-Mops", "bsp-Mops", "ovh-%",
+        ],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_probes_are_sane() {
+        let (i, q, d) = load_probes(TableKind::Double, 8192, 1);
+        assert!(i >= 1.0 && i < 100.0, "insert probes {i}");
+        assert!(q >= 1.0 && q < 50.0, "query probes {q}");
+        assert!(d >= 1.0 && d < 100.0, "delete probes {d}");
+    }
+
+    #[test]
+    fn metadata_reduces_aged_negative_probes() {
+        let plain = aging_probes(TableKind::Double, 8192, 30, 2);
+        let meta = aging_probes(TableKind::DoubleMeta, 8192, 30, 2);
+        assert!(
+            meta.2 < plain.2,
+            "DoubleHT(M) aged negative probes {} must beat DoubleHT {}",
+            meta.2,
+            plain.2
+        );
+    }
+
+    #[test]
+    fn bsp_mode_not_slower_than_concurrent() {
+        // Phased strips locks/acquire loads; it should not be meaningfully
+        // slower. (Timing noise on 1 core — allow 40% slack.)
+        let (c, p) = bsp_comparison(TableKind::P2, 8192, 3);
+        assert!(p > c * 0.6, "phased {p} vs concurrent {c}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Plain-text table/series rendering matching the paper's exhibits.
+
+/// Render an aligned text table.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let head: Vec<String> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| format!("{h:>w$}", w = widths[i]))
+        .collect();
+    out.push_str(&head.join("  "));
+    out.push('\n');
+    out.push_str(&"-".repeat(head.join("  ").len()));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths.get(i).copied().unwrap_or(0)))
+            .collect();
+        out.push_str(&cells.join("  "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a figure as x/series CSV-ish block (easy to plot externally).
+pub fn series(title: &str, x_label: &str, xs: &[String], series: &[(&str, Vec<f64>)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(x_label);
+    for (name, _) in series {
+        out.push(',');
+        out.push_str(name);
+    }
+    out.push('\n');
+    for (i, x) in xs.iter().enumerate() {
+        out.push_str(x);
+        for (_, ys) in series {
+            out.push_str(&format!(",{:.2}", ys.get(i).copied().unwrap_or(f64::NAN)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let s = table(
+            "T",
+            &["name", "x"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["longer".into(), "2.5".into()],
+            ],
+        );
+        assert!(s.contains("== T =="));
+        assert!(s.contains("longer"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn series_renders_csv() {
+        let s = series(
+            "F",
+            "lf",
+            &["5".into(), "10".into()],
+            &[("DoubleHT", vec![1.0, 2.0]), ("P2HT", vec![3.0, 4.0])],
+        );
+        assert!(s.contains("lf,DoubleHT,P2HT"));
+        assert!(s.contains("5,1.00,3.00"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Three-layer end-to-end bench: AOT-compiled (JAX→Pallas→HLO→PJRT) bulk
+//! query vs the Rust reference query over the same snapshot.
+//!
+//! Not a paper exhibit per se — it validates and measures the repo's
+//! architecture: the coordinator can offload BSP query batches to the
+//! compiled artifact with zero Python at serve time.
+
+use crate::gpusim::probes;
+use crate::prng::Xoshiro256pp;
+use crate::runtime::{artifacts_dir, BulkQueryEngine};
+use crate::tables::kernel_table::KernelTable;
+
+use super::{mops, report, BenchEnv};
+
+pub fn run(env: &BenchEnv) -> String {
+    probes::set_enabled(false);
+    let dir = artifacts_dir();
+    let engine = match BulkQueryEngine::load(&dir) {
+        Ok(e) => e,
+        Err(err) => {
+            return format!(
+                "runtime bench skipped: {err:#}\n(run `make artifacts` first)\n"
+            );
+        }
+    };
+    // Build a snapshot at 50% load of the compiled geometry.
+    let mut table = KernelTable::new(engine.nb, engine.b);
+    let mut rng = Xoshiro256pp::new(env.seed);
+    let mut present = Vec::new();
+    while present.len() < engine.nb * engine.b / 2 {
+        let k = (rng.next_u64() as u32) | 1;
+        if table.insert(k, k ^ 0xABCD) {
+            present.push(k);
+        }
+    }
+    // Query batches: half present, half absent.
+    let n_batches = (env.iterations / 10).clamp(2, 50);
+    let mut batches = Vec::new();
+    for _ in 0..n_batches {
+        let mut q = Vec::with_capacity(engine.query_batch);
+        for i in 0..engine.query_batch {
+            if i % 2 == 0 {
+                q.push(present[rng.next_below(present.len() as u64) as usize]);
+            } else {
+                q.push((rng.next_u64() as u32) | 1);
+            }
+        }
+        batches.push(q);
+    }
+    let total = n_batches * engine.query_batch;
+    // PJRT path.
+    let mut pjrt_found = 0u64;
+    let pjrt_mops = mops(total, || {
+        for q in &batches {
+            let (_, found) = engine.query_batch(&table, q).expect("execute");
+            pjrt_found += found.iter().filter(|f| **f).count() as u64;
+        }
+    });
+    // Rust reference path.
+    let mut ref_found = 0u64;
+    let ref_mops = mops(total, || {
+        for q in &batches {
+            for &k in q {
+                if table.query(k).is_some() {
+                    ref_found += 1;
+                }
+            }
+        }
+    });
+    probes::set_enabled(true);
+    let rows = vec![
+        vec![
+            "PJRT (AOT Pallas kernel)".into(),
+            report::fmt_f(pjrt_mops, 2),
+            pjrt_found.to_string(),
+        ],
+        vec![
+            "Rust reference".into(),
+            report::fmt_f(ref_mops, 2),
+            ref_found.to_string(),
+        ],
+    ];
+    let mut out = report::table(
+        "AOT bulk-query path vs Rust reference",
+        &["path", "Mops/s", "found"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "parity: {} (found counts {})\n",
+        if pjrt_found == ref_found { "EXACT" } else { "MISMATCH" },
+        if pjrt_found == ref_found { "agree" } else { "DIFFER" },
+    ));
+    out
+}

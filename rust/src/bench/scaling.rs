@@ -1,0 +1,109 @@
+//! Figure 6.4 — insert/query throughput as the table size scales.
+//!
+//! The paper scales 10M → 1B keys and observes insertion throughput
+//! degrading with falling L2 hit rate while query throughput and probe
+//! counts stay flat. We sweep a geometric size range (scaled to the
+//! testbed) and report both throughput and probe counts; the L2-hit-rate
+//! effect on a CPU shows up as cache-miss-driven slowdown at larger sizes.
+
+use crate::gpusim::probes::{self, OpStats, ProbeScope};
+use crate::tables::{build_table, TableKind, UpsertOp};
+use crate::workloads::keys::distinct_keys;
+
+use super::{mops, report, BenchEnv};
+
+pub struct ScalePoint {
+    pub slots: usize,
+    pub insert_mops: f64,
+    pub query_mops: f64,
+    pub insert_probes: f64,
+    pub query_probes: f64,
+}
+
+pub fn measure(kind: TableKind, slots: usize, seed: u64) -> ScalePoint {
+    // Throughput (probes off).
+    probes::set_enabled(false);
+    let t = build_table(kind, slots);
+    let ks = distinct_keys((t.capacity() as f64 * 0.9) as usize, seed);
+    let insert_mops = mops(ks.len(), || {
+        for &k in &ks {
+            t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        }
+    });
+    let query_mops = mops(ks.len(), || {
+        for &k in &ks {
+            std::hint::black_box(t.query(k));
+        }
+    });
+    // Probe counts (fresh table, probes on, sampled).
+    probes::set_enabled(true);
+    let t2 = build_table(kind, slots);
+    let mut ins = OpStats::default();
+    let mut qry = OpStats::default();
+    for &k in &ks {
+        let s = ProbeScope::begin();
+        t2.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        ins.record(s.finish());
+    }
+    for &k in ks.iter().take(ks.len().min(50_000)) {
+        let s = ProbeScope::begin();
+        std::hint::black_box(t2.query(k));
+        qry.record(s.finish());
+    }
+    ScalePoint {
+        slots,
+        insert_mops,
+        query_mops,
+        insert_probes: ins.avg(),
+        query_probes: qry.avg(),
+    }
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    // Geometric sweep: slots/4 … slots*16 (paper: 10M → 1B = ×100).
+    let sizes: Vec<usize> = (0..5).map(|i| (env.slots / 4) << (i * 2)).collect();
+    let kinds = TableKind::CONCURRENT;
+    let mut rows = Vec::new();
+    for kind in kinds {
+        for &s in &sizes {
+            let p = measure(kind, s, env.seed);
+            rows.push(vec![
+                kind.paper_name().to_string(),
+                p.slots.to_string(),
+                report::fmt_f(p.insert_mops, 2),
+                report::fmt_f(p.query_mops, 2),
+                report::fmt_f(p.insert_probes, 2),
+                report::fmt_f(p.query_probes, 2),
+            ]);
+        }
+    }
+    report::table(
+        "Figure 6.4 — scaling: throughput and probes vs table size",
+        &["table", "slots", "ins-Mops", "qry-Mops", "ins-probes", "qry-probes"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_counts_do_not_change_with_scale() {
+        // The paper's key scaling observation: per-op probes stay flat.
+        let small = measure(TableKind::P2, 4096, 1);
+        let large = measure(TableKind::P2, 32768, 1);
+        assert!(
+            (small.query_probes - large.query_probes).abs() < 1.0,
+            "query probes changed with scale: {} vs {}",
+            small.query_probes,
+            large.query_probes
+        );
+        assert!(
+            (small.insert_probes - large.insert_probes).abs() < 1.5,
+            "insert probes changed with scale: {} vs {}",
+            small.insert_probes,
+            large.insert_probes
+        );
+    }
+}

@@ -1,0 +1,87 @@
+//! §6.1 — space usage: bytes per key-value pair and space efficiency at
+//! 90% load factor (the table the paper describes but omits for space).
+
+use crate::gpusim::probes;
+use crate::tables::{build_table, TableKind, UpsertOp};
+use crate::workloads::keys::distinct_keys;
+
+use super::{report, BenchEnv};
+
+pub struct SpaceRow {
+    pub name: String,
+    pub bytes_per_kv: f64,
+    pub efficiency_pct: f64,
+}
+
+pub fn measure(kind: TableKind, slots: usize, seed: u64) -> SpaceRow {
+    probes::set_enabled(false);
+    let t = build_table(kind, slots);
+    let ks = distinct_keys((t.capacity() as f64 * 0.9) as usize, seed);
+    let mut stored = 0usize;
+    for &k in &ks {
+        if t.upsert(k, 1, &UpsertOp::InsertIfUnique) == crate::tables::UpsertResult::Inserted {
+            stored += 1;
+        }
+    }
+    probes::set_enabled(true);
+    let bytes = t.device_bytes() as f64;
+    SpaceRow {
+        name: kind.paper_name().to_string(),
+        bytes_per_kv: bytes / stored.max(1) as f64,
+        efficiency_pct: (stored as f64 * 16.0) / bytes * 100.0,
+    }
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let mut rows = Vec::new();
+    for kind in TableKind::CONCURRENT {
+        let r = measure(kind, env.slots, env.seed);
+        rows.push(vec![
+            r.name,
+            report::fmt_f(r.bytes_per_kv, 1),
+            report::fmt_f(r.efficiency_pct, 1),
+        ]);
+    }
+    report::table(
+        "§6.1 — space usage at 90% load factor",
+        &["table", "bytes/KV", "efficiency %"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_addressing_space_matches_paper() {
+        let r = measure(TableKind::Double, 16384, 1);
+        // 16 B/KV at 90% LF → ~17.8 B/KV stored, ~90% efficiency (locks
+        // cost a little).
+        assert!(r.bytes_per_kv < 20.0, "bytes/kv {}", r.bytes_per_kv);
+        assert!(r.efficiency_pct > 80.0, "efficiency {}", r.efficiency_pct);
+    }
+
+    #[test]
+    fn metadata_costs_two_bytes() {
+        let plain = measure(TableKind::P2, 16384, 1);
+        let meta = measure(TableKind::P2Meta, 16384, 1);
+        let delta = meta.bytes_per_kv - plain.bytes_per_kv;
+        assert!(
+            (1.5..3.5).contains(&delta),
+            "metadata delta {delta} should be ≈2.2 bytes/KV"
+        );
+    }
+
+    #[test]
+    fn chaining_is_space_hungry() {
+        let open = measure(TableKind::Double, 16384, 1);
+        let chain = measure(TableKind::Chaining, 16384, 1);
+        assert!(
+            chain.bytes_per_kv > open.bytes_per_kv * 1.4,
+            "chaining {} vs open {}",
+            chain.bytes_per_kv,
+            open.bytes_per_kv
+        );
+    }
+}

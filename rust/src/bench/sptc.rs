@@ -1,0 +1,99 @@
+//! Table 6.1 — sparse tensor contraction times (NIPS-like, 1-mode and
+//! 3-mode), per hash-table design, plus the SPARTA-style CPU baseline.
+//!
+//! The paper contracts the FROSTT NIPS tensor with itself over dimensions
+//! (2) and (0,1,3), reporting total seconds (setup + contraction).
+//! CuckooHT is included to quantify the no-stability penalty even though
+//! the paper's GPU variant cannot run the fused kernels.
+
+use crate::apps::sptc::{contract, contract_cpu_baseline, synthetic_nips, CooTensor};
+use crate::gpusim::probes;
+use crate::tables::{build_table, TableKind};
+
+use super::{report, seconds, BenchEnv};
+
+pub fn tensor_for(env: &BenchEnv) -> CooTensor {
+    // scale² ≈ nnz fraction; tie to env.slots so WARPSPEED_SCALE lifts it.
+    let scale = (env.slots as f64 / (1 << 17) as f64).sqrt() * 0.12;
+    synthetic_nips(scale.clamp(0.02, 0.35), env.seed)
+}
+
+/// Exact match count for sizing the output table (cheap host-side pass —
+/// SPARTA sizes its accumulators the same way).
+pub fn match_count(t: &CooTensor, cmodes: &[usize]) -> usize {
+    let mut counts: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    for i in 0..t.nnz() {
+        *counts.entry(t.pack(i, cmodes)).or_insert(0) += 1;
+    }
+    counts.values().map(|c| c * c).sum()
+}
+
+pub fn measure(kind: TableKind, t: &CooTensor) -> (f64, f64) {
+    probes::set_enabled(false);
+    let run = |cmodes: &[usize]| {
+        let out_slots = match_count(t, cmodes) * 2 + 1024;
+        seconds(|| {
+            let yt = build_table(kind, t.nnz() * 2 + 1024);
+            let ot = build_table(kind, out_slots);
+            let r = contract(t, t, cmodes, cmodes, yt, ot);
+            std::hint::black_box(r.matches);
+        })
+    };
+    let one_mode = run(&[2]);
+    let three_mode = run(&[0, 1, 3]);
+    probes::set_enabled(true);
+    (one_mode, three_mode)
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let t = tensor_for(env);
+    let mut rows = Vec::new();
+    for kind in TableKind::CONCURRENT {
+        let (m1, m3) = measure(kind, &t);
+        rows.push(vec![
+            kind.paper_name().to_string(),
+            report::fmt_f(m1, 3),
+            report::fmt_f(m3, 3),
+        ]);
+    }
+    // SPARTA-style CPU baseline.
+    let b1 = seconds(|| {
+        std::hint::black_box(contract_cpu_baseline(&t, &t, &[2], &[2]));
+    });
+    let b3 = seconds(|| {
+        std::hint::black_box(contract_cpu_baseline(&t, &t, &[0, 1, 3], &[0, 1, 3]));
+    });
+    rows.push(vec![
+        "SPARTA-like (std HashMap)".into(),
+        report::fmt_f(b1, 3),
+        report::fmt_f(b3, 3),
+    ]);
+    let mut out = format!(
+        "tensor: dims {:?}, nnz {}\n",
+        t.dims,
+        t.nnz()
+    );
+    out.push_str(&report::table(
+        "Table 6.1 — SpTC contraction time (seconds): 1-mode (2), 3-mode (0,1,3)",
+        &["table", "1-mode (s)", "3-mode (s)"],
+        &rows,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sptc_bench_runs_small() {
+        let env = BenchEnv {
+            slots: 8192,
+            iterations: 5,
+            seed: 1,
+        };
+        let t = tensor_for(&env);
+        let (m1, m3) = measure(TableKind::Double, &t);
+        assert!(m1 > 0.0 && m3 > 0.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Minimal CLI argument parsing (offline substitute for `clap`; see
+//! DESIGN.md §Substitutions).
+//!
+//! Grammar: `warpspeed <subcommand> [--flag value]...`. Flags accept
+//! `--key value` or `--key=value`.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse(&["bench", "--slots", "4096", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get_usize("slots", 0), 4096);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&["load", "--table=p2", "--seed=9"]);
+        assert_eq!(a.get("table"), Some("p2"));
+        assert_eq!(a.get_u64("seed", 0), 9);
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = parse(&["sptc", "one", "two"]);
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert!(!a.get_bool("missing"));
+    }
+}

@@ -1,0 +1,192 @@
+//! Operation batching.
+//!
+//! GPU hash tables amortize launch overhead by executing operations in
+//! large grids; the coordinator mirrors that with size-triggered batches.
+//! A batch tags each op with its arrival sequence number so results can
+//! be returned in order, and partitions ops by shard while *preserving
+//! per-key order* (ops on the same key never reorder across a batch —
+//! they route to the same shard and stay in arrival order within it).
+
+use super::Op;
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// (sequence number, op), in arrival order.
+    pub ops: Vec<(u64, Op)>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// True when every operation is a query (eligible for the AOT
+    /// bulk-query offload path).
+    pub fn read_only(&self) -> bool {
+        self.ops.iter().all(|(_, op)| op.is_read())
+    }
+
+    /// Partition into per-shard sub-batches, preserving arrival order
+    /// within each shard.
+    pub fn partition(&self, router: &super::Router) -> Vec<Vec<(u64, Op)>> {
+        let mut parts = vec![Vec::new(); router.n_shards()];
+        for &(seq, op) in &self.ops {
+            parts[router.shard_of(op.key())].push((seq, op));
+        }
+        parts
+    }
+}
+
+/// Size-triggered batcher.
+pub struct Batcher {
+    max_batch: usize,
+    next_seq: u64,
+    pending: Vec<(u64, Op)>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            max_batch,
+            next_seq: 0,
+            pending: Vec::with_capacity(max_batch),
+        }
+    }
+
+    /// Enqueue an op; returns a full batch when the size trigger fires.
+    pub fn push(&mut self, op: Op) -> Option<Batch> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push((seq, op));
+        if self.pending.len() >= self.max_batch {
+            Some(self.flush_now())
+        } else {
+            None
+        }
+    }
+
+    /// Drain whatever is pending (timeout path / shutdown).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.flush_now())
+        }
+    }
+
+    fn flush_now(&mut self) -> Batch {
+        Batch {
+            ops: std::mem::take(&mut self.pending),
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Router;
+    use crate::quickprop::{check_vec, ensure, Config, Gen};
+
+    fn op_gen(g: &mut Gen) -> Op {
+        let k = g.u64_below(50) + 10; // small key space → key collisions
+        match g.u64_below(4) {
+            0 => Op::Upsert(k, g.u64()),
+            1 => Op::UpsertAdd(k, g.u64_below(100)),
+            2 => Op::Query(k),
+            _ => Op::Erase(k),
+        }
+    }
+
+    #[test]
+    fn batches_fire_at_max_size() {
+        let mut b = Batcher::new(4);
+        assert!(b.push(Op::Query(1)).is_none());
+        assert!(b.push(Op::Query(2)).is_none());
+        assert!(b.push(Op::Query(3)).is_none());
+        let batch = b.push(Op::Query(4)).expect("4th op fires the batch");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn flush_drains_partial() {
+        let mut b = Batcher::new(100);
+        b.push(Op::Query(1));
+        b.push(Op::Erase(2));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn sequence_numbers_are_monotonic() {
+        let mut b = Batcher::new(3);
+        let mut seqs = vec![];
+        for i in 0..9 {
+            if let Some(batch) = b.push(Op::Query(i)) {
+                seqs.extend(batch.ops.iter().map(|&(s, _)| s));
+            }
+        }
+        assert_eq!(seqs, (0..9).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn read_only_detection() {
+        let b = Batch {
+            ops: vec![(0, Op::Query(1)), (1, Op::Query(2))],
+        };
+        assert!(b.read_only());
+        let b2 = Batch {
+            ops: vec![(0, Op::Query(1)), (1, Op::Erase(2))],
+        };
+        assert!(!b2.read_only());
+    }
+
+    #[test]
+    fn partition_preserves_per_key_order_property() {
+        let router = Router::new(4);
+        check_vec(
+            &Config {
+                cases: 64,
+                size: 128,
+                ..Default::default()
+            },
+            op_gen,
+            |ops| {
+                let batch = Batch {
+                    ops: ops.iter().cloned().enumerate().map(|(i, o)| (i as u64, o)).collect(),
+                };
+                let parts = batch.partition(&router);
+                // 1. Every op lands in exactly one partition.
+                let total: usize = parts.iter().map(|p| p.len()).sum();
+                ensure(total == ops.len(), "op lost or duplicated in partition")?;
+                // 2. Within each partition sequence numbers are ascending
+                //    (per-key order preserved since keys route stably).
+                for p in &parts {
+                    for w in p.windows(2) {
+                        ensure(w[0].0 < w[1].0, "order violated within shard")?;
+                    }
+                }
+                // 3. Same key never appears in two partitions.
+                for (i, p) in parts.iter().enumerate() {
+                    for &(_, op) in p {
+                        ensure(
+                            router.shard_of(op.key()) == i,
+                            "key routed inconsistently",
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

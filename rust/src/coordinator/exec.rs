@@ -1,0 +1,248 @@
+//! Batch execution over the sharded table with a worker pool.
+//!
+//! Workers play the role of the GPU's SMs: each shard's sub-batch is an
+//! independent unit of work. On this 1-core testbed the pool defaults to
+//! a small thread count; the structure (shard partition → parallel apply
+//! → ordered result merge) is what matters for the reproduction.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use super::{Batch, Op, ShardedTable};
+use crate::tables::{TableKind, UpsertOp, UpsertResult};
+
+/// Result of one operation, tagged with its sequence number.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpResult {
+    Upserted(bool),       // true = newly inserted
+    Value(Option<u64>),   // query result
+    Erased(bool),
+    Rejected,             // table full
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub kind: TableKind,
+    pub total_slots: usize,
+    pub n_shards: usize,
+    pub n_workers: usize,
+    pub max_batch: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            kind: TableKind::P2Meta,
+            total_slots: 1 << 20,
+            n_shards: 8,
+            n_workers: 2,
+            max_batch: 1024,
+        }
+    }
+}
+
+pub struct Coordinator {
+    pub table: Arc<ShardedTable>,
+    cfg: CoordinatorConfig,
+    /// Operations executed (metrics).
+    pub ops_executed: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        let table = Arc::new(ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards));
+        Self {
+            table,
+            cfg,
+            ops_executed: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    fn apply_one(table: &ShardedTable, op: Op) -> OpResult {
+        match op {
+            Op::Upsert(k, v) => match table.upsert(k, v, &UpsertOp::Overwrite) {
+                UpsertResult::Inserted => OpResult::Upserted(true),
+                UpsertResult::Updated => OpResult::Upserted(false),
+                UpsertResult::Full => OpResult::Rejected,
+            },
+            Op::UpsertAdd(k, v) => match table.upsert(k, v, &UpsertOp::AddAssign) {
+                UpsertResult::Inserted => OpResult::Upserted(true),
+                UpsertResult::Updated => OpResult::Upserted(false),
+                UpsertResult::Full => OpResult::Rejected,
+            },
+            Op::Query(k) => OpResult::Value(table.query(k)),
+            Op::Erase(k) => OpResult::Erased(table.erase(k)),
+        }
+    }
+
+    /// Execute a batch: partition by shard, run sub-batches on worker
+    /// threads, merge results back into arrival order.
+    pub fn execute(&self, batch: &Batch) -> Vec<(u64, OpResult)> {
+        let parts = batch.partition(&self.table.router);
+        let (tx, rx) = mpsc::channel::<Vec<(u64, OpResult)>>();
+        // Chunk shards across up to n_workers threads.
+        let n_workers = self.cfg.n_workers.max(1);
+        let parts: Vec<Vec<(u64, Op)>> = parts;
+        let chunks: Vec<Vec<Vec<(u64, Op)>>> = {
+            let mut cs: Vec<Vec<Vec<(u64, Op)>>> = (0..n_workers).map(|_| Vec::new()).collect();
+            for (i, p) in parts.into_iter().enumerate() {
+                cs[i % n_workers].push(p);
+            }
+            cs
+        };
+        thread::scope(|s| {
+            for chunk in &chunks {
+                let tx = tx.clone();
+                let table = Arc::clone(&self.table);
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for part in chunk {
+                        for &(seq, op) in part {
+                            out.push((seq, Self::apply_one(&table, op)));
+                        }
+                    }
+                    let _ = tx.send(out);
+                });
+            }
+        });
+        drop(tx);
+        let mut results: Vec<(u64, OpResult)> = rx.into_iter().flatten().collect();
+        results.sort_unstable_by_key(|&(seq, _)| seq);
+        self.ops_executed
+            .fetch_add(results.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        results
+    }
+
+    /// Convenience: run a whole op stream through batching + execution.
+    pub fn run_stream(&self, ops: impl IntoIterator<Item = Op>) -> Vec<OpResult> {
+        let mut batcher = super::Batcher::new(self.cfg.max_batch);
+        let mut out = Vec::new();
+        for op in ops {
+            if let Some(b) = batcher.push(op) {
+                out.extend(self.execute(&b).into_iter().map(|(_, r)| r));
+            }
+        }
+        if let Some(b) = batcher.flush() {
+            out.extend(self.execute(&b).into_iter().map(|(_, r)| r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::keys::distinct_keys;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 64,
+        })
+    }
+
+    #[test]
+    fn execute_returns_results_in_arrival_order() {
+        let c = coord();
+        let ks = distinct_keys(100, 0xE0);
+        let mut ops = Vec::new();
+        for (i, &k) in ks.iter().enumerate() {
+            ops.push(Op::Upsert(k, i as u64));
+        }
+        for &k in &ks {
+            ops.push(Op::Query(k));
+        }
+        let results = c.run_stream(ops);
+        assert_eq!(results.len(), 200);
+        for (i, r) in results[..100].iter().enumerate() {
+            assert_eq!(*r, OpResult::Upserted(true), "op {i}");
+        }
+        for (i, r) in results[100..].iter().enumerate() {
+            assert_eq!(*r, OpResult::Value(Some(i as u64)), "query {i}");
+        }
+    }
+
+    #[test]
+    fn per_key_order_is_respected() {
+        let c = coord();
+        let k = distinct_keys(1, 0xE1)[0];
+        // upsert → add → add → query → erase → query, all on one key,
+        // spread across several batches.
+        let ops = vec![
+            Op::Upsert(k, 10),
+            Op::UpsertAdd(k, 5),
+            Op::UpsertAdd(k, 7),
+            Op::Query(k),
+            Op::Erase(k),
+            Op::Query(k),
+        ];
+        let r = c.run_stream(ops);
+        assert_eq!(r[3], OpResult::Value(Some(22)));
+        assert_eq!(r[4], OpResult::Erased(true));
+        assert_eq!(r[5], OpResult::Value(None));
+    }
+
+    #[test]
+    fn metrics_count_ops() {
+        let c = coord();
+        let ks = distinct_keys(50, 0xE2);
+        c.run_stream(ks.iter().map(|&k| Op::Upsert(k, 1)));
+        assert_eq!(
+            c.ops_executed.load(std::sync::atomic::Ordering::Relaxed),
+            50
+        );
+    }
+
+    #[test]
+    fn mixed_stream_against_oracle() {
+        let c = coord();
+        let ks = distinct_keys(64, 0xE3);
+        let mut oracle = std::collections::HashMap::new();
+        let mut rng = crate::prng::Xoshiro256pp::new(0xE4);
+        let mut ops = Vec::new();
+        let mut expected = Vec::new();
+        for _ in 0..2000 {
+            let k = ks[rng.next_below(64) as usize];
+            match rng.next_below(4) {
+                0 => {
+                    let v = rng.next_below(1000);
+                    ops.push(Op::Upsert(k, v));
+                    let was = oracle.insert(k, v).is_none();
+                    expected.push(OpResult::Upserted(was));
+                }
+                1 => {
+                    let v = rng.next_below(100);
+                    ops.push(Op::UpsertAdd(k, v));
+                    match oracle.get_mut(&k) {
+                        Some(x) => {
+                            *x += v;
+                            expected.push(OpResult::Upserted(false));
+                        }
+                        None => {
+                            oracle.insert(k, v);
+                            expected.push(OpResult::Upserted(true));
+                        }
+                    }
+                }
+                2 => {
+                    ops.push(Op::Query(k));
+                    expected.push(OpResult::Value(oracle.get(&k).copied()));
+                }
+                _ => {
+                    ops.push(Op::Erase(k));
+                    expected.push(OpResult::Erased(oracle.remove(&k).is_some()));
+                }
+            }
+        }
+        let got = c.run_stream(ops);
+        assert_eq!(got, expected);
+    }
+}

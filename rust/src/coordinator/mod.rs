@@ -1,0 +1,50 @@
+//! L3 coordinator: request routing, batching and execution over table
+//! shards.
+//!
+//! The paper's downstream applications (YCSB serving, caching, SpTC)
+//! drive the tables from massively parallel GPU kernels. On this testbed
+//! the coordinator plays that role: it accepts operation streams, batches
+//! them ([`batcher`]), routes each operation to a shard by key hash
+//! ([`router`]), and executes batches on a worker pool ([`exec`]). Query-
+//! only batches over a quiesced shard can be offloaded to the AOT-compiled
+//! PJRT executable (see [`crate::runtime`]), which is the three-layer
+//! (Rust → XLA → Pallas) path.
+//!
+//! Invariants (property-tested):
+//! * routing is a pure function of the key — the same key always reaches
+//!   the same shard (required for per-key linearization);
+//! * a batch partition preserves per-key operation order;
+//! * shard sizes stay balanced within statistical bounds.
+
+pub mod batcher;
+pub mod exec;
+pub mod router;
+
+pub use batcher::{Batch, Batcher};
+pub use exec::{Coordinator, CoordinatorConfig, OpResult};
+pub use router::{Router, ShardedTable};
+
+/// One client operation (the paper's API surface, §5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Upsert with Overwrite semantics.
+    Upsert(u64, u64),
+    /// Upsert with AddAssign (accumulate) semantics.
+    UpsertAdd(u64, u64),
+    Query(u64),
+    Erase(u64),
+}
+
+impl Op {
+    #[inline]
+    pub fn key(&self) -> u64 {
+        match self {
+            Op::Upsert(k, _) | Op::UpsertAdd(k, _) | Op::Query(k) | Op::Erase(k) => *k,
+        }
+    }
+
+    #[inline]
+    pub fn is_read(&self) -> bool {
+        matches!(self, Op::Query(_))
+    }
+}

@@ -1,0 +1,150 @@
+//! Key→shard routing and the sharded table facade.
+//!
+//! Sharding serves the same purpose the paper's thread-block partitioning
+//! does on the GPU: independent regions of the key space proceed without
+//! cross-interference, and per-key operation order is preserved because a
+//! key always routes to the same shard (pure hash routing).
+
+use std::sync::Arc;
+
+use crate::hash::seeded;
+use crate::tables::{build_table_with, ConcurrentMap, TableConfig, TableKind, UpsertOp, UpsertResult};
+
+/// Pure, stateless key→shard map.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    n_shards: usize,
+}
+
+/// Routing hash seed — distinct from all table seeds so shard choice is
+/// independent of bucket choice.
+const ROUTE_SEED: u64 = 0x7A57_1CE5_0C0D_E001;
+
+impl Router {
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards > 0 && n_shards.is_power_of_two());
+        Self { n_shards }
+    }
+
+    #[inline(always)]
+    pub fn shard_of(&self, key: u64) -> usize {
+        (seeded(key, ROUTE_SEED) & (self.n_shards as u64 - 1)) as usize
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+}
+
+/// A table design sharded across `n` independent instances.
+pub struct ShardedTable {
+    pub router: Router,
+    pub shards: Vec<Arc<dyn ConcurrentMap>>,
+    pub kind: TableKind,
+}
+
+impl ShardedTable {
+    pub fn new(kind: TableKind, total_slots: usize, n_shards: usize) -> Self {
+        let router = Router::new(n_shards);
+        let per_shard = total_slots.div_ceil(n_shards);
+        let shards = (0..n_shards)
+            .map(|_| build_table_with(kind, TableConfig::for_kind(kind, per_shard)))
+            .collect();
+        Self {
+            router,
+            shards,
+            kind,
+        }
+    }
+
+    #[inline]
+    pub fn shard(&self, key: u64) -> &Arc<dyn ConcurrentMap> {
+        &self.shards[self.router.shard_of(key)]
+    }
+
+    pub fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        self.shard(key).upsert(key, val, op)
+    }
+
+    pub fn query(&self, key: u64) -> Option<u64> {
+        self.shard(key).query(key)
+    }
+
+    pub fn erase(&self, key: u64) -> bool {
+        self.shard(key).erase(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.capacity()).sum()
+    }
+
+    /// Largest/smallest shard fill ratio (balance metric).
+    pub fn balance(&self) -> (usize, usize) {
+        let sizes: Vec<usize> = self.shards.iter().map(|s| s.len()).collect();
+        (
+            sizes.iter().copied().max().unwrap_or(0),
+            sizes.iter().copied().min().unwrap_or(0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quickprop::{check, ensure, Config, Gen};
+    use crate::workloads::keys::distinct_keys;
+
+    #[test]
+    fn routing_is_deterministic_property() {
+        let r = Router::new(8);
+        check(
+            &Config::default(),
+            |g: &mut Gen| g.user_key(),
+            |&k| {
+                ensure(
+                    r.shard_of(k) == r.shard_of(k) && r.shard_of(k) < 8,
+                    "routing must be pure and in range",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn shards_balance_statistically() {
+        let st = ShardedTable::new(TableKind::Double, 64 * 1024, 8);
+        for k in distinct_keys(20_000, 0xBA1) {
+            st.upsert(k, 1, &UpsertOp::InsertIfUnique);
+        }
+        let (max, min) = st.balance();
+        // 20k keys over 8 shards ≈ 2500 ± ~5σ.
+        assert!(min > 2100 && max < 2900, "imbalance: {min}..{max}");
+    }
+
+    #[test]
+    fn sharded_semantics_match_single_table() {
+        let st = ShardedTable::new(TableKind::P2Meta, 8192, 4);
+        let ks = distinct_keys(1000, 0xBA2);
+        for (i, &k) in ks.iter().enumerate() {
+            assert_eq!(
+                st.upsert(k, i as u64, &UpsertOp::InsertIfUnique),
+                UpsertResult::Inserted
+            );
+        }
+        assert_eq!(st.len(), 1000);
+        for (i, &k) in ks.iter().enumerate() {
+            assert_eq!(st.query(k), Some(i as u64));
+        }
+        for &k in ks.iter().step_by(3) {
+            assert!(st.erase(k));
+            assert_eq!(st.query(k), None);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! External per-bucket lock array (paper §5: "all hash tables use one lock
+//! bit per bucket, and all the locks are placed in an external array").
+//!
+//! The locks are packed 64 per `AtomicU64` word; acquisition is a spinning
+//! `fetch_or` (the GPU implementation's `atomicOr` loop), release is a
+//! `fetch_and`. Lock words live in their own probe-line namespace so that
+//! lock traffic shows up in probe counts just like it does on the GPU
+//! (the lock array is in global memory there too).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::probes;
+
+pub struct LockArray {
+    words: Box<[AtomicU64]>,
+    mem_id: u64,
+}
+
+static NEXT_LOCK_MEM_ID: AtomicU64 = AtomicU64::new(1);
+
+impl LockArray {
+    pub fn new(n_buckets: usize) -> Self {
+        let n_words = n_buckets.div_ceil(64);
+        let mut v = Vec::with_capacity(n_words);
+        v.resize_with(n_words, || AtomicU64::new(0));
+        Self {
+            words: v.into_boxed_slice(),
+            mem_id: NEXT_LOCK_MEM_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Bytes of simulated device memory held by the lock array.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    #[inline(always)]
+    fn touch(&self, word: usize) {
+        if probes::enabled() {
+            // 16 lock words (1024 buckets) per 128-byte line.
+            probes::touch((0x4000_0000_0000 | self.mem_id) << 16 | (word / 16) as u64);
+        }
+    }
+
+    /// Spin until the bucket lock is acquired (GPU `atomicOr` loop).
+    #[inline]
+    pub fn lock(&self, bucket: usize) {
+        let word = bucket / 64;
+        let bit = 1u64 << (bucket % 64);
+        self.touch(word);
+        loop {
+            probes::count_atomic();
+            let prev = self.words[word].fetch_or(bit, Ordering::AcqRel);
+            if prev & bit == 0 {
+                return;
+            }
+            // Backoff: on GPU the warp scheduler hides this; on CPU yield
+            // so the single-core testbed makes progress.
+            std::hint::spin_loop();
+            std::thread::yield_now();
+        }
+    }
+
+    /// Try to acquire without spinning. Returns true on success.
+    #[inline]
+    pub fn try_lock(&self, bucket: usize) -> bool {
+        let word = bucket / 64;
+        let bit = 1u64 << (bucket % 64);
+        self.touch(word);
+        probes::count_atomic();
+        self.words[word].fetch_or(bit, Ordering::AcqRel) & bit == 0
+    }
+
+    /// Release the bucket lock.
+    #[inline]
+    pub fn unlock(&self, bucket: usize) {
+        let word = bucket / 64;
+        let bit = 1u64 << (bucket % 64);
+        self.touch(word);
+        probes::count_atomic();
+        let prev = self.words[word].fetch_and(!bit, Ordering::AcqRel);
+        debug_assert!(prev & bit != 0, "unlock of unheld lock {bucket}");
+    }
+
+    /// Acquire two bucket locks in canonical (address) order — deadlock-free
+    /// two-bucket locking for cuckoo moves and alternate-bucket inserts.
+    pub fn lock_two(&self, a: usize, b: usize) {
+        if a == b {
+            self.lock(a);
+        } else if a < b {
+            self.lock(a);
+            self.lock(b);
+        } else {
+            self.lock(b);
+            self.lock(a);
+        }
+    }
+
+    pub fn unlock_two(&self, a: usize, b: usize) {
+        if a == b {
+            self.unlock(a);
+        } else {
+            self.unlock(a);
+            self.unlock(b);
+        }
+    }
+
+    /// Acquire up to three locks in canonical order (3-way cuckoo query).
+    pub fn lock_three(&self, mut v: [usize; 3]) {
+        v.sort_unstable();
+        self.lock(v[0]);
+        if v[1] != v[0] {
+            self.lock(v[1]);
+        }
+        if v[2] != v[1] && v[2] != v[0] {
+            self.lock(v[2]);
+        }
+    }
+
+    pub fn unlock_three(&self, mut v: [usize; 3]) {
+        v.sort_unstable();
+        self.unlock(v[0]);
+        if v[1] != v[0] {
+            self.unlock(v[1]);
+        }
+        if v[2] != v[1] && v[2] != v[0] {
+            self.unlock(v[2]);
+        }
+    }
+
+    /// Is the bucket currently locked? (introspection for tests)
+    pub fn is_locked(&self, bucket: usize) -> bool {
+        let word = bucket / 64;
+        let bit = 1u64 << (bucket % 64);
+        self.words[word].load(Ordering::Acquire) & bit != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn lock_unlock_roundtrip() {
+        let l = LockArray::new(100);
+        l.lock(5);
+        assert!(l.is_locked(5));
+        assert!(!l.is_locked(4));
+        l.unlock(5);
+        assert!(!l.is_locked(5));
+    }
+
+    #[test]
+    fn try_lock_fails_when_held() {
+        let l = LockArray::new(10);
+        assert!(l.try_lock(3));
+        assert!(!l.try_lock(3));
+        l.unlock(3);
+        assert!(l.try_lock(3));
+        l.unlock(3);
+    }
+
+    #[test]
+    fn adjacent_buckets_independent() {
+        let l = LockArray::new(128);
+        l.lock(63);
+        l.lock(64); // different word
+        l.lock(62); // same word as 63
+        assert!(l.is_locked(62) && l.is_locked(63) && l.is_locked(64));
+        l.unlock(63);
+        assert!(l.is_locked(62) && !l.is_locked(63) && l.is_locked(64));
+        l.unlock(62);
+        l.unlock(64);
+    }
+
+    #[test]
+    fn lock_two_handles_duplicates_and_order() {
+        let l = LockArray::new(8);
+        l.lock_two(3, 3);
+        assert!(l.is_locked(3));
+        l.unlock_two(3, 3);
+        assert!(!l.is_locked(3));
+        l.lock_two(7, 2);
+        assert!(l.is_locked(2) && l.is_locked(7));
+        l.unlock_two(7, 2);
+    }
+
+    #[test]
+    fn lock_three_handles_duplicates() {
+        let l = LockArray::new(16);
+        l.lock_three([5, 5, 9]);
+        assert!(l.is_locked(5) && l.is_locked(9));
+        l.unlock_three([5, 5, 9]);
+        assert!(!l.is_locked(5) && !l.is_locked(9));
+    }
+
+    #[test]
+    fn mutual_exclusion_under_contention() {
+        let l = Arc::new(LockArray::new(1));
+        let counter = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let shared = Arc::new(std::cell::UnsafeCell::new(0u64));
+        struct SendPtr(Arc<std::cell::UnsafeCell<u64>>);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let shared = Arc::new(SendPtr(shared));
+        let mut hs = vec![];
+        for _ in 0..4 {
+            let l = Arc::clone(&l);
+            let counter = Arc::clone(&counter);
+            let shared = Arc::clone(&shared);
+            hs.push(thread::spawn(move || {
+                for _ in 0..2000 {
+                    l.lock(0);
+                    // Non-atomic RMW protected by the lock.
+                    unsafe {
+                        let p = shared.0.get();
+                        *p += 1;
+                    }
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    l.unlock(0);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(unsafe { *shared.0.get() }, 8000);
+        assert_eq!(counter.load(Ordering::Relaxed), 8000);
+    }
+}

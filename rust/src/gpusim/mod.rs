@@ -1,0 +1,36 @@
+//! Functional simulator of the Nvidia GPU execution + memory model that
+//! the paper's hash tables are written against.
+//!
+//! # Hardware-adaptation mapping (see DESIGN.md §Hardware-Adaptation)
+//!
+//! | CUDA concept (paper §3)              | Simulator concept                    |
+//! |--------------------------------------|--------------------------------------|
+//! | GDDR global memory                   | [`mem::SimMem`] — `AtomicU64` slots  |
+//! | 128-byte cache line / L2 sector      | [`mem::LINE_BYTES`] line accounting  |
+//! | cache-line *probe* (paper's metric)  | [`probes`] unique-line recorder      |
+//! | `atomicCAS` / `atomicExch`           | [`mem::SimMem::cas`] (+atomic count) |
+//! | morally-strong acquire/release ops   | `Ordering::Acquire`/`Release`        |
+//! | lazy cacheable loads (BSP mode)      | `Ordering::Relaxed`                  |
+//! | `.b128` vector load/store (§4.2)     | [`mem::SimMem`] publish protocol:    |
+//! |                                      | reserve-CAS, value store, key release|
+//! | warp (32 threads)                    | cost model in [`cost`]               |
+//! | cooperative-group tile               | `tile_size` in [`cost`] + tables     |
+//! | one lock bit per bucket (§5)         | [`lock::LockArray`]                  |
+//!
+//! The simulator is *functional*, not cycle-accurate: correctness-critical
+//! behaviour (interleavings, atomicity, publication ordering) is executed
+//! by real OS threads over real atomics, while performance-critical
+//! behaviour that CPU hardware cannot reproduce (warp-level memory-level
+//! parallelism, tile latency hiding) is captured by the analytic cost
+//! model in [`cost`] fed with *measured* probe counts.
+
+pub mod mem;
+pub mod probes;
+pub mod lock;
+pub mod race;
+pub mod cost;
+
+pub use mem::{SimMem, LINE_BYTES, SLOTS_PER_LINE};
+pub use lock::LockArray;
+pub use probes::{OpStats, ProbeScope};
+pub use race::{RaceEvent, RaceHook, NoopHook};

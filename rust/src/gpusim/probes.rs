@@ -1,0 +1,218 @@
+//! Cache-line probe accounting — the paper's primary performance metric.
+//!
+//! "Probe count measures the number of unique cache lines accessed by all
+//! threads in a warp during an operation" (paper §5). Here a table
+//! operation (one upsert / query / erase) plays the role of one tile's
+//! operation; the recorder tracks the set of unique 128-byte lines the
+//! operation touches across *all* simulated memories (slots, metadata,
+//! locks), exactly like Nsight's sector counting in the paper's harness.
+//!
+//! Accounting is thread-local and explicitly scoped ([`ProbeScope`]) so
+//! the concurrent tables can run on many OS threads without sharing.
+//! Recording can be globally disabled ([`set_enabled`]) for pure
+//! throughput benchmarks where the recorder itself would perturb timing.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Globally enable/disable probe recording (throughput benches disable).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether probe recording is currently enabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Global count of simulated-atomic operations (CAS/fetch_or/...), used by
+/// the cost model: the paper measures "every atomic operation incurs a
+/// performance hit of ~50M ops/s".
+pub static ATOMIC_OPS: AtomicU64 = AtomicU64::new(0);
+
+#[inline(always)]
+pub(crate) fn count_atomic() {
+    if enabled() {
+        ATOMIC_OPS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Reset the global atomic-op counter, returning the previous value.
+pub fn take_atomic_ops() -> u64 {
+    ATOMIC_OPS.swap(0, Ordering::Relaxed)
+}
+
+thread_local! {
+    static RECORDER: RefCell<Recorder> = RefCell::new(Recorder::new());
+}
+
+struct Recorder {
+    /// Unique line ids touched by the current op. Ops touch a handful of
+    /// lines (the paper's worst case is ~80), so a linear-scan smallvec
+    /// beats a hash set.
+    lines: Vec<u64>,
+    depth: u32,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Self {
+            lines: Vec::with_capacity(32),
+            depth: 0,
+        }
+    }
+}
+
+/// Record a touch of global line id `line` by the current thread's op.
+#[inline(always)]
+pub(crate) fn touch(line: u64) {
+    if !enabled() {
+        return;
+    }
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        if r.depth == 0 {
+            return; // not inside an op scope
+        }
+        if !r.lines.contains(&line) {
+            r.lines.push(line);
+        }
+    });
+}
+
+/// RAII scope delimiting one table operation for probe accounting.
+/// Nested scopes are merged into the outermost one (compound ops such as
+/// the caching workload's fused query+insert count as one op if wrapped
+/// once, or separately if wrapped per sub-op).
+pub struct ProbeScope(());
+
+impl ProbeScope {
+    pub fn begin() -> Self {
+        RECORDER.with(|r| {
+            let mut r = r.borrow_mut();
+            r.depth += 1;
+            if r.depth == 1 {
+                r.lines.clear();
+            }
+        });
+        Self(())
+    }
+
+    /// Finish the scope, returning the number of unique cache lines the
+    /// operation touched (0 for nested scopes — the outermost accounts).
+    pub fn finish(self) -> u32 {
+        let n = RECORDER.with(|r| {
+            let mut r = r.borrow_mut();
+            r.depth -= 1;
+            if r.depth == 0 {
+                r.lines.len() as u32
+            } else {
+                0
+            }
+        });
+        std::mem::forget(self);
+        n
+    }
+}
+
+impl Drop for ProbeScope {
+    fn drop(&mut self) {
+        // Dropped without finish(): still unwind depth correctly.
+        RECORDER.with(|r| {
+            let mut r = r.borrow_mut();
+            r.depth = r.depth.saturating_sub(1);
+        });
+    }
+}
+
+/// Aggregated per-operation-kind probe statistics, accumulated by the
+/// benchmark harness (not by the tables themselves).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpStats {
+    pub ops: u64,
+    pub probes: u64,
+}
+
+impl OpStats {
+    #[inline]
+    pub fn record(&mut self, probes: u32) {
+        self.ops += 1;
+        self.probes += probes as u64;
+    }
+
+    pub fn merge(&mut self, other: &OpStats) {
+        self.ops += other.ops;
+        self.probes += other.probes;
+    }
+
+    /// Average probes per operation.
+    pub fn avg(&self) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            self.probes as f64 / self.ops as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_lines_counted_once() {
+        set_enabled(true);
+        let s = ProbeScope::begin();
+        touch(10);
+        touch(10);
+        touch(11);
+        assert_eq!(s.finish(), 2);
+    }
+
+    #[test]
+    fn nested_scopes_merge_into_outer() {
+        set_enabled(true);
+        let outer = ProbeScope::begin();
+        touch(1);
+        let inner = ProbeScope::begin();
+        touch(2);
+        assert_eq!(inner.finish(), 0); // inner does not account
+        touch(3);
+        assert_eq!(outer.finish(), 3);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        set_enabled(false);
+        let s = ProbeScope::begin();
+        touch(42);
+        assert_eq!(s.finish(), 0);
+        set_enabled(true);
+    }
+
+    #[test]
+    fn touches_outside_scope_ignored() {
+        set_enabled(true);
+        touch(99);
+        let s = ProbeScope::begin();
+        touch(1);
+        assert_eq!(s.finish(), 1);
+    }
+
+    #[test]
+    fn opstats_average() {
+        let mut st = OpStats::default();
+        st.record(2);
+        st.record(4);
+        assert_eq!(st.ops, 2);
+        assert!((st.avg() - 3.0).abs() < 1e-12);
+        let mut other = OpStats::default();
+        other.record(6);
+        st.merge(&other);
+        assert_eq!(st.ops, 3);
+        assert!((st.avg() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! Deterministic race-interleaving hooks for the adversarial benchmark
+//! (paper §4.1, Figure 4.1).
+//!
+//! The paper's adversarial benchmark relies on three GPU threads hitting a
+//! precise interleaving (T1 probes past the primary bucket while T3
+//! deletes and T2 inserts). On a massively parallel GPU that window is hit
+//! statistically (~200 of 1M buckets); on this 1-core testbed we make the
+//! schedule *deterministic* instead: tables call [`RaceHook::on_event`] at
+//! the semantically relevant points, and the benchmark installs a hook
+//! that parks threads on barriers to force the exact Figure 4.1 order.
+//! The default [`NoopHook`] compiles to nothing on the hot path.
+
+use std::sync::{Barrier, Mutex};
+
+/// Points in a table operation where an adversarial schedule can take
+/// control. Carries the key and the bucket involved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RaceEvent {
+    /// An insert probed a bucket, found no empty slot for `key`, and is
+    /// about to move on to an alternate bucket.
+    PrimaryFullMovingOn { key: u64, bucket: usize },
+    /// An insert is about to claim a slot in `bucket` for `key`.
+    BeforeClaim { key: u64, bucket: usize },
+    /// A delete finished removing `key` from `bucket`.
+    AfterDelete { key: u64, bucket: usize },
+}
+
+pub trait RaceHook: Send + Sync {
+    fn on_event(&self, ev: RaceEvent);
+}
+
+/// Default hook: does nothing (and is trivially inlined away).
+pub struct NoopHook;
+
+impl RaceHook for NoopHook {
+    #[inline(always)]
+    fn on_event(&self, _ev: RaceEvent) {}
+}
+
+/// A hook that replays the Figure 4.1 schedule for one target key:
+///
+/// 1. T1 (insert Y) runs until it reports `PrimaryFullMovingOn(Y)`, then
+///    parks.
+/// 2. T3 (delete X) runs to completion (`AfterDelete(X)` observed).
+/// 3. T2 (insert Y) runs to completion.
+/// 4. T1 resumes and finishes its insert into the alternate bucket.
+///
+/// On an unsynchronized table (SlabHash-style) this produces a duplicate
+/// of Y; on a correctly locked table T1 holds Y's primary-bucket lock so
+/// T2 cannot overtake and the replay degenerates to a serial order.
+pub struct Fig41Schedule {
+    target_key: u64,
+    /// rendezvous between T1-parked and the driver
+    t1_parked: Barrier,
+    /// rendezvous releasing T1 after T2/T3 complete
+    t1_release: Barrier,
+    log: Mutex<Vec<RaceEvent>>,
+}
+
+impl Fig41Schedule {
+    pub fn new(target_key: u64) -> Self {
+        Self {
+            target_key,
+            t1_parked: Barrier::new(2),
+            t1_release: Barrier::new(2),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Driver side: wait until T1 has probed past the primary bucket.
+    pub fn wait_t1_parked(&self) {
+        self.t1_parked.wait();
+    }
+
+    /// Driver side: release T1 to complete its alternate-bucket insert.
+    pub fn release_t1(&self) {
+        self.t1_release.wait();
+    }
+
+    /// Events observed, for assertions.
+    pub fn events(&self) -> Vec<RaceEvent> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+impl RaceHook for Fig41Schedule {
+    fn on_event(&self, ev: RaceEvent) {
+        self.log.lock().unwrap().push(ev);
+        if let RaceEvent::PrimaryFullMovingOn { key, .. } = ev {
+            if key == self.target_key {
+                // Park T1 until the driver has run T3 (delete) and T2
+                // (competing insert).
+                self.t1_parked.wait();
+                self.t1_release.wait();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn noop_hook_is_free() {
+        let h = NoopHook;
+        h.on_event(RaceEvent::AfterDelete { key: 1, bucket: 0 });
+    }
+
+    #[test]
+    fn fig41_schedule_orders_threads() {
+        let sched = Arc::new(Fig41Schedule::new(42));
+        let order = Arc::new(Mutex::new(Vec::new()));
+
+        let t1 = {
+            let s = Arc::clone(&sched);
+            let o = Arc::clone(&order);
+            thread::spawn(move || {
+                o.lock().unwrap().push("t1-start");
+                s.on_event(RaceEvent::PrimaryFullMovingOn { key: 42, bucket: 0 });
+                o.lock().unwrap().push("t1-resume");
+            })
+        };
+        sched.wait_t1_parked();
+        order.lock().unwrap().push("t3-delete");
+        order.lock().unwrap().push("t2-insert");
+        sched.release_t1();
+        t1.join().unwrap();
+        let o = order.lock().unwrap().clone();
+        assert_eq!(o, vec!["t1-start", "t3-delete", "t2-insert", "t1-resume"]);
+    }
+
+    #[test]
+    fn fig41_ignores_other_keys() {
+        let sched = Fig41Schedule::new(42);
+        // Must not block for a non-target key.
+        sched.on_event(RaceEvent::PrimaryFullMovingOn { key: 7, bucket: 0 });
+        assert_eq!(sched.events().len(), 1);
+    }
+}

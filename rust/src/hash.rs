@@ -1,0 +1,175 @@
+//! Hash functions shared by every table design.
+//!
+//! Two independent 64-bit hash families (for double hashing / cuckoo /
+//! power-of-two-choice) built from the MurmurHash3 64-bit finalizer
+//! (`fmix64`) with distinct seeds, plus the 32-bit finalizer (`fmix32`)
+//! which is the *exact* function implemented by the L1 Pallas kernel
+//! (`python/compile/kernels/fmix32.py`). Keeping the Rust and kernel hash
+//! bit-identical is what lets the L3 coordinator build a table snapshot
+//! and have the AOT-compiled bulk-query executable find keys in it.
+
+/// MurmurHash3 fmix64 finalizer. Full-avalanche 64-bit mix.
+#[inline(always)]
+pub fn fmix64(mut k: u64) -> u64 {
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xFF51AFD7ED558CCD);
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xC4CEB9FE1A85EC53);
+    k ^= k >> 33;
+    k
+}
+
+/// MurmurHash3 fmix32 finalizer — MUST stay bit-identical to
+/// `python/compile/kernels/fmix32.py` (the Pallas kernel) and
+/// `python/compile/kernels/ref.py` (the jnp oracle).
+#[inline(always)]
+pub fn fmix32(mut k: u32) -> u32 {
+    k ^= k >> 16;
+    k = k.wrapping_mul(0x85EBCA6B);
+    k ^= k >> 13;
+    k = k.wrapping_mul(0xC2B2AE35);
+    k ^= k >> 16;
+    k
+}
+
+/// Seeded 64-bit hash: xor-fold the seed in, then finalize. The two
+/// families used across the library are `hash1 = seeded(k, SEED1)` and
+/// `hash2 = seeded(k, SEED2)`.
+#[inline(always)]
+pub fn seeded(key: u64, seed: u64) -> u64 {
+    fmix64(key ^ fmix64(seed))
+}
+
+pub const SEED1: u64 = 0x5155_3dba_88f1_d26b;
+pub const SEED2: u64 = 0x9e6c_63d0_876a_9f4e;
+pub const SEED3: u64 = 0x27d4_eb2f_1656_67c5;
+
+/// Primary bucket hash.
+#[inline(always)]
+pub fn hash1(key: u64) -> u64 {
+    seeded(key, SEED1)
+}
+
+/// Secondary bucket hash (alternate bucket / double-hash stride).
+#[inline(always)]
+pub fn hash2(key: u64) -> u64 {
+    seeded(key, SEED2)
+}
+
+/// Tertiary bucket hash (3-way cuckoo).
+#[inline(always)]
+pub fn hash3(key: u64) -> u64 {
+    seeded(key, SEED3)
+}
+
+/// Double-hashing stride: odd, non-zero, so every bucket is eventually
+/// probed when the bucket count is a power of two.
+#[inline(always)]
+pub fn stride(key: u64) -> u64 {
+    hash2(key) | 1
+}
+
+/// 16-bit fingerprint tag for the metadata variants. The paper uses the
+/// lower-order 16 bits of the key; we hash first so adversarially clustered
+/// keys still spread their tags, then reserve 0 (empty) and 1 (tombstone)
+/// by remapping.
+#[inline(always)]
+pub fn tag16(key: u64) -> u16 {
+    let t = (seeded(key, SEED3) & 0xFFFF) as u16;
+    if t < 2 {
+        t + 2
+    } else {
+        t
+    }
+}
+
+/// Tag value meaning "slot never used".
+pub const TAG_EMPTY: u16 = 0;
+/// Tag value meaning "slot deleted" (tombstone).
+pub const TAG_TOMBSTONE: u16 = 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn fmix64_known_values() {
+        // fmix64(0) == 0 by construction; nonzero inputs avalanche.
+        assert_eq!(fmix64(0), 0);
+        assert_ne!(fmix64(1), 1);
+        assert_ne!(fmix64(1), fmix64(2));
+    }
+
+    #[test]
+    fn fmix32_known_vectors() {
+        // Values computed from the canonical MurmurHash3 fmix32.
+        assert_eq!(fmix32(0), 0);
+        assert_eq!(fmix32(1), 0x514E28B7);
+        assert_eq!(fmix32(0xDEADBEEF), 0x0DE5C6A9);
+    }
+
+    #[test]
+    fn families_are_independent() {
+        // hash1 and hash2 should disagree on low bits for most keys.
+        let mut rng = Xoshiro256pp::new(1);
+        let mut same = 0;
+        let trials = 10_000;
+        for _ in 0..trials {
+            let k = rng.next_u64();
+            if hash1(k) % 1024 == hash2(k) % 1024 {
+                same += 1;
+            }
+        }
+        // Expect ~ trials/1024 collisions; allow generous slack.
+        assert!(same < trials / 100, "families too correlated: {same}");
+    }
+
+    #[test]
+    fn stride_is_odd_nonzero() {
+        let mut rng = Xoshiro256pp::new(2);
+        for _ in 0..1000 {
+            let s = stride(rng.next_u64());
+            assert_eq!(s & 1, 1);
+        }
+    }
+
+    #[test]
+    fn tags_avoid_reserved_values() {
+        let mut rng = Xoshiro256pp::new(3);
+        for _ in 0..100_000 {
+            let t = tag16(rng.next_u64());
+            assert!(t != TAG_EMPTY && t != TAG_TOMBSTONE);
+        }
+    }
+
+    #[test]
+    fn tag_distribution_roughly_uniform() {
+        let mut rng = Xoshiro256pp::new(4);
+        let mut buckets = [0u32; 16];
+        let n = 160_000;
+        for _ in 0..n {
+            let t = tag16(rng.next_u64());
+            buckets[(t >> 12) as usize] += 1;
+        }
+        let expect = n / 16;
+        for (i, &c) in buckets.iter().enumerate() {
+            assert!(
+                (c as i64 - expect as i64).unsigned_abs() < expect as u64 / 4,
+                "bucket {i} count {c} far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn hash_avalanche_bit_flip() {
+        // Flipping one input bit should flip ~half the output bits.
+        let mut rng = Xoshiro256pp::new(5);
+        for _ in 0..100 {
+            let k = rng.next_u64();
+            let bit = 1u64 << (rng.next_u64() % 64);
+            let d = (fmix64(k) ^ fmix64(k ^ bit)).count_ones();
+            assert!((12..=52).contains(&d), "weak avalanche: {d} bits");
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! WarpSpeed — a library of high-performance concurrent hash tables,
+//! reproduced from McCoy & Pandey, "WarpSpeed: A High-Performance Library
+//! for Concurrent GPU Hash Tables" (CS.DC 2025) as a Rust + JAX + Pallas
+//! three-layer stack.
+//!
+//! Layers:
+//! - L3 (this crate): the concurrent hash-table library, the GPU
+//!   execution/memory-model simulator it runs on, the unified benchmarking
+//!   framework, and a request-routing coordinator.
+//! - L2 (python/compile/model.py): JAX bulk-query model over table
+//!   snapshots, AOT-lowered to HLO text.
+//! - L1 (python/compile/kernels/): Pallas probe/hash kernels called by L2.
+//!
+//! The original system is CUDA; this reproduction maps warps/tiles,
+//! non-coherent L1 caches, morally-strong (acquire/release) accesses and
+//! 128-bit vector loads onto a functional simulator (`gpusim`) so that the
+//! paper's concurrency claims (adversarial races, lock-free queries,
+//! probe-count behaviour) are exercised by real multi-threaded code.
+
+pub mod gpusim;
+pub mod hash;
+pub mod prng;
+pub mod quickprop;
+pub mod alloc;
+pub mod tables;
+pub mod workloads;
+pub mod apps;
+pub mod bench;
+pub mod coordinator;
+pub mod runtime;
+pub mod cli;
+
+pub use tables::{ConcurrentMap, TableKind, UpsertOp, build_table, TableConfig, ConcurrencyMode};

@@ -1,0 +1,138 @@
+//! `warpspeed` — leader binary: every paper experiment plus a simple
+//! line-protocol server over the coordinator.
+//!
+//! ```text
+//! warpspeed info
+//! warpspeed probes|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
+//!           [--slots N] [--iters N] [--seed S]
+//! warpspeed all          # every exhibit in sequence
+//! warpspeed serve [--table p2m] [--slots N] [--shards N]
+//! ```
+//!
+//! The serve protocol (stdin/stdout, one op per line):
+//! `put <key> <val>` | `add <key> <val>` | `get <key>` | `del <key>` |
+//! `quit`.
+
+use std::io::{BufRead, Write};
+
+use warpspeed::bench::{self, BenchEnv};
+use warpspeed::cli::Args;
+use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult};
+use warpspeed::tables::TableKind;
+
+fn env_from(args: &Args) -> BenchEnv {
+    let mut env = BenchEnv::default();
+    env.slots = args.get_usize("slots", env.slots);
+    env.iterations = args.get_usize("iters", env.iterations);
+    env.seed = args.get_u64("seed", env.seed);
+    env
+}
+
+fn main() {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "info".into());
+    let env = env_from(&args);
+    match sub.as_str() {
+        "info" => {
+            println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
+            println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
+            println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
+            println!("subcommands: probes load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
+        }
+        "probes" => print!("{}", bench::probes::run(&env)),
+        "load" => print!("{}", bench::load::run(&env)),
+        "aging" => print!("{}", bench::aging::run(&env)),
+        "caching" => print!("{}", bench::caching::run(&env)),
+        "scaling" => print!("{}", bench::scaling::run(&env)),
+        "ycsb" => print!("{}", bench::ycsb::run(&env)),
+        "sptc" => print!("{}", bench::sptc::run(&env)),
+        "sweep" => print!("{}", bench::sweep::run(&env)),
+        "space" => print!("{}", bench::space::run(&env)),
+        "adversarial" => print!("{}", bench::adversarial::run(&env)),
+        "ablations" => print!("{}", bench::ablations::run(&env)),
+        "runtime" => print!("{}", bench::runtime::run(&env)),
+        "all" => {
+            for (name, f) in [
+                ("probes", bench::probes::run as fn(&BenchEnv) -> String),
+                ("load", bench::load::run),
+                ("aging", bench::aging::run),
+                ("caching", bench::caching::run),
+                ("scaling", bench::scaling::run),
+                ("ycsb", bench::ycsb::run),
+                ("sptc", bench::sptc::run),
+                ("sweep", bench::sweep::run),
+                ("space", bench::space::run),
+                ("adversarial", bench::adversarial::run),
+                ("ablations", bench::ablations::run),
+                ("runtime", bench::runtime::run),
+            ] {
+                eprintln!("[warpspeed] running {name}…");
+                match std::panic::catch_unwind(|| f(&env)) {
+                    Ok(out) => print!("{out}"),
+                    Err(_) => println!("[warpspeed] {name} PANICKED — see stderr"),
+                }
+                println!();
+            }
+        }
+        "serve" => serve(&args),
+        other => {
+            eprintln!("unknown subcommand: {other}; try `warpspeed info`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) {
+    let kind = args
+        .get("table")
+        .and_then(TableKind::from_name)
+        .unwrap_or(TableKind::P2Meta);
+    let cfg = CoordinatorConfig {
+        kind,
+        total_slots: args.get_usize("slots", 1 << 20),
+        n_shards: args.get_usize("shards", 8),
+        n_workers: args.get_usize("workers", 2),
+        max_batch: args.get_usize("batch", 256),
+    };
+    eprintln!(
+        "[warpspeed] serving {} over {} shards (slots={})",
+        kind.paper_name(),
+        cfg.n_shards,
+        cfg.total_slots
+    );
+    let coord = Coordinator::new(cfg);
+    let stdin = std::io::stdin();
+    let mut out = std::io::stdout().lock();
+    for line in stdin.lock().lines() {
+        let Ok(line) = line else { break };
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let op = match parts.as_slice() {
+            ["put", k, v] => Op::Upsert(k.parse().unwrap_or(0), v.parse().unwrap_or(0)),
+            ["add", k, v] => Op::UpsertAdd(k.parse().unwrap_or(0), v.parse().unwrap_or(0)),
+            ["get", k] => Op::Query(k.parse().unwrap_or(0)),
+            ["del", k] => Op::Erase(k.parse().unwrap_or(0)),
+            ["quit"] | ["exit"] => break,
+            [] => continue,
+            _ => {
+                let _ = writeln!(out, "ERR usage: put|add|get|del <key> [val]");
+                continue;
+            }
+        };
+        let results = coord.run_stream([op]);
+        let msg = match results[0] {
+            OpResult::Upserted(true) => "INSERTED".to_string(),
+            OpResult::Upserted(false) => "UPDATED".to_string(),
+            OpResult::Value(Some(v)) => format!("VALUE {v}"),
+            OpResult::Value(None) => "NOT_FOUND".to_string(),
+            OpResult::Erased(true) => "ERASED".to_string(),
+            OpResult::Erased(false) => "NOT_FOUND".to_string(),
+            OpResult::Rejected => "FULL".to_string(),
+        };
+        let _ = writeln!(out, "{msg}");
+        let _ = out.flush();
+    }
+    eprintln!(
+        "[warpspeed] served {} ops",
+        coord.ops_executed.load(std::sync::atomic::Ordering::Relaxed)
+    );
+}

@@ -1,0 +1,272 @@
+//! Deterministic pseudo-random number generation substrate.
+//!
+//! The offline build has no `rand` crate, and the paper's benchmarking
+//! framework needs reproducible workloads anyway (uniform-random keys,
+//! Zipfian request streams for YCSB, shuffles for aging slices), so we
+//! implement the generators ourselves:
+//!
+//! - [`SplitMix64`] — seed expander, passes BigCrush, used to seed others.
+//! - [`Xoshiro256pp`] — general-purpose stream generator (xoshiro256++).
+//! - [`Zipfian`] — YCSB-style Zipfian distribution over `n` items using the
+//!   Gray/Jain rejection-inversion-free algorithm from the YCSB core
+//!   (`ZipfianGenerator`), with the standard `theta = 0.99`.
+//!
+//! All generators are `Send` and cheap to fork per thread.
+
+/// SplitMix64: Steele, Lea & Flood. Used to derive seeds and as a
+/// lightweight standalone generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — David Blackman and Sebastiano Vigna (public domain).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 as recommended by the xoshiro authors.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift (no modulo bias
+    /// beyond 2^-64, fine for benchmarks).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform double in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.is_empty() {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// YCSB-style Zipfian generator (theta = 0.99 by default).
+///
+/// Port of the classic Gray et al. "Quickly generating billion-record
+/// synthetic databases" algorithm as used by the YCSB core workload
+/// generator. Items are ranks `0..n`; rank 0 is the hottest.
+#[derive(Clone, Debug)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2theta: f64,
+    rng: Xoshiro256pp,
+}
+
+impl Zipfian {
+    pub const DEFAULT_THETA: f64 = 0.99;
+
+    pub fn new(n: u64, seed: u64) -> Self {
+        Self::with_theta(n, Self::DEFAULT_THETA, seed)
+    }
+
+    pub fn with_theta(n: u64, theta: f64, seed: u64) -> Self {
+        assert!(n > 0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2theta = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2theta / zetan);
+        Self {
+            n,
+            theta,
+            alpha,
+            zetan,
+            eta,
+            zeta2theta,
+            rng: Xoshiro256pp::new(seed),
+        }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Direct sum; n is at most the table universe which we keep <= ~1e8
+        // in this reproduction. For the default bench sizes (<= ~1e7) this
+        // is fast enough and matches YCSB exactly.
+        let mut sum = 0.0;
+        for i in 1..=n {
+            sum += 1.0 / (i as f64).powf(theta);
+        }
+        sum
+    }
+
+    /// Next rank in `[0, n)`; rank 0 is hottest.
+    pub fn next_rank(&mut self) -> u64 {
+        let u = self.rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let _ = self.zeta2theta;
+        ((self.n as f64) * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64
+    }
+
+    /// YCSB "scrambled zipfian": spread the hot ranks across the key space
+    /// deterministically so hot keys are not clustered.
+    pub fn next_scrambled(&mut self) -> u64 {
+        let rank = self.next_rank();
+        fnv64(rank) % self.n
+    }
+}
+
+/// FNV-1a 64-bit, used for scrambled-Zipfian spreading (matches YCSB).
+#[inline]
+pub fn fnv64(x: u64) -> u64 {
+    let mut hash: u64 = 0xCBF29CE484222325;
+    let mut v = x;
+    for _ in 0..8 {
+        let octet = v & 0xff;
+        v >>= 8;
+        hash ^= octet;
+        hash = hash.wrapping_mul(0x100000001B3);
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_known_vector() {
+        // Reference values for seed 1234567 from the canonical C impl.
+        let mut sm = SplitMix64::new(0);
+        let first = sm.next_u64();
+        assert_eq!(first, 0xE220A8397B1DCDAF);
+    }
+
+    #[test]
+    fn xoshiro_differs_across_seeds() {
+        let mut a = Xoshiro256pp::new(1);
+        let mut b = Xoshiro256pp::new(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = Xoshiro256pp::new(7);
+        for bound in [1u64, 2, 3, 10, 1000, u32::MAX as u64] {
+            for _ in 0..200 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::new(9);
+        for _ in 0..1000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::new(11);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn zipfian_ranks_in_range_and_skewed() {
+        let n = 1000;
+        let mut z = Zipfian::new(n, 3);
+        let mut counts = vec![0u64; n as usize];
+        let draws = 100_000;
+        for _ in 0..draws {
+            let r = z.next_rank();
+            assert!(r < n, "rank {r} out of range");
+            counts[r as usize] += 1;
+        }
+        // Rank 0 should dominate: > 5% of mass for theta=0.99, n=1000.
+        assert!(counts[0] as f64 / draws as f64 > 0.05);
+        // And be much hotter than the median rank.
+        assert!(counts[0] > 20 * counts[500].max(1));
+    }
+
+    #[test]
+    fn zipfian_scrambled_in_range() {
+        let mut z = Zipfian::new(12345, 5);
+        for _ in 0..10_000 {
+            assert!(z.next_scrambled() < 12345);
+        }
+    }
+
+    #[test]
+    fn fnv_spreads() {
+        // Consecutive inputs should map to very different outputs.
+        let a = fnv64(0);
+        let b = fnv64(1);
+        assert!(a != b && (a ^ b).count_ones() > 8);
+    }
+}

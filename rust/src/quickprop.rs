@@ -1,0 +1,252 @@
+//! Minimal property-based testing framework (offline stand-in for
+//! `proptest`, which is unavailable in this build environment — see
+//! DESIGN.md §Substitutions).
+//!
+//! Provides quickcheck-style randomized property execution with:
+//! * deterministic seeding (failures print the seed + case index so a run
+//!   is reproducible by construction),
+//! * generator combinators over the [`Gen`] source,
+//! * linear input shrinking for `Vec`-shaped cases (drop-one-chunk),
+//!   enough to localize failures in the invariants we test.
+
+use crate::prng::Xoshiro256pp;
+
+/// Random source handed to generators.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// Suggested size bound for collection generators.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: Xoshiro256pp::new(seed),
+            size,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.next_below(bound.max(1))
+    }
+
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        self.rng.next_below(bound.max(1) as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// A user key: uniformly random but never a sentinel (0, MAX, MAX-1).
+    pub fn user_key(&mut self) -> u64 {
+        loop {
+            let k = self.rng.next_u64();
+            if crate::gpusim::mem::is_user_key(k) {
+                return k;
+            }
+        }
+    }
+
+    /// Vector with length in `[0, self.size]`.
+    pub fn vec<T>(&mut self, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_below(self.size + 1);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// One of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_below(xs.len())]
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor WARPSPEED_PROP_CASES for heavier CI runs.
+        let cases = std::env::var("WARPSPEED_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self {
+            cases,
+            seed: 0xC0FFEE,
+            size: 64,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with a
+/// reproducible seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    gen_case: impl Fn(&mut Gen) -> T,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    for case_idx in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case_idx as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(case_seed, cfg.size);
+        let input = gen_case(&mut g);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={:#x}, case={case_idx}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`] but for `Vec` inputs: on failure, shrink by removing
+/// halves/quarters/single elements before reporting the minimal failing
+/// input found.
+pub fn check_vec<T: Clone + std::fmt::Debug>(
+    cfg: &Config,
+    gen_elem: impl Fn(&mut Gen) -> T,
+    prop: impl Fn(&[T]) -> PropResult,
+) {
+    for case_idx in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case_idx as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(case_seed, cfg.size);
+        let input: Vec<T> = g.vec(&gen_elem);
+        if let Err(first_msg) = prop(&input) {
+            let (min, msg) = shrink(input, first_msg, &prop);
+            panic!(
+                "property failed (seed={:#x}, case={case_idx}): {msg}\nminimal input ({} elems): {min:?}",
+                cfg.seed,
+                min.len()
+            );
+        }
+    }
+}
+
+fn shrink<T: Clone + std::fmt::Debug>(
+    mut failing: Vec<T>,
+    mut msg: String,
+    prop: &impl Fn(&[T]) -> PropResult,
+) -> (Vec<T>, String) {
+    // Repeatedly try to remove chunks; keep any removal that still fails.
+    let mut chunk = (failing.len() / 2).max(1);
+    while chunk >= 1 {
+        let mut i = 0;
+        let mut shrunk_this_pass = false;
+        while i + chunk <= failing.len() {
+            let mut candidate = failing.clone();
+            candidate.drain(i..i + chunk);
+            match prop(&candidate) {
+                Err(m) => {
+                    failing = candidate;
+                    msg = m;
+                    shrunk_this_pass = true;
+                    // do not advance i: the next chunk shifted into place
+                }
+                Ok(()) => {
+                    i += 1;
+                }
+            }
+        }
+        if chunk == 1 && !shrunk_this_pass {
+            break;
+        }
+        if !shrunk_this_pass {
+            chunk /= 2;
+        } else {
+            chunk = chunk.min(failing.len().max(1));
+        }
+        if failing.is_empty() {
+            break;
+        }
+    }
+    (failing, msg)
+}
+
+/// Helper: build a `PropResult` from a boolean condition.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config {
+            cases: 32,
+            ..Default::default()
+        };
+        check(&cfg, |g| g.u64(), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        let cfg = Config {
+            cases: 32,
+            ..Default::default()
+        };
+        check(
+            &cfg,
+            |g| g.u64_below(10),
+            |x| ensure(*x > 100, "always fails"),
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: no vector contains a multiple of 7. Shrinker should
+        // reduce any failing vector to a single offending element.
+        let failing: Vec<u64> = vec![1, 2, 14, 3, 4, 5];
+        let (min, _) = shrink(failing, "seed".into(), &|xs: &[u64]| {
+            ensure(!xs.iter().any(|x| x % 7 == 0 && *x != 0), "has multiple of 7")
+        });
+        assert_eq!(min, vec![14]);
+    }
+
+    #[test]
+    fn gen_user_key_never_sentinel() {
+        let mut g = Gen::new(5, 8);
+        for _ in 0..10_000 {
+            let k = g.user_key();
+            assert!(crate::gpusim::mem::is_user_key(k));
+        }
+    }
+
+    #[test]
+    fn gen_vec_respects_size() {
+        let mut g = Gen::new(6, 16);
+        for _ in 0..100 {
+            let v = g.vec(|g| g.bool());
+            assert!(v.len() <= 16);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(77, 8);
+        let mut b = Gen::new(77, 8);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

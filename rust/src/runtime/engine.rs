@@ -1,0 +1,145 @@
+//! Bulk-query engine: compile + execute the AOT artifacts via PJRT.
+//!
+//! Loads `artifacts/bulk_query.hlo.txt` (and verifies geometry against
+//! `artifacts/manifest.txt`), compiles once on the PJRT CPU client, then
+//! serves fixed-shape query batches from the Rust hot path. Inputs are
+//! [`KernelTable`] snapshots — built with the bit-identical `fmix32` hash
+//! — so the compiled Pallas kernel finds exactly the keys the Rust
+//! reference query finds (asserted in `rust/tests/runtime_parity.rs`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tables::kernel_table::KernelTable;
+
+/// Queries per executable invocation — must match the manifest.
+pub const QUERY_BATCH: usize = 2048;
+/// Snapshot geometry — must match the manifest.
+pub const NB: usize = 4096;
+pub const B: usize = 8;
+
+/// Default artifacts directory: `$WARPSPEED_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("WARPSPEED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+pub struct BulkQueryEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub nb: usize,
+    pub b: usize,
+    pub query_batch: usize,
+}
+
+impl BulkQueryEngine {
+    /// Load + compile the bulk-query artifact from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let manifest = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let mut nb = 0usize;
+        let mut b = 0usize;
+        let mut qb = 0usize;
+        for line in manifest.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                let v: usize = v.trim().parse().unwrap_or(0);
+                match k.trim() {
+                    "NB" => nb = v,
+                    "B" => b = v,
+                    "QUERY_BATCH" => qb = v,
+                    _ => {}
+                }
+            }
+        }
+        if nb != NB || b != B || qb != QUERY_BATCH {
+            bail!(
+                "artifact geometry mismatch: manifest ({nb},{b},{qb}) vs \
+                 compiled-in ({NB},{B},{QUERY_BATCH}) — rebuild artifacts"
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let hlo = dir.join("bulk_query.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing {hlo:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("XLA compile")?;
+        Ok(Self {
+            exe,
+            nb,
+            b,
+            query_batch: qb,
+        })
+    }
+
+    /// Can the engine serve this snapshot?
+    pub fn fits(&self, table: &KernelTable) -> bool {
+        table.num_buckets == self.nb && table.bucket_size == self.b
+    }
+
+    /// Execute one query batch. `queries.len()` must equal
+    /// [`Self::query_batch`]; returns (values, found) per query.
+    pub fn query_batch(
+        &self,
+        table: &KernelTable,
+        queries: &[u32],
+    ) -> Result<(Vec<u32>, Vec<bool>)> {
+        if !self.fits(table) {
+            bail!(
+                "snapshot geometry ({}, {}) does not fit engine ({}, {})",
+                table.num_buckets,
+                table.bucket_size,
+                self.nb,
+                self.b
+            );
+        }
+        if queries.len() != self.query_batch {
+            bail!(
+                "query batch {} != compiled batch {}",
+                queries.len(),
+                self.query_batch
+            );
+        }
+        let dims = [self.nb, self.b];
+        let keys = xla::Literal::vec1(&table.keys)
+            .reshape(&dims.map(|d| d as i64))
+            .context("reshape keys")?;
+        let vals = xla::Literal::vec1(&table.vals)
+            .reshape(&dims.map(|d| d as i64))
+            .context("reshape vals")?;
+        let qs = xla::Literal::vec1(queries);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[keys, vals, qs])
+            .context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // Lowered with return_tuple=True → (values, found).
+        let (v_lit, f_lit) = result.to_tuple2().context("untuple")?;
+        let values = v_lit.to_vec::<u32>().context("values to_vec")?;
+        let found_raw = f_lit.to_vec::<u32>().context("found to_vec")?;
+        let found = found_raw.into_iter().map(|x| x != 0).collect();
+        Ok((values, found))
+    }
+
+    /// Query an arbitrary number of keys by padding to batch granularity.
+    pub fn query_all(
+        &self,
+        table: &KernelTable,
+        queries: &[u32],
+    ) -> Result<Vec<Option<u32>>> {
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(self.query_batch) {
+            let mut padded = chunk.to_vec();
+            padded.resize(self.query_batch, 1); // pad with an arbitrary key
+            let (vals, found) = self.query_batch(table, &padded)?;
+            for i in 0..chunk.len() {
+                out.push(if found[i] { Some(vals[i]) } else { None });
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load and execute the AOT-compiled artifacts.
+//!
+//! This is the serving half of the three-layer bridge: `make artifacts`
+//! runs `python/compile/aot.py` ONCE at build time, lowering the L2 JAX
+//! bulk-query model (which calls the L1 Pallas probe kernel) to HLO
+//! *text*; this module loads that text with
+//! `xla::HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+//! client, and executes it from the Rust hot path. Python never runs at
+//! serve time.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+
+pub use engine::{artifacts_dir, BulkQueryEngine, QUERY_BATCH};

@@ -1,0 +1,357 @@
+//! Shared open-addressing bucket storage.
+//!
+//! All open-addressing designs (double, p2, iceberg, cuckoo, warpcore,
+//! slabhash-like) store key-value pairs in a flat [`SimMem`]: pair `i`
+//! occupies slots `2i` (key) and `2i+1` (value), i.e. 16 bytes — the
+//! paper's 8-byte-key / 8-byte-value configuration. A bucket of
+//! `bucket_size` pairs is `bucket_size * 16` bytes; a DoubleHT bucket of
+//! 8 pairs is exactly one 128-byte cache line, a 32-pair metadata bucket
+//! spans 4 lines, matching §5.
+//!
+//! The scan routine walks a bucket in `tile_size`-pair chunks the way a
+//! cooperative-group tile does, so probe accounting sees the same cache
+//! lines the GPU tile would touch.
+
+use crate::gpusim::mem::{is_user_key, SimMem, EMPTY, RESERVED, TOMBSTONE};
+
+pub use crate::gpusim::mem::{EMPTY as KEY_EMPTY, RESERVED as KEY_RESERVED, TOMBSTONE as KEY_TOMBSTONE};
+
+/// Result of scanning one bucket for a key.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScanResult {
+    /// Slot (within bucket) and current value where `key` was found.
+    pub found: Option<(usize, u64)>,
+    /// First slot holding `EMPTY` (never used).
+    pub first_empty: Option<usize>,
+    /// First slot holding `TOMBSTONE` (deleted, reusable).
+    pub first_tombstone: Option<usize>,
+    /// Number of live (user-key or reserved) slots seen — the bucket fill
+    /// used by power-of-two-choice placement.
+    pub fill: usize,
+}
+
+impl ScanResult {
+    /// First reusable slot: prefer a tombstone (keeps the "key at or
+    /// before first EMPTY" invariant tight), else the first empty.
+    #[inline]
+    pub fn reusable(&self) -> Option<usize> {
+        self.first_tombstone.or(self.first_empty)
+    }
+
+    /// True when the bucket contains a never-used slot — the probe
+    /// sequence for any key mapping here can stop (negative early exit).
+    #[inline]
+    pub fn has_empty(&self) -> bool {
+        self.first_empty.is_some()
+    }
+}
+
+/// Flat pair storage divided into buckets.
+pub struct Pairs {
+    mem: SimMem,
+    pub bucket_size: usize,
+    pub num_buckets: usize,
+    pub tile_size: usize,
+}
+
+impl Pairs {
+    /// `num_buckets` is rounded up to a power of two by the caller.
+    pub fn new(num_buckets: usize, bucket_size: usize, tile_size: usize) -> Self {
+        assert!(num_buckets.is_power_of_two(), "bucket count must be 2^k");
+        Self {
+            mem: SimMem::new(num_buckets * bucket_size * 2),
+            bucket_size,
+            num_buckets,
+            tile_size: tile_size.max(1),
+        }
+    }
+
+    #[inline(always)]
+    pub fn mem(&self) -> &SimMem {
+        &self.mem
+    }
+
+    #[inline(always)]
+    pub fn mask(&self) -> u64 {
+        (self.num_buckets - 1) as u64
+    }
+
+    /// Key-slot index of pair `slot` in `bucket`.
+    #[inline(always)]
+    pub fn kidx(&self, bucket: usize, slot: usize) -> usize {
+        (bucket * self.bucket_size + slot) * 2
+    }
+
+    pub fn device_bytes(&self) -> usize {
+        self.mem.bytes()
+    }
+
+    /// Scan the whole bucket for `key`, collecting empty/tombstone/fill
+    /// info. Walks in tile-sized chunks (cache-line order).
+    pub fn scan_bucket(&self, bucket: usize, key: u64, strong: bool) -> ScanResult {
+        let mut r = ScanResult::default();
+        let base = self.kidx(bucket, 0);
+        let mut slot = 0;
+        while slot < self.bucket_size {
+            let chunk_end = (slot + self.tile_size).min(self.bucket_size);
+            for s in slot..chunk_end {
+                let k = self.mem.load(base + s * 2, strong);
+                if k == key {
+                    let v = self.mem.load(base + s * 2 + 1, strong);
+                    r.found = Some((s, v));
+                    return r; // found — tile exits
+                } else if k == EMPTY {
+                    if r.first_empty.is_none() {
+                        r.first_empty = Some(s);
+                    }
+                } else if k == TOMBSTONE {
+                    if r.first_tombstone.is_none() {
+                        r.first_tombstone = Some(s);
+                    }
+                    // tombstones don't count toward fill
+                } else {
+                    // user key or RESERVED (pending publish): occupied
+                    r.fill += 1;
+                }
+            }
+            slot = chunk_end;
+        }
+        r
+    }
+
+    /// Scan only the listed slots (metadata candidates) for `key`.
+    pub fn scan_slots(
+        &self,
+        bucket: usize,
+        slots: impl IntoIterator<Item = usize>,
+        key: u64,
+        strong: bool,
+    ) -> Option<(usize, u64)> {
+        let base = self.kidx(bucket, 0);
+        for s in slots {
+            let k = self.mem.load(base + s * 2, strong);
+            if k == key {
+                return Some((s, self.mem.load(base + s * 2 + 1, strong)));
+            }
+        }
+        None
+    }
+
+    /// First free (EMPTY or TOMBSTONE) slot in the bucket, if any —
+    /// tombstones preferred like [`ScanResult::reusable`].
+    pub fn find_free(&self, bucket: usize, strong: bool) -> Option<usize> {
+        let base = self.kidx(bucket, 0);
+        let mut first_empty = None;
+        for s in 0..self.bucket_size {
+            let k = self.mem.load(base + s * 2, strong);
+            if k == TOMBSTONE {
+                return Some(s);
+            }
+            if k == EMPTY && first_empty.is_none() {
+                first_empty = Some(s);
+            }
+        }
+        first_empty
+    }
+
+    /// Try to claim `slot` in `bucket` (CAS EMPTY→RESERVED or, when
+    /// `reuse_tombstone`, TOMBSTONE→RESERVED). On success the caller owns
+    /// the slot and must [`Pairs::publish`].
+    #[inline]
+    pub fn try_claim(&self, bucket: usize, slot: usize, reuse_tombstone: bool) -> bool {
+        let k = self.kidx(bucket, slot);
+        if self.mem.cas(k, EMPTY, RESERVED).is_ok() {
+            return true;
+        }
+        reuse_tombstone && self.mem.cas(k, TOMBSTONE, RESERVED).is_ok()
+    }
+
+    /// Publish `key → val` into a slot this thread has claimed.
+    #[inline]
+    pub fn publish(&self, bucket: usize, slot: usize, key: u64, val: u64) {
+        self.mem.publish_pair(self.kidx(bucket, slot), key, val);
+    }
+
+    /// Write a pair NON-atomically (key first, value after — the
+    /// Warpcore-style unsafe write the paper calls out: "insertions of
+    /// key-value pairs are not atomic").
+    #[inline]
+    pub fn write_pair_unsafe(&self, bucket: usize, slot: usize, key: u64, val: u64) {
+        let k = self.kidx(bucket, slot);
+        self.mem.store_relaxed(k, key);
+        self.mem.store_relaxed(k + 1, val);
+    }
+
+    /// Atomic accumulate into the value slot of a pair (u64).
+    #[inline]
+    pub fn value_fetch_add(&self, bucket: usize, slot: usize, v: u64) {
+        self.mem.fetch_add(self.kidx(bucket, slot) + 1, v);
+    }
+
+    /// Atomic accumulate into the value slot of a pair (f64 bits).
+    #[inline]
+    pub fn value_fetch_add_f64(&self, bucket: usize, slot: usize, v: f64) {
+        self.mem.fetch_add_f64(self.kidx(bucket, slot) + 1, v);
+    }
+
+    /// Store a new value for an existing pair.
+    #[inline]
+    pub fn value_store(&self, bucket: usize, slot: usize, v: u64) {
+        self.mem.store_release(self.kidx(bucket, slot) + 1, v);
+    }
+
+    /// Read the key currently in a slot.
+    #[inline]
+    pub fn key_at(&self, bucket: usize, slot: usize, strong: bool) -> u64 {
+        self.mem.load(self.kidx(bucket, slot), strong)
+    }
+
+    /// Read the pair at a slot via the vector-load analog.
+    #[inline]
+    pub fn pair_at(&self, bucket: usize, slot: usize, strong: bool) -> (u64, u64) {
+        self.mem.load_pair(self.kidx(bucket, slot), strong)
+    }
+
+    /// Delete the pair at `slot` (key → TOMBSTONE). Caller must hold the
+    /// serialization lock for this key.
+    #[inline]
+    pub fn kill(&self, bucket: usize, slot: usize) {
+        self.mem.store_release(self.kidx(bucket, slot), TOMBSTONE);
+    }
+
+    /// Overwrite a slot's key directly (cuckoo move, under both locks).
+    #[inline]
+    pub fn set_pair_locked(&self, bucket: usize, slot: usize, key: u64, val: u64) {
+        let k = self.kidx(bucket, slot);
+        self.mem.store_relaxed(k + 1, val);
+        self.mem.store_release(k, key);
+    }
+
+    /// Count copies of `key` across the entire storage (adversarial
+    /// verification; O(capacity)).
+    pub fn count_copies(&self, key: u64) -> usize {
+        let mut n = 0;
+        for b in 0..self.num_buckets {
+            for s in 0..self.bucket_size {
+                if self.mem.snapshot_raw(self.kidx(b, s)) == key {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Iterate all live pairs (quiesced snapshot; used for BSP export).
+    pub fn for_each_live(&self, mut f: impl FnMut(u64, u64)) {
+        for b in 0..self.num_buckets {
+            for s in 0..self.bucket_size {
+                let k = self.mem.snapshot_raw(self.kidx(b, s));
+                if is_user_key(k) {
+                    f(k, self.mem.snapshot_raw(self.kidx(b, s) + 1));
+                }
+            }
+        }
+    }
+}
+
+/// Round a requested slot capacity to (num_buckets pow2, bucket_size).
+pub fn bucket_count_for(slots: usize, bucket_size: usize) -> usize {
+    let want = slots.div_ceil(bucket_size).max(1);
+    want.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs() -> Pairs {
+        Pairs::new(8, 8, 4)
+    }
+
+    #[test]
+    fn bucket_count_rounds_to_pow2() {
+        assert_eq!(bucket_count_for(100, 8), 16);
+        assert_eq!(bucket_count_for(128, 8), 16);
+        assert_eq!(bucket_count_for(129, 8), 32);
+        assert_eq!(bucket_count_for(1, 8), 1);
+    }
+
+    #[test]
+    fn claim_publish_find() {
+        let p = pairs();
+        assert!(p.try_claim(3, 2, false));
+        p.publish(3, 2, 42, 99);
+        let r = p.scan_bucket(3, 42, true);
+        assert_eq!(r.found, Some((2, 99)));
+    }
+
+    #[test]
+    fn scan_tracks_empty_tombstone_fill() {
+        let p = pairs();
+        assert!(p.try_claim(0, 0, false));
+        p.publish(0, 0, 10, 1);
+        assert!(p.try_claim(0, 1, false));
+        p.publish(0, 1, 20, 2);
+        p.kill(0, 1);
+        let r = p.scan_bucket(0, 999, true);
+        assert!(r.found.is_none());
+        assert_eq!(r.first_empty, Some(2));
+        assert_eq!(r.first_tombstone, Some(1));
+        assert_eq!(r.fill, 1);
+        assert_eq!(r.reusable(), Some(1)); // prefers tombstone
+        assert!(r.has_empty());
+    }
+
+    #[test]
+    fn claim_respects_tombstone_flag() {
+        let p = pairs();
+        assert!(p.try_claim(1, 0, false));
+        p.publish(1, 0, 7, 7);
+        p.kill(1, 0);
+        assert!(!p.try_claim(1, 0, false), "tombstone without reuse");
+        assert!(p.try_claim(1, 0, true), "tombstone with reuse");
+    }
+
+    #[test]
+    fn double_claim_fails() {
+        let p = pairs();
+        assert!(p.try_claim(2, 5, false));
+        assert!(!p.try_claim(2, 5, false));
+        assert!(!p.try_claim(2, 5, true));
+    }
+
+    #[test]
+    fn count_copies_spans_buckets() {
+        let p = pairs();
+        for b in [1usize, 4, 7] {
+            assert!(p.try_claim(b, 0, false));
+            p.publish(b, 0, 55, b as u64);
+        }
+        assert_eq!(p.count_copies(55), 3);
+        assert_eq!(p.count_copies(56), 0);
+    }
+
+    #[test]
+    fn for_each_live_skips_sentinels() {
+        let p = pairs();
+        assert!(p.try_claim(0, 0, false));
+        p.publish(0, 0, 5, 50);
+        assert!(p.try_claim(0, 1, false));
+        p.publish(0, 1, 6, 60);
+        p.kill(0, 1);
+        let mut seen = vec![];
+        p.for_each_live(|k, v| seen.push((k, v)));
+        assert_eq!(seen, vec![(5, 50)]);
+    }
+
+    #[test]
+    fn value_ops() {
+        let p = pairs();
+        assert!(p.try_claim(0, 0, false));
+        p.publish(0, 0, 5, 10);
+        p.value_fetch_add(0, 0, 7);
+        assert_eq!(p.scan_bucket(0, 5, true).found, Some((0, 17)));
+        p.value_store(0, 0, 3);
+        assert_eq!(p.scan_bucket(0, 5, true).found, Some((0, 3)));
+    }
+}

@@ -1,0 +1,442 @@
+//! CuckooHT — concurrent 3-way bucketed cuckoo hashing (paper §5).
+//!
+//! A concurrent implementation of the bucketed cuckoo hash table (BCHT)
+//! from BGHT [4]: 8 KV pairs per bucket (one cache line per bucket), three
+//! candidate buckets per key, insertion displacement found with a BFS over
+//! candidate buckets and executed *backwards* move-by-move under pairwise
+//! bucket locks — the concurrent insertion strategy of libcuckoo [29].
+//!
+//! Cuckoo hashing is NOT stable: displacement moves keys between buckets,
+//! so a lock-free reader could miss a key mid-move. Consequently every
+//! operation — including queries — takes the bucket locks (paper §6.8:
+//! "Cuckoo does not perform well on any [YCSB] workload due to the lack
+//! of stability which requires it to acquire a lock on all operations").
+//! In Phased (BSP) mode the locks are elided and reads are relaxed; this
+//! doubles as the static BCHT(BGHT) baseline.
+//!
+//! Deletion resets slots to EMPTY (not tombstones): with a fixed 3-bucket
+//! candidate set there is no probe-sequence invariant to preserve, which
+//! is why cuckoo deletions are the fastest in the paper (§6.3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::common::{bucket_count_for, Pairs, KEY_EMPTY};
+use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
+use crate::gpusim::mem::is_user_key;
+use crate::gpusim::race::RaceEvent;
+use crate::gpusim::LockArray;
+use crate::hash::{hash1, hash2, hash3};
+
+/// BFS frontier cap: 3 roots + 3*8 children + part of the next level.
+const MAX_BFS_NODES: usize = 160;
+/// Full insert attempts (lock, BFS, move, re-lock) before declaring Full.
+const MAX_ATTEMPTS: usize = 16;
+
+#[derive(Clone, Copy)]
+struct Move {
+    src_bucket: usize,
+    src_slot: usize,
+    dst_bucket: usize,
+    dst_slot: usize,
+}
+
+pub struct CuckooHt {
+    pairs: Pairs,
+    locks: LockArray,
+    mode: ConcurrencyMode,
+    hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
+    live: AtomicU64,
+}
+
+impl CuckooHt {
+    pub fn new(cfg: TableConfig) -> Self {
+        let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        Self {
+            pairs: Pairs::new(nb, cfg.bucket_size, cfg.tile_size),
+            locks: LockArray::new(nb),
+            mode: cfg.mode,
+            hook: cfg.hook,
+            live: AtomicU64::new(0),
+        }
+    }
+
+    #[inline(always)]
+    fn buckets_of(&self, key: u64) -> [usize; 3] {
+        let mask = self.pairs.mask();
+        [
+            (hash1(key) & mask) as usize,
+            (hash2(key) & mask) as usize,
+            (hash3(key) & mask) as usize,
+        ]
+    }
+
+    /// Find a free slot in `b` (EMPTY or TOMBSTONE — cuckoo itself only
+    /// ever writes EMPTY on delete/move).
+    fn free_slot(&self, b: usize, strong: bool) -> Option<usize> {
+        self.pairs.find_free(b, strong)
+    }
+
+    /// BFS for a displacement path. Returns the moves to execute (deepest
+    /// first) plus the root bucket/slot freed for the new key.
+    fn find_path(&self, roots: [usize; 3], strong: bool) -> Option<(Vec<Move>, usize, usize)> {
+        // node = (bucket, parent index, slot in parent whose occupant
+        // hashes to this bucket)
+        let mut nodes: Vec<(usize, usize, usize)> = Vec::with_capacity(MAX_BFS_NODES);
+        for r in roots {
+            nodes.push((r, usize::MAX, usize::MAX));
+        }
+        let mut qi = 3; // roots were checked by the caller (they're full)
+        // Expand roots first.
+        for root_idx in 0..3 {
+            let b = nodes[root_idx].0;
+            for s in 0..self.pairs.bucket_size {
+                let k = self.pairs.key_at(b, s, strong);
+                if !is_user_key(k) {
+                    continue;
+                }
+                for alt in self.buckets_of(k) {
+                    if alt != b && nodes.len() < MAX_BFS_NODES {
+                        nodes.push((alt, root_idx, s));
+                    }
+                }
+            }
+        }
+        while qi < nodes.len() {
+            let (b, _, _) = nodes[qi];
+            if let Some(f) = self.free_slot(b, strong) {
+                // Reconstruct the move chain, deepest first.
+                let mut moves = Vec::new();
+                let mut cur = qi;
+                let mut dst_slot = f;
+                while nodes[cur].1 != usize::MAX {
+                    let (dst_bucket, parent, pslot) = nodes[cur];
+                    moves.push(Move {
+                        src_bucket: nodes[parent].0,
+                        src_slot: pslot,
+                        dst_bucket,
+                        dst_slot,
+                    });
+                    dst_slot = pslot;
+                    cur = parent;
+                }
+                return Some((moves, nodes[cur].0, dst_slot));
+            }
+            // Expand.
+            if nodes.len() < MAX_BFS_NODES {
+                for s in 0..self.pairs.bucket_size {
+                    let k = self.pairs.key_at(b, s, strong);
+                    if !is_user_key(k) {
+                        continue;
+                    }
+                    for alt in self.buckets_of(k) {
+                        if alt != b && nodes.len() < MAX_BFS_NODES {
+                            nodes.push((alt, qi, s));
+                        }
+                    }
+                }
+            }
+            qi += 1;
+        }
+        None
+    }
+
+    /// Execute one verified move under the pairwise bucket locks
+    /// (libcuckoo's backward displacement). Returns false if the world
+    /// changed since the BFS and the caller must retry.
+    fn execute_move(&self, m: &Move) -> bool {
+        let locking = self.mode.locking();
+        if locking {
+            self.locks.lock_two(m.src_bucket, m.dst_bucket);
+        }
+        let strong = self.mode.strong();
+        let (k, v) = self.pairs.pair_at(m.src_bucket, m.src_slot, strong);
+        let ok = is_user_key(k)
+            && self.buckets_of(k).contains(&m.dst_bucket)
+            && !is_user_key(self.pairs.key_at(m.dst_bucket, m.dst_slot, strong))
+            && self.pairs.key_at(m.dst_bucket, m.dst_slot, strong) != super::common::KEY_RESERVED;
+        if ok {
+            if locking {
+                // Both buckets are exclusively ours: copy then clear.
+                self.pairs.set_pair_locked(m.dst_bucket, m.dst_slot, k, v);
+                self.pairs
+                    .mem()
+                    .store_release(self.pairs.kidx(m.src_bucket, m.src_slot), KEY_EMPTY);
+            } else {
+                // Phased mode: CAS-claim the destination, publish, then
+                // release the source slot.
+                if !self.pairs.try_claim(m.dst_bucket, m.dst_slot, true) {
+                    return false;
+                }
+                self.pairs.publish(m.dst_bucket, m.dst_slot, k, v);
+                self.pairs
+                    .mem()
+                    .store_release(self.pairs.kidx(m.src_bucket, m.src_slot), KEY_EMPTY);
+            }
+        }
+        if locking {
+            self.locks.unlock_two(m.src_bucket, m.dst_bucket);
+        }
+        ok
+    }
+
+    fn apply_existing(&self, b: usize, slot: usize, old_v: u64, val: u64, op: &UpsertOp) {
+        match op.merge(old_v, val) {
+            Some(newv) => {
+                if newv != old_v {
+                    self.pairs.value_store(b, slot, newv);
+                }
+            }
+            None => match op {
+                UpsertOp::AddAssign => self.pairs.value_fetch_add(b, slot, val),
+                UpsertOp::AddAssignF64 => {
+                    self.pairs.value_fetch_add_f64(b, slot, f64::from_bits(val))
+                }
+                _ => unreachable!(),
+            },
+        }
+    }
+}
+
+impl ConcurrentMap for CuckooHt {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let bs = self.buckets_of(key);
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        for _attempt in 0..MAX_ATTEMPTS {
+            if locking {
+                self.locks.lock_three(bs);
+            }
+            // Update path: key already present?
+            let mut done = None;
+            for b in bs {
+                if let Some((slot, old_v)) = self.pairs.scan_bucket(b, key, strong).found {
+                    self.apply_existing(b, slot, old_v, val, op);
+                    done = Some(UpsertResult::Updated);
+                    break;
+                }
+            }
+            // Direct insert into any bucket with space.
+            if done.is_none() {
+                'claim: for b in bs {
+                    loop {
+                        let r = self.pairs.scan_bucket(b, key, strong);
+                        let slot = match r.reusable() {
+                            Some(s) => s,
+                            None => break,
+                        };
+                        self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
+                        if locking {
+                            // Exclusive ownership of all three buckets.
+                            self.pairs.set_pair_locked(b, slot, key, val);
+                            done = Some(UpsertResult::Inserted);
+                            break 'claim;
+                        } else if self.pairs.try_claim(b, slot, true) {
+                            self.pairs.publish(b, slot, key, val);
+                            done = Some(UpsertResult::Inserted);
+                            break 'claim;
+                        }
+                    }
+                }
+            }
+            if locking {
+                self.locks.unlock_three(bs);
+            }
+            match done {
+                Some(UpsertResult::Inserted) => {
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    return UpsertResult::Inserted;
+                }
+                Some(r) => return r,
+                None => {}
+            }
+            // All three buckets full: BFS displacement (locks released —
+            // path execution re-locks pairwise like libcuckoo).
+            self.hook
+                .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: bs[0] });
+            let Some((moves, _root_bucket, _root_slot)) = self.find_path(bs, strong) else {
+                return UpsertResult::Full;
+            };
+            let mut all_ok = true;
+            for m in &moves {
+                if !self.execute_move(m) {
+                    all_ok = false;
+                    break;
+                }
+            }
+            // Whether or not the chain completed, retry the claim loop;
+            // partial chains still freed some space somewhere.
+            let _ = all_ok;
+        }
+        UpsertResult::Full
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        let bs = self.buckets_of(key);
+        let locking = self.mode.locking();
+        if locking {
+            // Unstable table: a displacement could move the key between
+            // bucket scans — queries must lock (paper §6.8).
+            self.locks.lock_three(bs);
+        }
+        let strong = self.mode.strong();
+        let mut out = None;
+        for b in bs {
+            if let Some((_, v)) = self.pairs.scan_bucket(b, key, strong).found {
+                out = Some(v);
+                break;
+            }
+        }
+        if locking {
+            self.locks.unlock_three(bs);
+        }
+        out
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let bs = self.buckets_of(key);
+        let locking = self.mode.locking();
+        if locking {
+            self.locks.lock_three(bs);
+        }
+        let strong = self.mode.strong();
+        let mut hit = false;
+        for b in bs {
+            if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                // No probe-sequence invariant: reset straight to EMPTY.
+                self.pairs
+                    .mem()
+                    .store_release(self.pairs.kidx(b, slot), KEY_EMPTY);
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+                hit = true;
+                break;
+            }
+        }
+        if locking {
+            self.locks.unlock_three(bs);
+        }
+        hit
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.pairs.num_buckets
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        self.buckets_of(key)[0]
+    }
+
+    fn capacity(&self) -> usize {
+        self.pairs.num_buckets * self.pairs.bucket_size
+    }
+
+    fn len(&self) -> usize {
+        self.live.load(Ordering::Relaxed) as usize
+    }
+
+    fn device_bytes(&self) -> usize {
+        self.pairs.device_bytes() + self.locks.bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        if self.mode == ConcurrencyMode::Phased {
+            "BCHT(BGHT)"
+        } else {
+            "CuckooHT"
+        }
+    }
+
+    fn is_stable(&self) -> bool {
+        false
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        self.pairs.for_each_live(|k, v| f(k, v));
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        self.pairs.count_copies(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::test_support::*;
+
+    fn table(slots: usize) -> CuckooHt {
+        CuckooHt::new(TableConfig::new(slots).with_geometry(8, 4))
+    }
+
+    #[test]
+    fn basic_crud() {
+        check_basic_crud(&table(2048));
+    }
+
+    #[test]
+    fn fills_to_90_percent() {
+        check_fill_to(&table(8192), 0.90);
+    }
+
+    #[test]
+    fn upsert_policies() {
+        check_upsert_policies(&table(2048));
+    }
+
+    #[test]
+    fn aging_churn() {
+        check_aging_churn(&table(4096), 40);
+    }
+
+    #[test]
+    fn concurrent_no_duplicates() {
+        check_concurrent_no_duplicates(std::sync::Arc::new(table(8192)));
+    }
+
+    #[test]
+    fn concurrent_mixed() {
+        check_concurrent_mixed(std::sync::Arc::new(table(8192)));
+    }
+
+    #[test]
+    fn not_stable_so_no_in_place_adds() {
+        let t = table(1024);
+        assert!(!t.is_stable());
+        check_fetch_add_in_place(&t);
+    }
+
+    #[test]
+    fn oracle_equivalence() {
+        check_vs_oracle(&table(4096), 0x41);
+    }
+
+    #[test]
+    fn displacement_preserves_keys() {
+        // Fill hard enough that displacement chains must run.
+        let t = table(1024);
+        let ks = keys((1024.0 * 0.88) as usize, 0xCCC);
+        let mut ins = vec![];
+        for &k in &ks {
+            if t.upsert(k, k ^ 3, &UpsertOp::InsertIfUnique) == UpsertResult::Inserted {
+                ins.push(k);
+            }
+        }
+        assert!(ins.len() as f64 > ks.len() as f64 * 0.97);
+        for &k in &ins {
+            assert_eq!(t.query(k), Some(k ^ 3), "key lost during displacement");
+            assert_eq!(t.count_copies(k), 1);
+        }
+    }
+
+    #[test]
+    fn phased_mode_is_bght_baseline() {
+        let t = CuckooHt::new(
+            TableConfig::new(4096)
+                .with_geometry(8, 32)
+                .with_mode(ConcurrencyMode::Phased),
+        );
+        assert_eq!(t.name(), "BCHT(BGHT)");
+        check_fill_to(&t, 0.85);
+    }
+}

@@ -1,0 +1,431 @@
+//! DoubleHT / DoubleHT(M) — double-hashing open addressing (paper §2.2, §5).
+//!
+//! * Plain variant: 8 KV pairs per bucket — one bucket per 128-byte cache
+//!   line — probing buckets `b_i = h1(k) + i · stride(k)` (stride odd, so
+//!   with a power-of-two bucket count the whole table is eventually
+//!   covered). Tile of 8 threads scans a bucket in one step.
+//! * Metadata variant: 32-pair buckets spanning 4 lines, plus a 16-bit
+//!   fingerprint per slot (64-byte tag block per bucket = 1 probe);
+//!   queries usually touch the tag block plus at most one data line.
+//!
+//! Stability: keys never move after insertion (tombstone deletion), so
+//! queries are lock-free and in-place accumulation is sound. Inserts and
+//! erases serialize per key through the external lock on the key's
+//! *primary* bucket (§4.1), while slot claims use CAS because different
+//! keys (different primary buckets) may land in the same target bucket.
+//!
+//! Negative-query early exit: a key is always stored at or before the
+//! first never-used (EMPTY) slot of its probe sequence — tombstone reuse
+//! prefers earlier slots and never moves keys, preserving the invariant.
+//! Aged tables lose EMPTY slots and negative queries degrade toward the
+//! probe cap, which is exactly the paper's aging observation for
+//! DoubleHT (Table 5.1: 80-probe negative queries; the (M) variant exits
+//! after ~19 tag blocks).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::common::{bucket_count_for, Pairs};
+use super::meta::MetaArray;
+use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
+use crate::gpusim::race::RaceEvent;
+use crate::gpusim::LockArray;
+use crate::hash::{hash1, stride, tag16};
+
+pub struct DoubleHt {
+    pairs: Pairs,
+    meta: Option<MetaArray>,
+    locks: LockArray,
+    mode: ConcurrencyMode,
+    max_probes: usize,
+    hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
+    live: AtomicU64,
+    /// Linear-probing mode (stride 1) — the classic design-space baseline
+    /// the paper lists in §2.2; suffers clustering at high load factors.
+    linear: bool,
+}
+
+impl DoubleHt {
+    pub fn new(cfg: TableConfig, with_meta: bool) -> Self {
+        Self::with_strategy(cfg, with_meta, false)
+    }
+
+    /// `linear = true` probes consecutive buckets (stride 1) instead of a
+    /// key-derived double-hash stride.
+    pub fn with_strategy(cfg: TableConfig, with_meta: bool, linear: bool) -> Self {
+        let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        let pairs = Pairs::new(nb, cfg.bucket_size, cfg.tile_size);
+        let meta = with_meta.then(|| MetaArray::new(nb, cfg.bucket_size));
+        Self {
+            pairs,
+            meta,
+            locks: LockArray::new(nb),
+            mode: cfg.mode,
+            max_probes: cfg.max_probes.min(nb),
+            hook: cfg.hook,
+            live: AtomicU64::new(0),
+            linear,
+        }
+    }
+
+    #[inline(always)]
+    fn bucket_seq(&self, key: u64) -> impl Iterator<Item = usize> + '_ {
+        let mask = self.pairs.mask();
+        let h = hash1(key);
+        let s = if self.linear { 1 } else { stride(key) };
+        (0..self.max_probes as u64).map(move |i| (h.wrapping_add(i.wrapping_mul(s)) & mask) as usize)
+    }
+
+    /// Apply an upsert policy to an existing pair.
+    #[inline]
+    fn apply_existing(&self, b: usize, slot: usize, old_v: u64, val: u64, op: &UpsertOp) {
+        match op.merge(old_v, val) {
+            Some(newv) => {
+                if newv != old_v {
+                    self.pairs.value_store(b, slot, newv);
+                }
+            }
+            None => match op {
+                UpsertOp::AddAssign => self.pairs.value_fetch_add(b, slot, val),
+                UpsertOp::AddAssignF64 => {
+                    self.pairs.value_fetch_add_f64(b, slot, f64::from_bits(val))
+                }
+                _ => unreachable!(),
+            },
+        }
+    }
+
+    /// Claim any reusable slot in bucket `b` and publish `key → val`.
+    /// Retries while other keys race for the same slots.
+    fn claim_in_bucket(&self, b: usize, key: u64, val: u64, tag: u16) -> bool {
+        let strong = self.mode.strong();
+        loop {
+            let (slot, via_meta) = if let Some(meta) = &self.meta {
+                let ms = meta.scan(b, tag, strong);
+                match ms.reusable() {
+                    Some(s) => (s, true),
+                    None => return false,
+                }
+            } else {
+                let r = self.pairs.scan_bucket(b, key, strong);
+                match r.reusable() {
+                    Some(s) => (s, false),
+                    None => return false,
+                }
+            };
+            self.hook
+                .on_event(RaceEvent::BeforeClaim { key, bucket: b });
+            if via_meta {
+                let meta = self.meta.as_ref().unwrap();
+                if meta.try_claim(b, slot, tag, true) {
+                    // Tag ownership implies the pair slot is claimable.
+                    let ok = self.pairs.try_claim(b, slot, true);
+                    debug_assert!(ok, "tag claimed but pair slot busy");
+                    self.pairs.publish(b, slot, key, val);
+                    return true;
+                }
+            } else if self.pairs.try_claim(b, slot, true) {
+                self.pairs.publish(b, slot, key, val);
+                return true;
+            }
+            // Lost the race for this slot — rescan the bucket.
+        }
+    }
+
+    /// Walk the probe sequence looking for `key`. Returns
+    /// `Ok((bucket, slot, value))` when found; `Err(first_target_bucket)`
+    /// when absent, where the bucket is the earliest one with a reusable
+    /// slot (None if the whole window is full).
+    fn find(&self, key: u64, strong: bool) -> Result<(usize, usize, u64), Option<usize>> {
+        // Hoisted: tag16 costs two fmix64 rounds; compute once per op.
+        let tag = self.meta.as_ref().map(|_| tag16(key)).unwrap_or(0);
+        let mut target: Option<usize> = None;
+        let mut probed_primary = false;
+        for b in self.bucket_seq(key) {
+            if let Some(meta) = &self.meta {
+                let ms = meta.scan(b, tag, strong);
+                if let Some((slot, v)) = self.pairs.scan_slots(b, ms.match_slots(), key, strong) {
+                    return Ok((b, slot, v));
+                }
+                if target.is_none() && ms.reusable().is_some() {
+                    target = Some(b);
+                }
+                if ms.has_empty() {
+                    return Err(target);
+                }
+            } else {
+                let r = self.pairs.scan_bucket(b, key, strong);
+                if let Some((slot, v)) = r.found {
+                    return Ok((b, slot, v));
+                }
+                if target.is_none() && r.reusable().is_some() {
+                    target = Some(b);
+                }
+                if r.has_empty() {
+                    return Err(target);
+                }
+            }
+            if !probed_primary {
+                probed_primary = true;
+                self.hook
+                    .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: b });
+            }
+        }
+        Err(target)
+    }
+}
+
+impl ConcurrentMap for DoubleHt {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let primary = self.primary_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(primary);
+        }
+        let strong = self.mode.strong();
+        let res = match self.find(key, strong) {
+            Ok((b, slot, old_v)) => {
+                self.apply_existing(b, slot, old_v, val, op);
+                UpsertResult::Updated
+            }
+            Err(target) => {
+                // Claim in the earliest bucket with space; if the claim
+                // races away, fall forward along the sequence.
+                let tag = self.meta.as_ref().map(|_| tag16(key)).unwrap_or(0);
+                let mut done = false;
+                if let Some(tb) = target {
+                    if self.claim_in_bucket(tb, key, val, tag) {
+                        done = true;
+                    }
+                }
+                if !done {
+                    for b in self.bucket_seq(key) {
+                        if Some(b) == target {
+                            continue;
+                        }
+                        if self.claim_in_bucket(b, key, val, tag) {
+                            done = true;
+                            break;
+                        }
+                    }
+                }
+                if done {
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    UpsertResult::Inserted
+                } else {
+                    UpsertResult::Full
+                }
+            }
+        };
+        if self.mode.locking() {
+            self.locks.unlock(primary);
+        }
+        res
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        let strong = self.mode.strong();
+        match self.find(key, strong) {
+            Ok((_, _, v)) => Some(v),
+            Err(_) => None,
+        }
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let primary = self.primary_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(primary);
+        }
+        let strong = self.mode.strong();
+        let hit = match self.find(key, strong) {
+            Ok((b, slot, _)) => {
+                self.pairs.kill(b, slot);
+                if let Some(meta) = &self.meta {
+                    meta.kill(b, slot);
+                }
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                self.hook
+                    .on_event(RaceEvent::AfterDelete { key, bucket: b });
+                true
+            }
+            Err(_) => false,
+        };
+        if self.mode.locking() {
+            self.locks.unlock(primary);
+        }
+        hit
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.pairs.num_buckets
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        (hash1(key) & self.pairs.mask()) as usize
+    }
+
+    fn capacity(&self) -> usize {
+        self.pairs.num_buckets * self.pairs.bucket_size
+    }
+
+    fn len(&self) -> usize {
+        self.live.load(Ordering::Relaxed) as usize
+    }
+
+    fn device_bytes(&self) -> usize {
+        self.pairs.device_bytes()
+            + self.meta.as_ref().map_or(0, |m| m.device_bytes())
+            + self.locks.bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        match (self.linear, self.meta.is_some()) {
+            (true, _) => "LinearHT",
+            (false, true) => "DoubleHT(M)",
+            (false, false) => "DoubleHT",
+        }
+    }
+
+    fn is_stable(&self) -> bool {
+        true
+    }
+
+    fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
+        match self.find(key, self.mode.strong()) {
+            Ok((b, slot, _)) => {
+                self.pairs.value_fetch_add(b, slot, v);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
+        match self.find(key, self.mode.strong()) {
+            Ok((b, slot, _)) => {
+                self.pairs.value_fetch_add_f64(b, slot, v);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        self.pairs.for_each_live(|k, v| f(k, v));
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        self.pairs.count_copies(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::test_support::*;
+
+    fn plain(slots: usize) -> DoubleHt {
+        DoubleHt::new(TableConfig::new(slots), false)
+    }
+
+    fn meta(slots: usize) -> DoubleHt {
+        DoubleHt::new(TableConfig::new(slots).with_geometry(32, 4), true)
+    }
+
+    #[test]
+    fn basic_crud_plain() {
+        check_basic_crud(&plain(1024));
+    }
+
+    #[test]
+    fn basic_crud_meta() {
+        check_basic_crud(&meta(1024));
+    }
+
+    #[test]
+    fn fills_to_90_percent_plain() {
+        check_fill_to(&plain(4096), 0.90);
+    }
+
+    #[test]
+    fn fills_to_90_percent_meta() {
+        check_fill_to(&meta(4096), 0.90);
+    }
+
+    #[test]
+    fn upsert_policies_work() {
+        check_upsert_policies(&plain(1024));
+        check_upsert_policies(&meta(1024));
+    }
+
+    #[test]
+    fn negative_query_after_aging() {
+        check_aging_churn(&plain(2048), 50);
+        check_aging_churn(&meta(2048), 50);
+    }
+
+    #[test]
+    fn concurrent_inserts_no_duplicates() {
+        check_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
+        check_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
+    }
+
+    #[test]
+    fn concurrent_mixed_ops_linearize() {
+        check_concurrent_mixed(std::sync::Arc::new(plain(8192)));
+    }
+
+    #[test]
+    fn in_place_accumulate() {
+        check_fetch_add_in_place(&plain(1024));
+        check_fetch_add_in_place(&meta(1024));
+    }
+
+    #[test]
+    fn bsp_mode_loads() {
+        let t = DoubleHt::new(
+            TableConfig::new(2048).with_mode(ConcurrencyMode::Phased),
+            false,
+        );
+        check_fill_to(&t, 0.85);
+    }
+
+    #[test]
+    fn linear_probing_variant_works() {
+        let t = DoubleHt::with_strategy(TableConfig::new(2048), false, true);
+        assert_eq!(t.name(), "LinearHT");
+        check_basic_crud(&t);
+        let t2 = DoubleHt::with_strategy(TableConfig::new(4096), false, true);
+        check_fill_to(&t2, 0.85);
+    }
+
+    #[test]
+    fn linear_probing_clusters_more_than_double_hashing() {
+        // §2.2: double hashing exists to avoid linear probing's
+        // clustering — at high load the linear variant must probe more.
+        use crate::gpusim::probes::{self, OpStats, ProbeScope};
+        probes::set_enabled(true);
+        let mk = |linear| DoubleHt::with_strategy(TableConfig::new(8192), false, linear);
+        let measure = |t: &DoubleHt| {
+            let ks = keys((t.capacity() as f64 * 0.88) as usize, 0x11EA);
+            let mut st = OpStats::default();
+            for &k in &ks {
+                let s = ProbeScope::begin();
+                t.upsert(k, 1, &UpsertOp::InsertIfUnique);
+                st.record(s.finish());
+            }
+            st.avg()
+        };
+        let lin = measure(&mk(true));
+        let dbl = measure(&mk(false));
+        assert!(
+            lin > dbl,
+            "linear probing should cluster: linear {lin:.2} vs double {dbl:.2}"
+        );
+    }
+
+    #[test]
+    fn property_matches_std_hashmap() {
+        check_vs_oracle(&plain(4096), 0xD0);
+        check_vs_oracle(&meta(4096), 0xD1);
+    }
+}

@@ -1,0 +1,179 @@
+//! Static device-format table for the AOT bulk-query path (L1/L2 bridge).
+//!
+//! The Pallas kernel (`python/compile/kernels/probe.py`) operates on a
+//! fixed-shape snapshot: `keys[NB, B]` / `vals[NB, B]` arrays of `u32`
+//! with hash `fmix32(k) & (NB-1)` and linear bucket probing, capped at
+//! [`MAX_PROBES`] buckets. This module builds that snapshot host-side
+//! (bit-identical hash — see [`crate::hash::fmix32`]), provides the Rust
+//! reference query used in parity tests, and flattens the arrays in the
+//! row-major layout the compiled HLO executable expects.
+//!
+//! The coordinator uses it to offload read-only query batches: quiesce a
+//! shard, export, then serve Query-heavy phases from the compiled
+//! executable (the BSP fast path the paper measures in Table 5.1).
+
+use crate::hash::fmix32;
+
+/// Sentinel for an empty slot in the u32 snapshot (0 is reserved; user
+/// keys must be non-zero u32).
+pub const EMPTY32: u32 = 0;
+/// Linear probe cap — MUST match `python/compile/kernels/probe.py`.
+pub const MAX_PROBES: usize = 4;
+
+#[derive(Clone, Debug)]
+pub struct KernelTable {
+    pub num_buckets: usize,
+    pub bucket_size: usize,
+    pub keys: Vec<u32>,
+    pub vals: Vec<u32>,
+    len: usize,
+}
+
+impl KernelTable {
+    /// `num_buckets` must be a power of two.
+    pub fn new(num_buckets: usize, bucket_size: usize) -> Self {
+        assert!(num_buckets.is_power_of_two());
+        Self {
+            num_buckets,
+            bucket_size,
+            keys: vec![EMPTY32; num_buckets * bucket_size],
+            vals: vec![0; num_buckets * bucket_size],
+            len: 0,
+        }
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, key: u32) -> usize {
+        (fmix32(key) & (self.num_buckets as u32 - 1)) as usize
+    }
+
+    /// Host-side build insert. Returns false when the probe window is
+    /// full (callers keep load factor ≤ ~50% so this never fires).
+    pub fn insert(&mut self, key: u32, val: u32) -> bool {
+        assert_ne!(key, EMPTY32, "key 0 is the empty sentinel");
+        let b0 = self.bucket_of(key);
+        for p in 0..MAX_PROBES.min(self.num_buckets) {
+            let b = (b0 + p) & (self.num_buckets - 1);
+            for s in 0..self.bucket_size {
+                let i = b * self.bucket_size + s;
+                if self.keys[i] == key {
+                    self.vals[i] = val;
+                    return true;
+                }
+                if self.keys[i] == EMPTY32 {
+                    self.keys[i] = key;
+                    self.vals[i] = val;
+                    self.len += 1;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Rust reference query — the oracle the compiled kernel is checked
+    /// against in integration tests.
+    pub fn query(&self, key: u32) -> Option<u32> {
+        let b0 = self.bucket_of(key);
+        for p in 0..MAX_PROBES.min(self.num_buckets) {
+            let b = (b0 + p) & (self.num_buckets - 1);
+            let mut saw_empty = false;
+            for s in 0..self.bucket_size {
+                let i = b * self.bucket_size + s;
+                if self.keys[i] == key {
+                    return Some(self.vals[i]);
+                }
+                if self.keys[i] == EMPTY32 {
+                    saw_empty = true;
+                    break;
+                }
+            }
+            if saw_empty {
+                return None;
+            }
+        }
+        None
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Build a snapshot from `(key, val)` pairs, sized for ≤50% load.
+    pub fn build(pairs: &[(u32, u32)], bucket_size: usize) -> Self {
+        let want_slots = (pairs.len() * 2).max(16);
+        let nb = want_slots.div_ceil(bucket_size).next_power_of_two();
+        let mut t = Self::new(nb, bucket_size);
+        for &(k, v) in pairs {
+            let ok = t.insert(k, v);
+            assert!(ok, "snapshot build overflow at 50% load");
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn insert_query_roundtrip() {
+        let mut t = KernelTable::new(64, 8);
+        let mut rng = Xoshiro256pp::new(1);
+        let mut pairs = vec![];
+        for _ in 0..200 {
+            let k = (rng.next_u64() as u32) | 1;
+            let v = rng.next_u64() as u32;
+            if t.insert(k, v) {
+                pairs.push((k, v));
+            }
+        }
+        assert!(pairs.len() >= 190);
+        for &(k, v) in &pairs {
+            // Later duplicate inserts may have overwritten: query must
+            // return the latest value for the key.
+            let got = t.query(k).expect("inserted key must be found");
+            let latest = pairs.iter().rev().find(|(pk, _)| *pk == k).unwrap().1;
+            assert_eq!(got, latest, "{v}");
+        }
+    }
+
+    #[test]
+    fn negative_queries_miss() {
+        let mut t = KernelTable::new(64, 8);
+        for k in 1..=100u32 {
+            t.insert(k, k * 2);
+        }
+        for k in 1000..1100u32 {
+            assert_eq!(t.query(k), None);
+        }
+    }
+
+    #[test]
+    fn build_sizes_for_half_load() {
+        let pairs: Vec<(u32, u32)> = (1..=1000u32).map(|k| (k, k)).collect();
+        let t = KernelTable::build(&pairs, 8);
+        assert!(t.capacity() >= 2000);
+        assert_eq!(t.len(), 1000);
+        for &(k, v) in &pairs {
+            assert_eq!(t.query(k), Some(v));
+        }
+    }
+
+    #[test]
+    fn hash_matches_fmix32() {
+        let t = KernelTable::new(256, 8);
+        for k in [1u32, 0xDEAD, 0xBEEF, u32::MAX] {
+            assert_eq!(t.bucket_of(k), (fmix32(k) & 255) as usize);
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Fingerprint metadata arrays (paper §4.3, Figure 4.2).
+//!
+//! One 16-bit tag per slot; the tags of a 32-slot bucket occupy 64 bytes —
+//! half a 128-byte cache line, "the load size used by the L2 cache, so no
+//! bandwidth is wasted during the load of the metadata". Tag reads of a
+//! whole bucket therefore cost exactly one probe.
+//!
+//! Storage is word-packed: four tags per `AtomicU64`, so scanning a
+//! 32-slot bucket is 8 atomic word loads (the CPU analog of the GPU
+//! tile's single vector load of the 64-byte tag block). This packing is
+//! the §Perf "metadata SWAR" optimization — the original per-tag
+//! `AtomicU16` layout cost 32 atomic loads per scan and made the metadata
+//! variants *slower* than their plain counterparts on the CPU testbed,
+//! inverting the paper's shape.
+//!
+//! Protocol (matches Figure 4.2): on insert the tag is CAS-claimed FIRST
+//! (EMPTY→tag); the claim hands the slot to the inserting thread, which
+//! then publishes the key-value pair. Matches are always verified against
+//! the full key, so tag collisions cost extra probes but never wrong
+//! answers. Deletes set the tag to `TAG_TOMBSTONE` after killing the
+//! pair; inserts may reuse tombstone tags.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::gpusim::probes;
+use crate::hash::{TAG_EMPTY, TAG_TOMBSTONE};
+
+/// Tags per packed word.
+const LANES: usize = 4;
+
+pub struct MetaArray {
+    words: Box<[AtomicU64]>,
+    bucket_size: usize,
+    words_per_bucket: usize,
+    mem_id: u64,
+}
+
+static NEXT_META_MEM_ID: AtomicU64 = AtomicU64::new(1);
+
+#[inline(always)]
+fn lane_get(word: u64, lane: usize) -> u16 {
+    (word >> (16 * lane)) as u16
+}
+
+const LANE_LO: u64 = 0x0001_0001_0001_0001;
+const LANE_HI: u64 = 0x8000_8000_8000_8000;
+
+/// SWAR any-lane-zero detector for 16-bit lanes. The classic
+/// `(x - LO) & !x & HI` expression can flag a *wrong lane* when a lower
+/// lane is zero (borrow propagation), but it is EXACT as an "any lane is
+/// zero" predicate: false positives require a lower lane that is itself
+/// zero. We therefore use it only as a word-skip prefilter and re-verify
+/// lanes exactly when it fires.
+#[inline(always)]
+fn any_lane_zero(x: u64) -> bool {
+    x.wrapping_sub(LANE_LO) & !x & LANE_HI != 0
+}
+
+/// Broadcast a 16-bit tag to all four lanes.
+#[inline(always)]
+fn bcast(tag: u16) -> u64 {
+    (tag as u64).wrapping_mul(LANE_LO)
+}
+
+#[inline(always)]
+fn lane_set(word: u64, lane: usize, tag: u16) -> u64 {
+    let shift = 16 * lane;
+    (word & !(0xFFFFu64 << shift)) | ((tag as u64) << shift)
+}
+
+impl MetaArray {
+    pub fn new(num_buckets: usize, bucket_size: usize) -> Self {
+        let wpb = bucket_size.div_ceil(LANES);
+        let mut v = Vec::with_capacity(num_buckets * wpb);
+        // Pad lanes (beyond bucket_size in the last word) are initialized
+        // to TAG_EMPTY but masked out of every scan, so they are never
+        // matched or claimed.
+        v.resize_with(num_buckets * wpb, || AtomicU64::new(0));
+        Self {
+            words: v.into_boxed_slice(),
+            bucket_size,
+            words_per_bucket: wpb,
+            mem_id: NEXT_META_MEM_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    pub fn device_bytes(&self) -> usize {
+        // Device cost is the logical 2 bytes per slot (padding is a host
+        // artifact of word packing).
+        self.words.len() / self.words_per_bucket * self.bucket_size * 2
+    }
+
+    #[inline(always)]
+    fn word_idx(&self, bucket: usize, word: usize) -> usize {
+        bucket * self.words_per_bucket + word
+    }
+
+    /// Probe-account the metadata lines this bucket's tags occupy
+    /// (16 words = 64 tags per 128-byte line; a 32-slot bucket = 1 probe).
+    #[inline(always)]
+    fn touch_bucket(&self, bucket: usize) {
+        if !probes::enabled() {
+            return;
+        }
+        let first = self.word_idx(bucket, 0) * 8 / crate::gpusim::LINE_BYTES;
+        let last =
+            self.word_idx(bucket, self.words_per_bucket - 1) * 8 / crate::gpusim::LINE_BYTES;
+        for line in first..=last {
+            probes::touch((0x2000_0000_0000 | self.mem_id) << 16 | line as u64);
+        }
+    }
+
+    /// Read all tags of a bucket (one metadata probe), returning the
+    /// summary a tile computes with a ballot: matching slots, first empty
+    /// tag slot, first tombstone tag slot, fill.
+    pub fn scan(&self, bucket: usize, tag: u16, strong: bool) -> MetaScan {
+        self.touch_bucket(bucket);
+        let ord = if strong {
+            Ordering::Acquire
+        } else {
+            Ordering::Relaxed
+        };
+        let mut r = MetaScan::default();
+        let mut slot = 0usize;
+        let tag_b = bcast(tag);
+        let tomb_b = bcast(TAG_TOMBSTONE);
+        for w in 0..self.words_per_bucket {
+            let word = self.words[self.word_idx(bucket, w)].load(ord);
+            let lanes = LANES.min(self.bucket_size - slot);
+            // SWAR prefilter: a fully-occupied, non-matching word (the
+            // common case when scanning an aged bucket) is classified
+            // with three ALU ops and no lane loop.
+            let interesting = any_lane_zero(word ^ tag_b)
+                || any_lane_zero(word)
+                || any_lane_zero(word ^ tomb_b)
+                || lanes < LANES;
+            if !interesting {
+                r.fill += lanes;
+                slot += lanes;
+                continue;
+            }
+            for lane in 0..lanes {
+                let t = lane_get(word, lane);
+                let s = slot + lane;
+                if t == tag {
+                    if r.n_matches < r.matches.len() {
+                        r.matches[r.n_matches] = s as u16;
+                    }
+                    r.n_matches += 1;
+                    r.fill += 1;
+                } else if t == TAG_EMPTY {
+                    if r.first_empty.is_none() {
+                        r.first_empty = Some(s);
+                    }
+                } else if t == TAG_TOMBSTONE {
+                    if r.first_tombstone.is_none() {
+                        r.first_tombstone = Some(s);
+                    }
+                } else {
+                    r.fill += 1;
+                }
+            }
+            slot += lanes;
+        }
+        r
+    }
+
+    /// CAS-claim a tag slot: `EMPTY→tag` (or `TOMBSTONE→tag` when
+    /// `reuse_tombstone`). Returns true when this thread owns the slot.
+    pub fn try_claim(&self, bucket: usize, slot: usize, tag: u16, reuse_tombstone: bool) -> bool {
+        debug_assert!(slot < self.bucket_size);
+        self.touch_bucket(bucket);
+        let idx = self.word_idx(bucket, slot / LANES);
+        let lane = slot % LANES;
+        let cell = &self.words[idx];
+        loop {
+            probes::count_atomic();
+            let cur = cell.load(Ordering::Acquire);
+            let t = lane_get(cur, lane);
+            let claimable = t == TAG_EMPTY || (reuse_tombstone && t == TAG_TOMBSTONE);
+            if !claimable {
+                return false;
+            }
+            let new = lane_set(cur, lane, tag);
+            if cell
+                .compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+            // Another lane of the word changed; retry this lane.
+        }
+    }
+
+    /// Mark a slot's tag as deleted (after the pair is killed).
+    pub fn kill(&self, bucket: usize, slot: usize) {
+        debug_assert!(slot < self.bucket_size);
+        self.touch_bucket(bucket);
+        let idx = self.word_idx(bucket, slot / LANES);
+        let lane = slot % LANES;
+        let cell = &self.words[idx];
+        loop {
+            let cur = cell.load(Ordering::Acquire);
+            let new = lane_set(cur, lane, TAG_TOMBSTONE);
+            probes::count_atomic();
+            if cell
+                .compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    /// Raw tag read (tests).
+    pub fn tag_at(&self, bucket: usize, slot: usize) -> u16 {
+        let idx = self.word_idx(bucket, slot / LANES);
+        lane_get(self.words[idx].load(Ordering::Acquire), slot % LANES)
+    }
+}
+
+/// Ballot summary of a metadata bucket scan.
+#[derive(Clone, Copy, Debug)]
+pub struct MetaScan {
+    /// Slot indices whose tag matched (first 8 recorded; more than 8
+    /// same-tag collisions in one bucket is vanishingly rare at 1/65536).
+    pub matches: [u16; 8],
+    pub n_matches: usize,
+    pub first_empty: Option<usize>,
+    pub first_tombstone: Option<usize>,
+    /// Occupied (non-empty, non-tombstone) tag count including matches.
+    pub fill: usize,
+}
+
+impl Default for MetaScan {
+    fn default() -> Self {
+        Self {
+            matches: [0; 8],
+            n_matches: 0,
+            first_empty: None,
+            first_tombstone: None,
+            fill: 0,
+        }
+    }
+}
+
+impl MetaScan {
+    #[inline]
+    pub fn match_slots(&self) -> impl Iterator<Item = usize> + '_ {
+        self.matches[..self.n_matches.min(self.matches.len())]
+            .iter()
+            .map(|&s| s as usize)
+    }
+
+    #[inline]
+    pub fn reusable(&self) -> Option<usize> {
+        self.first_tombstone.or(self.first_empty)
+    }
+
+    /// Negative early exit is sound when the bucket still has a
+    /// never-used tag: the key would have been placed at or before it.
+    #[inline]
+    pub fn has_empty(&self) -> bool {
+        self.first_empty.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::probes::ProbeScope;
+
+    #[test]
+    fn scan_finds_matches_and_empties() {
+        let m = MetaArray::new(4, 32);
+        assert!(m.try_claim(1, 3, 0x1234, false));
+        assert!(m.try_claim(1, 7, 0x1234, false));
+        assert!(m.try_claim(1, 9, 0x9999, false));
+        let s = m.scan(1, 0x1234, true);
+        assert_eq!(s.n_matches, 2);
+        assert_eq!(s.match_slots().collect::<Vec<_>>(), vec![3, 7]);
+        assert_eq!(s.first_empty, Some(0));
+        assert_eq!(s.fill, 3);
+    }
+
+    #[test]
+    fn claim_is_exclusive() {
+        let m = MetaArray::new(2, 32);
+        assert!(m.try_claim(0, 5, 0x42, false));
+        assert!(!m.try_claim(0, 5, 0x43, false));
+    }
+
+    #[test]
+    fn tombstone_reuse() {
+        let m = MetaArray::new(2, 32);
+        assert!(m.try_claim(0, 5, 0x42, false));
+        m.kill(0, 5);
+        assert_eq!(m.tag_at(0, 5), TAG_TOMBSTONE);
+        let s = m.scan(0, 0x42, true);
+        assert_eq!(s.n_matches, 0);
+        assert_eq!(s.first_tombstone, Some(5));
+        assert!(!m.try_claim(0, 5, 0x44, false));
+        assert!(m.try_claim(0, 5, 0x44, true));
+    }
+
+    #[test]
+    fn bucket32_scan_is_one_probe() {
+        probes::set_enabled(true);
+        let m = MetaArray::new(8, 32);
+        let s = ProbeScope::begin();
+        m.scan(0, 0x7777, true);
+        assert_eq!(s.finish(), 1, "32 tags = 64B = one line");
+    }
+
+    #[test]
+    fn distinct_buckets_distinct_lines() {
+        probes::set_enabled(true);
+        let m = MetaArray::new(8, 32);
+        let s = ProbeScope::begin();
+        m.scan(0, 1, true);
+        m.scan(4, 1, true); // bucket 4 starts at byte 256 → different line
+        assert_eq!(s.finish(), 2);
+    }
+
+    #[test]
+    fn non_multiple_of_four_bucket_sizes_mask_padding() {
+        let m = MetaArray::new(4, 7); // 7 tags → 2 words, 1 pad lane
+        for s in 0..7 {
+            assert!(m.try_claim(2, s, 0x100 + s as u16, false), "slot {s}");
+        }
+        let sc = m.scan(2, 0x106, true);
+        assert_eq!(sc.n_matches, 1);
+        assert_eq!(sc.match_slots().collect::<Vec<_>>(), vec![6]);
+        // Bucket is full: the pad lane must NOT be reported as empty.
+        assert_eq!(sc.first_empty, None);
+        assert_eq!(sc.fill, 7);
+    }
+
+    #[test]
+    fn concurrent_claims_are_unique_per_slot() {
+        use std::sync::Arc;
+        let m = Arc::new(MetaArray::new(1, 32));
+        let won = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let mut hs = vec![];
+        for t in 0..4u16 {
+            let m = Arc::clone(&m);
+            let won = Arc::clone(&won);
+            hs.push(std::thread::spawn(move || {
+                for s in 0..32 {
+                    if m.try_claim(0, s, 0x200 + t, false) {
+                        won.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(won.load(Ordering::Relaxed), 32, "each slot exactly once");
+    }
+}

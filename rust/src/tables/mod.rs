@@ -1,0 +1,421 @@
+//! The WarpSpeed hash-table library: eight concurrent designs plus the
+//! baselines the paper compares against.
+//!
+//! | `TableKind`        | paper name     | design (paper §2.2, §5)                         |
+//! |--------------------|----------------|--------------------------------------------------|
+//! | `Double`           | DoubleHT       | double hashing, 8-slot buckets (1 line)          |
+//! | `DoubleMeta`       | DoubleHT(M)    | + 16-bit fingerprint metadata, 32-slot buckets   |
+//! | `P2`               | P2HT           | power-of-two-choice, 32-slot buckets, shortcut   |
+//! | `P2Meta`           | P2HT(M)        | + metadata                                       |
+//! | `Iceberg`          | IcebergHT      | front yard (83%, single hash) + backyard (p2)    |
+//! | `IcebergMeta`      | IcebergHT(M)   | + metadata                                       |
+//! | `Cuckoo`           | CuckooHT       | 3-way bucketed cuckoo, libcuckoo-style moves     |
+//! | `Chaining`         | ChainingHT     | per-bucket linked lists, Gallatin-style slabs    |
+//! | `SlabHashLike`     | SlabHash [3]   | lock-FREE upserts (INTENTIONALLY INCORRECT —     |
+//! |                    |                | reproduces the §4.1 duplicate-key race)          |
+//! | `WarpcoreLike`     | Warpcore [25]  | atomics-only, non-atomic pair writes, no         |
+//! |                    |                | tombstone reuse (baseline, not concurrency-safe) |
+//! | `BchtStatic`       | BCHT (BGHT)    | static bucketed cuckoo, BSP only                 |
+//! | `P2bhtStatic`      | P2BHT (BGHT)   | static power-of-two, BSP only                    |
+//!
+//! All concurrent tables use one lock bit per bucket in an external
+//! [`crate::gpusim::LockArray`], lock-free queries via the publish
+//! protocol (the `.b128` vector-load analog), and support the paper's
+//! upsert/query/erase API with compound upserts.
+
+pub mod common;
+pub mod meta;
+pub mod double;
+pub mod p2;
+pub mod iceberg;
+pub mod cuckoo;
+pub mod chaining;
+pub mod slabhash_like;
+pub mod warpcore_like;
+pub mod kernel_table;
+
+#[cfg(test)]
+pub(crate) mod test_support;
+
+use std::sync::Arc;
+
+use crate::gpusim::race::{NoopHook, RaceHook};
+
+/// Concurrency discipline a table instance runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConcurrencyMode {
+    /// Fully concurrent: per-bucket locks for upserts/erases, morally
+    /// strong (acquire/release) loads, publish-protocol pair writes.
+    Concurrent,
+    /// Bulk-synchronous phased mode: locks disabled, lazy (relaxed)
+    /// cacheable loads — the paper's BSP comparison point (§6.2). Only
+    /// correct when operations of different kinds never overlap.
+    Phased,
+}
+
+impl ConcurrencyMode {
+    #[inline(always)]
+    pub fn strong(self) -> bool {
+        matches!(self, ConcurrencyMode::Concurrent)
+    }
+
+    #[inline(always)]
+    pub fn locking(self) -> bool {
+        matches!(self, ConcurrencyMode::Concurrent)
+    }
+}
+
+/// The compound-operation parameter of `Upsert` (paper §5.1). The paper
+/// passes a device callback; here the policy is either one of the common
+/// precompiled behaviours or an arbitrary closure.
+pub enum UpsertOp<'a> {
+    /// `f(){ return; }` — insert if absent, leave existing value alone.
+    InsertIfUnique,
+    /// Replace the existing value (plain "put").
+    Overwrite,
+    /// `atomicAdd(&loc->val, val)` — accumulate (u64 lanes).
+    AddAssign,
+    /// Accumulate interpreting the value slot as f64 bits (SpTC).
+    AddAssignF64,
+    /// Arbitrary merge: `new_value = f(existing_value, incoming_value)`.
+    Custom(&'a (dyn Fn(u64, u64) -> u64 + Sync)),
+}
+
+impl<'a> UpsertOp<'a> {
+    /// Merge an existing value with the incoming one per the policy.
+    /// Returns `None` when the merge must be performed atomically in
+    /// place (AddAssign*) rather than by store.
+    #[inline]
+    pub fn merge(&self, existing: u64, incoming: u64) -> Option<u64> {
+        match self {
+            UpsertOp::InsertIfUnique => Some(existing),
+            UpsertOp::Overwrite => Some(incoming),
+            UpsertOp::AddAssign => None,
+            UpsertOp::AddAssignF64 => None,
+            UpsertOp::Custom(f) => Some(f(existing, incoming)),
+        }
+    }
+}
+
+/// Outcome of an upsert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpsertResult {
+    /// Key was absent and has been inserted.
+    Inserted,
+    /// Key was present and the policy was applied.
+    Updated,
+    /// Table (or the key's probe window) is full.
+    Full,
+}
+
+/// The unified hash-table interface (paper §5.1) plus the introspection
+/// hooks the adversarial benchmark requires (§4.1: "a CPU-side function
+/// that returns the number of buckets and a GPU-side function that
+/// returns the first bucket a key hashes to").
+pub trait ConcurrentMap: Send + Sync {
+    /// Upsert: insert `key → val` or combine with the existing value.
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult;
+
+    /// Lock-free point query.
+    fn query(&self, key: u64) -> Option<u64>;
+
+    /// Remove a key. Returns true if it was present.
+    fn erase(&self, key: u64) -> bool;
+
+    /// Number of buckets (adversarial-benchmark extension).
+    fn num_buckets(&self) -> usize;
+
+    /// First bucket the key hashes to (adversarial-benchmark extension).
+    fn primary_bucket(&self, key: u64) -> usize;
+
+    /// Capacity in key-value pairs.
+    fn capacity(&self) -> usize;
+
+    /// Live keys (approximate under concurrency).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total simulated device bytes (slots + metadata + locks + heads),
+    /// for the space-efficiency benchmark (§6.1).
+    fn device_bytes(&self) -> usize;
+
+    /// Display name matching the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// Referential stability (paper §2.1). Stable tables never move a key
+    /// after insertion, enabling lock-free fused read-modify-write.
+    fn is_stable(&self) -> bool;
+
+    /// In-place atomic accumulate without locks — only sound on stable
+    /// tables (sparse tensor contraction fast path, §6.7). Returns false
+    /// if the key is absent or the table is unstable.
+    fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
+        let _ = (key, v);
+        false
+    }
+
+    /// f64-typed in-place accumulate (SpTC values).
+    fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
+        let _ = (key, v);
+        false
+    }
+
+    /// Count physical copies of `key` across every location the design
+    /// could have stored it — the adversarial benchmark's correctness
+    /// check. O(table) is fine; only used by tests/benches.
+    fn count_copies(&self, key: u64) -> usize;
+
+    /// Visit every live key-value pair (quiesced snapshot semantics: the
+    /// caller must ensure no concurrent writers). Used for result export
+    /// (sparse tensor contraction output) and BSP snapshotting.
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64));
+}
+
+/// Identifies a table design for the factory + benchmark harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TableKind {
+    Double,
+    DoubleMeta,
+    P2,
+    P2Meta,
+    Iceberg,
+    IcebergMeta,
+    Cuckoo,
+    Chaining,
+    /// Linear-probing baseline (§2.2 design space; not one of the eight).
+    Linear,
+    SlabHashLike,
+    WarpcoreLike,
+    BchtStatic,
+    P2bhtStatic,
+}
+
+impl TableKind {
+    /// The eight designs evaluated as fully concurrent tables (§5).
+    pub const CONCURRENT: [TableKind; 8] = [
+        TableKind::Double,
+        TableKind::DoubleMeta,
+        TableKind::Iceberg,
+        TableKind::IcebergMeta,
+        TableKind::P2,
+        TableKind::P2Meta,
+        TableKind::Cuckoo,
+        TableKind::Chaining,
+    ];
+
+    /// Stable designs (everything but cuckoo among the concurrent set).
+    pub const STABLE: [TableKind; 7] = [
+        TableKind::Double,
+        TableKind::DoubleMeta,
+        TableKind::Iceberg,
+        TableKind::IcebergMeta,
+        TableKind::P2,
+        TableKind::P2Meta,
+        TableKind::Chaining,
+    ];
+
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            TableKind::Double => "DoubleHT",
+            TableKind::DoubleMeta => "DoubleHT(M)",
+            TableKind::P2 => "P2HT",
+            TableKind::P2Meta => "P2HT(M)",
+            TableKind::Iceberg => "IcebergHT",
+            TableKind::IcebergMeta => "IcebergHT(M)",
+            TableKind::Cuckoo => "CuckooHT",
+            TableKind::Chaining => "ChainingHT",
+            TableKind::Linear => "LinearHT",
+            TableKind::SlabHashLike => "SlabHash-like",
+            TableKind::WarpcoreLike => "Warpcore-like",
+            TableKind::BchtStatic => "BCHT(BGHT)",
+            TableKind::P2bhtStatic => "P2BHT(BGHT)",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TableKind> {
+        let t = match s.to_ascii_lowercase().as_str() {
+            "double" | "doubleht" => TableKind::Double,
+            "double_meta" | "doubleht(m)" | "doublem" => TableKind::DoubleMeta,
+            "p2" | "p2ht" => TableKind::P2,
+            "p2_meta" | "p2ht(m)" | "p2m" => TableKind::P2Meta,
+            "iceberg" | "iceberght" => TableKind::Iceberg,
+            "iceberg_meta" | "iceberght(m)" | "icebergm" => TableKind::IcebergMeta,
+            "cuckoo" | "cuckooht" => TableKind::Cuckoo,
+            "chaining" | "chaininght" => TableKind::Chaining,
+            "linear" | "linearht" => TableKind::Linear,
+            "slabhash" | "slabhash_like" => TableKind::SlabHashLike,
+            "warpcore" | "warpcore_like" => TableKind::WarpcoreLike,
+            "bcht" => TableKind::BchtStatic,
+            "p2bht" => TableKind::P2bhtStatic,
+            _ => return None,
+        };
+        Some(t)
+    }
+
+    /// Paper §5 per-design default (bucket_size, tile_size).
+    pub fn default_geometry(&self) -> (usize, usize) {
+        match self {
+            TableKind::Double => (8, 8),
+            TableKind::DoubleMeta => (32, 4),
+            TableKind::P2 => (32, 8),
+            TableKind::P2Meta => (32, 4),
+            TableKind::Iceberg => (32, 8),
+            TableKind::IcebergMeta => (32, 4),
+            TableKind::Cuckoo => (8, 4),
+            TableKind::Chaining => (7, 4),
+            TableKind::Linear => (8, 8),
+            TableKind::SlabHashLike => (8, 4),
+            TableKind::WarpcoreLike => (8, 8),
+            TableKind::BchtStatic => (8, 32),
+            TableKind::P2bhtStatic => (32, 32),
+        }
+    }
+}
+
+/// Construction parameters for any table design.
+#[derive(Clone)]
+pub struct TableConfig {
+    /// Requested capacity in key-value slots; rounded up so the bucket
+    /// count is a power of two.
+    pub slots: usize,
+    /// Key-value pairs per bucket (paper's templated bucket size).
+    pub bucket_size: usize,
+    /// Threads per cooperative tile (affects the cost model + reported
+    /// geometry; the functional scan order is tile-chunked).
+    pub tile_size: usize,
+    pub mode: ConcurrencyMode,
+    /// Max buckets probed before an open-addressing op gives up.
+    pub max_probes: usize,
+    /// Adversarial-schedule hook (Noop in production).
+    pub hook: Arc<dyn RaceHook>,
+}
+
+impl TableConfig {
+    pub fn new(slots: usize) -> Self {
+        Self {
+            slots,
+            bucket_size: 8,
+            tile_size: 8,
+            mode: ConcurrencyMode::Concurrent,
+            max_probes: 128,
+            hook: Arc::new(NoopHook),
+        }
+    }
+
+    pub fn for_kind(kind: TableKind, slots: usize) -> Self {
+        let (b, t) = kind.default_geometry();
+        let mut c = Self::new(slots);
+        c.bucket_size = b;
+        c.tile_size = t;
+        if matches!(kind, TableKind::BchtStatic | TableKind::P2bhtStatic) {
+            c.mode = ConcurrencyMode::Phased;
+        }
+        if matches!(kind, TableKind::Double | TableKind::DoubleMeta) {
+            // The paper's double-hashing probe window: aged negative
+            // queries cost up to ~80 probes (Table 5.1).
+            c.max_probes = 80;
+        }
+        c
+    }
+
+    pub fn with_mode(mut self, mode: ConcurrencyMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_geometry(mut self, bucket_size: usize, tile_size: usize) -> Self {
+        self.bucket_size = bucket_size;
+        self.tile_size = tile_size;
+        self
+    }
+
+    pub fn with_hook(mut self, hook: Arc<dyn RaceHook>) -> Self {
+        self.hook = hook;
+        self
+    }
+}
+
+/// Build a table of the given design with its paper-default geometry.
+pub fn build_table(kind: TableKind, slots: usize) -> Arc<dyn ConcurrentMap> {
+    build_table_with(kind, TableConfig::for_kind(kind, slots))
+}
+
+/// Build a table of the given design with an explicit configuration.
+pub fn build_table_with(kind: TableKind, cfg: TableConfig) -> Arc<dyn ConcurrentMap> {
+    match kind {
+        TableKind::Double => Arc::new(double::DoubleHt::new(cfg, false)),
+        TableKind::DoubleMeta => Arc::new(double::DoubleHt::new(cfg, true)),
+        TableKind::P2 => Arc::new(p2::P2Ht::new(cfg, false)),
+        TableKind::P2Meta => Arc::new(p2::P2Ht::new(cfg, true)),
+        TableKind::Iceberg => Arc::new(iceberg::IcebergHt::new(cfg, false)),
+        TableKind::IcebergMeta => Arc::new(iceberg::IcebergHt::new(cfg, true)),
+        TableKind::Cuckoo => Arc::new(cuckoo::CuckooHt::new(cfg)),
+        TableKind::Chaining => Arc::new(chaining::ChainingHt::new(cfg)),
+        TableKind::Linear => Arc::new(double::DoubleHt::with_strategy(cfg, false, true)),
+        TableKind::SlabHashLike => Arc::new(slabhash_like::SlabHashLike::new(cfg)),
+        TableKind::WarpcoreLike => Arc::new(warpcore_like::WarpcoreLike::new(cfg)),
+        TableKind::BchtStatic => Arc::new(cuckoo::CuckooHt::new(
+            cfg.with_mode(ConcurrencyMode::Phased),
+        )),
+        TableKind::P2bhtStatic => {
+            Arc::new(p2::P2Ht::new(cfg.with_mode(ConcurrencyMode::Phased), false))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip_names() {
+        for k in TableKind::CONCURRENT {
+            let n = k.paper_name();
+            assert_eq!(TableKind::from_name(n), Some(k), "{n}");
+        }
+    }
+
+    #[test]
+    fn default_geometry_matches_paper_section5() {
+        assert_eq!(TableKind::Double.default_geometry(), (8, 8));
+        assert_eq!(TableKind::DoubleMeta.default_geometry(), (32, 4));
+        assert_eq!(TableKind::Iceberg.default_geometry(), (32, 8));
+        assert_eq!(TableKind::Cuckoo.default_geometry(), (8, 4));
+        assert_eq!(TableKind::Chaining.default_geometry(), (7, 4));
+    }
+
+    #[test]
+    fn merge_policies() {
+        assert_eq!(UpsertOp::InsertIfUnique.merge(5, 9), Some(5));
+        assert_eq!(UpsertOp::Overwrite.merge(5, 9), Some(9));
+        assert_eq!(UpsertOp::AddAssign.merge(5, 9), None);
+        let f = |a: u64, b: u64| a.max(b);
+        assert_eq!(UpsertOp::Custom(&f).merge(5, 9), Some(9));
+    }
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        for k in [
+            TableKind::Double,
+            TableKind::DoubleMeta,
+            TableKind::P2,
+            TableKind::P2Meta,
+            TableKind::Iceberg,
+            TableKind::IcebergMeta,
+            TableKind::Cuckoo,
+            TableKind::Chaining,
+            TableKind::SlabHashLike,
+            TableKind::WarpcoreLike,
+            TableKind::BchtStatic,
+            TableKind::P2bhtStatic,
+        ] {
+            let t = build_table(k, 4096);
+            assert!(t.capacity() >= 1024, "{:?} too small", k);
+            assert!(t.num_buckets() > 0);
+            assert_eq!(t.len(), 0);
+        }
+    }
+}

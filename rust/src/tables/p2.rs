@@ -1,0 +1,430 @@
+//! P2HT / P2HT(M) — power-of-two-choice hashing (paper §2.2, §5).
+//!
+//! Each key hashes to two candidate buckets (32 KV pairs each, spanning 4
+//! cache lines) and is inserted into the less-loaded one. The *shortcut*
+//! optimization inserts directly into the primary bucket without loading
+//! the alternate while the primary's fill is below 75% — this is what
+//! gives P2HT its fast low-load insertions (paper §6.3: fastest until 35%
+//! load factor).
+//!
+//! Queries must always consider both buckets (a key placed in the
+//! alternate stays there even after the primary drains — stability), so
+//! a plain negative query costs up to 8 line probes while the metadata
+//! variant answers most negatives from the two 64-byte tag blocks
+//! (Table 5.1: 8.01 → 2.01 aging negative probes).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::common::{bucket_count_for, Pairs};
+use super::meta::MetaArray;
+use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
+use crate::gpusim::race::RaceEvent;
+use crate::gpusim::LockArray;
+use crate::hash::{hash1, hash2, tag16};
+
+/// Shortcut threshold (fraction of bucket_size).
+const SHORTCUT_FILL: f64 = 0.75;
+
+pub struct P2Ht {
+    pairs: Pairs,
+    meta: Option<MetaArray>,
+    locks: LockArray,
+    mode: ConcurrencyMode,
+    hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
+    live: AtomicU64,
+    shortcut_limit: usize,
+    /// Sticky per-bucket overflow bits: bit `b` is set once any key whose
+    /// *primary* bucket is `b` has been placed in its alternate. While the
+    /// bit is clear, every key of `b` provably lives in `b`, which makes
+    /// the shortcut duplicate-check (and negative-query early exit) sound
+    /// even under churn — deletions never clear the bit.
+    overflow: Box<[AtomicU64]>,
+}
+
+/// Per-bucket view produced by one scan, shared by the plain and metadata
+/// paths so placement logic is written once.
+struct BucketView {
+    found: Option<(usize, u64)>,
+    reusable: Option<usize>,
+    fill: usize,
+}
+
+impl P2Ht {
+    pub fn new(cfg: TableConfig, with_meta: bool) -> Self {
+        Self::with_shortcut(cfg, with_meta, true)
+    }
+
+    /// `shortcut = false` disables the §2.2 shortcutting optimization
+    /// (ablation: every insert loads and compares both buckets).
+    pub fn with_shortcut(cfg: TableConfig, with_meta: bool, shortcut: bool) -> Self {
+        let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        let pairs = Pairs::new(nb, cfg.bucket_size, cfg.tile_size);
+        let meta = with_meta.then(|| MetaArray::new(nb, cfg.bucket_size));
+        let shortcut_limit = if shortcut {
+            (cfg.bucket_size as f64 * SHORTCUT_FILL) as usize
+        } else {
+            0 // fill < 0 is impossible → shortcut never taken
+        };
+        let mut ov = Vec::with_capacity(nb.div_ceil(64));
+        ov.resize_with(nb.div_ceil(64), || AtomicU64::new(0));
+        Self {
+            pairs,
+            meta,
+            locks: LockArray::new(nb),
+            mode: cfg.mode,
+            hook: cfg.hook,
+            live: AtomicU64::new(0),
+            shortcut_limit,
+            overflow: ov.into_boxed_slice(),
+        }
+    }
+
+    #[inline(always)]
+    fn overflowed(&self, b: usize) -> bool {
+        self.overflow[b / 64].load(Ordering::Acquire) & (1 << (b % 64)) != 0
+    }
+
+    #[inline(always)]
+    fn set_overflowed(&self, b: usize) {
+        self.overflow[b / 64].fetch_or(1 << (b % 64), Ordering::AcqRel);
+    }
+
+    #[inline(always)]
+    fn buckets_of(&self, key: u64) -> [usize; 2] {
+        let mask = self.pairs.mask();
+        [(hash1(key) & mask) as usize, (hash2(key) & mask) as usize]
+    }
+
+    /// Hoisted per-op tag (two fmix64 rounds — §Perf).
+    #[inline(always)]
+    fn tag_of(&self, key: u64) -> u16 {
+        if self.meta.is_some() {
+            tag16(key)
+        } else {
+            0
+        }
+    }
+
+    fn view(&self, b: usize, key: u64, tag: u16, strong: bool) -> BucketView {
+        if let Some(meta) = &self.meta {
+            let ms = meta.scan(b, tag, strong);
+            let found = self.pairs.scan_slots(b, ms.match_slots(), key, strong);
+            BucketView {
+                found,
+                reusable: ms.reusable(),
+                fill: ms.fill,
+            }
+        } else {
+            let r = self.pairs.scan_bucket(b, key, strong);
+            BucketView {
+                found: r.found,
+                reusable: r.reusable(),
+                fill: r.fill,
+            }
+        }
+    }
+
+    fn apply_existing(&self, b: usize, slot: usize, old_v: u64, val: u64, op: &UpsertOp) {
+        match op.merge(old_v, val) {
+            Some(newv) => {
+                if newv != old_v {
+                    self.pairs.value_store(b, slot, newv);
+                }
+            }
+            None => match op {
+                UpsertOp::AddAssign => self.pairs.value_fetch_add(b, slot, val),
+                UpsertOp::AddAssignF64 => {
+                    self.pairs.value_fetch_add_f64(b, slot, f64::from_bits(val))
+                }
+                _ => unreachable!(),
+            },
+        }
+    }
+
+    /// Claim + publish into bucket `b`; retries CAS races, returns false
+    /// when the bucket fills up first.
+    fn claim_in_bucket(&self, b: usize, key: u64, val: u64, tag: u16) -> bool {
+        let strong = self.mode.strong();
+        loop {
+            let slot = if let Some(meta) = &self.meta {
+                match meta.scan(b, tag, strong).reusable() {
+                    Some(s) => s,
+                    None => return false,
+                }
+            } else {
+                match self.pairs.scan_bucket(b, key, strong).reusable() {
+                    Some(s) => s,
+                    None => return false,
+                }
+            };
+            self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
+            if let Some(meta) = &self.meta {
+                if meta.try_claim(b, slot, tag, true) {
+                    let ok = self.pairs.try_claim(b, slot, true);
+                    debug_assert!(ok);
+                    self.pairs.publish(b, slot, key, val);
+                    return true;
+                }
+            } else if self.pairs.try_claim(b, slot, true) {
+                self.pairs.publish(b, slot, key, val);
+                return true;
+            }
+        }
+    }
+}
+
+impl ConcurrentMap for P2Ht {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let [b1, b2] = self.buckets_of(key);
+        let tag = self.tag_of(key);
+        if self.mode.locking() {
+            self.locks.lock(b1);
+        }
+        let strong = self.mode.strong();
+        let mut res = UpsertResult::Full;
+        'done: {
+            let v1 = self.view(b1, key, tag, strong);
+            if let Some((slot, old_v)) = v1.found {
+                self.apply_existing(b1, slot, old_v, val, op);
+                res = UpsertResult::Updated;
+                break 'done;
+            }
+            // Shortcut (paper §2.2): while the primary bucket's fill is
+            // below 75% insert directly without loading the alternate
+            // bucket. Sound only while b1's sticky overflow bit is clear
+            // (no key of b1 can live in b2, so the duplicate check needs
+            // only b1) and b1 still has a reusable slot.
+            if v1.fill < self.shortcut_limit
+                && !self.overflowed(b1)
+                && v1.reusable.is_some()
+                && self.claim_in_bucket(b1, key, val, tag)
+            {
+                self.live.fetch_add(1, Ordering::Relaxed);
+                res = UpsertResult::Inserted;
+                break 'done;
+            }
+            self.hook
+                .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: b1 });
+            let v2 = self.view(b2, key, tag, strong);
+            if let Some((slot, old_v)) = v2.found {
+                self.apply_existing(b2, slot, old_v, val, op);
+                res = UpsertResult::Updated;
+                break 'done;
+            }
+            // Power-of-two placement: less-loaded bucket first.
+            let order = if v1.fill <= v2.fill { [b1, b2] } else { [b2, b1] };
+            for b in order {
+                if b == b2 {
+                    // A key of b1 is (about to be) placed in its
+                    // alternate: set the sticky bit BEFORE publishing so
+                    // no shortcut can race past the duplicate check.
+                    self.set_overflowed(b1);
+                }
+                if self.claim_in_bucket(b, key, val, tag) {
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    res = UpsertResult::Inserted;
+                    break 'done;
+                }
+            }
+        }
+        if self.mode.locking() {
+            self.locks.unlock(b1);
+        }
+        res
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        let strong = self.mode.strong();
+        let [b1, b2] = self.buckets_of(key);
+        let tag = self.tag_of(key);
+        if let Some((_, v)) = self.view(b1, key, tag, strong).found {
+            return Some(v);
+        }
+        if !self.overflowed(b1) {
+            // No key of b1 has ever been placed in its alternate.
+            return None;
+        }
+        self.view(b2, key, tag, strong).found.map(|(_, v)| v)
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let [b1, b2] = self.buckets_of(key);
+        if self.mode.locking() {
+            self.locks.lock(b1);
+        }
+        let strong = self.mode.strong();
+        let mut hit = false;
+        let tag = self.tag_of(key);
+        let buckets: &[usize] = if self.overflowed(b1) { &[b1, b2] } else { &[b1] };
+        for &b in buckets {
+            if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                self.pairs.kill(b, slot);
+                if let Some(meta) = &self.meta {
+                    meta.kill(b, slot);
+                }
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+                hit = true;
+                break;
+            }
+        }
+        if self.mode.locking() {
+            self.locks.unlock(b1);
+        }
+        hit
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.pairs.num_buckets
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        self.buckets_of(key)[0]
+    }
+
+    fn capacity(&self) -> usize {
+        self.pairs.num_buckets * self.pairs.bucket_size
+    }
+
+    fn len(&self) -> usize {
+        self.live.load(Ordering::Relaxed) as usize
+    }
+
+    fn device_bytes(&self) -> usize {
+        self.pairs.device_bytes()
+            + self.meta.as_ref().map_or(0, |m| m.device_bytes())
+            + self.locks.bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        if self.meta.is_some() {
+            "P2HT(M)"
+        } else {
+            "P2HT"
+        }
+    }
+
+    fn is_stable(&self) -> bool {
+        true
+    }
+
+    fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
+        let strong = self.mode.strong();
+        let tag = self.tag_of(key);
+        for b in self.buckets_of(key) {
+            if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                self.pairs.value_fetch_add(b, slot, v);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
+        let strong = self.mode.strong();
+        let tag = self.tag_of(key);
+        for b in self.buckets_of(key) {
+            if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                self.pairs.value_fetch_add_f64(b, slot, v);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        self.pairs.for_each_live(|k, v| f(k, v));
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        self.pairs.count_copies(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::test_support::*;
+
+    fn plain(slots: usize) -> P2Ht {
+        P2Ht::new(TableConfig::new(slots).with_geometry(32, 8), false)
+    }
+
+    fn meta(slots: usize) -> P2Ht {
+        P2Ht::new(TableConfig::new(slots).with_geometry(32, 4), true)
+    }
+
+    #[test]
+    fn basic_crud() {
+        check_basic_crud(&plain(2048));
+        check_basic_crud(&meta(2048));
+    }
+
+    #[test]
+    fn fills_to_90_percent() {
+        check_fill_to(&plain(8192), 0.90);
+        check_fill_to(&meta(8192), 0.90);
+    }
+
+    #[test]
+    fn upsert_policies() {
+        check_upsert_policies(&plain(2048));
+        check_upsert_policies(&meta(2048));
+    }
+
+    #[test]
+    fn aging_churn() {
+        check_aging_churn(&plain(4096), 40);
+        check_aging_churn(&meta(4096), 40);
+    }
+
+    #[test]
+    fn concurrent_no_duplicates() {
+        check_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
+        check_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
+    }
+
+    #[test]
+    fn concurrent_mixed() {
+        check_concurrent_mixed(std::sync::Arc::new(plain(8192)));
+    }
+
+    #[test]
+    fn in_place_accumulate() {
+        check_fetch_add_in_place(&plain(2048));
+        check_fetch_add_in_place(&meta(2048));
+    }
+
+    #[test]
+    fn oracle_equivalence() {
+        check_vs_oracle(&plain(4096), 0x21);
+        check_vs_oracle(&meta(4096), 0x22);
+    }
+
+    #[test]
+    fn shortcut_keeps_low_load_inserts_single_bucket() {
+        // At low fill every key should land in its primary bucket.
+        let t = plain(8192);
+        let ks = keys(100, 0x5C);
+        for &k in &ks {
+            t.upsert(k, 1, &UpsertOp::InsertIfUnique);
+        }
+        for &k in &ks {
+            let b1 = t.primary_bucket(k);
+            let r = t.pairs.scan_bucket(b1, k, true);
+            assert!(r.found.is_some(), "low-load key not in primary bucket");
+        }
+    }
+
+    #[test]
+    fn bsp_mode_fills() {
+        let t = P2Ht::new(
+            TableConfig::new(4096)
+                .with_geometry(32, 8)
+                .with_mode(ConcurrencyMode::Phased),
+            false,
+        );
+        check_fill_to(&t, 0.85);
+    }
+}

@@ -1,0 +1,190 @@
+//! SlabHash-like baseline — INTENTIONALLY UNSYNCHRONIZED (paper §4.1).
+//!
+//! Reproduces the concurrency bug the paper demonstrates in SlabHash [3]:
+//! upserts rely *solely* on atomic CAS with no external (lock-based)
+//! synchronization between threads operating on the same key. With
+//! associativity two (a primary and an alternate bucket), the Figure 4.1
+//! interleaving — T1 probes past the full primary, T3 deletes from the
+//! primary, T2 inserts into the freed slot, T1 completes in the alternate
+//! — leaves TWO copies of the key in the table, even though every
+//! individual memory operation is atomic. `insert_unique` here mirrors
+//! SlabHash's `insertPairUnique` (query-then-claim).
+//!
+//! The table emits [`RaceEvent`]s at the §4.1-relevant points so the
+//! adversarial benchmark can force the schedule deterministically; it is
+//! excluded from every performance benchmark exactly as the paper
+//! excludes SlabHash ("fail the correctness test").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::common::{bucket_count_for, Pairs};
+use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
+use crate::gpusim::race::RaceEvent;
+use crate::hash::{hash1, hash2};
+
+pub struct SlabHashLike {
+    pairs: Pairs,
+    mode: ConcurrencyMode,
+    hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
+    live: AtomicU64,
+}
+
+impl SlabHashLike {
+    pub fn new(cfg: TableConfig) -> Self {
+        let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        Self {
+            pairs: Pairs::new(nb, cfg.bucket_size, cfg.tile_size),
+            mode: cfg.mode,
+            hook: cfg.hook,
+            live: AtomicU64::new(0),
+        }
+    }
+
+    #[inline(always)]
+    fn buckets_of(&self, key: u64) -> [usize; 2] {
+        let mask = self.pairs.mask();
+        [(hash1(key) & mask) as usize, (hash2(key) & mask) as usize]
+    }
+
+    /// Claim + publish in one bucket; `None` = bucket full, `Some(true)` =
+    /// inserted, `Some(false)` = key already present.
+    fn try_bucket(&self, b: usize, key: u64, val: u64, strong: bool) -> Option<bool> {
+        loop {
+            let r = self.pairs.scan_bucket(b, key, strong);
+            if r.found.is_some() {
+                return Some(false);
+            }
+            let slot = r.reusable()?;
+            self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
+            if self.pairs.try_claim(b, slot, true) {
+                self.pairs.publish(b, slot, key, val);
+                return Some(true);
+            }
+        }
+    }
+}
+
+impl ConcurrentMap for SlabHashLike {
+    /// `insertPairUnique` semantics: query-then-claim per bucket, atomics
+    /// only, NO key-level serialization. Racy by construction.
+    fn upsert(&self, key: u64, val: u64, _op: &UpsertOp) -> UpsertResult {
+        let strong = self.mode.strong();
+        let [b1, b2] = self.buckets_of(key);
+        match self.try_bucket(b1, key, val, strong) {
+            Some(true) => {
+                self.live.fetch_add(1, Ordering::Relaxed);
+                return UpsertResult::Inserted;
+            }
+            Some(false) => return UpsertResult::Updated,
+            None => {}
+        }
+        // Primary full → move to the alternate. THIS is the §4.1 window:
+        // a concurrent delete in b1 plus a concurrent insert of the same
+        // key can now land a second copy in b1 while we insert into b2.
+        self.hook
+            .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: b1 });
+        match self.try_bucket(b2, key, val, strong) {
+            Some(true) => {
+                self.live.fetch_add(1, Ordering::Relaxed);
+                UpsertResult::Inserted
+            }
+            Some(false) => UpsertResult::Updated,
+            None => UpsertResult::Full,
+        }
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        let strong = self.mode.strong();
+        for b in self.buckets_of(key) {
+            if let Some((_, v)) = self.pairs.scan_bucket(b, key, strong).found {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let strong = self.mode.strong();
+        for b in self.buckets_of(key) {
+            if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                // atomicCAS delete, no lock.
+                let kidx = self.pairs.kidx(b, slot);
+                if self
+                    .pairs
+                    .mem()
+                    .cas(kidx, key, super::common::KEY_TOMBSTONE)
+                    .is_ok()
+                {
+                    self.live.fetch_sub(1, Ordering::Relaxed);
+                    self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.pairs.num_buckets
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        self.buckets_of(key)[0]
+    }
+
+    fn capacity(&self) -> usize {
+        self.pairs.num_buckets * self.pairs.bucket_size
+    }
+
+    fn len(&self) -> usize {
+        self.live.load(Ordering::Relaxed) as usize
+    }
+
+    fn device_bytes(&self) -> usize {
+        self.pairs.device_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "SlabHash-like"
+    }
+
+    fn is_stable(&self) -> bool {
+        true
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        self.pairs.for_each_live(|k, v| f(k, v));
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        self.pairs.count_copies(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::test_support::*;
+
+    fn table(slots: usize) -> SlabHashLike {
+        SlabHashLike::new(TableConfig::new(slots).with_geometry(8, 4))
+    }
+
+    #[test]
+    fn sequential_crud_is_fine() {
+        // Without adversarial interleavings the table behaves correctly —
+        // that's exactly why the bug went unnoticed.
+        check_basic_crud(&table(2048));
+    }
+
+    #[test]
+    fn sequential_fill() {
+        // 2-choice without displacement tops out well below the stable
+        // designs — 70% is reliably reachable, 90% is not.
+        check_fill_to(&table(8192), 0.70);
+    }
+
+    // The demonstration that it is NOT correct lives in the adversarial
+    // benchmark (rust/tests/adversarial.rs + bench_adversarial), where the
+    // Fig 4.1 schedule forces a duplicate key.
+}

@@ -1,0 +1,324 @@
+//! Shared behavioural checks run against every table design. Each table's
+//! unit tests call into these so all designs are held to the same
+//! contract (CRUD semantics, load-factor targets, aging, concurrency,
+//! upsert policies, oracle equivalence).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use super::{ConcurrentMap, UpsertOp, UpsertResult};
+use crate::prng::Xoshiro256pp;
+
+/// Deterministic distinct user keys.
+pub fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut set = std::collections::HashSet::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    while v.len() < n {
+        let k = rng.next_u64();
+        if crate::gpusim::mem::is_user_key(k) && set.insert(k) {
+            v.push(k);
+        }
+    }
+    v
+}
+
+pub fn check_basic_crud(t: &dyn ConcurrentMap) {
+    let ks = keys(100, 0xBA51C);
+    for (i, &k) in ks.iter().enumerate() {
+        assert_eq!(t.query(k), None, "fresh table must miss");
+        assert_eq!(
+            t.upsert(k, i as u64, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+    }
+    assert_eq!(t.len(), 100);
+    for (i, &k) in ks.iter().enumerate() {
+        assert_eq!(t.query(k), Some(i as u64), "query after insert");
+    }
+    // Re-upsert must not duplicate.
+    for &k in &ks {
+        assert_eq!(
+            t.upsert(k, 999, &UpsertOp::InsertIfUnique),
+            UpsertResult::Updated
+        );
+        assert_eq!(t.count_copies(k), 1, "duplicate copies of {k:#x}");
+    }
+    assert_eq!(t.len(), 100);
+    // Erase half.
+    for &k in ks.iter().step_by(2) {
+        assert!(t.erase(k), "erase present key");
+        assert_eq!(t.query(k), None, "query after erase");
+        assert!(!t.erase(k), "double erase");
+    }
+    assert_eq!(t.len(), 50);
+    for (i, &k) in ks.iter().enumerate() {
+        if i % 2 == 1 {
+            assert_eq!(t.query(k), Some(i as u64), "survivor intact");
+        }
+    }
+}
+
+pub fn check_fill_to(t: &dyn ConcurrentMap, load_factor: f64) {
+    let target = (t.capacity() as f64 * load_factor) as usize;
+    let ks = keys(target, 0xF111);
+    let mut inserted = 0;
+    for &k in &ks {
+        match t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique) {
+            UpsertResult::Inserted => inserted += 1,
+            UpsertResult::Updated => panic!("distinct key reported updated"),
+            UpsertResult::Full => {}
+        }
+    }
+    assert!(
+        inserted as f64 >= target as f64 * 0.98,
+        "{}: only {inserted}/{target} inserted at lf={load_factor}",
+        t.name()
+    );
+    // All inserted keys must be queryable.
+    let mut found = 0;
+    for &k in &ks {
+        if t.query(k) == Some(k ^ 1) {
+            found += 1;
+        }
+    }
+    assert_eq!(found, inserted, "{}: lost keys", t.name());
+}
+
+pub fn check_upsert_policies(t: &dyn ConcurrentMap) {
+    let k = keys(1, 0x9999)[0];
+    assert_eq!(t.upsert(k, 10, &UpsertOp::Overwrite), UpsertResult::Inserted);
+    assert_eq!(t.upsert(k, 20, &UpsertOp::Overwrite), UpsertResult::Updated);
+    assert_eq!(t.query(k), Some(20));
+    assert_eq!(
+        t.upsert(k, 5, &UpsertOp::InsertIfUnique),
+        UpsertResult::Updated
+    );
+    assert_eq!(t.query(k), Some(20), "insert-if-unique must not clobber");
+    assert_eq!(t.upsert(k, 22, &UpsertOp::AddAssign), UpsertResult::Updated);
+    assert_eq!(t.query(k), Some(42));
+    let maxer = |a: u64, b: u64| a.max(b);
+    assert_eq!(
+        t.upsert(k, 7, &UpsertOp::Custom(&maxer)),
+        UpsertResult::Updated
+    );
+    assert_eq!(t.query(k), Some(42));
+    assert_eq!(
+        t.upsert(k, 100, &UpsertOp::Custom(&maxer)),
+        UpsertResult::Updated
+    );
+    assert_eq!(t.query(k), Some(100));
+    // AddAssign on a missing key inserts the value.
+    let k2 = keys(2, 0x9999)[1];
+    assert_eq!(t.upsert(k2, 3, &UpsertOp::AddAssign), UpsertResult::Inserted);
+    assert_eq!(t.query(k2), Some(3));
+    // f64 accumulate.
+    let k3 = keys(3, 0x9A9A)[2];
+    assert_eq!(
+        t.upsert(k3, 1.5f64.to_bits(), &UpsertOp::AddAssignF64),
+        UpsertResult::Inserted
+    );
+    assert_eq!(
+        t.upsert(k3, 2.25f64.to_bits(), &UpsertOp::AddAssignF64),
+        UpsertResult::Updated
+    );
+    assert_eq!(f64::from_bits(t.query(k3).unwrap()), 3.75);
+}
+
+/// Churn the table near 85% load, verifying no key is lost or duplicated.
+pub fn check_aging_churn(t: &dyn ConcurrentMap, iterations: usize) {
+    let cap = t.capacity();
+    let fill = (cap as f64 * 0.85) as usize;
+    let slice = (cap / 100).max(4);
+    let universe = keys(fill + (iterations + 2) * slice + 2, 0xA9E);
+    let mut next = 0usize;
+    let mut oldest = 0usize;
+    for _ in 0..fill {
+        assert_eq!(
+            t.upsert(universe[next], next as u64, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        next += 1;
+    }
+    for it in 0..iterations {
+        for _ in 0..slice {
+            let r = t.upsert(universe[next], next as u64, &UpsertOp::InsertIfUnique);
+            assert!(
+                r != UpsertResult::Updated,
+                "{}: fresh key reported updated at iteration {it}",
+                t.name()
+            );
+            if r == UpsertResult::Inserted {
+                next += 1;
+            }
+        }
+        for _ in 0..slice {
+            assert!(
+                t.erase(universe[oldest]),
+                "{}: aged key vanished at iteration {it}",
+                t.name()
+            );
+            oldest += 1;
+        }
+        // Negative queries must stay correct while aged.
+        let probe_key = universe[next + slice + 1];
+        assert_eq!(t.query(probe_key), None);
+        // Live keys stay present and unique.
+        let mid = (oldest + next) / 2;
+        assert_eq!(t.query(universe[mid]), Some(mid as u64));
+        assert_eq!(t.count_copies(universe[mid]), 1);
+    }
+}
+
+/// Hammer the same key set from several threads; every key must end up
+/// with exactly one copy (the §4.1 guarantee).
+pub fn check_concurrent_no_duplicates(t: Arc<dyn ConcurrentMap>) {
+    let ks = Arc::new(keys(512, 0xC0C0));
+    let n_threads = 4;
+    let mut hs = vec![];
+    for tid in 0..n_threads {
+        let t = Arc::clone(&t);
+        let ks = Arc::clone(&ks);
+        hs.push(thread::spawn(move || {
+            let mut order: Vec<usize> = (0..ks.len()).collect();
+            let mut rng = Xoshiro256pp::new(tid as u64);
+            rng.shuffle(&mut order);
+            for i in order {
+                t.upsert(ks[i], i as u64, &UpsertOp::InsertIfUnique);
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    for (i, &k) in ks.iter().enumerate() {
+        assert_eq!(t.count_copies(k), 1, "key {i} duplicated");
+        assert_eq!(t.query(k), Some(i as u64));
+    }
+    assert_eq!(t.len(), ks.len());
+}
+
+/// Concurrent inserts + erases + queries on disjoint key ranges per
+/// thread; per-range effects must match a sequential run.
+pub fn check_concurrent_mixed(t: Arc<dyn ConcurrentMap>) {
+    let per_thread = 256;
+    let n_threads = 4;
+    let all = keys(per_thread * n_threads, 0x1213);
+    let all = Arc::new(all);
+    let misses = Arc::new(AtomicUsize::new(0));
+    let mut hs = vec![];
+    for tid in 0..n_threads {
+        let t = Arc::clone(&t);
+        let all = Arc::clone(&all);
+        let misses = Arc::clone(&misses);
+        hs.push(thread::spawn(move || {
+            let my = &all[tid * per_thread..(tid + 1) * per_thread];
+            for (i, &k) in my.iter().enumerate() {
+                assert_eq!(
+                    t.upsert(k, i as u64, &UpsertOp::InsertIfUnique),
+                    UpsertResult::Inserted
+                );
+            }
+            // Interleave queries on other threads' ranges (may hit or miss
+            // depending on progress — must never return a wrong value).
+            let other = &all[((tid + 1) % n_threads) * per_thread..];
+            for (i, &k) in other[..per_thread].iter().enumerate() {
+                match t.query(k) {
+                    Some(v) => assert_eq!(v, i as u64, "wrong value under concurrency"),
+                    None => {
+                        misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            // Erase the odd half of my range.
+            for (i, &k) in my.iter().enumerate() {
+                if i % 2 == 1 {
+                    assert!(t.erase(k));
+                }
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    for tid in 0..n_threads {
+        let my = &all[tid * per_thread..(tid + 1) * per_thread];
+        for (i, &k) in my.iter().enumerate() {
+            if i % 2 == 1 {
+                assert_eq!(t.query(k), None);
+            } else {
+                assert_eq!(t.query(k), Some(i as u64));
+                assert_eq!(t.count_copies(k), 1);
+            }
+        }
+    }
+}
+
+pub fn check_fetch_add_in_place(t: &dyn ConcurrentMap) {
+    if !t.is_stable() {
+        assert!(!t.fetch_add_in_place(123, 1));
+        return;
+    }
+    let k = keys(1, 0xFAFA)[0];
+    assert!(!t.fetch_add_in_place(k, 5), "absent key");
+    t.upsert(k, 10, &UpsertOp::Overwrite);
+    assert!(t.fetch_add_in_place(k, 5));
+    assert_eq!(t.query(k), Some(15));
+    t.upsert(k, 0f64.to_bits(), &UpsertOp::Overwrite);
+    assert!(t.fetch_add_f64_in_place(k, 2.5));
+    assert!(t.fetch_add_f64_in_place(k, 0.5));
+    assert_eq!(f64::from_bits(t.query(k).unwrap()), 3.0);
+}
+
+/// Random op stream checked against `std::collections::HashMap`.
+pub fn check_vs_oracle(t: &dyn ConcurrentMap, seed: u64) {
+    let mut rng = Xoshiro256pp::new(seed);
+    let universe = keys(256, seed ^ 0xABCD);
+    let mut oracle: HashMap<u64, u64> = HashMap::new();
+    for step in 0..8_192 {
+        let k = universe[rng.next_below(universe.len() as u64) as usize];
+        match rng.next_below(10) {
+            0..=3 => {
+                let v = rng.next_u64() >> 1;
+                let r = t.upsert(k, v, &UpsertOp::Overwrite);
+                let was = oracle.insert(k, v);
+                assert_eq!(
+                    r,
+                    if was.is_some() {
+                        UpsertResult::Updated
+                    } else {
+                        UpsertResult::Inserted
+                    },
+                    "step {step}"
+                );
+            }
+            4..=5 => {
+                let v = rng.next_below(1000);
+                let r = t.upsert(k, v, &UpsertOp::AddAssign);
+                match oracle.get_mut(&k) {
+                    Some(ov) => {
+                        *ov = ov.wrapping_add(v);
+                        assert_eq!(r, UpsertResult::Updated, "step {step}");
+                    }
+                    None => {
+                        oracle.insert(k, v);
+                        assert_eq!(r, UpsertResult::Inserted, "step {step}");
+                    }
+                }
+            }
+            6..=7 => {
+                assert_eq!(t.erase(k), oracle.remove(&k).is_some(), "step {step}");
+            }
+            _ => {
+                assert_eq!(t.query(k), oracle.get(&k).copied(), "step {step}");
+            }
+        }
+    }
+    assert_eq!(t.len(), oracle.len());
+    for (k, v) in &oracle {
+        assert_eq!(t.query(*k), Some(*v));
+        assert_eq!(t.count_copies(*k), 1);
+    }
+}

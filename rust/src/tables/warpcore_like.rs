@@ -1,0 +1,194 @@
+//! Warpcore-like baseline (paper §3.3, §6.3).
+//!
+//! Models the Warpcore [25] design point the paper benchmarks against:
+//! a tiled, atomics-only open-addressing table that is fast *because* it
+//! skips the machinery full concurrency requires —
+//!
+//! * no locks and no acquire/release ("lazy cacheable") loads,
+//! * key claimed with `atomicCAS` but the value written separately and
+//!   non-atomically ("insertions of key-value pairs are not atomic,
+//!   making it possible to read a value before it is set"),
+//! * deletions write tombstones but insertions never reuse them ("the
+//!   table can not replace tombstone keys").
+//!
+//! It is only correct in BSP phases of a single operation kind; the paper
+//! reports it 24%/2%/11% faster than DoubleHT at 90% load for
+//! insert/query/delete, which is the overhead budget of real concurrency.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::common::{bucket_count_for, Pairs};
+use super::{ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
+use crate::hash::{hash1, stride};
+
+pub struct WarpcoreLike {
+    pairs: Pairs,
+    max_probes: usize,
+    live: AtomicU64,
+}
+
+impl WarpcoreLike {
+    pub fn new(cfg: TableConfig) -> Self {
+        let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        Self {
+            pairs: Pairs::new(nb, cfg.bucket_size, cfg.tile_size),
+            max_probes: cfg.max_probes.min(nb),
+            live: AtomicU64::new(0),
+        }
+    }
+
+    #[inline(always)]
+    fn bucket_seq(&self, key: u64) -> impl Iterator<Item = usize> + '_ {
+        let mask = self.pairs.mask();
+        let h = hash1(key);
+        let s = stride(key);
+        (0..self.max_probes as u64)
+            .map(move |i| (h.wrapping_add(i.wrapping_mul(s)) & mask) as usize)
+    }
+}
+
+impl ConcurrentMap for WarpcoreLike {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        // Relaxed loads throughout — BSP assumption.
+        for b in self.bucket_seq(key) {
+            loop {
+                let r = self.pairs.scan_bucket(b, key, false);
+                if let Some((slot, old_v)) = r.found {
+                    if let Some(newv) = op.merge(old_v, val) {
+                        if newv != old_v {
+                            self.pairs.value_store(b, slot, newv);
+                        }
+                    } else {
+                        self.pairs.value_fetch_add(b, slot, val);
+                    }
+                    return UpsertResult::Updated;
+                }
+                // No tombstone reuse: only never-used slots are claimed.
+                let Some(slot) = r.first_empty else { break };
+                if self.pairs.try_claim(b, slot, false) {
+                    // Non-atomic pair write: key visible before value —
+                    // Warpcore's documented hazard, fine in BSP.
+                    let kidx = self.pairs.kidx(b, slot);
+                    self.pairs.mem().store_relaxed(kidx, key);
+                    self.pairs.mem().store_relaxed(kidx + 1, val);
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    return UpsertResult::Inserted;
+                }
+            }
+        }
+        UpsertResult::Full
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        for b in self.bucket_seq(key) {
+            let r = self.pairs.scan_bucket(b, key, false);
+            if let Some((_, v)) = r.found {
+                return Some(v);
+            }
+            if r.has_empty() {
+                return None;
+            }
+        }
+        None
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        for b in self.bucket_seq(key) {
+            let r = self.pairs.scan_bucket(b, key, false);
+            if let Some((slot, _)) = r.found {
+                self.pairs.kill(b, slot);
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                return true;
+            }
+            if r.has_empty() {
+                return false;
+            }
+        }
+        false
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.pairs.num_buckets
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        (hash1(key) & self.pairs.mask()) as usize
+    }
+
+    fn capacity(&self) -> usize {
+        self.pairs.num_buckets * self.pairs.bucket_size
+    }
+
+    fn len(&self) -> usize {
+        self.live.load(Ordering::Relaxed) as usize
+    }
+
+    fn device_bytes(&self) -> usize {
+        self.pairs.device_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "Warpcore-like"
+    }
+
+    fn is_stable(&self) -> bool {
+        true
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        self.pairs.for_each_live(|k, v| f(k, v));
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        self.pairs.count_copies(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::test_support::*;
+
+    fn table(slots: usize) -> WarpcoreLike {
+        WarpcoreLike::new(TableConfig::new(slots))
+    }
+
+    #[test]
+    fn bsp_crud_works() {
+        check_basic_crud(&table(2048));
+    }
+
+    #[test]
+    fn bsp_fill() {
+        check_fill_to(&table(8192), 0.90);
+    }
+
+    #[test]
+    fn tombstones_are_not_reused() {
+        let t = table(64);
+        let ks = keys(56, 0x77);
+        let mut inserted = 0usize;
+        for &k in &ks {
+            if t.upsert(k, 1, &UpsertOp::InsertIfUnique) == UpsertResult::Inserted {
+                inserted += 1;
+            }
+        }
+        assert!(inserted >= 50);
+        // Delete everything, then try to refill: without tombstone reuse
+        // the table acts full well below its capacity.
+        for &k in &ks {
+            t.erase(k);
+        }
+        let fresh = keys(56, 0x78);
+        let mut reinserted = 0usize;
+        for &k in &fresh {
+            if t.upsert(k, 1, &UpsertOp::InsertIfUnique) == UpsertResult::Inserted {
+                reinserted += 1;
+            }
+        }
+        assert!(
+            reinserted < inserted,
+            "aged Warpcore-like table must lose capacity ({reinserted} vs {inserted})"
+        );
+    }
+}

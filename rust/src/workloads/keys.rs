@@ -1,0 +1,104 @@
+//! Key-stream generation for the benchmarking framework.
+//!
+//! All benchmarks draw from deterministic uniform-random 64-bit key
+//! universes (the paper generates keys "from a uniform-random
+//! distribution"; the caching workload uses OpenSSL `RAND_BYTES` — any
+//! uniform stream is equivalent, see DESIGN.md §Substitutions). Keys are
+//! guaranteed distinct and never collide with the slot sentinels.
+
+use crate::prng::Xoshiro256pp;
+
+/// `n` distinct user keys from `seed`.
+pub fn distinct_keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut seen = std::collections::HashSet::with_capacity(n * 2);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let k = rng.next_u64();
+        if crate::gpusim::mem::is_user_key(k) && seen.insert(k) {
+            out.push(k);
+        }
+    }
+    out
+}
+
+/// Infinite stream of (possibly repeating) uniform user keys.
+pub struct UniformKeys {
+    rng: Xoshiro256pp,
+}
+
+impl UniformKeys {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256pp::new(seed),
+        }
+    }
+
+    #[inline]
+    pub fn next_key(&mut self) -> u64 {
+        loop {
+            let k = self.rng.next_u64();
+            if crate::gpusim::mem::is_user_key(k) {
+                return k;
+            }
+        }
+    }
+}
+
+/// Uniform draws *from a fixed universe* (the caching benchmark queries a
+/// fixed dataset uniformly).
+pub struct UniverseDraws<'a> {
+    universe: &'a [u64],
+    rng: Xoshiro256pp,
+}
+
+impl<'a> UniverseDraws<'a> {
+    pub fn new(universe: &'a [u64], seed: u64) -> Self {
+        Self {
+            universe,
+            rng: Xoshiro256pp::new(seed),
+        }
+    }
+
+    #[inline]
+    pub fn next_key(&mut self) -> u64 {
+        self.universe[self.rng.next_below(self.universe.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_keys_are_distinct_and_valid() {
+        let ks = distinct_keys(10_000, 9);
+        let set: std::collections::HashSet<_> = ks.iter().collect();
+        assert_eq!(set.len(), ks.len());
+        assert!(ks.iter().all(|&k| crate::gpusim::mem::is_user_key(k)));
+    }
+
+    #[test]
+    fn distinct_keys_deterministic() {
+        assert_eq!(distinct_keys(100, 5), distinct_keys(100, 5));
+        assert_ne!(distinct_keys(100, 5), distinct_keys(100, 6));
+    }
+
+    #[test]
+    fn uniform_stream_avoids_sentinels() {
+        let mut s = UniformKeys::new(3);
+        for _ in 0..10_000 {
+            assert!(crate::gpusim::mem::is_user_key(s.next_key()));
+        }
+    }
+
+    #[test]
+    fn universe_draws_stay_in_universe() {
+        let u = distinct_keys(64, 1);
+        let set: std::collections::HashSet<_> = u.iter().copied().collect();
+        let mut d = UniverseDraws::new(&u, 2);
+        for _ in 0..1000 {
+            assert!(set.contains(&d.next_key()));
+        }
+    }
+}

@@ -1,0 +1,3 @@
+//! Workload generators for the unified benchmarking framework.
+pub mod keys;
+pub mod ycsb;

@@ -1,0 +1,142 @@
+//! YCSB workload generator (paper §6.8; Cooper et al. [16]).
+//!
+//! Reimplements the YCSB core workloads over a fixed key universe with a
+//! scrambled-Zipfian (θ = 0.99) popularity distribution:
+//!
+//! * **A** — 50% updates / 50% reads
+//! * **B** — 5% updates / 95% reads
+//! * **C** — 100% reads
+//!
+//! The paper's setup: 512M operations over a 500M-key universe, the table
+//! pre-loaded with every key (kept at high load factor). Our scaled runs
+//! preserve the universe:ops ratio and the Zipf skew.
+
+use crate::prng::{Xoshiro256pp, Zipfian};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    A,
+    B,
+    C,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 3] = [Workload::A, Workload::B, Workload::C];
+
+    /// Fraction of operations that are updates.
+    pub fn update_fraction(&self) -> f64 {
+        match self {
+            Workload::A => 0.50,
+            Workload::B => 0.05,
+            Workload::C => 0.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::A => "workload A",
+            Workload::B => "workload B",
+            Workload::C => "workload C",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum YcsbOp {
+    /// Read the key's value.
+    Read(u64),
+    /// Update the key's value (upsert with Overwrite).
+    Update(u64, u64),
+}
+
+/// Stream of YCSB operations over `universe`.
+pub struct YcsbStream<'a> {
+    universe: &'a [u64],
+    zipf: Zipfian,
+    rng: Xoshiro256pp,
+    update_fraction: f64,
+}
+
+impl<'a> YcsbStream<'a> {
+    pub fn new(universe: &'a [u64], workload: Workload, seed: u64) -> Self {
+        Self {
+            universe,
+            zipf: Zipfian::new(universe.len() as u64, seed ^ 0x5A5A),
+            rng: Xoshiro256pp::new(seed),
+            update_fraction: workload.update_fraction(),
+        }
+    }
+
+    #[inline]
+    pub fn next_op(&mut self) -> YcsbOp {
+        let key = self.universe[self.zipf.next_scrambled() as usize];
+        if self.update_fraction > 0.0 && self.rng.next_f64() < self.update_fraction {
+            YcsbOp::Update(key, self.rng.next_u64() >> 1)
+        } else {
+            YcsbOp::Read(key)
+        }
+    }
+
+    /// Generate a batch of `n` ops.
+    pub fn batch(&mut self, n: usize) -> Vec<YcsbOp> {
+        (0..n).map(|_| self.next_op()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::keys::distinct_keys;
+
+    #[test]
+    fn workload_c_is_read_only() {
+        let u = distinct_keys(1000, 1);
+        let mut s = YcsbStream::new(&u, Workload::C, 2);
+        for _ in 0..5000 {
+            assert!(matches!(s.next_op(), YcsbOp::Read(_)));
+        }
+    }
+
+    #[test]
+    fn workload_a_is_half_updates() {
+        let u = distinct_keys(1000, 1);
+        let mut s = YcsbStream::new(&u, Workload::A, 2);
+        let n = 20_000;
+        let updates = (0..n)
+            .filter(|_| matches!(s.next_op(), YcsbOp::Update(..)))
+            .count();
+        let frac = updates as f64 / n as f64;
+        assert!((0.46..0.54).contains(&frac), "update fraction {frac}");
+    }
+
+    #[test]
+    fn workload_b_is_mostly_reads() {
+        let u = distinct_keys(1000, 1);
+        let mut s = YcsbStream::new(&u, Workload::B, 2);
+        let n = 20_000;
+        let updates = (0..n)
+            .filter(|_| matches!(s.next_op(), YcsbOp::Update(..)))
+            .count();
+        let frac = updates as f64 / n as f64;
+        assert!((0.03..0.08).contains(&frac), "update fraction {frac}");
+    }
+
+    #[test]
+    fn keys_come_from_universe_and_are_skewed() {
+        let u = distinct_keys(1000, 3);
+        let set: std::collections::HashSet<_> = u.iter().copied().collect();
+        let mut s = YcsbStream::new(&u, Workload::C, 4);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..50_000 {
+            let YcsbOp::Read(k) = s.next_op() else {
+                unreachable!()
+            };
+            assert!(set.contains(&k));
+            *counts.entry(k).or_insert(0u64) += 1;
+        }
+        // Zipf skew: the hottest key should carry far more than uniform
+        // share (uniform would be 50 hits).
+        let max = counts.values().max().unwrap();
+        assert!(*max > 500, "no skew: max count {max}");
+    }
+}

@@ -1,0 +1,83 @@
+//! End-to-end coordinator tests: YCSB served through the router/batcher/
+//! executor stack, and the full benchmark suite smoke-checked at tiny
+//! scale so every paper exhibit stays regenerable.
+
+use warpspeed::bench::{self, BenchEnv};
+use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult};
+use warpspeed::tables::TableKind;
+use warpspeed::workloads::keys::distinct_keys;
+use warpspeed::workloads::ycsb::{Workload, YcsbOp, YcsbStream};
+
+#[test]
+fn coordinator_serves_ycsb_consistently() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        kind: TableKind::DoubleMeta,
+        total_slots: 16 * 1024,
+        n_shards: 4,
+        n_workers: 2,
+        max_batch: 256,
+    });
+    let universe = distinct_keys(8 * 1024, 0xE2E);
+    let load_results = coord.run_stream(universe.iter().map(|&k| Op::Upsert(k, k ^ 3)));
+    assert!(load_results.iter().all(|r| *r == OpResult::Upserted(true)));
+
+    let mut oracle: std::collections::HashMap<u64, u64> =
+        universe.iter().map(|&k| (k, k ^ 3)).collect();
+    let mut stream = YcsbStream::new(&universe, Workload::A, 5);
+    let ops: Vec<YcsbOp> = stream.batch(20_000);
+    let coord_ops: Vec<Op> = ops
+        .iter()
+        .map(|op| match *op {
+            YcsbOp::Read(k) => Op::Query(k),
+            YcsbOp::Update(k, v) => Op::Upsert(k, v),
+        })
+        .collect();
+    let results = coord.run_stream(coord_ops);
+    for (op, res) in ops.iter().zip(&results) {
+        match *op {
+            YcsbOp::Read(k) => {
+                assert_eq!(*res, OpResult::Value(oracle.get(&k).copied()));
+            }
+            YcsbOp::Update(k, v) => {
+                oracle.insert(k, v);
+                assert!(matches!(res, OpResult::Upserted(_)));
+            }
+        }
+    }
+}
+
+#[test]
+fn every_bench_exhibit_regenerates() {
+    let env = BenchEnv {
+        slots: 4096,
+        iterations: 8,
+        seed: 0xB1B,
+    };
+    let exhibits: Vec<(&str, fn(&BenchEnv) -> String)> = vec![
+        ("probes/Table5.1", bench::probes::run),
+        ("load/Fig6.1", bench::load::run),
+        ("aging/Fig6.2", bench::aging::run),
+        ("caching/Fig6.3", bench::caching::run),
+        ("ycsb/Table6.2", bench::ycsb::run),
+        ("sptc/Table6.1", bench::sptc::run),
+        ("space/§6.1", bench::space::run),
+        ("adversarial/§4.1", bench::adversarial::run),
+    ];
+    for (name, f) in exhibits {
+        let out = f(&env);
+        assert!(out.contains("=="), "{name}: no table/series emitted:\n{out}");
+        assert!(out.len() > 100, "{name}: suspiciously short output");
+    }
+}
+
+#[test]
+fn scaling_bench_regenerates() {
+    // Separate (slower) smoke for the size sweep at minimal scale.
+    let env = BenchEnv {
+        slots: 2048,
+        iterations: 4,
+        seed: 1,
+    };
+    let out = bench::scaling::run(&env);
+    assert!(out.contains("Figure 6.4"));
+}

@@ -1,0 +1,158 @@
+//! Cross-design integration tests: every concurrent design is held to the
+//! same end-to-end contract under mixed concurrent workloads, churn, and
+//! the paper's adversarial replay.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use warpspeed::apps::adversarial::{prepare_scenarios, replay_concurrent};
+use warpspeed::prng::Xoshiro256pp;
+use warpspeed::tables::{build_table, TableKind, UpsertOp, UpsertResult};
+use warpspeed::workloads::keys::distinct_keys;
+
+/// Mixed concurrent workload: writers churn disjoint ranges while readers
+/// hammer the whole space; then a full consistency audit.
+#[test]
+fn concurrent_stress_all_designs() {
+    for kind in TableKind::CONCURRENT {
+        let t = build_table(kind, 1 << 14);
+        let n_threads = 4;
+        let per = 1024;
+        let all = Arc::new(distinct_keys(n_threads * per, 0x57E55));
+        let read_hits = Arc::new(AtomicU64::new(0));
+        let mut hs = Vec::new();
+        for tid in 0..n_threads {
+            let t = Arc::clone(&t);
+            let all = Arc::clone(&all);
+            let read_hits = Arc::clone(&read_hits);
+            hs.push(thread::spawn(move || {
+                let my = &all[tid * per..(tid + 1) * per];
+                let mut rng = Xoshiro256pp::new(tid as u64);
+                // Insert all, churn half, interleave global reads.
+                for (i, &k) in my.iter().enumerate() {
+                    assert_eq!(
+                        t.upsert(k, (tid * per + i) as u64, &UpsertOp::InsertIfUnique),
+                        UpsertResult::Inserted,
+                        "{kind:?}"
+                    );
+                    if i % 5 == 0 {
+                        let probe = all[rng.next_below((n_threads * per) as u64) as usize];
+                        if let Some(v) = t.query(probe) {
+                            // Value must be the index of that key.
+                            let idx = all.iter().position(|&x| x == probe).unwrap();
+                            assert_eq!(v, idx as u64, "{kind:?}: wrong value");
+                            read_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                for (i, &k) in my.iter().enumerate() {
+                    if i % 2 == 0 {
+                        assert!(t.erase(k), "{kind:?}: erase failed");
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!(read_hits.load(Ordering::Relaxed) > 0);
+        // Audit: evens gone, odds present exactly once.
+        for (i, &k) in all.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(t.query(k), None, "{kind:?}: erased key resurfaced");
+                assert_eq!(t.count_copies(k), 0, "{kind:?}");
+            } else {
+                assert_eq!(t.query(k), Some(i as u64), "{kind:?}: key lost");
+                assert_eq!(t.count_copies(k), 1, "{kind:?}: duplicate");
+            }
+        }
+    }
+}
+
+/// Concurrent upsert-accumulate: the compound op the paper says GPU
+/// tables must support (k-mer counting shape). Total must be exact.
+#[test]
+fn concurrent_accumulation_is_exact() {
+    for kind in TableKind::CONCURRENT {
+        let t = build_table(kind, 4096);
+        let keys = Arc::new(distinct_keys(32, 0xACC));
+        let n_threads = 4;
+        let adds_per_thread = 2000;
+        let mut hs = Vec::new();
+        for tid in 0..n_threads {
+            let t = Arc::clone(&t);
+            let keys = Arc::clone(&keys);
+            hs.push(thread::spawn(move || {
+                let mut rng = Xoshiro256pp::new(tid as u64 + 100);
+                for _ in 0..adds_per_thread {
+                    let k = keys[rng.next_below(keys.len() as u64) as usize];
+                    t.upsert(k, 1, &UpsertOp::AddAssign);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let mut total = 0u64;
+        for &k in keys.iter() {
+            total += t.query(k).unwrap_or(0);
+        }
+        assert_eq!(
+            total,
+            (n_threads * adds_per_thread) as u64,
+            "{kind:?}: lost or double-counted accumulations"
+        );
+    }
+}
+
+/// The §4.1 replay at integration scale (more buckets than the unit test).
+#[test]
+fn adversarial_replay_integration() {
+    for kind in [TableKind::Double, TableKind::P2, TableKind::Cuckoo, TableKind::Chaining] {
+        let t = build_table(kind, 1 << 14);
+        let cap = kind.default_geometry().0;
+        let scenarios = prepare_scenarios(t.as_ref(), 16, cap, 0x1711);
+        assert!(scenarios.len() >= 8, "{kind:?}: too few scenarios");
+        let rep = replay_concurrent(t, &scenarios);
+        assert_eq!(rep.duplicates, 0, "{kind:?}");
+        assert_eq!(rep.lost_keys, 0, "{kind:?}");
+    }
+}
+
+/// Full-table lifecycle: fill to 90%, drain to 0, refill — capacity must
+/// not rot (tombstone reuse works) for every open-addressing design.
+#[test]
+fn capacity_does_not_rot_across_generations() {
+    for kind in [
+        TableKind::Double,
+        TableKind::DoubleMeta,
+        TableKind::P2,
+        TableKind::P2Meta,
+        TableKind::Iceberg,
+        TableKind::IcebergMeta,
+        TableKind::Cuckoo,
+    ] {
+        let t = build_table(kind, 4096);
+        let target = (t.capacity() as f64 * 0.85) as usize;
+        for generation in 0..3 {
+            let ks = distinct_keys(target, 0xF00 + generation);
+            let mut inserted = Vec::new();
+            for &k in &ks {
+                if t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique) == UpsertResult::Inserted {
+                    inserted.push(k);
+                }
+            }
+            assert!(
+                inserted.len() as f64 >= target as f64 * 0.97,
+                "{kind:?}: generation {generation} only fit {}/{target}",
+                inserted.len()
+            );
+            for &k in &inserted {
+                assert_eq!(t.query(k), Some(k ^ 1), "{kind:?}");
+                assert!(t.erase(k), "{kind:?}");
+            }
+            assert_eq!(t.len(), 0, "{kind:?}: leak after generation {generation}");
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Three-layer parity: the AOT-compiled Pallas bulk-query executable must
+//! agree exactly with the Rust reference on random snapshots.
+//!
+//! Requires `make artifacts`; tests are skipped (pass trivially with a
+//! notice) when artifacts are absent so `cargo test` works standalone.
+
+use warpspeed::prng::Xoshiro256pp;
+use warpspeed::runtime::{artifacts_dir, BulkQueryEngine};
+use warpspeed::tables::kernel_table::KernelTable;
+
+fn engine_or_skip() -> Option<BulkQueryEngine> {
+    match BulkQueryEngine::load(&artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP runtime parity (run `make artifacts`): {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_reference_on_random_snapshots() {
+    let Some(engine) = engine_or_skip() else { return };
+    for seed in [1u64, 2, 3] {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut table = KernelTable::new(engine.nb, engine.b);
+        let n_items = engine.nb * engine.b / 2;
+        let mut present = Vec::new();
+        while present.len() < n_items {
+            let k = (rng.next_u64() as u32) | 1;
+            if table.insert(k, rng.next_u64() as u32) {
+                present.push(k);
+            }
+        }
+        // Mixed queries: present, absent, and the empty-sentinel-adjacent.
+        let mut queries = Vec::with_capacity(engine.query_batch);
+        for i in 0..engine.query_batch {
+            queries.push(match i % 3 {
+                0 => present[rng.next_below(present.len() as u64) as usize],
+                1 => (rng.next_u64() as u32) | 1,
+                _ => (i as u32).max(1),
+            });
+        }
+        let (vals, found) = engine.query_batch(&table, &queries).expect("execute");
+        for (i, &q) in queries.iter().enumerate() {
+            let want = table.query(q);
+            assert_eq!(
+                found[i],
+                want.is_some(),
+                "seed {seed} query {i} ({q:#x}): found mismatch"
+            );
+            if let Some(w) = want {
+                assert_eq!(vals[i], w, "seed {seed} query {i} ({q:#x}): value mismatch");
+            }
+        }
+    }
+}
+
+#[test]
+fn query_all_handles_odd_batch_sizes() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Xoshiro256pp::new(9);
+    let mut table = KernelTable::new(engine.nb, engine.b);
+    let mut present = Vec::new();
+    while present.len() < 1000 {
+        let k = (rng.next_u64() as u32) | 1;
+        if table.insert(k, k ^ 7) {
+            present.push(k);
+        }
+    }
+    // A non-multiple-of-batch query list.
+    let queries: Vec<u32> = present.iter().copied().take(777).collect();
+    let results = engine.query_all(&table, &queries).expect("query_all");
+    assert_eq!(results.len(), 777);
+    for (q, r) in queries.iter().zip(&results) {
+        assert_eq!(*r, Some(q ^ 7));
+    }
+}
+
+#[test]
+fn engine_rejects_mismatched_geometry() {
+    let Some(engine) = engine_or_skip() else { return };
+    let wrong = KernelTable::new(engine.nb * 2, engine.b);
+    let queries = vec![1u32; engine.query_batch];
+    assert!(engine.query_batch(&wrong, &queries).is_err());
+    let ok_table = KernelTable::new(engine.nb, engine.b);
+    let short = vec![1u32; engine.query_batch - 1];
+    assert!(engine.query_batch(&ok_table, &short).is_err());
+}
