@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_bulk` — scalar-vs-bulk pipeline sweep.
+use warpspeed::bench::{bulk, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", bulk::run(&env));
+}

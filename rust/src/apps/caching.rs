@@ -115,6 +115,80 @@ impl GpuCache {
         Some(v)
     }
 
+    /// Bulk cache access — the batch-native hot path: ONE `query_bulk`
+    /// over the device table answers the whole batch; misses fetch from
+    /// the host store and install via ONE `upsert_bulk`, with FIFO
+    /// evictions batched through `erase_bulk`. Appends one result per
+    /// key to `out` in input order.
+    ///
+    /// Semantics match a loop of [`GpuCache::get`] except for two batch
+    /// artifacts: a key missing twice *within* one batch counts every
+    /// occurrence as a miss (the device query phase runs before the
+    /// install phase, as it would across two GPU kernel launches), and
+    /// residency may transiently exceed the ring cap mid-batch before the
+    /// eviction phase restores it.
+    pub fn get_many(&mut self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        let base = out.len();
+        self.table.query_bulk(keys, out);
+        let mut miss_pairs: Vec<(u64, u64)> = Vec::new();
+        for (i, &k) in keys.iter().enumerate() {
+            match out[base + i] {
+                Some(_) => self.hits += 1,
+                None => {
+                    self.misses += 1;
+                    if let Some(v) = self.store.fetch(k) {
+                        out[base + i] = Some(v);
+                        miss_pairs.push((k, v));
+                    }
+                }
+            }
+        }
+        if miss_pairs.is_empty() {
+            return;
+        }
+        let mut ins = Vec::with_capacity(miss_pairs.len());
+        self.table
+            .upsert_bulk(&miss_pairs, &UpsertOp::InsertIfUnique, &mut ins);
+        let mut evict: Vec<u64> = Vec::new();
+        for (j, r) in ins.iter().enumerate() {
+            let (k, v) = miss_pairs[j];
+            match r {
+                UpsertResult::Inserted => self.ring.push_back(k),
+                UpsertResult::Updated => { /* in-batch duplicate: resident */ }
+                UpsertResult::Full => {
+                    // Bulk results were computed before any retries, so
+                    // an in-batch duplicate of a key an earlier Full arm
+                    // already installed also reports Full — re-check
+                    // before evicting an innocent resident for nothing.
+                    if self.table.query(k).is_some() {
+                        continue;
+                    }
+                    // Device table saturated mid-batch: evict eagerly and
+                    // retry once (the scalar path's discipline).
+                    if let Some(old) = self.ring.pop_front() {
+                        self.table.erase(old);
+                        self.evictions += 1;
+                        if self.table.upsert(k, v, &UpsertOp::InsertIfUnique)
+                            == UpsertResult::Inserted
+                        {
+                            self.ring.push_back(k);
+                        }
+                    }
+                }
+            }
+            while self.ring.len() > self.ring_cap {
+                if let Some(old) = self.ring.pop_front() {
+                    evict.push(old);
+                }
+            }
+        }
+        if !evict.is_empty() {
+            let mut eres = Vec::with_capacity(evict.len());
+            self.table.erase_bulk(&evict, &mut eres);
+            self.evictions += evict.len() as u64;
+        }
+    }
+
     pub fn resident(&self) -> usize {
         self.ring.len()
     }
@@ -168,6 +242,31 @@ mod tests {
             c.get(k);
             assert!(t.len() <= (cap as f64 * 0.86) as usize, "lf exceeded");
         }
+    }
+
+    #[test]
+    fn get_many_matches_scalar_semantics() {
+        let data = distinct_keys(2000, 0xCE);
+        let t = build_table(TableKind::DoubleMeta, 512);
+        let mut c = GpuCache::new(t, store_of(&data)).unwrap();
+        let mut draws = UniverseDraws::new(&data, 4);
+        let mut out = Vec::new();
+        for _ in 0..40 {
+            let batch: Vec<u64> = (0..256).map(|_| draws.next_key()).collect();
+            out.clear();
+            c.get_many(&batch, &mut out);
+            assert_eq!(out.len(), batch.len());
+            for (k, r) in batch.iter().zip(&out) {
+                assert_eq!(*r, Some(k ^ 0xCAFE), "wrong cached value");
+            }
+            // Eviction phase restores the ring cap after every batch.
+            assert!(c.resident() <= (c.table.capacity() as f64 * 0.85) as usize + 1);
+        }
+        assert!(c.hits > 0 && c.misses > 0 && c.evictions > 0);
+        // Unknown keys still miss.
+        out.clear();
+        c.get_many(&[0xDEAD_0000_0000_0001], &mut out);
+        assert_eq!(out[0], None);
     }
 
     #[test]

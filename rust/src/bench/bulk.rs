@@ -1,0 +1,298 @@
+//! Scalar-vs-bulk sweep over the eight concurrent designs — the exhibit
+//! behind the batch-native operation pipeline.
+//!
+//! The scalar baseline drives every table one `upsert`/`query`/`erase`
+//! at a time (one "kernel launch" per op: per-op lock acquisition, cold
+//! per-op bucket scans). The bulk path issues one `*_bulk` call per
+//! phase, which groups the batch by primary bucket so one lock
+//! acquisition and one shared bucket scan serve every op that hashes
+//! there — the host-side analog of a warp-cooperative bulk kernel.
+//!
+//! Two measurements per design:
+//! * **Throughput** (probe recording off): Mops/s for insert / query /
+//!   erase phases, scalar vs bulk, plus speedups.
+//! * **Cost-model counters** (probe recording on, smaller op count):
+//!   lock acquisitions, atomic ops, and cache lines touched. Lines are
+//!   accounted per *launch* — per op for the scalar path, per bulk call
+//!   for the batch path — matching the paper's probe metric where a
+//!   kernel launch fetches each unique line once.
+//!
+//! Machine-readable JSON rows (always-finite numbers, explicit op
+//! counts) follow the human tables.
+
+use crate::gpusim::probes::{self, ProbeScope};
+use crate::tables::{build_table, TableKind, UpsertOp};
+use crate::workloads::keys::distinct_keys;
+
+use super::report::{self, JsonVal};
+use super::{mops, BenchEnv};
+
+/// Ops measured by the counter pass (kept modest: the unique-line
+/// recorder is O(lines) per touch, and bucket-group amortization is
+/// already visible at this size).
+const COUNTER_OPS: usize = 8192;
+
+pub struct BulkRow {
+    pub name: String,
+    /// Ops per throughput phase.
+    pub ops: usize,
+    /// Ops per counter phase.
+    pub counter_ops: usize,
+    pub scalar_ins: f64,
+    pub bulk_ins: f64,
+    pub scalar_qry: f64,
+    pub bulk_qry: f64,
+    pub scalar_del: f64,
+    pub bulk_del: f64,
+    pub scalar_locks: u64,
+    pub bulk_locks: u64,
+    pub scalar_atomics: u64,
+    pub bulk_atomics: u64,
+    pub scalar_lines_per_op: f64,
+    pub bulk_lines_per_op: f64,
+}
+
+pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
+    let ins_op = UpsertOp::InsertIfUnique;
+    // ---- throughput pass (probe recording off) ----
+    probes::set_enabled(false);
+    let t = build_table(kind, slots);
+    let n = ((t.capacity() as f64) * 0.7) as usize;
+    let ks = distinct_keys(n, seed);
+    let pairs: Vec<(u64, u64)> = ks.iter().map(|&k| (k, k ^ 1)).collect();
+    let scalar_ins = mops(n, || {
+        for &(k, v) in &pairs {
+            t.upsert(k, v, &ins_op);
+        }
+    });
+    let scalar_qry = mops(n, || {
+        for &k in &ks {
+            std::hint::black_box(t.query(k));
+        }
+    });
+    let scalar_del = mops(n, || {
+        for &k in &ks {
+            t.erase(k);
+        }
+    });
+    drop(t);
+    let t = build_table(kind, slots);
+    let mut ures = Vec::with_capacity(n);
+    let bulk_ins = mops(n, || t.upsert_bulk(&pairs, &ins_op, &mut ures));
+    let mut qres = Vec::with_capacity(n);
+    let bulk_qry = mops(n, || t.query_bulk(&ks, &mut qres));
+    let mut eres = Vec::with_capacity(n);
+    let bulk_del = mops(n, || t.erase_bulk(&ks, &mut eres));
+    drop(t);
+
+    // ---- cost-model counter pass (probe recording on) ----
+    probes::set_enabled(true);
+    let nc = n.min(COUNTER_OPS);
+    let cpairs = &pairs[..nc];
+    let cks = &ks[..nc];
+    let t = build_table(kind, slots);
+    probes::take_lock_acqs();
+    probes::take_atomic_ops();
+    let mut scalar_lines = 0u64;
+    for &(k, v) in cpairs {
+        let s = ProbeScope::begin();
+        t.upsert(k, v, &ins_op);
+        scalar_lines += s.finish() as u64;
+    }
+    for &k in cks {
+        let s = ProbeScope::begin();
+        std::hint::black_box(t.query(k));
+        scalar_lines += s.finish() as u64;
+    }
+    for &k in cks {
+        let s = ProbeScope::begin();
+        t.erase(k);
+        scalar_lines += s.finish() as u64;
+    }
+    let scalar_locks = probes::take_lock_acqs();
+    let scalar_atomics = probes::take_atomic_ops();
+    drop(t);
+    let t = build_table(kind, slots);
+    probes::take_lock_acqs();
+    probes::take_atomic_ops();
+    let mut bulk_lines = 0u64;
+    let mut cres_u = Vec::with_capacity(nc);
+    let s = ProbeScope::begin();
+    t.upsert_bulk(cpairs, &ins_op, &mut cres_u);
+    bulk_lines += s.finish() as u64;
+    let mut cres_q = Vec::with_capacity(nc);
+    let s = ProbeScope::begin();
+    t.query_bulk(cks, &mut cres_q);
+    bulk_lines += s.finish() as u64;
+    let mut cres_e = Vec::with_capacity(nc);
+    let s = ProbeScope::begin();
+    t.erase_bulk(cks, &mut cres_e);
+    bulk_lines += s.finish() as u64;
+    let bulk_locks = probes::take_lock_acqs();
+    let bulk_atomics = probes::take_atomic_ops();
+
+    let per_op = (3 * nc).max(1) as f64;
+    BulkRow {
+        name: kind.paper_name().to_string(),
+        ops: n,
+        counter_ops: nc,
+        scalar_ins,
+        bulk_ins,
+        scalar_qry,
+        bulk_qry,
+        scalar_del,
+        bulk_del,
+        scalar_locks,
+        bulk_locks,
+        scalar_atomics,
+        bulk_atomics,
+        scalar_lines_per_op: scalar_lines as f64 / per_op,
+        bulk_lines_per_op: bulk_lines as f64 / per_op,
+    }
+}
+
+fn speedup(bulk: f64, scalar: f64) -> String {
+    if scalar > 0.0 {
+        format!("x{:.2}", bulk / scalar)
+    } else {
+        "-".to_string()
+    }
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let mut tp_rows = Vec::new();
+    let mut cn_rows = Vec::new();
+    let mut json_lines = String::new();
+    for kind in TableKind::CONCURRENT {
+        let r = measure(kind, env.slots, env.seed);
+        tp_rows.push(vec![
+            r.name.clone(),
+            report::fmt_f(r.scalar_ins, 1),
+            report::fmt_f(r.bulk_ins, 1),
+            speedup(r.bulk_ins, r.scalar_ins),
+            report::fmt_f(r.scalar_qry, 1),
+            report::fmt_f(r.bulk_qry, 1),
+            speedup(r.bulk_qry, r.scalar_qry),
+            report::fmt_f(r.scalar_del, 1),
+            report::fmt_f(r.bulk_del, 1),
+            speedup(r.bulk_del, r.scalar_del),
+        ]);
+        cn_rows.push(vec![
+            r.name.clone(),
+            r.counter_ops.to_string(),
+            r.scalar_locks.to_string(),
+            r.bulk_locks.to_string(),
+            r.scalar_atomics.to_string(),
+            r.bulk_atomics.to_string(),
+            report::fmt_f(r.scalar_lines_per_op, 2),
+            report::fmt_f(r.bulk_lines_per_op, 2),
+        ]);
+        json_lines.push_str(&report::json_row(&[
+            ("table", JsonVal::Str(r.name)),
+            ("ops", JsonVal::Int(r.ops as u64)),
+            ("counter_ops", JsonVal::Int(r.counter_ops as u64)),
+            ("scalar_ins_mops", JsonVal::Num(r.scalar_ins)),
+            ("bulk_ins_mops", JsonVal::Num(r.bulk_ins)),
+            ("scalar_qry_mops", JsonVal::Num(r.scalar_qry)),
+            ("bulk_qry_mops", JsonVal::Num(r.bulk_qry)),
+            ("scalar_del_mops", JsonVal::Num(r.scalar_del)),
+            ("bulk_del_mops", JsonVal::Num(r.bulk_del)),
+            ("scalar_lock_acqs", JsonVal::Int(r.scalar_locks)),
+            ("bulk_lock_acqs", JsonVal::Int(r.bulk_locks)),
+            ("scalar_atomics", JsonVal::Int(r.scalar_atomics)),
+            ("bulk_atomics", JsonVal::Int(r.bulk_atomics)),
+            ("scalar_lines_per_op", JsonVal::Num(r.scalar_lines_per_op)),
+            ("bulk_lines_per_op", JsonVal::Num(r.bulk_lines_per_op)),
+        ]));
+        json_lines.push('\n');
+    }
+    let mut out = report::table(
+        "Bulk pipeline — scalar vs bulk throughput (Mops/s)",
+        &[
+            "table", "ins", "ins(bulk)", "speedup", "qry", "qry(bulk)", "speedup", "del",
+            "del(bulk)", "speedup",
+        ],
+        &tp_rows,
+    );
+    out.push('\n');
+    out.push_str(&report::table(
+        "Bulk pipeline — gpusim cost-model counters (per phase-cycle)",
+        &[
+            "table",
+            "ops",
+            "locks",
+            "locks(bulk)",
+            "atomics",
+            "atomics(bulk)",
+            "lines/op",
+            "lines/op(bulk)",
+        ],
+        &cn_rows,
+    ));
+    out.push('\n');
+    out.push_str(&json_lines);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::UpsertResult;
+
+    #[test]
+    fn measure_is_sane_for_meta_design() {
+        let r = measure(TableKind::DoubleMeta, 8192, 7);
+        assert!(r.ops > 0 && r.counter_ops > 0);
+        for m in [
+            r.scalar_ins, r.bulk_ins, r.scalar_qry, r.bulk_qry, r.scalar_del, r.bulk_del,
+        ] {
+            assert!(m.is_finite() && m > 0.0, "non-positive Mops");
+        }
+        // The scalar path acquires one lock per mutating op; grouping can
+        // only reduce that. (Global counters may be inflated by parallel
+        // tests, so only the ordering is asserted, with the exact claim
+        // left to the sequential CLI/bench run.)
+        assert!(
+            r.bulk_locks <= r.scalar_locks,
+            "bulk locks {} > scalar locks {}",
+            r.bulk_locks,
+            r.scalar_locks
+        );
+        assert!(r.scalar_lines_per_op > 0.0);
+        assert!(r.bulk_lines_per_op > 0.0);
+    }
+
+    #[test]
+    fn bulk_phases_return_correct_results() {
+        // The bench's own phases double as a correctness check: every
+        // insert lands, every query hits, every erase succeeds.
+        let t = build_table(TableKind::IcebergMeta, 4096);
+        let n = ((t.capacity() as f64) * 0.5) as usize;
+        let ks = distinct_keys(n, 9);
+        let pairs: Vec<(u64, u64)> = ks.iter().map(|&k| (k, k ^ 1)).collect();
+        let mut ures = Vec::new();
+        t.upsert_bulk(&pairs, &UpsertOp::InsertIfUnique, &mut ures);
+        assert!(ures.iter().all(|r| *r == UpsertResult::Inserted));
+        let mut qres = Vec::new();
+        t.query_bulk(&ks, &mut qres);
+        assert!(qres.iter().zip(&ks).all(|(r, &k)| *r == Some(k ^ 1)));
+        let mut eres = Vec::new();
+        t.erase_bulk(&ks, &mut eres);
+        assert!(eres.iter().all(|&e| e));
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn run_emits_tables_and_finite_json() {
+        let env = BenchEnv {
+            slots: 2048,
+            iterations: 4,
+            seed: 3,
+        };
+        let out = run(&env);
+        assert!(out.contains("scalar vs bulk throughput"));
+        assert!(out.contains("cost-model counters"));
+        assert!(out.contains("\"bulk_lock_acqs\""));
+        assert!(!out.contains("inf") && !out.contains("NaN"));
+    }
+}

@@ -30,13 +30,31 @@ pub fn measure(
     let store = HostStore::new(data.iter().map(|&k| (k, k ^ 0xCAFE)));
     let mut cache = GpuCache::new(Arc::clone(&table), store)?;
     let mut draws = UniverseDraws::new(&data, seed ^ 0xBEEF);
+    // Batch-native hot loop: each device batch is one fused
+    // query+install round trip (`GpuCache::get_many`).
+    let batch = 256usize;
+    let mut keys = Vec::with_capacity(batch);
+    let mut out = Vec::with_capacity(batch);
     // Warm up: one pass over the cache capacity.
-    for _ in 0..((data_size as f64 * ratio) as usize).min(n_queries) {
-        cache.get(draws.next_key());
+    let mut warm = ((data_size as f64 * ratio) as usize).min(n_queries);
+    while warm > 0 {
+        let b = warm.min(batch);
+        keys.clear();
+        keys.extend((0..b).map(|_| draws.next_key()));
+        out.clear();
+        cache.get_many(&keys, &mut out);
+        warm -= b;
     }
     let m = mops(n_queries, || {
-        for _ in 0..n_queries {
-            std::hint::black_box(cache.get(draws.next_key()));
+        let mut left = n_queries;
+        while left > 0 {
+            let b = left.min(batch);
+            keys.clear();
+            keys.extend((0..b).map(|_| draws.next_key()));
+            out.clear();
+            cache.get_many(&keys, &mut out);
+            std::hint::black_box(&out);
+            left -= b;
         }
     });
     probes::set_enabled(true);

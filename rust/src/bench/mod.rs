@@ -14,6 +14,7 @@
 pub mod ablations;
 pub mod aging;
 pub mod adversarial;
+pub mod bulk;
 pub mod caching;
 pub mod load;
 pub mod probes;
@@ -55,14 +56,18 @@ impl Default for BenchEnv {
     }
 }
 
-/// Time a closure over `n` operations; returns Mops/s.
+/// Minimum elapsed time credited to a measurement. Coarse clocks (and
+/// empty op sets) can report 0 elapsed seconds, which used to surface as
+/// `f64::INFINITY` Mops/s and poison machine-readable (JSON) output;
+/// clamping to one nanosecond — well below any real timer resolution —
+/// keeps every rate finite while leaving real measurements untouched.
+pub const MIN_ELAPSED_SECS: f64 = 1e-9;
+
+/// Time a closure over `n` operations; returns Mops/s (always finite).
 pub fn mops(n: usize, f: impl FnOnce()) -> f64 {
     let start = Instant::now();
     f();
-    let dt = start.elapsed().as_secs_f64();
-    if dt == 0.0 {
-        return f64::INFINITY;
-    }
+    let dt = start.elapsed().as_secs_f64().max(MIN_ELAPSED_SECS);
     n as f64 / dt / 1e6
 }
 
@@ -94,5 +99,15 @@ mod tests {
         let e = BenchEnv::default();
         assert!(e.slots >= 1024);
         assert!(e.iterations > 0);
+    }
+
+    #[test]
+    fn mops_is_finite_on_sub_resolution_timings() {
+        // An empty closure elapses below clock resolution on coarse
+        // timers; the rate must clamp instead of reporting infinity.
+        let m = mops(1_000_000, || {});
+        assert!(m.is_finite(), "sub-resolution timing produced {m}");
+        let zero_ops = mops(0, || {});
+        assert_eq!(zero_ops, 0.0);
     }
 }

@@ -57,6 +57,60 @@ pub fn fmt_f(v: f64, prec: usize) -> String {
     format!("{v:.prec$}")
 }
 
+/// Clamp a measurement for machine-readable output: JSON has no
+/// representation for `Inf`/`NaN`, so non-finite values (e.g. a rate
+/// over a sub-resolution timing, or a design that cannot run a workload)
+/// render as 0.
+pub fn finite(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// JSON field value for a measurement row.
+pub enum JsonVal {
+    Str(String),
+    Num(f64),
+    Int(u64),
+}
+
+/// Render one JSON object line (`{"k": v, ...}`) from field pairs.
+/// Numeric fields pass through [`finite`], so emitted JSON always
+/// parses. Used by exhibits that report machine-readable rows (op
+/// counts, Mops/s, cost-model counters) next to the human tables.
+pub fn json_row(fields: &[(&str, JsonVal)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push('"');
+        out.push_str(k);
+        out.push_str("\": ");
+        match v {
+            JsonVal::Str(s) => {
+                out.push('"');
+                // Exhibit names contain no quotes/backslashes; escape
+                // anyway so the output is valid JSON for any input.
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        _ => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            JsonVal::Num(n) => out.push_str(&format!("{:.3}", finite(*n))),
+            JsonVal::Int(n) => out.push_str(&n.to_string()),
+        }
+    }
+    out.push('}');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,6 +129,29 @@ mod tests {
         assert!(s.contains("longer"));
         let lines: Vec<&str> = s.lines().collect();
         assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn json_rows_are_always_finite() {
+        let row = json_row(&[
+            ("table", JsonVal::Str("DoubleHT(M)".into())),
+            ("ops", JsonVal::Int(1000)),
+            ("mops", JsonVal::Num(f64::INFINITY)),
+            ("probes", JsonVal::Num(1.25)),
+        ]);
+        assert_eq!(
+            row,
+            r#"{"table": "DoubleHT(M)", "ops": 1000, "mops": 0.000, "probes": 1.250}"#
+        );
+        assert!(!row.contains("inf"));
+    }
+
+    #[test]
+    fn finite_clamps_non_finite() {
+        assert_eq!(finite(2.5), 2.5);
+        assert_eq!(finite(f64::INFINITY), 0.0);
+        assert_eq!(finite(f64::NEG_INFINITY), 0.0);
+        assert_eq!(finite(f64::NAN), 0.0);
     }
 
     #[test]

@@ -4,13 +4,27 @@
 //! independent unit of work. On this 1-core testbed the pool defaults to
 //! a small thread count; the structure (shard partition → parallel apply
 //! → ordered result merge) is what matters for the reproduction.
+//!
+//! Execution is batch-native: each shard's sub-batch is split into
+//! maximal *runs* of same-class operations (upsert / accumulate / query /
+//! erase) and every run is dispatched through the table's bulk API
+//! ([`crate::tables::ConcurrentMap::upsert_bulk`] and friends), so one
+//! lock acquisition and one shared bucket scan serve every op of a run
+//! that hashes to the same bucket — the host-side analog of launching one
+//! warp-cooperative kernel per operation batch. Read-only runs first
+//! consult the optional [`ReadOffload`] hook (the AOT-compiled PJRT
+//! bulk-query path, [`crate::runtime::EngineOffload`]) and fall back to
+//! the shard's lock-free in-process bulk query. Run-splitting preserves
+//! the documented invariants: results return in arrival order, and ops on
+//! the same key never reorder (same key ⇒ same shard ⇒ same sub-batch,
+//! and runs are dispatched in sub-batch order).
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 
 use super::{Batch, Op, ShardedTable};
-use crate::tables::{TableKind, UpsertOp, UpsertResult};
+use crate::tables::{ConcurrentMap, TableKind, UpsertOp, UpsertResult};
 
 /// Result of one operation, tagged with its sequence number.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,9 +56,45 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Hook consulted for read-only runs before the in-process bulk query
+/// path: an implementation may serve the whole run from elsewhere (the
+/// repo's AOT-compiled PJRT bulk-query executable over a quiesced-shard
+/// snapshot — see [`crate::runtime::EngineOffload`]). Return `true` after
+/// appending exactly one result per key to `out`; return `false` (with
+/// `out` untouched) to decline, and the executor falls back to
+/// [`ConcurrentMap::query_bulk`] on the shard.
+pub trait ReadOffload: Send + Sync {
+    fn query_run(&self, shard: &dyn ConcurrentMap, keys: &[u64], out: &mut Vec<Option<u64>>)
+        -> bool;
+}
+
+/// Operation class used for run-splitting: consecutive ops of one class
+/// form a run that dispatches as a single bulk call.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum OpClass {
+    Put,
+    Add,
+    Get,
+    Del,
+}
+
+impl OpClass {
+    #[inline]
+    fn of(op: &Op) -> OpClass {
+        match op {
+            Op::Upsert(..) => OpClass::Put,
+            Op::UpsertAdd(..) => OpClass::Add,
+            Op::Query(_) => OpClass::Get,
+            Op::Erase(_) => OpClass::Del,
+        }
+    }
+}
+
 pub struct Coordinator {
     pub table: Arc<ShardedTable>,
     cfg: CoordinatorConfig,
+    /// Optional read-run offload (PJRT bulk-query path).
+    offload: Option<Arc<dyn ReadOffload>>,
     /// Operations executed (metrics).
     pub ops_executed: std::sync::atomic::AtomicU64,
 }
@@ -55,6 +105,7 @@ impl Coordinator {
         Self {
             table,
             cfg,
+            offload: None,
             ops_executed: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -63,35 +114,102 @@ impl Coordinator {
         &self.cfg
     }
 
-    fn apply_one(table: &ShardedTable, op: Op) -> OpResult {
-        match op {
-            Op::Upsert(k, v) => match table.upsert(k, v, &UpsertOp::Overwrite) {
-                UpsertResult::Inserted => OpResult::Upserted(true),
-                UpsertResult::Updated => OpResult::Upserted(false),
-                UpsertResult::Full => OpResult::Rejected,
-            },
-            Op::UpsertAdd(k, v) => match table.upsert(k, v, &UpsertOp::AddAssign) {
-                UpsertResult::Inserted => OpResult::Upserted(true),
-                UpsertResult::Updated => OpResult::Upserted(false),
-                UpsertResult::Full => OpResult::Rejected,
-            },
-            Op::Query(k) => OpResult::Value(table.query(k)),
-            Op::Erase(k) => OpResult::Erased(table.erase(k)),
+    /// Attach a read-run offload. Only whole query runs are routed to it;
+    /// mutating runs always execute in-process.
+    pub fn with_offload(mut self, offload: Arc<dyn ReadOffload>) -> Self {
+        self.offload = Some(offload);
+        self
+    }
+
+    /// Dispatch one shard sub-batch: split into maximal same-class runs,
+    /// route each run through the shard's bulk API in order.
+    fn apply_part(
+        shard: &dyn ConcurrentMap,
+        part: &[(u64, Op)],
+        offload: Option<&dyn ReadOffload>,
+        out: &mut Vec<(u64, OpResult)>,
+    ) {
+        let mut pairs: Vec<(u64, u64)> = Vec::new();
+        let mut keys: Vec<u64> = Vec::new();
+        let mut ups: Vec<UpsertResult> = Vec::new();
+        let mut vals: Vec<Option<u64>> = Vec::new();
+        let mut hits: Vec<bool> = Vec::new();
+        let mut s = 0usize;
+        while s < part.len() {
+            let class = OpClass::of(&part[s].1);
+            let mut e = s + 1;
+            while e < part.len() && OpClass::of(&part[e].1) == class {
+                e += 1;
+            }
+            let run = &part[s..e];
+            match class {
+                OpClass::Put | OpClass::Add => {
+                    pairs.clear();
+                    pairs.extend(run.iter().map(|&(_, op)| match op {
+                        Op::Upsert(k, v) | Op::UpsertAdd(k, v) => (k, v),
+                        _ => unreachable!("run-splitting broke class homogeneity"),
+                    }));
+                    let policy = if class == OpClass::Put {
+                        UpsertOp::Overwrite
+                    } else {
+                        UpsertOp::AddAssign
+                    };
+                    ups.clear();
+                    shard.upsert_bulk(&pairs, &policy, &mut ups);
+                    out.extend(run.iter().zip(&ups).map(|(&(seq, _), &r)| {
+                        (
+                            seq,
+                            match r {
+                                UpsertResult::Inserted => OpResult::Upserted(true),
+                                UpsertResult::Updated => OpResult::Upserted(false),
+                                UpsertResult::Full => OpResult::Rejected,
+                            },
+                        )
+                    }));
+                }
+                OpClass::Get => {
+                    keys.clear();
+                    keys.extend(run.iter().map(|&(_, op)| op.key()));
+                    vals.clear();
+                    let served =
+                        offload.is_some_and(|o| o.query_run(shard, &keys, &mut vals));
+                    if !served {
+                        shard.query_bulk(&keys, &mut vals);
+                    }
+                    out.extend(
+                        run.iter()
+                            .zip(&vals)
+                            .map(|(&(seq, _), &v)| (seq, OpResult::Value(v))),
+                    );
+                }
+                OpClass::Del => {
+                    keys.clear();
+                    keys.extend(run.iter().map(|&(_, op)| op.key()));
+                    hits.clear();
+                    shard.erase_bulk(&keys, &mut hits);
+                    out.extend(
+                        run.iter()
+                            .zip(&hits)
+                            .map(|(&(seq, _), &h)| (seq, OpResult::Erased(h))),
+                    );
+                }
+            }
+            s = e;
         }
     }
 
-    /// Execute a batch: partition by shard, run sub-batches on worker
-    /// threads, merge results back into arrival order.
+    /// Execute a batch: partition by shard, run per-shard bulk dispatch
+    /// on worker threads, merge results back into arrival order.
     pub fn execute(&self, batch: &Batch) -> Vec<(u64, OpResult)> {
         let parts = batch.partition(&self.table.router);
         let (tx, rx) = mpsc::channel::<Vec<(u64, OpResult)>>();
         // Chunk shards across up to n_workers threads.
         let n_workers = self.cfg.n_workers.max(1);
-        let parts: Vec<Vec<(u64, Op)>> = parts;
-        let chunks: Vec<Vec<Vec<(u64, Op)>>> = {
-            let mut cs: Vec<Vec<Vec<(u64, Op)>>> = (0..n_workers).map(|_| Vec::new()).collect();
+        let chunks: Vec<Vec<(usize, Vec<(u64, Op)>)>> = {
+            let mut cs: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
+                (0..n_workers).map(|_| Vec::new()).collect();
             for (i, p) in parts.into_iter().enumerate() {
-                cs[i % n_workers].push(p);
+                cs[i % n_workers].push((i, p));
             }
             cs
         };
@@ -99,12 +217,19 @@ impl Coordinator {
             for chunk in &chunks {
                 let tx = tx.clone();
                 let table = Arc::clone(&self.table);
+                let offload = self.offload.clone();
                 s.spawn(move || {
                     let mut out = Vec::new();
-                    for part in chunk {
-                        for &(seq, op) in part {
-                            out.push((seq, Self::apply_one(&table, op)));
+                    for (shard_idx, part) in chunk {
+                        if part.is_empty() {
+                            continue;
                         }
+                        Self::apply_part(
+                            table.shards[*shard_idx].as_ref(),
+                            part,
+                            offload.as_deref(),
+                            &mut out,
+                        );
                     }
                     let _ = tx.send(out);
                 });
@@ -199,6 +324,93 @@ mod tests {
             c.ops_executed.load(std::sync::atomic::Ordering::Relaxed),
             50
         );
+    }
+
+    #[test]
+    fn read_offload_serves_query_runs() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        /// Mirrors the shard's own answers while counting served runs —
+        /// proves whole query runs reach the hook and results stay
+        /// arrival-ordered.
+        struct Mirror {
+            runs: AtomicU64,
+            keys_seen: AtomicU64,
+        }
+        impl super::ReadOffload for Mirror {
+            fn query_run(
+                &self,
+                shard: &dyn crate::tables::ConcurrentMap,
+                keys: &[u64],
+                out: &mut Vec<Option<u64>>,
+            ) -> bool {
+                self.runs.fetch_add(1, Ordering::Relaxed);
+                self.keys_seen.fetch_add(keys.len() as u64, Ordering::Relaxed);
+                shard.query_bulk(keys, out);
+                true
+            }
+        }
+
+        let mirror = std::sync::Arc::new(Mirror {
+            runs: AtomicU64::new(0),
+            keys_seen: AtomicU64::new(0),
+        });
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::P2Meta,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 128,
+        })
+        .with_offload(std::sync::Arc::clone(&mirror) as std::sync::Arc<dyn super::ReadOffload>);
+        let ks = distinct_keys(300, 0xE5);
+        let mut ops = Vec::new();
+        for (i, &k) in ks.iter().enumerate() {
+            ops.push(Op::Upsert(k, i as u64));
+        }
+        for &k in &ks {
+            ops.push(Op::Query(k));
+        }
+        ops.push(Op::Erase(ks[0]));
+        ops.push(Op::Query(ks[0]));
+        let r = c.run_stream(ops);
+        for (i, res) in r[300..600].iter().enumerate() {
+            assert_eq!(*res, OpResult::Value(Some(i as u64)), "query {i}");
+        }
+        assert_eq!(r[600], OpResult::Erased(true));
+        assert_eq!(r[601], OpResult::Value(None));
+        assert!(mirror.runs.load(Ordering::Relaxed) > 0, "offload never consulted");
+        assert_eq!(mirror.keys_seen.load(Ordering::Relaxed), 301);
+    }
+
+    #[test]
+    fn declined_offload_falls_back_to_in_process_bulk() {
+        struct Decline;
+        impl super::ReadOffload for Decline {
+            fn query_run(
+                &self,
+                _shard: &dyn crate::tables::ConcurrentMap,
+                _keys: &[u64],
+                _out: &mut Vec<Option<u64>>,
+            ) -> bool {
+                false
+            }
+        }
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 8 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 64,
+        })
+        .with_offload(std::sync::Arc::new(Decline));
+        let ks = distinct_keys(100, 0xE6);
+        let mut ops: Vec<Op> = ks.iter().map(|&k| Op::Upsert(k, k ^ 2)).collect();
+        ops.extend(ks.iter().map(|&k| Op::Query(k)));
+        let r = c.run_stream(ops);
+        for (i, res) in r[100..].iter().enumerate() {
+            assert_eq!(*res, OpResult::Value(Some(ks[i] ^ 2)), "query {i}");
+        }
     }
 
     #[test]

@@ -1,19 +1,41 @@
-//! L3 coordinator: request routing, batching and execution over table
-//! shards.
+//! L3 coordinator: request routing, batching and batch-native execution
+//! over table shards.
 //!
 //! The paper's downstream applications (YCSB serving, caching, SpTC)
 //! drive the tables from massively parallel GPU kernels. On this testbed
 //! the coordinator plays that role: it accepts operation streams, batches
 //! them ([`batcher`]), routes each operation to a shard by key hash
-//! ([`router`]), and executes batches on a worker pool ([`exec`]). Query-
-//! only batches over a quiesced shard can be offloaded to the AOT-compiled
-//! PJRT executable (see [`crate::runtime`]), which is the three-layer
-//! (Rust → XLA → Pallas) path.
+//! ([`router`]), and executes batches on a worker pool ([`exec`]).
+//!
+//! ## The batch pipeline
+//!
+//! Operations flow through four batch-shaped stages, mirroring how a GPU
+//! host amortizes kernel-launch and lock cost over bulk operations:
+//!
+//! 1. **Batcher** — arrival-ordered ops accumulate until the size
+//!    trigger fires; each op carries its sequence number.
+//! 2. **Partition** — a batch splits into per-shard sub-batches (pure
+//!    key-hash routing), preserving arrival order within each shard.
+//! 3. **Run split** — each sub-batch divides into maximal runs of
+//!    same-class ops (upsert / accumulate / query / erase).
+//! 4. **Bulk dispatch** — every run executes as ONE call into the
+//!    table's bulk API (`upsert_bulk` / `query_bulk` / `erase_bulk`),
+//!    which groups the run by primary bucket so one lock acquisition and
+//!    one shared bucket scan serve all ops that hash there. Read-only
+//!    runs first consult the optional [`ReadOffload`] hook — the
+//!    AOT-compiled PJRT bulk-query executable over a quiesced-shard
+//!    snapshot ([`crate::runtime::EngineOffload`], the three-layer
+//!    Rust → XLA → Pallas path) — and otherwise take the shard's
+//!    lock-free in-process bulk query.
+//!
+//! Results are merged back into arrival order by sequence number.
 //!
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches
 //!   the same shard (required for per-key linearization);
-//! * a batch partition preserves per-key operation order;
+//! * a batch partition preserves per-key operation order, and run
+//!   splitting preserves sub-batch order, so per-key order survives the
+//!   bulk dispatch end to end;
 //! * shard sizes stay balanced within statistical bounds.
 
 pub mod batcher;
@@ -21,7 +43,7 @@ pub mod exec;
 pub mod router;
 
 pub use batcher::{Batch, Batcher};
-pub use exec::{Coordinator, CoordinatorConfig, OpResult};
+pub use exec::{Coordinator, CoordinatorConfig, OpResult, ReadOffload};
 pub use router::{Router, ShardedTable};
 
 /// One client operation (the paper's API surface, §5.1).

@@ -52,6 +52,7 @@ impl LockArray {
             probes::count_atomic();
             let prev = self.words[word].fetch_or(bit, Ordering::AcqRel);
             if prev & bit == 0 {
+                probes::count_lock_acq();
                 return;
             }
             // Backoff: on GPU the warp scheduler hides this; on CPU yield
@@ -68,7 +69,11 @@ impl LockArray {
         let bit = 1u64 << (bucket % 64);
         self.touch(word);
         probes::count_atomic();
-        self.words[word].fetch_or(bit, Ordering::AcqRel) & bit == 0
+        let won = self.words[word].fetch_or(bit, Ordering::AcqRel) & bit == 0;
+        if won {
+            probes::count_lock_acq();
+        }
+        won
     }
 
     /// Release the bucket lock.

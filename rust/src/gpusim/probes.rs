@@ -45,6 +45,25 @@ pub fn take_atomic_ops() -> u64 {
     ATOMIC_OPS.swap(0, Ordering::Relaxed)
 }
 
+/// Global count of bucket-lock acquisitions. The bulk/batched operation
+/// path exists to amortize exactly this cost (one acquire serves every
+/// op of a batch that hashes to the bucket), so the bulk benchmark
+/// reports it next to probe counts.
+pub static LOCK_ACQS: AtomicU64 = AtomicU64::new(0);
+
+#[inline(always)]
+pub(crate) fn count_lock_acq() {
+    if enabled() {
+        LOCK_ACQS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Reset the global lock-acquisition counter, returning the previous
+/// value.
+pub fn take_lock_acqs() -> u64 {
+    LOCK_ACQS.swap(0, Ordering::Relaxed)
+}
+
 thread_local! {
     static RECORDER: RefCell<Recorder> = RefCell::new(Recorder::new());
 }

@@ -16,6 +16,33 @@
 //! 128-bit vector loads onto a functional simulator (`gpusim`) so that the
 //! paper's concurrency claims (adversarial races, lock-free queries,
 //! probe-count behaviour) are exercised by real multi-threaded code.
+//!
+//! # The batch-native operation pipeline
+//!
+//! GPU hash tables earn their throughput by amortizing cost over bulk
+//! operations — tiles of threads share probes, and hosts call bulk
+//! insert/retrieve entry points rather than single ops. Batching is
+//! therefore a first-class concept across every layer here:
+//!
+//! * **Tables** ([`tables::ConcurrentMap`]): `upsert_bulk` /
+//!   `query_bulk` / `erase_bulk` operate on slices and append into
+//!   caller-provided buffers. Every design gets a scalar-fallback
+//!   default; the open-addressing designs (DoubleHT, P2HT, IcebergHT,
+//!   plain and metadata variants) override them natively, sorting each
+//!   batch by primary bucket so ONE lock acquisition and ONE shared
+//!   bucket scan (a single tag-block probe on the metadata variants)
+//!   serve every op that hashes there, while preserving in-batch
+//!   per-key order.
+//! * **Coordinator** ([`coordinator`]): batches partition per shard,
+//!   split into maximal same-class runs, and dispatch whole runs through
+//!   the bulk API; read-only runs can be served by the AOT-compiled PJRT
+//!   bulk-query executable via [`coordinator::ReadOffload`].
+//! * **Benches/apps**: the `bulk` exhibit ([`bench::bulk`]) sweeps
+//!   scalar vs bulk across all eight concurrent designs with gpusim
+//!   cost-model counters (lock acquisitions, atomics, cache lines per
+//!   launch); the YCSB bench and the GPU-cache app
+//!   ([`apps::caching::GpuCache::get_many`]) drive their hot loops
+//!   through the same bulk entry points.
 
 pub mod gpusim;
 pub mod hash;

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! warpspeed info
-//! warpspeed probes|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
+//! warpspeed probes|bulk|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
 //!           [--slots N] [--iters N] [--seed S]
 //! warpspeed all          # every exhibit in sequence
 //! warpspeed serve [--table p2m] [--slots N] [--shards N]
@@ -37,9 +37,10 @@ fn main() {
             println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
             println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
             println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
-            println!("subcommands: probes load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
+            println!("subcommands: probes bulk load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
         }
         "probes" => print!("{}", bench::probes::run(&env)),
+        "bulk" => print!("{}", bench::bulk::run(&env)),
         "load" => print!("{}", bench::load::run(&env)),
         "aging" => print!("{}", bench::aging::run(&env)),
         "caching" => print!("{}", bench::caching::run(&env)),
@@ -54,6 +55,7 @@ fn main() {
         "all" => {
             for (name, f) in [
                 ("probes", bench::probes::run as fn(&BenchEnv) -> String),
+                ("bulk", bench::bulk::run),
                 ("load", bench::load::run),
                 ("aging", bench::aging::run),
                 ("caching", bench::caching::run),

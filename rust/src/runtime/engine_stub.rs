@@ -1,0 +1,70 @@
+//! API-compatible stand-in for the PJRT bulk-query engine, compiled when
+//! the `pjrt` cargo feature is off (the default, dependency-free build).
+//!
+//! [`BulkQueryEngine::load`] always returns an error explaining how to
+//! enable the real engine, so callers exercise exactly the same skip
+//! paths they would hit when AOT artifacts are missing. No instance can
+//! ever be constructed, which keeps the execution methods unreachable
+//! (they are still type-checked against the real signatures).
+
+use std::path::{Path, PathBuf};
+
+use crate::tables::kernel_table::KernelTable;
+
+/// Queries per executable invocation — must match the manifest.
+pub const QUERY_BATCH: usize = 2048;
+/// Snapshot geometry — must match the manifest.
+pub const NB: usize = 4096;
+pub const B: usize = 8;
+
+/// Default artifacts directory: `$WARPSPEED_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("WARPSPEED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Stub engine: same public surface as the PJRT-backed engine, but
+/// uninhabitable — `load` is the only constructor and it always fails.
+pub struct BulkQueryEngine {
+    never: std::convert::Infallible,
+    pub nb: usize,
+    pub b: usize,
+    pub query_batch: usize,
+}
+
+impl BulkQueryEngine {
+    /// Always fails in the stub build.
+    pub fn load(_dir: &Path) -> Result<Self, String> {
+        Err(
+            "PJRT runtime not compiled in (build with `--features pjrt` and a local \
+             xla/anyhow checkout to enable the AOT bulk-query path)"
+                .to_string(),
+        )
+    }
+
+    /// Can the engine serve this snapshot?
+    pub fn fits(&self, table: &KernelTable) -> bool {
+        table.num_buckets == self.nb && table.bucket_size == self.b
+    }
+
+    /// Execute one query batch (unreachable in the stub build).
+    pub fn query_batch(
+        &self,
+        _table: &KernelTable,
+        _queries: &[u32],
+    ) -> Result<(Vec<u32>, Vec<bool>), String> {
+        let _ = &self.never;
+        unreachable!("stub BulkQueryEngine cannot be constructed")
+    }
+
+    /// Query an arbitrary number of keys (unreachable in the stub build).
+    pub fn query_all(
+        &self,
+        _table: &KernelTable,
+        _queries: &[u32],
+    ) -> Result<Vec<Option<u32>>, String> {
+        let _ = &self.never;
+        unreachable!("stub BulkQueryEngine cannot be constructed")
+    }
+}

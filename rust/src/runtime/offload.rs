@@ -1,0 +1,99 @@
+//! Read-run offload adapter: serve coordinator query runs from the
+//! AOT-compiled PJRT bulk-query executable over a quiesced-shard
+//! snapshot.
+//!
+//! The compiled kernel operates on a fixed-geometry u32 snapshot
+//! ([`KernelTable`], fmix32 hashing) rather than on the live u64 tables,
+//! so the adapter follows the BSP discipline the module docs of
+//! [`crate::coordinator`] describe: quiesce a shard, [`capture`] it, then
+//! attach the offload for the read-only phase. Every serve re-checks that
+//! the asking shard IS the captured one (object identity), that it still
+//! matches the snapshot (`len` equality as a cheap staleness guard), and
+//! that every queried key fits the kernel's u32 domain; on any mismatch it declines
+//! and the coordinator falls back to the shard's in-process lock-free
+//! bulk-query path.
+//!
+//! [`capture`]: EngineOffload::capture
+
+use crate::coordinator::ReadOffload;
+use crate::tables::kernel_table::KernelTable;
+use crate::tables::ConcurrentMap;
+
+use super::BulkQueryEngine;
+
+/// PJRT-backed implementation of [`ReadOffload`].
+pub struct EngineOffload {
+    engine: BulkQueryEngine,
+    snapshot: KernelTable,
+    /// Identity of the captured shard (address of its table object). A
+    /// coordinator-global offload is consulted for EVERY shard's query
+    /// runs; this pins the snapshot to the one shard it mirrors.
+    shard_id: usize,
+}
+
+impl EngineOffload {
+    /// Snapshot `shard` into the engine's compiled geometry. Returns
+    /// `None` when the shard cannot be represented losslessly: any key or
+    /// value outside the u32 domain, a key colliding with the kernel's
+    /// empty sentinel (0), or more residents than the fixed-shape
+    /// snapshot's probe discipline can place.
+    ///
+    /// The caller must quiesce the shard for the duration of the capture
+    /// (no concurrent writers), per [`ConcurrentMap::for_each_entry`].
+    pub fn capture(engine: BulkQueryEngine, shard: &dyn ConcurrentMap) -> Option<Self> {
+        let mut snapshot = KernelTable::new(engine.nb, engine.b);
+        let mut ok = true;
+        shard.for_each_entry(&mut |k, v| {
+            if !ok {
+                return;
+            }
+            let (Ok(k32), Ok(v32)) = (u32::try_from(k), u32::try_from(v)) else {
+                ok = false;
+                return;
+            };
+            if k32 == 0 || !snapshot.insert(k32, v32) {
+                ok = false;
+            }
+        });
+        if !ok {
+            return None;
+        }
+        let shard_id = shard as *const dyn ConcurrentMap as *const () as usize;
+        Some(Self {
+            engine,
+            snapshot,
+            shard_id,
+        })
+    }
+
+    /// The captured snapshot (tests / diagnostics).
+    pub fn snapshot(&self) -> &KernelTable {
+        &self.snapshot
+    }
+}
+
+impl ReadOffload for EngineOffload {
+    fn query_run(&self, shard: &dyn ConcurrentMap, keys: &[u64], out: &mut Vec<Option<u64>>) -> bool {
+        // Serve only the shard this snapshot was captured from — the
+        // coordinator consults one offload for every shard's read runs —
+        // and decline if it has been mutated since capture.
+        let same_shard = shard as *const dyn ConcurrentMap as *const () as usize == self.shard_id;
+        if !same_shard || shard.len() != self.snapshot.len() || !self.engine.fits(&self.snapshot) {
+            return false;
+        }
+        let mut q32 = Vec::with_capacity(keys.len());
+        for &k in keys {
+            match u32::try_from(k) {
+                Ok(k32) if k32 != 0 => q32.push(k32),
+                _ => return false, // outside the kernel's key domain
+            }
+        }
+        match self.engine.query_all(&self.snapshot, &q32) {
+            Ok(vals) => {
+                out.extend(vals.into_iter().map(|v| v.map(u64::from)));
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}

@@ -12,7 +12,9 @@
 //! cooperative-group tile does, so probe accounting sees the same cache
 //! lines the GPU tile would touch.
 
+use super::meta::MetaArray;
 use crate::gpusim::mem::{is_user_key, SimMem, EMPTY, RESERVED, TOMBSTONE};
+use crate::gpusim::race::{RaceEvent, RaceHook};
 
 pub use crate::gpusim::mem::{EMPTY as KEY_EMPTY, RESERVED as KEY_RESERVED, TOMBSTONE as KEY_TOMBSTONE};
 
@@ -43,6 +45,57 @@ impl ScanResult {
     #[inline]
     pub fn has_empty(&self) -> bool {
         self.first_empty.is_some()
+    }
+}
+
+/// Free-slot worklist for one bucket, captured by a single shared scan
+/// and consumed by a grouped (batch) insert. Tombstones are handed out
+/// before never-used slots, matching [`ScanResult::reusable`]'s
+/// preference; consuming slots does not change what the bucket held *at
+/// scan time* (see [`FreeSlots::had_empty`]).
+#[derive(Clone, Debug, Default)]
+pub struct FreeSlots {
+    tombstones: Vec<u16>,
+    empties: Vec<u16>,
+    cursor_t: usize,
+    cursor_e: usize,
+}
+
+impl FreeSlots {
+    #[inline]
+    pub fn push_tombstone(&mut self, slot: usize) {
+        self.tombstones.push(slot as u16);
+    }
+
+    #[inline]
+    pub fn push_empty(&mut self, slot: usize) {
+        self.empties.push(slot as u16);
+    }
+
+    /// Next candidate slot for a claim (tombstones first), or `None` when
+    /// the scan-time list is exhausted.
+    #[inline]
+    pub fn next_free(&mut self) -> Option<usize> {
+        if self.cursor_t < self.tombstones.len() {
+            self.cursor_t += 1;
+            return Some(self.tombstones[self.cursor_t - 1] as usize);
+        }
+        if self.cursor_e < self.empties.len() {
+            self.cursor_e += 1;
+            return Some(self.empties[self.cursor_e - 1] as usize);
+        }
+        None
+    }
+
+    /// Did the bucket hold at least one never-used slot at scan time?
+    /// This is the negative-early-exit precondition: a key is always
+    /// stored at or before the first EMPTY bucket of its probe sequence,
+    /// so a scan-time EMPTY in the *first* bucket proves a scan-time miss
+    /// there is a table-wide miss. Stays true after the group consumes
+    /// the slots — the proof is about the scan instant.
+    #[inline]
+    pub fn had_empty(&self) -> bool {
+        !self.empties.is_empty()
     }
 }
 
@@ -117,6 +170,51 @@ impl Pairs {
             slot = chunk_end;
         }
         r
+    }
+
+    /// One shared pass over a bucket serving a whole batch group: for
+    /// each key in `keys`, its `(slot, value-at-scan)` if present, plus
+    /// the bucket's complete free-slot list and fill. The bucket's cache
+    /// lines are walked ONCE regardless of group size — the CPU analog of
+    /// a cooperative tile scanning a bucket one time for a warp's worth
+    /// of batched operations. Unlike [`Pairs::scan_bucket`] there is no
+    /// early exit: the group needs the full free list.
+    ///
+    /// `found` is cleared and filled parallel to `keys` (duplicate keys
+    /// each receive the hit). Values are as of the scan; mutating callers
+    /// must re-read before merge-style updates.
+    pub fn scan_bucket_group(
+        &self,
+        bucket: usize,
+        keys: &[u64],
+        strong: bool,
+        found: &mut Vec<Option<(usize, u64)>>,
+    ) -> (FreeSlots, usize) {
+        found.clear();
+        found.resize(keys.len(), None);
+        let mut free = FreeSlots::default();
+        let mut fill = 0usize;
+        let base = self.kidx(bucket, 0);
+        for s in 0..self.bucket_size {
+            let k = self.mem.load(base + s * 2, strong);
+            if k == EMPTY {
+                free.push_empty(s);
+            } else if k == TOMBSTONE {
+                free.push_tombstone(s);
+            } else {
+                // User key or RESERVED (pending publish): occupied.
+                fill += 1;
+                if is_user_key(k) && keys.contains(&k) {
+                    let v = self.mem.load(base + s * 2 + 1, strong);
+                    for (i, &q) in keys.iter().enumerate() {
+                        if q == k {
+                            found[i] = Some((s, v));
+                        }
+                    }
+                }
+            }
+        }
+        (free, fill)
     }
 
     /// Scan only the listed slots (metadata candidates) for `key`.
@@ -254,6 +352,41 @@ impl Pairs {
     }
 }
 
+/// Claim + publish `key → val` into bucket `b` from a group's shared
+/// free-slot list — the one claim protocol every bulk-native design
+/// uses (tag CAS first when metadata is present, exactly like the
+/// scalar `claim_in_bucket` paths). Returns the claimed slot, or `None`
+/// when the scan-time list is exhausted (CAS races with inserts from
+/// other primary buckets may consume slots first) — the caller falls
+/// back to its full scalar walk.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn claim_from_free(
+    pairs: &Pairs,
+    meta: Option<&MetaArray>,
+    b: usize,
+    free: &mut FreeSlots,
+    key: u64,
+    val: u64,
+    tag: u16,
+    hook: &dyn RaceHook,
+) -> Option<usize> {
+    while let Some(slot) = free.next_free() {
+        hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
+        if let Some(m) = meta {
+            if m.try_claim(b, slot, tag, true) {
+                let ok = pairs.try_claim(b, slot, true);
+                debug_assert!(ok, "tag claimed but pair slot busy");
+                pairs.publish(b, slot, key, val);
+                return Some(slot);
+            }
+        } else if pairs.try_claim(b, slot, true) {
+            pairs.publish(b, slot, key, val);
+            return Some(slot);
+        }
+    }
+    None
+}
+
 /// Round a requested slot capacity to (num_buckets pow2, bucket_size).
 pub fn bucket_count_for(slots: usize, bucket_size: usize) -> usize {
     let want = slots.div_ceil(bucket_size).max(1);
@@ -342,6 +475,35 @@ mod tests {
         let mut seen = vec![];
         p.for_each_live(|k, v| seen.push((k, v)));
         assert_eq!(seen, vec![(5, 50)]);
+    }
+
+    #[test]
+    fn group_scan_matches_scalar_scan() {
+        let p = pairs();
+        assert!(p.try_claim(2, 1, false));
+        p.publish(2, 1, 11, 101);
+        assert!(p.try_claim(2, 3, false));
+        p.publish(2, 3, 22, 202);
+        assert!(p.try_claim(2, 4, false));
+        p.publish(2, 4, 33, 303);
+        p.kill(2, 4); // tombstone at slot 4
+        let keys = vec![22, 99, 11, 22];
+        let mut found = Vec::new();
+        let (mut free, fill) = p.scan_bucket_group(2, &keys, true, &mut found);
+        assert_eq!(found[0], Some((3, 202)));
+        assert_eq!(found[1], None);
+        assert_eq!(found[2], Some((1, 101)));
+        assert_eq!(found[3], Some((3, 202)), "duplicate keys each get the hit");
+        assert_eq!(fill, 2);
+        assert!(free.had_empty());
+        // Tombstone handed out before empties, then ascending empties.
+        assert_eq!(free.next_free(), Some(4));
+        assert_eq!(free.next_free(), Some(0));
+        assert_eq!(free.next_free(), Some(2));
+        // Consuming slots never invalidates the scan-time empty proof.
+        assert!(free.had_empty());
+        while free.next_free().is_some() {}
+        assert!(free.had_empty());
     }
 
     #[test]

@@ -24,8 +24,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::common::{bucket_count_for, Pairs};
-use super::meta::MetaArray;
+use super::common::{bucket_count_for, FreeSlots, Pairs};
+use super::meta::{MetaArray, MetaScan};
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 use crate::gpusim::race::RaceEvent;
 use crate::gpusim::LockArray;
@@ -172,17 +172,13 @@ impl DoubleHt {
         }
         Err(target)
     }
-}
 
-impl ConcurrentMap for DoubleHt {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
-        debug_assert!(crate::gpusim::mem::is_user_key(key));
-        let primary = self.primary_bucket(key);
-        if self.mode.locking() {
-            self.locks.lock(primary);
-        }
+    /// Scalar upsert body. The caller holds the key's primary-bucket lock
+    /// (in locking modes) — shared by the scalar API and as the bulk
+    /// path's correctness fallback.
+    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
         let strong = self.mode.strong();
-        let res = match self.find(key, strong) {
+        match self.find(key, strong) {
             Ok((b, slot, old_v)) => {
                 self.apply_existing(b, slot, old_v, val, op);
                 UpsertResult::Updated
@@ -215,7 +211,139 @@ impl ConcurrentMap for DoubleHt {
                     UpsertResult::Full
                 }
             }
+        }
+    }
+
+    /// Scalar erase body; caller holds the primary-bucket lock.
+    fn erase_under_lock(&self, key: u64) -> bool {
+        match self.find(key, self.mode.strong()) {
+            Ok((b, slot, _)) => {
+                self.kill_at(b, slot, key);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Tombstone a located pair (+ its tag) and account the deletion.
+    fn kill_at(&self, b: usize, slot: usize, key: u64) {
+        self.pairs.kill(b, slot);
+        if let Some(meta) = &self.meta {
+            meta.kill(b, slot);
+        }
+        self.live.fetch_sub(1, Ordering::Relaxed);
+        self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+    }
+
+    /// Claim + publish from a group's shared free-slot list (shared
+    /// protocol in [`super::common::claim_from_free`]). `None` means the
+    /// scan-time list is exhausted — the caller falls back to the full
+    /// scalar walk.
+    fn claim_from(&self, b: usize, free: &mut FreeSlots, key: u64, val: u64) -> Option<usize> {
+        let tag = self.meta.as_ref().map(|_| tag16(key)).unwrap_or(0);
+        super::common::claim_from_free(
+            &self.pairs,
+            self.meta.as_ref(),
+            b,
+            free,
+            key,
+            val,
+            tag,
+            self.hook.as_ref(),
+        )
+    }
+
+    /// Grouped upsert into one primary bucket, under that bucket's lock:
+    /// one shared scan (a single tag-block probe for the metadata
+    /// variant) plus a shared free-slot list serve the whole group; only
+    /// ops the fast path cannot prove correct re-walk the probe sequence.
+    #[allow(clippy::too_many_arguments)]
+    fn upsert_group(
+        &self,
+        b: usize,
+        group: &[u32],
+        pairs_in: &[(u64, u64)],
+        op: &UpsertOp,
+        tags: &mut Vec<u16>,
+        per_tag: &mut Vec<MetaScan>,
+        found: &mut Vec<Option<(usize, u64)>>,
+        group_keys: &mut Vec<u64>,
+        out: &mut [UpsertResult],
+    ) {
+        let strong = self.mode.strong();
+        let mut free = if let Some(meta) = &self.meta {
+            tags.clear();
+            tags.extend(group.iter().map(|&i| tag16(pairs_in[i as usize].0)));
+            let (free, _) = meta.scan_group(b, tags, strong, per_tag);
+            free
+        } else {
+            group_keys.clear();
+            group_keys.extend(group.iter().map(|&i| pairs_in[i as usize].0));
+            let (free, _) = self.pairs.scan_bucket_group(b, group_keys, strong, found);
+            free
         };
+        let had_empty = free.had_empty();
+        // Keys this group fast-path-inserted into `b` (slot known), and
+        // keys routed through the scalar fallback (location unknown).
+        let mut local: Vec<(u64, usize)> = Vec::new();
+        let mut fallback_keys: Vec<u64> = Vec::new();
+        for (j, &i) in group.iter().enumerate() {
+            let (k, v) = pairs_in[i as usize];
+            debug_assert!(crate::gpusim::mem::is_user_key(k));
+            if let Some(&(_, slot)) = local.iter().find(|&&(lk, _)| lk == k) {
+                // Placed by an earlier op of this group: merge in place
+                // with a fresh value read.
+                let (_, old) = self.pairs.pair_at(b, slot, strong);
+                self.apply_existing(b, slot, old, v, op);
+                out[i as usize] = UpsertResult::Updated;
+                continue;
+            }
+            if fallback_keys.contains(&k) {
+                // An earlier fallback put it somewhere the shared scan
+                // cannot see — stay on the scalar path for this key.
+                out[i as usize] = self.upsert_under_lock(k, v, op);
+                continue;
+            }
+            let hit = if self.meta.is_some() {
+                self.pairs.scan_slots(b, per_tag[j].match_slots(), k, strong)
+            } else {
+                found[j]
+            };
+            if let Some((slot, _)) = hit {
+                // Re-read the value: the shared scan's snapshot may
+                // predate earlier merges by this very group.
+                let (_, old) = self.pairs.pair_at(b, slot, strong);
+                self.apply_existing(b, slot, old, v, op);
+                out[i as usize] = UpsertResult::Updated;
+                continue;
+            }
+            // Absence is proven only when the primary bucket held a
+            // never-used slot at scan time (the key is always stored at
+            // or before the first EMPTY bucket of its probe sequence, and
+            // the primary is the first bucket).
+            if had_empty {
+                if let Some(slot) = self.claim_from(b, &mut free, k, v) {
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    local.push((k, slot));
+                    out[i as usize] = UpsertResult::Inserted;
+                    continue;
+                }
+            }
+            // Aged or contended primary: full scalar walk.
+            out[i as usize] = self.upsert_under_lock(k, v, op);
+            fallback_keys.push(k);
+        }
+    }
+}
+
+impl ConcurrentMap for DoubleHt {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let primary = self.primary_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(primary);
+        }
+        let res = self.upsert_under_lock(key, val, op);
         if self.mode.locking() {
             self.locks.unlock(primary);
         }
@@ -235,24 +363,155 @@ impl ConcurrentMap for DoubleHt {
         if self.mode.locking() {
             self.locks.lock(primary);
         }
-        let strong = self.mode.strong();
-        let hit = match self.find(key, strong) {
-            Ok((b, slot, _)) => {
-                self.pairs.kill(b, slot);
-                if let Some(meta) = &self.meta {
-                    meta.kill(b, slot);
-                }
-                self.live.fetch_sub(1, Ordering::Relaxed);
-                self.hook
-                    .on_event(RaceEvent::AfterDelete { key, bucket: b });
-                true
-            }
-            Err(_) => false,
-        };
+        let hit = self.erase_under_lock(key);
         if self.mode.locking() {
             self.locks.unlock(primary);
         }
         hit
+    }
+
+    fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
+        let base = out.len();
+        out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let buckets: Vec<usize> = pairs_in.iter().map(|&(k, _)| self.primary_bucket(k)).collect();
+        let locking = self.mode.locking();
+        // Scratch shared across groups (no per-group allocations).
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |b, group| {
+            if locking {
+                self.locks.lock(b);
+            }
+            if group.len() == 1 {
+                let (k, v) = pairs_in[group[0] as usize];
+                debug_assert!(crate::gpusim::mem::is_user_key(k));
+                out[base + group[0] as usize] = self.upsert_under_lock(k, v, op);
+            } else {
+                self.upsert_group(
+                    b,
+                    group,
+                    pairs_in,
+                    op,
+                    &mut tags,
+                    &mut per_tag,
+                    &mut found,
+                    &mut group_keys,
+                    &mut out[base..],
+                );
+            }
+            if locking {
+                self.locks.unlock(b);
+            }
+        });
+    }
+
+    fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), None);
+        let buckets: Vec<usize> = keys_in.iter().map(|&k| self.primary_bucket(k)).collect();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |b, group| {
+            if group.len() == 1 {
+                let i = group[0] as usize;
+                out[base + i] = self.query(keys_in[i]);
+                return;
+            }
+            if let Some(meta) = &self.meta {
+                tags.clear();
+                tags.extend(group.iter().map(|&i| tag16(keys_in[i as usize])));
+                let (free, _) = meta.scan_group(b, &tags, strong, &mut per_tag);
+                for (j, &i) in group.iter().enumerate() {
+                    let k = keys_in[i as usize];
+                    out[base + i as usize] =
+                        match self.pairs.scan_slots(b, per_tag[j].match_slots(), k, strong) {
+                            Some((_, v)) => Some(v),
+                            // Scan-time EMPTY in the primary bucket ⇒ the
+                            // key is at or before it ⇒ table-wide miss.
+                            None if free.had_empty() => None,
+                            // Aged bucket: full probe-sequence walk.
+                            None => self.query(k),
+                        };
+                }
+            } else {
+                group_keys.clear();
+                group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
+                let (free, _) = self.pairs.scan_bucket_group(b, &group_keys, strong, &mut found);
+                for (j, &i) in group.iter().enumerate() {
+                    out[base + i as usize] = match found[j] {
+                        Some((_, v)) => Some(v),
+                        None if free.had_empty() => None,
+                        None => self.query(keys_in[i as usize]),
+                    };
+                }
+            }
+        });
+    }
+
+    fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), false);
+        let buckets: Vec<usize> = keys_in.iter().map(|&k| self.primary_bucket(k)).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |b, group| {
+            if locking {
+                self.locks.lock(b);
+            }
+            if group.len() == 1 {
+                let i = group[0] as usize;
+                out[base + i] = self.erase_under_lock(keys_in[i]);
+            } else {
+                // One shared scan of the primary bucket for the group.
+                let meta_free = if let Some(meta) = &self.meta {
+                    tags.clear();
+                    tags.extend(group.iter().map(|&i| tag16(keys_in[i as usize])));
+                    let (free, _) = meta.scan_group(b, &tags, strong, &mut per_tag);
+                    free
+                } else {
+                    group_keys.clear();
+                    group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
+                    let (free, _) = self.pairs.scan_bucket_group(b, &group_keys, strong, &mut found);
+                    free
+                };
+                // Keys already handled by this group: the shared scan is
+                // stale for them, so re-walk.
+                let mut processed: Vec<u64> = Vec::new();
+                for (j, &i) in group.iter().enumerate() {
+                    let k = keys_in[i as usize];
+                    if processed.contains(&k) {
+                        out[base + i as usize] = self.erase_under_lock(k);
+                        continue;
+                    }
+                    processed.push(k);
+                    let hit = if self.meta.is_some() {
+                        self.pairs.scan_slots(b, per_tag[j].match_slots(), k, strong)
+                    } else {
+                        found[j]
+                    };
+                    out[base + i as usize] = match hit {
+                        Some((slot, _)) => {
+                            self.kill_at(b, slot, k);
+                            true
+                        }
+                        None if meta_free.had_empty() => false,
+                        None => self.erase_under_lock(k),
+                    };
+                }
+            }
+            if locking {
+                self.locks.unlock(b);
+            }
+        });
     }
 
     fn num_buckets(&self) -> usize {
@@ -427,5 +686,26 @@ mod tests {
     fn property_matches_std_hashmap() {
         check_vs_oracle(&plain(4096), 0xD0);
         check_vs_oracle(&meta(4096), 0xD1);
+    }
+
+    #[test]
+    fn bulk_matches_scalar_twin() {
+        check_bulk_parity(&plain(2048), &plain(2048), 0xD2);
+        check_bulk_parity(&meta(2048), &meta(2048), 0xD3);
+    }
+
+    #[test]
+    fn bulk_parity_on_tiny_aged_table() {
+        // A tiny table ages fast: the grouped fast path must keep falling
+        // back to the probe-sequence walk correctly once EMPTY slots run
+        // out.
+        check_bulk_parity(&plain(256), &plain(256), 0xD4);
+        check_bulk_parity(&meta(256), &meta(256), 0xD5);
+    }
+
+    #[test]
+    fn bulk_concurrent_no_duplicates() {
+        check_bulk_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
+        check_bulk_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
     }
 }

@@ -19,8 +19,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::common::{bucket_count_for, Pairs};
-use super::meta::MetaArray;
+use super::common::{bucket_count_for, FreeSlots, Pairs};
+use super::meta::{MetaArray, MetaScan};
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 use crate::gpusim::race::RaceEvent;
 use crate::gpusim::LockArray;
@@ -180,15 +180,12 @@ impl IcebergHt {
             &self.bmeta
         }
     }
-}
 
-impl ConcurrentMap for IcebergHt {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
-        debug_assert!(crate::gpusim::mem::is_user_key(key));
+    /// Scalar upsert body; the caller holds the front-yard bucket lock
+    /// (in locking modes). Shared by the scalar API and the bulk
+    /// fallback.
+    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
         let fb = self.front_bucket(key);
-        if self.mode.locking() {
-            self.locks.lock(fb);
-        }
         let strong = self.mode.strong();
         let res = 'done: {
             if let Some((pairs, b, slot, old_v)) = self.locate(key, strong) {
@@ -216,6 +213,69 @@ impl ConcurrentMap for IcebergHt {
             }
             UpsertResult::Full
         };
+        res
+    }
+
+    /// Scalar erase body; caller holds the front-yard bucket lock.
+    fn erase_under_lock(&self, key: u64) -> bool {
+        match self.locate(key, self.mode.strong()) {
+            Some((pairs, b, slot, _)) => {
+                self.kill_in(pairs, b, slot, key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Tombstone a located pair in either yard and account the deletion.
+    fn kill_in(&self, pairs: &Pairs, b: usize, slot: usize, key: u64) {
+        pairs.kill(b, slot);
+        if let Some(m) = self.meta_for(pairs) {
+            m.kill(b, slot);
+        }
+        self.live.fetch_sub(1, Ordering::Relaxed);
+        self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+    }
+
+    /// Find `key` in the back yard only (both candidate buckets).
+    fn locate_back(&self, key: u64, tag: u16, strong: bool) -> Option<(usize, usize, u64)> {
+        for bb in self.back_buckets(key) {
+            let (found, _, _) = self.find_in(&self.back, &self.bmeta, bb, key, tag, strong);
+            if let Some((slot, v)) = found {
+                return Some((bb, slot, v));
+            }
+        }
+        None
+    }
+
+    /// Claim + publish a front-yard slot from a group's shared free-slot
+    /// list (shared protocol in [`super::common::claim_from_free`]);
+    /// `None` when the scan-time list is exhausted (the caller falls
+    /// back to the scalar walk, which retries the front yard and then
+    /// overflows to the back yard).
+    fn claim_front_from(&self, fb: usize, free: &mut FreeSlots, key: u64, val: u64) -> Option<usize> {
+        let tag = if self.fmeta.is_some() { tag16(key) } else { 0 };
+        super::common::claim_from_free(
+            &self.front,
+            self.fmeta.as_ref(),
+            fb,
+            free,
+            key,
+            val,
+            tag,
+            self.hook.as_ref(),
+        )
+    }
+}
+
+impl ConcurrentMap for IcebergHt {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let fb = self.front_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(fb);
+        }
+        let res = self.upsert_under_lock(key, val, op);
         if self.mode.locking() {
             self.locks.unlock(fb);
         }
@@ -231,22 +291,203 @@ impl ConcurrentMap for IcebergHt {
         if self.mode.locking() {
             self.locks.lock(fb);
         }
-        let hit = match self.locate(key, self.mode.strong()) {
-            Some((pairs, b, slot, _)) => {
-                pairs.kill(b, slot);
-                if let Some(m) = self.meta_for(pairs) {
-                    m.kill(b, slot);
-                }
-                self.live.fetch_sub(1, Ordering::Relaxed);
-                self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
-                true
-            }
-            None => false,
-        };
+        let hit = self.erase_under_lock(key);
         if self.mode.locking() {
             self.locks.unlock(fb);
         }
         hit
+    }
+
+    fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
+        let base = out.len();
+        out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let buckets: Vec<usize> =
+            pairs_in.iter().map(|&(k, _)| self.front_bucket(k)).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |fb, group| {
+            if locking {
+                self.locks.lock(fb);
+            }
+            if group.len() == 1 {
+                let (k, v) = pairs_in[group[0] as usize];
+                debug_assert!(crate::gpusim::mem::is_user_key(k));
+                out[base + group[0] as usize] = self.upsert_under_lock(k, v, op);
+            } else {
+                // One shared scan of the group's common front-yard bucket
+                // (one tag-block probe for the metadata variant).
+                let mut free = if let Some(meta) = &self.fmeta {
+                    tags.clear();
+                    tags.extend(group.iter().map(|&i| tag16(pairs_in[i as usize].0)));
+                    meta.scan_group(fb, &tags, strong, &mut per_tag).0
+                } else {
+                    group_keys.clear();
+                    group_keys.extend(group.iter().map(|&i| pairs_in[i as usize].0));
+                    self.front
+                        .scan_bucket_group(fb, &group_keys, strong, &mut found)
+                        .0
+                };
+                let mut local: Vec<(u64, usize)> = Vec::new();
+                let mut fallback_keys: Vec<u64> = Vec::new();
+                for (j, &i) in group.iter().enumerate() {
+                    let (k, v) = pairs_in[i as usize];
+                    debug_assert!(crate::gpusim::mem::is_user_key(k));
+                    if let Some(&(_, slot)) = local.iter().find(|&&(lk, _)| lk == k) {
+                        let (_, old) = self.front.pair_at(fb, slot, strong);
+                        self.apply_existing(&self.front, fb, slot, old, v, op);
+                        out[base + i as usize] = UpsertResult::Updated;
+                        continue;
+                    }
+                    if fallback_keys.contains(&k) {
+                        out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                        continue;
+                    }
+                    let front_hit = if self.fmeta.is_some() {
+                        self.front.scan_slots(fb, per_tag[j].match_slots(), k, strong)
+                    } else {
+                        found[j]
+                    };
+                    if let Some((slot, _)) = front_hit {
+                        // Fresh value read: the shared scan may predate
+                        // merges applied earlier in this group.
+                        let (_, old) = self.front.pair_at(fb, slot, strong);
+                        self.apply_existing(&self.front, fb, slot, old, v, op);
+                        out[base + i as usize] = UpsertResult::Updated;
+                        continue;
+                    }
+                    // Not in the front yard — the key may still live in
+                    // the back yard (no early exit exists for iceberg).
+                    let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
+                    if let Some((bb, slot, old)) = self.locate_back(k, tag, strong) {
+                        self.apply_existing(&self.back, bb, slot, old, v, op);
+                        out[base + i as usize] = UpsertResult::Updated;
+                        continue;
+                    }
+                    // Absent: front yard first, from the shared free
+                    // list; overflow to the back yard via the fallback.
+                    if let Some(slot) = self.claim_front_from(fb, &mut free, k, v) {
+                        self.live.fetch_add(1, Ordering::Relaxed);
+                        local.push((k, slot));
+                        out[base + i as usize] = UpsertResult::Inserted;
+                        continue;
+                    }
+                    out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                    fallback_keys.push(k);
+                }
+            }
+            if locking {
+                self.locks.unlock(fb);
+            }
+        });
+    }
+
+    fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), None);
+        let buckets: Vec<usize> = keys_in.iter().map(|&k| self.front_bucket(k)).collect();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |fb, group| {
+            if group.len() == 1 {
+                let i = group[0] as usize;
+                out[base + i] = self.query(keys_in[i]);
+                return;
+            }
+            if let Some(meta) = &self.fmeta {
+                tags.clear();
+                tags.extend(group.iter().map(|&i| tag16(keys_in[i as usize])));
+                meta.scan_group(fb, &tags, strong, &mut per_tag);
+            } else {
+                group_keys.clear();
+                group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
+                self.front.scan_bucket_group(fb, &group_keys, strong, &mut found);
+            }
+            for (j, &i) in group.iter().enumerate() {
+                let k = keys_in[i as usize];
+                let front_hit = if self.fmeta.is_some() {
+                    self.front
+                        .scan_slots(fb, per_tag[j].match_slots(), k, strong)
+                        .map(|(_, v)| v)
+                } else {
+                    found[j].map(|(_, v)| v)
+                };
+                out[base + i as usize] = front_hit.or_else(|| {
+                    let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
+                    self.locate_back(k, tag, strong).map(|(_, _, v)| v)
+                });
+            }
+        });
+    }
+
+    fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), false);
+        let buckets: Vec<usize> = keys_in.iter().map(|&k| self.front_bucket(k)).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |fb, group| {
+            if locking {
+                self.locks.lock(fb);
+            }
+            if group.len() == 1 {
+                let i = group[0] as usize;
+                out[base + i] = self.erase_under_lock(keys_in[i]);
+            } else {
+                if self.fmeta.is_some() {
+                    tags.clear();
+                    tags.extend(group.iter().map(|&i| tag16(keys_in[i as usize])));
+                    self.fmeta
+                        .as_ref()
+                        .unwrap()
+                        .scan_group(fb, &tags, strong, &mut per_tag);
+                } else {
+                    group_keys.clear();
+                    group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
+                    self.front.scan_bucket_group(fb, &group_keys, strong, &mut found);
+                }
+                let mut processed: Vec<u64> = Vec::new();
+                for (j, &i) in group.iter().enumerate() {
+                    let k = keys_in[i as usize];
+                    if processed.contains(&k) {
+                        out[base + i as usize] = self.erase_under_lock(k);
+                        continue;
+                    }
+                    processed.push(k);
+                    let front_hit = if self.fmeta.is_some() {
+                        self.front.scan_slots(fb, per_tag[j].match_slots(), k, strong)
+                    } else {
+                        found[j]
+                    };
+                    out[base + i as usize] = if let Some((slot, _)) = front_hit {
+                        self.kill_in(&self.front, fb, slot, k);
+                        true
+                    } else {
+                        let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
+                        match self.locate_back(k, tag, strong) {
+                            Some((bb, slot, _)) => {
+                                self.kill_in(&self.back, bb, slot, k);
+                                true
+                            }
+                            None => false,
+                        }
+                    };
+                }
+            }
+            if locking {
+                self.locks.unlock(fb);
+            }
+        });
     }
 
     fn num_buckets(&self) -> usize {
@@ -390,6 +631,26 @@ mod tests {
                 "low-load key must sit in the front yard"
             );
         }
+    }
+
+    #[test]
+    fn bulk_matches_scalar_twin() {
+        check_bulk_parity(&plain(2048), &plain(2048), 0x33);
+        check_bulk_parity(&meta(2048), &meta(2048), 0x34);
+    }
+
+    #[test]
+    fn bulk_parity_with_backyard_overflow() {
+        // Tiny front yards overflow into the back yard; the grouped path
+        // must keep finding and erasing back-yard residents.
+        check_bulk_parity(&plain(256), &plain(256), 0x35);
+        check_bulk_parity(&meta(256), &meta(256), 0x36);
+    }
+
+    #[test]
+    fn bulk_concurrent_no_duplicates() {
+        check_bulk_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
+        check_bulk_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::common::FreeSlots;
 use crate::gpusim::probes;
 use crate::hash::{TAG_EMPTY, TAG_TOMBSTONE};
 
@@ -163,6 +164,71 @@ impl MetaArray {
             slot += lanes;
         }
         r
+    }
+
+    /// Grouped tag scan: ONE load pass over the bucket's tag words — one
+    /// metadata probe for the whole batch group instead of one per op —
+    /// serving every tag in `tags` simultaneously. `per_tag[i]` receives
+    /// only the match slots for `tags[i]` (its summary fields stay
+    /// zeroed); the shared bucket summary (free-slot list, fill) is
+    /// returned once since it is identical for every member of the group.
+    pub fn scan_group(
+        &self,
+        bucket: usize,
+        tags: &[u16],
+        strong: bool,
+        per_tag: &mut Vec<MetaScan>,
+    ) -> (FreeSlots, usize) {
+        self.touch_bucket(bucket);
+        let ord = if strong {
+            Ordering::Acquire
+        } else {
+            Ordering::Relaxed
+        };
+        per_tag.clear();
+        per_tag.resize(tags.len(), MetaScan::default());
+        let bcasts: Vec<u64> = tags.iter().map(|&t| bcast(t)).collect();
+        let tomb_b = bcast(TAG_TOMBSTONE);
+        let mut free = FreeSlots::default();
+        let mut fill = 0usize;
+        let mut slot = 0usize;
+        for w in 0..self.words_per_bucket {
+            let word = self.words[self.word_idx(bucket, w)].load(ord);
+            let lanes = LANES.min(self.bucket_size - slot);
+            // Shared per-word classification (same SWAR prefilter as the
+            // scalar scan: fully-occupied words skip the lane loop).
+            if any_lane_zero(word) || any_lane_zero(word ^ tomb_b) || lanes < LANES {
+                for lane in 0..lanes {
+                    let t = lane_get(word, lane);
+                    if t == TAG_EMPTY {
+                        free.push_empty(slot + lane);
+                    } else if t == TAG_TOMBSTONE {
+                        free.push_tombstone(slot + lane);
+                    } else {
+                        fill += 1;
+                    }
+                }
+            } else {
+                fill += lanes;
+            }
+            // Per-tag match detection, prefiltered per word.
+            for (gi, &tb) in bcasts.iter().enumerate() {
+                if any_lane_zero(word ^ tb) {
+                    let tag = tags[gi];
+                    for lane in 0..lanes {
+                        if lane_get(word, lane) == tag {
+                            let ms = &mut per_tag[gi];
+                            if ms.n_matches < ms.matches.len() {
+                                ms.matches[ms.n_matches] = (slot + lane) as u16;
+                            }
+                            ms.n_matches += 1;
+                        }
+                    }
+                }
+            }
+            slot += lanes;
+        }
+        (free, fill)
     }
 
     /// CAS-claim a tag slot: `EMPTY→tag` (or `TOMBSTONE→tag` when
@@ -334,6 +400,32 @@ mod tests {
         // Bucket is full: the pad lane must NOT be reported as empty.
         assert_eq!(sc.first_empty, None);
         assert_eq!(sc.fill, 7);
+    }
+
+    #[test]
+    fn group_scan_matches_scalar_and_costs_one_probe() {
+        probes::set_enabled(true);
+        let m = MetaArray::new(4, 32);
+        assert!(m.try_claim(1, 3, 0x1234, false));
+        assert!(m.try_claim(1, 7, 0x1234, false));
+        assert!(m.try_claim(1, 9, 0x9999, false));
+        m.kill(1, 9);
+        assert!(m.try_claim(1, 10, 0x4242, false));
+        let tags = vec![0x1234u16, 0x4242, 0x7777, 0x1234];
+        let mut per_tag = Vec::new();
+        let s = ProbeScope::begin();
+        let (mut free, fill) = m.scan_group(1, &tags, true, &mut per_tag);
+        assert_eq!(s.finish(), 1, "whole group = one tag-block probe");
+        assert_eq!(per_tag[0].match_slots().collect::<Vec<_>>(), vec![3, 7]);
+        assert_eq!(per_tag[1].match_slots().collect::<Vec<_>>(), vec![10]);
+        assert_eq!(per_tag[2].n_matches, 0);
+        assert_eq!(per_tag[3].match_slots().collect::<Vec<_>>(), vec![3, 7]);
+        // Shared summary agrees with the scalar scan.
+        let scalar = m.scan(1, 0x7777, true);
+        assert_eq!(fill, scalar.fill);
+        assert!(free.had_empty());
+        assert_eq!(free.next_free(), Some(9), "tombstone handed out first");
+        assert_eq!(free.next_free(), scalar.first_empty);
     }
 
     #[test]

@@ -122,6 +122,39 @@ pub trait ConcurrentMap: Send + Sync {
     /// Remove a key. Returns true if it was present.
     fn erase(&self, key: u64) -> bool;
 
+    /// Bulk upsert: apply the `(key, val)` pairs in slice order under one
+    /// policy, appending one result per pair to `out`. Semantically
+    /// identical to calling [`ConcurrentMap::upsert`] in a loop — in-batch
+    /// per-key order is preserved, duplicate keys included. Native
+    /// overrides group the batch by primary bucket so one lock
+    /// acquisition and one shared bucket scan serve every op that hashes
+    /// there (the warp-cooperative bulk-kernel analog).
+    fn upsert_bulk(&self, pairs: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
+        out.reserve(pairs.len());
+        for &(k, v) in pairs {
+            out.push(self.upsert(k, v, op));
+        }
+    }
+
+    /// Bulk lock-free point query: appends one result per key to `out`,
+    /// in slice order.
+    fn query_bulk(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        out.reserve(keys.len());
+        for &k in keys {
+            out.push(self.query(k));
+        }
+    }
+
+    /// Bulk erase: appends one result per key to `out`, preserving
+    /// in-batch per-key order (duplicates: first hit erases, later ones
+    /// report false).
+    fn erase_bulk(&self, keys: &[u64], out: &mut Vec<bool>) {
+        out.reserve(keys.len());
+        for &k in keys {
+            out.push(self.erase(k));
+        }
+    }
+
     /// Number of buckets (adversarial-benchmark extension).
     fn num_buckets(&self) -> usize;
 
@@ -206,6 +239,23 @@ impl TableKind {
         TableKind::Chaining,
     ];
 
+    /// Every variant the factory can build (round-trip + factory tests).
+    pub const ALL: [TableKind; 13] = [
+        TableKind::Double,
+        TableKind::DoubleMeta,
+        TableKind::P2,
+        TableKind::P2Meta,
+        TableKind::Iceberg,
+        TableKind::IcebergMeta,
+        TableKind::Cuckoo,
+        TableKind::Chaining,
+        TableKind::Linear,
+        TableKind::SlabHashLike,
+        TableKind::WarpcoreLike,
+        TableKind::BchtStatic,
+        TableKind::P2bhtStatic,
+    ];
+
     /// Stable designs (everything but cuckoo among the concurrent set).
     pub const STABLE: [TableKind; 7] = [
         TableKind::Double,
@@ -246,10 +296,10 @@ impl TableKind {
             "cuckoo" | "cuckooht" => TableKind::Cuckoo,
             "chaining" | "chaininght" => TableKind::Chaining,
             "linear" | "linearht" => TableKind::Linear,
-            "slabhash" | "slabhash_like" => TableKind::SlabHashLike,
-            "warpcore" | "warpcore_like" => TableKind::WarpcoreLike,
-            "bcht" => TableKind::BchtStatic,
-            "p2bht" => TableKind::P2bhtStatic,
+            "slabhash" | "slabhash_like" | "slabhash-like" => TableKind::SlabHashLike,
+            "warpcore" | "warpcore_like" | "warpcore-like" => TableKind::WarpcoreLike,
+            "bcht" | "bcht(bght)" => TableKind::BchtStatic,
+            "p2bht" | "p2bht(bght)" => TableKind::P2bhtStatic,
             _ => return None,
         };
         Some(t)
@@ -338,6 +388,29 @@ impl TableConfig {
     }
 }
 
+/// Stable grouping of a batch by bucket, shared by every native bulk
+/// implementation: sorts the indices `0..buckets.len()` by
+/// `(bucket, arrival index)` and invokes `f(bucket, indices)` once per
+/// distinct bucket. Arrival order is preserved within each group, which
+/// is what keeps in-batch per-key operation order intact (same key ⇒
+/// same primary bucket ⇒ same group).
+pub(crate) fn for_each_bucket_group(buckets: &[usize], mut f: impl FnMut(usize, &[u32])) {
+    let n = buckets.len();
+    debug_assert!(n <= u32::MAX as usize, "batch too large for u32 indices");
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by_key(|&i| (buckets[i as usize], i));
+    let mut g = 0usize;
+    while g < n {
+        let b = buckets[order[g] as usize];
+        let mut e = g + 1;
+        while e < n && buckets[order[e] as usize] == b {
+            e += 1;
+        }
+        f(b, &order[g..e]);
+        g = e;
+    }
+}
+
 /// Build a table of the given design with its paper-default geometry.
 pub fn build_table(kind: TableKind, slots: usize) -> Arc<dyn ConcurrentMap> {
     build_table_with(kind, TableConfig::for_kind(kind, slots))
@@ -372,9 +445,23 @@ mod tests {
 
     #[test]
     fn kind_roundtrip_names() {
-        for k in TableKind::CONCURRENT {
+        // Every variant's paper name must parse back to the same kind —
+        // the CLI accepts paper names, so any asymmetry here makes a
+        // design unreachable from the command line.
+        for k in TableKind::ALL {
             let n = k.paper_name();
             assert_eq!(TableKind::from_name(n), Some(k), "{n}");
+        }
+    }
+
+    #[test]
+    fn all_list_is_exhaustive_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for k in TableKind::ALL {
+            assert!(seen.insert(k), "{k:?} listed twice");
+        }
+        for k in TableKind::CONCURRENT {
+            assert!(seen.contains(&k), "{k:?} missing from ALL");
         }
     }
 
@@ -398,20 +485,7 @@ mod tests {
 
     #[test]
     fn factory_builds_all_kinds() {
-        for k in [
-            TableKind::Double,
-            TableKind::DoubleMeta,
-            TableKind::P2,
-            TableKind::P2Meta,
-            TableKind::Iceberg,
-            TableKind::IcebergMeta,
-            TableKind::Cuckoo,
-            TableKind::Chaining,
-            TableKind::SlabHashLike,
-            TableKind::WarpcoreLike,
-            TableKind::BchtStatic,
-            TableKind::P2bhtStatic,
-        ] {
+        for k in TableKind::ALL {
             let t = build_table(k, 4096);
             assert!(t.capacity() >= 1024, "{:?} too small", k);
             assert!(t.num_buckets() > 0);

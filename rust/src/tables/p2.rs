@@ -15,8 +15,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::common::{bucket_count_for, Pairs};
-use super::meta::MetaArray;
+use super::common::{bucket_count_for, FreeSlots, Pairs};
+use super::meta::{MetaArray, MetaScan};
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 use crate::gpusim::race::RaceEvent;
 use crate::gpusim::LockArray;
@@ -171,16 +171,12 @@ impl P2Ht {
             }
         }
     }
-}
 
-impl ConcurrentMap for P2Ht {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
-        debug_assert!(crate::gpusim::mem::is_user_key(key));
+    /// Scalar upsert body; the caller holds b1's lock (in locking modes).
+    /// Shared by the scalar API and the bulk path's fallback.
+    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
         let [b1, b2] = self.buckets_of(key);
         let tag = self.tag_of(key);
-        if self.mode.locking() {
-            self.locks.lock(b1);
-        }
         let strong = self.mode.strong();
         let mut res = UpsertResult::Full;
         'done: {
@@ -228,6 +224,59 @@ impl ConcurrentMap for P2Ht {
                 }
             }
         }
+        res
+    }
+
+    /// Scalar erase body; caller holds b1's lock.
+    fn erase_under_lock(&self, key: u64) -> bool {
+        let [b1, b2] = self.buckets_of(key);
+        let strong = self.mode.strong();
+        let tag = self.tag_of(key);
+        let buckets: &[usize] = if self.overflowed(b1) { &[b1, b2] } else { &[b1] };
+        for &b in buckets {
+            if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                self.kill_at(b, slot, key);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Tombstone a located pair (+ its tag) and account the deletion.
+    fn kill_at(&self, b: usize, slot: usize, key: u64) {
+        self.pairs.kill(b, slot);
+        if let Some(meta) = &self.meta {
+            meta.kill(b, slot);
+        }
+        self.live.fetch_sub(1, Ordering::Relaxed);
+        self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+    }
+
+    /// Claim + publish from a group's shared free-slot list (shared
+    /// protocol in [`super::common::claim_from_free`]); `None` when the
+    /// scan-time list is exhausted (the caller re-walks scalar-style).
+    fn claim_from(&self, b: usize, free: &mut FreeSlots, key: u64, val: u64) -> Option<usize> {
+        super::common::claim_from_free(
+            &self.pairs,
+            self.meta.as_ref(),
+            b,
+            free,
+            key,
+            val,
+            self.tag_of(key),
+            self.hook.as_ref(),
+        )
+    }
+}
+
+impl ConcurrentMap for P2Ht {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let b1 = self.buckets_of(key)[0];
+        if self.mode.locking() {
+            self.locks.lock(b1);
+        }
+        let res = self.upsert_under_lock(key, val, op);
         if self.mode.locking() {
             self.locks.unlock(b1);
         }
@@ -249,30 +298,213 @@ impl ConcurrentMap for P2Ht {
     }
 
     fn erase(&self, key: u64) -> bool {
-        let [b1, b2] = self.buckets_of(key);
+        let b1 = self.buckets_of(key)[0];
         if self.mode.locking() {
             self.locks.lock(b1);
         }
-        let strong = self.mode.strong();
-        let mut hit = false;
-        let tag = self.tag_of(key);
-        let buckets: &[usize] = if self.overflowed(b1) { &[b1, b2] } else { &[b1] };
-        for &b in buckets {
-            if let Some((slot, _)) = self.view(b, key, tag, strong).found {
-                self.pairs.kill(b, slot);
-                if let Some(meta) = &self.meta {
-                    meta.kill(b, slot);
-                }
-                self.live.fetch_sub(1, Ordering::Relaxed);
-                self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
-                hit = true;
-                break;
-            }
-        }
+        let hit = self.erase_under_lock(key);
         if self.mode.locking() {
             self.locks.unlock(b1);
         }
         hit
+    }
+
+    fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
+        let base = out.len();
+        out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let buckets: Vec<usize> =
+            pairs_in.iter().map(|&(k, _)| self.buckets_of(k)[0]).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |b1, group| {
+            if locking {
+                self.locks.lock(b1);
+            }
+            if group.len() == 1 {
+                let (k, v) = pairs_in[group[0] as usize];
+                debug_assert!(crate::gpusim::mem::is_user_key(k));
+                out[base + group[0] as usize] = self.upsert_under_lock(k, v, op);
+            } else {
+                // One shared scan of the group's common primary bucket.
+                let (mut free, fill) = if let Some(meta) = &self.meta {
+                    tags.clear();
+                    tags.extend(group.iter().map(|&i| tag16(pairs_in[i as usize].0)));
+                    meta.scan_group(b1, &tags, strong, &mut per_tag)
+                } else {
+                    group_keys.clear();
+                    group_keys.extend(group.iter().map(|&i| pairs_in[i as usize].0));
+                    self.pairs.scan_bucket_group(b1, &group_keys, strong, &mut found)
+                };
+                let mut local_fill = fill;
+                let mut local: Vec<(u64, usize)> = Vec::new();
+                let mut fallback_keys: Vec<u64> = Vec::new();
+                for (j, &i) in group.iter().enumerate() {
+                    let (k, v) = pairs_in[i as usize];
+                    debug_assert!(crate::gpusim::mem::is_user_key(k));
+                    if let Some(&(_, slot)) = local.iter().find(|&&(lk, _)| lk == k) {
+                        let (_, old) = self.pairs.pair_at(b1, slot, strong);
+                        self.apply_existing(b1, slot, old, v, op);
+                        out[base + i as usize] = UpsertResult::Updated;
+                        continue;
+                    }
+                    if fallback_keys.contains(&k) {
+                        out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                        continue;
+                    }
+                    let hit = if self.meta.is_some() {
+                        self.pairs.scan_slots(b1, per_tag[j].match_slots(), k, strong)
+                    } else {
+                        found[j]
+                    };
+                    if let Some((slot, _)) = hit {
+                        // Fresh value read: the shared scan may predate
+                        // merges applied earlier in this very group.
+                        let (_, old) = self.pairs.pair_at(b1, slot, strong);
+                        self.apply_existing(b1, slot, old, v, op);
+                        out[base + i as usize] = UpsertResult::Updated;
+                        continue;
+                    }
+                    // Shortcut fast path (§2.2), batch form: while b1's
+                    // sticky overflow bit is clear no key of b1 can live
+                    // in b2, so a miss in the shared b1 scan proves
+                    // absence; insert into b1 without loading b2. The
+                    // fill guard tracks this group's own inserts.
+                    if !self.overflowed(b1) && local_fill < self.shortcut_limit {
+                        if let Some(slot) = self.claim_from(b1, &mut free, k, v) {
+                            self.live.fetch_add(1, Ordering::Relaxed);
+                            local_fill += 1;
+                            local.push((k, slot));
+                            out[base + i as usize] = UpsertResult::Inserted;
+                            continue;
+                        }
+                    }
+                    // Overflowed / crowded primary: full two-choice walk.
+                    out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                    fallback_keys.push(k);
+                }
+            }
+            if locking {
+                self.locks.unlock(b1);
+            }
+        });
+    }
+
+    fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), None);
+        let buckets: Vec<usize> = keys_in.iter().map(|&k| self.buckets_of(k)[0]).collect();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |b1, group| {
+            if group.len() == 1 {
+                let i = group[0] as usize;
+                out[base + i] = self.query(keys_in[i]);
+                return;
+            }
+            if let Some(meta) = &self.meta {
+                tags.clear();
+                tags.extend(group.iter().map(|&i| tag16(keys_in[i as usize])));
+                meta.scan_group(b1, &tags, strong, &mut per_tag);
+                for (j, &i) in group.iter().enumerate() {
+                    let k = keys_in[i as usize];
+                    out[base + i as usize] =
+                        match self.pairs.scan_slots(b1, per_tag[j].match_slots(), k, strong) {
+                            Some((_, v)) => Some(v),
+                            // No key of b1 has ever overflowed into its
+                            // alternate: a miss in b1 is a table miss.
+                            None if !self.overflowed(b1) => None,
+                            None => self
+                                .view(self.buckets_of(k)[1], k, tags[j], strong)
+                                .found
+                                .map(|(_, v)| v),
+                        };
+                }
+            } else {
+                group_keys.clear();
+                group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
+                self.pairs.scan_bucket_group(b1, &group_keys, strong, &mut found);
+                for (j, &i) in group.iter().enumerate() {
+                    let k = keys_in[i as usize];
+                    out[base + i as usize] = match found[j] {
+                        Some((_, v)) => Some(v),
+                        None if !self.overflowed(b1) => None,
+                        None => self
+                            .view(self.buckets_of(k)[1], k, 0, strong)
+                            .found
+                            .map(|(_, v)| v),
+                    };
+                }
+            }
+        });
+    }
+
+    fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), false);
+        let buckets: Vec<usize> = keys_in.iter().map(|&k| self.buckets_of(k)[0]).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        let mut tags: Vec<u16> = Vec::new();
+        let mut per_tag: Vec<MetaScan> = Vec::new();
+        let mut found: Vec<Option<(usize, u64)>> = Vec::new();
+        let mut group_keys: Vec<u64> = Vec::new();
+        super::for_each_bucket_group(&buckets, |b1, group| {
+            if locking {
+                self.locks.lock(b1);
+            }
+            if group.len() == 1 {
+                let i = group[0] as usize;
+                out[base + i] = self.erase_under_lock(keys_in[i]);
+            } else {
+                if self.meta.is_some() {
+                    tags.clear();
+                    tags.extend(group.iter().map(|&i| tag16(keys_in[i as usize])));
+                    self.meta
+                        .as_ref()
+                        .unwrap()
+                        .scan_group(b1, &tags, strong, &mut per_tag);
+                } else {
+                    group_keys.clear();
+                    group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
+                    self.pairs.scan_bucket_group(b1, &group_keys, strong, &mut found);
+                }
+                let mut processed: Vec<u64> = Vec::new();
+                for (j, &i) in group.iter().enumerate() {
+                    let k = keys_in[i as usize];
+                    if processed.contains(&k) {
+                        out[base + i as usize] = self.erase_under_lock(k);
+                        continue;
+                    }
+                    processed.push(k);
+                    let hit = if self.meta.is_some() {
+                        self.pairs.scan_slots(b1, per_tag[j].match_slots(), k, strong)
+                    } else {
+                        found[j]
+                    };
+                    out[base + i as usize] = match hit {
+                        Some((slot, _)) => {
+                            self.kill_at(b1, slot, k);
+                            true
+                        }
+                        // Miss in b1 with the overflow bit clear: the key
+                        // cannot be in b2, and under b1's lock it cannot
+                        // appear concurrently.
+                        None if !self.overflowed(b1) => false,
+                        None => self.erase_under_lock(k),
+                    };
+                }
+            }
+            if locking {
+                self.locks.unlock(b1);
+            }
+        });
     }
 
     fn num_buckets(&self) -> usize {
@@ -426,5 +658,31 @@ mod tests {
             false,
         );
         check_fill_to(&t, 0.85);
+    }
+
+    #[test]
+    fn bulk_matches_scalar_twin() {
+        check_bulk_parity(&plain(2048), &plain(2048), 0x23);
+        check_bulk_parity(&meta(2048), &meta(2048), 0x24);
+    }
+
+    #[test]
+    fn bulk_parity_with_overflowed_buckets() {
+        // Tiny tables force alternate-bucket placement, exercising the
+        // overflow-bit interplay with the grouped shortcut.
+        check_bulk_parity(&plain(256), &plain(256), 0x25);
+        check_bulk_parity(&meta(256), &meta(256), 0x26);
+    }
+
+    #[test]
+    fn bulk_parity_without_shortcut() {
+        let mk = || P2Ht::with_shortcut(TableConfig::new(1024).with_geometry(32, 8), false, false);
+        check_bulk_parity(&mk(), &mk(), 0x27);
+    }
+
+    #[test]
+    fn bulk_concurrent_no_duplicates() {
+        check_bulk_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
+        check_bulk_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
     }
 }

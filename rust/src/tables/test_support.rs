@@ -272,6 +272,121 @@ pub fn check_fetch_add_in_place(t: &dyn ConcurrentMap) {
     assert_eq!(f64::from_bits(t.query(k).unwrap()), 3.0);
 }
 
+/// Drive `bulk_t` through the bulk APIs and `scalar_t` (a fresh table of
+/// the same design/size) through the scalar APIs with the same stream of
+/// homogeneous runs — the shape the coordinator produces after
+/// run-splitting — over a small universe so batches are full of
+/// duplicate keys. Every per-op result must match, and both tables must
+/// agree with a `HashMap` oracle at the end.
+pub fn check_bulk_parity(bulk_t: &dyn ConcurrentMap, scalar_t: &dyn ConcurrentMap, seed: u64) {
+    let mut rng = Xoshiro256pp::new(seed);
+    let universe = keys(96, seed ^ 0xB17C);
+    let mut oracle: HashMap<u64, u64> = HashMap::new();
+    let draw = |rng: &mut Xoshiro256pp| universe[rng.next_below(96) as usize];
+    for round in 0..80 {
+        let len = 1 + rng.next_below(48) as usize;
+        match rng.next_below(4) {
+            0 | 1 => {
+                let accumulate = rng.next_below(2) == 0;
+                let op = if accumulate {
+                    UpsertOp::AddAssign
+                } else {
+                    UpsertOp::Overwrite
+                };
+                let pairs: Vec<(u64, u64)> = (0..len)
+                    .map(|_| (draw(&mut rng), rng.next_below(1_000)))
+                    .collect();
+                let mut bulk_res = Vec::new();
+                bulk_t.upsert_bulk(&pairs, &op, &mut bulk_res);
+                assert_eq!(bulk_res.len(), pairs.len());
+                for (i, &(k, v)) in pairs.iter().enumerate() {
+                    let want = scalar_t.upsert(k, v, &op);
+                    assert_eq!(
+                        bulk_res[i], want,
+                        "{}: round {round} upsert #{i} key {k:#x}",
+                        bulk_t.name()
+                    );
+                    if accumulate {
+                        oracle
+                            .entry(k)
+                            .and_modify(|x| *x = x.wrapping_add(v))
+                            .or_insert(v);
+                    } else {
+                        oracle.insert(k, v);
+                    }
+                }
+            }
+            2 => {
+                let ks: Vec<u64> = (0..len).map(|_| draw(&mut rng)).collect();
+                let mut bulk_res = Vec::new();
+                bulk_t.query_bulk(&ks, &mut bulk_res);
+                assert_eq!(bulk_res.len(), ks.len());
+                for (i, &k) in ks.iter().enumerate() {
+                    assert_eq!(
+                        bulk_res[i],
+                        oracle.get(&k).copied(),
+                        "{}: round {round} query #{i} key {k:#x}",
+                        bulk_t.name()
+                    );
+                    assert_eq!(bulk_res[i], scalar_t.query(k));
+                }
+            }
+            _ => {
+                let ks: Vec<u64> = (0..len).map(|_| draw(&mut rng)).collect();
+                let mut bulk_res = Vec::new();
+                bulk_t.erase_bulk(&ks, &mut bulk_res);
+                assert_eq!(bulk_res.len(), ks.len());
+                for (i, &k) in ks.iter().enumerate() {
+                    let want = scalar_t.erase(k);
+                    assert_eq!(
+                        bulk_res[i], want,
+                        "{}: round {round} erase #{i} key {k:#x}",
+                        bulk_t.name()
+                    );
+                    assert_eq!(bulk_res[i], oracle.remove(&k).is_some());
+                }
+            }
+        }
+    }
+    // Final state audit: bulk table ≡ oracle ≡ scalar twin.
+    assert_eq!(bulk_t.len(), oracle.len(), "{}", bulk_t.name());
+    for &k in &universe {
+        assert_eq!(bulk_t.query(k), oracle.get(&k).copied(), "{}", bulk_t.name());
+        assert!(bulk_t.count_copies(k) <= 1, "{}: duplicate {k:#x}", bulk_t.name());
+    }
+}
+
+/// Hammer the same key set through `upsert_bulk` from several threads;
+/// every key must end up with exactly one copy (the §4.1 guarantee must
+/// survive the grouped fast path's shared free-slot claims).
+pub fn check_bulk_concurrent_no_duplicates(t: Arc<dyn ConcurrentMap>) {
+    let ks = Arc::new(keys(512, 0xB07C));
+    let n_threads = 4;
+    let mut hs = vec![];
+    for tid in 0..n_threads {
+        let t = Arc::clone(&t);
+        let ks = Arc::clone(&ks);
+        hs.push(thread::spawn(move || {
+            let mut order: Vec<usize> = (0..ks.len()).collect();
+            let mut rng = Xoshiro256pp::new(tid as u64);
+            rng.shuffle(&mut order);
+            let pairs: Vec<(u64, u64)> = order.iter().map(|&i| (ks[i], i as u64)).collect();
+            let mut res = Vec::new();
+            for chunk in pairs.chunks(64) {
+                t.upsert_bulk(chunk, &UpsertOp::InsertIfUnique, &mut res);
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    for (i, &k) in ks.iter().enumerate() {
+        assert_eq!(t.count_copies(k), 1, "key {i} duplicated");
+        assert_eq!(t.query(k), Some(i as u64));
+    }
+    assert_eq!(t.len(), ks.len());
+}
+
 /// Random op stream checked against `std::collections::HashMap`.
 pub fn check_vs_oracle(t: &dyn ConcurrentMap, seed: u64) {
     let mut rng = Xoshiro256pp::new(seed);

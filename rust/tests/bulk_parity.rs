@@ -1,0 +1,186 @@
+//! Bulk-vs-scalar oracle property (the batch-native pipeline's
+//! correctness contract): for every one of the eight concurrent designs,
+//! driving the bulk API with coordinator-shaped batches — mixed
+//! upsert/accumulate/query/erase ops over a tiny universe, so batches
+//! are full of duplicate keys — produces results identical to a scalar
+//! twin table driven op-by-op, and both agree with a `HashMap` oracle
+//! (the `coordinator_e2e` oracle pattern).
+
+use std::collections::HashMap;
+
+use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult};
+use warpspeed::prng::Xoshiro256pp;
+use warpspeed::tables::{build_table, TableKind, UpsertOp, UpsertResult};
+use warpspeed::workloads::keys::distinct_keys;
+
+/// Op classes mirror `coordinator::exec`'s run splitting: a mixed batch
+/// executes as maximal same-class runs, each dispatched as one bulk call.
+#[derive(Clone, Copy, PartialEq)]
+enum Class {
+    Put,
+    Add,
+    Get,
+    Del,
+}
+
+fn gen_batch(rng: &mut Xoshiro256pp, universe: &[u64], len: usize) -> Vec<(Class, u64, u64)> {
+    (0..len)
+        .map(|_| {
+            let k = universe[rng.next_below(universe.len() as u64) as usize];
+            match rng.next_below(4) {
+                0 => (Class::Put, k, rng.next_below(1_000)),
+                1 => (Class::Add, k, rng.next_below(100)),
+                2 => (Class::Get, k, 0),
+                _ => (Class::Del, k, 0),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn bulk_matches_scalar_oracle_for_all_eight_designs() {
+    for kind in TableKind::CONCURRENT {
+        let bulk_t = build_table(kind, 4096);
+        let scalar_t = build_table(kind, 4096);
+        let mut oracle: HashMap<u64, u64> = HashMap::new();
+        let mut rng = Xoshiro256pp::new(0xB01C ^ kind as u64);
+        let universe = distinct_keys(64, 0xB02C ^ kind as u64);
+        for round in 0..40 {
+            let batch = gen_batch(&mut rng, &universe, 256);
+            // Split into maximal same-class runs, dispatch each as ONE
+            // bulk call — exactly what the coordinator executor does.
+            let mut s = 0;
+            while s < batch.len() {
+                let class = batch[s].0;
+                let mut e = s + 1;
+                while e < batch.len() && batch[e].0 == class {
+                    e += 1;
+                }
+                let run = &batch[s..e];
+                match class {
+                    Class::Put | Class::Add => {
+                        let op = if class == Class::Put {
+                            UpsertOp::Overwrite
+                        } else {
+                            UpsertOp::AddAssign
+                        };
+                        let pairs: Vec<(u64, u64)> =
+                            run.iter().map(|&(_, k, v)| (k, v)).collect();
+                        let mut got: Vec<UpsertResult> = Vec::new();
+                        bulk_t.upsert_bulk(&pairs, &op, &mut got);
+                        assert_eq!(got.len(), pairs.len());
+                        for (i, &(k, v)) in pairs.iter().enumerate() {
+                            let want = scalar_t.upsert(k, v, &op);
+                            assert_eq!(
+                                got[i], want,
+                                "{kind:?}: round {round} upsert #{i} key {k:#x}"
+                            );
+                            if class == Class::Put {
+                                oracle.insert(k, v);
+                            } else {
+                                oracle
+                                    .entry(k)
+                                    .and_modify(|x| *x = x.wrapping_add(v))
+                                    .or_insert(v);
+                            }
+                        }
+                    }
+                    Class::Get => {
+                        let keys: Vec<u64> = run.iter().map(|&(_, k, _)| k).collect();
+                        let mut got: Vec<Option<u64>> = Vec::new();
+                        bulk_t.query_bulk(&keys, &mut got);
+                        assert_eq!(got.len(), keys.len());
+                        for (i, &k) in keys.iter().enumerate() {
+                            assert_eq!(
+                                got[i],
+                                oracle.get(&k).copied(),
+                                "{kind:?}: round {round} query #{i} key {k:#x}"
+                            );
+                            assert_eq!(got[i], scalar_t.query(k), "{kind:?}");
+                        }
+                    }
+                    Class::Del => {
+                        let keys: Vec<u64> = run.iter().map(|&(_, k, _)| k).collect();
+                        let mut got: Vec<bool> = Vec::new();
+                        bulk_t.erase_bulk(&keys, &mut got);
+                        assert_eq!(got.len(), keys.len());
+                        for (i, &k) in keys.iter().enumerate() {
+                            let want = scalar_t.erase(k);
+                            assert_eq!(
+                                got[i], want,
+                                "{kind:?}: round {round} erase #{i} key {k:#x}"
+                            );
+                            assert_eq!(got[i], oracle.remove(&k).is_some(), "{kind:?}");
+                        }
+                    }
+                }
+                s = e;
+            }
+        }
+        // Final-state audit: bulk table ≡ oracle, no duplicate copies.
+        assert_eq!(bulk_t.len(), oracle.len(), "{kind:?}");
+        for &k in &universe {
+            assert_eq!(bulk_t.query(k), oracle.get(&k).copied(), "{kind:?}");
+            assert!(bulk_t.count_copies(k) <= 1, "{kind:?}: duplicate {k:#x}");
+        }
+    }
+}
+
+/// The same property served end-to-end through the coordinator's
+/// batch-native executor (batcher → shard partition → run split → bulk
+/// dispatch), for every concurrent design.
+#[test]
+fn coordinator_bulk_dispatch_matches_oracle_for_all_designs() {
+    for kind in TableKind::CONCURRENT {
+        let c = Coordinator::new(CoordinatorConfig {
+            kind,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 128,
+        });
+        let ks = distinct_keys(64, 0xC0DE ^ kind as u64);
+        let mut oracle: HashMap<u64, u64> = HashMap::new();
+        let mut rng = Xoshiro256pp::new(0xC1DE ^ kind as u64);
+        let mut ops = Vec::new();
+        let mut expected = Vec::new();
+        for _ in 0..4_000 {
+            let k = ks[rng.next_below(64) as usize];
+            match rng.next_below(4) {
+                0 => {
+                    let v = rng.next_below(1_000);
+                    ops.push(Op::Upsert(k, v));
+                    let was_new = oracle.insert(k, v).is_none();
+                    expected.push(OpResult::Upserted(was_new));
+                }
+                1 => {
+                    let v = rng.next_below(100);
+                    ops.push(Op::UpsertAdd(k, v));
+                    match oracle.get_mut(&k) {
+                        Some(x) => {
+                            *x = x.wrapping_add(v);
+                            expected.push(OpResult::Upserted(false));
+                        }
+                        None => {
+                            oracle.insert(k, v);
+                            expected.push(OpResult::Upserted(true));
+                        }
+                    }
+                }
+                2 => {
+                    ops.push(Op::Query(k));
+                    expected.push(OpResult::Value(oracle.get(&k).copied()));
+                }
+                _ => {
+                    ops.push(Op::Erase(k));
+                    expected.push(OpResult::Erased(oracle.remove(&k).is_some()));
+                }
+            }
+        }
+        let got = c.run_stream(ops);
+        assert_eq!(got.len(), expected.len(), "{kind:?}");
+        for (i, (g, w)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(g, w, "{kind:?}: op {i}");
+        }
+    }
+}
