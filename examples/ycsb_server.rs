@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example ycsb_server [universe_size]`
 
-use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op};
+use warpspeed::coordinator::{default_workers, Coordinator, CoordinatorConfig, Op};
 use warpspeed::tables::TableKind;
 use warpspeed::workloads::keys::distinct_keys;
 use warpspeed::workloads::ycsb::{Workload, YcsbOp, YcsbStream};
@@ -20,7 +20,7 @@ fn main() {
             kind,
             total_slots: universe_size * 100 / 85,
             n_shards: 8,
-            n_workers: 2,
+            n_workers: default_workers(),
             max_batch: 4096,
         });
         let universe = distinct_keys(universe_size, 0x4C5B);

@@ -19,6 +19,7 @@ use super::{mops, report, BenchEnv};
 
 /// Ablation 1: shortcut on/off — insert throughput + probes to 30% LF.
 pub fn shortcut_ablation(slots: usize, seed: u64) -> Vec<Vec<String>> {
+    let _measure = probes::measurement_section();
     let mut rows = Vec::new();
     for (label, on) in [("shortcut ON", true), ("shortcut OFF", false)] {
         let cfg = TableConfig::for_kind(TableKind::P2, slots);
@@ -52,6 +53,11 @@ pub fn shortcut_ablation(slots: usize, seed: u64) -> Vec<Vec<String>> {
 }
 
 /// Ablation 2: lock-free concurrent queries vs BSP queries per design.
+///
+/// NOT a measurement section itself: it delegates to
+/// [`super::probes::bsp_comparison`], which holds the (non-reentrant)
+/// [`probes::measurement_section`] guard per call — taking it here too
+/// would self-deadlock.
 pub fn lockfree_query_ablation(slots: usize, seed: u64) -> Vec<Vec<String>> {
     let mut rows = Vec::new();
     for kind in [TableKind::Double, TableKind::P2, TableKind::Iceberg, TableKind::Chaining] {
@@ -69,6 +75,7 @@ pub fn lockfree_query_ablation(slots: usize, seed: u64) -> Vec<Vec<String>> {
 
 /// Ablation 3: publish protocol vs non-atomic pair writes (raw storage).
 pub fn publish_protocol_ablation(n: usize) -> Vec<Vec<String>> {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let nb = (n / 8).next_power_of_two();
     let mk = || Pairs::new(nb, 8, 8);

@@ -15,6 +15,7 @@ use super::{report, BenchEnv};
 
 /// Per-iteration aggregate Mops/s for one design.
 pub fn measure(kind: TableKind, slots: usize, iters: usize, seed: u64) -> Vec<f64> {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let t = build_table(kind, slots);
     let mut d = AgingDriver::new(Arc::clone(&t), iters, seed);

@@ -12,10 +12,13 @@
 //! * **Throughput** (probe recording off): Mops/s for insert / query /
 //!   erase phases, scalar vs bulk, plus speedups.
 //! * **Cost-model counters** (probe recording on, smaller op count):
-//!   lock acquisitions, atomic ops, and cache lines touched. Lines are
-//!   accounted per *launch* — per op for the scalar path, per bulk call
-//!   for the batch path — matching the paper's probe metric where a
-//!   kernel launch fetches each unique line once.
+//!   lock acquisitions, atomic ops, cache lines touched, and bulk bucket
+//!   groups dispatched (all eight designs are bulk-native — open
+//!   addressing groups by primary bucket, CuckooHT by candidate-bucket
+//!   triple, ChainingHT by chain bucket). Lines are accounted per
+//!   *launch* — per op for the scalar path, per bulk call for the batch
+//!   path — matching the paper's probe metric where a kernel launch
+//!   fetches each unique line once.
 //!
 //! Machine-readable JSON rows (always-finite numbers, explicit op
 //! counts) follow the human tables.
@@ -50,9 +53,14 @@ pub struct BulkRow {
     pub bulk_atomics: u64,
     pub scalar_lines_per_op: f64,
     pub bulk_lines_per_op: f64,
+    /// Bucket groups the native bulk paths dispatched (one shared
+    /// scan/chain-walk/lock-hold each); `3 * counter_ops / bulk_groups`
+    /// is the batch's amortization factor. 0 for scalar-fallback designs.
+    pub bulk_groups: u64,
 }
 
 pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
+    let _measure = probes::measurement_section();
     let ins_op = UpsertOp::InsertIfUnique;
     // ---- throughput pass (probe recording off) ----
     probes::set_enabled(false);
@@ -115,6 +123,7 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
     let t = build_table(kind, slots);
     probes::take_lock_acqs();
     probes::take_atomic_ops();
+    probes::take_bulk_groups();
     let mut bulk_lines = 0u64;
     let mut cres_u = Vec::with_capacity(nc);
     let s = ProbeScope::begin();
@@ -130,6 +139,7 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
     bulk_lines += s.finish() as u64;
     let bulk_locks = probes::take_lock_acqs();
     let bulk_atomics = probes::take_atomic_ops();
+    let bulk_groups = probes::take_bulk_groups();
 
     let per_op = (3 * nc).max(1) as f64;
     BulkRow {
@@ -148,6 +158,7 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
         bulk_atomics,
         scalar_lines_per_op: scalar_lines as f64 / per_op,
         bulk_lines_per_op: bulk_lines as f64 / per_op,
+        bulk_groups,
     }
 }
 
@@ -186,6 +197,7 @@ pub fn run(env: &BenchEnv) -> String {
             r.bulk_atomics.to_string(),
             report::fmt_f(r.scalar_lines_per_op, 2),
             report::fmt_f(r.bulk_lines_per_op, 2),
+            r.bulk_groups.to_string(),
         ]);
         json_lines.push_str(&report::json_row(&[
             ("table", JsonVal::Str(r.name)),
@@ -203,6 +215,7 @@ pub fn run(env: &BenchEnv) -> String {
             ("bulk_atomics", JsonVal::Int(r.bulk_atomics)),
             ("scalar_lines_per_op", JsonVal::Num(r.scalar_lines_per_op)),
             ("bulk_lines_per_op", JsonVal::Num(r.bulk_lines_per_op)),
+            ("bulk_bucket_groups", JsonVal::Int(r.bulk_groups)),
         ]));
         json_lines.push('\n');
     }
@@ -226,6 +239,7 @@ pub fn run(env: &BenchEnv) -> String {
             "atomics(bulk)",
             "lines/op",
             "lines/op(bulk)",
+            "groups(bulk)",
         ],
         &cn_rows,
     ));
@@ -241,6 +255,10 @@ mod tests {
 
     #[test]
     fn measure_is_sane_for_meta_design() {
+        // The gpusim counters are thread-local and measure() holds
+        // probes::measurement_section() around its set_enabled toggles,
+        // so parallel tests can neither inflate these counts nor disable
+        // recording mid-pass — the assertions below are exact.
         let r = measure(TableKind::DoubleMeta, 8192, 7);
         assert!(r.ops > 0 && r.counter_ops > 0);
         for m in [
@@ -249,9 +267,7 @@ mod tests {
             assert!(m.is_finite() && m > 0.0, "non-positive Mops");
         }
         // The scalar path acquires one lock per mutating op; grouping can
-        // only reduce that. (Global counters may be inflated by parallel
-        // tests, so only the ordering is asserted, with the exact claim
-        // left to the sequential CLI/bench run.)
+        // only reduce that.
         assert!(
             r.bulk_locks <= r.scalar_locks,
             "bulk locks {} > scalar locks {}",
@@ -260,6 +276,20 @@ mod tests {
         );
         assert!(r.scalar_lines_per_op > 0.0);
         assert!(r.bulk_lines_per_op > 0.0);
+        assert!(r.bulk_groups > 0, "native design must dispatch groups");
+    }
+
+    #[test]
+    fn cuckoo_and_chaining_measure_native_groups() {
+        // The two designs PR 1 left on the scalar fallback now dispatch
+        // real bucket groups through their native bulk paths.
+        for kind in [TableKind::Cuckoo, TableKind::Chaining] {
+            let r = measure(kind, 4096, 11);
+            assert!(r.bulk_groups > 0, "{kind:?} must dispatch groups");
+            for m in [r.bulk_ins, r.bulk_qry, r.bulk_del] {
+                assert!(m.is_finite() && m > 0.0, "{kind:?}: non-positive Mops");
+            }
+        }
     }
 
     #[test]

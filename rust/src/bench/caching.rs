@@ -24,6 +24,7 @@ pub fn measure(
     n_queries: usize,
     seed: u64,
 ) -> Option<(f64, f64, usize)> {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let data = distinct_keys(data_size, seed);
     let table = build_table(kind, ((data_size as f64) * ratio) as usize + 64);

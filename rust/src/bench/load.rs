@@ -20,6 +20,7 @@ pub struct LoadCurves {
 }
 
 pub fn measure(kind: TableKind, slots: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let t = build_table(kind, slots);
     let cap = t.capacity();

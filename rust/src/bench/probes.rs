@@ -40,6 +40,7 @@ impl ProbeRow {
 
 /// Measure load-phase probe counts for one design.
 pub fn load_probes(kind: TableKind, slots: usize, seed: u64) -> (f64, f64, f64) {
+    let _measure = probes::measurement_section();
     probes::set_enabled(true);
     let t = build_table(kind, slots);
     let target = (t.capacity() as f64 * 0.9) as usize;
@@ -67,6 +68,7 @@ pub fn load_probes(kind: TableKind, slots: usize, seed: u64) -> (f64, f64, f64) 
 
 /// Measure aging probe counts (after `iters` churn iterations).
 pub fn aging_probes(kind: TableKind, slots: usize, iters: usize, seed: u64) -> (f64, f64, f64, f64) {
+    let _measure = probes::measurement_section();
     probes::set_enabled(true);
     let t = build_table(kind, slots);
     let mut d = AgingDriver::new(Arc::clone(&t), iters + 4, seed);
@@ -113,6 +115,7 @@ pub fn aging_probes(kind: TableKind, slots: usize, iters: usize, seed: u64) -> (
 /// BSP query throughput comparison at 90% load (§6.2): concurrent vs
 /// phased builds of the same design.
 pub fn bsp_comparison(kind: TableKind, slots: usize, seed: u64) -> (f64, f64) {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let run = |mode: ConcurrencyMode| {
         let cfg = TableConfig::for_kind(kind, slots).with_mode(mode);

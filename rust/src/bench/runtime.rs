@@ -13,6 +13,7 @@ use crate::tables::kernel_table::KernelTable;
 use super::{mops, report, BenchEnv};
 
 pub fn run(env: &BenchEnv) -> String {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let dir = artifacts_dir();
     let engine = match BulkQueryEngine::load(&dir) {

@@ -21,6 +21,7 @@ pub struct ScalePoint {
 }
 
 pub fn measure(kind: TableKind, slots: usize, seed: u64) -> ScalePoint {
+    let _measure = probes::measurement_section();
     // Throughput (probes off).
     probes::set_enabled(false);
     let t = build_table(kind, slots);

@@ -14,6 +14,7 @@ pub struct SpaceRow {
 }
 
 pub fn measure(kind: TableKind, slots: usize, seed: u64) -> SpaceRow {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let t = build_table(kind, slots);
     let ks = distinct_keys((t.capacity() as f64 * 0.9) as usize, seed);

@@ -29,6 +29,7 @@ pub fn match_count(t: &CooTensor, cmodes: &[usize]) -> usize {
 }
 
 pub fn measure(kind: TableKind, t: &CooTensor) -> (f64, f64) {
+    let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let run = |cmodes: &[usize]| {
         let out_slots = match_count(t, cmodes) * 2 + 1024;

@@ -26,6 +26,7 @@ pub struct SweepPoint {
 }
 
 pub fn measure(kind: TableKind, slots: usize, cfg: WarpConfig, seed: u64) -> SweepPoint {
+    let _measure = probes::measurement_section();
     let tcfg = TableConfig::for_kind(kind, slots)
         .with_geometry(cfg.bucket_size as usize, cfg.tile_size as usize);
     // Probe pass.

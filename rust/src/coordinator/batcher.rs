@@ -24,8 +24,11 @@ impl Batch {
         self.ops.is_empty()
     }
 
-    /// True when every operation is a query (eligible for the AOT
-    /// bulk-query offload path).
+    /// True when every operation is a query. The executor consults this
+    /// per batch: read-only batches skip run-splitting entirely and each
+    /// shard sub-batch dispatches as one read run, straight to the
+    /// [`crate::coordinator::ReadOffload`] hook (the AOT bulk-query
+    /// path) or the shard's lock-free in-process bulk query.
     pub fn read_only(&self) -> bool {
         self.ops.iter().all(|(_, op)| op.is_read())
     }

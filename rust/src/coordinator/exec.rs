@@ -1,9 +1,20 @@
-//! Batch execution over the sharded table with a worker pool.
+//! Batch execution over the sharded table with a *persistent* worker
+//! pool.
 //!
-//! Workers play the role of the GPU's SMs: each shard's sub-batch is an
-//! independent unit of work. On this 1-core testbed the pool defaults to
-//! a small thread count; the structure (shard partition → parallel apply
-//! → ordered result merge) is what matters for the reproduction.
+//! Workers play the role of the GPU's SMs, and — like WarpCore-style
+//! persistent kernels — they are launched ONCE, when the coordinator is
+//! built, and live until it drops. Each worker owns a fixed set of
+//! shards (shard `i` is always served by worker `i % n_workers`) and
+//! drains jobs from its own channel, so sustained traffic pays no
+//! per-batch thread-spawn cost and per-shard operation order is
+//! preserved across batches by channel FIFO order alone.
+//!
+//! Submission is split from collection ([`Coordinator::submit`] /
+//! [`Coordinator::collect`]) so the pipeline overlaps: batch N+1 is
+//! partitioned and enqueued while batch N still executes on the workers
+//! ([`Coordinator::run_stream`] does exactly this). Dropping the
+//! coordinator closes the job channels and joins every worker — a
+//! graceful shutdown with no detached threads.
 //!
 //! Execution is batch-native: each shard's sub-batch is split into
 //! maximal *runs* of same-class operations (upsert / accumulate / query /
@@ -11,17 +22,19 @@
 //! ([`crate::tables::ConcurrentMap::upsert_bulk`] and friends), so one
 //! lock acquisition and one shared bucket scan serve every op of a run
 //! that hashes to the same bucket — the host-side analog of launching one
-//! warp-cooperative kernel per operation batch. Read-only runs first
-//! consult the optional [`ReadOffload`] hook (the AOT-compiled PJRT
-//! bulk-query path, [`crate::runtime::EngineOffload`]) and fall back to
-//! the shard's lock-free in-process bulk query. Run-splitting preserves
-//! the documented invariants: results return in arrival order, and ops on
-//! the same key never reorder (same key ⇒ same shard ⇒ same sub-batch,
-//! and runs are dispatched in sub-batch order).
+//! warp-cooperative kernel per operation batch. Batches that
+//! [`Batch::read_only`] reports as all-queries skip run-splitting
+//! entirely: the whole sub-batch dispatches as one read run. Read runs
+//! first consult the optional [`ReadOffload`] hook (the AOT-compiled
+//! PJRT bulk-query path, [`crate::runtime::EngineOffload`]) and fall
+//! back to the shard's lock-free in-process bulk query. The documented
+//! invariants hold: results return in arrival order, and ops on the same
+//! key never reorder (same key ⇒ same shard ⇒ same worker, runs are
+//! dispatched in sub-batch order, and jobs drain FIFO per worker).
 
-use std::sync::mpsc;
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
-use std::thread;
+use std::thread::{self, JoinHandle};
 
 use super::{Batch, Op, ShardedTable};
 use crate::tables::{ConcurrentMap, TableKind, UpsertOp, UpsertResult};
@@ -40,6 +53,10 @@ pub struct CoordinatorConfig {
     pub kind: TableKind,
     pub total_slots: usize,
     pub n_shards: usize,
+    /// Requested pool width. The pool is clamped to `n_shards` at
+    /// construction — shard `i` is pinned to worker `i % pool_width`,
+    /// so extra workers could never receive work.
+    /// [`Coordinator::n_workers`] reports the effective width.
     pub n_workers: usize,
     pub max_batch: usize,
 }
@@ -50,10 +67,16 @@ impl Default for CoordinatorConfig {
             kind: TableKind::P2Meta,
             total_slots: 1 << 20,
             n_shards: 8,
-            n_workers: 2,
+            n_workers: default_workers(),
             max_batch: 1024,
         }
     }
+}
+
+/// Default pool width: one worker per available hardware thread (the
+/// persistent pool should scale with the host, not a hardcoded constant).
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
 }
 
 /// Hook consulted for read-only runs before the in-process bulk query
@@ -90,11 +113,101 @@ impl OpClass {
     }
 }
 
+/// One unit of work for a pool worker: the shard sub-batches it owns
+/// from one submitted batch, plus the per-batch reply channel.
+struct Job {
+    parts: Vec<(usize, Vec<(u64, Op)>)>,
+    /// The whole batch is queries — skip run-splitting, dispatch each
+    /// sub-batch as one read run ([`Batch::read_only`]).
+    read_only: bool,
+    offload: Option<Arc<dyn ReadOffload>>,
+    reply: Sender<Vec<(u64, OpResult)>>,
+}
+
+/// Long-lived shard-affine workers. Spawned once at coordinator
+/// construction; each drains its own job channel until the coordinator
+/// drops, which disconnects the channels and joins every thread.
+struct WorkerPool {
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn spawn(table: &Arc<ShardedTable>, n_workers: usize) -> Self {
+        let n_workers = n_workers.max(1);
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let table = Arc::clone(table);
+            let handle = thread::Builder::new()
+                .name(format!("warpspeed-worker-{w}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let mut out = Vec::new();
+                        for (shard_idx, part) in &job.parts {
+                            let shard = table.shards[*shard_idx].as_ref();
+                            if job.read_only {
+                                Coordinator::apply_read_only_part(
+                                    shard,
+                                    part,
+                                    job.offload.as_deref(),
+                                    &mut out,
+                                );
+                            } else {
+                                Coordinator::apply_part(
+                                    shard,
+                                    part,
+                                    job.offload.as_deref(),
+                                    &mut out,
+                                );
+                            }
+                        }
+                        // A dropped receiver just means the submitter went
+                        // away mid-batch; the worker keeps serving.
+                        let _ = job.reply.send(out);
+                    }
+                })
+                .expect("failed to spawn coordinator worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Self { txs, handles }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Disconnect the job channels so each worker's recv loop ends,
+        // then join: no work is abandoned, no thread outlives the pool.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to a submitted, still-executing batch. Redeem it with
+/// [`Coordinator::collect`]; submitting the next batch first overlaps
+/// its partitioning with this batch's execution.
+pub struct PendingBatch {
+    rx: Receiver<Vec<(u64, OpResult)>>,
+    jobs: usize,
+    ops: usize,
+}
+
 pub struct Coordinator {
     pub table: Arc<ShardedTable>,
     cfg: CoordinatorConfig,
     /// Optional read-run offload (PJRT bulk-query path).
     offload: Option<Arc<dyn ReadOffload>>,
+    /// Persistent shard-affine worker pool (spawned once, joined on drop).
+    pool: WorkerPool,
     /// Operations executed (metrics).
     pub ops_executed: std::sync::atomic::AtomicU64,
 }
@@ -102,16 +215,26 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
         let table = Arc::new(ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards));
+        // More workers than shards would park forever on empty channels
+        // (shard i is pinned to worker i % n_workers), so clamp.
+        let pool = WorkerPool::spawn(&table, cfg.n_workers.min(cfg.n_shards));
         Self {
             table,
             cfg,
             offload: None,
+            pool,
             ops_executed: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
+    }
+
+    /// Effective worker-pool width (the configured `n_workers` clamped
+    /// to `n_shards`).
+    pub fn n_workers(&self) -> usize {
+        self.pool.len()
     }
 
     /// Attach a read-run offload. Only whole query runs are routed to it;
@@ -168,19 +291,7 @@ impl Coordinator {
                     }));
                 }
                 OpClass::Get => {
-                    keys.clear();
-                    keys.extend(run.iter().map(|&(_, op)| op.key()));
-                    vals.clear();
-                    let served =
-                        offload.is_some_and(|o| o.query_run(shard, &keys, &mut vals));
-                    if !served {
-                        shard.query_bulk(&keys, &mut vals);
-                    }
-                    out.extend(
-                        run.iter()
-                            .zip(&vals)
-                            .map(|(&(seq, _), &v)| (seq, OpResult::Value(v))),
-                    );
+                    Self::dispatch_read_run(shard, run, offload, &mut keys, &mut vals, out);
                 }
                 OpClass::Del => {
                     keys.clear();
@@ -198,63 +309,143 @@ impl Coordinator {
         }
     }
 
-    /// Execute a batch: partition by shard, run per-shard bulk dispatch
-    /// on worker threads, merge results back into arrival order.
-    pub fn execute(&self, batch: &Batch) -> Vec<(u64, OpResult)> {
+    /// Dispatch one read run — the single place the [`ReadOffload`]
+    /// protocol lives: consult the hook, fall back to the shard's
+    /// lock-free bulk query, zip results back onto sequence numbers.
+    /// `keys`/`vals` are caller-owned scratch (cleared here) so run-split
+    /// loops reuse their buffers.
+    fn dispatch_read_run(
+        shard: &dyn ConcurrentMap,
+        run: &[(u64, Op)],
+        offload: Option<&dyn ReadOffload>,
+        keys: &mut Vec<u64>,
+        vals: &mut Vec<Option<u64>>,
+        out: &mut Vec<(u64, OpResult)>,
+    ) {
+        keys.clear();
+        keys.extend(run.iter().map(|&(_, op)| op.key()));
+        vals.clear();
+        let served = offload.is_some_and(|o| o.query_run(shard, keys, vals));
+        if !served {
+            shard.query_bulk(keys, vals);
+        }
+        out.extend(
+            run.iter()
+                .zip(vals.iter())
+                .map(|(&(seq, _), &v)| (seq, OpResult::Value(v))),
+        );
+    }
+
+    /// Dispatch one shard sub-batch of a batch [`Batch::read_only`]
+    /// proved to be all queries: no run-splitting — the whole sub-batch
+    /// is one read run.
+    fn apply_read_only_part(
+        shard: &dyn ConcurrentMap,
+        part: &[(u64, Op)],
+        offload: Option<&dyn ReadOffload>,
+        out: &mut Vec<(u64, OpResult)>,
+    ) {
+        let mut keys: Vec<u64> = Vec::new();
+        let mut vals: Vec<Option<u64>> = Vec::new();
+        Self::dispatch_read_run(shard, part, offload, &mut keys, &mut vals, out);
+    }
+
+    /// Submit a batch to the persistent pool: partition by shard, enqueue
+    /// one job per owning worker, return without waiting. The returned
+    /// handle is redeemed by [`Coordinator::collect`]; submitting batch
+    /// N+1 before collecting batch N pipelines partitioning against
+    /// execution (per-key order is safe: a key's shard always maps to the
+    /// same worker, and each worker drains its jobs FIFO).
+    pub fn submit(&self, batch: &Batch) -> PendingBatch {
         let parts = batch.partition(&self.table.router);
-        let (tx, rx) = mpsc::channel::<Vec<(u64, OpResult)>>();
-        // Chunk shards across up to n_workers threads.
-        let n_workers = self.cfg.n_workers.max(1);
-        let chunks: Vec<Vec<(usize, Vec<(u64, Op)>)>> = {
-            let mut cs: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
-                (0..n_workers).map(|_| Vec::new()).collect();
-            for (i, p) in parts.into_iter().enumerate() {
-                cs[i % n_workers].push((i, p));
+        let read_only = batch.read_only();
+        let n_workers = self.pool.len();
+        let mut per_worker: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
+            (0..n_workers).map(|_| Vec::new()).collect();
+        for (i, p) in parts.into_iter().enumerate() {
+            if !p.is_empty() {
+                per_worker[i % n_workers].push((i, p));
             }
-            cs
-        };
-        thread::scope(|s| {
-            for chunk in &chunks {
-                let tx = tx.clone();
-                let table = Arc::clone(&self.table);
-                let offload = self.offload.clone();
-                s.spawn(move || {
-                    let mut out = Vec::new();
-                    for (shard_idx, part) in chunk {
-                        if part.is_empty() {
-                            continue;
-                        }
-                        Self::apply_part(
-                            table.shards[*shard_idx].as_ref(),
-                            part,
-                            offload.as_deref(),
-                            &mut out,
-                        );
-                    }
-                    let _ = tx.send(out);
+        }
+        let (reply, rx) = mpsc::channel();
+        let mut jobs = 0;
+        for (w, parts) in per_worker.into_iter().enumerate() {
+            if parts.is_empty() {
+                continue;
+            }
+            self.pool.txs[w]
+                .send(Job {
+                    parts,
+                    read_only,
+                    offload: self.offload.clone(),
+                    reply: reply.clone(),
+                })
+                .unwrap_or_else(|_| {
+                    panic!("coordinator worker {w} is gone — it panicked on an earlier batch")
                 });
-            }
-        });
-        drop(tx);
-        let mut results: Vec<(u64, OpResult)> = rx.into_iter().flatten().collect();
+            jobs += 1;
+        }
+        PendingBatch {
+            rx,
+            jobs,
+            ops: batch.len(),
+        }
+    }
+
+    /// Wait for a submitted batch and merge its results back into
+    /// arrival order.
+    pub fn collect(&self, pending: PendingBatch) -> Vec<(u64, OpResult)> {
+        let mut results: Vec<(u64, OpResult)> = Vec::with_capacity(pending.ops);
+        for _ in 0..pending.jobs {
+            results.extend(pending.rx.recv().expect(
+                "coordinator worker panicked mid-batch (its reply channel dropped) — \
+                 see the worker thread's panic message for the root cause",
+            ));
+        }
         results.sort_unstable_by_key(|&(seq, _)| seq);
         self.ops_executed
             .fetch_add(results.len() as u64, std::sync::atomic::Ordering::Relaxed);
         results
     }
 
-    /// Convenience: run a whole op stream through batching + execution.
+    /// Execute a batch synchronously: submit + collect.
+    pub fn execute(&self, batch: &Batch) -> Vec<(u64, OpResult)> {
+        let pending = self.submit(batch);
+        self.collect(pending)
+    }
+
+    /// Pipelining step for [`Coordinator::run_stream`]: enqueue `next`
+    /// BEFORE draining the previous in-flight batch, so the workers
+    /// always have queued work while the submitter formats results.
+    fn pipe(
+        &self,
+        next: Option<&Batch>,
+        in_flight: &mut Option<PendingBatch>,
+        out: &mut Vec<OpResult>,
+    ) {
+        let submitted = next.map(|b| self.submit(b));
+        if let Some(p) = in_flight.take() {
+            out.extend(self.collect(p).into_iter().map(|(_, r)| r));
+        }
+        *in_flight = submitted;
+    }
+
+    /// Run a whole op stream through batching + pipelined execution:
+    /// while batch N executes on the workers, batch N+1 accumulates,
+    /// partitions, and is enqueued behind it.
     pub fn run_stream(&self, ops: impl IntoIterator<Item = Op>) -> Vec<OpResult> {
         let mut batcher = super::Batcher::new(self.cfg.max_batch);
         let mut out = Vec::new();
+        let mut in_flight: Option<PendingBatch> = None;
         for op in ops {
             if let Some(b) = batcher.push(op) {
-                out.extend(self.execute(&b).into_iter().map(|(_, r)| r));
+                self.pipe(Some(&b), &mut in_flight, &mut out);
             }
         }
         if let Some(b) = batcher.flush() {
-            out.extend(self.execute(&b).into_iter().map(|(_, r)| r));
+            self.pipe(Some(&b), &mut in_flight, &mut out);
         }
+        self.pipe(None, &mut in_flight, &mut out);
         out
     }
 }
@@ -411,6 +602,139 @@ mod tests {
         for (i, res) in r[100..].iter().enumerate() {
             assert_eq!(*res, OpResult::Value(Some(ks[i] ^ 2)), "query {i}");
         }
+    }
+
+    #[test]
+    fn pool_serves_many_batches_and_shuts_down_cleanly() {
+        // The pool is spawned once; hundreds of batches must flow through
+        // the same workers with results in arrival order, and dropping
+        // the coordinator must join every worker without hanging.
+        let c = coord();
+        let ks = distinct_keys(512, 0xE7);
+        for round in 0..8u64 {
+            let mut ops = Vec::new();
+            for (i, &k) in ks.iter().enumerate() {
+                ops.push(Op::Upsert(k, round * 1000 + i as u64));
+            }
+            for &k in &ks {
+                ops.push(Op::Query(k));
+            }
+            let r = c.run_stream(ops); // max_batch 64 → 16 batches/round
+            assert_eq!(r.len(), 1024);
+            for (i, res) in r[512..].iter().enumerate() {
+                assert_eq!(*res, OpResult::Value(Some(round * 1000 + i as u64)));
+            }
+        }
+        assert_eq!(
+            c.ops_executed.load(std::sync::atomic::Ordering::Relaxed),
+            8 * 1024
+        );
+        drop(c); // must not deadlock or leak workers
+    }
+
+    #[test]
+    fn pipelined_submit_collect_preserves_per_key_order() {
+        // Submit two dependent batches before collecting either: the
+        // second reads keys the first wrote. Shard affinity + FIFO job
+        // channels must make the writes visible to the reads.
+        let c = coord();
+        let ks = distinct_keys(200, 0xE8);
+        let writes = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (i as u64, Op::Upsert(k, i as u64 + 7)))
+                .collect(),
+        };
+        let reads = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (200 + i as u64, Op::Query(k)))
+                .collect(),
+        };
+        let p1 = c.submit(&writes);
+        let p2 = c.submit(&reads); // enqueued behind p1 on every worker
+        let r1 = c.collect(p1);
+        let r2 = c.collect(p2);
+        assert_eq!(r1.len(), 200);
+        assert!(r1.iter().all(|&(_, r)| r == OpResult::Upserted(true)));
+        for (i, &(seq, r)) in r2.iter().enumerate() {
+            assert_eq!(seq, 200 + i as u64, "arrival order lost");
+            assert_eq!(r, OpResult::Value(Some(i as u64 + 7)), "query {i}");
+        }
+    }
+
+    #[test]
+    fn read_only_batches_take_the_query_fast_path() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        /// Counts offload consultations; every sub-batch of a read-only
+        /// batch must arrive as ONE run even without run-splitting.
+        struct Counter {
+            runs: AtomicU64,
+            keys: AtomicU64,
+        }
+        impl super::ReadOffload for Counter {
+            fn query_run(
+                &self,
+                shard: &dyn crate::tables::ConcurrentMap,
+                keys: &[u64],
+                out: &mut Vec<Option<u64>>,
+            ) -> bool {
+                self.runs.fetch_add(1, Ordering::Relaxed);
+                self.keys.fetch_add(keys.len() as u64, Ordering::Relaxed);
+                shard.query_bulk(keys, out);
+                true
+            }
+        }
+        let counter = std::sync::Arc::new(Counter {
+            runs: AtomicU64::new(0),
+            keys: AtomicU64::new(0),
+        });
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 64,
+        })
+        .with_offload(std::sync::Arc::clone(&counter) as std::sync::Arc<dyn super::ReadOffload>);
+        let ks = distinct_keys(128, 0xE9);
+        let writes = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (i as u64, Op::Upsert(k, k ^ 9)))
+                .collect(),
+        };
+        assert!(!writes.read_only());
+        c.execute(&writes);
+        let reads = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (128 + i as u64, Op::Query(k)))
+                .collect(),
+        };
+        assert!(reads.read_only());
+        let r = c.execute(&reads);
+        for (i, &(_, res)) in r.iter().enumerate() {
+            assert_eq!(res, OpResult::Value(Some(ks[i] ^ 9)), "query {i}");
+        }
+        // One run per non-empty shard sub-batch, at most n_shards of them.
+        let runs = counter.runs.load(Ordering::Relaxed);
+        assert!(runs > 0 && runs <= 4, "runs = {runs}");
+        assert_eq!(counter.keys.load(Ordering::Relaxed), 128);
+    }
+
+    #[test]
+    fn default_workers_scales_with_host() {
+        assert!(super::default_workers() >= 1);
+        assert_eq!(
+            CoordinatorConfig::default().n_workers,
+            super::default_workers()
+        );
     }
 
     #[test]

@@ -5,7 +5,11 @@
 //! drive the tables from massively parallel GPU kernels. On this testbed
 //! the coordinator plays that role: it accepts operation streams, batches
 //! them ([`batcher`]), routes each operation to a shard by key hash
-//! ([`router`]), and executes batches on a worker pool ([`exec`]).
+//! ([`router`]), and executes batches on a *persistent* worker pool
+//! ([`exec`]) — long-lived shard-affine threads spawned once at
+//! construction and joined on drop, the host-side analog of the
+//! persistent-kernel execution model (WarpCore-style): sustained traffic
+//! pays no per-batch thread-spawn cost.
 //!
 //! ## The batch pipeline
 //!
@@ -16,15 +20,23 @@
 //!    trigger fires; each op carries its sequence number.
 //! 2. **Partition** — a batch splits into per-shard sub-batches (pure
 //!    key-hash routing), preserving arrival order within each shard.
+//!    Shard `i` is always served by worker `i % n_workers`, so per-shard
+//!    order also holds ACROSS batches (worker job channels are FIFO) —
+//!    which is what lets [`Coordinator::submit`] /
+//!    [`Coordinator::collect`] pipeline batch N+1's partitioning against
+//!    batch N's execution ([`Coordinator::run_stream`] does this).
 //! 3. **Run split** — each sub-batch divides into maximal runs of
-//!    same-class ops (upsert / accumulate / query / erase).
+//!    same-class ops (upsert / accumulate / query / erase). Batches that
+//!    [`Batch::read_only`] proves to be all queries skip this stage:
+//!    each whole sub-batch dispatches as a single read run.
 //! 4. **Bulk dispatch** — every run executes as ONE call into the
 //!    table's bulk API (`upsert_bulk` / `query_bulk` / `erase_bulk`),
-//!    which groups the run by primary bucket so one lock acquisition and
-//!    one shared bucket scan serve all ops that hash there. Read-only
-//!    runs first consult the optional [`ReadOffload`] hook — the
-//!    AOT-compiled PJRT bulk-query executable over a quiesced-shard
-//!    snapshot ([`crate::runtime::EngineOffload`], the three-layer
+//!    which groups the run by primary bucket (candidate-bucket triple
+//!    for CuckooHT) so one lock acquisition and one shared bucket scan
+//!    or chain walk serve all ops that hash there. Read runs first
+//!    consult the optional [`ReadOffload`] hook — the AOT-compiled PJRT
+//!    bulk-query executable over a quiesced-shard snapshot
+//!    ([`crate::runtime::EngineOffload`], the three-layer
 //!    Rust → XLA → Pallas path) — and otherwise take the shard's
 //!    lock-free in-process bulk query.
 //!
@@ -33,9 +45,10 @@
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches
 //!   the same shard (required for per-key linearization);
-//! * a batch partition preserves per-key operation order, and run
-//!   splitting preserves sub-batch order, so per-key order survives the
-//!   bulk dispatch end to end;
+//! * a batch partition preserves per-key operation order, run splitting
+//!   preserves sub-batch order, and shard-affine FIFO workers preserve
+//!   sub-batch order across pipelined batches, so per-key order survives
+//!   the bulk dispatch end to end;
 //! * shard sizes stay balanced within statistical bounds.
 
 pub mod batcher;
@@ -43,7 +56,9 @@ pub mod exec;
 pub mod router;
 
 pub use batcher::{Batch, Batcher};
-pub use exec::{Coordinator, CoordinatorConfig, OpResult, ReadOffload};
+pub use exec::{
+    default_workers, Coordinator, CoordinatorConfig, OpResult, PendingBatch, ReadOffload,
+};
 pub use router::{Router, ShardedTable};
 
 /// One client operation (the paper's API surface, §5.1).

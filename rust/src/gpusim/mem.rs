@@ -240,6 +240,7 @@ mod tests {
 
     #[test]
     fn probe_counts_lines_not_slots() {
+        let _measure = probes::measurement_section();
         probes::set_enabled(true);
         let m = SimMem::new(64);
         let s = ProbeScope::begin();
@@ -256,6 +257,7 @@ mod tests {
 
     #[test]
     fn distinct_mems_have_distinct_lines() {
+        let _measure = probes::measurement_section();
         probes::set_enabled(true);
         let a = SimMem::new(16);
         let b = SimMem::new(16);

@@ -12,8 +12,8 @@
 //! Recording can be globally disabled ([`set_enabled`]) for pure
 //! throughput benchmarks where the recorder itself would perturb timing.
 
-use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 static ENABLED: AtomicBool = AtomicBool::new(true);
 
@@ -28,40 +28,77 @@ pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
 }
 
-/// Global count of simulated-atomic operations (CAS/fetch_or/...), used by
-/// the cost model: the paper measures "every atomic operation incurs a
-/// performance hit of ~50M ops/s".
-pub static ATOMIC_OPS: AtomicU64 = AtomicU64::new(0);
+thread_local! {
+    /// Simulated-atomic ops (CAS/fetch_or/...) issued by THIS thread,
+    /// used by the cost model: the paper measures "every atomic
+    /// operation incurs a performance hit of ~50M ops/s". Thread-local
+    /// like the line recorder: a measuring thread sees exactly the ops
+    /// it issued, so parallel test threads cannot inflate each other's
+    /// counter windows.
+    static ATOMIC_OPS: Cell<u64> = const { Cell::new(0) };
+    /// Bucket-lock acquisitions by THIS thread. The bulk/batched
+    /// operation path exists to amortize exactly this cost (one acquire
+    /// serves every op of a batch that hashes to the bucket), so the
+    /// bulk benchmark reports it next to probe counts.
+    static LOCK_ACQS: Cell<u64> = const { Cell::new(0) };
+    /// Bulk bucket groups dispatched by THIS thread's native bulk calls
+    /// (one group = one shared scan / chain walk / lock hold serving
+    /// every batched op that hashes to the bucket — or, for CuckooHT,
+    /// to the same candidate-bucket triple). `bulk_ops / bulk_groups`
+    /// is the batch's amortization factor.
+    static BULK_GROUPS: Cell<u64> = const { Cell::new(0) };
+}
 
 #[inline(always)]
 pub(crate) fn count_atomic() {
     if enabled() {
-        ATOMIC_OPS.fetch_add(1, Ordering::Relaxed);
+        ATOMIC_OPS.with(|c| c.set(c.get() + 1));
     }
 }
 
-/// Reset the global atomic-op counter, returning the previous value.
+/// Reset the calling thread's atomic-op counter, returning the previous
+/// value.
 pub fn take_atomic_ops() -> u64 {
-    ATOMIC_OPS.swap(0, Ordering::Relaxed)
+    ATOMIC_OPS.with(|c| c.replace(0))
 }
-
-/// Global count of bucket-lock acquisitions. The bulk/batched operation
-/// path exists to amortize exactly this cost (one acquire serves every
-/// op of a batch that hashes to the bucket), so the bulk benchmark
-/// reports it next to probe counts.
-pub static LOCK_ACQS: AtomicU64 = AtomicU64::new(0);
 
 #[inline(always)]
 pub(crate) fn count_lock_acq() {
     if enabled() {
-        LOCK_ACQS.fetch_add(1, Ordering::Relaxed);
+        LOCK_ACQS.with(|c| c.set(c.get() + 1));
     }
 }
 
-/// Reset the global lock-acquisition counter, returning the previous
-/// value.
+/// Reset the calling thread's lock-acquisition counter, returning the
+/// previous value.
 pub fn take_lock_acqs() -> u64 {
-    LOCK_ACQS.swap(0, Ordering::Relaxed)
+    LOCK_ACQS.with(|c| c.replace(0))
+}
+
+#[inline(always)]
+pub(crate) fn count_bulk_group() {
+    if enabled() {
+        BULK_GROUPS.with(|c| c.set(c.get() + 1));
+    }
+}
+
+/// Reset the calling thread's bulk-group counter, returning the previous
+/// value.
+pub fn take_bulk_groups() -> u64 {
+    BULK_GROUPS.with(|c| c.replace(0))
+}
+
+/// The [`set_enabled`] recording flag is process-global (the counters
+/// and line recorder are thread-local). Any section that toggles the
+/// flag and then asserts or reports what it measured (benchmark measure
+/// passes, probe-asserting tests) must hold this guard for its
+/// duration — `cargo test` runs tests on parallel threads, and an
+/// unguarded neighbour flipping the flag mid-section silently disables
+/// recording. Poisoning is ignored: a panicking section leaves the flag
+/// in a harmless state for the next holder, which re-toggles anyway.
+pub fn measurement_section() -> std::sync::MutexGuard<'static, ()> {
+    static SECTION: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    SECTION.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 thread_local! {
@@ -183,6 +220,7 @@ mod tests {
 
     #[test]
     fn unique_lines_counted_once() {
+        let _measure = measurement_section();
         set_enabled(true);
         let s = ProbeScope::begin();
         touch(10);
@@ -193,6 +231,7 @@ mod tests {
 
     #[test]
     fn nested_scopes_merge_into_outer() {
+        let _measure = measurement_section();
         set_enabled(true);
         let outer = ProbeScope::begin();
         touch(1);
@@ -205,6 +244,7 @@ mod tests {
 
     #[test]
     fn disabled_records_nothing() {
+        let _measure = measurement_section();
         set_enabled(false);
         let s = ProbeScope::begin();
         touch(42);
@@ -214,6 +254,7 @@ mod tests {
 
     #[test]
     fn touches_outside_scope_ignored() {
+        let _measure = measurement_section();
         set_enabled(true);
         touch(99);
         let s = ProbeScope::begin();

@@ -26,17 +26,22 @@
 //!
 //! * **Tables** ([`tables::ConcurrentMap`]): `upsert_bulk` /
 //!   `query_bulk` / `erase_bulk` operate on slices and append into
-//!   caller-provided buffers. Every design gets a scalar-fallback
-//!   default; the open-addressing designs (DoubleHT, P2HT, IcebergHT,
-//!   plain and metadata variants) override them natively, sorting each
-//!   batch by primary bucket so ONE lock acquisition and ONE shared
-//!   bucket scan (a single tag-block probe on the metadata variants)
-//!   serve every op that hashes there, while preserving in-batch
-//!   per-key order.
-//! * **Coordinator** ([`coordinator`]): batches partition per shard,
-//!   split into maximal same-class runs, and dispatch whole runs through
-//!   the bulk API; read-only runs can be served by the AOT-compiled PJRT
-//!   bulk-query executable via [`coordinator::ReadOffload`].
+//!   caller-provided buffers. All eight concurrent designs override
+//!   them natively: the open-addressing designs (DoubleHT, P2HT,
+//!   IcebergHT, plain and metadata variants) sort each batch by primary
+//!   bucket so ONE lock acquisition and ONE shared bucket scan (a
+//!   single tag-block probe on the metadata variants) serve every op
+//!   that hashes there; CuckooHT groups by candidate-bucket triple so
+//!   `lock_three` is taken once per group; ChainingHT performs one
+//!   chain walk per bucket group. In-batch per-key order is preserved
+//!   throughout.
+//! * **Coordinator** ([`coordinator`]): a persistent shard-affine
+//!   worker pool (spawned once, joined on drop) executes batches with
+//!   submit/collect pipelining; batches partition per shard, split into
+//!   maximal same-class runs (read-only batches skip the split), and
+//!   dispatch whole runs through the bulk API; read runs can be served
+//!   by the AOT-compiled PJRT bulk-query executable via
+//!   [`coordinator::ReadOffload`].
 //! * **Benches/apps**: the `bulk` exhibit ([`bench::bulk`]) sweeps
 //!   scalar vs bulk across all eight concurrent designs with gpusim
 //!   cost-model counters (lock acquisitions, atomics, cache lines per

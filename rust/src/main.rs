@@ -17,7 +17,7 @@ use std::io::{BufRead, Write};
 
 use warpspeed::bench::{self, BenchEnv};
 use warpspeed::cli::Args;
-use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult};
+use warpspeed::coordinator::{default_workers, Coordinator, CoordinatorConfig, Op, OpResult};
 use warpspeed::tables::TableKind;
 
 fn env_from(args: &Args) -> BenchEnv {
@@ -93,16 +93,17 @@ fn serve(args: &Args) {
         kind,
         total_slots: args.get_usize("slots", 1 << 20),
         n_shards: args.get_usize("shards", 8),
-        n_workers: args.get_usize("workers", 2),
+        n_workers: args.get_usize("workers", default_workers()),
         max_batch: args.get_usize("batch", 256),
     };
-    eprintln!(
-        "[warpspeed] serving {} over {} shards (slots={})",
-        kind.paper_name(),
-        cfg.n_shards,
-        cfg.total_slots
-    );
     let coord = Coordinator::new(cfg);
+    eprintln!(
+        "[warpspeed] serving {} over {} shards (slots={}, workers={})",
+        kind.paper_name(),
+        coord.config().n_shards,
+        coord.config().total_slots,
+        coord.n_workers() // requested --workers, clamped to the shard count
+    );
     let stdin = std::io::stdin();
     let mut out = std::io::stdout().lock();
     for line in stdin.lock().lines() {

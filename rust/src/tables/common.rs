@@ -204,11 +204,16 @@ impl Pairs {
             } else {
                 // User key or RESERVED (pending publish): occupied.
                 fill += 1;
-                if is_user_key(k) && keys.contains(&k) {
-                    let v = self.mem.load(base + s * 2 + 1, strong);
+                if is_user_key(k) {
+                    // Single pass over the group's keys; the value loads
+                    // lazily on the first match so misses keep the
+                    // scalar scan's probe footprint.
+                    let mut v: Option<u64> = None;
                     for (i, &q) in keys.iter().enumerate() {
                         if q == k {
-                            found[i] = Some((s, v));
+                            let vv =
+                                *v.get_or_insert_with(|| self.mem.load(base + s * 2 + 1, strong));
+                            found[i] = Some((s, vv));
                         }
                     }
                 }

@@ -17,6 +17,17 @@
 //! Deletion resets slots to EMPTY (not tombstones): with a fixed 3-bucket
 //! candidate set there is no probe-sequence invariant to preserve, which
 //! is why cuckoo deletions are the fastest in the paper (§6.3).
+//!
+//! Bulk operations are native: a batch is grouped by its candidate-bucket
+//! *triple* ([`super::for_each_triple_group`]) so `lock_three` — the tax
+//! every cuckoo op pays — is acquired once per group rather than once per
+//! op, and the displacement BFS runs at group level when a group's
+//! buckets fill. Two regimes: duplicate-heavy batches (the coordinator's
+//! small-key-universe serving shape) form multi-op groups and amortize
+//! the locks directly, while distinct-key batches degenerate to
+//! one-op groups — there the win is the sort itself, which orders ops by
+//! ascending primary bucket so the most-frequently-hit bucket and lock
+//! lines are walked sequentially (cache-warm) instead of at random.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -78,6 +89,15 @@ impl CuckooHt {
 
     /// BFS for a displacement path. Returns the moves to execute (deepest
     /// first) plus the root bucket/slot freed for the new key.
+    ///
+    /// The roots are re-checked for free slots here rather than trusting
+    /// the caller's earlier scan: the caller releases the three bucket
+    /// locks before this BFS runs, so an erase landing in that window can
+    /// free a root slot. Skipping the roots (as this BFS once did) made
+    /// such slots invisible — the op would displace needlessly at best,
+    /// or spin `MAX_ATTEMPTS` and report a false `Full` at worst. A root
+    /// with a free slot returns an empty move list; the caller's retry of
+    /// the claim loop then lands directly.
     fn find_path(&self, roots: [usize; 3], strong: bool) -> Option<(Vec<Move>, usize, usize)> {
         // node = (bucket, parent index, slot in parent whose occupant
         // hashes to this bucket)
@@ -85,26 +105,12 @@ impl CuckooHt {
         for r in roots {
             nodes.push((r, usize::MAX, usize::MAX));
         }
-        let mut qi = 3; // roots were checked by the caller (they're full)
-        // Expand roots first.
-        for root_idx in 0..3 {
-            let b = nodes[root_idx].0;
-            for s in 0..self.pairs.bucket_size {
-                let k = self.pairs.key_at(b, s, strong);
-                if !is_user_key(k) {
-                    continue;
-                }
-                for alt in self.buckets_of(k) {
-                    if alt != b && nodes.len() < MAX_BFS_NODES {
-                        nodes.push((alt, root_idx, s));
-                    }
-                }
-            }
-        }
+        let mut qi = 0;
         while qi < nodes.len() {
             let (b, _, _) = nodes[qi];
             if let Some(f) = self.free_slot(b, strong) {
-                // Reconstruct the move chain, deepest first.
+                // Reconstruct the move chain, deepest first (empty when a
+                // root itself has the free slot).
                 let mut moves = Vec::new();
                 let mut cur = qi;
                 let mut dst_slot = f;
@@ -195,6 +201,72 @@ impl CuckooHt {
             },
         }
     }
+
+    /// Update-or-direct-insert across the three candidate buckets. The
+    /// caller holds `lock_three(bs)` in locking mode (claims then own the
+    /// buckets exclusively; phased mode CAS-claims instead). Returns
+    /// `None` when the key is absent and every bucket is full — the
+    /// caller must displace (BFS) and retry. Shared by the scalar attempt
+    /// loop and the triple-grouped bulk path.
+    fn upsert_in_buckets(
+        &self,
+        bs: [usize; 3],
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+    ) -> Option<UpsertResult> {
+        let strong = self.mode.strong();
+        let locking = self.mode.locking();
+        // Update path: key already present?
+        for b in bs {
+            if let Some((slot, old_v)) = self.pairs.scan_bucket(b, key, strong).found {
+                self.apply_existing(b, slot, old_v, val, op);
+                return Some(UpsertResult::Updated);
+            }
+        }
+        // Direct insert into any bucket with space.
+        for b in bs {
+            loop {
+                let r = self.pairs.scan_bucket(b, key, strong);
+                let slot = match r.reusable() {
+                    Some(s) => s,
+                    None => break,
+                };
+                self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
+                if locking {
+                    // Exclusive ownership of all three buckets.
+                    self.pairs.set_pair_locked(b, slot, key, val);
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    return Some(UpsertResult::Inserted);
+                } else if self.pairs.try_claim(b, slot, true) {
+                    self.pairs.publish(b, slot, key, val);
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    return Some(UpsertResult::Inserted);
+                }
+            }
+        }
+        None
+    }
+
+    /// Run the displacement BFS for `bs` and execute whatever move chain
+    /// it finds. Caller must NOT hold the three bucket locks (path
+    /// execution re-locks pairwise, libcuckoo-style). Returns false when
+    /// no path exists — the table is genuinely full for this key.
+    fn displace(&self, bs: [usize; 3], key: u64, strong: bool) -> bool {
+        self.hook
+            .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: bs[0] });
+        let Some((moves, _root_bucket, _root_slot)) = self.find_path(bs, strong) else {
+            return false;
+        };
+        for m in &moves {
+            if !self.execute_move(m) {
+                break;
+            }
+        }
+        // Whether or not the chain completed, the caller retries the
+        // claim loop; partial chains still freed some space somewhere.
+        true
+    }
 }
 
 impl ConcurrentMap for CuckooHt {
@@ -207,66 +279,18 @@ impl ConcurrentMap for CuckooHt {
             if locking {
                 self.locks.lock_three(bs);
             }
-            // Update path: key already present?
-            let mut done = None;
-            for b in bs {
-                if let Some((slot, old_v)) = self.pairs.scan_bucket(b, key, strong).found {
-                    self.apply_existing(b, slot, old_v, val, op);
-                    done = Some(UpsertResult::Updated);
-                    break;
-                }
-            }
-            // Direct insert into any bucket with space.
-            if done.is_none() {
-                'claim: for b in bs {
-                    loop {
-                        let r = self.pairs.scan_bucket(b, key, strong);
-                        let slot = match r.reusable() {
-                            Some(s) => s,
-                            None => break,
-                        };
-                        self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
-                        if locking {
-                            // Exclusive ownership of all three buckets.
-                            self.pairs.set_pair_locked(b, slot, key, val);
-                            done = Some(UpsertResult::Inserted);
-                            break 'claim;
-                        } else if self.pairs.try_claim(b, slot, true) {
-                            self.pairs.publish(b, slot, key, val);
-                            done = Some(UpsertResult::Inserted);
-                            break 'claim;
-                        }
-                    }
-                }
-            }
+            let done = self.upsert_in_buckets(bs, key, val, op);
             if locking {
                 self.locks.unlock_three(bs);
             }
-            match done {
-                Some(UpsertResult::Inserted) => {
-                    self.live.fetch_add(1, Ordering::Relaxed);
-                    return UpsertResult::Inserted;
-                }
-                Some(r) => return r,
-                None => {}
+            if let Some(r) = done {
+                return r;
             }
             // All three buckets full: BFS displacement (locks released —
             // path execution re-locks pairwise like libcuckoo).
-            self.hook
-                .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: bs[0] });
-            let Some((moves, _root_bucket, _root_slot)) = self.find_path(bs, strong) else {
+            if !self.displace(bs, key, strong) {
                 return UpsertResult::Full;
-            };
-            let mut all_ok = true;
-            for m in &moves {
-                if !self.execute_move(m) {
-                    all_ok = false;
-                    break;
-                }
             }
-            // Whether or not the chain completed, retry the claim loop;
-            // partial chains still freed some space somewhere.
-            let _ = all_ok;
         }
         UpsertResult::Full
     }
@@ -317,6 +341,120 @@ impl ConcurrentMap for CuckooHt {
             self.locks.unlock_three(bs);
         }
         hit
+    }
+
+    /// Triple-grouped bulk upsert: ops sharing all three candidate
+    /// buckets (duplicate keys in a batch, chiefly) execute under ONE
+    /// `lock_three` acquisition. When a group's buckets fill up, the
+    /// displacement BFS runs at group level — locks dropped, path found
+    /// and executed, locks re-taken — instead of delegating a whole
+    /// per-key scalar attempt loop.
+    fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
+        let base = out.len();
+        out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let triples: Vec<[usize; 3]> =
+            pairs_in.iter().map(|&(k, _)| self.buckets_of(k)).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        super::for_each_triple_group(&triples, |bs, group| {
+            if locking {
+                self.locks.lock_three(bs);
+            }
+            for &i in group {
+                let (k, v) = pairs_in[i as usize];
+                debug_assert!(crate::gpusim::mem::is_user_key(k));
+                let mut res = UpsertResult::Full;
+                for _attempt in 0..MAX_ATTEMPTS {
+                    if let Some(r) = self.upsert_in_buckets(bs, k, v, op) {
+                        res = r;
+                        break;
+                    }
+                    // Group buckets full: BFS with the group locks
+                    // released (path execution re-locks pairwise), then
+                    // re-acquire and retry this op.
+                    if locking {
+                        self.locks.unlock_three(bs);
+                    }
+                    let displaced = self.displace(bs, k, strong);
+                    if locking {
+                        self.locks.lock_three(bs);
+                    }
+                    if !displaced {
+                        break;
+                    }
+                }
+                out[base + i as usize] = res;
+            }
+            if locking {
+                self.locks.unlock_three(bs);
+            }
+        });
+    }
+
+    /// Triple-grouped bulk query: one `lock_three` serves every query of
+    /// the group (the unstable table's locked read, amortized).
+    fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), None);
+        let triples: Vec<[usize; 3]> = keys_in.iter().map(|&k| self.buckets_of(k)).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        super::for_each_triple_group(&triples, |bs, group| {
+            if locking {
+                self.locks.lock_three(bs);
+            }
+            for &i in group {
+                let k = keys_in[i as usize];
+                let mut v = None;
+                for b in bs {
+                    if let Some((_, val)) = self.pairs.scan_bucket(b, k, strong).found {
+                        v = Some(val);
+                        break;
+                    }
+                }
+                out[base + i as usize] = v;
+            }
+            if locking {
+                self.locks.unlock_three(bs);
+            }
+        });
+    }
+
+    /// Triple-grouped bulk erase under one `lock_three` per group.
+    /// Duplicate keys in a group behave like the scalar loop: the first
+    /// occurrence empties the slot, later rescans miss and report false.
+    fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
+        let base = out.len();
+        out.resize(base + keys_in.len(), false);
+        let triples: Vec<[usize; 3]> = keys_in.iter().map(|&k| self.buckets_of(k)).collect();
+        let locking = self.mode.locking();
+        let strong = self.mode.strong();
+        super::for_each_triple_group(&triples, |bs, group| {
+            if locking {
+                self.locks.lock_three(bs);
+            }
+            for &i in group {
+                let k = keys_in[i as usize];
+                let mut hit = false;
+                for b in bs {
+                    if let Some((slot, _)) = self.pairs.scan_bucket(b, k, strong).found {
+                        // No probe-sequence invariant: reset straight to
+                        // EMPTY (same as the scalar path).
+                        self.pairs
+                            .mem()
+                            .store_release(self.pairs.kidx(b, slot), KEY_EMPTY);
+                        self.live.fetch_sub(1, Ordering::Relaxed);
+                        self.hook.on_event(RaceEvent::AfterDelete { key: k, bucket: b });
+                        hit = true;
+                        break;
+                    }
+                }
+                out[base + i as usize] = hit;
+            }
+            if locking {
+                self.locks.unlock_three(bs);
+            }
+        });
     }
 
     fn num_buckets(&self) -> usize {
@@ -427,6 +565,106 @@ mod tests {
             assert_eq!(t.query(k), Some(k ^ 3), "key lost during displacement");
             assert_eq!(t.count_copies(k), 1);
         }
+    }
+
+    #[test]
+    fn find_path_rechecks_roots() {
+        // Regression: an erase can free a ROOT slot between the upsert's
+        // unlock and its BFS. find_path used to skip the roots ("the
+        // caller checked them"), making that slot invisible; it must now
+        // return an empty move path straight to the freed root slot.
+        let t = table(2048);
+        let key = keys(1, 0xF00D)[0];
+        let bs = t.buckets_of(key);
+        // Fill every slot of the candidate buckets with filler keys.
+        let mut roots: Vec<usize> = bs.to_vec();
+        roots.sort_unstable();
+        roots.dedup();
+        let filler = keys(roots.len() * t.pairs.bucket_size, 0xF11E);
+        let mut fi = 0;
+        for &b in &roots {
+            for s in 0..t.pairs.bucket_size {
+                assert!(t.pairs.try_claim(b, s, true));
+                t.pairs.publish(b, s, filler[fi], 1);
+                fi += 1;
+            }
+        }
+        if let Some((m, _, _)) = t.find_path(bs, true) {
+            assert!(!m.is_empty(), "roots are full — any path must displace");
+        }
+        // "Erase" lands: one root slot goes EMPTY.
+        t.pairs
+            .mem()
+            .store_release(t.pairs.kidx(bs[2], 3), KEY_EMPTY);
+        let (moves, root_bucket, root_slot) =
+            t.find_path(bs, true).expect("freed root slot must be found");
+        assert!(moves.is_empty(), "free root must not trigger displacement");
+        assert!(bs.contains(&root_bucket));
+        assert_eq!(
+            t.pairs.key_at(root_bucket, root_slot, true),
+            KEY_EMPTY,
+            "path must target the freed slot"
+        );
+        // And the full op lands without reporting Full.
+        assert_eq!(
+            t.upsert(key, 7, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        assert_eq!(t.query(key), Some(7));
+    }
+
+    #[test]
+    fn concurrent_churn_no_false_full() {
+        // Erases racing inserts at a load BFS can always satisfy: a
+        // `Full` here means a freed slot went invisible mid-insert (the
+        // race the find_path root re-check closes).
+        use std::sync::Arc;
+        let t = Arc::new(table(4096));
+        let n_threads = 4;
+        let per = 600; // peak ~58% load with all threads resident
+        let all = keys(n_threads * per, 0xC8A);
+        let mut hs = vec![];
+        for tid in 0..n_threads {
+            let t = Arc::clone(&t);
+            let mine: Vec<u64> = all[tid * per..(tid + 1) * per].to_vec();
+            hs.push(std::thread::spawn(move || {
+                for round in 0..6u64 {
+                    for &k in &mine {
+                        assert_eq!(
+                            t.upsert(k, k ^ round, &UpsertOp::InsertIfUnique),
+                            UpsertResult::Inserted,
+                            "false Full under churn (round {round})"
+                        );
+                    }
+                    for &k in &mine {
+                        assert!(t.erase(k), "churned key vanished (round {round})");
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn bulk_matches_scalar_twin() {
+        check_bulk_parity(&table(2048), &table(2048), 0x44);
+    }
+
+    #[test]
+    fn bulk_parity_on_tiny_crowded_table() {
+        // 32 buckets for a 96-key universe: triples overlap heavily and
+        // buckets fill, so the grouped path exercises shared-bucket claim
+        // races and the per-group displacement BFS while staying in
+        // lockstep with the scalar twin.
+        check_bulk_parity(&table(256), &table(256), 0x45);
+    }
+
+    #[test]
+    fn bulk_concurrent_no_duplicates() {
+        check_bulk_concurrent_no_duplicates(std::sync::Arc::new(table(8192)));
     }
 
     #[test]

@@ -662,6 +662,7 @@ mod tests {
         // §2.2: double hashing exists to avoid linear probing's
         // clustering — at high load the linear variant must probe more.
         use crate::gpusim::probes::{self, OpStats, ProbeScope};
+        let _measure = probes::measurement_section();
         probes::set_enabled(true);
         let mk = |linear| DoubleHt::with_strategy(TableConfig::new(8192), false, linear);
         let measure = |t: &DoubleHt| {

@@ -371,6 +371,7 @@ mod tests {
 
     #[test]
     fn bucket32_scan_is_one_probe() {
+        let _measure = probes::measurement_section();
         probes::set_enabled(true);
         let m = MetaArray::new(8, 32);
         let s = ProbeScope::begin();
@@ -380,6 +381,7 @@ mod tests {
 
     #[test]
     fn distinct_buckets_distinct_lines() {
+        let _measure = probes::measurement_section();
         probes::set_enabled(true);
         let m = MetaArray::new(8, 32);
         let s = ProbeScope::begin();
@@ -404,6 +406,7 @@ mod tests {
 
     #[test]
     fn group_scan_matches_scalar_and_costs_one_probe() {
+        let _measure = probes::measurement_section();
         probes::set_enabled(true);
         let m = MetaArray::new(4, 32);
         assert!(m.try_claim(1, 3, 0x1234, false));

@@ -126,9 +126,10 @@ pub trait ConcurrentMap: Send + Sync {
     /// policy, appending one result per pair to `out`. Semantically
     /// identical to calling [`ConcurrentMap::upsert`] in a loop — in-batch
     /// per-key order is preserved, duplicate keys included. Native
-    /// overrides group the batch by primary bucket so one lock
-    /// acquisition and one shared bucket scan serve every op that hashes
-    /// there (the warp-cooperative bulk-kernel analog).
+    /// overrides group the batch by primary bucket (candidate-bucket
+    /// triple for CuckooHT, chain bucket for ChainingHT) so one lock
+    /// acquisition and one shared bucket scan or chain walk serve every
+    /// op that hashes there (the warp-cooperative bulk-kernel analog).
     fn upsert_bulk(&self, pairs: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
         out.reserve(pairs.len());
         for &(k, v) in pairs {
@@ -406,7 +407,33 @@ pub(crate) fn for_each_bucket_group(buckets: &[usize], mut f: impl FnMut(usize, 
         while e < n && buckets[order[e] as usize] == b {
             e += 1;
         }
+        crate::gpusim::probes::count_bulk_group();
         f(b, &order[g..e]);
+        g = e;
+    }
+}
+
+/// [`for_each_bucket_group`] generalized to CuckooHT's candidate-bucket
+/// triples: ops whose keys share all three candidate buckets (duplicate
+/// keys in a batch, chiefly) form one group, so `lock_three` is taken
+/// once per group instead of once per op. Grouping is by the *ordered*
+/// triple — group members scan and claim buckets in the identical
+/// preference order the scalar path uses — and arrival order is
+/// preserved within each group (same key ⇒ same triple ⇒ same group).
+pub(crate) fn for_each_triple_group(triples: &[[usize; 3]], mut f: impl FnMut([usize; 3], &[u32])) {
+    let n = triples.len();
+    debug_assert!(n <= u32::MAX as usize, "batch too large for u32 indices");
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by_key(|&i| (triples[i as usize], i));
+    let mut g = 0usize;
+    while g < n {
+        let t = triples[order[g] as usize];
+        let mut e = g + 1;
+        while e < n && triples[order[e] as usize] == t {
+            e += 1;
+        }
+        crate::gpusim::probes::count_bulk_group();
+        f(t, &order[g..e]);
         g = e;
     }
 }

@@ -126,6 +126,140 @@ fn bulk_matches_scalar_oracle_for_all_eight_designs() {
     }
 }
 
+/// Multi-threaded bulk parity for the two designs that used to ride the
+/// scalar fallback: threads churn bulk upserts + erases on disjoint key
+/// ranges, per-op results must match the scalar-equivalent expectation,
+/// and no key may ever hold more than one physical copy.
+///
+/// ChainingHT is stable (keys never move), so `count_copies(k) == 1` is
+/// asserted THROUGHOUT the churn from a concurrent sampler. CuckooHT
+/// moves keys (a raw table scan can catch a displacement mid-copy), so
+/// its copy audit runs at the quiescent points; mid-churn each thread
+/// instead asserts its locked queries return its own last-written value.
+#[test]
+fn concurrent_bulk_churn_keeps_single_copies_cuckoo_chaining() {
+    for kind in [TableKind::Cuckoo, TableKind::Chaining] {
+        let t = build_table(kind, 16 * 1024);
+        let n_threads = 4;
+        let per = 384;
+        let all = distinct_keys(n_threads * per, 0xAB5 ^ kind as u64);
+        let stable = kind == TableKind::Chaining;
+        std::thread::scope(|s| {
+            for tid in 0..n_threads {
+                let t = &t;
+                let mine = &all[tid * per..(tid + 1) * per];
+                s.spawn(move || {
+                    for round in 0..4u64 {
+                        let pairs: Vec<(u64, u64)> =
+                            mine.iter().map(|&k| (k, k ^ round)).collect();
+                        let mut ures: Vec<UpsertResult> = Vec::new();
+                        for chunk in pairs.chunks(96) {
+                            t.upsert_bulk(chunk, &UpsertOp::Overwrite, &mut ures);
+                        }
+                        for (i, &r) in ures.iter().enumerate() {
+                            // Round 0 inserts everything; later rounds
+                            // re-insert the erased odd half and update
+                            // the surviving even half.
+                            let want = if round == 0 || i % 2 == 1 {
+                                UpsertResult::Inserted
+                            } else {
+                                UpsertResult::Updated
+                            };
+                            assert_eq!(r, want, "{kind:?} round {round} upsert #{i}");
+                        }
+                        for (i, &k) in mine.iter().enumerate() {
+                            if stable {
+                                assert_eq!(
+                                    t.count_copies(k),
+                                    1,
+                                    "{kind:?}: duplicate mid-churn"
+                                );
+                            } else {
+                                assert_eq!(
+                                    t.query(k),
+                                    Some(k ^ round),
+                                    "{kind:?} round {round} key #{i}"
+                                );
+                            }
+                        }
+                        let odd: Vec<u64> =
+                            mine.iter().copied().skip(1).step_by(2).collect();
+                        let mut eres: Vec<bool> = Vec::new();
+                        for chunk in odd.chunks(96) {
+                            t.erase_bulk(chunk, &mut eres);
+                        }
+                        assert!(
+                            eres.iter().all(|&e| e),
+                            "{kind:?} round {round}: bulk erase missed an own key"
+                        );
+                    }
+                });
+            }
+        });
+        // Quiescent audit: even keys survive with exactly one copy, odd
+        // keys are gone without residue.
+        for (i, &k) in all.iter().enumerate() {
+            let i_in_range = i % per;
+            if i_in_range % 2 == 0 {
+                assert_eq!(t.query(k), Some(k ^ 3), "{kind:?}: survivor #{i}");
+                assert_eq!(t.count_copies(k), 1, "{kind:?}: duplicate #{i}");
+            } else {
+                assert_eq!(t.query(k), None, "{kind:?}: zombie #{i}");
+                assert_eq!(t.count_copies(k), 0, "{kind:?}: residue #{i}");
+            }
+        }
+    }
+}
+
+/// Persistent-pool lifecycle: hundreds of batches flow through the same
+/// long-lived workers with results in arrival order, for the two newly
+/// bulk-native designs, and dropping the coordinator joins the pool
+/// without hanging.
+#[test]
+fn persistent_pool_ordering_across_batches_and_clean_shutdown() {
+    for kind in [TableKind::Cuckoo, TableKind::Chaining] {
+        let c = Coordinator::new(CoordinatorConfig {
+            kind,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 3,
+            max_batch: 32,
+        });
+        let ks = distinct_keys(256, 0x9D0 ^ kind as u64);
+        for round in 0..3u64 {
+            let mut ops = Vec::new();
+            for (i, &k) in ks.iter().enumerate() {
+                ops.push(Op::Upsert(k, round * 1000 + i as u64));
+            }
+            for &k in &ks {
+                ops.push(Op::Query(k));
+            }
+            ops.extend(ks.iter().map(|&k| Op::Erase(k)));
+            let r = c.run_stream(ops); // max_batch 32 → 24 pipelined batches
+            assert_eq!(r.len(), 768, "{kind:?}");
+            for (i, res) in r[..256].iter().enumerate() {
+                assert_eq!(*res, OpResult::Upserted(true), "{kind:?} r{round} up {i}");
+            }
+            for (i, res) in r[256..512].iter().enumerate() {
+                assert_eq!(
+                    *res,
+                    OpResult::Value(Some(round * 1000 + i as u64)),
+                    "{kind:?} r{round} q {i}"
+                );
+            }
+            for (i, res) in r[512..].iter().enumerate() {
+                assert_eq!(*res, OpResult::Erased(true), "{kind:?} r{round} del {i}");
+            }
+        }
+        assert_eq!(
+            c.ops_executed
+                .load(std::sync::atomic::Ordering::Relaxed),
+            3 * 768
+        );
+        drop(c); // graceful shutdown: disconnect channels, join workers
+    }
+}
+
 /// The same property served end-to-end through the coordinator's
 /// batch-native executor (batcher → shard partition → run split → bulk
 /// dispatch), for every concurrent design.
