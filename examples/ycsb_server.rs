@@ -22,6 +22,7 @@ fn main() {
             n_shards: 8,
             n_workers: default_workers(),
             max_batch: 4096,
+            growth: None,
         });
         let universe = distinct_keys(universe_size, 0x4C5B);
         // Pre-load every key (paper setup).

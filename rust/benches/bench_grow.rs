@@ -1,0 +1,7 @@
+//! `cargo bench --bench bench_grow` — online growth under churn.
+use warpspeed::bench::{grow, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", grow::run(&env));
+}

@@ -52,8 +52,20 @@ impl AgingDriver {
     /// Fill `table` to 85% load factor; reserve enough fresh keys for
     /// `max_iterations` churn slices.
     pub fn new(table: Arc<dyn ConcurrentMap>, max_iterations: usize, seed: u64) -> Self {
-        let cap = table.capacity();
-        let fill = (cap as f64 * 0.85) as usize;
+        let fill = (table.capacity() as f64 * 0.85) as usize;
+        Self::with_fill(table, max_iterations, seed, fill)
+    }
+
+    /// Like [`AgingDriver::new`] with an explicit live-window size. A
+    /// `fill` beyond the table's nominal capacity ages a growable table
+    /// past its provisioning (the growth benchmark's aging shape); on a
+    /// fixed table the surplus inserts simply fail at saturation.
+    pub fn with_fill(
+        table: Arc<dyn ConcurrentMap>,
+        max_iterations: usize,
+        seed: u64,
+        fill: usize,
+    ) -> Self {
         let slice = (fill / 100).max(1);
         let universe = distinct_keys(fill + (max_iterations + 2) * slice, seed);
         let negatives = distinct_keys(slice.max(1), seed ^ 0xFFFF_AAAA)
@@ -183,6 +195,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn overfilled_window_ages_a_growable_table_past_nominal() {
+        use crate::tables::{GrowableMap, GrowthPolicy, TableConfig};
+        let t = std::sync::Arc::new(GrowableMap::new(
+            TableKind::P2Meta,
+            TableConfig::for_kind(TableKind::P2Meta, 1024),
+            GrowthPolicy {
+                migration_batch: 16,
+                ..Default::default()
+            },
+        ));
+        let nominal = t.capacity();
+        let fill = nominal * 2; // live window at 2× the provisioning
+        let mut d = AgingDriver::with_fill(
+            std::sync::Arc::clone(&t) as std::sync::Arc<dyn ConcurrentMap>,
+            20,
+            0xA63,
+            fill,
+        );
+        assert_eq!(d.live(), fill, "growable prefill must not drop inserts");
+        for it in 0..20 {
+            let ops = d.run_iteration(it);
+            assert_eq!(ops.insert_fails, 0, "growable aging rejected at iteration {it}");
+            assert_eq!(ops.pos_misses, 0, "live key missing at iteration {it}");
+            assert_eq!(ops.neg_hits, 0, "phantom key at iteration {it}");
+            assert_eq!(ops.delete_misses, 0, "delete lost a key at iteration {it}");
+        }
+        assert!(t.quiesce_migration());
+        assert!(t.grow_events() >= 1, "window 2× nominal must force growth");
+        assert!(t.capacity() >= nominal * 2);
     }
 
     #[test]

@@ -17,6 +17,9 @@ use std::sync::Arc;
 
 use crate::tables::{ConcurrentMap, UpsertOp, UpsertResult};
 
+/// Fraction of table capacity the FIFO ring may occupy (paper §6.6).
+const RING_FRACTION: f64 = 0.85;
+
 /// Host-side backing store: the full dataset (simulating CPU DRAM).
 pub struct HostStore {
     map: std::collections::HashMap<u64, u64>,
@@ -47,9 +50,14 @@ impl HostStore {
 pub struct GpuCache {
     table: Arc<dyn ConcurrentMap>,
     store: HostStore,
-    /// FIFO ring of resident keys, capped at 85% of table capacity.
+    /// FIFO ring of resident keys, capped at 85% of table capacity
+    /// (recomputed from the live capacity in growth mode).
     ring: VecDeque<u64>,
     ring_cap: usize,
+    /// Growth mode: the device table grows online instead of evicting —
+    /// the ring cap follows the grown capacity, so saturation triggers
+    /// a 2× growth rather than the Full-eviction-retry contortion.
+    grow: bool,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
@@ -59,19 +67,48 @@ impl GpuCache {
     /// Returns `None` when the table design cannot run this workload
     /// (unstable tables — the paper's CuckooHT case).
     pub fn new(table: Arc<dyn ConcurrentMap>, store: HostStore) -> Option<Self> {
+        Self::with_mode(table, store, false)
+    }
+
+    /// Growth-mode cache over a growable table
+    /// ([`crate::tables::GrowableMap`]): instead of FIFO-evicting at 85%
+    /// of a fixed capacity, the device table grows 2× online and keeps
+    /// admitting — the paper's §6.6 chaining observation (a 10% cache
+    /// growing toward 28% of the dataset) reproduced through real growth
+    /// rather than Full-driven eviction churn. Returns `None` for
+    /// unstable or fixed-capacity tables.
+    pub fn with_growth(table: Arc<dyn ConcurrentMap>, store: HostStore) -> Option<Self> {
+        if !table.can_grow() {
+            return None;
+        }
+        Self::with_mode(table, store, true)
+    }
+
+    fn with_mode(table: Arc<dyn ConcurrentMap>, store: HostStore, grow: bool) -> Option<Self> {
         if !table.is_stable() {
             return None;
         }
-        let ring_cap = ((table.capacity() as f64) * 0.85) as usize;
+        let ring_cap = ((table.capacity() as f64) * RING_FRACTION) as usize;
         Some(Self {
             table,
             store,
             ring: VecDeque::with_capacity(ring_cap + 1),
             ring_cap: ring_cap.max(1),
+            grow,
             hits: 0,
             misses: 0,
             evictions: 0,
         })
+    }
+
+    /// Current admission bound: fixed at construction normally, tracking
+    /// the grown capacity in growth mode.
+    fn live_ring_cap(&mut self) -> usize {
+        if self.grow {
+            let cap = ((self.table.capacity() as f64) * RING_FRACTION) as usize;
+            self.ring_cap = self.ring_cap.max(cap.max(1));
+        }
+        self.ring_cap
     }
 
     /// One cache access: query the device table; on miss fetch from the
@@ -88,7 +125,7 @@ impl GpuCache {
         match self.table.upsert(key, v, &UpsertOp::InsertIfUnique) {
             UpsertResult::Inserted => {
                 self.ring.push_back(key);
-                if self.ring.len() > self.ring_cap {
+                if self.ring.len() > self.live_ring_cap() {
                     if let Some(old) = self.ring.pop_front() {
                         // Evicted keys "are returned to the CPU" — the
                         // store already holds them; just drop from device.
@@ -99,8 +136,10 @@ impl GpuCache {
             }
             UpsertResult::Updated => { /* raced with ourselves: fine */ }
             UpsertResult::Full => {
-                // Device table saturated (can happen transiently right at
-                // the ring boundary): evict eagerly and retry once.
+                // Fixed table saturated (can happen transiently right at
+                // the ring boundary): evict eagerly and retry once. A
+                // growable table only reports Full at its policy ceiling,
+                // where eviction is the correct fallback too.
                 if let Some(old) = self.ring.pop_front() {
                     self.table.erase(old);
                     self.evictions += 1;
@@ -176,7 +215,7 @@ impl GpuCache {
                     }
                 }
             }
-            while self.ring.len() > self.ring_cap {
+            while self.ring.len() > self.live_ring_cap() {
                 if let Some(old) = self.ring.pop_front() {
                     evict.push(old);
                 }
@@ -284,6 +323,52 @@ mod tests {
             GpuCache::new(t, HostStore::new(std::iter::empty())).is_none(),
             "unstable tables must be rejected (paper §6.6)"
         );
+    }
+
+    #[test]
+    fn growth_mode_requires_a_growable_table() {
+        let fixed = build_table(TableKind::Chaining, 256);
+        assert!(
+            GpuCache::with_growth(fixed, HostStore::new(std::iter::empty())).is_none(),
+            "fixed tables cannot run the growth-mode cache"
+        );
+    }
+
+    #[test]
+    fn growth_mode_admits_past_nominal_without_eviction() {
+        use crate::tables::{GrowableMap, GrowthPolicy, TableConfig};
+        let data = distinct_keys(2000, 0xCF);
+        let t = std::sync::Arc::new(GrowableMap::new(
+            TableKind::Chaining,
+            TableConfig::for_kind(TableKind::Chaining, 512),
+            GrowthPolicy {
+                migration_batch: 16,
+                ..Default::default()
+            },
+        ));
+        let nominal = t.capacity();
+        let mut c =
+            GpuCache::with_growth(std::sync::Arc::clone(&t) as _, store_of(&data)).unwrap();
+        let mut draws = UniverseDraws::new(&data, 5);
+        for _ in 0..20_000 {
+            let k = draws.next_key();
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert!(t.quiesce_migration());
+        assert_eq!(c.evictions, 0, "growth replaces eviction");
+        assert!(
+            c.resident() > nominal,
+            "cache never outgrew its nominal table: {} <= {nominal}",
+            c.resident()
+        );
+        assert!(t.grow_events() >= 1, "the device table never grew");
+        // With the whole dataset eventually resident, hits dominate.
+        c.hits = 0;
+        c.misses = 0;
+        for _ in 0..4_000 {
+            c.get(draws.next_key());
+        }
+        assert!(c.hit_rate() > 0.95, "hit rate {} after full admission", c.hit_rate());
     }
 
     #[test]

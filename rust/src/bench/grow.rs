@@ -1,0 +1,126 @@
+//! Growth exhibit — online incremental 2× growth under insert-heavy
+//! churn (the WarpCore-style dynamic-growth capability; PAPERS.md).
+//!
+//! Each design starts at a quarter of the bench size and is driven to
+//! 2.5× its nominal capacity with bulk inserts while erasing a trailing
+//! 10% (aging-flavoured churn), interleaving one bounded migration step
+//! per batch exactly like the coordinator's workers do. Reported per
+//! design: growth events, migrated pairs, Full results (must be 0 —
+//! growth replaces rejection), final capacity/load factor, and Mops/s.
+//! JSON rows follow the human table for machine consumption.
+
+use std::sync::Arc;
+
+use crate::gpusim::probes;
+use crate::tables::{
+    ConcurrentMap, GrowableMap, GrowthPolicy, TableConfig, TableKind, UpsertOp, UpsertResult,
+};
+use crate::workloads::keys::distinct_keys;
+
+use super::{mops, report, BenchEnv};
+
+/// One design's growth run. Returns
+/// `(grows, migrated, full_results, final_capacity, load_factor, mops)`.
+pub fn measure(kind: TableKind, slots: usize, seed: u64) -> (u64, u64, u64, usize, f64, f64) {
+    let t = Arc::new(GrowableMap::new(
+        kind,
+        TableConfig::for_kind(kind, slots),
+        GrowthPolicy::default(),
+    ));
+    let nominal = t.capacity();
+    let target = nominal * 5 / 2; // drive well past 2× nominal
+    let ks = distinct_keys(target, seed ^ kind as u64);
+    let mut full = 0u64;
+    let mut ures: Vec<UpsertResult> = Vec::new();
+    let mut eres: Vec<bool> = Vec::new();
+    let total_ops = target + target / 10;
+    let m = mops(total_ops, || {
+        let mut erased_to = 0usize;
+        for (ci, chunk) in ks.chunks(256).enumerate() {
+            let pairs: Vec<(u64, u64)> = chunk.iter().map(|&k| (k, k ^ 5)).collect();
+            ures.clear();
+            t.upsert_bulk(&pairs, &UpsertOp::InsertIfUnique, &mut ures);
+            full += ures.iter().filter(|&&r| r == UpsertResult::Full).count() as u64;
+            // Aging-flavoured churn: erase the oldest 10% behind the
+            // insert frontier in bulk.
+            let frontier = (ci + 1) * 256;
+            let erase_to = (frontier / 10).min(ks.len());
+            if erase_to > erased_to {
+                eres.clear();
+                t.erase_bulk(&ks[erased_to..erase_to], &mut eres);
+                erased_to = erase_to;
+            }
+            // One bounded migration step per batch, the coordinator
+            // workers' interleaving.
+            t.drive_migration(t.policy().migration_batch);
+        }
+    });
+    // Quiesce before auditing.
+    t.quiesce_migration();
+    (
+        t.grow_events(),
+        t.migrated_pairs(),
+        full,
+        t.capacity(),
+        t.load_factor(),
+        m,
+    )
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let _measure = probes::measurement_section();
+    probes::set_enabled(false);
+    let slots = (env.slots / 4).max(1024);
+    let mut rows = Vec::new();
+    let mut json = String::new();
+    for kind in TableKind::CONCURRENT {
+        let (grows, migrated, full, final_cap, lf, m) = measure(kind, slots, env.seed);
+        rows.push(vec![
+            kind.paper_name().to_string(),
+            slots.to_string(),
+            final_cap.to_string(),
+            grows.to_string(),
+            migrated.to_string(),
+            full.to_string(),
+            report::fmt_f(lf, 2),
+            report::fmt_f(m, 2),
+        ]);
+        json.push_str(&report::json_row(&[
+            ("exhibit", report::JsonVal::Str("grow".into())),
+            ("table", report::JsonVal::Str(kind.paper_name().into())),
+            ("nominal_slots", report::JsonVal::Int(slots as u64)),
+            ("final_capacity", report::JsonVal::Int(final_cap as u64)),
+            ("grow_events", report::JsonVal::Int(grows)),
+            ("migrated_pairs", report::JsonVal::Int(migrated)),
+            ("full_results", report::JsonVal::Int(full)),
+            ("load_factor", report::JsonVal::Num(lf)),
+            ("mops", report::JsonVal::Num(m)),
+        ]));
+        json.push('\n');
+    }
+    probes::set_enabled(true);
+    let mut out = report::table(
+        "Growth — online 2× growth under insert-heavy churn (2.5× nominal inserts)",
+        &["table", "nominal", "final_cap", "grows", "migrated", "full", "lf", "Mops"],
+        &rows,
+    );
+    out.push('\n');
+    out.push_str(&json);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_bench_reports_growth_and_zero_full() {
+        let (grows, migrated, full, final_cap, lf, m) = measure(TableKind::P2Meta, 1024, 0x9);
+        assert!(grows >= 1, "2.5× inserts must force at least one growth");
+        assert!(migrated > 0, "growth without migration");
+        assert_eq!(full, 0, "growable insert-heavy churn must never reject");
+        assert!(final_cap >= 2 * 1024, "capacity {final_cap} never doubled");
+        assert!(lf > 0.0 && lf <= 1.0);
+        assert!(m > 0.0);
+    }
+}

@@ -37,7 +37,7 @@ use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 
 use super::{Batch, Op, ShardedTable};
-use crate::tables::{ConcurrentMap, TableKind, UpsertOp, UpsertResult};
+use crate::tables::{ConcurrentMap, GrowthPolicy, TableKind, UpsertOp, UpsertResult};
 
 /// Result of one operation, tagged with its sequence number.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,6 +59,14 @@ pub struct CoordinatorConfig {
     /// [`Coordinator::n_workers`] reports the effective width.
     pub n_workers: usize,
     pub max_batch: usize,
+    /// Online growth policy for the shards. `Some` wraps every shard in
+    /// a [`crate::tables::GrowableMap`]: `total_slots` becomes the
+    /// initial provisioning, shards grow 2× when load crosses the
+    /// trigger, migration batches run on the shard-affine workers
+    /// between operation batches, and `Full` turns into grow-and-retry
+    /// instead of [`OpResult::Rejected`]. `None` keeps fixed-capacity
+    /// shards that reject at saturation.
+    pub growth: Option<GrowthPolicy>,
 }
 
 impl Default for CoordinatorConfig {
@@ -69,6 +77,7 @@ impl Default for CoordinatorConfig {
             n_shards: 8,
             n_workers: default_workers(),
             max_batch: 1024,
+            growth: None,
         }
     }
 }
@@ -113,15 +122,24 @@ impl OpClass {
     }
 }
 
-/// One unit of work for a pool worker: the shard sub-batches it owns
-/// from one submitted batch, plus the per-batch reply channel.
-struct Job {
-    parts: Vec<(usize, Vec<(u64, Op)>)>,
-    /// The whole batch is queries — skip run-splitting, dispatch each
-    /// sub-batch as one read run ([`Batch::read_only`]).
-    read_only: bool,
-    offload: Option<Arc<dyn ReadOffload>>,
-    reply: Sender<Vec<(u64, OpResult)>>,
+/// One unit of work for a pool worker.
+enum Job {
+    /// The shard sub-batches this worker owns from one submitted batch,
+    /// plus the per-batch reply channel.
+    Batch {
+        parts: Vec<(usize, Vec<(u64, Op)>)>,
+        /// The whole batch is queries — skip run-splitting, dispatch each
+        /// sub-batch as one read run ([`Batch::read_only`]).
+        read_only: bool,
+        offload: Option<Arc<dyn ReadOffload>>,
+        reply: Sender<Vec<(u64, OpResult)>>,
+    },
+    /// Advance shard `shard_idx`'s in-progress growth migration by up to
+    /// `buckets` old-table buckets. [`Coordinator::submit`] enqueues one
+    /// of these ahead of each batch for every migrating shard, so
+    /// migration work interleaves with foreground traffic on the same
+    /// shard-affine worker instead of stalling it.
+    Migrate { shard_idx: usize, buckets: usize },
 }
 
 /// Long-lived shard-affine workers. Spawned once at coordinator
@@ -144,28 +162,41 @@ impl WorkerPool {
                 .name(format!("warpspeed-worker-{w}"))
                 .spawn(move || {
                     while let Ok(job) = rx.recv() {
-                        let mut out = Vec::new();
-                        for (shard_idx, part) in &job.parts {
-                            let shard = table.shards[*shard_idx].as_ref();
-                            if job.read_only {
-                                Coordinator::apply_read_only_part(
-                                    shard,
-                                    part,
-                                    job.offload.as_deref(),
-                                    &mut out,
-                                );
-                            } else {
-                                Coordinator::apply_part(
-                                    shard,
-                                    part,
-                                    job.offload.as_deref(),
-                                    &mut out,
-                                );
+                        match job {
+                            Job::Batch {
+                                parts,
+                                read_only,
+                                offload,
+                                reply,
+                            } => {
+                                let mut out = Vec::new();
+                                for (shard_idx, part) in &parts {
+                                    let shard = table.shards[*shard_idx].as_ref();
+                                    if read_only {
+                                        Coordinator::apply_read_only_part(
+                                            shard,
+                                            part,
+                                            offload.as_deref(),
+                                            &mut out,
+                                        );
+                                    } else {
+                                        Coordinator::apply_part(
+                                            shard,
+                                            part,
+                                            offload.as_deref(),
+                                            &mut out,
+                                        );
+                                    }
+                                }
+                                // A dropped receiver just means the
+                                // submitter went away mid-batch; the
+                                // worker keeps serving.
+                                let _ = reply.send(out);
+                            }
+                            Job::Migrate { shard_idx, buckets } => {
+                                table.shards[shard_idx].drive_migration(buckets);
                             }
                         }
-                        // A dropped receiver just means the submitter went
-                        // away mid-batch; the worker keeps serving.
-                        let _ = job.reply.send(out);
                     }
                 })
                 .expect("failed to spawn coordinator worker");
@@ -214,7 +245,12 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
-        let table = Arc::new(ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards));
+        let table = Arc::new(match cfg.growth {
+            Some(policy) => {
+                ShardedTable::new_growable(cfg.kind, cfg.total_slots, cfg.n_shards, policy)
+            }
+            None => ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards),
+        });
         // More workers than shards would park forever on empty channels
         // (shard i is pinned to worker i % n_workers), so clamp.
         let pool = WorkerPool::spawn(&table, cfg.n_workers.min(cfg.n_shards));
@@ -285,6 +321,13 @@ impl Coordinator {
                             match r {
                                 UpsertResult::Inserted => OpResult::Upserted(true),
                                 UpsertResult::Updated => OpResult::Upserted(false),
+                                // Growable shards have already grown and
+                                // retried inside `upsert_bulk` (clobber-
+                                // guarded, in batch order); a Full that
+                                // survives means the shard is pinned at
+                                // its capacity ceiling, where rejection
+                                // is the correct verdict for growable
+                                // and fixed shards alike.
                                 UpsertResult::Full => OpResult::Rejected,
                             },
                         )
@@ -360,6 +403,20 @@ impl Coordinator {
         let parts = batch.partition(&self.table.router);
         let read_only = batch.read_only();
         let n_workers = self.pool.len();
+        // Growth interleaving: every migrating shard gets one bounded
+        // migration job queued AHEAD of this batch on its owning worker
+        // (FIFO), so capacity is freed before the traffic that needs it
+        // and migration never stalls the pool for longer than one batch.
+        if self.cfg.growth.is_some() {
+            for (i, shard) in self.table.shards.iter().enumerate() {
+                if shard.migration_in_progress() {
+                    let _ = self.pool.txs[i % n_workers].send(Job::Migrate {
+                        shard_idx: i,
+                        buckets: self.migration_buckets_per_batch(),
+                    });
+                }
+            }
+        }
         let mut per_worker: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
             (0..n_workers).map(|_| Vec::new()).collect();
         for (i, p) in parts.into_iter().enumerate() {
@@ -374,7 +431,7 @@ impl Coordinator {
                 continue;
             }
             self.pool.txs[w]
-                .send(Job {
+                .send(Job::Batch {
                     parts,
                     read_only,
                     offload: self.offload.clone(),
@@ -390,6 +447,29 @@ impl Coordinator {
             jobs,
             ops: batch.len(),
         }
+    }
+
+    /// Old-table buckets one [`Job::Migrate`] advances — one policy batch
+    /// per submitted traffic batch.
+    fn migration_buckets_per_batch(&self) -> usize {
+        self.cfg
+            .growth
+            .map(|p| p.migration_batch.max(1))
+            .unwrap_or(0)
+    }
+
+    /// Drive every shard's in-progress growth migration to completion on
+    /// the calling thread (quiesce helper: benches snapshot state, tests
+    /// audit it, shutdown paths drain residual work). Returns false when
+    /// some shard's migration is pinned at
+    /// [`GrowthPolicy::max_capacity`] and could not complete (see
+    /// [`ConcurrentMap::quiesce_migration`]).
+    pub fn finish_migrations(&self) -> bool {
+        let mut all_done = true;
+        for shard in &self.table.shards {
+            all_done &= shard.quiesce_migration();
+        }
+        all_done
     }
 
     /// Wait for a submitted batch and merge its results back into
@@ -462,6 +542,7 @@ mod tests {
             n_shards: 4,
             n_workers: 2,
             max_batch: 64,
+            growth: None,
         })
     }
 
@@ -552,6 +633,7 @@ mod tests {
             n_shards: 4,
             n_workers: 2,
             max_batch: 128,
+            growth: None,
         })
         .with_offload(std::sync::Arc::clone(&mirror) as std::sync::Arc<dyn super::ReadOffload>);
         let ks = distinct_keys(300, 0xE5);
@@ -593,6 +675,7 @@ mod tests {
             n_shards: 4,
             n_workers: 2,
             max_batch: 64,
+            growth: None,
         })
         .with_offload(std::sync::Arc::new(Decline));
         let ks = distinct_keys(100, 0xE6);
@@ -698,6 +781,7 @@ mod tests {
             n_shards: 4,
             n_workers: 2,
             max_batch: 64,
+            growth: None,
         })
         .with_offload(std::sync::Arc::clone(&counter) as std::sync::Arc<dyn super::ReadOffload>);
         let ks = distinct_keys(128, 0xE9);
@@ -735,6 +819,91 @@ mod tests {
             CoordinatorConfig::default().n_workers,
             super::default_workers()
         );
+    }
+
+    #[test]
+    fn full_becomes_retry_after_grow_for_growable_shards() {
+        // Regression for the `Full → Rejected` dead end: a stream that a
+        // fixed-capacity coordinator must reject succeeds end to end on a
+        // growable one, with no op lost or duplicated.
+        let mk = |growth| {
+            Coordinator::new(CoordinatorConfig {
+                kind: TableKind::Double,
+                total_slots: 512,
+                n_shards: 2,
+                n_workers: 2,
+                max_batch: 64,
+                growth,
+            })
+        };
+        let ks = distinct_keys(2048, 0xEA); // 4× the provisioning
+        let fixed = mk(None);
+        let r = fixed.run_stream(ks.iter().map(|&k| Op::Upsert(k, k ^ 1)));
+        assert!(
+            r.iter().any(|&x| x == OpResult::Rejected),
+            "baseline: a fixed 512-slot table must reject a 2048-key load"
+        );
+        let growing = mk(Some(crate::tables::GrowthPolicy {
+            migration_batch: 16,
+            ..Default::default()
+        }));
+        let mut ops: Vec<Op> = ks.iter().map(|&k| Op::Upsert(k, k ^ 1)).collect();
+        ops.extend(ks.iter().map(|&k| Op::Query(k)));
+        let r = growing.run_stream(ops);
+        assert_eq!(r.len(), 2 * ks.len());
+        for (i, &x) in r[..ks.len()].iter().enumerate() {
+            assert_eq!(x, OpResult::Upserted(true), "upsert {i} not retried after grow");
+        }
+        for (i, &x) in r[ks.len()..].iter().enumerate() {
+            assert_eq!(x, OpResult::Value(Some(ks[i] ^ 1)), "query {i} lost after grow");
+        }
+        growing.finish_migrations();
+        assert_eq!(growing.table.len(), ks.len(), "ops lost or duplicated");
+        assert!(
+            growing.table.capacity() > 512,
+            "growable shards never grew: capacity {}",
+            growing.table.capacity()
+        );
+    }
+
+    #[test]
+    fn migration_jobs_share_the_worker_pool() {
+        // Keep traffic flowing while shards migrate: the per-batch
+        // Migrate jobs (enqueued ahead of each batch) must finish the
+        // growth without any help from finish_migrations.
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Chaining,
+            total_slots: 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 128,
+            growth: Some(crate::tables::GrowthPolicy {
+                migration_batch: 32,
+                ..Default::default()
+            }),
+        });
+        let ks = distinct_keys(3 * 1024, 0xEB);
+        // Insert 3× the provisioning, then keep issuing read batches: the
+        // submit-side Migrate jobs drain the migrations.
+        let r = c.run_stream(ks.iter().map(|&k| Op::Upsert(k, k ^ 3)));
+        assert!(r.iter().all(|&x| x != OpResult::Rejected), "growable shard rejected");
+        for round in 0..50 {
+            let r = c.run_stream(ks.iter().take(64).map(|&k| Op::Query(k)));
+            assert!(
+                r.iter()
+                    .enumerate()
+                    .all(|(i, &x)| x == OpResult::Value(Some(ks[i] ^ 3))),
+                "round {round}: wrong read during pooled migration"
+            );
+            if !c.table.shards.iter().any(|s| s.migration_in_progress()) {
+                break;
+            }
+        }
+        assert!(
+            !c.table.shards.iter().any(|s| s.migration_in_progress()),
+            "pool-driven migration never completed"
+        );
+        assert_eq!(c.table.len(), ks.len());
     }
 
     #[test]

@@ -42,6 +42,19 @@
 //!
 //! Results are merged back into arrival order by sequence number.
 //!
+//! ## Online growth
+//!
+//! With [`CoordinatorConfig`]`::growth` set, every shard is a
+//! [`crate::tables::GrowableMap`]: when a shard's load factor crosses
+//! the policy trigger (or an upsert hits `Full`) it allocates a 2×
+//! successor and migrates incrementally. [`Coordinator::submit`]
+//! enqueues one bounded migration job per migrating shard AHEAD of each
+//! batch on the shard's own worker, so migration interleaves with
+//! foreground traffic on the persistent pool instead of stalling it,
+//! and `Full` becomes grow-and-retry rather than
+//! [`OpResult::Rejected`]. [`Coordinator::finish_migrations`] drains
+//! residual migration work at quiesce points.
+//!
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches
 //!   the same shard (required for per-key linearization);

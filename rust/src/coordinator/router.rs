@@ -8,7 +8,10 @@
 use std::sync::Arc;
 
 use crate::hash::seeded;
-use crate::tables::{build_table_with, ConcurrentMap, TableConfig, TableKind, UpsertOp, UpsertResult};
+use crate::tables::{
+    build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, TableConfig, TableKind, UpsertOp,
+    UpsertResult,
+};
 
 /// Pure, stateless key→shard map.
 #[derive(Clone, Copy, Debug)]
@@ -49,6 +52,35 @@ impl ShardedTable {
         let per_shard = total_slots.div_ceil(n_shards);
         let shards = (0..n_shards)
             .map(|_| build_table_with(kind, TableConfig::for_kind(kind, per_shard)))
+            .collect();
+        Self {
+            router,
+            shards,
+            kind,
+        }
+    }
+
+    /// Like [`ShardedTable::new`] but every shard is wrapped in a
+    /// [`GrowableMap`]: `total_slots` is the initial provisioning, and
+    /// each shard grows 2× independently when its own load crosses the
+    /// policy trigger (shards age at statistically equal rates, so in
+    /// practice they grow together).
+    pub fn new_growable(
+        kind: TableKind,
+        total_slots: usize,
+        n_shards: usize,
+        policy: GrowthPolicy,
+    ) -> Self {
+        let router = Router::new(n_shards);
+        let per_shard = total_slots.div_ceil(n_shards);
+        let shards = (0..n_shards)
+            .map(|_| {
+                Arc::new(GrowableMap::new(
+                    kind,
+                    TableConfig::for_kind(kind, per_shard),
+                    policy,
+                )) as Arc<dyn ConcurrentMap>
+            })
             .collect();
         Self {
             router,

@@ -47,6 +47,15 @@ thread_local! {
     /// to the same candidate-bucket triple). `bulk_ops / bulk_groups`
     /// is the batch's amortization factor.
     static BULK_GROUPS: Cell<u64> = const { Cell::new(0) };
+    /// Key-value pairs moved old→successor by THIS thread during
+    /// growable-table migration ([`crate::tables::growable`]) — the
+    /// probe-style window over migration work a thread performed itself
+    /// (the grow exhibit reports totals from the wrapper's per-instance
+    /// atomics instead, which also see worker-thread migration).
+    static MIGRATED_PAIRS: Cell<u64> = const { Cell::new(0) };
+    /// Growth events (successor-table allocations) triggered by THIS
+    /// thread.
+    static GROW_EVENTS: Cell<u64> = const { Cell::new(0) };
 }
 
 #[inline(always)]
@@ -86,6 +95,32 @@ pub(crate) fn count_bulk_group() {
 /// value.
 pub fn take_bulk_groups() -> u64 {
     BULK_GROUPS.with(|c| c.replace(0))
+}
+
+#[inline(always)]
+pub(crate) fn count_migrated_pair() {
+    if enabled() {
+        MIGRATED_PAIRS.with(|c| c.set(c.get() + 1));
+    }
+}
+
+/// Reset the calling thread's migrated-pair counter, returning the
+/// previous value.
+pub fn take_migrated_pairs() -> u64 {
+    MIGRATED_PAIRS.with(|c| c.replace(0))
+}
+
+#[inline(always)]
+pub(crate) fn count_grow_event() {
+    if enabled() {
+        GROW_EVENTS.with(|c| c.set(c.get() + 1));
+    }
+}
+
+/// Reset the calling thread's growth-event counter, returning the
+/// previous value.
+pub fn take_grow_events() -> u64 {
+    GROW_EVENTS.with(|c| c.replace(0))
 }
 
 /// The [`set_enabled`] recording flag is process-global (the counters
@@ -260,6 +295,20 @@ mod tests {
         let s = ProbeScope::begin();
         touch(1);
         assert_eq!(s.finish(), 1);
+    }
+
+    #[test]
+    fn migration_counters_accumulate_and_reset() {
+        let _measure = measurement_section();
+        set_enabled(true);
+        take_migrated_pairs();
+        take_grow_events();
+        count_migrated_pair();
+        count_migrated_pair();
+        count_grow_event();
+        assert_eq!(take_migrated_pairs(), 2);
+        assert_eq!(take_grow_events(), 1);
+        assert_eq!(take_migrated_pairs(), 0, "take must reset");
     }
 
     #[test]

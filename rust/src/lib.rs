@@ -48,6 +48,17 @@
 //!   launch); the YCSB bench and the GPU-cache app
 //!   ([`apps::caching::GpuCache::get_many`]) drive their hot loops
 //!   through the same bulk entry points.
+//!
+//! # Online growth
+//!
+//! [`tables::GrowableMap`] wraps any design with WarpCore-style online
+//! growth: a 2× successor is allocated at a load-factor trigger (or on
+//! `Full`) and old buckets migrate incrementally in fixed batches
+//! interleaved with traffic — old-then-new reads, successor-bound
+//! upserts, dual erases, one lock per old primary bucket. The
+//! coordinator drives shard migrations on its persistent workers and
+//! turns `Full` into grow-and-retry ([`coordinator::CoordinatorConfig`]
+//! `::growth`); the `grow` exhibit ([`bench::grow`]) measures it.
 
 pub mod gpusim;
 pub mod hash;

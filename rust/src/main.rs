@@ -3,10 +3,10 @@
 //!
 //! ```text
 //! warpspeed info
-//! warpspeed probes|bulk|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
+//! warpspeed probes|bulk|grow|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
 //!           [--slots N] [--iters N] [--seed S]
 //! warpspeed all          # every exhibit in sequence
-//! warpspeed serve [--table p2m] [--slots N] [--shards N]
+//! warpspeed serve [--table p2m] [--slots N] [--shards N] [--grow]
 //! ```
 //!
 //! The serve protocol (stdin/stdout, one op per line):
@@ -37,10 +37,11 @@ fn main() {
             println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
             println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
             println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
-            println!("subcommands: probes bulk load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
+            println!("subcommands: probes bulk grow load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
         }
         "probes" => print!("{}", bench::probes::run(&env)),
         "bulk" => print!("{}", bench::bulk::run(&env)),
+        "grow" => print!("{}", bench::grow::run(&env)),
         "load" => print!("{}", bench::load::run(&env)),
         "aging" => print!("{}", bench::aging::run(&env)),
         "caching" => print!("{}", bench::caching::run(&env)),
@@ -56,6 +57,7 @@ fn main() {
             for (name, f) in [
                 ("probes", bench::probes::run as fn(&BenchEnv) -> String),
                 ("bulk", bench::bulk::run),
+                ("grow", bench::grow::run),
                 ("load", bench::load::run),
                 ("aging", bench::aging::run),
                 ("caching", bench::caching::run),
@@ -95,6 +97,11 @@ fn serve(args: &Args) {
         n_shards: args.get_usize("shards", 8),
         n_workers: args.get_usize("workers", default_workers()),
         max_batch: args.get_usize("batch", 256),
+        // `--grow` serves a growable table that expands 2x online instead
+        // of rejecting writes at saturation.
+        growth: args
+            .get_bool("grow")
+            .then(warpspeed::tables::GrowthPolicy::default),
     };
     let coord = Coordinator::new(cfg);
     eprintln!(

@@ -178,6 +178,22 @@ impl ChainingHt {
         Some(node)
     }
 
+    /// Raw snapshot walk of bucket `b`'s chain: the callback receives
+    /// every pair slot's key index and raw key value (EMPTY included).
+    /// The single traversal all quiesced/raw scans share —
+    /// `for_each_entry`, `count_copies`, and the migration iterator.
+    fn walk_chain_raw(&self, b: usize, f: &mut dyn FnMut(usize, u64)) {
+        let mem = self.nodes.mem();
+        let mut node = self.heads.snapshot_raw(b);
+        while node != NIL {
+            for p in 0..NODE_PAIRS {
+                let kidx = self.pair_kidx(node, p);
+                f(kidx, mem.snapshot_raw(kidx));
+            }
+            node = mem.snapshot_raw(self.nodes.base_slot(node) + NEXT_OFF);
+        }
+    }
+
     fn apply_existing(&self, node: u64, pair: usize, old_v: u64, val: u64, op: &UpsertOp) {
         let mem = self.nodes.mem();
         let vidx = self.pair_kidx(node, pair) + 1;
@@ -278,6 +294,7 @@ impl ConcurrentMap for ChainingHt {
     fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
         let base = out.len();
         out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = pairs_in.iter().map(|&(k, _)| self.bucket_of(k)).collect();
         let locking = self.mode.locking();
         let strong = self.mode.strong();
@@ -311,11 +328,11 @@ impl ConcurrentMap for ChainingHt {
                     let vidx = self.pair_kidx(node, pair) + 1;
                     let old = mem.load(vidx, strong);
                     self.apply_existing(node, pair, old, v, op);
-                    out[base + i as usize] = UpsertResult::Updated;
+                    slots.set(i as usize, UpsertResult::Updated);
                     continue;
                 }
                 if full_keys.contains(&k) {
-                    out[base + i as usize] = UpsertResult::Full;
+                    slots.set(i as usize, UpsertResult::Full);
                     continue;
                 }
                 self.hook.on_event(RaceEvent::BeforeClaim { key: k, bucket: b });
@@ -330,7 +347,7 @@ impl ConcurrentMap for ChainingHt {
                     mem.store_release(kidx, k);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     local.push((k, node, pair));
-                    out[base + i as usize] = UpsertResult::Inserted;
+                    slots.set(i as usize, UpsertResult::Inserted);
                     continue;
                 }
                 // Free list dry: prepend a fresh node, hand its remaining
@@ -344,10 +361,10 @@ impl ConcurrentMap for ChainingHt {
                             free.push((node, p as u16));
                         }
                         local.push((k, node, 0));
-                        out[base + i as usize] = UpsertResult::Inserted;
+                        slots.set(i as usize, UpsertResult::Inserted);
                     }
                     None => {
-                        out[base + i as usize] = UpsertResult::Full;
+                        slots.set(i as usize, UpsertResult::Full);
                         full_keys.push(k);
                     }
                 }
@@ -356,12 +373,14 @@ impl ConcurrentMap for ChainingHt {
                 self.locks.unlock(b);
             }
         });
+        slots.finish("ChainingHT::upsert_bulk");
     }
 
     /// Bucket-grouped bulk query: lock-free, one chain walk per group.
     fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
         let base = out.len();
         out.resize(base + keys_in.len(), None);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.bucket_of(k)).collect();
         let strong = self.mode.strong();
         let mut found: Vec<Option<(u64, usize, u64)>> = Vec::new();
@@ -371,9 +390,10 @@ impl ConcurrentMap for ChainingHt {
             group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
             self.walk_group(b, &group_keys, strong, &mut found);
             for (j, &i) in group.iter().enumerate() {
-                out[base + i as usize] = found[j].map(|(_, _, v)| v);
+                slots.set(i as usize, found[j].map(|(_, _, v)| v));
             }
         });
+        slots.finish("ChainingHT::query_bulk");
     }
 
     /// Bucket-grouped bulk erase: one bucket lock and one chain walk per
@@ -382,6 +402,7 @@ impl ConcurrentMap for ChainingHt {
     fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
         let base = out.len();
         out.resize(base + keys_in.len(), false);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.bucket_of(k)).collect();
         let locking = self.mode.locking();
         let strong = self.mode.strong();
@@ -400,11 +421,11 @@ impl ConcurrentMap for ChainingHt {
                 if done.contains(&k) {
                     // First occurrence already erased it (or proved it
                     // absent); a scalar rescan would miss either way.
-                    out[base + i as usize] = false;
+                    slots.set(i as usize, false);
                     continue;
                 }
                 done.push(k);
-                out[base + i as usize] = match found[j] {
+                slots.set(i as usize, match found[j] {
                     Some((node, pair, _)) => {
                         self.nodes
                             .mem()
@@ -414,12 +435,13 @@ impl ConcurrentMap for ChainingHt {
                         true
                     }
                     None => false,
-                };
+                });
             }
             if locking {
                 self.locks.unlock(b);
             }
         });
+        slots.finish("ChainingHT::erase_bulk");
     }
 
     fn num_buckets(&self) -> usize {
@@ -483,41 +505,40 @@ impl ConcurrentMap for ChainingHt {
     }
 
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        let mem = self.nodes.mem();
         for b in 0..self.num_buckets {
-            let mut node = self.heads.snapshot_raw(b);
-            while node != NIL {
-                for p in 0..NODE_PAIRS {
-                    let kidx = self.pair_kidx(node, p);
-                    let k = self.nodes.mem().snapshot_raw(kidx);
-                    if is_user_key(k) {
-                        f(k, self.nodes.mem().snapshot_raw(kidx + 1));
-                    }
+            self.walk_chain_raw(b, &mut |kidx, k| {
+                if is_user_key(k) {
+                    f(k, mem.snapshot_raw(kidx + 1));
                 }
-                node = self
-                    .nodes
-                    .mem()
-                    .snapshot_raw(self.nodes.base_slot(node) + NEXT_OFF);
-            }
+            });
         }
     }
 
     fn count_copies(&self, key: u64) -> usize {
         let mut n = 0;
         for b in 0..self.num_buckets {
-            let mut node = self.heads.snapshot_raw(b);
-            while node != NIL {
-                for p in 0..NODE_PAIRS {
-                    if self.nodes.mem().snapshot_raw(self.pair_kidx(node, p)) == key {
-                        n += 1;
-                    }
+            self.walk_chain_raw(b, &mut |_, k| {
+                if k == key {
+                    n += 1;
                 }
-                node = self
-                    .nodes
-                    .mem()
-                    .snapshot_raw(self.nodes.base_slot(node) + NEXT_OFF);
-            }
+            });
         }
         n
+    }
+
+    /// Native migration iterator: chaining stores every entry in its
+    /// primary bucket's chain, so a range snapshot is a direct walk of
+    /// the range's chains — no full-table filter like the trait default.
+    fn collect_primary_range(&self, range: std::ops::Range<usize>, out: &mut Vec<(u64, u64)>) {
+        let mem = self.nodes.mem();
+        for b in range {
+            self.walk_chain_raw(b, &mut |kidx, k| {
+                if is_user_key(k) {
+                    out.push((k, mem.snapshot_raw(kidx + 1)));
+                }
+            });
+        }
     }
 }
 

@@ -352,6 +352,7 @@ impl ConcurrentMap for CuckooHt {
     fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
         let base = out.len();
         out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let triples: Vec<[usize; 3]> =
             pairs_in.iter().map(|&(k, _)| self.buckets_of(k)).collect();
         let locking = self.mode.locking();
@@ -383,12 +384,13 @@ impl ConcurrentMap for CuckooHt {
                         break;
                     }
                 }
-                out[base + i as usize] = res;
+                slots.set(i as usize, res);
             }
             if locking {
                 self.locks.unlock_three(bs);
             }
         });
+        slots.finish("CuckooHT::upsert_bulk");
     }
 
     /// Triple-grouped bulk query: one `lock_three` serves every query of
@@ -396,6 +398,7 @@ impl ConcurrentMap for CuckooHt {
     fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
         let base = out.len();
         out.resize(base + keys_in.len(), None);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let triples: Vec<[usize; 3]> = keys_in.iter().map(|&k| self.buckets_of(k)).collect();
         let locking = self.mode.locking();
         let strong = self.mode.strong();
@@ -412,12 +415,13 @@ impl ConcurrentMap for CuckooHt {
                         break;
                     }
                 }
-                out[base + i as usize] = v;
+                slots.set(i as usize, v);
             }
             if locking {
                 self.locks.unlock_three(bs);
             }
         });
+        slots.finish("CuckooHT::query_bulk");
     }
 
     /// Triple-grouped bulk erase under one `lock_three` per group.
@@ -426,6 +430,7 @@ impl ConcurrentMap for CuckooHt {
     fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
         let base = out.len();
         out.resize(base + keys_in.len(), false);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let triples: Vec<[usize; 3]> = keys_in.iter().map(|&k| self.buckets_of(k)).collect();
         let locking = self.mode.locking();
         let strong = self.mode.strong();
@@ -449,12 +454,13 @@ impl ConcurrentMap for CuckooHt {
                         break;
                     }
                 }
-                out[base + i as usize] = hit;
+                slots.set(i as usize, hit);
             }
             if locking {
                 self.locks.unlock_three(bs);
             }
         });
+        slots.finish("CuckooHT::erase_bulk");
     }
 
     fn num_buckets(&self) -> usize {

@@ -268,7 +268,7 @@ impl DoubleHt {
         per_tag: &mut Vec<MetaScan>,
         found: &mut Vec<Option<(usize, u64)>>,
         group_keys: &mut Vec<u64>,
-        out: &mut [UpsertResult],
+        out: &mut super::SlotWriter<'_, UpsertResult>,
     ) {
         let strong = self.mode.strong();
         let mut free = if let Some(meta) = &self.meta {
@@ -295,13 +295,13 @@ impl DoubleHt {
                 // with a fresh value read.
                 let (_, old) = self.pairs.pair_at(b, slot, strong);
                 self.apply_existing(b, slot, old, v, op);
-                out[i as usize] = UpsertResult::Updated;
+                out.set(i as usize, UpsertResult::Updated);
                 continue;
             }
             if fallback_keys.contains(&k) {
                 // An earlier fallback put it somewhere the shared scan
                 // cannot see — stay on the scalar path for this key.
-                out[i as usize] = self.upsert_under_lock(k, v, op);
+                out.set(i as usize, self.upsert_under_lock(k, v, op));
                 continue;
             }
             let hit = if self.meta.is_some() {
@@ -314,7 +314,7 @@ impl DoubleHt {
                 // predate earlier merges by this very group.
                 let (_, old) = self.pairs.pair_at(b, slot, strong);
                 self.apply_existing(b, slot, old, v, op);
-                out[i as usize] = UpsertResult::Updated;
+                out.set(i as usize, UpsertResult::Updated);
                 continue;
             }
             // Absence is proven only when the primary bucket held a
@@ -325,12 +325,12 @@ impl DoubleHt {
                 if let Some(slot) = self.claim_from(b, &mut free, k, v) {
                     self.live.fetch_add(1, Ordering::Relaxed);
                     local.push((k, slot));
-                    out[i as usize] = UpsertResult::Inserted;
+                    out.set(i as usize, UpsertResult::Inserted);
                     continue;
                 }
             }
             // Aged or contended primary: full scalar walk.
-            out[i as usize] = self.upsert_under_lock(k, v, op);
+            out.set(i as usize, self.upsert_under_lock(k, v, op));
             fallback_keys.push(k);
         }
     }
@@ -373,6 +373,7 @@ impl ConcurrentMap for DoubleHt {
     fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
         let base = out.len();
         out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = pairs_in.iter().map(|&(k, _)| self.primary_bucket(k)).collect();
         let locking = self.mode.locking();
         // Scratch shared across groups (no per-group allocations).
@@ -387,7 +388,7 @@ impl ConcurrentMap for DoubleHt {
             if group.len() == 1 {
                 let (k, v) = pairs_in[group[0] as usize];
                 debug_assert!(crate::gpusim::mem::is_user_key(k));
-                out[base + group[0] as usize] = self.upsert_under_lock(k, v, op);
+                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op));
             } else {
                 self.upsert_group(
                     b,
@@ -398,18 +399,20 @@ impl ConcurrentMap for DoubleHt {
                     &mut per_tag,
                     &mut found,
                     &mut group_keys,
-                    &mut out[base..],
+                    &mut slots,
                 );
             }
             if locking {
                 self.locks.unlock(b);
             }
         });
+        slots.finish("DoubleHT::upsert_bulk");
     }
 
     fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
         let base = out.len();
         out.resize(base + keys_in.len(), None);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.primary_bucket(k)).collect();
         let strong = self.mode.strong();
         let mut tags: Vec<u16> = Vec::new();
@@ -419,7 +422,7 @@ impl ConcurrentMap for DoubleHt {
         super::for_each_bucket_group(&buckets, |b, group| {
             if group.len() == 1 {
                 let i = group[0] as usize;
-                out[base + i] = self.query(keys_in[i]);
+                slots.set(i, self.query(keys_in[i]));
                 return;
             }
             if let Some(meta) = &self.meta {
@@ -428,7 +431,8 @@ impl ConcurrentMap for DoubleHt {
                 let (free, _) = meta.scan_group(b, &tags, strong, &mut per_tag);
                 for (j, &i) in group.iter().enumerate() {
                     let k = keys_in[i as usize];
-                    out[base + i as usize] =
+                    slots.set(
+                        i as usize,
                         match self.pairs.scan_slots(b, per_tag[j].match_slots(), k, strong) {
                             Some((_, v)) => Some(v),
                             // Scan-time EMPTY in the primary bucket ⇒ the
@@ -436,26 +440,32 @@ impl ConcurrentMap for DoubleHt {
                             None if free.had_empty() => None,
                             // Aged bucket: full probe-sequence walk.
                             None => self.query(k),
-                        };
+                        },
+                    );
                 }
             } else {
                 group_keys.clear();
                 group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
                 let (free, _) = self.pairs.scan_bucket_group(b, &group_keys, strong, &mut found);
                 for (j, &i) in group.iter().enumerate() {
-                    out[base + i as usize] = match found[j] {
-                        Some((_, v)) => Some(v),
-                        None if free.had_empty() => None,
-                        None => self.query(keys_in[i as usize]),
-                    };
+                    slots.set(
+                        i as usize,
+                        match found[j] {
+                            Some((_, v)) => Some(v),
+                            None if free.had_empty() => None,
+                            None => self.query(keys_in[i as usize]),
+                        },
+                    );
                 }
             }
         });
+        slots.finish("DoubleHT::query_bulk");
     }
 
     fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
         let base = out.len();
         out.resize(base + keys_in.len(), false);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.primary_bucket(k)).collect();
         let locking = self.mode.locking();
         let strong = self.mode.strong();
@@ -469,7 +479,7 @@ impl ConcurrentMap for DoubleHt {
             }
             if group.len() == 1 {
                 let i = group[0] as usize;
-                out[base + i] = self.erase_under_lock(keys_in[i]);
+                slots.set(i, self.erase_under_lock(keys_in[i]));
             } else {
                 // One shared scan of the primary bucket for the group.
                 let meta_free = if let Some(meta) = &self.meta {
@@ -489,7 +499,7 @@ impl ConcurrentMap for DoubleHt {
                 for (j, &i) in group.iter().enumerate() {
                     let k = keys_in[i as usize];
                     if processed.contains(&k) {
-                        out[base + i as usize] = self.erase_under_lock(k);
+                        slots.set(i as usize, self.erase_under_lock(k));
                         continue;
                     }
                     processed.push(k);
@@ -498,20 +508,24 @@ impl ConcurrentMap for DoubleHt {
                     } else {
                         found[j]
                     };
-                    out[base + i as usize] = match hit {
-                        Some((slot, _)) => {
-                            self.kill_at(b, slot, k);
-                            true
-                        }
-                        None if meta_free.had_empty() => false,
-                        None => self.erase_under_lock(k),
-                    };
+                    slots.set(
+                        i as usize,
+                        match hit {
+                            Some((slot, _)) => {
+                                self.kill_at(b, slot, k);
+                                true
+                            }
+                            None if meta_free.had_empty() => false,
+                            None => self.erase_under_lock(k),
+                        },
+                    );
                 }
             }
             if locking {
                 self.locks.unlock(b);
             }
         });
+        slots.finish("DoubleHT::erase_bulk");
     }
 
     fn num_buckets(&self) -> usize {

@@ -1,0 +1,945 @@
+//! Online incremental table growth — the subsystem that removes `Full`
+//! as a terminal outcome (WarpCore-style dynamic growth; see PAPERS.md).
+//!
+//! [`GrowableMap`] wraps any [`ConcurrentMap`] design. When the wrapped
+//! table reports `Full`, or its load factor crosses
+//! [`GrowthPolicy::trigger_load_factor`], a successor table of TWICE the
+//! capacity is allocated and the wrapper enters the *migrating* phase:
+//! old-table buckets are moved to the successor in fixed-size batches
+//! ([`GrowthPolicy::migration_batch`] buckets per
+//! [`ConcurrentMap::drive_migration`] claim) interleaved with foreground
+//! traffic, rather than in one stop-the-world copy. The coordinator's
+//! persistent shard-affine workers drive migration between operation
+//! batches, so growth shares the worker pool instead of stalling it.
+//!
+//! ## The migration protocol
+//!
+//! During migration both tables are live, with one rule per operation
+//! kind (all serialized per key through one external lock on the key's
+//! *old-table primary bucket*, [`Migration::locks`]):
+//!
+//! * **Queries** are lock-free and read **old-then-new**: a key lives in
+//!   the old table until it is moved, and every move inserts into the
+//!   successor *before* erasing from the old table, so a key that was
+//!   present stays continuously visible.
+//! * **Upserts land in the successor.** Any old-table copy is first
+//!   moved over (insert-if-unique into the successor, then erase from
+//!   old — the same seed-then-erase order), after which the policy is
+//!   applied against the successor exactly once. Merge semantics
+//!   (`AddAssign`, `Custom`) therefore see the pre-migration value.
+//! * **Erases apply to both** tables, old first, under the bucket lock.
+//! * **The migrator** claims a bucket range from an atomic cursor, takes
+//!   the range's locks, snapshots the live entries whose primary bucket
+//!   falls in the range ([`ConcurrentMap::collect_primary_range`]), and
+//!   moves each with the same seed-then-erase order.
+//!
+//! The per-bucket lock means a key never has more than one live copy
+//! observable outside a locked window (`count_copies` takes the lock, so
+//! stable designs keep their `== 1` invariant across a growth), and
+//! erase/upsert races on one key stay linearizable across the pair of
+//! tables. When every bucket is migrated and the old table is empty, the
+//! wrapper flips back to the *normal* phase over the successor; chained
+//! growths (4×, 8×, …) repeat the cycle.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use crate::gpusim::{probes, LockArray};
+
+use super::{build_table_with, ConcurrentMap, TableConfig, TableKind, UpsertOp, UpsertResult};
+
+/// When and how a [`GrowableMap`] grows.
+#[derive(Clone, Copy, Debug)]
+pub struct GrowthPolicy {
+    /// Load factor at which a successor is allocated proactively (growth
+    /// also starts reactively whenever the wrapped table reports `Full`).
+    pub trigger_load_factor: f64,
+    /// Old-table buckets migrated per [`ConcurrentMap::drive_migration`]
+    /// cursor claim — the fixed migration batch interleaved with
+    /// foreground traffic.
+    pub migration_batch: usize,
+    /// Hard capacity ceiling: a growth that would exceed it is refused
+    /// and the table reports `Full` like a fixed-capacity design.
+    pub max_capacity: usize,
+}
+
+impl Default for GrowthPolicy {
+    fn default() -> Self {
+        Self {
+            trigger_load_factor: 0.85,
+            migration_batch: 64,
+            max_capacity: usize::MAX / 4,
+        }
+    }
+}
+
+/// Bounded number of chained growth cycles one operation will wait
+/// through before reporting `Full` (2^8 = 256× the original capacity —
+/// far beyond any workload here; the bound only guards against bugs).
+const MAX_GROW_ROUNDS: usize = 8;
+/// Backstop on migration-pump iterations inside one blocked operation.
+const MAX_PUMPS: usize = 1 << 16;
+
+/// One in-progress old→successor migration.
+struct Migration {
+    old: Arc<dyn ConcurrentMap>,
+    new: Arc<dyn ConcurrentMap>,
+    /// One lock per OLD primary bucket: foreground mutators take their
+    /// key's lock, the migrator takes its whole claimed range — the
+    /// serialization that keeps move/upsert/erase races linearizable.
+    locks: LockArray,
+    /// Next unclaimed old-table bucket (claims advance by
+    /// [`GrowthPolicy::migration_batch`]).
+    cursor: AtomicUsize,
+    /// Buckets whose migration has COMPLETED (claims count here only
+    /// after their range is done; `done == total` gates the phase flip).
+    done: AtomicUsize,
+    /// Total old-table buckets.
+    total: usize,
+    /// Times the scan was re-opened because stragglers remained (the
+    /// successor was full mid-migration). Lets drivers detect a pinned
+    /// migration instead of re-scanning forever.
+    resets: AtomicUsize,
+}
+
+enum Phase {
+    /// Single live table, no growth in progress.
+    Normal(Arc<dyn ConcurrentMap>),
+    /// Old + successor live simultaneously, migration running.
+    Migrating(Arc<Migration>),
+}
+
+/// A [`ConcurrentMap`] wrapper that grows online instead of rejecting
+/// with `Full`. See the module docs for the migration protocol.
+pub struct GrowableMap {
+    kind: TableKind,
+    base_cfg: TableConfig,
+    policy: GrowthPolicy,
+    phase: RwLock<Phase>,
+    /// Growth events (successor allocations) over this table's lifetime.
+    grows: AtomicU64,
+    /// Pairs moved old→successor over this table's lifetime.
+    migrated: AtomicU64,
+}
+
+impl GrowableMap {
+    pub fn new(kind: TableKind, cfg: TableConfig, policy: GrowthPolicy) -> Self {
+        let initial = build_table_with(kind, cfg.clone());
+        Self {
+            kind,
+            base_cfg: cfg,
+            policy,
+            phase: RwLock::new(Phase::Normal(initial)),
+            grows: AtomicU64::new(0),
+            migrated: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> GrowthPolicy {
+        self.policy
+    }
+
+    /// Successor allocations so far.
+    pub fn grow_events(&self) -> u64 {
+        self.grows.load(Ordering::Relaxed)
+    }
+
+    /// Pairs moved old→successor so far.
+    pub fn migrated_pairs(&self) -> u64 {
+        self.migrated.load(Ordering::Relaxed)
+    }
+
+    /// Ordinary operations hold the phase read guard for their whole
+    /// duration, so a phase flip never overlaps an in-flight op (a stale
+    /// `Normal` writer could otherwise insert into the old table after
+    /// its buckets were migrated, stranding the key). Lock poisoning is
+    /// ignored: the phase value itself is always consistent.
+    fn read_phase(&self) -> RwLockReadGuard<'_, Phase> {
+        self.phase.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write_phase(&self) -> RwLockWriteGuard<'_, Phase> {
+        self.phase.write().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Allocate a 2× successor and flip to the migrating phase.
+    /// `from_capacity` identifies the table the caller observed full; if
+    /// the phase has moved on since (another thread grew, or a migration
+    /// is already running) this reports true and the caller simply
+    /// retries. Returns false only when [`GrowthPolicy::max_capacity`]
+    /// forbids further growth.
+    fn begin_grow(&self, from_capacity: usize) -> bool {
+        let next_cap = from_capacity.saturating_mul(2);
+        if next_cap > self.policy.max_capacity {
+            // Refused — unless the phase already moved past the table
+            // the caller saw full, in which case a retry may still win.
+            let g = self.read_phase();
+            return !matches!(&*g, Phase::Normal(t) if t.capacity() == from_capacity);
+        }
+        // Build the successor BEFORE taking the write lock: allocating
+        // and zeroing a table scales with its size and must not stall
+        // every concurrent op behind the phase lock. A lost install race
+        // just discards the speculative table.
+        let mut cfg = self.base_cfg.clone();
+        cfg.slots = next_cap;
+        let new = build_table_with(self.kind, cfg);
+        let mut g = self.write_phase();
+        let old = match &*g {
+            Phase::Normal(t) => {
+                if t.capacity() != from_capacity {
+                    return true; // someone already grew — retry
+                }
+                Arc::clone(t)
+            }
+            Phase::Migrating(_) => return true, // already growing
+        };
+        let total = old.num_buckets().max(1);
+        *g = Phase::Migrating(Arc::new(Migration {
+            old,
+            new,
+            locks: LockArray::new(total),
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            total,
+            resets: AtomicUsize::new(0),
+        }));
+        self.grows.fetch_add(1, Ordering::Relaxed);
+        probes::count_grow_event();
+        true
+    }
+
+    /// Start a growth cycle if the normal-phase load factor has crossed
+    /// the trigger. Called after inserts, outside any phase guard.
+    fn maybe_trigger_grow(&self) {
+        let grow_from = {
+            let g = self.read_phase();
+            match &*g {
+                Phase::Normal(t)
+                    if t.len() as f64
+                        >= self.policy.trigger_load_factor * t.capacity() as f64 =>
+                {
+                    Some(t.capacity())
+                }
+                _ => None,
+            }
+        };
+        if let Some(cap) = grow_from {
+            self.begin_grow(cap);
+        }
+    }
+
+    /// Move `key`'s old-table copy to the successor, under the key's
+    /// already-held bucket lock. Seed-then-erase: the successor is
+    /// seeded (insert-if-unique, so a fresher successor value wins)
+    /// BEFORE the old copy is erased, keeping the key continuously
+    /// visible to lock-free old-then-new readers. Returns false when the
+    /// successor rejected the seed (saturated) — the old copy stays put
+    /// and the caller must bail WITHOUT applying its operation, or it
+    /// would leave two live copies and lose the pre-migration value from
+    /// merge policies.
+    fn move_old_copy(m: &Migration, key: u64) -> bool {
+        if let Some(ov) = m.old.query(key) {
+            if m.new.upsert(key, ov, &UpsertOp::InsertIfUnique) == UpsertResult::Full {
+                return false;
+            }
+            m.old.erase(key);
+        }
+        true
+    }
+
+    /// Upsert during migration, under the key's old-bucket lock: move any
+    /// old-table copy over, then apply the policy against the successor
+    /// exactly once.
+    fn upsert_migrating(m: &Migration, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        let ob = m.old.primary_bucket(key);
+        m.locks.lock(ob);
+        let r = if Self::move_old_copy(m, key) {
+            m.new.upsert(key, val, op)
+        } else {
+            // Seed blocked: report Full and let the caller pump/grow.
+            UpsertResult::Full
+        };
+        m.locks.unlock(ob);
+        r
+    }
+
+    /// Should a foreground writer contribute a migration step right now?
+    /// True once the successor's load crosses the pump threshold — the
+    /// policy trigger capped at 0.75, so even a near-1.0 trigger leaves
+    /// enough successor headroom for the old table to finish draining
+    /// before the successor can saturate (no chained growth is possible
+    /// until the current migration completes, so a saturated successor
+    /// with stragglers left would otherwise wedge the table at `Full`).
+    fn successor_needs_pumping(m: &Migration, policy: &GrowthPolicy) -> bool {
+        let pump_lf = policy.trigger_load_factor.min(0.75);
+        m.new.len() as f64 >= pump_lf * m.new.capacity() as f64
+    }
+
+    fn erase_migrating(m: &Migration, key: u64) -> bool {
+        let ob = m.old.primary_bucket(key);
+        m.locks.lock(ob);
+        let hit_old = m.old.erase(key);
+        let hit_new = m.new.erase(key);
+        m.locks.unlock(ob);
+        hit_old || hit_new
+    }
+
+    /// Move every entry whose primary bucket is in `[start, end)` to the
+    /// successor, under the range's bucket locks. Returns pairs moved.
+    fn migrate_range(&self, m: &Migration, start: usize, end: usize) -> usize {
+        for b in start..end {
+            m.locks.lock(b);
+        }
+        let mut entries: Vec<(u64, u64)> = Vec::new();
+        m.old.collect_primary_range(start..end, &mut entries);
+        let mut moved = 0usize;
+        for &(k, v) in &entries {
+            // Seed-then-erase, same order as the foreground path. A Full
+            // seed (successor saturated mid-migration) leaves the entry in
+            // the old table; finalize detects the straggler and re-opens
+            // the scan after the next chained growth makes room.
+            if m.new.upsert(k, v, &UpsertOp::InsertIfUnique) != UpsertResult::Full {
+                m.old.erase(k);
+                moved += 1;
+                probes::count_migrated_pair();
+            }
+        }
+        for b in (start..end).rev() {
+            m.locks.unlock(b);
+        }
+        self.migrated.fetch_add(moved as u64, Ordering::Relaxed);
+        moved
+    }
+
+    /// Phase flip once every bucket is migrated. A compare-exchange on
+    /// `done` elects a single finisher; if stragglers remain in the old
+    /// table (successor filled mid-migration) the scan is re-opened
+    /// instead of flipping, so no entry is ever dropped.
+    fn finalize(&self, m: &Arc<Migration>) {
+        if m
+            .done
+            .compare_exchange(m.total, usize::MAX, Ordering::AcqRel, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        if m.old.is_empty() {
+            let mut g = self.write_phase();
+            if matches!(&*g, Phase::Migrating(cur) if Arc::ptr_eq(cur, m)) {
+                *g = Phase::Normal(Arc::clone(&m.new));
+            }
+            return;
+        }
+        // Re-open: done must be reset before the cursor so no claimant
+        // can finish a re-claimed range while `done` still reads MAX.
+        m.resets.fetch_add(1, Ordering::AcqRel);
+        m.done.store(0, Ordering::Release);
+        m.cursor.store(0, Ordering::Release);
+    }
+}
+
+impl ConcurrentMap for GrowableMap {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        enum Next {
+            Done(UpsertResult, bool),
+            Grow(usize),
+            Pump,
+        }
+        let mut grow_rounds = 0usize;
+        let mut pumps = 0usize;
+        let mut stalled_pumps = 0usize;
+        loop {
+            let next = {
+                let g = self.read_phase();
+                match &*g {
+                    Phase::Normal(t) => {
+                        let r = t.upsert(key, val, op);
+                        if r == UpsertResult::Full {
+                            Next::Grow(t.capacity())
+                        } else {
+                            Next::Done(r, false)
+                        }
+                    }
+                    Phase::Migrating(m) => {
+                        let r = Self::upsert_migrating(m, key, val, op);
+                        if r == UpsertResult::Full {
+                            Next::Pump
+                        } else {
+                            Next::Done(r, Self::successor_needs_pumping(m, &self.policy))
+                        }
+                    }
+                }
+            };
+            match next {
+                Next::Done(r, pump_after) => {
+                    if pump_after {
+                        self.drive_migration(self.policy.migration_batch);
+                    } else if r == UpsertResult::Inserted {
+                        self.maybe_trigger_grow();
+                    }
+                    return r;
+                }
+                Next::Grow(cap) => {
+                    grow_rounds += 1;
+                    if grow_rounds > MAX_GROW_ROUNDS || !self.begin_grow(cap) {
+                        return UpsertResult::Full;
+                    }
+                }
+                Next::Pump => {
+                    // Successor full mid-migration: finish the migration
+                    // (then the Normal arm grows again — chained growth).
+                    pumps += 1;
+                    if self.drive_migration(usize::MAX) > 0 {
+                        stalled_pumps = 0;
+                    } else {
+                        // Either another thread owns the remaining ranges
+                        // (transient — wait briefly) or the migration is
+                        // pinned at the capacity ceiling (permanent).
+                        stalled_pumps += 1;
+                        if stalled_pumps > 64 {
+                            return UpsertResult::Full;
+                        }
+                    }
+                    if pumps > MAX_PUMPS {
+                        return UpsertResult::Full;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.query(key),
+            // Old-then-new: a key lives in the old table until moved, and
+            // moves seed the successor before erasing the old copy.
+            Phase::Migrating(m) => m.old.query(key).or_else(|| m.new.query(key)),
+        }
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.erase(key),
+            Phase::Migrating(m) => Self::erase_migrating(m, key),
+        }
+    }
+
+    fn upsert_bulk(&self, pairs: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
+        let base = out.len();
+        let pump_after = {
+            let g = self.read_phase();
+            match &*g {
+                // Normal phase keeps the wrapped table's native grouped
+                // path (one lock + one shared scan per bucket group).
+                Phase::Normal(t) => {
+                    t.upsert_bulk(pairs, op, out);
+                    false
+                }
+                Phase::Migrating(m) => {
+                    out.reserve(pairs.len());
+                    for &(k, v) in pairs {
+                        out.push(Self::upsert_migrating(m, k, v, op));
+                    }
+                    Self::successor_needs_pumping(m, &self.policy)
+                }
+            }
+        };
+        if pump_after {
+            self.drive_migration(self.policy.migration_batch);
+        }
+        // Grow-and-retry every Full in batch order: the scalar path above
+        // grows the table and re-applies the op. One batch artifact: an
+        // OVERWRITE whose key a LATER op of this same batch already wrote
+        // must not be re-applied (it would clobber the newer value); it
+        // would have been applied then superseded, so it reports Updated
+        // without a side effect. Every other policy retries: the merge
+        // policies (AddAssign/Custom) must contribute their merge, and an
+        // InsertIfUnique retry against a present key is a harmless no-op.
+        for i in base..out.len() {
+            if out[i] != UpsertResult::Full {
+                continue;
+            }
+            let j = i - base;
+            let (k, v) = pairs[j];
+            if matches!(op, UpsertOp::Overwrite)
+                && pairs[j + 1..]
+                    .iter()
+                    .zip(&out[i + 1..])
+                    .any(|(&(k2, _), &r2)| k2 == k && r2 != UpsertResult::Full)
+            {
+                out[i] = UpsertResult::Updated;
+                continue;
+            }
+            out[i] = self.upsert(k, v, op);
+        }
+        self.maybe_trigger_grow();
+    }
+
+    fn query_bulk(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.query_bulk(keys, out),
+            Phase::Migrating(m) => {
+                // Old-then-new as two native bulk calls: misses against
+                // the old table are re-asked of the successor.
+                let base = out.len();
+                m.old.query_bulk(keys, out);
+                let miss_idx: Vec<usize> =
+                    (0..keys.len()).filter(|&i| out[base + i].is_none()).collect();
+                if miss_idx.is_empty() {
+                    return;
+                }
+                let miss_keys: Vec<u64> = miss_idx.iter().map(|&i| keys[i]).collect();
+                let mut sub: Vec<Option<u64>> = Vec::with_capacity(miss_keys.len());
+                m.new.query_bulk(&miss_keys, &mut sub);
+                for (j, &i) in miss_idx.iter().enumerate() {
+                    out[base + i] = sub[j];
+                }
+            }
+        }
+    }
+
+    fn erase_bulk(&self, keys: &[u64], out: &mut Vec<bool>) {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.erase_bulk(keys, out),
+            Phase::Migrating(m) => {
+                out.reserve(keys.len());
+                for &k in keys {
+                    out.push(Self::erase_migrating(m, k));
+                }
+            }
+        }
+    }
+
+    fn num_buckets(&self) -> usize {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.num_buckets(),
+            Phase::Migrating(m) => m.new.num_buckets(),
+        }
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.primary_bucket(key),
+            Phase::Migrating(m) => m.new.primary_bucket(key),
+        }
+    }
+
+    /// Capacity of the table currently being filled (the successor while
+    /// a migration runs) — this is what grows 2× per cycle.
+    fn capacity(&self) -> usize {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.capacity(),
+            Phase::Migrating(m) => m.new.capacity(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.len(),
+            Phase::Migrating(m) => m.old.len() + m.new.len(),
+        }
+    }
+
+    fn device_bytes(&self) -> usize {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.device_bytes(),
+            // Both tables are resident during a migration — that
+            // transient 3× footprint is the price of online growth.
+            Phase::Migrating(m) => m.old.device_bytes() + m.new.device_bytes(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.name(),
+            Phase::Migrating(m) => m.new.name(),
+        }
+    }
+
+    fn is_stable(&self) -> bool {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.is_stable(),
+            Phase::Migrating(m) => m.new.is_stable(),
+        }
+    }
+
+    fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.fetch_add_in_place(key, v),
+            Phase::Migrating(m) => {
+                // A key mid-migration may move between the in-place read
+                // and the add; the bucket lock restores soundness. A
+                // blocked move reports false so the caller falls back to
+                // its upsert path, which pumps the migration.
+                let ob = m.old.primary_bucket(key);
+                m.locks.lock(ob);
+                let r = Self::move_old_copy(m, key) && m.new.fetch_add_in_place(key, v);
+                m.locks.unlock(ob);
+                r
+            }
+        }
+    }
+
+    fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.fetch_add_f64_in_place(key, v),
+            Phase::Migrating(m) => {
+                let ob = m.old.primary_bucket(key);
+                m.locks.lock(ob);
+                let r = Self::move_old_copy(m, key) && m.new.fetch_add_f64_in_place(key, v);
+                m.locks.unlock(ob);
+                r
+            }
+        }
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.count_copies(key),
+            Phase::Migrating(m) => {
+                // Under the key's bucket lock the seed-then-erase window
+                // cannot be observed: the single-copy invariant of stable
+                // designs holds across the pair of tables.
+                let ob = m.old.primary_bucket(key);
+                m.locks.lock(ob);
+                let n = m.old.count_copies(key) + m.new.count_copies(key);
+                m.locks.unlock(ob);
+                n
+            }
+        }
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.for_each_entry(f),
+            Phase::Migrating(m) => {
+                m.old.for_each_entry(f);
+                m.new.for_each_entry(f);
+            }
+        }
+    }
+
+    fn can_grow(&self) -> bool {
+        true
+    }
+
+    fn request_grow(&self) -> bool {
+        let cap = {
+            let g = self.read_phase();
+            match &*g {
+                Phase::Normal(t) => Some(t.capacity()),
+                Phase::Migrating(_) => None,
+            }
+        };
+        match cap {
+            Some(c) => self.begin_grow(c),
+            None => true, // already growing
+        }
+    }
+
+    fn migration_in_progress(&self) -> bool {
+        matches!(&*self.read_phase(), Phase::Migrating(_))
+    }
+
+    fn drive_migration(&self, max_buckets: usize) -> usize {
+        let mut moved = 0usize;
+        let mut claimed = 0usize;
+        let mut resets_seen: Option<usize> = None;
+        while claimed < max_buckets {
+            let m = {
+                let g = self.read_phase();
+                match &*g {
+                    Phase::Migrating(m) => Arc::clone(m),
+                    Phase::Normal(_) => return moved,
+                }
+            };
+            // A scan re-open observed within this call means the
+            // successor rejected stragglers: more scanning cannot help
+            // until a chained growth makes room, so hand back.
+            let resets_now = m.resets.load(Ordering::Acquire);
+            match resets_seen {
+                None => resets_seen = Some(resets_now),
+                Some(r0) if resets_now != r0 => return moved,
+                Some(_) => {}
+            }
+            // One policy batch per claim, clamped to what the caller's
+            // `max_buckets` budget still allows.
+            let batch = self
+                .policy
+                .migration_batch
+                .max(1)
+                .min(max_buckets - claimed);
+            let start = m.cursor.fetch_add(batch, Ordering::Relaxed);
+            if start >= m.total {
+                // Every bucket is claimed; finalize once the in-flight
+                // claimants have counted their ranges done.
+                if m.done.load(Ordering::Acquire) >= m.total {
+                    self.finalize(&m);
+                }
+                return moved;
+            }
+            let end = (start + batch).min(m.total);
+            moved += self.migrate_range(&m, start, end);
+            claimed += end - start;
+            let done = m.done.fetch_add(end - start, Ordering::AcqRel) + (end - start);
+            if done >= m.total {
+                self.finalize(&m);
+            }
+        }
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::test_support::*;
+
+    fn growable(kind: TableKind, slots: usize, batch: usize) -> GrowableMap {
+        GrowableMap::new(
+            kind,
+            TableConfig::for_kind(kind, slots),
+            GrowthPolicy {
+                migration_batch: batch,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Drain any in-progress migration from the calling thread.
+    fn quiesce(t: &GrowableMap) {
+        t.quiesce_migration();
+    }
+
+    #[test]
+    fn behaves_like_a_plain_table_below_the_trigger() {
+        let t = growable(TableKind::P2Meta, 4096, 16);
+        check_basic_crud(&t);
+        assert_eq!(t.grow_events(), 0, "no growth at low load");
+    }
+
+    #[test]
+    fn upsert_policies_hold_across_phases() {
+        check_upsert_policies(&growable(TableKind::Double, 2048, 16));
+    }
+
+    #[test]
+    fn oracle_equivalence_with_growth() {
+        // The oracle churn stays small, so force growth cycles through a
+        // tiny initial table: every op class runs in both phases.
+        for kind in [TableKind::Double, TableKind::Chaining, TableKind::Cuckoo] {
+            let t = growable(kind, 256, 4);
+            check_vs_oracle(&t, 0x6A0 ^ kind as u64);
+            quiesce(&t);
+        }
+    }
+
+    #[test]
+    fn grows_past_double_capacity_with_zero_full() {
+        for kind in TableKind::CONCURRENT {
+            let t = growable(kind, 1024, 8);
+            let nominal = t.capacity();
+            let ks = keys(nominal * 5 / 2, 0x660 ^ kind as u64);
+            for &k in &ks {
+                assert_eq!(
+                    t.upsert(k, k ^ 7, &UpsertOp::InsertIfUnique),
+                    UpsertResult::Inserted,
+                    "{kind:?}: growable table rejected an insert"
+                );
+            }
+            quiesce(&t);
+            assert!(
+                t.capacity() >= nominal * 2,
+                "{kind:?}: capacity {} never doubled from {nominal}",
+                t.capacity()
+            );
+            assert!(t.grow_events() >= 1, "{kind:?}");
+            assert_eq!(t.len(), ks.len(), "{kind:?}");
+            for &k in &ks {
+                assert_eq!(t.query(k), Some(k ^ 7), "{kind:?}: key lost across growth");
+                assert_eq!(t.count_copies(k), 1, "{kind:?}: key duplicated across growth");
+            }
+        }
+    }
+
+    #[test]
+    fn old_then_new_reads_and_erases_mid_migration() {
+        let t = growable(TableKind::Double, 2048, 4);
+        let ks = keys(1000, 0x662);
+        for &k in &ks {
+            t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        }
+        assert!(t.request_grow(), "manual grow must start");
+        assert!(t.migration_in_progress());
+        // Migrate only part of the table: both residencies must answer.
+        t.drive_migration(8);
+        assert!(t.migration_in_progress(), "batch 4 × 2 claims cannot finish 256 buckets");
+        assert!(t.migrated_pairs() > 0, "partial migration moved nothing");
+        for &k in &ks {
+            assert_eq!(t.query(k), Some(k ^ 1), "key invisible mid-migration");
+        }
+        // Erases apply to both sides; upserts land in the successor.
+        assert!(t.erase(ks[0]));
+        assert_eq!(t.query(ks[0]), None);
+        assert!(!t.erase(ks[0]), "double erase mid-migration");
+        assert_eq!(
+            t.upsert(ks[1], 77, &UpsertOp::Overwrite),
+            UpsertResult::Updated
+        );
+        assert_eq!(t.query(ks[1]), Some(77));
+        // Merge semantics see the pre-migration value wherever it lives.
+        assert_eq!(
+            t.upsert(ks[2], 5, &UpsertOp::AddAssign),
+            UpsertResult::Updated
+        );
+        assert_eq!(t.query(ks[2]), Some((ks[2] ^ 1).wrapping_add(5)));
+        quiesce(&t);
+        assert_eq!(t.query(ks[0]), None);
+        assert_eq!(t.query(ks[1]), Some(77));
+        assert_eq!(t.len(), ks.len() - 1);
+    }
+
+    #[test]
+    fn in_place_accumulate_survives_migration() {
+        let t = growable(TableKind::P2, 2048, 4);
+        let k = keys(1, 0x663)[0];
+        t.upsert(k, 10, &UpsertOp::Overwrite);
+        t.request_grow();
+        assert!(t.fetch_add_in_place(k, 5));
+        assert_eq!(t.query(k), Some(15));
+        quiesce(&t);
+        assert_eq!(t.query(k), Some(15));
+        assert_eq!(t.count_copies(k), 1);
+    }
+
+    #[test]
+    fn bulk_ops_grow_and_stay_in_order() {
+        let t = growable(TableKind::IcebergMeta, 512, 4);
+        let nominal = t.capacity();
+        let ks = keys(nominal * 5 / 2, 0x664);
+        let pairs: Vec<(u64, u64)> = ks.iter().map(|&k| (k, k ^ 9)).collect();
+        let mut res = Vec::new();
+        for chunk in pairs.chunks(128) {
+            t.upsert_bulk(chunk, &UpsertOp::InsertIfUnique, &mut res);
+        }
+        assert_eq!(res.len(), ks.len());
+        assert!(
+            res.iter().all(|&r| r == UpsertResult::Inserted),
+            "bulk insert hit Full on a growable table"
+        );
+        let mut got = Vec::new();
+        t.query_bulk(&ks, &mut got);
+        for (i, &k) in ks.iter().enumerate() {
+            assert_eq!(got[i], Some(k ^ 9), "bulk query #{i}");
+        }
+        quiesce(&t);
+        assert!(t.capacity() >= nominal * 2);
+        let odd: Vec<u64> = ks.iter().copied().skip(1).step_by(2).collect();
+        let mut eres = Vec::new();
+        t.erase_bulk(&odd, &mut eres);
+        assert!(eres.iter().all(|&e| e));
+        assert_eq!(t.len(), ks.len() - odd.len());
+    }
+
+    #[test]
+    fn concurrent_insert_churn_across_growth_keeps_single_copies() {
+        // Four threads overfill a stable design ~2.5× its nominal
+        // capacity on disjoint key ranges while migration batches run
+        // interleaved; no Full, no lost key, no duplicate copy.
+        let t = std::sync::Arc::new(growable(TableKind::Chaining, 2048, 8));
+        let n_threads = 4;
+        let per = (t.capacity() * 5 / 2) / n_threads;
+        let all = keys(n_threads * per, 0x665);
+        std::thread::scope(|s| {
+            for tid in 0..n_threads {
+                let t = std::sync::Arc::clone(&t);
+                let mine = &all[tid * per..(tid + 1) * per];
+                s.spawn(move || {
+                    for (i, &k) in mine.iter().enumerate() {
+                        assert_eq!(
+                            t.upsert(k, k ^ 2, &UpsertOp::InsertIfUnique),
+                            UpsertResult::Inserted,
+                            "thread {tid} op {i}: Full on a growable table"
+                        );
+                        if i % 3 == 0 {
+                            assert_eq!(t.query(k), Some(k ^ 2));
+                        }
+                        if i % 64 == 0 {
+                            t.drive_migration(2);
+                        }
+                    }
+                    // Own keys: present with exactly one copy, mid-churn.
+                    for &k in mine.iter().step_by(17) {
+                        assert_eq!(t.count_copies(k), 1, "duplicate mid-growth");
+                    }
+                });
+            }
+        });
+        assert!(t.quiesce_migration());
+        assert!(t.grow_events() >= 1);
+        assert_eq!(t.len(), all.len());
+        for &k in &all {
+            assert_eq!(t.query(k), Some(k ^ 2));
+            assert_eq!(t.count_copies(k), 1);
+        }
+    }
+
+    #[test]
+    fn gpusim_migration_counters_track_instance_counters() {
+        // Single-threaded growth: every grow event and migrated pair
+        // happens on this thread, so the thread-local gpusim counters
+        // must agree exactly with the wrapper's instance atomics.
+        let _measure = probes::measurement_section();
+        probes::set_enabled(true);
+        probes::take_grow_events();
+        probes::take_migrated_pairs();
+        let t = growable(TableKind::Double, 512, 8);
+        for &k in &keys(1200, 0x667) {
+            t.upsert(k, 1, &UpsertOp::InsertIfUnique);
+        }
+        quiesce(&t);
+        assert!(t.grow_events() >= 1 && t.migrated_pairs() > 0);
+        assert_eq!(probes::take_grow_events(), t.grow_events());
+        assert_eq!(probes::take_migrated_pairs(), t.migrated_pairs());
+    }
+
+    #[test]
+    fn capacity_ceiling_restores_full() {
+        let t = GrowableMap::new(
+            TableKind::Double,
+            TableConfig::for_kind(TableKind::Double, 256),
+            GrowthPolicy {
+                migration_batch: 8,
+                max_capacity: 512,
+                ..Default::default()
+            },
+        );
+        let ks = keys(2048, 0x666);
+        let mut full = 0;
+        for &k in &ks {
+            if t.upsert(k, 1, &UpsertOp::InsertIfUnique) == UpsertResult::Full {
+                full += 1;
+            }
+        }
+        quiesce(&t);
+        assert!(t.capacity() <= 512, "ceiling breached: {}", t.capacity());
+        assert!(full > 0, "a capped table must eventually reject");
+        assert!(t.grow_events() >= 1, "growth below the ceiling must run");
+    }
+}

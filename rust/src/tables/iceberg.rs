@@ -301,6 +301,7 @@ impl ConcurrentMap for IcebergHt {
     fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
         let base = out.len();
         out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> =
             pairs_in.iter().map(|&(k, _)| self.front_bucket(k)).collect();
         let locking = self.mode.locking();
@@ -316,7 +317,7 @@ impl ConcurrentMap for IcebergHt {
             if group.len() == 1 {
                 let (k, v) = pairs_in[group[0] as usize];
                 debug_assert!(crate::gpusim::mem::is_user_key(k));
-                out[base + group[0] as usize] = self.upsert_under_lock(k, v, op);
+                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op));
             } else {
                 // One shared scan of the group's common front-yard bucket
                 // (one tag-block probe for the metadata variant).
@@ -339,11 +340,11 @@ impl ConcurrentMap for IcebergHt {
                     if let Some(&(_, slot)) = local.iter().find(|&&(lk, _)| lk == k) {
                         let (_, old) = self.front.pair_at(fb, slot, strong);
                         self.apply_existing(&self.front, fb, slot, old, v, op);
-                        out[base + i as usize] = UpsertResult::Updated;
+                        slots.set(i as usize, UpsertResult::Updated);
                         continue;
                     }
                     if fallback_keys.contains(&k) {
-                        out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                        slots.set(i as usize, self.upsert_under_lock(k, v, op));
                         continue;
                     }
                     let front_hit = if self.fmeta.is_some() {
@@ -356,7 +357,7 @@ impl ConcurrentMap for IcebergHt {
                         // merges applied earlier in this group.
                         let (_, old) = self.front.pair_at(fb, slot, strong);
                         self.apply_existing(&self.front, fb, slot, old, v, op);
-                        out[base + i as usize] = UpsertResult::Updated;
+                        slots.set(i as usize, UpsertResult::Updated);
                         continue;
                     }
                     // Not in the front yard — the key may still live in
@@ -364,7 +365,7 @@ impl ConcurrentMap for IcebergHt {
                     let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
                     if let Some((bb, slot, old)) = self.locate_back(k, tag, strong) {
                         self.apply_existing(&self.back, bb, slot, old, v, op);
-                        out[base + i as usize] = UpsertResult::Updated;
+                        slots.set(i as usize, UpsertResult::Updated);
                         continue;
                     }
                     // Absent: front yard first, from the shared free
@@ -372,10 +373,10 @@ impl ConcurrentMap for IcebergHt {
                     if let Some(slot) = self.claim_front_from(fb, &mut free, k, v) {
                         self.live.fetch_add(1, Ordering::Relaxed);
                         local.push((k, slot));
-                        out[base + i as usize] = UpsertResult::Inserted;
+                        slots.set(i as usize, UpsertResult::Inserted);
                         continue;
                     }
-                    out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                    slots.set(i as usize, self.upsert_under_lock(k, v, op));
                     fallback_keys.push(k);
                 }
             }
@@ -383,11 +384,13 @@ impl ConcurrentMap for IcebergHt {
                 self.locks.unlock(fb);
             }
         });
+        slots.finish("IcebergHT::upsert_bulk");
     }
 
     fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
         let base = out.len();
         out.resize(base + keys_in.len(), None);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.front_bucket(k)).collect();
         let strong = self.mode.strong();
         let mut tags: Vec<u16> = Vec::new();
@@ -397,7 +400,7 @@ impl ConcurrentMap for IcebergHt {
         super::for_each_bucket_group(&buckets, |fb, group| {
             if group.len() == 1 {
                 let i = group[0] as usize;
-                out[base + i] = self.query(keys_in[i]);
+                slots.set(i, self.query(keys_in[i]));
                 return;
             }
             if let Some(meta) = &self.fmeta {
@@ -418,17 +421,22 @@ impl ConcurrentMap for IcebergHt {
                 } else {
                     found[j].map(|(_, v)| v)
                 };
-                out[base + i as usize] = front_hit.or_else(|| {
-                    let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
-                    self.locate_back(k, tag, strong).map(|(_, _, v)| v)
-                });
+                slots.set(
+                    i as usize,
+                    front_hit.or_else(|| {
+                        let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
+                        self.locate_back(k, tag, strong).map(|(_, _, v)| v)
+                    }),
+                );
             }
         });
+        slots.finish("IcebergHT::query_bulk");
     }
 
     fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
         let base = out.len();
         out.resize(base + keys_in.len(), false);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.front_bucket(k)).collect();
         let locking = self.mode.locking();
         let strong = self.mode.strong();
@@ -442,7 +450,7 @@ impl ConcurrentMap for IcebergHt {
             }
             if group.len() == 1 {
                 let i = group[0] as usize;
-                out[base + i] = self.erase_under_lock(keys_in[i]);
+                slots.set(i, self.erase_under_lock(keys_in[i]));
             } else {
                 if self.fmeta.is_some() {
                     tags.clear();
@@ -460,7 +468,7 @@ impl ConcurrentMap for IcebergHt {
                 for (j, &i) in group.iter().enumerate() {
                     let k = keys_in[i as usize];
                     if processed.contains(&k) {
-                        out[base + i as usize] = self.erase_under_lock(k);
+                        slots.set(i as usize, self.erase_under_lock(k));
                         continue;
                     }
                     processed.push(k);
@@ -469,7 +477,7 @@ impl ConcurrentMap for IcebergHt {
                     } else {
                         found[j]
                     };
-                    out[base + i as usize] = if let Some((slot, _)) = front_hit {
+                    let hit = if let Some((slot, _)) = front_hit {
                         self.kill_in(&self.front, fb, slot, k);
                         true
                     } else {
@@ -482,12 +490,14 @@ impl ConcurrentMap for IcebergHt {
                             None => false,
                         }
                     };
+                    slots.set(i as usize, hit);
                 }
             }
             if locking {
                 self.locks.unlock(fb);
             }
         });
+        slots.finish("IcebergHT::erase_bulk");
     }
 
     fn num_buckets(&self) -> usize {

@@ -30,9 +30,12 @@ pub mod p2;
 pub mod iceberg;
 pub mod cuckoo;
 pub mod chaining;
+pub mod growable;
 pub mod slabhash_like;
 pub mod warpcore_like;
 pub mod kernel_table;
+
+pub use growable::{GrowableMap, GrowthPolicy};
 
 #[cfg(test)]
 pub(crate) mod test_support;
@@ -206,6 +209,88 @@ pub trait ConcurrentMap: Send + Sync {
     /// caller must ensure no concurrent writers). Used for result export
     /// (sparse tensor contraction output) and BSP snapshotting.
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64));
+
+    /// Fraction of the nominal capacity currently occupied
+    /// (`len / capacity`; approximate under concurrency, like `len`).
+    /// The growth subsystem's trigger metric.
+    fn load_factor(&self) -> f64 {
+        let cap = self.capacity();
+        if cap == 0 {
+            0.0
+        } else {
+            self.len() as f64 / cap as f64
+        }
+    }
+
+    /// True when the table can grow its capacity online
+    /// ([`growable::GrowableMap`]). Plain designs are fixed-capacity and
+    /// report `Full` when their probe windows saturate.
+    fn can_grow(&self) -> bool {
+        false
+    }
+
+    /// Ask the table to start (or join) a growth cycle. Returns true when
+    /// a growth cycle is running or was just started; false for
+    /// fixed-capacity tables (and for growable ones at their configured
+    /// capacity ceiling).
+    fn request_grow(&self) -> bool {
+        false
+    }
+
+    /// True while an incremental old→successor migration is in progress.
+    fn migration_in_progress(&self) -> bool {
+        false
+    }
+
+    /// Advance an in-progress migration by up to `max_buckets` old-table
+    /// buckets, returning the number of key-value pairs moved. No-op (0)
+    /// for fixed-capacity tables or when no migration is running. Safe to
+    /// call from any thread, concurrently with foreground operations —
+    /// the coordinator's shard-affine workers drive this between batches.
+    fn drive_migration(&self, max_buckets: usize) -> usize {
+        let _ = max_buckets;
+        0
+    }
+
+    /// Drive any in-progress migration to completion from the calling
+    /// thread (quiesce helper for benches/tests/shutdown). Returns true
+    /// when no migration remains; false when the migration is pinned at
+    /// a capacity ceiling (successor full, growth refused) and cannot
+    /// complete — operations stay correct either way, merely split
+    /// across two tables. Fixed-capacity tables trivially return true.
+    fn quiesce_migration(&self) -> bool {
+        let mut stalls = 0;
+        while self.migration_in_progress() {
+            if self.drive_migration(usize::MAX) == 0 {
+                stalls += 1;
+                if stalls > 64 {
+                    return false;
+                }
+            } else {
+                stalls = 0;
+            }
+            std::thread::yield_now();
+        }
+        true
+    }
+
+    /// Migration iterator: append a snapshot of every live `(key, value)`
+    /// whose PRIMARY bucket lies in `range` (buckets are indexed
+    /// `0..num_buckets()`). Partitioning by *primary* bucket — not by
+    /// storage slot — is what lets the growth subsystem serialize the
+    /// migrator against foreground mutators with one lock per primary
+    /// bucket, even on designs that displace keys into other buckets.
+    /// The default is a full-table scan filtered by
+    /// [`ConcurrentMap::primary_bucket`]; designs whose storage *is* the
+    /// primary bucket (ChainingHT) override with a direct bucket walk.
+    fn collect_primary_range(&self, range: std::ops::Range<usize>, out: &mut Vec<(u64, u64)>) {
+        let mut f = |k: u64, v: u64| {
+            if range.contains(&self.primary_bucket(k)) {
+                out.push((k, v));
+            }
+        };
+        self.for_each_entry(&mut f);
+    }
 }
 
 /// Identifies a table design for the factory + benchmark harness.
@@ -435,6 +520,50 @@ pub(crate) fn for_each_triple_group(triples: &[[usize; 3]], mut f: impl FnMut([u
         crate::gpusim::probes::count_bulk_group();
         f(t, &order[g..e]);
         g = e;
+    }
+}
+
+/// Debug-checked writer over the output slots one native bulk call owns.
+///
+/// Native bulk paths pre-fill their output region with a sentinel
+/// (`UpsertResult::Full` / `None` / `false`) and rely on every grouped op
+/// overwriting its slot. The sentinels double as legitimate results, so a
+/// skipped index would silently read as a real Full/miss instead of
+/// failing loudly. In debug builds this wrapper records every `set` and
+/// `finish` panics naming the first slot the group loops never wrote; in
+/// release builds it compiles down to the raw slice store.
+pub(crate) struct SlotWriter<'a, T> {
+    out: &'a mut [T],
+    #[cfg(debug_assertions)]
+    written: Vec<bool>,
+}
+
+impl<'a, T> SlotWriter<'a, T> {
+    pub(crate) fn new(out: &'a mut [T]) -> Self {
+        #[cfg(debug_assertions)]
+        let written = vec![false; out.len()];
+        Self {
+            out,
+            #[cfg(debug_assertions)]
+            written,
+        }
+    }
+
+    #[inline(always)]
+    pub(crate) fn set(&mut self, i: usize, v: T) {
+        self.out[i] = v;
+        #[cfg(debug_assertions)]
+        {
+            self.written[i] = true;
+        }
+    }
+
+    /// Assert every slot was written (debug builds only).
+    pub(crate) fn finish(self, _what: &str) {
+        #[cfg(debug_assertions)]
+        if let Some(miss) = self.written.iter().position(|w| !w) {
+            panic!("native bulk path `{_what}` skipped output slot {miss}");
+        }
     }
 }
 

@@ -312,6 +312,7 @@ impl ConcurrentMap for P2Ht {
     fn upsert_bulk(&self, pairs_in: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
         let base = out.len();
         out.resize(base + pairs_in.len(), UpsertResult::Full);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> =
             pairs_in.iter().map(|&(k, _)| self.buckets_of(k)[0]).collect();
         let locking = self.mode.locking();
@@ -327,7 +328,7 @@ impl ConcurrentMap for P2Ht {
             if group.len() == 1 {
                 let (k, v) = pairs_in[group[0] as usize];
                 debug_assert!(crate::gpusim::mem::is_user_key(k));
-                out[base + group[0] as usize] = self.upsert_under_lock(k, v, op);
+                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op));
             } else {
                 // One shared scan of the group's common primary bucket.
                 let (mut free, fill) = if let Some(meta) = &self.meta {
@@ -348,11 +349,11 @@ impl ConcurrentMap for P2Ht {
                     if let Some(&(_, slot)) = local.iter().find(|&&(lk, _)| lk == k) {
                         let (_, old) = self.pairs.pair_at(b1, slot, strong);
                         self.apply_existing(b1, slot, old, v, op);
-                        out[base + i as usize] = UpsertResult::Updated;
+                        slots.set(i as usize, UpsertResult::Updated);
                         continue;
                     }
                     if fallback_keys.contains(&k) {
-                        out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                        slots.set(i as usize, self.upsert_under_lock(k, v, op));
                         continue;
                     }
                     let hit = if self.meta.is_some() {
@@ -365,7 +366,7 @@ impl ConcurrentMap for P2Ht {
                         // merges applied earlier in this very group.
                         let (_, old) = self.pairs.pair_at(b1, slot, strong);
                         self.apply_existing(b1, slot, old, v, op);
-                        out[base + i as usize] = UpsertResult::Updated;
+                        slots.set(i as usize, UpsertResult::Updated);
                         continue;
                     }
                     // Shortcut fast path (§2.2), batch form: while b1's
@@ -378,12 +379,12 @@ impl ConcurrentMap for P2Ht {
                             self.live.fetch_add(1, Ordering::Relaxed);
                             local_fill += 1;
                             local.push((k, slot));
-                            out[base + i as usize] = UpsertResult::Inserted;
+                            slots.set(i as usize, UpsertResult::Inserted);
                             continue;
                         }
                     }
                     // Overflowed / crowded primary: full two-choice walk.
-                    out[base + i as usize] = self.upsert_under_lock(k, v, op);
+                    slots.set(i as usize, self.upsert_under_lock(k, v, op));
                     fallback_keys.push(k);
                 }
             }
@@ -391,11 +392,13 @@ impl ConcurrentMap for P2Ht {
                 self.locks.unlock(b1);
             }
         });
+        slots.finish("P2HT::upsert_bulk");
     }
 
     fn query_bulk(&self, keys_in: &[u64], out: &mut Vec<Option<u64>>) {
         let base = out.len();
         out.resize(base + keys_in.len(), None);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.buckets_of(k)[0]).collect();
         let strong = self.mode.strong();
         let mut tags: Vec<u16> = Vec::new();
@@ -405,7 +408,7 @@ impl ConcurrentMap for P2Ht {
         super::for_each_bucket_group(&buckets, |b1, group| {
             if group.len() == 1 {
                 let i = group[0] as usize;
-                out[base + i] = self.query(keys_in[i]);
+                slots.set(i, self.query(keys_in[i]));
                 return;
             }
             if let Some(meta) = &self.meta {
@@ -414,7 +417,8 @@ impl ConcurrentMap for P2Ht {
                 meta.scan_group(b1, &tags, strong, &mut per_tag);
                 for (j, &i) in group.iter().enumerate() {
                     let k = keys_in[i as usize];
-                    out[base + i as usize] =
+                    slots.set(
+                        i as usize,
                         match self.pairs.scan_slots(b1, per_tag[j].match_slots(), k, strong) {
                             Some((_, v)) => Some(v),
                             // No key of b1 has ever overflowed into its
@@ -424,7 +428,8 @@ impl ConcurrentMap for P2Ht {
                                 .view(self.buckets_of(k)[1], k, tags[j], strong)
                                 .found
                                 .map(|(_, v)| v),
-                        };
+                        },
+                    );
                 }
             } else {
                 group_keys.clear();
@@ -432,22 +437,27 @@ impl ConcurrentMap for P2Ht {
                 self.pairs.scan_bucket_group(b1, &group_keys, strong, &mut found);
                 for (j, &i) in group.iter().enumerate() {
                     let k = keys_in[i as usize];
-                    out[base + i as usize] = match found[j] {
-                        Some((_, v)) => Some(v),
-                        None if !self.overflowed(b1) => None,
-                        None => self
-                            .view(self.buckets_of(k)[1], k, 0, strong)
-                            .found
-                            .map(|(_, v)| v),
-                    };
+                    slots.set(
+                        i as usize,
+                        match found[j] {
+                            Some((_, v)) => Some(v),
+                            None if !self.overflowed(b1) => None,
+                            None => self
+                                .view(self.buckets_of(k)[1], k, 0, strong)
+                                .found
+                                .map(|(_, v)| v),
+                        },
+                    );
                 }
             }
         });
+        slots.finish("P2HT::query_bulk");
     }
 
     fn erase_bulk(&self, keys_in: &[u64], out: &mut Vec<bool>) {
         let base = out.len();
         out.resize(base + keys_in.len(), false);
+        let mut slots = super::SlotWriter::new(&mut out[base..]);
         let buckets: Vec<usize> = keys_in.iter().map(|&k| self.buckets_of(k)[0]).collect();
         let locking = self.mode.locking();
         let strong = self.mode.strong();
@@ -461,7 +471,7 @@ impl ConcurrentMap for P2Ht {
             }
             if group.len() == 1 {
                 let i = group[0] as usize;
-                out[base + i] = self.erase_under_lock(keys_in[i]);
+                slots.set(i, self.erase_under_lock(keys_in[i]));
             } else {
                 if self.meta.is_some() {
                     tags.clear();
@@ -479,7 +489,7 @@ impl ConcurrentMap for P2Ht {
                 for (j, &i) in group.iter().enumerate() {
                     let k = keys_in[i as usize];
                     if processed.contains(&k) {
-                        out[base + i as usize] = self.erase_under_lock(k);
+                        slots.set(i as usize, self.erase_under_lock(k));
                         continue;
                     }
                     processed.push(k);
@@ -488,23 +498,27 @@ impl ConcurrentMap for P2Ht {
                     } else {
                         found[j]
                     };
-                    out[base + i as usize] = match hit {
-                        Some((slot, _)) => {
-                            self.kill_at(b1, slot, k);
-                            true
-                        }
-                        // Miss in b1 with the overflow bit clear: the key
-                        // cannot be in b2, and under b1's lock it cannot
-                        // appear concurrently.
-                        None if !self.overflowed(b1) => false,
-                        None => self.erase_under_lock(k),
-                    };
+                    slots.set(
+                        i as usize,
+                        match hit {
+                            Some((slot, _)) => {
+                                self.kill_at(b1, slot, k);
+                                true
+                            }
+                            // Miss in b1 with the overflow bit clear: the
+                            // key cannot be in b2, and under b1's lock it
+                            // cannot appear concurrently.
+                            None if !self.overflowed(b1) => false,
+                            None => self.erase_under_lock(k),
+                        },
+                    );
                 }
             }
             if locking {
                 self.locks.unlock(b1);
             }
         });
+        slots.finish("P2HT::erase_bulk");
     }
 
     fn num_buckets(&self) -> usize {

@@ -10,7 +10,10 @@ use std::collections::HashMap;
 
 use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult};
 use warpspeed::prng::Xoshiro256pp;
-use warpspeed::tables::{build_table, TableKind, UpsertOp, UpsertResult};
+use warpspeed::tables::{
+    build_table, ConcurrentMap, GrowableMap, GrowthPolicy, TableConfig, TableKind, UpsertOp,
+    UpsertResult,
+};
 use warpspeed::workloads::keys::distinct_keys;
 
 /// Op classes mirror `coordinator::exec`'s run splitting: a mixed batch
@@ -224,6 +227,7 @@ fn persistent_pool_ordering_across_batches_and_clean_shutdown() {
             n_shards: 4,
             n_workers: 3,
             max_batch: 32,
+            growth: None,
         });
         let ks = distinct_keys(256, 0x9D0 ^ kind as u64);
         for round in 0..3u64 {
@@ -272,6 +276,7 @@ fn coordinator_bulk_dispatch_matches_oracle_for_all_designs() {
             n_shards: 4,
             n_workers: 2,
             max_batch: 128,
+            growth: None,
         });
         let ks = distinct_keys(64, 0xC0DE ^ kind as u64);
         let mut oracle: HashMap<u64, u64> = HashMap::new();
@@ -315,6 +320,238 @@ fn coordinator_bulk_dispatch_matches_oracle_for_all_designs() {
         assert_eq!(got.len(), expected.len(), "{kind:?}");
         for (i, (g, w)) in got.iter().zip(&expected).enumerate() {
             assert_eq!(g, w, "{kind:?}: op {i}");
+        }
+    }
+}
+
+/// Grow-under-churn parity: a growable bulk table and a growable scalar
+/// twin run the same insert-heavy mixed stream (upserts/queries/erases
+/// over a universe 3× the nominal capacity, interleaved with bounded
+/// migration steps) through at least one full 2× migration. Every per-op
+/// result must match, zero ops may be Rejected/Full, and stable designs
+/// keep `count_copies == 1` for live keys throughout.
+#[test]
+fn growable_bulk_parity_across_a_full_migration() {
+    for kind in TableKind::CONCURRENT {
+        let mk = || {
+            GrowableMap::new(
+                kind,
+                TableConfig::for_kind(kind, 1024),
+                GrowthPolicy {
+                    migration_batch: 8,
+                    ..Default::default()
+                },
+            )
+        };
+        let bulk_t = mk();
+        let scalar_t = mk();
+        let stable = bulk_t.is_stable();
+        let nominal = bulk_t.capacity();
+        let universe = distinct_keys(nominal * 3, 0x6F0 ^ kind as u64);
+        let mut oracle: HashMap<u64, u64> = HashMap::new();
+        let mut rng = Xoshiro256pp::new(0x6F1 ^ kind as u64);
+        let mut cursor = 0usize; // insert frontier over the universe
+        for round in 0..120 {
+            match rng.next_below(8) {
+                // Insert-heavy: 6/8 of rounds push a fresh batch.
+                0..=5 => {
+                    let n = (universe.len() - cursor).min(96);
+                    if n == 0 {
+                        continue;
+                    }
+                    let pairs: Vec<(u64, u64)> = universe[cursor..cursor + n]
+                        .iter()
+                        .map(|&k| (k, k ^ round))
+                        .collect();
+                    cursor += n;
+                    let mut got = Vec::new();
+                    bulk_t.upsert_bulk(&pairs, &UpsertOp::Overwrite, &mut got);
+                    for (i, &(k, v)) in pairs.iter().enumerate() {
+                        let want = scalar_t.upsert(k, v, &UpsertOp::Overwrite);
+                        assert_ne!(got[i], UpsertResult::Full, "{kind:?} round {round}");
+                        assert_eq!(got[i], want, "{kind:?} round {round} upsert #{i}");
+                        oracle.insert(k, v);
+                    }
+                }
+                6 => {
+                    let ks: Vec<u64> = (0..64)
+                        .map(|_| universe[rng.next_below(universe.len() as u64) as usize])
+                        .collect();
+                    let mut got = Vec::new();
+                    bulk_t.query_bulk(&ks, &mut got);
+                    for (i, &k) in ks.iter().enumerate() {
+                        assert_eq!(got[i], oracle.get(&k).copied(), "{kind:?} round {round} q{i}");
+                        assert_eq!(got[i], scalar_t.query(k), "{kind:?} round {round} q{i}");
+                    }
+                }
+                _ => {
+                    let ks: Vec<u64> = (0..48)
+                        .map(|_| universe[rng.next_below(universe.len() as u64) as usize])
+                        .collect();
+                    let mut got = Vec::new();
+                    bulk_t.erase_bulk(&ks, &mut got);
+                    for (i, &k) in ks.iter().enumerate() {
+                        let want = scalar_t.erase(k);
+                        assert_eq!(got[i], want, "{kind:?} round {round} erase #{i}");
+                        assert_eq!(got[i], oracle.remove(&k).is_some(), "{kind:?}");
+                    }
+                }
+            }
+            // Interleave bounded migration steps with the traffic, like
+            // the coordinator's workers; twins may migrate at different
+            // times — parity must hold regardless.
+            bulk_t.drive_migration(8);
+            scalar_t.drive_migration(16);
+            if stable && round % 10 == 0 {
+                for (&k, &v) in oracle.iter().take(24) {
+                    assert_eq!(bulk_t.count_copies(k), 1, "{kind:?}: duplicate {k:#x}");
+                    assert_eq!(bulk_t.query(k), Some(v), "{kind:?}: lost {k:#x}");
+                }
+            }
+        }
+        assert!(bulk_t.quiesce_migration(), "{kind:?}: migration pinned");
+        assert!(scalar_t.quiesce_migration(), "{kind:?}: migration pinned");
+        assert!(
+            bulk_t.grow_events() >= 1 && bulk_t.capacity() >= nominal * 2,
+            "{kind:?}: the churn must drive at least one full 2× growth \
+             (capacity {} from {nominal})",
+            bulk_t.capacity()
+        );
+        assert_eq!(bulk_t.len(), oracle.len(), "{kind:?}");
+        for (&k, &v) in &oracle {
+            assert_eq!(bulk_t.query(k), Some(v), "{kind:?}");
+            assert!(bulk_t.count_copies(k) <= 1, "{kind:?}: duplicate {k:#x}");
+        }
+    }
+}
+
+/// Concurrent grow-under-churn for stable designs: threads churn bulk
+/// upserts/queries/erases on disjoint key ranges across a live
+/// migration; `count_copies == 1` is asserted for the checking thread's
+/// own live keys THROUGHOUT, and zero Full results may surface.
+#[test]
+fn growable_concurrent_churn_parity_for_stable_designs() {
+    for kind in [TableKind::P2Meta, TableKind::Chaining] {
+        let t = std::sync::Arc::new(GrowableMap::new(
+            kind,
+            TableConfig::for_kind(kind, 2048),
+            GrowthPolicy {
+                migration_batch: 8,
+                ..Default::default()
+            },
+        ));
+        let n_threads = 4;
+        let per = (t.capacity() * 5 / 2) / n_threads;
+        let all = distinct_keys(n_threads * per, 0x6F5 ^ kind as u64);
+        std::thread::scope(|s| {
+            for tid in 0..n_threads {
+                let t = std::sync::Arc::clone(&t);
+                let mine = &all[tid * per..(tid + 1) * per];
+                s.spawn(move || {
+                    for round in 0..3u64 {
+                        let mut ures: Vec<UpsertResult> = Vec::new();
+                        for chunk in mine.chunks(96) {
+                            let pairs: Vec<(u64, u64)> =
+                                chunk.iter().map(|&k| (k, k ^ round)).collect();
+                            t.upsert_bulk(&pairs, &UpsertOp::Overwrite, &mut ures);
+                            t.drive_migration(2);
+                        }
+                        assert!(
+                            ures.iter().all(|&r| r != UpsertResult::Full),
+                            "{kind:?} round {round}: Full on a growable table"
+                        );
+                        for &k in mine.iter().step_by(13) {
+                            assert_eq!(
+                                t.count_copies(k),
+                                1,
+                                "{kind:?} round {round}: duplicate mid-migration"
+                            );
+                            assert_eq!(t.query(k), Some(k ^ round), "{kind:?} round {round}");
+                        }
+                        let odd: Vec<u64> = mine.iter().copied().skip(1).step_by(2).collect();
+                        let mut eres: Vec<bool> = Vec::new();
+                        for chunk in odd.chunks(96) {
+                            t.erase_bulk(chunk, &mut eres);
+                        }
+                        assert!(
+                            eres.iter().all(|&e| e),
+                            "{kind:?} round {round}: erase missed an own key"
+                        );
+                    }
+                });
+            }
+        });
+        assert!(t.quiesce_migration(), "{kind:?}: migration pinned");
+        assert!(t.grow_events() >= 1, "{kind:?}: churn at 2.5× nominal must grow");
+        for (i, &k) in all.iter().enumerate() {
+            if (i % per) % 2 == 0 {
+                assert_eq!(t.query(k), Some(k ^ 2), "{kind:?}: survivor #{i}");
+                assert_eq!(t.count_copies(k), 1, "{kind:?}: duplicate #{i}");
+            } else {
+                assert_eq!(t.query(k), None, "{kind:?}: zombie #{i}");
+                assert_eq!(t.count_copies(k), 0, "{kind:?}: residue #{i}");
+            }
+        }
+    }
+}
+
+/// Colliding-key grouped-path coverage: a batch whose keys all share one
+/// primary bucket (plus in-batch duplicates) exercises exactly the
+/// grouped fast paths that pre-fill their output with sentinel values. A
+/// skipped output slot would surface either as the debug-mode
+/// written-slot assertion in the bulk helpers or as a parity mismatch
+/// against the scalar twin here.
+#[test]
+fn grouped_path_covers_every_slot_for_colliding_keys() {
+    for kind in TableKind::CONCURRENT {
+        let bulk_t = build_table(kind, 2048);
+        let scalar_t = build_table(kind, 2048);
+        // Craft 6 distinct keys sharing the first key's primary bucket.
+        let pool = distinct_keys(60_000, 0x7C0 ^ kind as u64);
+        let b0 = bulk_t.primary_bucket(pool[0]);
+        let colliding: Vec<u64> = pool
+            .iter()
+            .copied()
+            .filter(|&k| bulk_t.primary_bucket(k) == b0)
+            .take(6)
+            .collect();
+        assert!(
+            colliding.len() >= 4,
+            "{kind:?}: key pool too small to collide (got {})",
+            colliding.len()
+        );
+        // Duplicate-laden batch: every key appears 2-3 times.
+        let mut batch: Vec<u64> = Vec::new();
+        for rep in 0..3 {
+            for (i, &k) in colliding.iter().enumerate() {
+                if rep < 2 || i % 2 == 0 {
+                    batch.push(k);
+                }
+            }
+        }
+        let pairs: Vec<(u64, u64)> = batch.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
+        let mut got_u = Vec::new();
+        bulk_t.upsert_bulk(&pairs, &UpsertOp::Overwrite, &mut got_u);
+        assert_eq!(got_u.len(), pairs.len(), "{kind:?}: missing upsert results");
+        for (i, &(k, v)) in pairs.iter().enumerate() {
+            assert_eq!(
+                got_u[i],
+                scalar_t.upsert(k, v, &UpsertOp::Overwrite),
+                "{kind:?}: colliding upsert #{i}"
+            );
+        }
+        let mut got_q = Vec::new();
+        bulk_t.query_bulk(&batch, &mut got_q);
+        assert_eq!(got_q.len(), batch.len(), "{kind:?}: missing query results");
+        for (i, &k) in batch.iter().enumerate() {
+            assert_eq!(got_q[i], scalar_t.query(k), "{kind:?}: colliding query #{i}");
+        }
+        // Erase with duplicates: first hit erases, repeats report false.
+        let mut got_e = Vec::new();
+        bulk_t.erase_bulk(&batch, &mut got_e);
+        assert_eq!(got_e.len(), batch.len(), "{kind:?}: missing erase results");
+        for (i, &k) in batch.iter().enumerate() {
+            assert_eq!(got_e[i], scalar_t.erase(k), "{kind:?}: colliding erase #{i}");
         }
     }
 }

@@ -16,6 +16,7 @@ fn coordinator_serves_ycsb_consistently() {
         n_shards: 4,
         n_workers: 2,
         max_batch: 256,
+        growth: None,
     });
     let universe = distinct_keys(8 * 1024, 0xE2E);
     let load_results = coord.run_stream(universe.iter().map(|&k| Op::Upsert(k, k ^ 3)));
