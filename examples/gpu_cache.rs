@@ -19,11 +19,22 @@ fn main() {
     println!("dataset: {data_size} keys; {n_queries} uniform queries per point\n");
     println!("{:>7} {:>14} {:>10} {:>9} {:>12}", "ratio%", "table", "Mops/s", "hit-rate", "evictions");
     for ratio in [0.05, 0.10, 0.25, 0.50, 0.70] {
-        for kind in [TableKind::P2Meta, TableKind::IcebergMeta, TableKind::Double, TableKind::Chaining, TableKind::Cuckoo] {
+        for kind in [
+            TableKind::P2Meta,
+            TableKind::IcebergMeta,
+            TableKind::Double,
+            TableKind::Chaining,
+            TableKind::Cuckoo,
+        ] {
             let table = build_table(kind, (data_size as f64 * ratio) as usize + 64);
             let store = HostStore::new(data.iter().map(|&k| (k, k ^ 0xCAFE)));
             let Some(mut cache) = GpuCache::new(Arc::clone(&table), store) else {
-                println!("{:>7.0} {:>14} {:>10} (cannot run: unstable design)", ratio * 100.0, kind.paper_name(), "-");
+                println!(
+                    "{:>7.0} {:>14} {:>10} (cannot run: unstable design)",
+                    ratio * 100.0,
+                    kind.paper_name(),
+                    "-"
+                );
                 continue;
             };
             let mut draws = UniverseDraws::new(&data, 0xD1CE);

@@ -23,6 +23,7 @@ fn main() {
             n_workers: default_workers(),
             max_batch: 4096,
             growth: None,
+            reshard: None,
         });
         let universe = distinct_keys(universe_size, 0x4C5B);
         // Pre-load every key (paper setup).

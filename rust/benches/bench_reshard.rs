@@ -1,0 +1,8 @@
+//! `cargo bench --bench bench_reshard` — online shard-count doubling
+//! under live mixed traffic.
+use warpspeed::bench::{reshard, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", reshard::run(&env));
+}

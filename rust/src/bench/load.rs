@@ -19,7 +19,11 @@ pub struct LoadCurves {
     pub curves: Vec<(String, Vec<f64>, Vec<f64>, Vec<f64>)>,
 }
 
-pub fn measure(kind: TableKind, slots: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+pub fn measure(
+    kind: TableKind,
+    slots: usize,
+    seed: u64,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
     let _measure = probes::measurement_section();
     probes::set_enabled(false);
     let t = build_table(kind, slots);

@@ -20,6 +20,7 @@ pub mod grow;
 pub mod load;
 pub mod probes;
 pub mod report;
+pub mod reshard;
 pub mod runtime;
 pub mod scaling;
 pub mod space;

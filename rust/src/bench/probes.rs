@@ -10,7 +10,9 @@ use std::sync::Arc;
 
 use crate::apps::aging::AgingDriver;
 use crate::gpusim::probes::{self, OpStats, ProbeScope};
-use crate::tables::{build_table, build_table_with, ConcurrencyMode, TableConfig, TableKind, UpsertOp};
+use crate::tables::{
+    build_table, build_table_with, ConcurrencyMode, TableConfig, TableKind, UpsertOp,
+};
 use crate::workloads::keys::distinct_keys;
 
 use super::{mops, report, BenchEnv};
@@ -67,7 +69,12 @@ pub fn load_probes(kind: TableKind, slots: usize, seed: u64) -> (f64, f64, f64) 
 }
 
 /// Measure aging probe counts (after `iters` churn iterations).
-pub fn aging_probes(kind: TableKind, slots: usize, iters: usize, seed: u64) -> (f64, f64, f64, f64) {
+pub fn aging_probes(
+    kind: TableKind,
+    slots: usize,
+    iters: usize,
+    seed: u64,
+) -> (f64, f64, f64, f64) {
     let _measure = probes::measurement_section();
     probes::set_enabled(true);
     let t = build_table(kind, slots);

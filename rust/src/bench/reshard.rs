@@ -1,0 +1,203 @@
+//! Reshard exhibit — online shard-count doubling under live mixed
+//! traffic (the topology-scaling counterpart of [`super::grow`]).
+//!
+//! Each design starts on a deliberately narrow 2-shard coordinator with
+//! a load-factor reshard trigger and is driven to 2× its provisioning
+//! with mixed upsert/query/erase batches. Crossing the trigger doubles
+//! the shard count mid-stream: the cutover drains the pipeline, the
+//! worker pool widens, and split-migration jobs interleave with the
+//! continuing traffic. Every result is replayed against a sequential
+//! oracle (the scalar parity baseline, extended across the split), so
+//! the exhibit doubles as a zero-lost/zero-duplicated-ops check.
+//! Reported per design: epochs reached, shard count before/after, keys
+//! moved by split migration, post-quiesce balance, Rejected results
+//! (must be 0), oracle mismatches (must be 0), and Mops/s. JSON rows
+//! follow the human table for machine consumption (the CI
+//! bench-trajectory artifact records them).
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult, ReshardPolicy};
+use crate::gpusim::probes;
+use crate::prng::Xoshiro256pp;
+use crate::tables::{GrowthPolicy, TableKind};
+use crate::workloads::keys::distinct_keys;
+
+use super::{mops, report, BenchEnv};
+
+/// One design's reshard run.
+pub struct ReshardOutcome {
+    pub shards_before: usize,
+    pub shards_after: usize,
+    /// Routing epoch reached (= shard-count doublings started).
+    pub epochs: u32,
+    /// Keys moved parent→child by split migration.
+    pub moved_keys: u64,
+    /// (largest, smallest) shard size after quiesce.
+    pub balance: (usize, usize),
+    pub rejected: u64,
+    /// Results that diverged from the sequential oracle replay.
+    pub mismatches: u64,
+    pub ops: usize,
+    pub mops: f64,
+}
+
+pub fn measure(kind: TableKind, slots: usize, seed: u64) -> ReshardOutcome {
+    let c = Coordinator::new(CoordinatorConfig {
+        kind,
+        total_slots: slots,
+        n_shards: 2,
+        n_workers: 4,
+        max_batch: 256,
+        // Growable shards absorb transient overflow while a split's
+        // migration catches up with the insert frontier.
+        growth: Some(GrowthPolicy {
+            migration_batch: 32,
+            ..Default::default()
+        }),
+        // Reshard below the growth trigger: prefer wider topology over
+        // deeper shards.
+        reshard: Some(ReshardPolicy {
+            trigger_load_factor: 0.6,
+            migration_stripes: 64,
+            max_shards: 16,
+            ..Default::default()
+        }),
+    });
+    let shards_before = c.table.n_shards();
+    // Mixed traffic to 2× the provisioning: 70% fresh inserts (the load
+    // that crosses the trigger), 20% queries, 10% erases, all replayed
+    // against a sequential oracle.
+    let ks = distinct_keys(slots * 2, seed ^ kind as u64);
+    let mut rng = Xoshiro256pp::new(seed ^ 0x5117);
+    let mut oracle: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    let mut ops: Vec<Op> = Vec::new();
+    let mut expected: Vec<OpResult> = Vec::new();
+    let mut frontier = 0usize;
+    while frontier < ks.len() {
+        let dice = rng.next_below(10);
+        if dice < 7 || frontier == 0 {
+            let k = ks[frontier];
+            frontier += 1;
+            ops.push(Op::Upsert(k, k ^ 7));
+            expected.push(OpResult::Upserted(oracle.insert(k, k ^ 7).is_none()));
+        } else {
+            let k = ks[rng.next_below(frontier as u64) as usize];
+            if dice < 9 {
+                ops.push(Op::Query(k));
+                expected.push(OpResult::Value(oracle.get(&k).copied()));
+            } else {
+                ops.push(Op::Erase(k));
+                expected.push(OpResult::Erased(oracle.remove(&k).is_some()));
+            }
+        }
+    }
+    let n_ops = ops.len();
+    let mut got: Vec<OpResult> = Vec::new();
+    let m = mops(n_ops, || {
+        got = c.run_stream(ops);
+    });
+    let rejected = got.iter().filter(|&&r| r == OpResult::Rejected).count() as u64;
+    let mut mismatches = got
+        .iter()
+        .zip(&expected)
+        .filter(|(g, e)| g != e)
+        .count() as u64;
+    mismatches += got.len().abs_diff(expected.len()) as u64;
+    // Quiesce before auditing topology and balance. A split or growth
+    // migration that cannot complete (pinned at a capacity ceiling) is
+    // exactly the failure this exhibit exists to surface, so a false
+    // return counts as a mismatch rather than vanishing into a clean
+    // row.
+    if !c.finish_resharding() {
+        mismatches += 1; // split never sealed
+    }
+    if !c.finish_migrations() {
+        mismatches += 1; // growth migration pinned
+    }
+    if c.table.len() != oracle.len() {
+        mismatches += 1; // lost or duplicated keys
+    }
+    ReshardOutcome {
+        shards_before,
+        shards_after: c.table.n_shards(),
+        epochs: c.table.epoch(),
+        moved_keys: c.table.moved_keys(),
+        balance: c.table.balance(),
+        rejected,
+        mismatches,
+        ops: n_ops,
+        mops: m,
+    }
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let _measure = probes::measurement_section();
+    probes::set_enabled(false);
+    let slots = (env.slots / 4).max(1024);
+    let mut rows = Vec::new();
+    let mut json = String::new();
+    for kind in TableKind::CONCURRENT {
+        let r = measure(kind, slots, env.seed);
+        rows.push(vec![
+            kind.paper_name().to_string(),
+            format!("{}→{}", r.shards_before, r.shards_after),
+            r.epochs.to_string(),
+            r.moved_keys.to_string(),
+            format!("{}/{}", r.balance.0, r.balance.1),
+            r.rejected.to_string(),
+            r.mismatches.to_string(),
+            report::fmt_f(r.mops, 2),
+        ]);
+        json.push_str(&report::json_row(&[
+            ("exhibit", report::JsonVal::Str("reshard".into())),
+            ("table", report::JsonVal::Str(kind.paper_name().into())),
+            ("nominal_slots", report::JsonVal::Int(slots as u64)),
+            ("shards_before", report::JsonVal::Int(r.shards_before as u64)),
+            ("shards_after", report::JsonVal::Int(r.shards_after as u64)),
+            ("epochs", report::JsonVal::Int(r.epochs as u64)),
+            ("moved_keys", report::JsonVal::Int(r.moved_keys)),
+            ("balance_max", report::JsonVal::Int(r.balance.0 as u64)),
+            ("balance_min", report::JsonVal::Int(r.balance.1 as u64)),
+            ("rejected", report::JsonVal::Int(r.rejected)),
+            ("mismatches", report::JsonVal::Int(r.mismatches)),
+            ("ops", report::JsonVal::Int(r.ops as u64)),
+            ("mops", report::JsonVal::Num(r.mops)),
+        ]));
+        json.push('\n');
+    }
+    probes::set_enabled(true);
+    let mut out = report::table(
+        "Reshard — online shard-count doubling under live mixed traffic (2× nominal)",
+        &["table", "shards", "epochs", "moved", "bal max/min", "rej", "mism", "Mops"],
+        &rows,
+    );
+    out.push('\n');
+    out.push_str(&json);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshard_bench_doubles_and_matches_oracle() {
+        let r = measure(TableKind::P2Meta, 2048, 0x9);
+        assert!(r.epochs >= 1, "2× inserts over a 0.6 trigger must fire a doubling");
+        assert!(r.shards_after >= 2 * r.shards_before, "shard count never doubled");
+        assert!(r.moved_keys > 0, "a doubling with no key re-routing");
+        assert_eq!(r.rejected, 0, "resharding traffic must never reject");
+        assert_eq!(r.mismatches, 0, "oracle divergence across a split");
+        assert!(r.balance.0 > 0, "empty shards after quiesce");
+        assert!(r.mops > 0.0);
+    }
+
+    #[test]
+    fn reshard_bench_holds_for_an_unstable_design_too() {
+        // CuckooHT relocates keys on insert — the design the sealing
+        // sweep's displacement-free scan exists for.
+        let r = measure(TableKind::Cuckoo, 1024, 0xA);
+        assert!(r.epochs >= 1);
+        assert_eq!(r.rejected, 0);
+        assert_eq!(r.mismatches, 0);
+    }
+}

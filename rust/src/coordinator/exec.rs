@@ -4,10 +4,10 @@
 //! Workers play the role of the GPU's SMs, and — like WarpCore-style
 //! persistent kernels — they are launched ONCE, when the coordinator is
 //! built, and live until it drops. Each worker owns a fixed set of
-//! shards (shard `i` is always served by worker `i % n_workers`) and
-//! drains jobs from its own channel, so sustained traffic pays no
-//! per-batch thread-spawn cost and per-shard operation order is
-//! preserved across batches by channel FIFO order alone.
+//! shards (shard `i` is always served by worker `i % n_workers` within a
+//! routing epoch) and drains jobs from its own channel, so sustained
+//! traffic pays no per-batch thread-spawn cost and per-shard operation
+//! order is preserved across batches by channel FIFO order alone.
 //!
 //! Submission is split from collection ([`Coordinator::submit`] /
 //! [`Coordinator::collect`]) so the pipeline overlaps: batch N+1 is
@@ -18,26 +18,50 @@
 //!
 //! Execution is batch-native: each shard's sub-batch is split into
 //! maximal *runs* of same-class operations (upsert / accumulate / query /
-//! erase) and every run is dispatched through the table's bulk API
-//! ([`crate::tables::ConcurrentMap::upsert_bulk`] and friends), so one
-//! lock acquisition and one shared bucket scan serve every op of a run
-//! that hashes to the same bucket — the host-side analog of launching one
-//! warp-cooperative kernel per operation batch. Batches that
-//! [`Batch::read_only`] reports as all-queries skip run-splitting
-//! entirely: the whole sub-batch dispatches as one read run. Read runs
-//! first consult the optional [`ReadOffload`] hook (the AOT-compiled
-//! PJRT bulk-query path, [`crate::runtime::EngineOffload`]) and fall
-//! back to the shard's lock-free in-process bulk query. The documented
-//! invariants hold: results return in arrival order, and ops on the same
-//! key never reorder (same key ⇒ same shard ⇒ same worker, runs are
-//! dispatched in sub-batch order, and jobs drain FIFO per worker).
+//! erase) and every run is dispatched through the sharded table's bulk
+//! entry points ([`ShardedTable::upsert_bulk_on`] and friends, which
+//! forward to the table's native bulk API — or to the split-protocol
+//! path while the shard pair is migrating), so one lock acquisition and
+//! one shared bucket scan serve every op of a run that hashes to the
+//! same bucket. Batches that [`Batch::read_only`] reports as all-queries
+//! skip run-splitting entirely: the whole sub-batch dispatches as one
+//! read run. Read runs first consult the optional [`ReadOffload`] hook
+//! (the AOT-compiled PJRT bulk-query path,
+//! [`crate::runtime::EngineOffload`]) whenever the shard can be read
+//! directly, and fall back to the shard's lock-free in-process bulk
+//! query. The documented invariants hold: results return in arrival
+//! order, and ops on the same key never reorder (same key ⇒ same shard ⇒
+//! same worker, runs are dispatched in sub-batch order, and jobs drain
+//! FIFO per worker).
+//!
+//! ## Online resharding
+//!
+//! With [`CoordinatorConfig::reshard`] set, [`Coordinator::submit`]
+//! doubles the shard count when aggregate load factor or queued work per
+//! worker crosses the [`ReshardPolicy`] trigger. The cutover is the one
+//! delicate moment: in-flight batches were partitioned under the old
+//! routing epoch and address shard indices whose keys are about to
+//! re-route, so submit **drains the workers** (a barrier job per worker,
+//! FIFO behind everything queued) before the split begins, then grows
+//! the pool toward the configured width — shard→worker affinity remaps
+//! with the epoch — and partitions every subsequent batch under the new
+//! epoch's router. Split migration then interleaves with traffic: one
+//! bounded [`ShardedTable::drive_split`] job per unfinished pair rides
+//! AHEAD of each batch, exactly like capacity-growth migration jobs.
+//! [`Coordinator::request_reshard`] performs the same gated cutover on
+//! demand; calling [`ShardedTable::split_shards`] directly while the
+//! coordinator is serving skips the drain and can reorder cross-epoch
+//! ops on moving keys (keys are never lost — the sealing sweep catches
+//! every straggler — but per-key order across the epoch change is only
+//! guaranteed through the coordinator's gate).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::{self, JoinHandle};
 
-use super::{Batch, Op, ShardedTable};
-use crate::tables::{ConcurrentMap, GrowthPolicy, TableKind, UpsertOp, UpsertResult};
+use super::{Batch, Op, Router, ShardedTable};
+use crate::tables::{GrowthPolicy, TableKind, UpsertOp, UpsertResult};
 
 /// Result of one operation, tagged with its sequence number.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,14 +72,66 @@ pub enum OpResult {
     Rejected,             // table full
 }
 
+/// When the coordinator doubles its shard count online.
+///
+/// Both triggers are evaluated at [`Coordinator::submit`] time, before
+/// the batch partitions; a doubling never starts while a previous split
+/// is still migrating, and never past `max_shards`.
+#[derive(Clone, Copy, Debug)]
+pub struct ReshardPolicy {
+    /// Aggregate load factor (total keys / total capacity) at which the
+    /// shard count doubles. Growth-wrapped shards also grow themselves
+    /// at [`GrowthPolicy::trigger_load_factor`]; set this lower to
+    /// prefer more parallelism over deeper shards.
+    pub trigger_load_factor: f64,
+    /// Mean queued-but-unfinished jobs per worker at which the shard
+    /// count doubles (backlog = not enough parallelism). `0` disables
+    /// the queue-depth trigger.
+    pub trigger_queue_depth: usize,
+    /// Routing stripes migrated per split job claim — the bounded unit
+    /// of split work interleaved ahead of each traffic batch. Note that
+    /// each claim scans the parent shard once (filtered to the claimed
+    /// stripes), so smaller claims bound lock-hold footprint per batch
+    /// at the price of more scans per pair
+    /// ([`ShardedTable::drive_split`] documents the trade).
+    pub migration_stripes: usize,
+    /// Ceiling on the shard count.
+    pub max_shards: usize,
+}
+
+impl Default for ReshardPolicy {
+    fn default() -> Self {
+        Self {
+            trigger_load_factor: 0.80,
+            trigger_queue_depth: 0,
+            // 256/64 = 4 parent scans per pair (see the field docs).
+            migration_stripes: 64,
+            max_shards: 1024,
+        }
+    }
+}
+
+impl ReshardPolicy {
+    /// Pure trigger predicates (unit-tested; the coordinator feeds them
+    /// live measurements).
+    pub fn load_triggered(&self, len: usize, capacity: usize) -> bool {
+        capacity > 0 && len as f64 >= self.trigger_load_factor * capacity as f64
+    }
+
+    pub fn queue_triggered(&self, pending_jobs_per_worker: usize) -> bool {
+        self.trigger_queue_depth > 0 && pending_jobs_per_worker >= self.trigger_queue_depth
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub kind: TableKind,
     pub total_slots: usize,
     pub n_shards: usize,
-    /// Requested pool width. The pool is clamped to `n_shards` at
-    /// construction — shard `i` is pinned to worker `i % pool_width`,
-    /// so extra workers could never receive work.
+    /// Requested pool width. The pool is clamped to the CURRENT shard
+    /// count — shard `i` is pinned to worker `i % pool_width`, so extra
+    /// workers could never receive work — and grows back toward this
+    /// width as resharding raises the shard count.
     /// [`Coordinator::n_workers`] reports the effective width.
     pub n_workers: usize,
     pub max_batch: usize,
@@ -67,6 +143,10 @@ pub struct CoordinatorConfig {
     /// instead of [`OpResult::Rejected`]. `None` keeps fixed-capacity
     /// shards that reject at saturation.
     pub growth: Option<GrowthPolicy>,
+    /// Online shard-count rescaling policy. `Some` lets `submit` double
+    /// the shard count (and with it worker parallelism) when the policy
+    /// trigger fires; `None` keeps the topology fixed at `n_shards`.
+    pub reshard: Option<ReshardPolicy>,
 }
 
 impl Default for CoordinatorConfig {
@@ -78,6 +158,7 @@ impl Default for CoordinatorConfig {
             n_workers: default_workers(),
             max_batch: 1024,
             growth: None,
+            reshard: None,
         }
     }
 }
@@ -94,10 +175,16 @@ pub fn default_workers() -> usize {
 /// snapshot — see [`crate::runtime::EngineOffload`]). Return `true` after
 /// appending exactly one result per key to `out`; return `false` (with
 /// `out` untouched) to decline, and the executor falls back to
-/// [`ConcurrentMap::query_bulk`] on the shard.
+/// [`crate::tables::ConcurrentMap::query_bulk`] on the shard. While a
+/// shard pair is mid-split its child cannot be read directly
+/// ([`ShardedTable::direct_read_shard`]), so those runs skip the hook.
 pub trait ReadOffload: Send + Sync {
-    fn query_run(&self, shard: &dyn ConcurrentMap, keys: &[u64], out: &mut Vec<Option<u64>>)
-        -> bool;
+    fn query_run(
+        &self,
+        shard: &dyn crate::tables::ConcurrentMap,
+        keys: &[u64],
+        out: &mut Vec<Option<u64>>,
+    ) -> bool;
 }
 
 /// Operation class used for run-splitting: consecutive ops of one class
@@ -140,70 +227,101 @@ enum Job {
     /// migration work interleaves with foreground traffic on the same
     /// shard-affine worker instead of stalling it.
     Migrate { shard_idx: usize, buckets: usize },
+    /// Advance split pair `pair`'s key re-routing migration by up to
+    /// `stripes` routing stripes — the reshard analog of `Migrate`,
+    /// also enqueued ahead of each batch per unfinished pair.
+    SplitMigrate { pair: usize, stripes: usize },
+    /// Epoch-cutover drain marker: the worker acks once every job queued
+    /// before it has finished (channel FIFO).
+    Barrier(Sender<()>),
 }
 
-/// Long-lived shard-affine workers. Spawned once at coordinator
-/// construction; each drains its own job channel until the coordinator
-/// drops, which disconnects the channels and joins every thread.
+/// Long-lived shard-affine workers. Spawned at coordinator construction
+/// and grown (never shrunk) at reshard cutovers; each drains its own job
+/// channel until the coordinator drops, which disconnects the channels
+/// and joins every thread.
 struct WorkerPool {
     txs: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    fn spawn(table: &Arc<ShardedTable>, n_workers: usize) -> Self {
-        let n_workers = n_workers.max(1);
-        let mut txs = Vec::with_capacity(n_workers);
-        let mut handles = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
+    fn spawn(table: &Arc<ShardedTable>, n_workers: usize, inflight: &Arc<AtomicUsize>) -> Self {
+        let mut pool = Self {
+            txs: Vec::new(),
+            handles: Vec::new(),
+        };
+        pool.grow_to(table, n_workers.max(1), inflight);
+        pool
+    }
+
+    /// Grow the pool to `n` workers (no-op if already that wide). Only
+    /// called at construction and inside the epoch-cutover gate, after
+    /// the drain — affinity `i % n_workers` must never change while
+    /// index-addressed batches are in flight.
+    fn grow_to(&mut self, table: &Arc<ShardedTable>, n: usize, inflight: &Arc<AtomicUsize>) {
+        while self.txs.len() < n {
+            let w = self.txs.len();
             let (tx, rx) = mpsc::channel::<Job>();
             let table = Arc::clone(table);
+            let inflight = Arc::clone(inflight);
             let handle = thread::Builder::new()
                 .name(format!("warpspeed-worker-{w}"))
-                .spawn(move || {
-                    while let Ok(job) = rx.recv() {
-                        match job {
-                            Job::Batch {
-                                parts,
-                                read_only,
-                                offload,
-                                reply,
-                            } => {
-                                let mut out = Vec::new();
-                                for (shard_idx, part) in &parts {
-                                    let shard = table.shards[*shard_idx].as_ref();
-                                    if read_only {
-                                        Coordinator::apply_read_only_part(
-                                            shard,
-                                            part,
-                                            offload.as_deref(),
-                                            &mut out,
-                                        );
-                                    } else {
-                                        Coordinator::apply_part(
-                                            shard,
-                                            part,
-                                            offload.as_deref(),
-                                            &mut out,
-                                        );
-                                    }
-                                }
-                                // A dropped receiver just means the
-                                // submitter went away mid-batch; the
-                                // worker keeps serving.
-                                let _ = reply.send(out);
-                            }
-                            Job::Migrate { shard_idx, buckets } => {
-                                table.shards[shard_idx].drive_migration(buckets);
-                            }
+                .spawn(move || Self::serve(table, inflight, rx))
+                .expect("failed to spawn coordinator worker");
+            self.txs.push(tx);
+            self.handles.push(handle);
+        }
+    }
+
+    /// Worker loop: drain jobs until the channel disconnects.
+    fn serve(table: Arc<ShardedTable>, inflight: Arc<AtomicUsize>, rx: Receiver<Job>) {
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Batch {
+                    parts,
+                    read_only,
+                    offload,
+                    reply,
+                } => {
+                    let mut out = Vec::new();
+                    for (shard_idx, part) in &parts {
+                        if read_only {
+                            Coordinator::apply_read_only_part(
+                                &table,
+                                *shard_idx,
+                                part,
+                                offload.as_deref(),
+                                &mut out,
+                            );
+                        } else {
+                            Coordinator::apply_part(
+                                &table,
+                                *shard_idx,
+                                part,
+                                offload.as_deref(),
+                                &mut out,
+                            );
                         }
                     }
-                })
-                .expect("failed to spawn coordinator worker");
-            txs.push(tx);
-            handles.push(handle);
+                    // A dropped receiver just means the submitter went
+                    // away mid-batch; the worker keeps serving.
+                    let _ = reply.send(out);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+                Job::Migrate { shard_idx, buckets } => {
+                    table.shard_handle(shard_idx).drive_migration(buckets);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+                Job::SplitMigrate { pair, stripes } => {
+                    table.drive_split(pair, stripes);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+                Job::Barrier(ack) => {
+                    let _ = ack.send(());
+                }
+            }
         }
-        Self { txs, handles }
     }
 
     #[inline]
@@ -237,8 +355,18 @@ pub struct Coordinator {
     cfg: CoordinatorConfig,
     /// Optional read-run offload (PJRT bulk-query path).
     offload: Option<Arc<dyn ReadOffload>>,
-    /// Persistent shard-affine worker pool (spawned once, joined on drop).
-    pool: WorkerPool,
+    /// Persistent shard-affine worker pool. Write-locked only inside the
+    /// epoch-cutover gate (pool growth); submit takes the read side.
+    pool: RwLock<WorkerPool>,
+    /// Jobs enqueued but not yet finished — the queue-depth signal the
+    /// reshard policy reads.
+    inflight: Arc<AtomicUsize>,
+    /// Routing epoch the last submitted batch partitioned under. The
+    /// mutex is held for each WHOLE submission (cutover trigger check →
+    /// drain → split → pool growth → partition → enqueue), so a
+    /// concurrent submitter can never enqueue a batch partitioned under
+    /// an epoch another thread's cutover just retired.
+    epoch_gate: Mutex<u32>,
     /// Operations executed (metrics).
     pub ops_executed: std::sync::atomic::AtomicU64,
 }
@@ -251,14 +379,19 @@ impl Coordinator {
             }
             None => ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards),
         });
+        let inflight = Arc::new(AtomicUsize::new(0));
         // More workers than shards would park forever on empty channels
-        // (shard i is pinned to worker i % n_workers), so clamp.
-        let pool = WorkerPool::spawn(&table, cfg.n_workers.min(cfg.n_shards));
+        // (shard i is pinned to worker i % n_workers), so clamp; reshard
+        // cutovers grow the pool back toward cfg.n_workers.
+        let pool = WorkerPool::spawn(&table, cfg.n_workers.min(cfg.n_shards), &inflight);
+        let epoch = table.epoch();
         Self {
             table,
             cfg,
             offload: None,
-            pool,
+            pool: RwLock::new(pool),
+            inflight,
+            epoch_gate: Mutex::new(epoch),
             ops_executed: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -268,9 +401,15 @@ impl Coordinator {
     }
 
     /// Effective worker-pool width (the configured `n_workers` clamped
-    /// to `n_shards`).
+    /// to the current shard count; grows at reshard cutovers).
     pub fn n_workers(&self) -> usize {
-        self.pool.len()
+        self.pool.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Jobs enqueued but not yet finished, per worker — what the
+    /// [`ReshardPolicy::queue_triggered`] trigger consumes.
+    pub fn pending_jobs_per_worker(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed) / self.n_workers().max(1)
     }
 
     /// Attach a read-run offload. Only whole query runs are routed to it;
@@ -281,9 +420,12 @@ impl Coordinator {
     }
 
     /// Dispatch one shard sub-batch: split into maximal same-class runs,
-    /// route each run through the shard's bulk API in order.
+    /// route each run through the sharded table's bulk entry points in
+    /// order (they forward to the shard's native bulk API, or to the
+    /// split protocol while the shard pair migrates).
     fn apply_part(
-        shard: &dyn ConcurrentMap,
+        table: &ShardedTable,
+        shard_idx: usize,
         part: &[(u64, Op)],
         offload: Option<&dyn ReadOffload>,
         out: &mut Vec<(u64, OpResult)>,
@@ -314,7 +456,7 @@ impl Coordinator {
                         UpsertOp::AddAssign
                     };
                     ups.clear();
-                    shard.upsert_bulk(&pairs, &policy, &mut ups);
+                    table.upsert_bulk_on(shard_idx, &pairs, &policy, &mut ups);
                     out.extend(run.iter().zip(&ups).map(|(&(seq, _), &r)| {
                         (
                             seq,
@@ -334,13 +476,15 @@ impl Coordinator {
                     }));
                 }
                 OpClass::Get => {
-                    Self::dispatch_read_run(shard, run, offload, &mut keys, &mut vals, out);
+                    Self::dispatch_read_run(
+                        table, shard_idx, run, offload, &mut keys, &mut vals, out,
+                    );
                 }
                 OpClass::Del => {
                     keys.clear();
                     keys.extend(run.iter().map(|&(_, op)| op.key()));
                     hits.clear();
-                    shard.erase_bulk(&keys, &mut hits);
+                    table.erase_bulk_on(shard_idx, &keys, &mut hits);
                     out.extend(
                         run.iter()
                             .zip(&hits)
@@ -353,12 +497,14 @@ impl Coordinator {
     }
 
     /// Dispatch one read run — the single place the [`ReadOffload`]
-    /// protocol lives: consult the hook, fall back to the shard's
-    /// lock-free bulk query, zip results back onto sequence numbers.
-    /// `keys`/`vals` are caller-owned scratch (cleared here) so run-split
-    /// loops reuse their buffers.
+    /// protocol lives: consult the hook when the shard is directly
+    /// readable, fall back to the sharded table's lock-free bulk query
+    /// (old-then-new across a mid-split pair), zip results back onto
+    /// sequence numbers. `keys`/`vals` are caller-owned scratch (cleared
+    /// here) so run-split loops reuse their buffers.
     fn dispatch_read_run(
-        shard: &dyn ConcurrentMap,
+        table: &ShardedTable,
+        shard_idx: usize,
         run: &[(u64, Op)],
         offload: Option<&dyn ReadOffload>,
         keys: &mut Vec<u64>,
@@ -368,9 +514,12 @@ impl Coordinator {
         keys.clear();
         keys.extend(run.iter().map(|&(_, op)| op.key()));
         vals.clear();
-        let served = offload.is_some_and(|o| o.query_run(shard, keys, vals));
+        let served = match (offload, table.direct_read_shard(shard_idx)) {
+            (Some(o), Some(shard)) => o.query_run(shard.as_ref(), keys, vals),
+            _ => false,
+        };
         if !served {
-            shard.query_bulk(keys, vals);
+            table.query_bulk_on(shard_idx, keys, vals);
         }
         out.extend(
             run.iter()
@@ -383,38 +532,138 @@ impl Coordinator {
     /// proved to be all queries: no run-splitting — the whole sub-batch
     /// is one read run.
     fn apply_read_only_part(
-        shard: &dyn ConcurrentMap,
+        table: &ShardedTable,
+        shard_idx: usize,
         part: &[(u64, Op)],
         offload: Option<&dyn ReadOffload>,
         out: &mut Vec<(u64, OpResult)>,
     ) {
         let mut keys: Vec<u64> = Vec::new();
         let mut vals: Vec<Option<u64>> = Vec::new();
-        Self::dispatch_read_run(shard, part, offload, &mut keys, &mut vals, out);
+        Self::dispatch_read_run(table, shard_idx, part, offload, &mut keys, &mut vals, out);
     }
 
-    /// Submit a batch to the persistent pool: partition by shard, enqueue
-    /// one job per owning worker, return without waiting. The returned
-    /// handle is redeemed by [`Coordinator::collect`]; submitting batch
-    /// N+1 before collecting batch N pipelines partitioning against
-    /// execution (per-key order is safe: a key's shard always maps to the
-    /// same worker, and each worker drains its jobs FIFO).
+    /// Block until every job queued so far has finished: one barrier per
+    /// worker, FIFO behind everything pending. In-flight batches still
+    /// deliver their results to their [`PendingBatch`] handles.
+    fn drain_workers(&self) {
+        let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
+        let (ack, rx) = mpsc::channel();
+        let mut expected = 0usize;
+        for tx in &pool.txs {
+            if tx.send(Job::Barrier(ack.clone())).is_ok() {
+                expected += 1;
+            }
+        }
+        drop(ack);
+        drop(pool);
+        for _ in 0..expected {
+            let _ = rx.recv();
+        }
+    }
+
+    /// The epoch cutover, shared by `submit` (policy-triggered) and
+    /// [`Coordinator::request_reshard`] (forced): optionally begin a
+    /// split, and on any epoch change (begun here, or an external
+    /// [`ShardedTable::split_shards`] observed late) drain the workers
+    /// before anything partitions under the new router, then grow the
+    /// pool toward the configured width. The caller holds the epoch
+    /// gate. Returns the router to partition under, plus whether a
+    /// requested split actually began.
+    fn cutover_locked(&self, gate: &mut u32, force_split: bool) -> (Router, bool) {
+        let mut router = self.table.current_router();
+        let mut drained = false;
+        let mut split_begun = false;
+        let want_split = if force_split {
+            // A forced doubling still honours the configured shard
+            // ceiling (its whole point is bounding the footprint).
+            !self.table.split_in_progress()
+                && self
+                    .cfg
+                    .reshard
+                    .is_none_or(|p| router.n_shards() * 2 <= p.max_shards)
+        } else if let Some(policy) = self.cfg.reshard {
+            let (len, capacity) = self.table.load_stats();
+            router.epoch() == *gate
+                && !self.table.split_in_progress()
+                && router.n_shards() * 2 <= policy.max_shards
+                && (policy.load_triggered(len, capacity)
+                    || policy.queue_triggered(self.pending_jobs_per_worker()))
+        } else {
+            false
+        };
+        if want_split {
+            // In-flight batches address old-epoch shard indices; drain
+            // them before any key re-routes.
+            self.drain_workers();
+            drained = true;
+            split_begun = self.table.split_shards();
+            router = self.table.current_router();
+        }
+        if router.epoch() != *gate {
+            if !drained {
+                self.drain_workers();
+            }
+            *gate = router.epoch();
+            // Remap shard→worker affinity for the wider topology.
+            let want = self.cfg.n_workers.min(router.n_shards()).max(1);
+            let mut pool = self.pool.write().unwrap_or_else(|e| e.into_inner());
+            pool.grow_to(&self.table, want, &self.inflight);
+        }
+        (router, split_begun)
+    }
+
+    /// Begin a shard-count doubling through the cutover gate (drain →
+    /// split → pool growth), regardless of the policy *triggers* —
+    /// though the configured [`ReshardPolicy::max_shards`] ceiling
+    /// still applies. Returns false when a split is already in progress
+    /// or the ceiling would be exceeded.
+    pub fn request_reshard(&self) -> bool {
+        let mut gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
+        self.cutover_locked(&mut gate, true).1
+    }
+
+    /// Submit a batch to the persistent pool: run the epoch-cutover gate,
+    /// partition by shard under the resulting router, enqueue one job per
+    /// owning worker, return without waiting. The returned handle is
+    /// redeemed by [`Coordinator::collect`]; submitting batch N+1 before
+    /// collecting batch N pipelines partitioning against execution
+    /// (per-key order is safe: a key's shard always maps to the same
+    /// worker within an epoch, each worker drains its jobs FIFO, and
+    /// epoch changes drain the pipeline first).
     pub fn submit(&self, batch: &Batch) -> PendingBatch {
-        let parts = batch.partition(&self.table.router);
+        // The whole submission holds the epoch gate: partitioning and
+        // enqueueing must be exclusive against a concurrent submitter's
+        // (or request_reshard's) cutover, or a batch partitioned under
+        // the old epoch could be enqueued after the drain and write
+        // moving keys into their parent behind the migration's back.
+        let mut gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
+        let (router, _) = self.cutover_locked(&mut gate, false);
+        let parts = batch.partition(&router);
         let read_only = batch.read_only();
-        let n_workers = self.pool.len();
+        let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
+        let n_workers = pool.len();
         // Growth interleaving: every migrating shard gets one bounded
         // migration job queued AHEAD of this batch on its owning worker
         // (FIFO), so capacity is freed before the traffic that needs it
         // and migration never stalls the pool for longer than one batch.
         if self.cfg.growth.is_some() {
-            for (i, shard) in self.table.shards.iter().enumerate() {
-                if shard.migration_in_progress() {
-                    let _ = self.pool.txs[i % n_workers].send(Job::Migrate {
-                        shard_idx: i,
-                        buckets: self.migration_buckets_per_batch(),
-                    });
-                }
+            let buckets = self.migration_buckets_per_batch();
+            for i in self.table.migrating_shards() {
+                self.send_aux(&pool, i % n_workers, Job::Migrate { shard_idx: i, buckets });
+            }
+        }
+        // Reshard interleaving, same shape: one bounded stripe-migration
+        // job per unfinished split pair, ahead of the batch on the
+        // pair's parent-shard worker.
+        if self.table.split_in_progress() {
+            let stripes = self
+                .cfg
+                .reshard
+                .map(|p| p.migration_stripes.max(1))
+                .unwrap_or(32);
+            for pair in self.table.split_pairs_pending() {
+                self.send_aux(&pool, pair % n_workers, Job::SplitMigrate { pair, stripes });
             }
         }
         let mut per_worker: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
@@ -430,7 +679,8 @@ impl Coordinator {
             if parts.is_empty() {
                 continue;
             }
-            self.pool.txs[w]
+            self.inflight.fetch_add(1, Ordering::Relaxed);
+            pool.txs[w]
                 .send(Job::Batch {
                     parts,
                     read_only,
@@ -449,6 +699,16 @@ impl Coordinator {
         }
     }
 
+    /// Send a migration-flavoured job, counting it toward the queue-depth
+    /// signal; a disconnected worker is ignored (shutdown races surface
+    /// on the batch path, which panics with context).
+    fn send_aux(&self, pool: &WorkerPool, w: usize, job: Job) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        if pool.txs[w].send(job).is_err() {
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
     /// Old-table buckets one [`Job::Migrate`] advances — one policy batch
     /// per submitted traffic batch.
     fn migration_buckets_per_batch(&self) -> usize {
@@ -463,13 +723,20 @@ impl Coordinator {
     /// audit it, shutdown paths drain residual work). Returns false when
     /// some shard's migration is pinned at
     /// [`GrowthPolicy::max_capacity`] and could not complete (see
-    /// [`ConcurrentMap::quiesce_migration`]).
+    /// [`crate::tables::ConcurrentMap::quiesce_migration`]).
     pub fn finish_migrations(&self) -> bool {
         let mut all_done = true;
-        for shard in &self.table.shards {
+        for shard in self.table.shards_snapshot() {
             all_done &= shard.quiesce_migration();
         }
         all_done
+    }
+
+    /// Drive an in-progress shard-count split to completion on the
+    /// calling thread. Returns false when the split cannot complete (a
+    /// child pinned at its capacity ceiling).
+    pub fn finish_resharding(&self) -> bool {
+        self.table.quiesce_split()
     }
 
     /// Wait for a submitted batch and merge its results back into
@@ -543,6 +810,7 @@ mod tests {
             n_workers: 2,
             max_batch: 64,
             growth: None,
+            reshard: None,
         })
     }
 
@@ -634,6 +902,7 @@ mod tests {
             n_workers: 2,
             max_batch: 128,
             growth: None,
+            reshard: None,
         })
         .with_offload(std::sync::Arc::clone(&mirror) as std::sync::Arc<dyn super::ReadOffload>);
         let ks = distinct_keys(300, 0xE5);
@@ -676,6 +945,7 @@ mod tests {
             n_workers: 2,
             max_batch: 64,
             growth: None,
+            reshard: None,
         })
         .with_offload(std::sync::Arc::new(Decline));
         let ks = distinct_keys(100, 0xE6);
@@ -782,6 +1052,7 @@ mod tests {
             n_workers: 2,
             max_batch: 64,
             growth: None,
+            reshard: None,
         })
         .with_offload(std::sync::Arc::clone(&counter) as std::sync::Arc<dyn super::ReadOffload>);
         let ks = distinct_keys(128, 0xE9);
@@ -834,6 +1105,7 @@ mod tests {
                 n_workers: 2,
                 max_batch: 64,
                 growth,
+                reshard: None,
             })
         };
         let ks = distinct_keys(2048, 0xEA); // 4× the provisioning
@@ -881,6 +1153,7 @@ mod tests {
                 migration_batch: 32,
                 ..Default::default()
             }),
+            reshard: None,
         });
         let ks = distinct_keys(3 * 1024, 0xEB);
         // Insert 3× the provisioning, then keep issuing read batches: the
@@ -895,12 +1168,12 @@ mod tests {
                     .all(|(i, &x)| x == OpResult::Value(Some(ks[i] ^ 3))),
                 "round {round}: wrong read during pooled migration"
             );
-            if !c.table.shards.iter().any(|s| s.migration_in_progress()) {
+            if c.table.migrating_shards().is_empty() {
                 break;
             }
         }
         assert!(
-            !c.table.shards.iter().any(|s| s.migration_in_progress()),
+            c.table.migrating_shards().is_empty(),
             "pool-driven migration never completed"
         );
         assert_eq!(c.table.len(), ks.len());
@@ -949,5 +1222,247 @@ mod tests {
         }
         let got = c.run_stream(ops);
         assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn reshard_trigger_predicates() {
+        let p = ReshardPolicy {
+            trigger_load_factor: 0.5,
+            trigger_queue_depth: 3,
+            ..Default::default()
+        };
+        assert!(!p.load_triggered(0, 0), "empty table must not trigger");
+        assert!(!p.load_triggered(1023, 2048));
+        assert!(p.load_triggered(1024, 2048));
+        assert!(!p.queue_triggered(2));
+        assert!(p.queue_triggered(3));
+        let off = ReshardPolicy {
+            trigger_queue_depth: 0,
+            ..Default::default()
+        };
+        assert!(!off.queue_triggered(usize::MAX), "depth 0 disables the trigger");
+    }
+
+    #[test]
+    fn reshard_policy_doubles_shards_under_load() {
+        // The load-factor trigger must double the shard count mid-stream
+        // (growing the pool with it), with zero rejects and every key
+        // readable afterwards.
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 4096,
+            n_shards: 2,
+            n_workers: 4, // clamped to 2 until the splits raise n_shards
+            max_batch: 128,
+            growth: None,
+            reshard: Some(ReshardPolicy {
+                trigger_load_factor: 0.5,
+                migration_stripes: 64,
+                max_shards: 8,
+                ..Default::default()
+            }),
+        });
+        assert_eq!(c.n_workers(), 2);
+        assert_eq!(c.table.epoch(), 0);
+        let ks = distinct_keys(4096, 0xEC);
+        let r = c.run_stream(ks.iter().map(|&k| Op::Upsert(k, k ^ 4)));
+        assert!(
+            r.iter().all(|&x| x == OpResult::Upserted(true)),
+            "reshard under load must not reject or duplicate"
+        );
+        assert!(c.table.epoch() >= 1, "load trigger never fired");
+        assert!(c.finish_resharding(), "split never completed");
+        assert!(c.table.n_shards() >= 4);
+        assert!(c.n_workers() >= 4, "pool never grew with the topology");
+        assert_eq!(c.table.len(), ks.len(), "keys lost or duplicated across the split");
+        let reads = c.run_stream(ks.iter().map(|&k| Op::Query(k)));
+        for (i, &x) in reads.iter().enumerate() {
+            assert_eq!(x, OpResult::Value(Some(ks[i] ^ 4)), "query {i} after reshard");
+        }
+        let (max, min) = c.table.balance();
+        assert!(min > 0 && max < ks.len(), "degenerate balance {min}..{max}");
+    }
+
+    #[test]
+    fn request_reshard_cutover_preserves_pipelined_order() {
+        // A split between two pipelined dependent batches: the cutover
+        // drain must let the second batch (partitioned under the new
+        // epoch, on remapped workers) observe everything the first wrote.
+        let c = coord();
+        let ks = distinct_keys(200, 0xED);
+        let writes = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (i as u64, Op::Upsert(k, i as u64 + 7)))
+                .collect(),
+        };
+        let p1 = c.submit(&writes);
+        assert!(c.request_reshard(), "manual reshard must start");
+        assert!(!c.request_reshard(), "second reshard while splitting must refuse");
+        assert_eq!(c.table.n_shards(), 8);
+        let reads = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (200 + i as u64, Op::Query(k)))
+                .collect(),
+        };
+        let p2 = c.submit(&reads);
+        let r1 = c.collect(p1);
+        let r2 = c.collect(p2);
+        assert!(r1.iter().all(|&(_, r)| r == OpResult::Upserted(true)));
+        for (i, &(seq, r)) in r2.iter().enumerate() {
+            assert_eq!(seq, 200 + i as u64, "arrival order lost across the epoch change");
+            assert_eq!(r, OpResult::Value(Some(i as u64 + 7)), "read {i} missed a write");
+        }
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.len(), 200);
+    }
+
+    #[test]
+    fn mixed_stream_with_mid_stream_reshards_matches_oracle() {
+        // The bulk-vs-scalar parity oracle extended across splits: mixed
+        // batches execute through the coordinator while the shard count
+        // doubles twice mid-stream.
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::P2Meta,
+            total_slots: 8 * 1024,
+            n_shards: 2,
+            n_workers: 4,
+            max_batch: 100,
+            growth: Some(crate::tables::GrowthPolicy::default()),
+            reshard: None, // splits requested manually at fixed points
+        });
+        let ks = distinct_keys(128, 0xEE);
+        let mut oracle = std::collections::HashMap::new();
+        let mut rng = crate::prng::Xoshiro256pp::new(0xEF);
+        for round in 0..20 {
+            if round == 5 {
+                assert!(c.request_reshard(), "first doubling must start");
+            }
+            if round == 12 {
+                // The first split may still be migrating; finish it so
+                // the second doubling (chained epochs) can start.
+                assert!(c.finish_resharding());
+                assert!(c.request_reshard(), "second doubling must start");
+            }
+            let mut ops = Vec::new();
+            let mut expected = Vec::new();
+            for _ in 0..100 {
+                let k = ks[rng.next_below(128) as usize];
+                match rng.next_below(4) {
+                    0 => {
+                        let v = rng.next_below(1000);
+                        ops.push(Op::Upsert(k, v));
+                        expected.push(OpResult::Upserted(oracle.insert(k, v).is_none()));
+                    }
+                    1 => {
+                        let v = rng.next_below(100);
+                        ops.push(Op::UpsertAdd(k, v));
+                        match oracle.get_mut(&k) {
+                            Some(x) => {
+                                *x += v;
+                                expected.push(OpResult::Upserted(false));
+                            }
+                            None => {
+                                oracle.insert(k, v);
+                                expected.push(OpResult::Upserted(true));
+                            }
+                        }
+                    }
+                    2 => {
+                        ops.push(Op::Query(k));
+                        expected.push(OpResult::Value(oracle.get(&k).copied()));
+                    }
+                    _ => {
+                        ops.push(Op::Erase(k));
+                        expected.push(OpResult::Erased(oracle.remove(&k).is_some()));
+                    }
+                }
+            }
+            let got = c.run_stream(ops);
+            assert_eq!(got, expected, "round {round} diverged from the oracle");
+        }
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.epoch(), 2);
+        assert_eq!(c.table.n_shards(), 8);
+        assert_eq!(c.table.len(), oracle.len());
+        for (&k, &v) in &oracle {
+            let r = c.run_stream([Op::Query(k)]);
+            assert_eq!(r[0], OpResult::Value(Some(v)));
+        }
+    }
+
+    #[test]
+    fn pending_jobs_metric_tracks_queued_work() {
+        // Deterministic queue-depth signal: an offload that blocks until
+        // released holds the (single) worker inside its job, so the
+        // inflight gauge must stay ≥ 1 until the job completes — exactly
+        // what ReshardPolicy::queue_triggered consumes.
+        struct GatedOffload {
+            gate: Mutex<Receiver<()>>,
+        }
+        impl super::ReadOffload for GatedOffload {
+            fn query_run(
+                &self,
+                _shard: &dyn crate::tables::ConcurrentMap,
+                _keys: &[u64],
+                _out: &mut Vec<Option<u64>>,
+            ) -> bool {
+                // Blocks until the test releases (or drops) the sender,
+                // then declines so the fallback answers.
+                let _ = self.gate.lock().unwrap_or_else(|e| e.into_inner()).recv();
+                false
+            }
+        }
+        let (release, gate) = mpsc::channel::<()>();
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 4096,
+            n_shards: 2,
+            n_workers: 1,
+            max_batch: 64,
+            growth: None,
+            reshard: None,
+        })
+        .with_offload(Arc::new(GatedOffload {
+            gate: Mutex::new(gate),
+        }));
+        let ks = distinct_keys(32, 0xF0);
+        c.execute(&Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (i as u64, Op::Upsert(k, k ^ 5)))
+                .collect(),
+        });
+        let reads = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (100 + i as u64, Op::Query(k)))
+                .collect(),
+        };
+        let pending = c.submit(&reads);
+        // The worker is parked inside the offload (or the job is still
+        // queued): the gauge cannot have fallen yet.
+        assert!(c.pending_jobs_per_worker() >= 1);
+        assert!(ReshardPolicy {
+            trigger_queue_depth: 1,
+            ..Default::default()
+        }
+        .queue_triggered(c.pending_jobs_per_worker()));
+        drop(release); // every recv() now fails fast → fallback path
+        let r = c.collect(pending);
+        for (i, &(_, res)) in r.iter().enumerate() {
+            assert_eq!(res, OpResult::Value(Some(ks[i] ^ 5)), "query {i}");
+        }
+        // The gauge drains shortly after the reply is delivered.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while c.pending_jobs_per_worker() > 0 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(c.pending_jobs_per_worker(), 0, "inflight gauge never drained");
     }
 }

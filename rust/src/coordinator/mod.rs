@@ -55,14 +55,32 @@
 //! [`OpResult::Rejected`]. [`Coordinator::finish_migrations`] drains
 //! residual migration work at quiesce points.
 //!
+//! ## Online resharding
+//!
+//! With [`CoordinatorConfig`]`::reshard` set, the topology itself scales:
+//! when aggregate load factor or per-worker queue depth crosses the
+//! [`ReshardPolicy`] trigger, `submit` doubles the shard count through a
+//! versioned [`Router`] epoch — every shard `i` splits into the pair
+//! `(i, i + N)` and exactly the keys whose extra routing-hash bit is set
+//! migrate to the child, interleaved with traffic under the same
+//! claim-a-range/locked-migration discipline the growth subsystem uses.
+//! The cutover drains in-flight batches (old-epoch batches address shard
+//! indices whose keys are about to re-route), then the worker pool grows
+//! toward the configured width and shard→worker affinity remaps with the
+//! epoch. `warpspeed reshard` / [`crate::bench::reshard`] exhibits it.
+//!
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches
-//!   the same shard (required for per-key linearization);
+//!   the same shard (required for per-key linearization); across an
+//!   epoch change a key either keeps its shard or moves to exactly that
+//!   shard's split child;
 //! * a batch partition preserves per-key operation order, run splitting
 //!   preserves sub-batch order, and shard-affine FIFO workers preserve
 //!   sub-batch order across pipelined batches, so per-key order survives
-//!   the bulk dispatch end to end;
-//! * shard sizes stay balanced within statistical bounds.
+//!   the bulk dispatch end to end (epoch changes drain the pipeline
+//!   before any key re-routes);
+//! * shard sizes stay balanced within statistical bounds, before and
+//!   after a split.
 
 pub mod batcher;
 pub mod exec;
@@ -71,6 +89,7 @@ pub mod router;
 pub use batcher::{Batch, Batcher};
 pub use exec::{
     default_workers, Coordinator, CoordinatorConfig, OpResult, PendingBatch, ReadOffload,
+    ReshardPolicy,
 };
 pub use router::{Router, ShardedTable};
 

@@ -1,32 +1,101 @@
-//! Key→shard routing and the sharded table facade.
+//! Key→shard routing, the sharded table facade, and online shard-count
+//! rescaling.
 //!
 //! Sharding serves the same purpose the paper's thread-block partitioning
 //! does on the GPU: independent regions of the key space proceed without
 //! cross-interference, and per-key operation order is preserved because a
 //! key always routes to the same shard (pure hash routing).
+//!
+//! ## Versioned routing and splits
+//!
+//! The [`Router`] is a power-of-two mask plus the *epoch* that produced
+//! it. [`ShardedTable::split_shards`] doubles the shard count online:
+//! every old shard `i` splits into the pair `(i, i + N)`, and the extra
+//! routing-hash bit decides which child each key belongs to — so exactly
+//! the keys whose bit is set move (statistically half per shard), with no
+//! global reshuffle. Shard indices are append-only across splits: an
+//! index obtained under any earlier epoch still resolves to the same
+//! table.
+//!
+//! ## The split-migration protocol
+//!
+//! The discipline is the one [`crate::tables::GrowableMap`] established
+//! for capacity growth, lifted from buckets to *routing stripes* (a
+//! stripe is a pure function of the key — high bits of the routing
+//! hash — so it stays valid even while a shard grows and renumbers its
+//! buckets mid-split). While a pair `(i, i + N)` migrates:
+//!
+//! * **Queries** are lock-free and read **old-then-new**: a moving key
+//!   lives in the parent until moved, and every move seeds the child
+//!   *before* erasing the parent copy, so the key stays continuously
+//!   visible.
+//! * **Upserts land in the new epoch's shard.** For a moving key, any
+//!   parent copy is moved over first (seed-then-erase under the key's
+//!   stripe lock), then the policy is applied against the child exactly
+//!   once — merge policies see the pre-split value. Stay-key upserts run
+//!   against the parent, also under the stripe lock (see below).
+//! * **Erases hit both** tables of the pair under the stripe lock until
+//!   the pair's migration is sealed.
+//! * **The migrator** claims a stripe range from the pair's cursor,
+//!   takes the range's locks, snapshots the parent's movers in those
+//!   stripes, and moves each with the same seed-then-erase order.
+//!
+//! Sealing a pair is a short stop-the-pair pass: all stripes are locked
+//! (which is why stay-key upserts take the stripe lock too — parent
+//! inserts could otherwise displace movers mid-scan on CuckooHT and the
+//! sealing sweep could miss one), the parent's own growth migration is
+//! quiesced, and a final sweep moves every remaining mover. When all
+//! pairs seal, the topology flips to the new epoch.
+//!
+//! Callers that partition work by shard index ([`ShardedTable`]'s
+//! `*_bulk_on` entry points) must partition under
+//! [`ShardedTable::current_router`] and drain in-flight index-addressed
+//! work when the epoch changes — the coordinator's submit path does
+//! exactly that ([`crate::coordinator::Coordinator::submit`]). The
+//! scalar [`ShardedTable::upsert`]/[`ShardedTable::query`]/
+//! [`ShardedTable::erase`] are phase-aware and always safe.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
+use crate::gpusim::LockArray;
 use crate::hash::seeded;
 use crate::tables::{
     build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, TableConfig, TableKind, UpsertOp,
     UpsertResult,
 };
 
-/// Pure, stateless key→shard map.
-#[derive(Clone, Copy, Debug)]
-pub struct Router {
-    n_shards: usize,
-}
-
 /// Routing hash seed — distinct from all table seeds so shard choice is
 /// independent of bucket choice.
 const ROUTE_SEED: u64 = 0x7A57_1CE5_0C0D_E001;
 
+/// Routing stripes per splitting shard pair — the split migration's
+/// claim/lock domain. Stripes come from high routing-hash bits, disjoint
+/// from the low bits that select shards, so every stripe holds a
+/// statistical slice of each shard's keys.
+const SPLIT_STRIPES: usize = 256;
+
+/// Routing stripe of a key: bits 40..48 of the routing hash (the shard
+/// mask uses the low bits; [`Router::doubled`] asserts they never meet).
+#[inline(always)]
+fn stripe_of(key: u64) -> usize {
+    ((seeded(key, ROUTE_SEED) >> 40) as usize) & (SPLIT_STRIPES - 1)
+}
+
+/// Pure, versioned key→shard map: a power-of-two mask plus the epoch
+/// that produced it. Epoch e+1 always has twice epoch e's shards, and
+/// for any key, `shard_of` under e+1 is either the same shard or its
+/// split child `shard + n_shards_e` (property-tested below).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Router {
+    n_shards: usize,
+    epoch: u32,
+}
+
 impl Router {
     pub fn new(n_shards: usize) -> Self {
         assert!(n_shards > 0 && n_shards.is_power_of_two());
-        Self { n_shards }
+        Self { n_shards, epoch: 0 }
     }
 
     #[inline(always)]
@@ -37,77 +106,722 @@ impl Router {
     pub fn n_shards(&self) -> usize {
         self.n_shards
     }
+
+    /// Epoch 0 is construction; each shard-count doubling advances it.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// The next epoch's router: twice the shards.
+    pub fn doubled(&self) -> Router {
+        // Keep the shard-select bits clear of the stripe bits (40..48).
+        assert!(self.n_shards < (1usize << 32), "shard count overflow");
+        Router {
+            n_shards: self.n_shards * 2,
+            epoch: self.epoch + 1,
+        }
+    }
+
+    /// The extra routing-hash bit consulted by the doubled router: true
+    /// when `key` moves to the split child (`shard_of + n_shards`),
+    /// false when it stays in its current shard.
+    #[inline(always)]
+    pub fn splits_up(&self, key: u64) -> bool {
+        seeded(key, ROUTE_SEED) & self.n_shards as u64 != 0
+    }
 }
 
-/// A table design sharded across `n` independent instances.
+/// One old shard's split-migration progress.
+struct PairState {
+    /// One lock per routing stripe (cache-line padded — the migrator
+    /// holds whole ranges while foreground ops take single stripes).
+    locks: LockArray,
+    /// Next unclaimed stripe.
+    cursor: AtomicUsize,
+    /// Stripes whose incremental migration completed; `usize::MAX` while
+    /// a sealing pass is elected, back to [`SPLIT_STRIPES`] if it fails.
+    done: AtomicUsize,
+    /// Failed sealing passes (child refused a seed / parent growth
+    /// pinned) — drivers observe progress instead of re-scanning blindly.
+    resets: AtomicUsize,
+    /// Pair fully migrated and sealed.
+    complete: AtomicBool,
+}
+
+impl PairState {
+    fn new() -> Self {
+        Self {
+            locks: LockArray::padded(SPLIT_STRIPES),
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            resets: AtomicUsize::new(0),
+            complete: AtomicBool::new(false),
+        }
+    }
+}
+
+/// One in-progress shard-count doubling (epoch e → e+1).
+struct Split {
+    from: Router,
+    to: Router,
+    /// All 2N shard handles: `[0..N)` the parents (which keep serving
+    /// the keys whose extra routing bit is clear), `[N..2N)` the freshly
+    /// allocated split children.
+    shards: Vec<Arc<dyn ConcurrentMap>>,
+    /// `pairs[i]` tracks the migration of parent `i` into child `i + N`.
+    pairs: Vec<PairState>,
+    complete_pairs: AtomicUsize,
+    /// Keys moved parent→child in this split (foreground + migrator).
+    moved: AtomicU64,
+}
+
+enum Topology {
+    /// Single routing epoch, no split in progress.
+    Normal {
+        router: Router,
+        shards: Vec<Arc<dyn ConcurrentMap>>,
+    },
+    /// Old and new routing epochs live simultaneously, migration running.
+    Splitting(Arc<Split>),
+}
+
+/// A table design sharded across independent instances, with online
+/// shard-count rescaling (see the module docs for the protocol).
 pub struct ShardedTable {
-    pub router: Router,
-    pub shards: Vec<Arc<dyn ConcurrentMap>>,
     pub kind: TableKind,
+    /// Growth policy each shard (and every future split child) is
+    /// wrapped with; `None` = fixed-capacity shards.
+    growth: Option<GrowthPolicy>,
+    topo: RwLock<Topology>,
+    /// Completed shard-count doublings over this table's lifetime.
+    splits: AtomicU64,
+    /// Keys moved parent→child across all splits.
+    moved: AtomicU64,
 }
 
 impl ShardedTable {
     pub fn new(kind: TableKind, total_slots: usize, n_shards: usize) -> Self {
-        let router = Router::new(n_shards);
-        let per_shard = total_slots.div_ceil(n_shards);
-        let shards = (0..n_shards)
-            .map(|_| build_table_with(kind, TableConfig::for_kind(kind, per_shard)))
-            .collect();
-        Self {
-            router,
-            shards,
-            kind,
-        }
+        Self::build(kind, total_slots, n_shards, None)
     }
 
     /// Like [`ShardedTable::new`] but every shard is wrapped in a
     /// [`GrowableMap`]: `total_slots` is the initial provisioning, and
     /// each shard grows 2× independently when its own load crosses the
     /// policy trigger (shards age at statistically equal rates, so in
-    /// practice they grow together).
+    /// practice they grow together). Split children inherit the policy.
     pub fn new_growable(
         kind: TableKind,
         total_slots: usize,
         n_shards: usize,
         policy: GrowthPolicy,
     ) -> Self {
+        Self::build(kind, total_slots, n_shards, Some(policy))
+    }
+
+    fn build(
+        kind: TableKind,
+        total_slots: usize,
+        n_shards: usize,
+        growth: Option<GrowthPolicy>,
+    ) -> Self {
         let router = Router::new(n_shards);
         let per_shard = total_slots.div_ceil(n_shards);
-        let shards = (0..n_shards)
-            .map(|_| {
-                Arc::new(GrowableMap::new(
-                    kind,
-                    TableConfig::for_kind(kind, per_shard),
-                    policy,
-                )) as Arc<dyn ConcurrentMap>
-            })
-            .collect();
-        Self {
-            router,
-            shards,
+        let this = Self {
             kind,
+            growth,
+            topo: RwLock::new(Topology::Normal {
+                router,
+                shards: Vec::new(),
+            }),
+            splits: AtomicU64::new(0),
+            moved: AtomicU64::new(0),
+        };
+        let shards = (0..n_shards).map(|_| this.build_shard(per_shard)).collect();
+        *this.write_topo() = Topology::Normal { router, shards };
+        this
+    }
+
+    fn build_shard(&self, slots: usize) -> Arc<dyn ConcurrentMap> {
+        let cfg = TableConfig::for_kind(self.kind, slots);
+        match self.growth {
+            Some(policy) => Arc::new(GrowableMap::new(self.kind, cfg, policy)),
+            None => build_table_with(self.kind, cfg),
         }
     }
 
-    #[inline]
-    pub fn shard(&self, key: u64) -> &Arc<dyn ConcurrentMap> {
-        &self.shards[self.router.shard_of(key)]
+    /// Ordinary operations hold the topology read guard for their whole
+    /// duration, so an epoch flip never overlaps an in-flight op. Lock
+    /// poisoning is ignored: the topology value is always consistent.
+    fn read_topo(&self) -> RwLockReadGuard<'_, Topology> {
+        self.topo.read().unwrap_or_else(|e| e.into_inner())
     }
 
+    fn write_topo(&self) -> RwLockWriteGuard<'_, Topology> {
+        self.topo.write().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The router traffic must partition under **right now**: the new
+    /// epoch's as soon as a split begins (upserts land in the new
+    /// epoch), the sole epoch's otherwise.
+    pub fn current_router(&self) -> Router {
+        match &*self.read_topo() {
+            Topology::Normal { router, .. } => *router,
+            Topology::Splitting(s) => s.to,
+        }
+    }
+
+    /// Current routing epoch (advances when a split *begins*).
+    pub fn epoch(&self) -> u32 {
+        self.current_router().epoch()
+    }
+
+    /// Current shard count (doubles when a split begins).
+    pub fn n_shards(&self) -> usize {
+        self.current_router().n_shards()
+    }
+
+    /// Handle to shard `idx`. Indices are append-only across splits, so
+    /// an index from any earlier epoch still resolves to the same table.
+    pub fn shard_handle(&self, idx: usize) -> Arc<dyn ConcurrentMap> {
+        match &*self.read_topo() {
+            Topology::Normal { shards, .. } => Arc::clone(&shards[idx]),
+            Topology::Splitting(s) => Arc::clone(&s.shards[idx]),
+        }
+    }
+
+    /// Snapshot of every shard handle under the current topology.
+    /// Allocates (clones the handle list) — prefer [`Self::with_shards`]
+    /// for aggregate metrics; use this when handles must outlive the
+    /// topology guard (e.g. to quiesce each shard).
+    pub fn shards_snapshot(&self) -> Vec<Arc<dyn ConcurrentMap>> {
+        self.with_shards(|sh| sh.to_vec())
+    }
+
+    /// Run `f` over the current topology's shard list under one read
+    /// guard, with no clone (the hot aggregate-metric path — `submit`
+    /// consults several of these per batch).
+    fn with_shards<R>(&self, f: impl FnOnce(&[Arc<dyn ConcurrentMap>]) -> R) -> R {
+        let g = self.read_topo();
+        match &*g {
+            Topology::Normal { shards, .. } => f(shards),
+            Topology::Splitting(s) => f(&s.shards),
+        }
+    }
+
+    /// Indices of shards with an in-progress capacity-growth migration
+    /// (the coordinator enqueues one bounded migration job per entry).
+    pub fn migrating_shards(&self) -> Vec<usize> {
+        self.with_shards(|sh| {
+            (0..sh.len())
+                .filter(|&i| sh[i].migration_in_progress())
+                .collect()
+        })
+    }
+
+    // ---------------------------------------------------------------
+    // Scalar operations (phase-aware, always safe).
+    // ---------------------------------------------------------------
+
     pub fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
-        self.shard(key).upsert(key, val, op)
+        let g = self.read_topo();
+        match &*g {
+            Topology::Normal { router, shards } => {
+                shards[router.shard_of(key)].upsert(key, val, op)
+            }
+            Topology::Splitting(s) => {
+                let pair = s.from.shard_of(key);
+                if s.from.splits_up(key) {
+                    self.upsert_moving(s, pair, key, val, op)
+                } else {
+                    Self::upsert_staying(s, pair, key, val, op)
+                }
+            }
+        }
     }
 
     pub fn query(&self, key: u64) -> Option<u64> {
-        self.shard(key).query(key)
+        let g = self.read_topo();
+        match &*g {
+            Topology::Normal { router, shards } => shards[router.shard_of(key)].query(key),
+            // Old-then-new: a moving key lives in the parent until moved,
+            // and moves seed the child before erasing the parent copy.
+            Topology::Splitting(s) => {
+                let pair = s.from.shard_of(key);
+                if s.from.splits_up(key) {
+                    let n = s.from.n_shards();
+                    s.shards[pair].query(key).or_else(|| s.shards[pair + n].query(key))
+                } else {
+                    s.shards[pair].query(key)
+                }
+            }
+        }
     }
 
     pub fn erase(&self, key: u64) -> bool {
-        self.shard(key).erase(key)
+        let g = self.read_topo();
+        match &*g {
+            Topology::Normal { router, shards } => shards[router.shard_of(key)].erase(key),
+            Topology::Splitting(s) => {
+                let pair = s.from.shard_of(key);
+                if s.from.splits_up(key) {
+                    Self::erase_moving(s, pair, key)
+                } else {
+                    // Stay-key erases never displace entries, so they run
+                    // without the stripe lock (like queries).
+                    s.shards[pair].erase(key)
+                }
+            }
+        }
     }
 
+    // ---------------------------------------------------------------
+    // Bulk operations addressed by shard index (the executor's path).
+    // The caller must have partitioned under `current_router()` and
+    // drained in-flight work across any epoch change.
+    // ---------------------------------------------------------------
+
+    pub fn upsert_bulk_on(
+        &self,
+        idx: usize,
+        pairs: &[(u64, u64)],
+        op: &UpsertOp,
+        out: &mut Vec<UpsertResult>,
+    ) {
+        let g = self.read_topo();
+        match &*g {
+            Topology::Normal { shards, .. } => shards[idx].upsert_bulk(pairs, op, out),
+            Topology::Splitting(s) => {
+                let n = s.from.n_shards();
+                out.reserve(pairs.len());
+                if idx >= n {
+                    for &(k, v) in pairs {
+                        out.push(self.upsert_moving(s, idx - n, k, v, op));
+                    }
+                } else {
+                    for &(k, v) in pairs {
+                        out.push(Self::upsert_staying(s, idx, k, v, op));
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn query_bulk_on(&self, idx: usize, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        let g = self.read_topo();
+        match &*g {
+            Topology::Normal { shards, .. } => shards[idx].query_bulk(keys, out),
+            Topology::Splitting(s) => {
+                let n = s.from.n_shards();
+                if idx >= n {
+                    // Old-then-new as two native bulk calls: misses
+                    // against the parent are re-asked of the child.
+                    let base = out.len();
+                    s.shards[idx - n].query_bulk(keys, out);
+                    let miss_idx: Vec<usize> =
+                        (0..keys.len()).filter(|&i| out[base + i].is_none()).collect();
+                    if miss_idx.is_empty() {
+                        return;
+                    }
+                    let miss_keys: Vec<u64> = miss_idx.iter().map(|&i| keys[i]).collect();
+                    let mut sub: Vec<Option<u64>> = Vec::with_capacity(miss_keys.len());
+                    s.shards[idx].query_bulk(&miss_keys, &mut sub);
+                    for (j, &i) in miss_idx.iter().enumerate() {
+                        out[base + i] = sub[j];
+                    }
+                } else {
+                    s.shards[idx].query_bulk(keys, out);
+                }
+            }
+        }
+    }
+
+    pub fn erase_bulk_on(&self, idx: usize, keys: &[u64], out: &mut Vec<bool>) {
+        let g = self.read_topo();
+        match &*g {
+            Topology::Normal { shards, .. } => shards[idx].erase_bulk(keys, out),
+            Topology::Splitting(s) => {
+                let n = s.from.n_shards();
+                out.reserve(keys.len());
+                if idx >= n {
+                    for &k in keys {
+                        out.push(Self::erase_moving(s, idx - n, k));
+                    }
+                } else {
+                    s.shards[idx].erase_bulk(keys, out);
+                }
+            }
+        }
+    }
+
+    /// Shard handle a read-offload hook may be consulted with for shard
+    /// `idx` — `Some` only when the shard can be read directly (no split
+    /// protocol needed for the keys routed to it): any shard in the
+    /// normal phase, or a split *parent* (its routed keys are stay keys).
+    /// Split children return `None`; their reads need old-then-new.
+    pub fn direct_read_shard(&self, idx: usize) -> Option<Arc<dyn ConcurrentMap>> {
+        match &*self.read_topo() {
+            Topology::Normal { shards, .. } => Some(Arc::clone(&shards[idx])),
+            Topology::Splitting(s) if idx < s.from.n_shards() => Some(Arc::clone(&s.shards[idx])),
+            Topology::Splitting(_) => None,
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Split protocol internals.
+    // ---------------------------------------------------------------
+
+    /// The one move primitive every migration path shares: seed the
+    /// child with `(key, val)` (insert-if-unique, so a fresher child
+    /// value wins), and only then erase the parent copy — the order
+    /// that keeps the key continuously visible to lock-free
+    /// old-then-new readers. Returns false when the child rejected the
+    /// seed (the parent copy stays put); counts the move on success.
+    /// Caller holds the key's stripe lock (or the whole range).
+    fn seed_then_erase(&self, s: &Split, pair: usize, key: u64, val: u64) -> bool {
+        let n = s.from.n_shards();
+        if s.shards[pair + n].upsert(key, val, &UpsertOp::InsertIfUnique) == UpsertResult::Full {
+            return false;
+        }
+        // Count the move only when the parent erase actually hit: the
+        // migrator's lock-free parent snapshot can yield one key twice
+        // (a mid-growth GrowableMap holds a mover in old AND successor
+        // transiently; a CuckooHT stay-insert can displace a mover
+        // between buckets mid-scan), and the duplicate's seed is an
+        // idempotent no-op that must not inflate `moved_keys`.
+        if s.shards[pair].erase(key) {
+            s.moved.fetch_add(1, Ordering::Relaxed);
+            self.moved.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Move `key`'s parent copy (if any) to the child, under the key's
+    /// already-held stripe lock. Returns false when the child rejected
+    /// the seed — the caller must bail WITHOUT applying its operation,
+    /// or merge policies would lose the pre-split value.
+    fn move_split_copy(&self, s: &Split, pair: usize, key: u64) -> bool {
+        match s.shards[pair].query(key) {
+            Some(ov) => self.seed_then_erase(s, pair, key, ov),
+            None => true,
+        }
+    }
+
+    fn upsert_moving(
+        &self,
+        s: &Split,
+        pair: usize,
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+    ) -> UpsertResult {
+        let st = stripe_of(key);
+        s.pairs[pair].locks.lock(st);
+        let r = if self.move_split_copy(s, pair, key) {
+            s.shards[pair + s.from.n_shards()].upsert(key, val, op)
+        } else {
+            // Blocked seed: report Full (growable children grow inside
+            // their own upsert, so this means pinned-at-ceiling).
+            UpsertResult::Full
+        };
+        s.pairs[pair].locks.unlock(st);
+        r
+    }
+
+    /// Stay-key upserts take the stripe lock too: the pair's sealing
+    /// sweep holds every stripe to get a displacement-free parent scan
+    /// (CuckooHT inserts can relocate movers between buckets), so parent
+    /// inserts must be excluded while it runs.
+    fn upsert_staying(s: &Split, pair: usize, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        let st = stripe_of(key);
+        s.pairs[pair].locks.lock(st);
+        let r = s.shards[pair].upsert(key, val, op);
+        s.pairs[pair].locks.unlock(st);
+        r
+    }
+
+    fn erase_moving(s: &Split, pair: usize, key: u64) -> bool {
+        let st = stripe_of(key);
+        s.pairs[pair].locks.lock(st);
+        let hit_old = s.shards[pair].erase(key);
+        let hit_new = s.shards[pair + s.from.n_shards()].erase(key);
+        s.pairs[pair].locks.unlock(st);
+        hit_old || hit_new
+    }
+
+    /// Begin a shard-count doubling. Children are built outside the
+    /// topology write lock (allocation scales with capacity and must not
+    /// stall every op). Returns false when a split is already running or
+    /// another thread won the install race.
+    pub fn split_shards(&self) -> bool {
+        let (from, caps) = {
+            let g = self.read_topo();
+            match &*g {
+                Topology::Normal { router, shards } => (
+                    *router,
+                    shards.iter().map(|s| s.capacity()).collect::<Vec<_>>(),
+                ),
+                Topology::Splitting(_) => return false,
+            }
+        };
+        // Each child is provisioned at its parent's current capacity, so
+        // the doubling halves per-shard load factor (the point of the
+        // exercise) — at the price of the transient footprint `bench
+        // space` reports.
+        let children: Vec<Arc<dyn ConcurrentMap>> =
+            caps.iter().map(|&c| self.build_shard(c)).collect();
+        let mut g = self.write_topo();
+        let shards = match &*g {
+            Topology::Normal { router, shards } if *router == from => shards.clone(),
+            _ => return false, // lost the race to another splitter
+        };
+        let n = from.n_shards();
+        let mut all = shards;
+        all.extend(children);
+        *g = Topology::Splitting(Arc::new(Split {
+            from,
+            to: from.doubled(),
+            shards: all,
+            pairs: (0..n).map(|_| PairState::new()).collect(),
+            complete_pairs: AtomicUsize::new(0),
+            moved: AtomicU64::new(0),
+        }));
+        true
+    }
+
+    /// True while a shard-count doubling is migrating keys.
+    pub fn split_in_progress(&self) -> bool {
+        matches!(&*self.read_topo(), Topology::Splitting(_))
+    }
+
+    /// Pair indices (old-epoch shard indices) whose split migration is
+    /// still running; empty when no split is in progress.
+    pub fn split_pairs_pending(&self) -> Vec<usize> {
+        match &*self.read_topo() {
+            Topology::Normal { .. } => Vec::new(),
+            Topology::Splitting(s) => (0..s.pairs.len())
+                .filter(|&i| !s.pairs[i].complete.load(Ordering::Acquire))
+                .collect(),
+        }
+    }
+
+    /// Completed shard-count doublings.
+    pub fn split_events(&self) -> u64 {
+        self.splits.load(Ordering::Relaxed)
+    }
+
+    /// Keys moved parent→child across all splits so far.
+    pub fn moved_keys(&self) -> u64 {
+        self.moved.load(Ordering::Relaxed)
+    }
+
+    /// Advance pair `pair`'s split migration by up to `max_stripes`
+    /// routing stripes, returning keys moved. Safe from any thread,
+    /// concurrently with traffic — the coordinator's workers drive this
+    /// between batches. No-op when no split is running or the pair is
+    /// already sealed.
+    pub fn drive_split(&self, pair: usize, max_stripes: usize) -> usize {
+        let s = {
+            let g = self.read_topo();
+            match &*g {
+                Topology::Splitting(s) => Arc::clone(s),
+                Topology::Normal { .. } => return 0,
+            }
+        };
+        if pair >= s.pairs.len() || s.pairs[pair].complete.load(Ordering::Acquire) {
+            return 0;
+        }
+        let p = &s.pairs[pair];
+        let mut moved = 0usize;
+        let want = max_stripes.clamp(1, SPLIT_STRIPES);
+        let start = p.cursor.fetch_add(want, Ordering::Relaxed);
+        if start < SPLIT_STRIPES {
+            let end = (start + want).min(SPLIT_STRIPES);
+            moved += self.migrate_stripes(&s, pair, start, end);
+            p.done.fetch_add(end - start, Ordering::AcqRel);
+        }
+        // Incremental scan exhausted and every claimant finished: run
+        // the sealing sweep (elected by CAS, below).
+        if p.done.load(Ordering::Acquire) == SPLIT_STRIPES {
+            moved += self.try_seal_pair(&s, pair);
+        }
+        moved
+    }
+
+    /// Move the parent's movers whose stripe is in `[start, end)` to the
+    /// child, under the range's stripe locks.
+    ///
+    /// Cost note: each claim snapshots via a full `for_each_entry` scan
+    /// of the parent filtered to the claimed stripes, so a "bounded"
+    /// claim bounds *keys moved and lock-hold footprint*, not scan work
+    /// — one pair costs `SPLIT_STRIPES / migration_stripes` parent
+    /// scans plus the sealing sweep (same recorded caveat as the
+    /// default growth migration iterator). Caching movers across claims
+    /// would be wrong: a cached entry whose key foreground traffic
+    /// erased in the meantime would be resurrected by the move. A
+    /// per-design native stripe iterator is the recorded follow-up.
+    fn migrate_stripes(&self, s: &Arc<Split>, pair: usize, start: usize, end: usize) -> usize {
+        let p = &s.pairs[pair];
+        for st in start..end {
+            p.locks.lock(st);
+        }
+        let mut entries: Vec<(u64, u64)> = Vec::new();
+        s.shards[pair].for_each_entry(&mut |k, v| {
+            if s.from.splits_up(k) && (start..end).contains(&stripe_of(k)) {
+                entries.push((k, v));
+            }
+        });
+        let mut moved = 0usize;
+        for &(k, v) in &entries {
+            // A Full seed leaves the entry in the parent; the sealing
+            // sweep retries it.
+            if self.seed_then_erase(s, pair, k, v) {
+                moved += 1;
+            }
+        }
+        for st in (start..end).rev() {
+            p.locks.unlock(st);
+        }
+        moved
+    }
+
+    /// Sealing sweep for one pair: elected by CAS, locks every stripe
+    /// (excluding all foreground parent mutators), quiesces the parent's
+    /// own growth migration so its entries stop relocating, then moves
+    /// every remaining mover in one displacement-free pass. On success
+    /// the pair is complete; when all pairs complete the topology flips
+    /// to the new epoch. On failure (child refused a seed, or the
+    /// parent's migration could not quiesce) the scan re-opens for a
+    /// later attempt.
+    fn try_seal_pair(&self, s: &Arc<Split>, pair: usize) -> usize {
+        let p = &s.pairs[pair];
+        if p.done
+            .compare_exchange(SPLIT_STRIPES, usize::MAX, Ordering::AcqRel, Ordering::Relaxed)
+            .is_err()
+        {
+            return 0;
+        }
+        for st in 0..SPLIT_STRIPES {
+            p.locks.lock(st);
+        }
+        // With every stripe held no parent upsert can run, so no new
+        // growth cycle can start; drain any in-progress one so the scan
+        // below cannot race an internal old→successor relocation.
+        let quiesced = s.shards[pair].quiesce_migration();
+        let mut movers: Vec<(u64, u64)> = Vec::new();
+        s.shards[pair].for_each_entry(&mut |k, v| {
+            if s.from.splits_up(k) {
+                movers.push((k, v));
+            }
+        });
+        let mut moved = 0usize;
+        let mut blocked = false;
+        for &(k, v) in &movers {
+            if self.seed_then_erase(s, pair, k, v) {
+                moved += 1;
+            } else {
+                blocked = true;
+            }
+        }
+        let sealed = quiesced && !blocked;
+        if sealed {
+            p.complete.store(true, Ordering::Release);
+        }
+        for st in (0..SPLIT_STRIPES).rev() {
+            p.locks.unlock(st);
+        }
+        if !sealed {
+            // Re-open: a later drive_split call re-elects the sweep.
+            p.resets.fetch_add(1, Ordering::AcqRel);
+            p.done.store(SPLIT_STRIPES, Ordering::Release);
+            return moved;
+        }
+        if s.pairs.len() == s.complete_pairs.fetch_add(1, Ordering::AcqRel) + 1 {
+            let mut g = self.write_topo();
+            if matches!(&*g, Topology::Splitting(cur) if Arc::ptr_eq(cur, s)) {
+                *g = Topology::Normal {
+                    router: s.to,
+                    shards: s.shards.clone(),
+                };
+                self.splits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        moved
+    }
+
+    /// Drive an in-progress split to completion from the calling thread
+    /// (quiesce helper for benches/tests/shutdown). Returns true when no
+    /// split remains; false when it cannot complete (a child pinned at
+    /// its capacity ceiling) — operations stay correct either way,
+    /// merely split across the pair.
+    pub fn quiesce_split(&self) -> bool {
+        let complete_count = |s: &Split| {
+            s.pairs
+                .iter()
+                .filter(|p| p.complete.load(Ordering::Acquire))
+                .count()
+        };
+        let mut stalls = 0;
+        loop {
+            let s = {
+                let g = self.read_topo();
+                match &*g {
+                    Topology::Splitting(s) => Arc::clone(s),
+                    Topology::Normal { .. } => return true,
+                }
+            };
+            let before = complete_count(&s);
+            let mut moved = 0usize;
+            let mut foreign_progress = false;
+            for (pair, p) in s.pairs.iter().enumerate() {
+                if p.complete.load(Ordering::Acquire) {
+                    continue;
+                }
+                if p.done.load(Ordering::Acquire) == usize::MAX {
+                    // Another thread holds this pair's sealing election
+                    // (a coordinator worker, typically). Its sweep IS
+                    // progress we cannot observe as moves, so wait for
+                    // it to release the stripes (stripe 0 goes last)
+                    // instead of counting it as a stall and reporting a
+                    // spurious failure.
+                    p.locks.lock(0);
+                    p.locks.unlock(0);
+                    foreign_progress = true;
+                    continue;
+                }
+                let drove = self.drive_split(pair, usize::MAX);
+                moved += drove;
+                if drove == 0
+                    && !p.complete.load(Ordering::Acquire)
+                    && p.done.load(Ordering::Acquire) < SPLIT_STRIPES
+                {
+                    // Every stripe is claimed but some claimant (a
+                    // worker's bounded SplitMigrate job mid-scan) has
+                    // not finished counting its range — in-flight
+                    // progress we cannot observe as moves either.
+                    foreign_progress = true;
+                }
+            }
+            // A stall = a full pass with no keys moved, no pair sealed,
+            // and no foreign claim/sweep in flight — the
+            // pinned-at-ceiling shape this bound exists for.
+            if moved > 0 || foreign_progress || complete_count(&s) > before {
+                stalls = 0;
+            } else {
+                stalls += 1;
+                if stalls > 64 {
+                    return false;
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Aggregate metrics.
+    // ---------------------------------------------------------------
+
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.len()).sum()
+        self.with_shards(|sh| sh.iter().map(|s| s.len()).sum())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -115,16 +829,33 @@ impl ShardedTable {
     }
 
     pub fn capacity(&self) -> usize {
-        self.shards.iter().map(|s| s.capacity()).sum()
+        self.with_shards(|sh| sh.iter().map(|s| s.capacity()).sum())
+    }
+
+    /// Aggregate `(len, capacity)` under ONE topology guard — the
+    /// reshard load-factor trigger's input, sampled once per submit.
+    pub fn load_stats(&self) -> (usize, usize) {
+        self.with_shards(|sh| {
+            sh.iter()
+                .fold((0, 0), |(l, c), s| (l + s.len(), c + s.capacity()))
+        })
+    }
+
+    /// Total simulated device bytes across every resident shard — during
+    /// a split this includes the children, i.e. the transient footprint.
+    pub fn device_bytes(&self) -> usize {
+        self.with_shards(|sh| sh.iter().map(|s| s.device_bytes()).sum())
     }
 
     /// Largest/smallest shard fill ratio (balance metric).
     pub fn balance(&self) -> (usize, usize) {
-        let sizes: Vec<usize> = self.shards.iter().map(|s| s.len()).collect();
-        (
-            sizes.iter().copied().max().unwrap_or(0),
-            sizes.iter().copied().min().unwrap_or(0),
-        )
+        self.with_shards(|sh| {
+            let sizes: Vec<usize> = sh.iter().map(|s| s.len()).collect();
+            (
+                sizes.iter().copied().max().unwrap_or(0),
+                sizes.iter().copied().min().unwrap_or(0),
+            )
+        })
     }
 }
 
@@ -150,6 +881,34 @@ mod tests {
     }
 
     #[test]
+    fn doubled_routing_is_same_shard_or_split_child_property() {
+        // The epoch-determinism property the split protocol rests on:
+        // under epoch e+1 every key either stays in its epoch-e shard or
+        // moves to exactly that shard's split child, as predicted by
+        // `splits_up` — across chained doublings.
+        let mut r = Router::new(2);
+        for _ in 0..4 {
+            let next = r.doubled();
+            assert_eq!(next.n_shards(), r.n_shards() * 2);
+            assert_eq!(next.epoch(), r.epoch() + 1);
+            check(
+                &Config::default(),
+                |g: &mut Gen| g.user_key(),
+                |&k| {
+                    let old = r.shard_of(k);
+                    let new = next.shard_of(k);
+                    let expect = if r.splits_up(k) { old + r.n_shards() } else { old };
+                    ensure(
+                        new == expect,
+                        "epoch e+1 shard must be the epoch-e shard or its split child",
+                    )
+                },
+            );
+            r = next;
+        }
+    }
+
+    #[test]
     fn shards_balance_statistically() {
         let st = ShardedTable::new(TableKind::Double, 64 * 1024, 8);
         for k in distinct_keys(20_000, 0xBA1) {
@@ -158,6 +917,23 @@ mod tests {
         let (max, min) = st.balance();
         // 20k keys over 8 shards ≈ 2500 ± ~5σ.
         assert!(min > 2100 && max < 2900, "imbalance: {min}..{max}");
+    }
+
+    #[test]
+    fn balance_stays_in_band_after_a_split() {
+        let st = ShardedTable::new(TableKind::Double, 64 * 1024, 8);
+        for k in distinct_keys(20_000, 0xBA3) {
+            st.upsert(k, 1, &UpsertOp::InsertIfUnique);
+        }
+        assert!(st.split_shards());
+        assert!(st.quiesce_split(), "split never completed");
+        assert_eq!(st.n_shards(), 16);
+        assert_eq!(st.epoch(), 1);
+        assert_eq!(st.len(), 20_000, "keys lost or duplicated by the split");
+        let (max, min) = st.balance();
+        // 20k keys over 16 shards ≈ 1250; binomial σ ≈ 34, allow ~7σ.
+        assert!(min > 1000 && max < 1500, "post-split imbalance: {min}..{max}");
+        assert!(st.moved_keys() > 0 && st.split_events() == 1);
     }
 
     #[test]
@@ -177,6 +953,104 @@ mod tests {
         for &k in ks.iter().step_by(3) {
             assert!(st.erase(k));
             assert_eq!(st.query(k), None);
+        }
+    }
+
+    #[test]
+    fn mid_split_semantics_old_then_new() {
+        // Partial split: both routing epochs answer correctly while the
+        // migration cursor is mid-table.
+        let st = ShardedTable::new(TableKind::Double, 16 * 1024, 4);
+        let ks = distinct_keys(4000, 0xBA4);
+        for &k in &ks {
+            st.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        }
+        assert!(st.split_shards());
+        assert!(st.split_in_progress());
+        assert_eq!(st.n_shards(), 8, "shard count doubles at split START");
+        // Advance only a few stripes of one pair: most movers unmoved.
+        st.drive_split(0, 8);
+        for &k in &ks {
+            assert_eq!(st.query(k), Some(k ^ 1), "key invisible mid-split");
+        }
+        // Erases hit both sides; upserts land in the new epoch; merges
+        // see the pre-split value.
+        assert!(st.erase(ks[0]));
+        assert_eq!(st.query(ks[0]), None);
+        assert!(!st.erase(ks[0]), "double erase mid-split");
+        assert_eq!(st.upsert(ks[1], 77, &UpsertOp::Overwrite), UpsertResult::Updated);
+        assert_eq!(st.query(ks[1]), Some(77));
+        assert_eq!(st.upsert(ks[2], 5, &UpsertOp::AddAssign), UpsertResult::Updated);
+        assert_eq!(st.query(ks[2]), Some((ks[2] ^ 1).wrapping_add(5)));
+        assert!(st.quiesce_split());
+        assert_eq!(st.query(ks[0]), None);
+        assert_eq!(st.query(ks[1]), Some(77));
+        assert_eq!(st.len(), ks.len() - 1);
+    }
+
+    #[test]
+    fn chained_splits_reach_four_times_the_shards() {
+        let st = ShardedTable::new_growable(
+            TableKind::Chaining,
+            4096,
+            2,
+            GrowthPolicy::default(),
+        );
+        let ks = distinct_keys(3000, 0xBA5);
+        for &k in &ks {
+            assert_eq!(st.upsert(k, k ^ 9, &UpsertOp::InsertIfUnique), UpsertResult::Inserted);
+        }
+        for round in 0..2 {
+            assert!(st.split_shards(), "round {round}");
+            assert!(!st.split_shards(), "second splitter must lose");
+            assert!(st.quiesce_split());
+        }
+        assert_eq!(st.n_shards(), 8);
+        assert_eq!(st.epoch(), 2);
+        assert_eq!(st.split_events(), 2);
+        assert_eq!(st.len(), ks.len());
+        for &k in &ks {
+            assert_eq!(st.query(k), Some(k ^ 9), "key lost across chained splits");
+        }
+    }
+
+    #[test]
+    fn concurrent_traffic_during_split_loses_nothing() {
+        // Foreground churn (inserts of fresh keys + queries of moved
+        // ones) interleaved with migrator claims on another thread.
+        let st = std::sync::Arc::new(ShardedTable::new(TableKind::P2, 32 * 1024, 4));
+        let ks = distinct_keys(12_000, 0xBA6);
+        let (seeded_half, live_half) = ks.split_at(6000);
+        for &k in seeded_half {
+            st.upsert(k, k ^ 2, &UpsertOp::InsertIfUnique);
+        }
+        assert!(st.split_shards());
+        std::thread::scope(|scope| {
+            let t = std::sync::Arc::clone(&st);
+            scope.spawn(move || {
+                while t.split_in_progress() {
+                    for pair in t.split_pairs_pending() {
+                        t.drive_split(pair, 16);
+                    }
+                    std::thread::yield_now();
+                }
+            });
+            for (i, &k) in live_half.iter().enumerate() {
+                assert_eq!(
+                    st.upsert(k, k ^ 2, &UpsertOp::InsertIfUnique),
+                    UpsertResult::Inserted,
+                    "live insert {i} during split"
+                );
+                if i % 3 == 0 {
+                    let probe = seeded_half[i % seeded_half.len()];
+                    assert_eq!(st.query(probe), Some(probe ^ 2), "seeded key lost mid-split");
+                }
+            }
+        });
+        assert!(st.quiesce_split());
+        assert_eq!(st.len(), ks.len());
+        for &k in &ks {
+            assert_eq!(st.query(k), Some(k ^ 2));
         }
     }
 }

@@ -6,13 +6,27 @@
 //! `fetch_and`. Lock words live in their own probe-line namespace so that
 //! lock traffic shows up in probe counts just like it does on the GPU
 //! (the lock array is in global memory there too).
+//!
+//! Two layouts exist. [`LockArray::new`] packs words densely — the GPU
+//! layout, where adjacent lock words share cache lines by design.
+//! [`LockArray::padded`] strides each lock word onto its own cache line
+//! for host-side arrays with a standing writer (the growth/reshard
+//! migrators hammer their claimed range's words while foreground ops
+//! spin on neighbours; dense packing makes those false-share one line).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::probes;
 
+/// 8 words = 64 bytes: one lock word per host cache line in the padded
+/// layout.
+const PAD_STRIDE: usize = 8;
+
 pub struct LockArray {
     words: Box<[AtomicU64]>,
+    /// Distance in words between consecutive lock words (1 = dense GPU
+    /// packing, [`PAD_STRIDE`] = one word per host cache line).
+    stride: usize,
     mem_id: u64,
 }
 
@@ -20,24 +34,50 @@ static NEXT_LOCK_MEM_ID: AtomicU64 = AtomicU64::new(1);
 
 impl LockArray {
     pub fn new(n_buckets: usize) -> Self {
-        let n_words = n_buckets.div_ceil(64);
-        let mut v = Vec::with_capacity(n_words);
-        v.resize_with(n_words, || AtomicU64::new(0));
+        Self::with_stride(n_buckets, 1)
+    }
+
+    /// Cache-line-padded layout: one lock word (64 locks) per 64-byte
+    /// line, so a thread spinning or sweeping one word never invalidates
+    /// a neighbouring word's line. Used by the migration/split lock
+    /// arrays where a migrator holds long word-local bursts concurrently
+    /// with foreground ops on adjacent words.
+    pub fn padded(n_buckets: usize) -> Self {
+        Self::with_stride(n_buckets, PAD_STRIDE)
+    }
+
+    fn with_stride(n_buckets: usize, stride: usize) -> Self {
+        let n_words = n_buckets.div_ceil(64).max(1);
+        // Strided layout allocates the gap words too; they are never
+        // touched and exist purely to keep live words one per line.
+        let alloc = (n_words - 1) * stride + 1;
+        let mut v = Vec::with_capacity(alloc);
+        v.resize_with(alloc, || AtomicU64::new(0));
         Self {
             words: v.into_boxed_slice(),
+            stride,
             mem_id: NEXT_LOCK_MEM_ID.fetch_add(1, Ordering::Relaxed),
         }
     }
 
-    /// Bytes of simulated device memory held by the lock array.
+    /// Bytes of simulated device memory held by the lock array
+    /// (padding included — the lines are really resident).
     pub fn bytes(&self) -> usize {
         self.words.len() * 8
+    }
+
+    /// Word index holding `bucket`'s lock bit under this layout.
+    #[inline(always)]
+    fn word_of(&self, bucket: usize) -> usize {
+        (bucket / 64) * self.stride
     }
 
     #[inline(always)]
     fn touch(&self, word: usize) {
         if probes::enabled() {
-            // 16 lock words (1024 buckets) per 128-byte line.
+            // 16 lock words (1024 buckets) per 128-byte line in the dense
+            // layout; `word` is already stride-adjusted, so the padded
+            // layout naturally reports more distinct lines.
             probes::touch((0x4000_0000_0000 | self.mem_id) << 16 | (word / 16) as u64);
         }
     }
@@ -45,7 +85,7 @@ impl LockArray {
     /// Spin until the bucket lock is acquired (GPU `atomicOr` loop).
     #[inline]
     pub fn lock(&self, bucket: usize) {
-        let word = bucket / 64;
+        let word = self.word_of(bucket);
         let bit = 1u64 << (bucket % 64);
         self.touch(word);
         loop {
@@ -65,7 +105,7 @@ impl LockArray {
     /// Try to acquire without spinning. Returns true on success.
     #[inline]
     pub fn try_lock(&self, bucket: usize) -> bool {
-        let word = bucket / 64;
+        let word = self.word_of(bucket);
         let bit = 1u64 << (bucket % 64);
         self.touch(word);
         probes::count_atomic();
@@ -79,7 +119,7 @@ impl LockArray {
     /// Release the bucket lock.
     #[inline]
     pub fn unlock(&self, bucket: usize) {
-        let word = bucket / 64;
+        let word = self.word_of(bucket);
         let bit = 1u64 << (bucket % 64);
         self.touch(word);
         probes::count_atomic();
@@ -135,7 +175,7 @@ impl LockArray {
 
     /// Is the bucket currently locked? (introspection for tests)
     pub fn is_locked(&self, bucket: usize) -> bool {
-        let word = bucket / 64;
+        let word = self.word_of(bucket);
         let bit = 1u64 << (bucket % 64);
         self.words[word].load(Ordering::Acquire) & bit != 0
     }
@@ -199,6 +239,48 @@ mod tests {
         assert!(l.is_locked(5) && l.is_locked(9));
         l.unlock_three([5, 5, 9]);
         assert!(!l.is_locked(5) && !l.is_locked(9));
+    }
+
+    #[test]
+    fn padded_layout_same_semantics_one_word_per_line() {
+        let l = LockArray::padded(256); // 4 lock words
+        // 4 live words strided 8 apart: (4-1)*8+1 = 25 words resident.
+        assert_eq!(l.bytes(), 25 * 8);
+        for b in [0usize, 63, 64, 127, 128, 255] {
+            l.lock(b);
+            assert!(l.is_locked(b));
+        }
+        assert!(!l.is_locked(1));
+        assert!(!l.try_lock(63));
+        for b in [0usize, 63, 64, 127, 128, 255] {
+            l.unlock(b);
+            assert!(!l.is_locked(b));
+        }
+        // Dense layout unchanged: 4 words, no padding.
+        assert_eq!(LockArray::new(256).bytes(), 4 * 8);
+    }
+
+    #[test]
+    fn padded_mutual_exclusion_across_word_boundaries() {
+        let l = Arc::new(LockArray::padded(128));
+        let mut hs = vec![];
+        for t in 0..4 {
+            let l = Arc::clone(&l);
+            hs.push(thread::spawn(move || {
+                for i in 0..500 {
+                    let b = (t * 37 + i) % 128;
+                    l.lock(b);
+                    assert!(l.is_locked(b));
+                    l.unlock(b);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        for b in 0..128 {
+            assert!(!l.is_locked(b), "bucket {b} left locked");
+        }
     }
 
     #[test]

@@ -59,6 +59,19 @@
 //! coordinator drives shard migrations on its persistent workers and
 //! turns `Full` into grow-and-retry ([`coordinator::CoordinatorConfig`]
 //! `::growth`); the `grow` exhibit ([`bench::grow`]) measures it.
+//!
+//! # Online resharding
+//!
+//! Growth scales each shard's capacity; resharding scales the topology:
+//! the coordinator's [`coordinator::Router`] is versioned by epoch, and
+//! [`coordinator::ShardedTable::split_shards`] doubles the shard count
+//! online — each shard splits into a pair, the extra routing-hash bit
+//! re-routes exactly the keys that move, and migration interleaves with
+//! traffic under the same locked claim-a-range discipline growth uses
+//! (lifted to routing stripes). [`coordinator::ReshardPolicy`] triggers
+//! it from load factor or queue depth; the `reshard` exhibit
+//! ([`bench::reshard`]) drives a doubling under live mixed traffic
+//! against a sequential oracle.
 
 pub mod gpusim;
 pub mod hash;

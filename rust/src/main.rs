@@ -3,10 +3,10 @@
 //!
 //! ```text
 //! warpspeed info
-//! warpspeed probes|bulk|grow|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
+//! warpspeed probes|bulk|grow|reshard|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
 //!           [--slots N] [--iters N] [--seed S]
 //! warpspeed all          # every exhibit in sequence
-//! warpspeed serve [--table p2m] [--slots N] [--shards N] [--grow]
+//! warpspeed serve [--table p2m] [--slots N] [--shards N] [--grow] [--reshard]
 //! ```
 //!
 //! The serve protocol (stdin/stdout, one op per line):
@@ -37,11 +37,12 @@ fn main() {
             println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
             println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
             println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
-            println!("subcommands: probes bulk grow load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
+            println!("subcommands: probes bulk grow reshard load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
         }
         "probes" => print!("{}", bench::probes::run(&env)),
         "bulk" => print!("{}", bench::bulk::run(&env)),
         "grow" => print!("{}", bench::grow::run(&env)),
+        "reshard" => print!("{}", bench::reshard::run(&env)),
         "load" => print!("{}", bench::load::run(&env)),
         "aging" => print!("{}", bench::aging::run(&env)),
         "caching" => print!("{}", bench::caching::run(&env)),
@@ -58,6 +59,7 @@ fn main() {
                 ("probes", bench::probes::run as fn(&BenchEnv) -> String),
                 ("bulk", bench::bulk::run),
                 ("grow", bench::grow::run),
+                ("reshard", bench::reshard::run),
                 ("load", bench::load::run),
                 ("aging", bench::aging::run),
                 ("caching", bench::caching::run),
@@ -102,6 +104,11 @@ fn serve(args: &Args) {
         growth: args
             .get_bool("grow")
             .then(warpspeed::tables::GrowthPolicy::default),
+        // `--reshard` lets the coordinator double its shard count (and
+        // worker parallelism) when aggregate load crosses the trigger.
+        reshard: args
+            .get_bool("reshard")
+            .then(warpspeed::coordinator::ReshardPolicy::default),
     };
     let coord = Coordinator::new(cfg);
     eprintln!(

@@ -73,7 +73,12 @@ impl EngineOffload {
 }
 
 impl ReadOffload for EngineOffload {
-    fn query_run(&self, shard: &dyn ConcurrentMap, keys: &[u64], out: &mut Vec<Option<u64>>) -> bool {
+    fn query_run(
+        &self,
+        shard: &dyn ConcurrentMap,
+        keys: &[u64],
+        out: &mut Vec<Option<u64>>,
+    ) -> bool {
         // Serve only the shard this snapshot was captured from — the
         // coordinator consults one offload for every shard's read runs —
         // and decline if it has been mutated since capture.

@@ -92,7 +92,12 @@ impl ChainingHt {
 
     /// Walk the chain for `key`. Returns the node+pair when found, and the
     /// first free (EMPTY) pair encountered anywhere in the chain.
-    fn walk(&self, bucket: usize, key: u64, strong: bool) -> (Option<(u64, usize, u64)>, Option<(u64, usize)>) {
+    fn walk(
+        &self,
+        bucket: usize,
+        key: u64,
+        strong: bool,
+    ) -> (Option<(u64, usize, u64)>, Option<(u64, usize)>) {
         let mem = self.nodes.mem();
         let mut node = self.heads.load(bucket, strong);
         let mut free = None;

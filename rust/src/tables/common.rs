@@ -16,7 +16,9 @@ use super::meta::MetaArray;
 use crate::gpusim::mem::{is_user_key, SimMem, EMPTY, RESERVED, TOMBSTONE};
 use crate::gpusim::race::{RaceEvent, RaceHook};
 
-pub use crate::gpusim::mem::{EMPTY as KEY_EMPTY, RESERVED as KEY_RESERVED, TOMBSTONE as KEY_TOMBSTONE};
+pub use crate::gpusim::mem::{
+    EMPTY as KEY_EMPTY, RESERVED as KEY_RESERVED, TOMBSTONE as KEY_TOMBSTONE,
+};
 
 /// Result of scanning one bucket for a key.
 #[derive(Clone, Copy, Debug, Default)]

@@ -72,7 +72,8 @@ impl DoubleHt {
         let mask = self.pairs.mask();
         let h = hash1(key);
         let s = if self.linear { 1 } else { stride(key) };
-        (0..self.max_probes as u64).map(move |i| (h.wrapping_add(i.wrapping_mul(s)) & mask) as usize)
+        (0..self.max_probes as u64)
+            .map(move |i| (h.wrapping_add(i.wrapping_mul(s)) & mask) as usize)
     }
 
     /// Apply an upsert policy to an existing pair.
@@ -490,7 +491,8 @@ impl ConcurrentMap for DoubleHt {
                 } else {
                     group_keys.clear();
                     group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
-                    let (free, _) = self.pairs.scan_bucket_group(b, &group_keys, strong, &mut found);
+                    let (free, _) =
+                        self.pairs.scan_bucket_group(b, &group_keys, strong, &mut found);
                     free
                 };
                 // Keys already handled by this group: the shared scan is

@@ -197,7 +197,11 @@ impl GrowableMap {
         *g = Phase::Migrating(Arc::new(Migration {
             old,
             new,
-            locks: LockArray::new(total),
+            // Cache-line-padded: the migrator sweeps its claimed range's
+            // lock words while foreground ops take single locks on
+            // neighbouring words; dense packing would false-share one
+            // line between them (ROADMAP perf item).
+            locks: LockArray::padded(total),
             cursor: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             total,

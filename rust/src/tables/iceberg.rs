@@ -253,7 +253,13 @@ impl IcebergHt {
     /// `None` when the scan-time list is exhausted (the caller falls
     /// back to the scalar walk, which retries the front yard and then
     /// overflows to the back yard).
-    fn claim_front_from(&self, fb: usize, free: &mut FreeSlots, key: u64, val: u64) -> Option<usize> {
+    fn claim_front_from(
+        &self,
+        fb: usize,
+        free: &mut FreeSlots,
+        key: u64,
+        val: u64,
+    ) -> Option<usize> {
         let tag = if self.fmeta.is_some() { tag16(key) } else { 0 };
         super::common::claim_from_free(
             &self.front,

@@ -228,6 +228,7 @@ fn persistent_pool_ordering_across_batches_and_clean_shutdown() {
             n_workers: 3,
             max_batch: 32,
             growth: None,
+            reshard: None,
         });
         let ks = distinct_keys(256, 0x9D0 ^ kind as u64);
         for round in 0..3u64 {
@@ -277,6 +278,7 @@ fn coordinator_bulk_dispatch_matches_oracle_for_all_designs() {
             n_workers: 2,
             max_batch: 128,
             growth: None,
+            reshard: None,
         });
         let ks = distinct_keys(64, 0xC0DE ^ kind as u64);
         let mut oracle: HashMap<u64, u64> = HashMap::new();
@@ -529,7 +531,11 @@ fn grouped_path_covers_every_slot_for_colliding_keys() {
                 }
             }
         }
-        let pairs: Vec<(u64, u64)> = batch.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
+        let pairs: Vec<(u64, u64)> = batch
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| (k, i as u64))
+            .collect();
         let mut got_u = Vec::new();
         bulk_t.upsert_bulk(&pairs, &UpsertOp::Overwrite, &mut got_u);
         assert_eq!(got_u.len(), pairs.len(), "{kind:?}: missing upsert results");
@@ -552,6 +558,123 @@ fn grouped_path_covers_every_slot_for_colliding_keys() {
         assert_eq!(got_e.len(), batch.len(), "{kind:?}: missing erase results");
         for (i, &k) in batch.iter().enumerate() {
             assert_eq!(got_e[i], scalar_t.erase(k), "{kind:?}: colliding erase #{i}");
+        }
+    }
+}
+
+/// The bulk-vs-scalar parity oracle extended across a shard-count
+/// split: a `ShardedTable` driven through the index-addressed bulk
+/// entry points (partitioned under the current router, exactly as the
+/// coordinator executor does) must match a scalar twin and the oracle
+/// while a split begun mid-stream migrates interleaved with the
+/// batches. Per-key order is preserved because a key never changes
+/// parts within an epoch, and both twins split at the same round.
+#[test]
+fn sharded_bulk_matches_scalar_across_a_split() {
+    use warpspeed::coordinator::ShardedTable;
+    for kind in [TableKind::Double, TableKind::Cuckoo, TableKind::Chaining] {
+        let bulk_t = ShardedTable::new(kind, 8 * 1024, 2);
+        let scalar_t = ShardedTable::new(kind, 8 * 1024, 2);
+        let mut oracle: HashMap<u64, u64> = HashMap::new();
+        let mut rng = Xoshiro256pp::new(0x5B11 ^ kind as u64);
+        let universe = distinct_keys(96, 0x5B12 ^ kind as u64);
+        for round in 0..30 {
+            if round == 10 {
+                assert!(bulk_t.split_shards(), "{kind:?}");
+                assert!(scalar_t.split_shards(), "{kind:?}");
+            }
+            // A little bounded migration between batches, like the
+            // coordinator's per-submit SplitMigrate jobs.
+            for t in [&bulk_t, &scalar_t] {
+                for pair in t.split_pairs_pending() {
+                    t.drive_split(pair, 24);
+                }
+            }
+            let batch = gen_batch(&mut rng, &universe, 192);
+            let router = bulk_t.current_router();
+            assert_eq!(router, scalar_t.current_router(), "{kind:?}: twins diverged");
+            let mut parts: Vec<Vec<(Class, u64, u64)>> = vec![Vec::new(); router.n_shards()];
+            for &item in &batch {
+                parts[router.shard_of(item.1)].push(item);
+            }
+            for (idx, part) in parts.iter().enumerate() {
+                let mut s = 0;
+                while s < part.len() {
+                    let class = part[s].0;
+                    let mut e = s + 1;
+                    while e < part.len() && part[e].0 == class {
+                        e += 1;
+                    }
+                    let run = &part[s..e];
+                    match class {
+                        Class::Put | Class::Add => {
+                            let op = if class == Class::Put {
+                                UpsertOp::Overwrite
+                            } else {
+                                UpsertOp::AddAssign
+                            };
+                            let pairs: Vec<(u64, u64)> =
+                                run.iter().map(|&(_, k, v)| (k, v)).collect();
+                            let mut got: Vec<UpsertResult> = Vec::new();
+                            bulk_t.upsert_bulk_on(idx, &pairs, &op, &mut got);
+                            assert_eq!(got.len(), pairs.len());
+                            for (i, &(k, v)) in pairs.iter().enumerate() {
+                                let want = scalar_t.upsert(k, v, &op);
+                                assert_eq!(
+                                    got[i], want,
+                                    "{kind:?}: round {round} shard {idx} upsert #{i}"
+                                );
+                                if class == Class::Put {
+                                    oracle.insert(k, v);
+                                } else {
+                                    oracle
+                                        .entry(k)
+                                        .and_modify(|x| *x = x.wrapping_add(v))
+                                        .or_insert(v);
+                                }
+                            }
+                        }
+                        Class::Get => {
+                            let keys: Vec<u64> = run.iter().map(|&(_, k, _)| k).collect();
+                            let mut got: Vec<Option<u64>> = Vec::new();
+                            bulk_t.query_bulk_on(idx, &keys, &mut got);
+                            assert_eq!(got.len(), keys.len());
+                            for (i, &k) in keys.iter().enumerate() {
+                                assert_eq!(
+                                    got[i],
+                                    oracle.get(&k).copied(),
+                                    "{kind:?}: round {round} shard {idx} query #{i}"
+                                );
+                                assert_eq!(got[i], scalar_t.query(k), "{kind:?}");
+                            }
+                        }
+                        Class::Del => {
+                            let keys: Vec<u64> = run.iter().map(|&(_, k, _)| k).collect();
+                            let mut got: Vec<bool> = Vec::new();
+                            bulk_t.erase_bulk_on(idx, &keys, &mut got);
+                            assert_eq!(got.len(), keys.len());
+                            for (i, &k) in keys.iter().enumerate() {
+                                let want = scalar_t.erase(k);
+                                assert_eq!(
+                                    got[i], want,
+                                    "{kind:?}: round {round} shard {idx} erase #{i}"
+                                );
+                                assert_eq!(got[i], oracle.remove(&k).is_some(), "{kind:?}");
+                            }
+                        }
+                    }
+                    s = e;
+                }
+            }
+        }
+        assert!(bulk_t.quiesce_split(), "{kind:?}: bulk twin split never completed");
+        assert!(scalar_t.quiesce_split(), "{kind:?}: scalar twin split never completed");
+        assert_eq!(bulk_t.n_shards(), 4, "{kind:?}");
+        assert_eq!(bulk_t.epoch(), 1, "{kind:?}");
+        assert_eq!(bulk_t.len(), oracle.len(), "{kind:?}: keys lost or duplicated");
+        for &k in &universe {
+            assert_eq!(bulk_t.query(k), oracle.get(&k).copied(), "{kind:?}");
+            assert_eq!(scalar_t.query(k), oracle.get(&k).copied(), "{kind:?}");
         }
     }
 }

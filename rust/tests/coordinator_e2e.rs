@@ -3,7 +3,7 @@
 //! scale so every paper exhibit stays regenerable.
 
 use warpspeed::bench::{self, BenchEnv};
-use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult};
+use warpspeed::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult, ReshardPolicy};
 use warpspeed::tables::TableKind;
 use warpspeed::workloads::keys::distinct_keys;
 use warpspeed::workloads::ycsb::{Workload, YcsbOp, YcsbStream};
@@ -17,6 +17,7 @@ fn coordinator_serves_ycsb_consistently() {
         n_workers: 2,
         max_batch: 256,
         growth: None,
+        reshard: None,
     });
     let universe = distinct_keys(8 * 1024, 0xE2E);
     let load_results = coord.run_stream(universe.iter().map(|&k| Op::Upsert(k, k ^ 3)));
@@ -56,6 +57,7 @@ fn every_bench_exhibit_regenerates() {
     };
     let exhibits: Vec<(&str, fn(&BenchEnv) -> String)> = vec![
         ("probes/Table5.1", bench::probes::run),
+        ("reshard", bench::reshard::run),
         ("load/Fig6.1", bench::load::run),
         ("aging/Fig6.2", bench::aging::run),
         ("caching/Fig6.3", bench::caching::run),
@@ -81,4 +83,72 @@ fn scaling_bench_regenerates() {
     };
     let out = bench::scaling::run(&env);
     assert!(out.contains("Figure 6.4"));
+}
+
+#[test]
+fn coordinator_reshards_under_ycsb_traffic() {
+    // End-to-end topology scaling: a deliberately narrow 2-shard
+    // coordinator with a load-factor reshard trigger serves a YCSB-A
+    // stream over a growing universe. The shard count must double at
+    // least once mid-serve, the pool must widen with it, and every
+    // result must match the sequential oracle — zero lost or duplicated
+    // ops across the epoch changes.
+    let coord = Coordinator::new(CoordinatorConfig {
+        kind: TableKind::P2Meta,
+        total_slots: 8 * 1024,
+        n_shards: 2,
+        n_workers: 4,
+        max_batch: 256,
+        growth: Some(warpspeed::tables::GrowthPolicy::default()),
+        reshard: Some(ReshardPolicy {
+            trigger_load_factor: 0.6,
+            migration_stripes: 64,
+            max_shards: 16,
+            ..Default::default()
+        }),
+    });
+    assert_eq!(coord.n_workers(), 2, "pool clamps to the initial shard count");
+    let universe = distinct_keys(12 * 1024, 0x12E5);
+    let mut oracle: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    // Phase 1: load 1.5× the provisioning — crosses the 0.6 trigger.
+    let load_results = coord.run_stream(universe.iter().map(|&k| Op::Upsert(k, k ^ 3)));
+    assert!(
+        load_results.iter().all(|r| *r == OpResult::Upserted(true)),
+        "load phase rejected or duplicated an insert"
+    );
+    for &k in &universe {
+        oracle.insert(k, k ^ 3);
+    }
+    assert!(coord.table.epoch() >= 1, "load never fired the reshard trigger");
+    assert!(coord.n_workers() >= 4, "pool never widened with the topology");
+    // Phase 2: serve YCSB-A (50/50 read/update) across whatever split
+    // migration is still in flight.
+    let mut stream = YcsbStream::new(&universe, Workload::A, 5);
+    let ops: Vec<YcsbOp> = stream.batch(20_000);
+    let coord_ops: Vec<Op> = ops
+        .iter()
+        .map(|op| match *op {
+            YcsbOp::Read(k) => Op::Query(k),
+            YcsbOp::Update(k, v) => Op::Upsert(k, v),
+        })
+        .collect();
+    let results = coord.run_stream(coord_ops);
+    for (op, res) in ops.iter().zip(&results) {
+        match *op {
+            YcsbOp::Read(k) => {
+                assert_eq!(*res, OpResult::Value(oracle.get(&k).copied()));
+            }
+            YcsbOp::Update(k, v) => {
+                oracle.insert(k, v);
+                assert!(matches!(res, OpResult::Upserted(_)));
+            }
+        }
+    }
+    // Quiesce and audit the final topology.
+    assert!(coord.finish_resharding(), "split never completed");
+    assert!(coord.finish_migrations());
+    assert!(coord.table.n_shards() >= 4);
+    assert_eq!(coord.table.len(), oracle.len(), "keys lost or duplicated");
+    let (max, min) = coord.table.balance();
+    assert!(min > 0, "an empty shard after resharding: {min}..{max}");
 }
