@@ -1,0 +1,8 @@
+//! `cargo bench --bench bench_shrink` — the full capacity lifecycle:
+//! grow + split up, compact + merge back down, under live traffic.
+use warpspeed::bench::{shrink, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", shrink::run(&env));
+}

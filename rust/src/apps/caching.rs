@@ -102,13 +102,49 @@ impl GpuCache {
     }
 
     /// Current admission bound: fixed at construction normally, tracking
-    /// the grown capacity in growth mode.
+    /// the LIVE capacity in growth mode — up through growths, and back
+    /// down when a cool-down compaction shrinks the device table.
     fn live_ring_cap(&mut self) -> usize {
         if self.grow {
             let cap = ((self.table.capacity() as f64) * RING_FRACTION) as usize;
-            self.ring_cap = self.ring_cap.max(cap.max(1));
+            self.ring_cap = cap.max(1);
         }
         self.ring_cap
+    }
+
+    /// Cool-down path for the growth-mode cache: when the hot set
+    /// contracts, holding peak capacity wastes device memory — the
+    /// inverse of the grow-instead-of-evict admission policy. Evicts
+    /// FIFO down to `target_resident` keys (they "return to the CPU";
+    /// the host store already holds them), then asks the device table
+    /// to compact itself — chained ½× shrinks down to its provisioning
+    /// or the occupancy guard — and lets the admission ring follow the
+    /// compacted capacity. Returns the number of keys evicted. On a
+    /// fixed-capacity cache only the eviction happens (`request_shrink`
+    /// refuses).
+    pub fn cooldown(&mut self, target_resident: usize) -> usize {
+        let mut evict: Vec<u64> = Vec::new();
+        while self.ring.len() > target_resident {
+            match self.ring.pop_front() {
+                Some(old) => evict.push(old),
+                None => break,
+            }
+        }
+        if !evict.is_empty() {
+            let mut eres = Vec::with_capacity(evict.len());
+            self.table.erase_bulk(&evict, &mut eres);
+            self.evictions += evict.len() as u64;
+        }
+        // Settle any in-flight migration first, then walk the capacity
+        // down while the table still accepts halvings.
+        self.table.quiesce_migration();
+        while self.table.request_shrink() {
+            self.table.quiesce_migration();
+        }
+        if self.grow {
+            self.ring_cap = (((self.table.capacity() as f64) * RING_FRACTION) as usize).max(1);
+        }
+        evict.len()
     }
 
     /// One cache access: query the device table; on miss fetch from the
@@ -369,6 +405,58 @@ mod tests {
             c.get(draws.next_key());
         }
         assert!(c.hit_rate() > 0.95, "hit rate {} after full admission", c.hit_rate());
+    }
+
+    #[test]
+    fn cooldown_compacts_the_device_table_back_to_nominal() {
+        use crate::tables::{GrowableMap, GrowthPolicy, TableConfig};
+        // Heat a 512-slot growable chaining cache with a 4000-key hot
+        // set (grows ~8×), then cool: the FIFO evicts down and chained
+        // compactions must walk the device footprint back to the
+        // provisioning — the fix for chaining's never-unlinked-node
+        // growth, which erases alone cannot reclaim.
+        let data = distinct_keys(4000, 0xD0);
+        let t = std::sync::Arc::new(GrowableMap::new(
+            TableKind::Chaining,
+            TableConfig::for_kind(TableKind::Chaining, 512),
+            GrowthPolicy {
+                migration_batch: 16,
+                ..Default::default()
+            },
+        ));
+        let nominal_cap = t.capacity();
+        let mut c =
+            GpuCache::with_growth(std::sync::Arc::clone(&t) as _, store_of(&data)).unwrap();
+        let mut draws = UniverseDraws::new(&data, 6);
+        for _ in 0..30_000 {
+            let k = draws.next_key();
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert!(t.quiesce_migration());
+        assert!(t.capacity() >= nominal_cap * 4, "heat phase never grew the table");
+        let peak_bytes = c.device_bytes();
+        let evicted = c.cooldown(100);
+        assert!(evicted > 0, "cooldown below residency must evict");
+        assert!(t.shrink_events() >= 1, "cooldown never compacted");
+        assert_eq!(t.capacity(), nominal_cap, "capacity never returned to nominal");
+        assert!(
+            c.device_bytes() * 4 < peak_bytes,
+            "footprint {} never returned toward nominal from peak {peak_bytes}",
+            c.device_bytes()
+        );
+        assert!(c.resident() <= 100);
+        // The cooled cache still serves correctly, with the ring bound
+        // following the compacted capacity (admissions evict again).
+        let hot: Vec<u64> = data.iter().copied().take(200).collect();
+        let mut hot_draws = UniverseDraws::new(&hot, 7);
+        for _ in 0..2_000 {
+            let k = hot_draws.next_key();
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+            assert!(
+                c.resident() <= (t.capacity() as f64 * 0.85) as usize + 1,
+                "ring cap did not follow the compacted capacity"
+            );
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod report;
 pub mod reshard;
 pub mod runtime;
 pub mod scaling;
+pub mod shrink;
 pub mod space;
 pub mod sptc;
 pub mod sweep;

@@ -1,0 +1,322 @@
+//! Shrink exhibit — the full capacity lifecycle under live mixed
+//! traffic: ramp UP through online growth and shard-count doubling
+//! (the [`super::reshard`] machinery), then cool DOWN through table
+//! compaction and shard-count halving, with every result replayed
+//! against a sequential oracle.
+//!
+//! Each design starts on a 2-shard growable coordinator with both
+//! directions of the rescale policy armed. Phase 1 inserts mixed
+//! traffic to 2× the provisioning — splits and growths fire; the peak
+//! topology is snapshotted at a quiesce point. Phase 2 erases ~15/16 of
+//! the live keys under continuing mixed traffic — the shards' own
+//! low-watermark compactions and the coordinator's hysteresis-gated
+//! merges begin walking the footprint back down. Phase 3 serves idle
+//! read batches so the policy can finish, then forces any remainder
+//! through the same gated cutover (`request_merge`) and per-shard
+//! `request_shrink` calls — a failed quiesce counts as a mismatch, so
+//! a pinned drain cannot hide in a clean row. The acceptance bar:
+//! shard count AND capacity return exactly to the pre-ramp level, with
+//! zero rejected ops and zero oracle divergences. JSON rows follow the
+//! human table (the CI bench-trajectory artifact records them).
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, Op, OpResult, ReshardPolicy};
+use crate::gpusim::probes;
+use crate::prng::Xoshiro256pp;
+use crate::tables::{ConcurrentMap, GrowthPolicy, TableKind};
+use crate::workloads::keys::distinct_keys;
+
+use super::{mops, report, BenchEnv};
+
+/// One design's full up-then-down lifecycle run.
+pub struct ShrinkOutcome {
+    pub shards_before: usize,
+    pub shards_peak: usize,
+    pub shards_after: usize,
+    pub cap_before: usize,
+    pub cap_peak: usize,
+    pub cap_after: usize,
+    /// Routing epoch reached (splits started + merges started).
+    pub epochs: u32,
+    /// Keys moved by split AND merge migrations.
+    pub moved_keys: u64,
+    /// ½-capacity compactions the shards ran.
+    pub shrink_events: u64,
+    pub rejected: u64,
+    /// Results that diverged from the sequential oracle replay, plus
+    /// any migration/rescale that could not complete.
+    pub mismatches: u64,
+    pub ops: usize,
+    pub mops: f64,
+}
+
+pub fn measure(kind: TableKind, slots: usize, seed: u64) -> ShrinkOutcome {
+    let c = Coordinator::new(CoordinatorConfig {
+        kind,
+        total_slots: slots,
+        n_shards: 2,
+        n_workers: 4,
+        max_batch: 256,
+        // Growable shards with the low-watermark compaction armed:
+        // 0.25 is safely under half the 0.85 grow trigger, so the two
+        // capacity watermarks cannot chase each other.
+        growth: Some(GrowthPolicy {
+            migration_batch: 32,
+            shrink_below: 0.25,
+            ..Default::default()
+        }),
+        // Split at 0.6 aggregate load on the way up; merge below 0.2
+        // with a short hysteresis on the way down (0.2 × 2 < 0.6, so
+        // the structural guard never blocks a sensible halving). The
+        // shard ceiling is deliberately LOW: once the topology maxes
+        // out at 4, the continuing ramp must be absorbed by per-shard
+        // capacity growth instead — which is what guarantees every run
+        // exercises a real compaction on the way back down.
+        reshard: Some(ReshardPolicy {
+            trigger_load_factor: 0.6,
+            merge_below_load_factor: 0.2,
+            merge_hysteresis: 2,
+            min_shards: 2,
+            migration_stripes: 64,
+            max_shards: 4,
+            ..Default::default()
+        }),
+    });
+    let shards_before = c.table.n_shards();
+    let cap_before = c.table.capacity();
+    let mut rng = Xoshiro256pp::new(seed ^ 0x5117);
+    let mut oracle: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    let mut mismatches = 0u64;
+    let mut rejected = 0u64;
+    let mut total_ops = 0usize;
+
+    // Phase 1 — ramp: 70% fresh inserts, 20% queries, 10% erases to
+    // 2.25× the provisioning (the reshard exhibit's mix, pushed far
+    // enough past the shard ceiling that every shard's own growth
+    // watermark fires too).
+    let ks = distinct_keys(slots * 9 / 4, seed ^ kind as u64);
+    let mut ops: Vec<Op> = Vec::new();
+    let mut expected: Vec<OpResult> = Vec::new();
+    let mut frontier = 0usize;
+    while frontier < ks.len() {
+        let dice = rng.next_below(10);
+        if dice < 7 || frontier == 0 {
+            let k = ks[frontier];
+            frontier += 1;
+            ops.push(Op::Upsert(k, k ^ 7));
+            expected.push(OpResult::Upserted(oracle.insert(k, k ^ 7).is_none()));
+        } else {
+            let k = ks[rng.next_below(frontier as u64) as usize];
+            if dice < 9 {
+                ops.push(Op::Query(k));
+                expected.push(OpResult::Value(oracle.get(&k).copied()));
+            } else {
+                ops.push(Op::Erase(k));
+                expected.push(OpResult::Erased(oracle.remove(&k).is_some()));
+            }
+        }
+    }
+    let ramp_len = ops.len();
+    // Phase 2 — cooldown, appended to the same timed stream: walk a
+    // kill cursor over the ramp's keys, erasing ~15/16 of whatever is
+    // still live with queries mixed in.
+    let mut live: Vec<u64> = oracle.keys().copied().collect();
+    live.sort_unstable(); // HashMap order is nondeterministic; the seed should rule
+    let keep_every = 16;
+    for (i, &k) in live.iter().enumerate() {
+        if i % keep_every == 0 {
+            continue;
+        }
+        if rng.next_below(5) == 0 {
+            let probe = live[rng.next_below(live.len() as u64) as usize];
+            ops.push(Op::Query(probe));
+            expected.push(OpResult::Value(oracle.get(&probe).copied()));
+        }
+        ops.push(Op::Erase(k));
+        expected.push(OpResult::Erased(oracle.remove(&k).is_some()));
+    }
+    let n_ops = ops.len();
+    total_ops += n_ops;
+
+    let mut shards_peak = shards_before;
+    let mut cap_peak = cap_before;
+    let mut got: Vec<OpResult> = Vec::new();
+    let m = mops(n_ops, || {
+        // Ramp first so the peak snapshot sits between the phases.
+        let ramp: Vec<Op> = ops.drain(..ramp_len).collect();
+        got = c.run_stream(ramp);
+        if !c.finish_resharding() {
+            mismatches += 1; // split never sealed
+        }
+        if !c.finish_migrations() {
+            mismatches += 1; // growth migration pinned
+        }
+        shards_peak = c.table.n_shards();
+        cap_peak = c.table.capacity();
+        let rest: Vec<Op> = ops.drain(..).collect();
+        got.extend(c.run_stream(rest));
+    });
+    rejected += got.iter().filter(|&&r| r == OpResult::Rejected).count() as u64;
+    mismatches += got.iter().zip(&expected).filter(|(g, e)| g != e).count() as u64;
+    mismatches += got.len().abs_diff(expected.len()) as u64;
+
+    // Phase 3 — idle reads until the policy walks the topology back, a
+    // bounded number of rounds, then force the remainder through the
+    // same gated cutover and the per-shard compaction request.
+    let survivors: Vec<u64> = oracle.keys().copied().collect();
+    for _ in 0..48 {
+        if c.table.n_shards() <= shards_before && !c.table.merge_in_progress() {
+            break;
+        }
+        let probes_batch: Vec<Op> = survivors.iter().take(64).map(|&k| Op::Query(k)).collect();
+        let n = probes_batch.len();
+        let r = c.run_stream(probes_batch);
+        mismatches += r
+            .iter()
+            .enumerate()
+            .filter(|&(i, &x)| x != OpResult::Value(oracle.get(&survivors[i]).copied()))
+            .count() as u64;
+        total_ops += n;
+    }
+    let mut guard = 0;
+    while c.table.n_shards() > shards_before {
+        if !c.finish_resharding() {
+            mismatches += 1; // a drain pinned mid-merge
+            break;
+        }
+        if c.table.n_shards() <= shards_before {
+            break;
+        }
+        guard += 1;
+        if guard > 16 || !c.request_merge() {
+            mismatches += 1; // could not walk the topology back
+            break;
+        }
+    }
+    if !c.finish_resharding() {
+        mismatches += 1;
+    }
+    if !c.finish_migrations() {
+        mismatches += 1;
+    }
+    for shard in c.table.shards_snapshot() {
+        while shard.request_shrink() {
+            if !shard.quiesce_migration() {
+                mismatches += 1; // compaction pinned
+                break;
+            }
+        }
+    }
+    if c.table.len() != oracle.len() {
+        mismatches += 1; // lost or duplicated keys
+    }
+    for &k in survivors.iter().step_by(7) {
+        if c.table.query(k) != oracle.get(&k).copied() {
+            mismatches += 1;
+        }
+    }
+    ShrinkOutcome {
+        shards_before,
+        shards_peak,
+        shards_after: c.table.n_shards(),
+        cap_before,
+        cap_peak,
+        cap_after: c.table.capacity(),
+        epochs: c.table.epoch(),
+        moved_keys: c.table.moved_keys(),
+        shrink_events: c.table.shrink_events(),
+        rejected,
+        mismatches,
+        ops: total_ops,
+        mops: m,
+    }
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let _measure = probes::measurement_section();
+    probes::set_enabled(false);
+    let slots = (env.slots / 4).max(1024);
+    let mut rows = Vec::new();
+    let mut json = String::new();
+    for kind in TableKind::CONCURRENT {
+        let r = measure(kind, slots, env.seed);
+        rows.push(vec![
+            kind.paper_name().to_string(),
+            format!("{}→{}→{}", r.shards_before, r.shards_peak, r.shards_after),
+            format!(
+                "{}→{}→{}",
+                r.cap_before / 1024,
+                r.cap_peak / 1024,
+                r.cap_after / 1024
+            ),
+            r.epochs.to_string(),
+            r.moved_keys.to_string(),
+            r.shrink_events.to_string(),
+            r.rejected.to_string(),
+            r.mismatches.to_string(),
+            report::fmt_f(r.mops, 2),
+        ]);
+        json.push_str(&report::json_row(&[
+            ("exhibit", report::JsonVal::Str("shrink".into())),
+            ("table", report::JsonVal::Str(kind.paper_name().into())),
+            ("nominal_slots", report::JsonVal::Int(slots as u64)),
+            ("shards_before", report::JsonVal::Int(r.shards_before as u64)),
+            ("shards_peak", report::JsonVal::Int(r.shards_peak as u64)),
+            ("shards_after", report::JsonVal::Int(r.shards_after as u64)),
+            ("cap_before", report::JsonVal::Int(r.cap_before as u64)),
+            ("cap_peak", report::JsonVal::Int(r.cap_peak as u64)),
+            ("cap_after", report::JsonVal::Int(r.cap_after as u64)),
+            ("epochs", report::JsonVal::Int(r.epochs as u64)),
+            ("moved_keys", report::JsonVal::Int(r.moved_keys)),
+            ("shrink_events", report::JsonVal::Int(r.shrink_events)),
+            ("rejected", report::JsonVal::Int(r.rejected)),
+            ("mismatches", report::JsonVal::Int(r.mismatches)),
+            ("ops", report::JsonVal::Int(r.ops as u64)),
+            ("mops", report::JsonVal::Num(r.mops)),
+        ]));
+        json.push('\n');
+    }
+    probes::set_enabled(true);
+    let mut out = report::table(
+        "Shrink — grow+split up, compact+merge down, under live mixed traffic",
+        &[
+            "table", "shards b→p→a", "cap KiB b→p→a", "epochs", "moved", "shrinks", "rej",
+            "mism", "Mops",
+        ],
+        &rows,
+    );
+    out.push('\n');
+    out.push_str(&json);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrink_bench_round_trips_topology_and_capacity() {
+        let r = measure(TableKind::P2Meta, 2048, 0xB);
+        assert!(r.epochs >= 2, "a ramp+cooldown must fire a split AND a merge");
+        assert!(r.shards_peak > r.shards_before, "ramp never widened the topology");
+        assert_eq!(r.shards_after, r.shards_before, "shard count never returned");
+        assert!(r.cap_peak > r.cap_before, "ramp never grew capacity");
+        assert_eq!(r.cap_after, r.cap_before, "capacity never returned to pre-ramp");
+        assert!(r.moved_keys > 0);
+        assert!(r.shrink_events >= 1, "no shard ever compacted");
+        assert_eq!(r.rejected, 0, "lifecycle traffic must never reject");
+        assert_eq!(r.mismatches, 0, "oracle divergence across the lifecycle");
+        assert!(r.mops > 0.0);
+    }
+
+    #[test]
+    fn shrink_bench_holds_for_an_unstable_design_too() {
+        // CuckooHT displaces on insert; merges must still drain its
+        // children losslessly (nothing ever inserts into a merge child,
+        // so the sweep is displacement-free by construction).
+        let r = measure(TableKind::Cuckoo, 1024, 0xC);
+        assert_eq!(r.shards_after, r.shards_before);
+        assert_eq!(r.cap_after, r.cap_before);
+        assert_eq!(r.rejected, 0);
+        assert_eq!(r.mismatches, 0);
+    }
+}

@@ -41,13 +41,18 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> SpaceRow {
     }
 }
 
-/// Transient residency while online growth / resharding migrations run.
+/// Transient residency while online growth / shrink / resharding
+/// migrations run.
 pub struct TransientRow {
     pub name: String,
     /// Steady-state resident bytes of the growable table pre-growth.
     pub steady_bytes: usize,
     /// Resident bytes mid-capacity-growth: old table + 2× successor.
     pub grow_transient_bytes: usize,
+    /// Resident bytes mid-SHRINK relative to the grown steady state:
+    /// old table + ½× compaction successor (≈1.5× for slot-array
+    /// designs; chaining's old-table nodes dominate, so closer to 1×).
+    pub shrink_ratio: f64,
     /// Resident bytes mid-split relative to the sharded steady state:
     /// parents + freshly allocated children.
     pub split_ratio: f64,
@@ -82,6 +87,17 @@ pub fn measure_transient(kind: TableKind, slots: usize, seed: u64) -> TransientR
     g.request_grow();
     g.drive_migration(1); // begin, but leave the migration in flight
     let grow_transient_bytes = g.device_bytes();
+    // Shrink: finish the growth, cool the table down below the
+    // occupancy guard, then start the ½× compaction and snapshot
+    // mid-migration (grown old table + half-size successor resident).
+    g.quiesce_migration();
+    let grown_steady = g.device_bytes();
+    for &k in ks.iter().skip(100) {
+        g.erase(k);
+    }
+    g.request_shrink();
+    g.drive_migration(1); // begin, but leave the compaction in flight
+    let shrink_ratio = g.device_bytes() as f64 / grown_steady.max(1) as f64;
     // Shard split: a sharded table mid-split holds every parent AND
     // every child (each provisioned at its parent's capacity).
     let st = ShardedTable::new(kind, slots, 4);
@@ -97,6 +113,7 @@ pub fn measure_transient(kind: TableKind, slots: usize, seed: u64) -> TransientR
         name: kind.paper_name().to_string(),
         steady_bytes,
         grow_transient_bytes,
+        shrink_ratio,
         split_ratio,
     }
 }
@@ -124,13 +141,15 @@ pub fn run(env: &BenchEnv) -> String {
             (r.steady_bytes / 1024).to_string(),
             (r.grow_transient_bytes / 1024).to_string(),
             report::fmt_f(r.grow_ratio(), 2),
+            report::fmt_f(r.shrink_ratio, 2),
             report::fmt_f(r.split_ratio, 2),
         ]);
     }
     out.push('\n');
     out.push_str(&report::table(
-        "Growth appendix — transient resident footprint during migration",
-        &["table", "steady KiB", "grow KiB", "×grow", "×split"],
+        "Growth appendix — transient resident footprint during migration \
+         (×shrink: grown table + ½× compaction successor, vs grown steady)",
+        &["table", "steady KiB", "grow KiB", "×grow", "×shrink", "×split"],
         &trows,
     ));
     out
@@ -161,11 +180,17 @@ mod tests {
     }
 
     #[test]
-    fn transient_footprint_reports_both_migration_shapes() {
+    fn transient_footprint_reports_all_migration_shapes() {
         let r = measure_transient(TableKind::Double, 8192, 1);
         // Old table + 2× successor resident ⇒ ~3× steady.
         let gr = r.grow_ratio();
         assert!((2.0..4.0).contains(&gr), "grow transient ratio {gr}");
+        // Grown table + ½× compaction successor ⇒ ~1.5× grown steady.
+        assert!(
+            (1.2..1.8).contains(&r.shrink_ratio),
+            "shrink transient ratio {}",
+            r.shrink_ratio
+        );
         // Parents + same-capacity children resident ⇒ ~2× steady.
         assert!(
             (1.5..2.6).contains(&r.split_ratio),

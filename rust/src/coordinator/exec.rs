@@ -54,6 +54,17 @@
 //! ops on moving keys (keys are never lost — the sealing sweep catches
 //! every straggler — but per-key order across the epoch change is only
 //! guaranteed through the coordinator's gate).
+//!
+//! The inverse runs through the identical machinery: when aggregate
+//! load falls below [`ReshardPolicy::merge_below_load_factor`] with an
+//! idle queue for [`ReshardPolicy::merge_hysteresis`] consecutive
+//! submits, the cutover halves the shard count
+//! ([`ShardedTable::merge_shards`]) and bounded
+//! `Job::MergeMigrate` drains ride ahead of each batch until the
+//! children seal and their capacity is reclaimed.
+//! [`Coordinator::request_merge`] forces the same gated halving. The
+//! pool never shrinks — after a merge, spare workers idle on empty
+//! channels until a later split re-pins shards to them.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -72,11 +83,12 @@ pub enum OpResult {
     Rejected,             // table full
 }
 
-/// When the coordinator doubles its shard count online.
+/// When the coordinator doubles — or halves — its shard count online.
 ///
-/// Both triggers are evaluated at [`Coordinator::submit`] time, before
-/// the batch partitions; a doubling never starts while a previous split
-/// is still migrating, and never past `max_shards`.
+/// All triggers are evaluated at [`Coordinator::submit`] time, before
+/// the batch partitions; a rescale never starts while a previous one is
+/// still migrating, never past `max_shards`, and never under
+/// `min_shards`.
 #[derive(Clone, Copy, Debug)]
 pub struct ReshardPolicy {
     /// Aggregate load factor (total keys / total capacity) at which the
@@ -88,11 +100,29 @@ pub struct ReshardPolicy {
     /// count doubles (backlog = not enough parallelism). `0` disables
     /// the queue-depth trigger.
     pub trigger_queue_depth: usize,
-    /// Routing stripes migrated per split job claim — the bounded unit
-    /// of split work interleaved ahead of each traffic batch. Note that
-    /// each claim scans the parent shard once (filtered to the claimed
-    /// stripes), so smaller claims bound lock-hold footprint per batch
-    /// at the price of more scans per pair
+    /// Aggregate load factor BELOW which the shard count halves (merge
+    /// split pairs back) once traffic cools. `0.0` (the default)
+    /// disables policy-triggered merges; [`Coordinator::request_merge`]
+    /// still works. The halving additionally requires an idle job queue
+    /// and [`ReshardPolicy::merge_hysteresis`] consecutive qualifying
+    /// submits, and is refused outright whenever the post-merge load
+    /// factor — computed against the PARENTS' real capacity
+    /// ([`ShardedTable::post_merge_capacity`]; the children's capacity
+    /// drops with them) — would cross `trigger_load_factor`, so a
+    /// borderline load structurally cannot oscillate split↔merge.
+    pub merge_below_load_factor: f64,
+    /// Consecutive qualifying submits (low load AND idle queue) required
+    /// before a policy-triggered halving fires — the temporal half of
+    /// the hysteresis; any disqualifying submit resets the streak.
+    pub merge_hysteresis: usize,
+    /// Floor on the shard count for policy-triggered merges (a forced
+    /// [`Coordinator::request_merge`] may go to 1).
+    pub min_shards: usize,
+    /// Routing stripes migrated per split/merge job claim — the bounded
+    /// unit of rescale work interleaved ahead of each traffic batch.
+    /// Note that each claim scans the draining shard once (filtered to
+    /// the claimed stripes), so smaller claims bound lock-hold footprint
+    /// per batch at the price of more scans per pair
     /// ([`ShardedTable::drive_split`] documents the trade).
     pub migration_stripes: usize,
     /// Ceiling on the shard count.
@@ -104,6 +134,9 @@ impl Default for ReshardPolicy {
         Self {
             trigger_load_factor: 0.80,
             trigger_queue_depth: 0,
+            merge_below_load_factor: 0.0,
+            merge_hysteresis: 4,
+            min_shards: 1,
             // 256/64 = 4 parent scans per pair (see the field docs).
             migration_stripes: 64,
             max_shards: 1024,
@@ -121,6 +154,41 @@ impl ReshardPolicy {
     pub fn queue_triggered(&self, pending_jobs_per_worker: usize) -> bool {
         self.trigger_queue_depth > 0 && pending_jobs_per_worker >= self.trigger_queue_depth
     }
+
+    /// Merge (halving) low-load trigger. Fires only when load is below
+    /// the low watermark AND the post-merge load factor — computed
+    /// against `post_merge_capacity`, the PARENTS' real capacity, since
+    /// parents and children resize independently and the children's
+    /// capacity drops with them — stays clear of the split trigger: the
+    /// structural half of the split↔merge hysteresis (a merge that
+    /// would immediately re-arm the split trigger is refused no matter
+    /// how the watermarks are configured or how unevenly the shards
+    /// have grown/compacted).
+    pub fn merge_load_triggered(
+        &self,
+        len: usize,
+        capacity: usize,
+        post_merge_capacity: usize,
+    ) -> bool {
+        self.merge_below_load_factor > 0.0
+            && capacity > 0
+            && post_merge_capacity > 0
+            && (len as f64) < self.merge_below_load_factor * capacity as f64
+            && (len as f64) < self.trigger_load_factor * post_merge_capacity as f64
+    }
+
+    /// Queue-idle gate for merges: halving worker parallelism is only
+    /// sensible when no job is waiting.
+    pub fn queue_idle(&self, pending_jobs_per_worker: usize) -> bool {
+        pending_jobs_per_worker == 0
+    }
+}
+
+/// Direction of a topology rescale request (private to the cutover).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Rescale {
+    Split,
+    Merge,
 }
 
 #[derive(Clone, Debug)]
@@ -231,6 +299,10 @@ enum Job {
     /// `stripes` routing stripes — the reshard analog of `Migrate`,
     /// also enqueued ahead of each batch per unfinished pair.
     SplitMigrate { pair: usize, stripes: usize },
+    /// Advance merge pair `pair`'s child→parent drain by up to `stripes`
+    /// routing stripes — `SplitMigrate` in reverse, enqueued ahead of
+    /// each batch per unfinished pair on the parent's worker.
+    MergeMigrate { pair: usize, stripes: usize },
     /// Epoch-cutover drain marker: the worker acks once every job queued
     /// before it has finished (channel FIFO).
     Barrier(Sender<()>),
@@ -310,11 +382,23 @@ impl WorkerPool {
                     inflight.fetch_sub(1, Ordering::Relaxed);
                 }
                 Job::Migrate { shard_idx, buckets } => {
-                    table.shard_handle(shard_idx).drive_migration(buckets);
+                    // A merge that sealed between enqueue and dequeue
+                    // retires its child indices — the shard this job
+                    // addressed was drained into its parent, so a stale
+                    // job is simply dropped (indexing would panic: a
+                    // merge is the one topology change that SHRINKS the
+                    // shard list).
+                    if let Some(shard) = table.try_shard_handle(shard_idx) {
+                        shard.drive_migration(buckets);
+                    }
                     inflight.fetch_sub(1, Ordering::Relaxed);
                 }
                 Job::SplitMigrate { pair, stripes } => {
                     table.drive_split(pair, stripes);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+                Job::MergeMigrate { pair, stripes } => {
+                    table.drive_merge(pair, stripes);
                     inflight.fetch_sub(1, Ordering::Relaxed);
                 }
                 Job::Barrier(ack) => {
@@ -363,10 +447,14 @@ pub struct Coordinator {
     inflight: Arc<AtomicUsize>,
     /// Routing epoch the last submitted batch partitioned under. The
     /// mutex is held for each WHOLE submission (cutover trigger check →
-    /// drain → split → pool growth → partition → enqueue), so a
+    /// drain → split/merge → pool growth → partition → enqueue), so a
     /// concurrent submitter can never enqueue a batch partitioned under
     /// an epoch another thread's cutover just retired.
     epoch_gate: Mutex<u32>,
+    /// Consecutive qualifying submits toward a policy-triggered merge
+    /// ([`ReshardPolicy::merge_hysteresis`]). Only read/written under
+    /// the epoch gate; atomic merely to stay `Sync` without a lock.
+    merge_streak: AtomicUsize,
     /// Operations executed (metrics).
     pub ops_executed: std::sync::atomic::AtomicU64,
 }
@@ -392,6 +480,7 @@ impl Coordinator {
             pool: RwLock::new(pool),
             inflight,
             epoch_gate: Mutex::new(epoch),
+            merge_streak: AtomicUsize::new(0),
             ops_executed: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -563,41 +652,44 @@ impl Coordinator {
     }
 
     /// The epoch cutover, shared by `submit` (policy-triggered) and
-    /// [`Coordinator::request_reshard`] (forced): optionally begin a
-    /// split, and on any epoch change (begun here, or an external
-    /// [`ShardedTable::split_shards`] observed late) drain the workers
-    /// before anything partitions under the new router, then grow the
-    /// pool toward the configured width. The caller holds the epoch
-    /// gate. Returns the router to partition under, plus whether a
-    /// requested split actually began.
-    fn cutover_locked(&self, gate: &mut u32, force_split: bool) -> (Router, bool) {
+    /// [`Coordinator::request_reshard`] / [`Coordinator::request_merge`]
+    /// (forced): optionally begin a split or merge, and on any epoch
+    /// change (begun here, or an external [`ShardedTable::split_shards`]
+    /// observed late) drain the workers before anything partitions under
+    /// the new router, then grow the pool toward the configured width
+    /// (the pool never shrinks on a merge — spare workers idle on empty
+    /// channels until the next split re-pins shards to them). The caller
+    /// holds the epoch gate. Returns the router to partition under, plus
+    /// whether a requested rescale actually began.
+    fn cutover_locked(&self, gate: &mut u32, force: Option<Rescale>) -> (Router, bool) {
         let mut router = self.table.current_router();
         let mut drained = false;
-        let mut split_begun = false;
-        let want_split = if force_split {
+        let mut began = false;
+        let rescaling = self.table.split_in_progress() || self.table.merge_in_progress();
+        let want = match force {
             // A forced doubling still honours the configured shard
-            // ceiling (its whole point is bounding the footprint).
-            !self.table.split_in_progress()
+            // ceiling (its whole point is bounding the footprint); a
+            // forced halving only needs two shards to merge.
+            Some(Rescale::Split) => (!rescaling
                 && self
                     .cfg
                     .reshard
-                    .is_none_or(|p| router.n_shards() * 2 <= p.max_shards)
-        } else if let Some(policy) = self.cfg.reshard {
-            let (len, capacity) = self.table.load_stats();
-            router.epoch() == *gate
-                && !self.table.split_in_progress()
-                && router.n_shards() * 2 <= policy.max_shards
-                && (policy.load_triggered(len, capacity)
-                    || policy.queue_triggered(self.pending_jobs_per_worker()))
-        } else {
-            false
+                    .is_none_or(|p| router.n_shards() * 2 <= p.max_shards))
+            .then_some(Rescale::Split),
+            Some(Rescale::Merge) => {
+                (!rescaling && router.n_shards() >= 2).then_some(Rescale::Merge)
+            }
+            None => self.policy_rescale(&router, gate, rescaling),
         };
-        if want_split {
+        if let Some(dir) = want {
             // In-flight batches address old-epoch shard indices; drain
             // them before any key re-routes.
             self.drain_workers();
             drained = true;
-            split_begun = self.table.split_shards();
+            began = match dir {
+                Rescale::Split => self.table.split_shards(),
+                Rescale::Merge => self.table.merge_shards(),
+            };
             router = self.table.current_router();
         }
         if router.epoch() != *gate {
@@ -605,22 +697,66 @@ impl Coordinator {
                 self.drain_workers();
             }
             *gate = router.epoch();
-            // Remap shard→worker affinity for the wider topology.
+            // Remap shard→worker affinity for the new topology.
             let want = self.cfg.n_workers.min(router.n_shards()).max(1);
             let mut pool = self.pool.write().unwrap_or_else(|e| e.into_inner());
             pool.grow_to(&self.table, want, &self.inflight);
         }
-        (router, split_begun)
+        (router, began)
+    }
+
+    /// Evaluate the [`ReshardPolicy`] triggers for one submit (under the
+    /// epoch gate). Splits win over merges; the merge side carries the
+    /// consecutive-qualifying-submit hysteresis streak.
+    fn policy_rescale(&self, router: &Router, gate: &u32, rescaling: bool) -> Option<Rescale> {
+        let policy = self.cfg.reshard?;
+        if router.epoch() != *gate || rescaling {
+            return None;
+        }
+        let (len, capacity) = self.table.load_stats();
+        if router.n_shards() * 2 <= policy.max_shards
+            && (policy.load_triggered(len, capacity)
+                || policy.queue_triggered(self.pending_jobs_per_worker()))
+        {
+            self.merge_streak.store(0, Ordering::Relaxed);
+            return Some(Rescale::Split);
+        }
+        let qualifies = policy.merge_below_load_factor > 0.0
+            && router.n_shards() >= 2
+            && router.n_shards() / 2 >= policy.min_shards.max(1)
+            && policy.merge_load_triggered(len, capacity, self.table.post_merge_capacity())
+            && policy.queue_idle(self.pending_jobs_per_worker());
+        if !qualifies {
+            self.merge_streak.store(0, Ordering::Relaxed);
+            return None;
+        }
+        let streak = self.merge_streak.load(Ordering::Relaxed) + 1;
+        if streak >= policy.merge_hysteresis.max(1) {
+            self.merge_streak.store(0, Ordering::Relaxed);
+            Some(Rescale::Merge)
+        } else {
+            self.merge_streak.store(streak, Ordering::Relaxed);
+            None
+        }
     }
 
     /// Begin a shard-count doubling through the cutover gate (drain →
     /// split → pool growth), regardless of the policy *triggers* —
     /// though the configured [`ReshardPolicy::max_shards`] ceiling
-    /// still applies. Returns false when a split is already in progress
-    /// or the ceiling would be exceeded.
+    /// still applies. Returns false when a split or merge is already in
+    /// progress or the ceiling would be exceeded.
     pub fn request_reshard(&self) -> bool {
         let mut gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
-        self.cutover_locked(&mut gate, true).1
+        self.cutover_locked(&mut gate, Some(Rescale::Split)).1
+    }
+
+    /// Begin a shard-count halving through the same gated cutover
+    /// (drain → merge → affinity remap), regardless of the policy
+    /// triggers and hysteresis. Returns false when a split or merge is
+    /// already in progress or only one shard remains.
+    pub fn request_merge(&self) -> bool {
+        let mut gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
+        self.cutover_locked(&mut gate, Some(Rescale::Merge)).1
     }
 
     /// Submit a batch to the persistent pool: run the epoch-cutover gate,
@@ -638,7 +774,7 @@ impl Coordinator {
         // the old epoch could be enqueued after the drain and write
         // moving keys into their parent behind the migration's back.
         let mut gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
-        let (router, _) = self.cutover_locked(&mut gate, false);
+        let (router, _) = self.cutover_locked(&mut gate, None);
         let parts = batch.partition(&router);
         let read_only = batch.read_only();
         let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
@@ -664,6 +800,19 @@ impl Coordinator {
                 .unwrap_or(32);
             for pair in self.table.split_pairs_pending() {
                 self.send_aux(&pool, pair % n_workers, Job::SplitMigrate { pair, stripes });
+            }
+        }
+        // Merge interleaving — the drain back down, bounded exactly like
+        // the split path: one MergeMigrate per unfinished pair rides
+        // ahead of the batch on the pair's parent-shard worker.
+        if self.table.merge_in_progress() {
+            let stripes = self
+                .cfg
+                .reshard
+                .map(|p| p.migration_stripes.max(1))
+                .unwrap_or(32);
+            for pair in self.table.merge_pairs_pending() {
+                self.send_aux(&pool, pair % n_workers, Job::MergeMigrate { pair, stripes });
             }
         }
         let mut per_worker: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
@@ -732,11 +881,14 @@ impl Coordinator {
         all_done
     }
 
-    /// Drive an in-progress shard-count split to completion on the
-    /// calling thread. Returns false when the split cannot complete (a
-    /// child pinned at its capacity ceiling).
+    /// Drive an in-progress shard-count rescale — split or merge — to
+    /// completion on the calling thread. Returns false when it cannot
+    /// complete (the receiving side pinned at its capacity ceiling). At
+    /// most one of the two is ever active; the other quiesce is a no-op.
     pub fn finish_resharding(&self) -> bool {
-        self.table.quiesce_split()
+        let split_done = self.table.quiesce_split();
+        let merge_done = self.table.quiesce_merge();
+        split_done && merge_done
     }
 
     /// Wait for a submitted batch and merge its results back into
@@ -1241,6 +1393,237 @@ mod tests {
             ..Default::default()
         };
         assert!(!off.queue_triggered(usize::MAX), "depth 0 disables the trigger");
+    }
+
+    #[test]
+    fn merge_trigger_predicates_enforce_structural_hysteresis() {
+        let p = ReshardPolicy {
+            trigger_load_factor: 0.6,
+            merge_below_load_factor: 0.25,
+            ..Default::default()
+        };
+        assert!(p.merge_load_triggered(400, 2048, 1024), "cooled load must trigger");
+        assert!(
+            !p.merge_load_triggered(512, 2048, 1024),
+            "at the watermark is not below it"
+        );
+        assert!(!p.merge_load_triggered(0, 0, 0), "empty capacity must not trigger");
+        // The structural guard: with a (mis)configured high watermark, a
+        // load whose post-merge level would cross the split trigger is
+        // refused even though it sits below merge_below.
+        let wide = ReshardPolicy {
+            trigger_load_factor: 0.6,
+            merge_below_load_factor: 0.5,
+            ..Default::default()
+        };
+        assert!(
+            !wide.merge_load_triggered(900, 2048, 1024),
+            "0.44 load landing at 0.88 of the parents would re-arm the 0.6 split trigger"
+        );
+        assert!(
+            wide.merge_load_triggered(500, 2048, 1024),
+            "0.24 landing at 0.49 is safe"
+        );
+        // The guard consults the PARENTS' real capacity, not half the
+        // aggregate: children floored above compacted parents make the
+        // halved estimate wildly optimistic.
+        assert!(
+            !wide.merge_load_triggered(500, 2048, 600),
+            "parents compacted to 600 slots cannot absorb 500 keys under a 0.6 trigger"
+        );
+        // Disabled by default.
+        assert!(!ReshardPolicy::default().merge_load_triggered(1, 2048, 1024));
+        // Queue-idle gate.
+        assert!(p.queue_idle(0));
+        assert!(!p.queue_idle(1));
+    }
+
+    #[test]
+    fn reshard_policy_merges_shards_when_load_cools() {
+        // Ramp → split, cool → merge, all policy-triggered: the inverse
+        // trigger must halve the shard count once the erased-down load
+        // sits below the watermark for `merge_hysteresis` idle submits.
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 4096,
+            n_shards: 2,
+            n_workers: 4,
+            max_batch: 128,
+            growth: None,
+            reshard: Some(ReshardPolicy {
+                trigger_load_factor: 0.5,
+                merge_below_load_factor: 0.2,
+                merge_hysteresis: 3,
+                min_shards: 2,
+                migration_stripes: 64,
+                max_shards: 8,
+                ..Default::default()
+            }),
+        });
+        let ks = distinct_keys(4096, 0xF1);
+        let r = c.run_stream(ks.iter().map(|&k| Op::Upsert(k, k ^ 6)));
+        assert!(r.iter().all(|&x| x == OpResult::Upserted(true)));
+        assert!(c.table.epoch() >= 1, "ramp never fired the split trigger");
+        assert!(c.finish_resharding());
+        let peak_shards = c.table.n_shards();
+        assert!(peak_shards >= 4);
+        // Cool down: erase 7/8 of the keys, then feed idle read batches
+        // so the hysteresis streak can accumulate.
+        let (keep, kill) = ks.split_at(512);
+        let r = c.run_stream(kill.iter().map(|&k| Op::Erase(k)));
+        assert!(r.iter().all(|&x| x == OpResult::Erased(true)));
+        for round in 0..40 {
+            let r = c.run_stream(keep.iter().take(32).map(|&k| Op::Query(k)));
+            assert!(
+                r.iter()
+                    .enumerate()
+                    .all(|(i, &x)| x == OpResult::Value(Some(keep[i] ^ 6))),
+                "round {round}: wrong read while cooling"
+            );
+            if c.table.n_shards() < peak_shards && !c.table.merge_in_progress() {
+                break;
+            }
+        }
+        assert!(c.finish_resharding(), "merge never completed");
+        assert!(
+            c.table.n_shards() < peak_shards,
+            "cooled load never halved the shard count"
+        );
+        assert!(c.table.n_shards() >= 2, "policy floor breached");
+        assert_eq!(c.table.len(), keep.len());
+        let reads = c.run_stream(keep.iter().map(|&k| Op::Query(k)));
+        for (i, &x) in reads.iter().enumerate() {
+            assert_eq!(x, OpResult::Value(Some(keep[i] ^ 6)), "query {i} after merge");
+        }
+    }
+
+    #[test]
+    fn borderline_load_does_not_oscillate_split_merge() {
+        // A load sitting between the merge watermark and the split
+        // trigger must leave the topology alone in BOTH directions, and
+        // a single qualifying submit (streak < hysteresis) must not
+        // merge.
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 8192,
+            n_shards: 4,
+            n_workers: 4,
+            max_batch: 128,
+            growth: None,
+            reshard: Some(ReshardPolicy {
+                trigger_load_factor: 0.6,
+                merge_below_load_factor: 0.25,
+                merge_hysteresis: 4,
+                min_shards: 2,
+                max_shards: 8,
+                ..Default::default()
+            }),
+        });
+        // ~35% load: above the 0.25 merge watermark, below the 0.6
+        // split trigger.
+        let ks = distinct_keys(8192 * 35 / 100, 0xF2);
+        c.run_stream(ks.iter().map(|&k| Op::Upsert(k, 1)));
+        let epoch0 = c.table.epoch();
+        let shards0 = c.table.n_shards();
+        for _ in 0..20 {
+            c.run_stream(ks.iter().take(16).map(|&k| Op::Query(k)));
+        }
+        assert_eq!(c.table.epoch(), epoch0, "borderline load flapped the topology");
+        assert_eq!(c.table.n_shards(), shards0);
+        // Now cool below the watermark in ONE directly-submitted batch:
+        // at its submit instant the load is still high, so it cannot
+        // count toward the streak.
+        let survivors = ks.len() / 8;
+        let erases = Batch {
+            ops: ks
+                .iter()
+                .skip(survivors)
+                .enumerate()
+                .map(|(i, &k)| (i as u64, Op::Erase(k)))
+                .collect(),
+        };
+        c.execute(&erases);
+        // Deterministic qualifying submits: wait for the inflight gauge
+        // to drain before each one, so the queue-idle gate is a fact
+        // rather than a race.
+        let drain_gauge = |c: &Coordinator| {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+            while c.pending_jobs_per_worker() > 0 && std::time::Instant::now() < deadline {
+                std::thread::yield_now();
+            }
+        };
+        let query_batch = || Batch {
+            ops: ks
+                .iter()
+                .take(8)
+                .enumerate()
+                .map(|(i, &k)| (i as u64, Op::Query(k)))
+                .collect(),
+        };
+        // Three qualifying submits: streak 3 < hysteresis 4 → no merge.
+        for _ in 0..3 {
+            drain_gauge(&c);
+            c.execute(&query_batch());
+        }
+        assert_eq!(
+            c.table.n_shards(),
+            shards0,
+            "merge fired before the hysteresis streak completed"
+        );
+        // The fourth qualifying submit completes the streak.
+        drain_gauge(&c);
+        c.execute(&query_batch());
+        assert!(
+            c.table.n_shards() < shards0,
+            "hysteresis never released the merge"
+        );
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.n_shards(), shards0 / 2);
+    }
+
+    #[test]
+    fn request_merge_cutover_preserves_pipelined_order() {
+        // A halving between two pipelined dependent batches: the cutover
+        // drain must let the second batch (partitioned under the halved
+        // epoch) observe everything the first wrote — the mirror of the
+        // request_reshard ordering test.
+        let c = coord();
+        let ks = distinct_keys(200, 0xF3);
+        let writes = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (i as u64, Op::Upsert(k, i as u64 + 9)))
+                .collect(),
+        };
+        let p1 = c.submit(&writes);
+        assert!(c.request_merge(), "manual merge must start");
+        assert!(!c.request_merge(), "second merge while draining must refuse");
+        assert!(!c.request_reshard(), "no split while a merge drains");
+        assert_eq!(c.table.n_shards(), 2);
+        let reads = Batch {
+            ops: ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| (200 + i as u64, Op::Query(k)))
+                .collect(),
+        };
+        let p2 = c.submit(&reads);
+        let r1 = c.collect(p1);
+        let r2 = c.collect(p2);
+        assert!(r1.iter().all(|&(_, r)| r == OpResult::Upserted(true)));
+        for (i, &(seq, r)) in r2.iter().enumerate() {
+            assert_eq!(seq, 200 + i as u64, "arrival order lost across the halving");
+            assert_eq!(r, OpResult::Value(Some(i as u64 + 9)), "read {i} missed a write");
+        }
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.n_shards(), 2);
+        assert_eq!(c.table.len(), 200);
+        // And back up: the pool grew with the original topology, so a
+        // fresh split restores it.
+        assert!(c.request_reshard());
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.n_shards(), 4);
     }
 
     #[test]

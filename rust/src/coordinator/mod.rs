@@ -69,11 +69,24 @@
 //! toward the configured width and shard→worker affinity remaps with the
 //! epoch. `warpspeed reshard` / [`crate::bench::reshard`] exhibits it.
 //!
+//! The topology also scales back DOWN: when aggregate load falls below
+//! [`ReshardPolicy::merge_below_load_factor`] with an idle queue for
+//! [`ReshardPolicy::merge_hysteresis`] consecutive submits, the same
+//! gated cutover halves the shard count ([`ShardedTable::merge_shards`])
+//! — every child `i + N` drains back into its parent `i` (the mirror of
+//! the split property, [`Router::merges_down`]) and the children's
+//! capacity is reclaimed when the last pair seals. Shards themselves
+//! compact too: [`crate::tables::GrowthPolicy::shrink_below`] arms a ½×
+//! low-watermark shrink through the growth machinery run in reverse.
+//! `warpspeed shrink` / [`crate::bench::shrink`] exhibits the full
+//! lifecycle.
+//!
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches
 //!   the same shard (required for per-key linearization); across an
 //!   epoch change a key either keeps its shard or moves to exactly that
-//!   shard's split child;
+//!   shard's split child (splits), or back to exactly its parent
+//!   (merges);
 //! * a batch partition preserves per-key operation order, run splitting
 //!   preserves sub-batch order, and shard-affine FIFO workers preserve
 //!   sub-batch order across pipelined batches, so per-key order survives

@@ -47,6 +47,33 @@
 //! quiesced, and a final sweep moves every remaining mover. When all
 //! pairs seal, the topology flips to the new epoch.
 //!
+//! ## Merges: the epoch machinery in reverse
+//!
+//! [`ShardedTable::merge_shards`] halves the shard count online — the
+//! inverse of a split, for traffic that cools off. Under the halved
+//! router ([`Router::halved`]) every key of child `i + N` lands back in
+//! parent `i` and stay-keys are untouched (the mirror of the split
+//! property, see [`Router::merges_down`]). While a pair drains:
+//!
+//! * **Queries** for mover keys read **old-then-new**, which now means
+//!   *child-then-parent*: a mover lives in the child until moved, and
+//!   every move seeds the parent before erasing the child copy.
+//! * **Upserts land in the new epoch's shard** — the parent. A mover's
+//!   child copy is moved over first (seed-then-erase under the key's
+//!   stripe lock), then the policy applies against the parent exactly
+//!   once, so merge policies see the pre-merge value. Stay-key upserts
+//!   run lock-free against the parent: unlike a split (whose sealing
+//!   sweep scans the PARENT and must exclude displacing inserts), a
+//!   merge's sweep scans the CHILD, which no upsert ever touches again.
+//! * **Erases hit both** sides of the pair under the stripe lock.
+//! * **The migrator** claims stripe ranges and drains the child's keys
+//!   in those stripes (every child key is a mover — no bit filter).
+//!
+//! Sealing locks all stripes, quiesces the child's own growth
+//! migration, and drains every straggler; when all pairs seal, the
+//! topology flips to the halved epoch and the children are dropped —
+//! this is the moment the merged-away capacity is actually reclaimed.
+//!
 //! Callers that partition work by shard index ([`ShardedTable`]'s
 //! `*_bulk_on` entry points) must partition under
 //! [`ShardedTable::current_router`] and drain in-flight index-addressed
@@ -75,11 +102,25 @@ const ROUTE_SEED: u64 = 0x7A57_1CE5_0C0D_E001;
 /// statistical slice of each shard's keys.
 const SPLIT_STRIPES: usize = 256;
 
-/// Routing stripe of a key: bits 40..48 of the routing hash (the shard
-/// mask uses the low bits; [`Router::doubled`] asserts they never meet).
+/// The routing hash — computed ONCE per key on migration scan paths and
+/// fed to both the stripe and the shard-bit predicates below.
+#[inline(always)]
+fn route_hash(key: u64) -> u64 {
+    seeded(key, ROUTE_SEED)
+}
+
+/// Routing stripe from a precomputed routing hash: bits 40..48 (the
+/// shard mask uses the low bits; [`Router::doubled`] asserts they never
+/// meet).
+#[inline(always)]
+fn stripe_of_hash(h: u64) -> usize {
+    ((h >> 40) as usize) & (SPLIT_STRIPES - 1)
+}
+
+/// Routing stripe of a key.
 #[inline(always)]
 fn stripe_of(key: u64) -> usize {
-    ((seeded(key, ROUTE_SEED) >> 40) as usize) & (SPLIT_STRIPES - 1)
+    stripe_of_hash(route_hash(key))
 }
 
 /// Pure, versioned key→shard map: a power-of-two mask plus the epoch
@@ -129,6 +170,32 @@ impl Router {
     pub fn splits_up(&self, key: u64) -> bool {
         seeded(key, ROUTE_SEED) & self.n_shards as u64 != 0
     }
+
+    /// The previous epoch's topology width with the next version number:
+    /// half the shards. The inverse of [`Router::doubled`] — epochs only
+    /// ever advance (they are versions, not a height), so halving still
+    /// increments the epoch.
+    pub fn halved(&self) -> Router {
+        assert!(self.n_shards >= 2, "cannot halve a single shard");
+        Router {
+            n_shards: self.n_shards / 2,
+            epoch: self.epoch + 1,
+        }
+    }
+
+    /// The top routing-hash bit this router consults that [`Router::halved`]
+    /// drops: true when `key` currently routes to the upper half — a
+    /// merge's child half — and therefore lands in
+    /// `shard_of(key) - n_shards/2` under the halved router; false for a
+    /// stay key, whose shard index is untouched. The mirror of
+    /// [`Router::splits_up`] (property-tested below: for every key,
+    /// `halved().shard_of` equals `shard_of` minus exactly that offset,
+    /// or `shard_of` itself).
+    #[inline(always)]
+    pub fn merges_down(&self, key: u64) -> bool {
+        debug_assert!(self.n_shards >= 2);
+        seeded(key, ROUTE_SEED) & (self.n_shards as u64 / 2) != 0
+    }
 }
 
 /// One old shard's split-migration progress.
@@ -175,6 +242,25 @@ struct Split {
     moved: AtomicU64,
 }
 
+/// One in-progress shard-count halving (epoch e → e+1), the split run in
+/// reverse: children drain back into their parents.
+struct Merge {
+    /// The doubled-width router being retired (2N shards).
+    from: Router,
+    /// The halved router (N shards) traffic already partitions under.
+    to: Router,
+    /// All 2N shard handles: `[0..N)` the parents (which keep serving
+    /// and absorb their child's keys), `[N..2N)` the children being
+    /// drained. The children are dropped — capacity reclaimed — when
+    /// the topology flips.
+    shards: Vec<Arc<dyn ConcurrentMap>>,
+    /// `pairs[i]` tracks the drain of child `i + N` into parent `i`.
+    pairs: Vec<PairState>,
+    complete_pairs: AtomicUsize,
+    /// Keys moved child→parent in this merge (foreground + migrator).
+    moved: AtomicU64,
+}
+
 enum Topology {
     /// Single routing epoch, no split in progress.
     Normal {
@@ -183,6 +269,9 @@ enum Topology {
     },
     /// Old and new routing epochs live simultaneously, migration running.
     Splitting(Arc<Split>),
+    /// Halved and doubled routing epochs live simultaneously, children
+    /// draining back into their parents.
+    Merging(Arc<Merge>),
 }
 
 /// A table design sharded across independent instances, with online
@@ -195,7 +284,10 @@ pub struct ShardedTable {
     topo: RwLock<Topology>,
     /// Completed shard-count doublings over this table's lifetime.
     splits: AtomicU64,
-    /// Keys moved parent→child across all splits.
+    /// Completed shard-count halvings over this table's lifetime.
+    merges: AtomicU64,
+    /// Keys moved parent→child across all splits, plus child→parent
+    /// across all merges.
     moved: AtomicU64,
 }
 
@@ -234,6 +326,7 @@ impl ShardedTable {
                 shards: Vec::new(),
             }),
             splits: AtomicU64::new(0),
+            merges: AtomicU64::new(0),
             moved: AtomicU64::new(0),
         };
         let shards = (0..n_shards).map(|_| this.build_shard(per_shard)).collect();
@@ -267,6 +360,7 @@ impl ShardedTable {
         match &*self.read_topo() {
             Topology::Normal { router, .. } => *router,
             Topology::Splitting(s) => s.to,
+            Topology::Merging(m) => m.to,
         }
     }
 
@@ -280,12 +374,26 @@ impl ShardedTable {
         self.current_router().n_shards()
     }
 
-    /// Handle to shard `idx`. Indices are append-only across splits, so
-    /// an index from any earlier epoch still resolves to the same table.
+    /// Handle to shard `idx`. Indices are append-only across *splits*,
+    /// so an index from an earlier epoch usually still resolves — but a
+    /// sealed MERGE retires its child indices (the list shrinks for the
+    /// first time). Callers holding an index across an epoch boundary
+    /// (queued index-addressed jobs) must use
+    /// [`ShardedTable::try_shard_handle`] instead; this panics on a
+    /// retired index like any out-of-bounds access.
     pub fn shard_handle(&self, idx: usize) -> Arc<dyn ConcurrentMap> {
+        self.try_shard_handle(idx)
+            .unwrap_or_else(|| panic!("shard index {idx} was retired by a merge"))
+    }
+
+    /// Bounds-checked [`ShardedTable::shard_handle`]: `None` when `idx`
+    /// is beyond the current topology's shard list — i.e. a child index
+    /// that a sealed merge has retired since the caller obtained it.
+    pub fn try_shard_handle(&self, idx: usize) -> Option<Arc<dyn ConcurrentMap>> {
         match &*self.read_topo() {
-            Topology::Normal { shards, .. } => Arc::clone(&shards[idx]),
-            Topology::Splitting(s) => Arc::clone(&s.shards[idx]),
+            Topology::Normal { shards, .. } => shards.get(idx).cloned(),
+            Topology::Splitting(s) => s.shards.get(idx).cloned(),
+            Topology::Merging(m) => m.shards.get(idx).cloned(),
         }
     }
 
@@ -305,6 +413,9 @@ impl ShardedTable {
         match &*g {
             Topology::Normal { shards, .. } => f(shards),
             Topology::Splitting(s) => f(&s.shards),
+            // Parents AND still-draining children: aggregate metrics see
+            // the transient footprint until the flip reclaims it.
+            Topology::Merging(m) => f(&m.shards),
         }
     }
 
@@ -336,6 +447,18 @@ impl ShardedTable {
                     Self::upsert_staying(s, pair, key, val, op)
                 }
             }
+            Topology::Merging(m) => {
+                let pair = m.to.shard_of(key);
+                if m.from.merges_down(key) {
+                    self.upsert_merging(m, pair, key, val, op)
+                } else {
+                    // Stay-key upserts run lock-free against the parent:
+                    // the merge's sealing sweep scans the CHILD, which a
+                    // parent insert can never displace into (contrast
+                    // `upsert_staying` on the split path).
+                    m.shards[pair].upsert(key, val, op)
+                }
+            }
         }
     }
 
@@ -354,6 +477,18 @@ impl ShardedTable {
                     s.shards[pair].query(key)
                 }
             }
+            // Old-then-new is child-then-parent on a merge: a mover key
+            // lives in the child until moved, and moves seed the parent
+            // before erasing the child copy.
+            Topology::Merging(m) => {
+                let pair = m.to.shard_of(key);
+                if m.from.merges_down(key) {
+                    let n = m.to.n_shards();
+                    m.shards[pair + n].query(key).or_else(|| m.shards[pair].query(key))
+                } else {
+                    m.shards[pair].query(key)
+                }
+            }
         }
     }
 
@@ -369,6 +504,14 @@ impl ShardedTable {
                     // Stay-key erases never displace entries, so they run
                     // without the stripe lock (like queries).
                     s.shards[pair].erase(key)
+                }
+            }
+            Topology::Merging(m) => {
+                let pair = m.to.shard_of(key);
+                if m.from.merges_down(key) {
+                    Self::erase_merging(m, pair, key)
+                } else {
+                    m.shards[pair].erase(key)
                 }
             }
         }
@@ -403,6 +546,19 @@ impl ShardedTable {
                     }
                 }
             }
+            // Partitioned under the halved router, one sub-batch mixes
+            // the parent's own keys with its child's movers; route each
+            // key per its dropped routing bit.
+            Topology::Merging(m) => {
+                out.reserve(pairs.len());
+                for &(k, v) in pairs {
+                    out.push(if m.from.merges_down(k) {
+                        self.upsert_merging(m, idx, k, v, op)
+                    } else {
+                        m.shards[idx].upsert(k, v, op)
+                    });
+                }
+            }
         }
     }
 
@@ -432,6 +588,42 @@ impl ShardedTable {
                     s.shards[idx].query_bulk(keys, out);
                 }
             }
+            Topology::Merging(m) => {
+                // Mover keys must read the CHILD first (old-then-new:
+                // reading the parent first could miss a key moved and
+                // child-erased between the two reads). Ask the child for
+                // the movers, then one parent bulk call answers the stay
+                // keys and the mover misses together.
+                let n = m.to.n_shards();
+                let base = out.len();
+                out.resize(base + keys.len(), None);
+                let mover_idx: Vec<usize> = (0..keys.len())
+                    .filter(|&i| m.from.merges_down(keys[i]))
+                    .collect();
+                let mut parent_idx: Vec<usize> =
+                    (0..keys.len()).filter(|&i| !m.from.merges_down(keys[i])).collect();
+                if !mover_idx.is_empty() {
+                    let mover_keys: Vec<u64> = mover_idx.iter().map(|&i| keys[i]).collect();
+                    let mut sub: Vec<Option<u64>> = Vec::with_capacity(mover_keys.len());
+                    m.shards[idx + n].query_bulk(&mover_keys, &mut sub);
+                    for (j, &i) in mover_idx.iter().enumerate() {
+                        match sub[j] {
+                            Some(v) => out[base + i] = Some(v),
+                            None => parent_idx.push(i), // moved already
+                        }
+                    }
+                }
+                if parent_idx.is_empty() {
+                    return;
+                }
+                parent_idx.sort_unstable(); // keep the shard's scan order deterministic
+                let parent_keys: Vec<u64> = parent_idx.iter().map(|&i| keys[i]).collect();
+                let mut sub: Vec<Option<u64>> = Vec::with_capacity(parent_keys.len());
+                m.shards[idx].query_bulk(&parent_keys, &mut sub);
+                for (j, &i) in parent_idx.iter().enumerate() {
+                    out[base + i] = sub[j];
+                }
+            }
         }
     }
 
@@ -450,6 +642,16 @@ impl ShardedTable {
                     s.shards[idx].erase_bulk(keys, out);
                 }
             }
+            Topology::Merging(m) => {
+                out.reserve(keys.len());
+                for &k in keys {
+                    out.push(if m.from.merges_down(k) {
+                        Self::erase_merging(m, idx, k)
+                    } else {
+                        m.shards[idx].erase(k)
+                    });
+                }
+            }
         }
     }
 
@@ -463,6 +665,9 @@ impl ShardedTable {
             Topology::Normal { shards, .. } => Some(Arc::clone(&shards[idx])),
             Topology::Splitting(s) if idx < s.from.n_shards() => Some(Arc::clone(&s.shards[idx])),
             Topology::Splitting(_) => None,
+            // A merge parent's routed keys include its child's movers,
+            // which need child-then-parent reads — never direct.
+            Topology::Merging(_) => None,
         }
     }
 
@@ -471,28 +676,46 @@ impl ShardedTable {
     // ---------------------------------------------------------------
 
     /// The one move primitive every migration path shares: seed the
-    /// child with `(key, val)` (insert-if-unique, so a fresher child
-    /// value wins), and only then erase the parent copy — the order
-    /// that keeps the key continuously visible to lock-free
-    /// old-then-new readers. Returns false when the child rejected the
-    /// seed (the parent copy stays put); counts the move on success.
-    /// Caller holds the key's stripe lock (or the whole range).
-    fn seed_then_erase(&self, s: &Split, pair: usize, key: u64, val: u64) -> bool {
-        let n = s.from.n_shards();
-        if s.shards[pair + n].upsert(key, val, &UpsertOp::InsertIfUnique) == UpsertResult::Full {
+    /// destination with `(key, val)` (insert-if-unique, so a fresher
+    /// destination value wins), and only then erase the source copy —
+    /// the order that keeps the key continuously visible to lock-free
+    /// old-then-new readers. Returns false when the destination
+    /// rejected the seed (the source copy stays put); counts the move
+    /// on success. Caller holds the key's stripe lock (or the whole
+    /// range). Splits move parent→child; merges move child→parent.
+    fn move_between(
+        &self,
+        src: &dyn ConcurrentMap,
+        dst: &dyn ConcurrentMap,
+        phase_moved: &AtomicU64,
+        key: u64,
+        val: u64,
+    ) -> bool {
+        if dst.upsert(key, val, &UpsertOp::InsertIfUnique) == UpsertResult::Full {
             return false;
         }
-        // Count the move only when the parent erase actually hit: the
-        // migrator's lock-free parent snapshot can yield one key twice
+        // Count the move only when the source erase actually hit: the
+        // migrator's lock-free source snapshot can yield one key twice
         // (a mid-growth GrowableMap holds a mover in old AND successor
-        // transiently; a CuckooHT stay-insert can displace a mover
-        // between buckets mid-scan), and the duplicate's seed is an
-        // idempotent no-op that must not inflate `moved_keys`.
-        if s.shards[pair].erase(key) {
-            s.moved.fetch_add(1, Ordering::Relaxed);
+        // transiently; a CuckooHT stay-insert can displace a split
+        // mover between buckets mid-scan), and the duplicate's seed is
+        // an idempotent no-op that must not inflate `moved_keys`.
+        if src.erase(key) {
+            phase_moved.fetch_add(1, Ordering::Relaxed);
             self.moved.fetch_add(1, Ordering::Relaxed);
         }
         true
+    }
+
+    fn seed_then_erase(&self, s: &Split, pair: usize, key: u64, val: u64) -> bool {
+        let n = s.from.n_shards();
+        self.move_between(
+            s.shards[pair].as_ref(),
+            s.shards[pair + n].as_ref(),
+            &s.moved,
+            key,
+            val,
+        )
     }
 
     /// Move `key`'s parent copy (if any) to the child, under the key's
@@ -548,6 +771,61 @@ impl ShardedTable {
         hit_old || hit_new
     }
 
+    // ---------------------------------------------------------------
+    // Merge protocol internals (the split protocol in reverse — see
+    // the module docs; `pair` is the PARENT index, the child is
+    // `pair + N` where N is the halved shard count).
+    // ---------------------------------------------------------------
+
+    /// Move `key`'s child copy (if any) to the parent, under the key's
+    /// already-held stripe lock. Returns false when the parent rejected
+    /// the seed — the caller must bail WITHOUT applying its operation,
+    /// or merge policies would lose the pre-merge value.
+    fn move_merge_copy(&self, m: &Merge, pair: usize, key: u64) -> bool {
+        let n = m.to.n_shards();
+        match m.shards[pair + n].query(key) {
+            Some(ov) => self.move_between(
+                m.shards[pair + n].as_ref(),
+                m.shards[pair].as_ref(),
+                &m.moved,
+                key,
+                ov,
+            ),
+            None => true,
+        }
+    }
+
+    fn upsert_merging(
+        &self,
+        m: &Merge,
+        pair: usize,
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+    ) -> UpsertResult {
+        let st = stripe_of(key);
+        m.pairs[pair].locks.lock(st);
+        let r = if self.move_merge_copy(m, pair, key) {
+            m.shards[pair].upsert(key, val, op)
+        } else {
+            // Blocked seed: the parent is saturated (growable parents
+            // grow inside their own upsert, so this means
+            // pinned-at-ceiling).
+            UpsertResult::Full
+        };
+        m.pairs[pair].locks.unlock(st);
+        r
+    }
+
+    fn erase_merging(m: &Merge, pair: usize, key: u64) -> bool {
+        let st = stripe_of(key);
+        m.pairs[pair].locks.lock(st);
+        let hit_child = m.shards[pair + m.to.n_shards()].erase(key);
+        let hit_parent = m.shards[pair].erase(key);
+        m.pairs[pair].locks.unlock(st);
+        hit_child || hit_parent
+    }
+
     /// Begin a shard-count doubling. Children are built outside the
     /// topology write lock (allocation scales with capacity and must not
     /// stall every op). Returns false when a split is already running or
@@ -560,7 +838,7 @@ impl ShardedTable {
                     *router,
                     shards.iter().map(|s| s.capacity()).collect::<Vec<_>>(),
                 ),
-                Topology::Splitting(_) => return false,
+                _ => return false, // a split or merge is already running
             }
         };
         // Each child is provisioned at its parent's current capacity, so
@@ -597,10 +875,10 @@ impl ShardedTable {
     /// still running; empty when no split is in progress.
     pub fn split_pairs_pending(&self) -> Vec<usize> {
         match &*self.read_topo() {
-            Topology::Normal { .. } => Vec::new(),
             Topology::Splitting(s) => (0..s.pairs.len())
                 .filter(|&i| !s.pairs[i].complete.load(Ordering::Acquire))
                 .collect(),
+            _ => Vec::new(),
         }
     }
 
@@ -624,7 +902,7 @@ impl ShardedTable {
             let g = self.read_topo();
             match &*g {
                 Topology::Splitting(s) => Arc::clone(s),
-                Topology::Normal { .. } => return 0,
+                _ => return 0,
             }
         };
         if pair >= s.pairs.len() || s.pairs[pair].complete.load(Ordering::Acquire) {
@@ -650,26 +928,31 @@ impl ShardedTable {
     /// Move the parent's movers whose stripe is in `[start, end)` to the
     /// child, under the range's stripe locks.
     ///
-    /// Cost note: each claim snapshots via a full `for_each_entry` scan
-    /// of the parent filtered to the claimed stripes, so a "bounded"
-    /// claim bounds *keys moved and lock-hold footprint*, not scan work
-    /// — one pair costs `SPLIT_STRIPES / migration_stripes` parent
-    /// scans plus the sealing sweep (same recorded caveat as the
-    /// default growth migration iterator). Caching movers across claims
+    /// Cost note: each claim snapshots the parent through
+    /// [`crate::tables::ConcurrentMap::collect_stripe_range`] filtered
+    /// to the claimed stripes, so a "bounded" claim bounds *keys moved
+    /// and lock-hold footprint*, not scan work — one pair costs
+    /// `SPLIT_STRIPES / migration_stripes` parent scans plus the
+    /// sealing sweep (same recorded caveat as the default growth
+    /// migration iterator), though the predicate hashes each key once
+    /// and designs with walkable storage (ChainingHT) run the scan as
+    /// one raw inline-filtered pass. Caching movers across claims
     /// would be wrong: a cached entry whose key foreground traffic
-    /// erased in the meantime would be resurrected by the move. A
-    /// per-design native stripe iterator is the recorded follow-up.
+    /// erased in the meantime would be resurrected by the move.
     fn migrate_stripes(&self, s: &Arc<Split>, pair: usize, start: usize, end: usize) -> usize {
         let p = &s.pairs[pair];
         for st in start..end {
             p.locks.lock(st);
         }
+        let bit = s.from.n_shards() as u64;
         let mut entries: Vec<(u64, u64)> = Vec::new();
-        s.shards[pair].for_each_entry(&mut |k, v| {
-            if s.from.splits_up(k) && (start..end).contains(&stripe_of(k)) {
-                entries.push((k, v));
-            }
-        });
+        s.shards[pair].collect_stripe_range(
+            &|k| {
+                let h = route_hash(k);
+                h & bit != 0 && (start..end).contains(&stripe_of_hash(h))
+            },
+            &mut entries,
+        );
         let mut moved = 0usize;
         for &(k, v) in &entries {
             // A Full seed leaves the entry in the parent; the sealing
@@ -707,12 +990,9 @@ impl ShardedTable {
         // growth cycle can start; drain any in-progress one so the scan
         // below cannot race an internal old→successor relocation.
         let quiesced = s.shards[pair].quiesce_migration();
+        let bit = s.from.n_shards() as u64;
         let mut movers: Vec<(u64, u64)> = Vec::new();
-        s.shards[pair].for_each_entry(&mut |k, v| {
-            if s.from.splits_up(k) {
-                movers.push((k, v));
-            }
-        });
+        s.shards[pair].collect_stripe_range(&|k| route_hash(k) & bit != 0, &mut movers);
         let mut moved = 0usize;
         let mut blocked = false;
         for &(k, v) in &movers {
@@ -748,15 +1028,20 @@ impl ShardedTable {
         moved
     }
 
-    /// Drive an in-progress split to completion from the calling thread
-    /// (quiesce helper for benches/tests/shutdown). Returns true when no
-    /// split remains; false when it cannot complete (a child pinned at
-    /// its capacity ceiling) — operations stay correct either way,
-    /// merely split across the pair.
-    pub fn quiesce_split(&self) -> bool {
-        let complete_count = |s: &Split| {
-            s.pairs
-                .iter()
+    /// The stall-bounded drain loop split and merge quiesce share:
+    /// `snap` extracts the live phase (None once it has ended), `pairs`
+    /// its pair states, `drive` advances one pair from this thread.
+    /// A stall = a full pass with no keys moved, no pair sealed, and no
+    /// foreign claim/sweep in flight — the pinned-at-ceiling shape the
+    /// bound exists for.
+    fn drain_pairs<T>(
+        &self,
+        snap: impl Fn(&Topology) -> Option<Arc<T>>,
+        pairs: impl Fn(&T) -> &[PairState],
+        drive: impl Fn(usize) -> usize,
+    ) -> bool {
+        let complete_count = |ps: &[PairState]| {
+            ps.iter()
                 .filter(|p| p.complete.load(Ordering::Acquire))
                 .count()
         };
@@ -764,15 +1049,16 @@ impl ShardedTable {
         loop {
             let s = {
                 let g = self.read_topo();
-                match &*g {
-                    Topology::Splitting(s) => Arc::clone(s),
-                    Topology::Normal { .. } => return true,
+                match snap(&g) {
+                    Some(s) => s,
+                    None => return true,
                 }
             };
-            let before = complete_count(&s);
+            let ps = pairs(&*s);
+            let before = complete_count(ps);
             let mut moved = 0usize;
             let mut foreign_progress = false;
-            for (pair, p) in s.pairs.iter().enumerate() {
+            for (pair, p) in ps.iter().enumerate() {
                 if p.complete.load(Ordering::Acquire) {
                     continue;
                 }
@@ -788,23 +1074,20 @@ impl ShardedTable {
                     foreign_progress = true;
                     continue;
                 }
-                let drove = self.drive_split(pair, usize::MAX);
+                let drove = drive(pair);
                 moved += drove;
                 if drove == 0
                     && !p.complete.load(Ordering::Acquire)
                     && p.done.load(Ordering::Acquire) < SPLIT_STRIPES
                 {
                     // Every stripe is claimed but some claimant (a
-                    // worker's bounded SplitMigrate job mid-scan) has
-                    // not finished counting its range — in-flight
-                    // progress we cannot observe as moves either.
+                    // worker's bounded migrate job mid-scan) has not
+                    // finished counting its range — in-flight progress
+                    // we cannot observe as moves either.
                     foreign_progress = true;
                 }
             }
-            // A stall = a full pass with no keys moved, no pair sealed,
-            // and no foreign claim/sweep in flight — the
-            // pinned-at-ceiling shape this bound exists for.
-            if moved > 0 || foreign_progress || complete_count(&s) > before {
+            if moved > 0 || foreign_progress || complete_count(ps) > before {
                 stalls = 0;
             } else {
                 stalls += 1;
@@ -814,6 +1097,221 @@ impl ShardedTable {
             }
             std::thread::yield_now();
         }
+    }
+
+    /// Drive an in-progress split to completion from the calling thread
+    /// (quiesce helper for benches/tests/shutdown). Returns true when no
+    /// split remains; false when it cannot complete (a child pinned at
+    /// its capacity ceiling) — operations stay correct either way,
+    /// merely split across the pair.
+    pub fn quiesce_split(&self) -> bool {
+        self.drain_pairs(
+            |t| match t {
+                Topology::Splitting(s) => Some(Arc::clone(s)),
+                _ => None,
+            },
+            |s| s.pairs.as_slice(),
+            |pair| self.drive_split(pair, usize::MAX),
+        )
+    }
+
+    // ---------------------------------------------------------------
+    // Shard-count halving (merges) — the split drivers in reverse.
+    // ---------------------------------------------------------------
+
+    /// Begin a shard-count halving: children `[N..2N)` drain back into
+    /// their parents `[0..N)` (the module docs describe the protocol).
+    /// Nothing is allocated — the parents already exist, and the
+    /// children's capacity is reclaimed when the last pair seals and the
+    /// topology flips to the halved router. Returns false when a single
+    /// shard remains, a split or merge is already running, or another
+    /// thread won the install race.
+    pub fn merge_shards(&self) -> bool {
+        let mut g = self.write_topo();
+        let (from, shards) = match &*g {
+            Topology::Normal { router, shards } if router.n_shards() >= 2 => {
+                (*router, shards.clone())
+            }
+            _ => return false,
+        };
+        let n = from.n_shards() / 2;
+        *g = Topology::Merging(Arc::new(Merge {
+            from,
+            to: from.halved(),
+            shards,
+            pairs: (0..n).map(|_| PairState::new()).collect(),
+            complete_pairs: AtomicUsize::new(0),
+            moved: AtomicU64::new(0),
+        }));
+        true
+    }
+
+    /// True while a shard-count halving is draining children.
+    pub fn merge_in_progress(&self) -> bool {
+        matches!(&*self.read_topo(), Topology::Merging(_))
+    }
+
+    /// Pair indices (parent shard indices under the halved router) whose
+    /// merge drain is still running; empty when no merge is in progress.
+    pub fn merge_pairs_pending(&self) -> Vec<usize> {
+        match &*self.read_topo() {
+            Topology::Merging(m) => (0..m.pairs.len())
+                .filter(|&i| !m.pairs[i].complete.load(Ordering::Acquire))
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Completed shard-count halvings.
+    pub fn merge_events(&self) -> u64 {
+        self.merges.load(Ordering::Relaxed)
+    }
+
+    /// Advance pair `pair`'s merge drain by up to `max_stripes` routing
+    /// stripes, returning keys moved — [`ShardedTable::drive_split`]'s
+    /// mirror, driven by the coordinator's `Job::MergeMigrate` between
+    /// batches. No-op when no merge is running or the pair is sealed.
+    pub fn drive_merge(&self, pair: usize, max_stripes: usize) -> usize {
+        let m = {
+            let g = self.read_topo();
+            match &*g {
+                Topology::Merging(m) => Arc::clone(m),
+                _ => return 0,
+            }
+        };
+        if pair >= m.pairs.len() || m.pairs[pair].complete.load(Ordering::Acquire) {
+            return 0;
+        }
+        let p = &m.pairs[pair];
+        let mut moved = 0usize;
+        let want = max_stripes.clamp(1, SPLIT_STRIPES);
+        let start = p.cursor.fetch_add(want, Ordering::Relaxed);
+        if start < SPLIT_STRIPES {
+            let end = (start + want).min(SPLIT_STRIPES);
+            moved += self.migrate_merge_stripes(&m, pair, start, end);
+            p.done.fetch_add(end - start, Ordering::AcqRel);
+        }
+        if p.done.load(Ordering::Acquire) == SPLIT_STRIPES {
+            moved += self.try_seal_merge(&m, pair);
+        }
+        moved
+    }
+
+    /// Move the child's keys whose stripe is in `[start, end)` to the
+    /// parent, under the range's stripe locks. Every child key is a
+    /// mover (the mirror property), so the scan predicate is the stripe
+    /// range alone — no routing-bit filter.
+    fn migrate_merge_stripes(&self, m: &Arc<Merge>, pair: usize, start: usize, end: usize) -> usize {
+        let p = &m.pairs[pair];
+        for st in start..end {
+            p.locks.lock(st);
+        }
+        let n = m.to.n_shards();
+        let mut entries: Vec<(u64, u64)> = Vec::new();
+        m.shards[pair + n].collect_stripe_range(
+            &|k| (start..end).contains(&stripe_of(k)),
+            &mut entries,
+        );
+        let mut moved = 0usize;
+        for &(k, v) in &entries {
+            // A Full seed (parent pinned at its ceiling) leaves the
+            // entry in the child; the sealing sweep retries it.
+            if self.move_between(
+                m.shards[pair + n].as_ref(),
+                m.shards[pair].as_ref(),
+                &m.moved,
+                k,
+                v,
+            ) {
+                moved += 1;
+            }
+        }
+        for st in (start..end).rev() {
+            p.locks.unlock(st);
+        }
+        moved
+    }
+
+    /// Sealing sweep for one merge pair: elected by CAS, locks every
+    /// stripe (excluding mover upserts and erases — the only foreground
+    /// ops that touch the child), quiesces the child's own growth
+    /// migration so its entries stop relocating, then drains every
+    /// remaining child key in one pass. Upserts never insert into a
+    /// merge child, so — unlike the split sweep's parent scan — no
+    /// CuckooHT displacement can race this scan at all. When the last
+    /// pair seals, the topology flips to the halved router and the
+    /// children are dropped: the capacity a cooled-down workload no
+    /// longer needs is reclaimed here.
+    fn try_seal_merge(&self, m: &Arc<Merge>, pair: usize) -> usize {
+        let p = &m.pairs[pair];
+        if p.done
+            .compare_exchange(SPLIT_STRIPES, usize::MAX, Ordering::AcqRel, Ordering::Relaxed)
+            .is_err()
+        {
+            return 0;
+        }
+        for st in 0..SPLIT_STRIPES {
+            p.locks.lock(st);
+        }
+        let n = m.to.n_shards();
+        let quiesced = m.shards[pair + n].quiesce_migration();
+        let mut movers: Vec<(u64, u64)> = Vec::new();
+        m.shards[pair + n].collect_stripe_range(&|_| true, &mut movers);
+        let mut moved = 0usize;
+        let mut blocked = false;
+        for &(k, v) in &movers {
+            if self.move_between(
+                m.shards[pair + n].as_ref(),
+                m.shards[pair].as_ref(),
+                &m.moved,
+                k,
+                v,
+            ) {
+                moved += 1;
+            } else {
+                blocked = true;
+            }
+        }
+        let sealed = quiesced && !blocked;
+        if sealed {
+            p.complete.store(true, Ordering::Release);
+        }
+        for st in (0..SPLIT_STRIPES).rev() {
+            p.locks.unlock(st);
+        }
+        if !sealed {
+            // Re-open: a later drive_merge call re-elects the sweep.
+            p.resets.fetch_add(1, Ordering::AcqRel);
+            p.done.store(SPLIT_STRIPES, Ordering::Release);
+            return moved;
+        }
+        if m.pairs.len() == m.complete_pairs.fetch_add(1, Ordering::AcqRel) + 1 {
+            let mut g = self.write_topo();
+            if matches!(&*g, Topology::Merging(cur) if Arc::ptr_eq(cur, m)) {
+                *g = Topology::Normal {
+                    router: m.to,
+                    // Dropping the child handles here is the reclaim.
+                    shards: m.shards[..n].to_vec(),
+                };
+                self.merges.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        moved
+    }
+
+    /// Drive an in-progress merge to completion from the calling thread.
+    /// Returns true when no merge remains; false when it cannot complete
+    /// (a parent pinned at its capacity ceiling) — operations stay
+    /// correct either way, merely split across the pair.
+    pub fn quiesce_merge(&self) -> bool {
+        self.drain_pairs(
+            |t| match t {
+                Topology::Merging(m) => Some(Arc::clone(m)),
+                _ => None,
+            },
+            |m| m.pairs.as_slice(),
+            |pair| self.drive_merge(pair, usize::MAX),
+        )
     }
 
     // ---------------------------------------------------------------
@@ -842,9 +1340,28 @@ impl ShardedTable {
     }
 
     /// Total simulated device bytes across every resident shard — during
-    /// a split this includes the children, i.e. the transient footprint.
+    /// a split (or merge) this includes the children, i.e. the transient
+    /// footprint.
     pub fn device_bytes(&self) -> usize {
         self.with_shards(|sh| sh.iter().map(|s| s.device_bytes()).sum())
+    }
+
+    /// Shrink events across every resident shard — the compactions the
+    /// shards' own [`crate::tables::GrowthPolicy::shrink_below`] low
+    /// watermark (or explicit `request_shrink` calls) started. 0 for
+    /// fixed-capacity shards.
+    pub fn shrink_events(&self) -> u64 {
+        self.with_shards(|sh| sh.iter().map(|s| s.shrink_events()).sum())
+    }
+
+    /// Capacity that would remain after a shard-count halving: the
+    /// parents' alone — the first half of the shard list; the children's
+    /// capacity drops with them at the seal. Parents and children resize
+    /// independently (growth/compaction), so this is NOT simply half of
+    /// [`ShardedTable::capacity`]; the merge trigger's no-oscillation
+    /// guard must consult the real number.
+    pub fn post_merge_capacity(&self) -> usize {
+        self.with_shards(|sh| sh.iter().take(sh.len() / 2).map(|s| s.capacity()).sum())
     }
 
     /// Largest/smallest shard fill ratio (balance metric).
@@ -901,6 +1418,48 @@ mod tests {
                     ensure(
                         new == expect,
                         "epoch e+1 shard must be the epoch-e shard or its split child",
+                    )
+                },
+            );
+            r = next;
+        }
+    }
+
+    #[test]
+    fn halved_routing_mirror_property() {
+        // The mirror of the doubled-routing property: under the halved
+        // router every key of child `i + N/2` lands in parent `i`
+        // (exactly as `merges_down` predicts) and stay keys keep their
+        // shard — across chained halvings, and consistently with
+        // `doubled` in both directions.
+        let mut r = Router::new(16);
+        for _ in 0..3 {
+            let next = r.halved();
+            assert_eq!(next.n_shards(), r.n_shards() / 2);
+            assert_eq!(next.epoch(), r.epoch() + 1, "halving still advances the epoch");
+            check(
+                &Config::default(),
+                |g: &mut Gen| g.user_key(),
+                |&k| {
+                    let old = r.shard_of(k);
+                    let new = next.shard_of(k);
+                    let expect = if r.merges_down(k) { old - next.n_shards() } else { old };
+                    ensure(
+                        new == expect && (r.merges_down(k) == (old >= next.n_shards())),
+                        "halved shard must be the parent of the old shard",
+                    )
+                },
+            );
+            // merges_down is the exact inverse of the bit the doubled
+            // router consults: splitting back up re-creates the shard.
+            check(
+                &Config::default(),
+                |g: &mut Gen| g.user_key(),
+                |&k| {
+                    ensure(
+                        next.doubled().shard_of(k) == r.shard_of(k)
+                            && next.splits_up(k) == r.merges_down(k),
+                        "halved().doubled() must restore the shard assignment",
                     )
                 },
             );
@@ -1011,6 +1570,175 @@ mod tests {
         assert_eq!(st.len(), ks.len());
         for &k in &ks {
             assert_eq!(st.query(k), Some(k ^ 9), "key lost across chained splits");
+        }
+    }
+
+    #[test]
+    fn merge_halves_shards_and_reclaims_capacity() {
+        let st = ShardedTable::new(TableKind::Double, 64 * 1024, 8);
+        for k in distinct_keys(10_000, 0xBA7) {
+            st.upsert(k, k ^ 3, &UpsertOp::InsertIfUnique);
+        }
+        let cap_before = st.capacity();
+        assert!(st.merge_shards());
+        assert!(!st.merge_shards(), "second merger must lose");
+        assert!(!st.split_shards(), "no split while a merge drains");
+        assert!(st.merge_in_progress());
+        assert_eq!(st.n_shards(), 4, "shard count halves at merge START");
+        assert_eq!(st.epoch(), 1, "halving advances the epoch");
+        // Children are still resident until the last pair seals.
+        assert_eq!(st.capacity(), cap_before);
+        assert!(st.quiesce_merge(), "merge never completed");
+        assert!(!st.merge_in_progress());
+        assert_eq!(st.merge_events(), 1);
+        assert_eq!(st.capacity(), cap_before / 2, "children never reclaimed");
+        assert_eq!(st.len(), 10_000, "keys lost or duplicated by the merge");
+        assert!(st.moved_keys() > 0, "a halving with no key re-routing");
+        for k in distinct_keys(10_000, 0xBA7) {
+            assert_eq!(st.query(k), Some(k ^ 3), "key lost across the merge");
+        }
+        let (max, min) = st.balance();
+        // 10k keys over 4 shards ≈ 2500; generous band.
+        assert!(min > 2100 && max < 2900, "post-merge imbalance: {min}..{max}");
+    }
+
+    #[test]
+    fn mid_merge_semantics_old_then_new() {
+        // Partial merge: both routing epochs answer correctly while the
+        // drain cursor is mid-pair — the mirror of the mid-split test.
+        let st = ShardedTable::new(TableKind::Double, 16 * 1024, 8);
+        let ks = distinct_keys(4000, 0xBA8);
+        for &k in &ks {
+            st.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        }
+        assert!(st.merge_shards());
+        assert_eq!(st.n_shards(), 4);
+        // Advance only a few stripes of one pair: most movers unmoved.
+        st.drive_merge(0, 8);
+        for &k in &ks {
+            assert_eq!(st.query(k), Some(k ^ 1), "key invisible mid-merge");
+        }
+        // Erases hit both sides; upserts land in the (halved) new epoch;
+        // merge policies see the pre-merge value.
+        assert!(st.erase(ks[0]));
+        assert_eq!(st.query(ks[0]), None);
+        assert!(!st.erase(ks[0]), "double erase mid-merge");
+        assert_eq!(st.upsert(ks[1], 77, &UpsertOp::Overwrite), UpsertResult::Updated);
+        assert_eq!(st.query(ks[1]), Some(77));
+        assert_eq!(st.upsert(ks[2], 5, &UpsertOp::AddAssign), UpsertResult::Updated);
+        assert_eq!(st.query(ks[2]), Some((ks[2] ^ 1).wrapping_add(5)));
+        assert!(st.quiesce_merge());
+        assert_eq!(st.query(ks[0]), None);
+        assert_eq!(st.query(ks[1]), Some(77));
+        assert_eq!(st.len(), ks.len() - 1);
+    }
+
+    #[test]
+    fn split_then_merge_then_split_chains_epochs_against_oracle() {
+        // The full round trip under churn: epochs 0→1 (split), 1→2
+        // (merge), 2→3 (split), with upserts/erases between every phase
+        // and a HashMap oracle audited at each quiesce point.
+        let st = ShardedTable::new_growable(
+            TableKind::P2Meta,
+            8192,
+            4,
+            GrowthPolicy::default(),
+        );
+        let ks = distinct_keys(6000, 0xBA9);
+        let mut oracle: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        let mut phase_seed = 1u64;
+        let mut churn = |st: &ShardedTable,
+                         oracle: &mut std::collections::HashMap<u64, u64>| {
+            for (i, &k) in ks.iter().enumerate() {
+                match (i + phase_seed as usize) % 3 {
+                    0 => {
+                        st.upsert(k, k ^ phase_seed, &UpsertOp::Overwrite);
+                        oracle.insert(k, k ^ phase_seed);
+                    }
+                    1 if oracle.contains_key(&k) => {
+                        assert!(st.erase(k), "oracle said {k:#x} was present");
+                        oracle.remove(&k);
+                    }
+                    _ => {
+                        assert_eq!(st.query(k), oracle.get(&k).copied(), "mid-churn query");
+                    }
+                }
+            }
+            phase_seed += 1;
+        };
+        let audit = |st: &ShardedTable, oracle: &std::collections::HashMap<u64, u64>| {
+            assert_eq!(st.len(), oracle.len(), "keys lost or duplicated");
+            for &k in ks.iter().step_by(7) {
+                assert_eq!(st.query(k), oracle.get(&k).copied());
+            }
+        };
+        churn(&st, &mut oracle);
+        assert!(st.split_shards());
+        churn(&st, &mut oracle);
+        assert!(st.quiesce_split());
+        assert_eq!((st.n_shards(), st.epoch()), (8, 1));
+        audit(&st, &oracle);
+        assert!(st.merge_shards());
+        churn(&st, &mut oracle);
+        assert!(st.quiesce_merge());
+        assert_eq!((st.n_shards(), st.epoch()), (4, 2));
+        assert_eq!(st.split_events(), 1);
+        assert_eq!(st.merge_events(), 1);
+        audit(&st, &oracle);
+        assert!(st.split_shards());
+        churn(&st, &mut oracle);
+        assert!(st.quiesce_split());
+        assert_eq!((st.n_shards(), st.epoch()), (8, 3));
+        audit(&st, &oracle);
+    }
+
+    #[test]
+    fn concurrent_traffic_during_merge_loses_nothing() {
+        // Foreground churn (fresh inserts + queries of seeded movers)
+        // interleaved with drive_merge claims on another thread — the
+        // mirror of the during-split test, including for the unstable
+        // CuckooHT (no displacement can touch a merge child, but the
+        // parent absorbs movers while foreground inserts displace).
+        for kind in [TableKind::P2, TableKind::Cuckoo] {
+            let st = std::sync::Arc::new(ShardedTable::new(kind, 32 * 1024, 8));
+            let ks = distinct_keys(12_000, 0xBAA ^ kind as u64);
+            let (seeded_half, live_half) = ks.split_at(6000);
+            for &k in seeded_half {
+                st.upsert(k, k ^ 2, &UpsertOp::InsertIfUnique);
+            }
+            assert!(st.merge_shards());
+            std::thread::scope(|scope| {
+                let t = std::sync::Arc::clone(&st);
+                scope.spawn(move || {
+                    while t.merge_in_progress() {
+                        for pair in t.merge_pairs_pending() {
+                            t.drive_merge(pair, 16);
+                        }
+                        std::thread::yield_now();
+                    }
+                });
+                for (i, &k) in live_half.iter().enumerate() {
+                    assert_eq!(
+                        st.upsert(k, k ^ 2, &UpsertOp::InsertIfUnique),
+                        UpsertResult::Inserted,
+                        "{kind:?}: live insert {i} during merge"
+                    );
+                    if i % 3 == 0 {
+                        let probe = seeded_half[i % seeded_half.len()];
+                        assert_eq!(
+                            st.query(probe),
+                            Some(probe ^ 2),
+                            "{kind:?}: seeded key lost mid-merge"
+                        );
+                    }
+                }
+            });
+            assert!(st.quiesce_merge());
+            assert_eq!(st.n_shards(), 4, "{kind:?}");
+            assert_eq!(st.len(), ks.len(), "{kind:?}");
+            for &k in &ks {
+                assert_eq!(st.query(k), Some(k ^ 2), "{kind:?}");
+            }
         }
     }
 

@@ -56,6 +56,9 @@ thread_local! {
     /// Growth events (successor-table allocations) triggered by THIS
     /// thread.
     static GROW_EVENTS: Cell<u64> = const { Cell::new(0) };
+    /// Shrink events (½-capacity compaction successors) triggered by
+    /// THIS thread.
+    static SHRINK_EVENTS: Cell<u64> = const { Cell::new(0) };
 }
 
 #[inline(always)]
@@ -121,6 +124,19 @@ pub(crate) fn count_grow_event() {
 /// previous value.
 pub fn take_grow_events() -> u64 {
     GROW_EVENTS.with(|c| c.replace(0))
+}
+
+#[inline(always)]
+pub(crate) fn count_shrink_event() {
+    if enabled() {
+        SHRINK_EVENTS.with(|c| c.set(c.get() + 1));
+    }
+}
+
+/// Reset the calling thread's shrink-event counter, returning the
+/// previous value.
+pub fn take_shrink_events() -> u64 {
+    SHRINK_EVENTS.with(|c| c.replace(0))
 }
 
 /// The [`set_enabled`] recording flag is process-global (the counters

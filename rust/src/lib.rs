@@ -72,6 +72,23 @@
 //! it from load factor or queue depth; the `reshard` exhibit
 //! ([`bench::reshard`]) drives a doubling under live mixed traffic
 //! against a sequential oracle.
+//!
+//! # Shrink & merge — the lifecycle back down
+//!
+//! Both directions are online: [`tables::GrowthPolicy::shrink_below`]
+//! arms a ½× low-watermark compaction through the identical migration
+//! machinery in reverse (floor at the built capacity; refused when the
+//! successor would start above the grow watermark), and
+//! [`coordinator::ShardedTable::merge_shards`] halves the shard count —
+//! children drain back into their parents under the same stripe locks
+//! ([`coordinator::Router::halved`] / `merges_down`, the mirror of the
+//! split property), and their capacity is reclaimed at the seal.
+//! [`coordinator::ReshardPolicy`] gates policy merges behind a low-load
+//! watermark, an idle queue, a consecutive-submit hysteresis, and a
+//! structural no-oscillation guard; [`apps::caching::GpuCache::cooldown`]
+//! walks a cooled cache back to its provisioning; the `shrink` exhibit
+//! ([`bench::shrink`]) round-trips the whole lifecycle against a
+//! sequential oracle.
 
 pub mod gpusim;
 pub mod hash;

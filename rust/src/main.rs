@@ -3,10 +3,10 @@
 //!
 //! ```text
 //! warpspeed info
-//! warpspeed probes|bulk|grow|reshard|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
+//! warpspeed probes|bulk|grow|reshard|shrink|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
 //!           [--slots N] [--iters N] [--seed S]
 //! warpspeed all          # every exhibit in sequence
-//! warpspeed serve [--table p2m] [--slots N] [--shards N] [--grow] [--reshard]
+//! warpspeed serve [--table p2m] [--slots N] [--shards N] [--grow] [--reshard] [--shrink]
 //! ```
 //!
 //! The serve protocol (stdin/stdout, one op per line):
@@ -37,12 +37,13 @@ fn main() {
             println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
             println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
             println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
-            println!("subcommands: probes bulk grow reshard load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
+            println!("subcommands: probes bulk grow reshard shrink load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
         }
         "probes" => print!("{}", bench::probes::run(&env)),
         "bulk" => print!("{}", bench::bulk::run(&env)),
         "grow" => print!("{}", bench::grow::run(&env)),
         "reshard" => print!("{}", bench::reshard::run(&env)),
+        "shrink" => print!("{}", bench::shrink::run(&env)),
         "load" => print!("{}", bench::load::run(&env)),
         "aging" => print!("{}", bench::aging::run(&env)),
         "caching" => print!("{}", bench::caching::run(&env)),
@@ -60,6 +61,7 @@ fn main() {
                 ("bulk", bench::bulk::run),
                 ("grow", bench::grow::run),
                 ("reshard", bench::reshard::run),
+                ("shrink", bench::shrink::run),
                 ("load", bench::load::run),
                 ("aging", bench::aging::run),
                 ("caching", bench::caching::run),
@@ -100,15 +102,22 @@ fn serve(args: &Args) {
         n_workers: args.get_usize("workers", default_workers()),
         max_batch: args.get_usize("batch", 256),
         // `--grow` serves a growable table that expands 2x online instead
-        // of rejecting writes at saturation.
-        growth: args
-            .get_bool("grow")
-            .then(warpspeed::tables::GrowthPolicy::default),
+        // of rejecting writes at saturation; adding `--shrink` arms the
+        // low-watermark compaction so cooled tables give capacity back.
+        growth: args.get_bool("grow").then(|| warpspeed::tables::GrowthPolicy {
+            shrink_below: if args.get_bool("shrink") { 0.25 } else { 0.0 },
+            ..Default::default()
+        }),
         // `--reshard` lets the coordinator double its shard count (and
-        // worker parallelism) when aggregate load crosses the trigger.
+        // worker parallelism) when aggregate load crosses the trigger;
+        // with `--shrink` it also merges split pairs back when traffic
+        // cools (hysteresis-gated low-load halving).
         reshard: args
             .get_bool("reshard")
-            .then(warpspeed::coordinator::ReshardPolicy::default),
+            .then(|| warpspeed::coordinator::ReshardPolicy {
+                merge_below_load_factor: if args.get_bool("shrink") { 0.25 } else { 0.0 },
+                ..Default::default()
+            }),
     };
     let coord = Coordinator::new(cfg);
     eprintln!(

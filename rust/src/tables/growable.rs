@@ -40,6 +40,22 @@
 //! tables. When every bucket is migrated and the old table is empty, the
 //! wrapper flips back to the *normal* phase over the successor; chained
 //! growths (4×, 8×, …) repeat the cycle.
+//!
+//! ## Shrink / compaction
+//!
+//! Growth's inverse reuses the same migration machinery verbatim: when
+//! load falls below [`GrowthPolicy::shrink_below`] (default off), or on
+//! an explicit [`ConcurrentMap::request_shrink`], a successor of HALF
+//! the capacity is allocated and the identical migrating phase drains
+//! the old table into it — old-then-new reads, seed-then-erase moves,
+//! per-old-bucket locks, `count_copies == 1` throughout. Two refusals
+//! keep it safe and oscillation-free: a shrink never goes below the
+//! capacity the table was built with, and never starts when the live
+//! keys would put the ½× successor above the grow watermark (the pump
+//! threshold, [`GrowthPolicy::trigger_load_factor`] capped at 0.75) —
+//! a shrink that would immediately need to re-grow is refused outright.
+//! Keep `shrink_below` under half the grow trigger and the two
+//! watermarks can never chase each other.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
@@ -61,6 +77,15 @@ pub struct GrowthPolicy {
     /// Hard capacity ceiling: a growth that would exceed it is refused
     /// and the table reports `Full` like a fixed-capacity design.
     pub max_capacity: usize,
+    /// Low watermark: load factor below which a ½-capacity compaction
+    /// starts (checked after erases). `0.0` (the default) disables
+    /// automatic shrinking; [`ConcurrentMap::request_shrink`] still
+    /// works. Keep this under half of `trigger_load_factor` — the
+    /// post-shrink load factor is roughly double the pre-shrink one, so
+    /// a larger value could land the successor back at the grow
+    /// trigger (the successor-occupancy guard refuses such a shrink
+    /// outright, but a well-chosen watermark never hits the guard).
+    pub shrink_below: f64,
 }
 
 impl Default for GrowthPolicy {
@@ -69,7 +94,19 @@ impl Default for GrowthPolicy {
             trigger_load_factor: 0.85,
             migration_batch: 64,
             max_capacity: usize::MAX / 4,
+            shrink_below: 0.0,
         }
+    }
+}
+
+impl GrowthPolicy {
+    /// The pump threshold doubling as the grow watermark a shrink must
+    /// respect: the successor load factor above which foreground writers
+    /// contribute migration steps, and above which a ½× shrink successor
+    /// would be born too full to safely drain the old table into.
+    #[inline]
+    pub(crate) fn pump_load_factor(&self) -> f64 {
+        self.trigger_load_factor.min(0.75)
     }
 }
 
@@ -116,8 +153,16 @@ pub struct GrowableMap {
     base_cfg: TableConfig,
     policy: GrowthPolicy,
     phase: RwLock<Phase>,
+    /// Capacity the table was built with — the floor no shrink goes
+    /// below (the provisioning the operator asked for).
+    initial_capacity: usize,
     /// Growth events (successor allocations) over this table's lifetime.
     grows: AtomicU64,
+    /// Shrink events (½-capacity successor allocations).
+    shrinks: AtomicU64,
+    /// Compactions aborted because a live-load burst saturated the ½×
+    /// successor (the migration reversed back into the larger table).
+    shrink_aborted: AtomicU64,
     /// Pairs moved old→successor over this table's lifetime.
     migrated: AtomicU64,
 }
@@ -125,12 +170,16 @@ pub struct GrowableMap {
 impl GrowableMap {
     pub fn new(kind: TableKind, cfg: TableConfig, policy: GrowthPolicy) -> Self {
         let initial = build_table_with(kind, cfg.clone());
+        let initial_capacity = initial.capacity();
         Self {
             kind,
             base_cfg: cfg,
             policy,
             phase: RwLock::new(Phase::Normal(initial)),
+            initial_capacity,
             grows: AtomicU64::new(0),
+            shrinks: AtomicU64::new(0),
+            shrink_aborted: AtomicU64::new(0),
             migrated: AtomicU64::new(0),
         }
     }
@@ -147,6 +196,14 @@ impl GrowableMap {
     /// Pairs moved old→successor so far.
     pub fn migrated_pairs(&self) -> u64 {
         self.migrated.load(Ordering::Relaxed)
+    }
+
+    /// Compactions that reversed because a live-load burst saturated
+    /// the ½× successor mid-drain (see [`GrowableMap::finalize`]'s abort
+    /// arm): the table returned to its pre-shrink capacity instead of
+    /// wedging upserts at `Full`.
+    pub fn shrink_aborts(&self) -> u64 {
+        self.shrink_aborted.load(Ordering::Relaxed)
     }
 
     /// Ordinary operations hold the phase read guard for their whole
@@ -232,6 +289,87 @@ impl GrowableMap {
         }
     }
 
+    /// Allocate a ½× successor and flip to the migrating phase — growth's
+    /// inverse, reusing the identical migration machinery (the protocol
+    /// is direction-agnostic: it drains `old` into `new` whatever their
+    /// relative sizes). Refuses (returns false) when:
+    /// * the halved capacity would fall below the capacity the table was
+    ///   built with (never compact under the requested provisioning);
+    /// * the live keys would put the successor at or above the grow
+    ///   watermark ([`GrowthPolicy::pump_load_factor`]) — a shrink that
+    ///   immediately needs to re-grow is oscillation, and a successor
+    ///   born saturated could strand stragglers in the old table;
+    /// * the phase moved on from the table the caller observed (another
+    ///   thread grew/shrank first, or a migration is already running).
+    fn begin_shrink(&self, from_capacity: usize) -> bool {
+        let next_cap = from_capacity / 2;
+        if next_cap < self.initial_capacity {
+            return false;
+        }
+        // Cheap pre-check outside the phase lock; re-checked under it
+        // against the successor actually built.
+        {
+            let g = self.read_phase();
+            match &*g {
+                Phase::Normal(t) if t.capacity() == from_capacity => {
+                    if t.len() as f64 >= self.policy.pump_load_factor() * next_cap as f64 {
+                        return false;
+                    }
+                }
+                _ => return false,
+            }
+        }
+        let mut cfg = self.base_cfg.clone();
+        cfg.slots = next_cap;
+        let new = build_table_with(self.kind, cfg);
+        let mut g = self.write_phase();
+        let old = match &*g {
+            Phase::Normal(t) if t.capacity() == from_capacity => {
+                if t.len() as f64 >= self.policy.pump_load_factor() * new.capacity() as f64 {
+                    return false; // load rose since the pre-check
+                }
+                Arc::clone(t)
+            }
+            _ => return false, // phase moved on — discard the speculative table
+        };
+        let total = old.num_buckets().max(1);
+        *g = Phase::Migrating(Arc::new(Migration {
+            old,
+            new,
+            locks: LockArray::padded(total),
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            total,
+            resets: AtomicUsize::new(0),
+        }));
+        self.shrinks.fetch_add(1, Ordering::Relaxed);
+        probes::count_shrink_event();
+        true
+    }
+
+    /// Start a compaction if the normal-phase load factor has fallen
+    /// below the low watermark. Called after erases, outside any phase
+    /// guard (the mirror of [`GrowableMap::maybe_trigger_grow`]).
+    fn maybe_trigger_shrink(&self) {
+        if self.policy.shrink_below <= 0.0 {
+            return;
+        }
+        let shrink_from = {
+            let g = self.read_phase();
+            match &*g {
+                Phase::Normal(t)
+                    if (t.len() as f64) < self.policy.shrink_below * t.capacity() as f64 =>
+                {
+                    Some(t.capacity())
+                }
+                _ => None,
+            }
+        };
+        if let Some(cap) = shrink_from {
+            self.begin_shrink(cap);
+        }
+    }
+
     /// Move `key`'s old-table copy to the successor, under the key's
     /// already-held bucket lock. Seed-then-erase: the successor is
     /// seeded (insert-if-unique, so a fresher successor value wins)
@@ -275,8 +413,7 @@ impl GrowableMap {
     /// until the current migration completes, so a saturated successor
     /// with stragglers left would otherwise wedge the table at `Full`).
     fn successor_needs_pumping(m: &Migration, policy: &GrowthPolicy) -> bool {
-        let pump_lf = policy.trigger_load_factor.min(0.75);
-        m.new.len() as f64 >= pump_lf * m.new.capacity() as f64
+        m.new.len() as f64 >= policy.pump_load_factor() * m.new.capacity() as f64
     }
 
     fn erase_migrating(m: &Migration, key: u64) -> bool {
@@ -317,8 +454,14 @@ impl GrowableMap {
 
     /// Phase flip once every bucket is migrated. A compare-exchange on
     /// `done` elects a single finisher; if stragglers remain in the old
-    /// table (successor filled mid-migration) the scan is re-opened
-    /// instead of flipping, so no entry is ever dropped.
+    /// table (successor filled mid-migration) a GROWTH re-opens the scan
+    /// — more room arrives via erases or the chained growth after the
+    /// flip — while a SHRINK aborts: the ½× successor saturating means a
+    /// live-load burst outran the cooldown, and unlike growth there is a
+    /// clean escape with capacity to spare, so the migration reverses
+    /// and drains the small successor back into the still-larger old
+    /// table instead of wedging upserts at `Full` until erases land.
+    /// Either way no entry is ever dropped.
     fn finalize(&self, m: &Arc<Migration>) {
         if m
             .done
@@ -331,6 +474,32 @@ impl GrowableMap {
             let mut g = self.write_phase();
             if matches!(&*g, Phase::Migrating(cur) if Arc::ptr_eq(cur, m)) {
                 *g = Phase::Normal(Arc::clone(&m.new));
+            }
+            return;
+        }
+        if m.new.capacity() < m.old.capacity() {
+            // Pinned compaction: reverse it. Swapping the lock domain
+            // (fresh locks over the new old-table's buckets) is safe
+            // exactly here — the `done` CAS means no migrator claimant
+            // is mid-range (claims count into `done` only after their
+            // range's locks are released), and the phase write lock
+            // excludes every foreground mover (they hold the phase read
+            // guard across their whole locked section). A concurrent
+            // driver still holding the retired migration's Arc sees its
+            // cursor exhausted and its `done` at MAX, and backs out.
+            let mut g = self.write_phase();
+            if matches!(&*g, Phase::Migrating(cur) if Arc::ptr_eq(cur, m)) {
+                let total = m.new.num_buckets().max(1);
+                *g = Phase::Migrating(Arc::new(Migration {
+                    old: Arc::clone(&m.new),
+                    new: Arc::clone(&m.old),
+                    locks: LockArray::padded(total),
+                    cursor: AtomicUsize::new(0),
+                    done: AtomicUsize::new(0),
+                    total,
+                    resets: AtomicUsize::new(0),
+                }));
+                self.shrink_aborted.fetch_add(1, Ordering::Relaxed);
             }
             return;
         }
@@ -424,11 +593,17 @@ impl ConcurrentMap for GrowableMap {
     }
 
     fn erase(&self, key: u64) -> bool {
-        let g = self.read_phase();
-        match &*g {
-            Phase::Normal(t) => t.erase(key),
-            Phase::Migrating(m) => Self::erase_migrating(m, key),
+        let hit = {
+            let g = self.read_phase();
+            match &*g {
+                Phase::Normal(t) => t.erase(key),
+                Phase::Migrating(m) => Self::erase_migrating(m, key),
+            }
+        };
+        if hit {
+            self.maybe_trigger_shrink();
         }
+        hit
     }
 
     fn upsert_bulk(&self, pairs: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
@@ -507,16 +682,19 @@ impl ConcurrentMap for GrowableMap {
     }
 
     fn erase_bulk(&self, keys: &[u64], out: &mut Vec<bool>) {
-        let g = self.read_phase();
-        match &*g {
-            Phase::Normal(t) => t.erase_bulk(keys, out),
-            Phase::Migrating(m) => {
-                out.reserve(keys.len());
-                for &k in keys {
-                    out.push(Self::erase_migrating(m, k));
+        {
+            let g = self.read_phase();
+            match &*g {
+                Phase::Normal(t) => t.erase_bulk(keys, out),
+                Phase::Migrating(m) => {
+                    out.reserve(keys.len());
+                    for &k in keys {
+                        out.push(Self::erase_migrating(m, k));
+                    }
                 }
             }
         }
+        self.maybe_trigger_shrink();
     }
 
     fn num_buckets(&self) -> usize {
@@ -639,6 +817,20 @@ impl ConcurrentMap for GrowableMap {
         }
     }
 
+    /// Forwarded (not defaulted) so the wrapped design's native stripe
+    /// walk is reached — the trait default would funnel through this
+    /// wrapper's own `for_each_entry` and hide the override.
+    fn collect_stripe_range(&self, keep: &dyn Fn(u64) -> bool, out: &mut Vec<(u64, u64)>) {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.collect_stripe_range(keep, out),
+            Phase::Migrating(m) => {
+                m.old.collect_stripe_range(keep, out);
+                m.new.collect_stripe_range(keep, out);
+            }
+        }
+    }
+
     fn can_grow(&self) -> bool {
         true
     }
@@ -655,6 +847,31 @@ impl ConcurrentMap for GrowableMap {
             Some(c) => self.begin_grow(c),
             None => true, // already growing
         }
+    }
+
+    fn can_shrink(&self) -> bool {
+        true
+    }
+
+    fn request_shrink(&self) -> bool {
+        let cap = {
+            let g = self.read_phase();
+            match &*g {
+                Phase::Normal(t) => Some(t.capacity()),
+                // Unlike `request_grow`, a running migration refuses: the
+                // caller cannot tell a growth from a shrink, and chained
+                // compactions quiesce between halvings anyway.
+                Phase::Migrating(_) => None,
+            }
+        };
+        match cap {
+            Some(c) => self.begin_shrink(c),
+            None => false,
+        }
+    }
+
+    fn shrink_events(&self) -> u64 {
+        self.shrinks.load(Ordering::Relaxed)
     }
 
     fn migration_in_progress(&self) -> bool {
@@ -921,6 +1138,250 @@ mod tests {
         assert!(t.grow_events() >= 1 && t.migrated_pairs() > 0);
         assert_eq!(probes::take_grow_events(), t.grow_events());
         assert_eq!(probes::take_migrated_pairs(), t.migrated_pairs());
+    }
+
+    #[test]
+    fn shrink_compacts_cooled_table_back_to_initial_capacity() {
+        // Fill 2.5× the provisioning (two growth cycles), cool down to a
+        // residue, and the low-watermark trigger plus chained
+        // request_shrink calls must walk capacity back to exactly the
+        // initial provisioning with every survivor intact.
+        let t = GrowableMap::new(
+            TableKind::Chaining,
+            TableConfig::for_kind(TableKind::Chaining, 1024),
+            GrowthPolicy {
+                migration_batch: 16,
+                shrink_below: 0.25,
+                ..Default::default()
+            },
+        );
+        let initial = t.capacity();
+        let ks = keys(initial * 5 / 2, 0x668);
+        for &k in &ks {
+            assert_eq!(t.upsert(k, k ^ 5, &UpsertOp::InsertIfUnique), UpsertResult::Inserted);
+        }
+        quiesce(&t);
+        let peak = t.capacity();
+        assert!(peak >= initial * 2, "fill never grew: {peak}");
+        let (survivors, doomed) = ks.split_at(100);
+        for &k in doomed {
+            assert!(t.erase(k), "cooldown erase missed");
+        }
+        assert!(t.shrink_events() >= 1, "low watermark never fired during cooldown");
+        quiesce(&t);
+        while t.request_shrink() {
+            quiesce(&t);
+        }
+        assert_eq!(t.capacity(), initial, "capacity never returned to the provisioning");
+        assert_eq!(t.len(), survivors.len());
+        for &k in survivors {
+            assert_eq!(t.query(k), Some(k ^ 5), "survivor lost across compaction");
+            assert_eq!(t.count_copies(k), 1, "survivor duplicated across compaction");
+        }
+    }
+
+    #[test]
+    fn shrink_refuses_below_initial_capacity_and_above_watermark() {
+        let t = growable(TableKind::Double, 1024, 8);
+        // Floor: a table at its provisioning must refuse to compact.
+        assert!(!t.request_shrink(), "shrink below the initial provisioning");
+        assert_eq!(t.shrink_events(), 0);
+        // Watermark: grow once, then hold enough keys that the ½×
+        // successor would start above the pump threshold — refused.
+        let ks = keys(t.capacity() * 3 / 2, 0x669);
+        for &k in &ks {
+            t.upsert(k, 1, &UpsertOp::InsertIfUnique);
+        }
+        quiesce(&t);
+        let cap = t.capacity();
+        assert!(cap >= 2048, "fill never grew");
+        assert!(
+            t.len() as f64 >= 0.75 * (cap / 2) as f64,
+            "test premise: occupancy must exceed the successor watermark"
+        );
+        assert!(!t.request_shrink(), "shrink into a too-full successor");
+        // Cool down below the watermark and the same request succeeds.
+        for &k in ks.iter().skip(200) {
+            t.erase(k);
+        }
+        assert!(t.request_shrink(), "cooled table must accept the shrink");
+        quiesce(&t);
+        assert!(t.capacity() < cap);
+        assert_eq!(t.len(), 200);
+    }
+
+    #[test]
+    fn old_then_new_semantics_hold_mid_shrink() {
+        // The growth-migration protocol run in reverse: start a ½×
+        // compaction, advance it only partially, and reads/erases/merge
+        // upserts must behave exactly like the mid-growth case.
+        let t = growable(TableKind::Double, 1024, 4);
+        let fill = keys(t.capacity() * 3 / 2, 0x66A);
+        for &k in &fill {
+            t.upsert(k, 0, &UpsertOp::Overwrite);
+        }
+        quiesce(&t);
+        assert!(t.capacity() >= 2048);
+        // Cool down to a small survivor set, then shrink manually.
+        let ks: Vec<u64> = fill.iter().copied().take(300).collect();
+        for &k in fill.iter().skip(300) {
+            t.erase(k);
+        }
+        for &k in &ks {
+            t.upsert(k, k ^ 1, &UpsertOp::Overwrite);
+        }
+        assert!(t.request_shrink(), "manual shrink must start");
+        assert!(t.migration_in_progress());
+        t.drive_migration(8);
+        assert!(t.migration_in_progress(), "partial drive cannot finish the compaction");
+        for &k in &ks {
+            assert_eq!(t.query(k), Some(k ^ 1), "key invisible mid-shrink");
+        }
+        assert!(t.erase(ks[0]));
+        assert_eq!(t.query(ks[0]), None);
+        assert!(!t.erase(ks[0]), "double erase mid-shrink");
+        assert_eq!(t.upsert(ks[1], 77, &UpsertOp::Overwrite), UpsertResult::Updated);
+        assert_eq!(t.query(ks[1]), Some(77));
+        assert_eq!(t.upsert(ks[2], 5, &UpsertOp::AddAssign), UpsertResult::Updated);
+        assert_eq!(t.query(ks[2]), Some((ks[2] ^ 1).wrapping_add(5)));
+        quiesce(&t);
+        assert_eq!(t.query(ks[0]), None);
+        assert_eq!(t.query(ks[1]), Some(77));
+        assert_eq!(t.len(), ks.len() - 1);
+        for &k in ks.iter().skip(1) {
+            assert_eq!(t.count_copies(k), 1, "duplicate after compaction");
+        }
+    }
+
+    #[test]
+    fn concurrent_churn_mid_shrink_keeps_single_copies() {
+        // Stable-design invariant under compaction: threads query/erase
+        // their own keys while the shrink migration runs interleaved;
+        // count_copies == 1 must hold for live keys THROUGHOUT.
+        let t = std::sync::Arc::new(GrowableMap::new(
+            TableKind::Chaining,
+            TableConfig::for_kind(TableKind::Chaining, 2048),
+            GrowthPolicy {
+                migration_batch: 8,
+                shrink_below: 0.3,
+                ..Default::default()
+            },
+        ));
+        let fill = keys(t.capacity() * 2, 0x66B);
+        for &k in &fill {
+            assert_eq!(t.upsert(k, k ^ 4, &UpsertOp::InsertIfUnique), UpsertResult::Inserted);
+        }
+        assert!(t.quiesce_migration());
+        let peak = t.capacity();
+        assert!(peak >= 4096);
+        // Keep 1/8 of the keys: each of 4 threads owns a disjoint slice
+        // of survivors and a disjoint slice of victims; the cooldown
+        // crosses the 0.3 watermark mid-churn and starts the compaction
+        // under the concurrent erases/queries.
+        let n_threads = 4;
+        let per = fill.len() / n_threads;
+        std::thread::scope(|s| {
+            for tid in 0..n_threads {
+                let t = std::sync::Arc::clone(&t);
+                let mine = &fill[tid * per..(tid + 1) * per];
+                s.spawn(move || {
+                    let (keep, kill) = mine.split_at(mine.len() / 8);
+                    for (i, &k) in kill.iter().enumerate() {
+                        assert!(t.erase(k), "thread {tid} erase {i}");
+                        if i % 32 == 0 {
+                            t.drive_migration(2);
+                        }
+                        if i % 64 == 0 {
+                            for &probe in keep.iter().step_by(29) {
+                                assert_eq!(t.count_copies(probe), 1, "duplicate mid-shrink");
+                                assert_eq!(t.query(probe), Some(probe ^ 4), "lost mid-shrink");
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert!(t.quiesce_migration());
+        assert!(t.shrink_events() >= 1);
+        for slice in fill.chunks(per) {
+            let (keep, kill) = slice.split_at(slice.len() / 8);
+            for &k in keep {
+                assert_eq!(t.query(k), Some(k ^ 4));
+                assert_eq!(t.count_copies(k), 1);
+            }
+            for &k in kill.iter().step_by(13) {
+                assert_eq!(t.count_copies(k), 0, "erased-key residue");
+            }
+        }
+    }
+
+    #[test]
+    fn insert_burst_mid_shrink_aborts_the_compaction_instead_of_rejecting() {
+        // A shrink is mid-drain when live load comes back: the ½×
+        // successor saturates before the old table empties. The
+        // compaction must REVERSE (drain the successor back into the
+        // larger table) rather than wedge upserts at Full until erases
+        // land — zero Full across the whole burst.
+        let all = keys(1536 + 1200, 0x66D);
+        let (fill, burst) = all.split_at(1536);
+        let t = growable(TableKind::Double, 1024, 256);
+        for &k in fill {
+            t.upsert(k, k ^ 3, &UpsertOp::Overwrite);
+        }
+        quiesce(&t);
+        assert_eq!(t.capacity(), 2048, "fill must grow exactly once");
+        // Cool to 300 survivors and start the compaction toward 1024.
+        let (keep, kill) = fill.split_at(300);
+        for &k in kill {
+            t.erase(k);
+        }
+        assert!(t.request_shrink(), "cooled table must accept the shrink");
+        assert!(t.migration_in_progress());
+        // The burst: 1200 fresh inserts. Live keys (300 + 1200) exceed
+        // the 1024-slot successor, so the drain MUST block and abort;
+        // with batch 256 the first pump claims the whole old table and
+        // hits the saturation deterministically.
+        for (i, &k) in burst.iter().enumerate() {
+            assert_eq!(
+                t.upsert(k, k ^ 4, &UpsertOp::InsertIfUnique),
+                UpsertResult::Inserted,
+                "burst insert {i} rejected mid-shrink"
+            );
+        }
+        assert!(t.shrink_aborts() >= 1, "saturated compaction never reversed");
+        quiesce(&t);
+        assert_eq!(t.capacity(), 2048, "abort must restore the pre-shrink capacity");
+        assert_eq!(t.len(), keep.len() + burst.len());
+        for &k in keep.iter().step_by(11) {
+            assert_eq!(t.query(k), Some(k ^ 3), "survivor lost across the abort");
+            assert_eq!(t.count_copies(k), 1);
+        }
+        for &k in burst.iter().step_by(17) {
+            assert_eq!(t.query(k), Some(k ^ 4), "burst key lost across the abort");
+            assert_eq!(t.count_copies(k), 1);
+        }
+    }
+
+    #[test]
+    fn gpusim_shrink_counter_tracks_instance_counter() {
+        let _measure = probes::measurement_section();
+        probes::set_enabled(true);
+        probes::take_shrink_events();
+        let t = growable(TableKind::Double, 1024, 8);
+        let ks = keys(t.capacity() * 3 / 2, 0x66C);
+        for &k in &ks {
+            t.upsert(k, 1, &UpsertOp::InsertIfUnique);
+        }
+        quiesce(&t);
+        for &k in ks.iter().skip(64) {
+            t.erase(k);
+        }
+        assert!(t.request_shrink());
+        quiesce(&t);
+        assert!(t.shrink_events() >= 1);
+        assert_eq!(probes::take_shrink_events(), t.shrink_events());
+        probes::take_grow_events();
+        probes::take_migrated_pairs();
     }
 
     #[test]

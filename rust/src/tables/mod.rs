@@ -237,6 +237,29 @@ pub trait ConcurrentMap: Send + Sync {
         false
     }
 
+    /// True when the table can compact its capacity online
+    /// ([`growable::GrowableMap`] with headroom above its initial
+    /// provisioning). Plain designs are fixed-capacity.
+    fn can_shrink(&self) -> bool {
+        false
+    }
+
+    /// Ask the table to start a ½-capacity compaction cycle. Returns
+    /// true when a shrink migration was just started; false for
+    /// fixed-capacity tables, when a migration is already running, when
+    /// the halved capacity would fall below the initial provisioning, or
+    /// when current occupancy would put the successor above the grow
+    /// watermark (see [`GrowthPolicy::shrink_below`]).
+    fn request_shrink(&self) -> bool {
+        false
+    }
+
+    /// Shrink events (½× successor allocations) over the table's
+    /// lifetime; 0 for fixed-capacity designs.
+    fn shrink_events(&self) -> u64 {
+        0
+    }
+
     /// True while an incremental old→successor migration is in progress.
     fn migration_in_progress(&self) -> bool {
         false
@@ -290,6 +313,25 @@ pub trait ConcurrentMap: Send + Sync {
             }
         };
         self.for_each_entry(&mut f);
+    }
+
+    /// Routing-stripe migration iterator (shard split/merge): append a
+    /// snapshot of every live `(key, value)` whose key satisfies `keep`
+    /// — a pure routing predicate (stripe-range membership plus, for
+    /// splits, the mover bit), supplied by the sharded table. Unlike
+    /// [`ConcurrentMap::collect_primary_range`], routing stripes are
+    /// hash-scattered across buckets, so every design visits its whole
+    /// storage; the default pays two virtual dispatches per entry
+    /// (through `for_each_entry` and the predicate's closure chain),
+    /// and designs with directly walkable storage (ChainingHT) override
+    /// with a raw walk that applies the predicate inline — that per-claim
+    /// constant is what split/merge stripe claims pay on every scan.
+    fn collect_stripe_range(&self, keep: &dyn Fn(u64) -> bool, out: &mut Vec<(u64, u64)>) {
+        self.for_each_entry(&mut |k, v| {
+            if keep(k) {
+                out.push((k, v));
+            }
+        });
     }
 }
 

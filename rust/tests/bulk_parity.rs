@@ -497,6 +497,141 @@ fn growable_concurrent_churn_parity_for_stable_designs() {
     }
 }
 
+/// Shrink-under-churn parity: the growable twins run an erase-heavy
+/// mixed stream through at least one full ½× compaction — the exact
+/// mirror of `growable_bulk_parity_across_a_full_migration`. Every
+/// per-op result must match the scalar twin and the oracle, stable
+/// designs keep `count_copies == 1` for live keys throughout, and both
+/// twins end at a compacted capacity (twins may shrink at different
+/// rounds — parity must hold regardless).
+#[test]
+fn growable_bulk_parity_across_a_full_compaction() {
+    for kind in TableKind::CONCURRENT {
+        let mk = || {
+            GrowableMap::new(
+                kind,
+                TableConfig::for_kind(kind, 1024),
+                GrowthPolicy {
+                    migration_batch: 8,
+                    shrink_below: 0.3,
+                    ..Default::default()
+                },
+            )
+        };
+        let bulk_t = mk();
+        let scalar_t = mk();
+        let stable = bulk_t.is_stable();
+        let nominal = bulk_t.capacity();
+        let universe = distinct_keys(nominal * 5 / 2, 0x6F8 ^ kind as u64);
+        let mut oracle: HashMap<u64, u64> = HashMap::new();
+        // Heat: fill 2.5× nominal through the bulk/scalar pair (growth
+        // machinery already parity-tested; keep this phase terse).
+        for chunk in universe.chunks(96) {
+            let pairs: Vec<(u64, u64)> = chunk.iter().map(|&k| (k, k ^ 9)).collect();
+            let mut got = Vec::new();
+            bulk_t.upsert_bulk(&pairs, &UpsertOp::Overwrite, &mut got);
+            for (i, &(k, v)) in pairs.iter().enumerate() {
+                assert_eq!(got[i], scalar_t.upsert(k, v, &UpsertOp::Overwrite), "{kind:?}");
+                assert_ne!(got[i], UpsertResult::Full, "{kind:?}: heat phase rejected");
+                oracle.insert(k, v);
+            }
+        }
+        assert!(bulk_t.quiesce_migration() && scalar_t.quiesce_migration(), "{kind:?}");
+        let peak = bulk_t.capacity();
+        assert!(peak >= nominal * 2, "{kind:?}: heat never grew ({peak} from {nominal})");
+        // Cool: erase-heavy mixed rounds walk the load under the 0.3
+        // watermark; compactions start mid-stream and interleave with
+        // the continuing traffic via bounded drive_migration steps.
+        let mut rng = Xoshiro256pp::new(0x6F9 ^ kind as u64);
+        let mut kill = 0usize; // erase frontier over the universe
+        for round in 0..120u64 {
+            match rng.next_below(8) {
+                // Erase-heavy: 5/8 of rounds kill a fresh slice.
+                0..=4 => {
+                    let n = (universe.len().saturating_sub(kill)).min(64);
+                    if n == 0 {
+                        continue;
+                    }
+                    let ks: Vec<u64> = universe[kill..kill + n].to_vec();
+                    kill += n;
+                    let mut got = Vec::new();
+                    bulk_t.erase_bulk(&ks, &mut got);
+                    for (i, &k) in ks.iter().enumerate() {
+                        let want = scalar_t.erase(k);
+                        assert_eq!(got[i], want, "{kind:?} round {round} erase #{i}");
+                        assert_eq!(got[i], oracle.remove(&k).is_some(), "{kind:?}");
+                    }
+                }
+                5 => {
+                    let ks: Vec<u64> = (0..48)
+                        .map(|_| universe[rng.next_below(universe.len() as u64) as usize])
+                        .collect();
+                    let mut got = Vec::new();
+                    bulk_t.query_bulk(&ks, &mut got);
+                    for (i, &k) in ks.iter().enumerate() {
+                        assert_eq!(got[i], oracle.get(&k).copied(), "{kind:?} round {round} q{i}");
+                        assert_eq!(got[i], scalar_t.query(k), "{kind:?} round {round} q{i}");
+                    }
+                }
+                _ => {
+                    // A little live write traffic against surviving keys
+                    // keeps the compaction honest (upserts land in the
+                    // successor, merges see the pre-shrink value).
+                    let ks: Vec<u64> = (0..24)
+                        .map(|_| universe[rng.next_below(universe.len() as u64) as usize])
+                        .collect();
+                    let pairs: Vec<(u64, u64)> =
+                        ks.iter().map(|&k| (k, k ^ round)).collect();
+                    let mut got = Vec::new();
+                    bulk_t.upsert_bulk(&pairs, &UpsertOp::Overwrite, &mut got);
+                    for (i, &(k, v)) in pairs.iter().enumerate() {
+                        let want = scalar_t.upsert(k, v, &UpsertOp::Overwrite);
+                        assert_eq!(got[i], want, "{kind:?} round {round} upsert #{i}");
+                        assert_ne!(got[i], UpsertResult::Full, "{kind:?}");
+                        oracle.insert(k, v);
+                    }
+                }
+            }
+            bulk_t.drive_migration(8);
+            scalar_t.drive_migration(16);
+            if stable && round % 10 == 0 {
+                for (&k, &v) in oracle.iter().take(16) {
+                    assert_eq!(bulk_t.count_copies(k), 1, "{kind:?}: duplicate {k:#x}");
+                    assert_eq!(bulk_t.query(k), Some(v), "{kind:?}: lost {k:#x}");
+                }
+            }
+        }
+        // Kill whatever the random rounds left, then drain.
+        while kill < universe.len() {
+            let n = (universe.len() - kill).min(96);
+            let ks: Vec<u64> = universe[kill..kill + n].to_vec();
+            kill += n;
+            let mut got = Vec::new();
+            bulk_t.erase_bulk(&ks, &mut got);
+            for (i, &k) in ks.iter().enumerate() {
+                assert_eq!(got[i], scalar_t.erase(k), "{kind:?}: final kill #{i}");
+                oracle.remove(&k);
+            }
+        }
+        assert!(bulk_t.quiesce_migration(), "{kind:?}: compaction pinned");
+        assert!(scalar_t.quiesce_migration(), "{kind:?}: compaction pinned");
+        assert!(
+            bulk_t.shrink_events() >= 1,
+            "{kind:?}: the cooldown never drove a ½× compaction"
+        );
+        assert!(
+            bulk_t.capacity() < peak,
+            "{kind:?}: capacity {} never fell from its peak {peak}",
+            bulk_t.capacity()
+        );
+        assert_eq!(bulk_t.len(), oracle.len(), "{kind:?}");
+        for (&k, &v) in &oracle {
+            assert_eq!(bulk_t.query(k), Some(v), "{kind:?}");
+            assert!(bulk_t.count_copies(k) <= 1, "{kind:?}: duplicate {k:#x}");
+        }
+    }
+}
+
 /// Colliding-key grouped-path coverage: a batch whose keys all share one
 /// primary bucket (plus in-batch duplicates) exercises exactly the
 /// grouped fast paths that pre-fill their output with sentinel values. A
@@ -563,14 +698,16 @@ fn grouped_path_covers_every_slot_for_colliding_keys() {
 }
 
 /// The bulk-vs-scalar parity oracle extended across a shard-count
-/// split: a `ShardedTable` driven through the index-addressed bulk
-/// entry points (partitioned under the current router, exactly as the
-/// coordinator executor does) must match a scalar twin and the oracle
-/// while a split begun mid-stream migrates interleaved with the
-/// batches. Per-key order is preserved because a key never changes
-/// parts within an epoch, and both twins split at the same round.
+/// split AND the merge back down: a `ShardedTable` driven through the
+/// index-addressed bulk entry points (partitioned under the current
+/// router, exactly as the coordinator executor does) must match a
+/// scalar twin and the oracle while a split begun mid-stream migrates
+/// interleaved with the batches — and again while the merge drains the
+/// children back. Per-key order is preserved because a key never
+/// changes parts within an epoch, and both twins rescale at the same
+/// rounds.
 #[test]
-fn sharded_bulk_matches_scalar_across_a_split() {
+fn sharded_bulk_matches_scalar_across_a_split_merge_round_trip() {
     use warpspeed::coordinator::ShardedTable;
     for kind in [TableKind::Double, TableKind::Cuckoo, TableKind::Chaining] {
         let bulk_t = ShardedTable::new(kind, 8 * 1024, 2);
@@ -578,16 +715,27 @@ fn sharded_bulk_matches_scalar_across_a_split() {
         let mut oracle: HashMap<u64, u64> = HashMap::new();
         let mut rng = Xoshiro256pp::new(0x5B11 ^ kind as u64);
         let universe = distinct_keys(96, 0x5B12 ^ kind as u64);
-        for round in 0..30 {
+        for round in 0..45 {
             if round == 10 {
                 assert!(bulk_t.split_shards(), "{kind:?}");
                 assert!(scalar_t.split_shards(), "{kind:?}");
             }
+            if round == 25 {
+                // Both twins must have flipped epochs before the merge
+                // can start (a merge refuses mid-split).
+                assert!(bulk_t.quiesce_split(), "{kind:?}");
+                assert!(scalar_t.quiesce_split(), "{kind:?}");
+                assert!(bulk_t.merge_shards(), "{kind:?}");
+                assert!(scalar_t.merge_shards(), "{kind:?}");
+            }
             // A little bounded migration between batches, like the
-            // coordinator's per-submit SplitMigrate jobs.
+            // coordinator's per-submit SplitMigrate/MergeMigrate jobs.
             for t in [&bulk_t, &scalar_t] {
                 for pair in t.split_pairs_pending() {
                     t.drive_split(pair, 24);
+                }
+                for pair in t.merge_pairs_pending() {
+                    t.drive_merge(pair, 24);
                 }
             }
             let batch = gen_batch(&mut rng, &universe, 192);
@@ -667,10 +815,12 @@ fn sharded_bulk_matches_scalar_across_a_split() {
                 }
             }
         }
-        assert!(bulk_t.quiesce_split(), "{kind:?}: bulk twin split never completed");
-        assert!(scalar_t.quiesce_split(), "{kind:?}: scalar twin split never completed");
-        assert_eq!(bulk_t.n_shards(), 4, "{kind:?}");
-        assert_eq!(bulk_t.epoch(), 1, "{kind:?}");
+        assert!(bulk_t.quiesce_merge(), "{kind:?}: bulk twin merge never completed");
+        assert!(scalar_t.quiesce_merge(), "{kind:?}: scalar twin merge never completed");
+        assert_eq!(bulk_t.n_shards(), 2, "{kind:?}: round trip must land at 2 shards");
+        assert_eq!(bulk_t.epoch(), 2, "{kind:?}: split + merge = two epoch advances");
+        assert_eq!(bulk_t.split_events(), 1, "{kind:?}");
+        assert_eq!(bulk_t.merge_events(), 1, "{kind:?}");
         assert_eq!(bulk_t.len(), oracle.len(), "{kind:?}: keys lost or duplicated");
         for &k in &universe {
             assert_eq!(bulk_t.query(k), oracle.get(&k).copied(), "{kind:?}");

@@ -58,6 +58,7 @@ fn every_bench_exhibit_regenerates() {
     let exhibits: Vec<(&str, fn(&BenchEnv) -> String)> = vec![
         ("probes/Table5.1", bench::probes::run),
         ("reshard", bench::reshard::run),
+        ("shrink", bench::shrink::run),
         ("load/Fig6.1", bench::load::run),
         ("aging/Fig6.2", bench::aging::run),
         ("caching/Fig6.3", bench::caching::run),
