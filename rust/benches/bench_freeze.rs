@@ -1,0 +1,8 @@
+//! `cargo bench --bench bench_freeze` — mutable designs vs the frozen
+//! perfect-hash tier, plus the freeze→promote→re-freeze oracle cycle.
+use warpspeed::bench::{freeze, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", freeze::run(&env));
+}

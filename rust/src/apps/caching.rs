@@ -15,7 +15,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::tables::{ConcurrentMap, UpsertOp, UpsertResult};
+use crate::tables::{ConcurrentMap, TieredMap, UpsertOp, UpsertResult};
 
 /// Fraction of table capacity the FIFO ring may occupy (paper §6.6).
 const RING_FRACTION: f64 = 0.85;
@@ -58,6 +58,11 @@ pub struct GpuCache {
     /// the ring cap follows the grown capacity, so saturation triggers
     /// a 2× growth rather than the Full-eviction-retry contortion.
     grow: bool,
+    /// Freeze knob ([`GpuCache::with_tiered`]): cooldown ends by
+    /// snapshotting the surviving residents into the device table's
+    /// frozen read-optimized tier, so the post-cooldown steady state
+    /// serves its (cold, read-mostly) hits at ~1 probe/op.
+    freeze_on_cooldown: bool,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
@@ -84,6 +89,24 @@ impl GpuCache {
         Self::with_mode(table, store, true)
     }
 
+    /// Tiered cache: wraps the (stable) device table in a
+    /// [`TieredMap`] and arms the cooldown freeze knob. After a
+    /// [`GpuCache::cooldown`], the surviving residents live in an
+    /// immutable perfect-hash tier — one-probe hits at load factor
+    /// ~1.0 — while fresh admissions land in the mutable tier and a
+    /// write to a frozen key promotes it back out. Growth mode is
+    /// inherited from the wrapped table (`can_grow`). Returns `None`
+    /// for unstable tables, as [`GpuCache::new`] does.
+    pub fn with_tiered(table: Arc<dyn ConcurrentMap>, store: HostStore) -> Option<Self> {
+        if !table.is_stable() {
+            return None;
+        }
+        let grow = table.can_grow();
+        let mut cache = Self::with_mode(Arc::new(TieredMap::new(table)), store, grow)?;
+        cache.freeze_on_cooldown = true;
+        Some(cache)
+    }
+
     fn with_mode(table: Arc<dyn ConcurrentMap>, store: HostStore, grow: bool) -> Option<Self> {
         if !table.is_stable() {
             return None;
@@ -95,6 +118,7 @@ impl GpuCache {
             ring: VecDeque::with_capacity(ring_cap + 1),
             ring_cap: ring_cap.max(1),
             grow,
+            freeze_on_cooldown: false,
             hits: 0,
             misses: 0,
             evictions: 0,
@@ -140,6 +164,14 @@ impl GpuCache {
         self.table.quiesce_migration();
         while self.table.request_shrink() {
             self.table.quiesce_migration();
+        }
+        // Tiered caches end the cooldown by freezing the survivors: the
+        // post-cooldown population is by construction the cold, rarely
+        // written set, which is exactly what the perfect-hash tier is
+        // for. (&mut self means no concurrent writer, satisfying
+        // request_freeze's quiesced-writer contract.)
+        if self.freeze_on_cooldown && self.table.can_freeze() {
+            self.table.request_freeze();
         }
         if self.grow {
             self.ring_cap = (((self.table.capacity() as f64) * RING_FRACTION) as usize).max(1);
@@ -266,6 +298,12 @@ impl GpuCache {
 
     pub fn resident(&self) -> usize {
         self.ring.len()
+    }
+
+    /// Residents currently served from the frozen read-optimized tier
+    /// (0 for untiered caches).
+    pub fn frozen_resident(&self) -> usize {
+        self.table.frozen_len()
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -457,6 +495,46 @@ mod tests {
                 "ring cap did not follow the compacted capacity"
             );
         }
+    }
+
+    #[test]
+    fn tiered_cooldown_freezes_surviving_residents() {
+        // Warm a tiered cache, cool it down: the FIFO survivors must
+        // land in the frozen tier and keep serving hits, while fresh
+        // admissions go to the mutable tier and a frozen-key write
+        // promotes back out — all through the unchanged GpuCache API.
+        let data = distinct_keys(2000, 0xD1);
+        let t = build_table(TableKind::P2Meta, 1024);
+        let mut c = GpuCache::with_tiered(t, store_of(&data)).unwrap();
+        let hot: Vec<u64> = data.iter().copied().take(400).collect();
+        for &k in &hot {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert_eq!(c.resident(), 400);
+        assert_eq!(c.frozen_resident(), 0, "nothing frozen before cooldown");
+        let evicted = c.cooldown(256);
+        assert_eq!(evicted, 400 - 256);
+        assert_eq!(c.frozen_resident(), 256, "cooldown must freeze the survivors");
+        // FIFO evicts from the front: the survivors are the last 256
+        // admitted, and they now hit without touching the host store.
+        c.hits = 0;
+        c.misses = 0;
+        for &k in &hot[400 - 256..] {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert_eq!(c.misses, 0, "frozen residents must still hit");
+        assert_eq!(c.frozen_resident(), 256, "reads must not promote");
+        // Evicted keys really left the device: they miss and re-admit
+        // into the mutable tier (the frozen tier is immutable).
+        for &k in &hot[..64] {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert_eq!(c.misses, 64);
+        assert_eq!(c.frozen_resident(), 256);
+        assert_eq!(c.resident(), 256 + 64);
+        // A second cooldown re-freezes the merged population.
+        c.cooldown(c.resident());
+        assert_eq!(c.frozen_resident(), 256 + 64, "refreeze must absorb new admissions");
     }
 
     #[test]

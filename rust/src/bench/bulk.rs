@@ -24,7 +24,7 @@
 //! counts) follow the human tables.
 
 use crate::gpusim::probes::{self, ProbeScope};
-use crate::tables::{build_table, TableKind, UpsertOp};
+use crate::tables::{build_table, FrozenTable, TableKind, UpsertOp};
 use crate::workloads::keys::distinct_keys;
 
 use super::report::{self, JsonVal};
@@ -57,6 +57,12 @@ pub struct BulkRow {
     /// scan/chain-walk/lock-hold each); `3 * counter_ops / bulk_groups`
     /// is the batch's amortization factor. 0 for scalar-fallback designs.
     pub bulk_groups: u64,
+    /// Frozen-tier comparison: the same counter-pass keys snapshotted
+    /// into a [`FrozenTable`] and bulk-queried once — Mops and unique
+    /// lines per op for that launch (the perfect-hash read ceiling the
+    /// mutable design is being compared against).
+    pub frozen_qry: f64,
+    pub frozen_lines_per_op: f64,
 }
 
 pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
@@ -140,6 +146,18 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
     let bulk_locks = probes::take_lock_acqs();
     let bulk_atomics = probes::take_atomic_ops();
     let bulk_groups = probes::take_bulk_groups();
+    drop(t);
+
+    // ---- frozen-tier comparison: same keys, perfect-hash snapshot ----
+    probes::set_enabled(false);
+    let frozen = FrozenTable::freeze(cpairs);
+    let mut fres = Vec::with_capacity(nc);
+    let frozen_qry = mops(nc, || frozen.query_bulk(cks, &mut fres));
+    probes::set_enabled(true);
+    fres.clear();
+    let s = ProbeScope::begin();
+    frozen.query_bulk(cks, &mut fres);
+    let frozen_lines = s.finish() as u64;
 
     let per_op = (3 * nc).max(1) as f64;
     BulkRow {
@@ -159,6 +177,10 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> BulkRow {
         scalar_lines_per_op: scalar_lines as f64 / per_op,
         bulk_lines_per_op: bulk_lines as f64 / per_op,
         bulk_groups,
+        frozen_qry,
+        // One query launch over nc keys (the other phases have no
+        // frozen analog: the tier is immutable).
+        frozen_lines_per_op: frozen_lines as f64 / nc.max(1) as f64,
     }
 }
 
@@ -187,6 +209,7 @@ pub fn run(env: &BenchEnv) -> String {
             report::fmt_f(r.scalar_del, 1),
             report::fmt_f(r.bulk_del, 1),
             speedup(r.bulk_del, r.scalar_del),
+            report::fmt_f(r.frozen_qry, 1),
         ]);
         cn_rows.push(vec![
             r.name.clone(),
@@ -198,6 +221,7 @@ pub fn run(env: &BenchEnv) -> String {
             report::fmt_f(r.scalar_lines_per_op, 2),
             report::fmt_f(r.bulk_lines_per_op, 2),
             r.bulk_groups.to_string(),
+            report::fmt_f(r.frozen_lines_per_op, 2),
         ]);
         json_lines.push_str(&report::json_row(&[
             ("table", JsonVal::Str(r.name)),
@@ -216,6 +240,8 @@ pub fn run(env: &BenchEnv) -> String {
             ("scalar_lines_per_op", JsonVal::Num(r.scalar_lines_per_op)),
             ("bulk_lines_per_op", JsonVal::Num(r.bulk_lines_per_op)),
             ("bulk_bucket_groups", JsonVal::Int(r.bulk_groups)),
+            ("frozen_qry_mops", JsonVal::Num(r.frozen_qry)),
+            ("frozen_lines_per_op", JsonVal::Num(r.frozen_lines_per_op)),
         ]));
         json_lines.push('\n');
     }
@@ -223,7 +249,7 @@ pub fn run(env: &BenchEnv) -> String {
         "Bulk pipeline — scalar vs bulk throughput (Mops/s)",
         &[
             "table", "ins", "ins(bulk)", "speedup", "qry", "qry(bulk)", "speedup", "del",
-            "del(bulk)", "speedup",
+            "del(bulk)", "speedup", "qry(froz)",
         ],
         &tp_rows,
     );
@@ -240,6 +266,7 @@ pub fn run(env: &BenchEnv) -> String {
             "lines/op",
             "lines/op(bulk)",
             "groups(bulk)",
+            "lines/op(froz)",
         ],
         &cn_rows,
     ));
@@ -277,6 +304,10 @@ mod tests {
         assert!(r.scalar_lines_per_op > 0.0);
         assert!(r.bulk_lines_per_op > 0.0);
         assert!(r.bulk_groups > 0, "native design must dispatch groups");
+        assert!(
+            r.frozen_qry > 0.0 && r.frozen_lines_per_op > 0.0,
+            "frozen comparison column must be populated"
+        );
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod aging;
 pub mod adversarial;
 pub mod bulk;
 pub mod caching;
+pub mod freeze;
 pub mod grow;
 pub mod load;
 pub mod probes;

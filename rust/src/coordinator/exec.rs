@@ -127,6 +127,18 @@ pub struct ReshardPolicy {
     pub migration_stripes: usize,
     /// Ceiling on the shard count.
     pub max_shards: usize,
+    /// Consecutive idle-queue submits with stable topology after which
+    /// every shard still holding mutable residue gets a `Freeze` job:
+    /// its live entries move into a frozen read-optimized tier
+    /// ([`crate::tables::TieredMap`]) rebuilt on the shard's affine
+    /// worker, where channel FIFO gives the rebuild the quiesced-writer
+    /// window it needs. `0` (the default) disables policy freezes AND
+    /// tiered shard construction — setting it non-zero is what makes
+    /// [`Coordinator::new`] build [`ShardedTable::new_tiered`] shards
+    /// (and arms [`Coordinator::freeze_now`]). Any disqualifying submit
+    /// (busy queue, rescale in progress) resets the streak, mirroring
+    /// [`ReshardPolicy::merge_hysteresis`].
+    pub freeze_after_idle: usize,
 }
 
 impl Default for ReshardPolicy {
@@ -140,6 +152,7 @@ impl Default for ReshardPolicy {
             // 256/64 = 4 parent scans per pair (see the field docs).
             migration_stripes: 64,
             max_shards: 1024,
+            freeze_after_idle: 0,
         }
     }
 }
@@ -303,15 +316,25 @@ enum Job {
     /// routing stripes — `SplitMigrate` in reverse, enqueued ahead of
     /// each batch per unfinished pair on the parent's worker.
     MergeMigrate { pair: usize, stripes: usize },
+    /// Rebuild shard `shard_idx`'s frozen tier from its live entries
+    /// ([`ConcurrentMap::request_freeze`]). Runs on the shard's affine
+    /// worker: every mutating batch for the shard serializes through the
+    /// same channel, so channel FIFO is the freeze's quiesced-writer
+    /// window (concurrent readers stay lock-free throughout), and a
+    /// rescale cannot start under it because cutovers drain the pool
+    /// first. Dropped harmlessly if a sealed merge retired the index.
+    Freeze { shard_idx: usize },
     /// Epoch-cutover drain marker: the worker acks once every job queued
     /// before it has finished (channel FIFO).
     Barrier(Sender<()>),
 }
 
 /// Long-lived shard-affine workers. Spawned at coordinator construction
-/// and grown (never shrunk) at reshard cutovers; each drains its own job
-/// channel until the coordinator drops, which disconnects the channels
-/// and joins every thread.
+/// and resized at reshard cutovers — grown toward the configured width
+/// on a split, shrunk alongside the shards on a merge (rather than
+/// leaving spare workers idling on empty channels); each drains its own
+/// job channel until it is shrunk away or the coordinator drops, either
+/// of which disconnects the channel and joins the thread.
 struct WorkerPool {
     txs: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
@@ -343,6 +366,20 @@ impl WorkerPool {
                 .expect("failed to spawn coordinator worker");
             self.txs.push(tx);
             self.handles.push(handle);
+        }
+    }
+
+    /// Shrink the pool to `n` workers (no-op if already that narrow).
+    /// Same call-site contract as [`WorkerPool::grow_to`]: only inside
+    /// the epoch-cutover gate, after the drain — the dropped channels
+    /// are empty and affinity `i % n_workers` is about to be remapped,
+    /// so no queued or future job can address a popped worker. Popping a
+    /// sender disconnects its worker's recv loop; the join is bounded.
+    fn shrink_to(&mut self, n: usize) {
+        let n = n.max(1);
+        self.txs.truncate(n);
+        while self.handles.len() > n {
+            let _ = self.handles.pop().expect("handles shrank below n").join();
         }
     }
 
@@ -401,6 +438,16 @@ impl WorkerPool {
                     table.drive_merge(pair, stripes);
                     inflight.fetch_sub(1, Ordering::Relaxed);
                 }
+                Job::Freeze { shard_idx } => {
+                    // Same stale-index rule as Job::Migrate: a merge that
+                    // sealed since enqueue retired the index, drop it.
+                    if let Some(shard) = table.try_shard_handle(shard_idx) {
+                        if shard.can_freeze() {
+                            shard.request_freeze();
+                        }
+                    }
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
                 Job::Barrier(ack) => {
                     let _ = ack.send(());
                 }
@@ -440,7 +487,7 @@ pub struct Coordinator {
     /// Optional read-run offload (PJRT bulk-query path).
     offload: Option<Arc<dyn ReadOffload>>,
     /// Persistent shard-affine worker pool. Write-locked only inside the
-    /// epoch-cutover gate (pool growth); submit takes the read side.
+    /// epoch-cutover gate (pool resize); submit takes the read side.
     pool: RwLock<WorkerPool>,
     /// Jobs enqueued but not yet finished — the queue-depth signal the
     /// reshard policy reads.
@@ -455,17 +502,32 @@ pub struct Coordinator {
     /// ([`ReshardPolicy::merge_hysteresis`]). Only read/written under
     /// the epoch gate; atomic merely to stay `Sync` without a lock.
     merge_streak: AtomicUsize,
+    /// Consecutive idle submits toward policy freeze jobs
+    /// ([`ReshardPolicy::freeze_after_idle`]); same locking discipline
+    /// as `merge_streak`.
+    freeze_streak: AtomicUsize,
     /// Operations executed (metrics).
     pub ops_executed: std::sync::atomic::AtomicU64,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
-        let table = Arc::new(match cfg.growth {
-            Some(policy) => {
-                ShardedTable::new_growable(cfg.kind, cfg.total_slots, cfg.n_shards, policy)
+        // A non-zero freeze_after_idle is the opt-in for tiered shards:
+        // freezing needs somewhere to put the frozen tier, and untiered
+        // runs shouldn't pay the TieredMap indirection.
+        let tiered = cfg
+            .reshard
+            .map(|p| p.freeze_after_idle > 0)
+            .unwrap_or(false);
+        let table = Arc::new(if tiered {
+            ShardedTable::new_tiered(cfg.kind, cfg.total_slots, cfg.n_shards, cfg.growth)
+        } else {
+            match cfg.growth {
+                Some(policy) => {
+                    ShardedTable::new_growable(cfg.kind, cfg.total_slots, cfg.n_shards, policy)
+                }
+                None => ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards),
             }
-            None => ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards),
         });
         let inflight = Arc::new(AtomicUsize::new(0));
         // More workers than shards would park forever on empty channels
@@ -481,6 +543,7 @@ impl Coordinator {
             inflight,
             epoch_gate: Mutex::new(epoch),
             merge_streak: AtomicUsize::new(0),
+            freeze_streak: AtomicUsize::new(0),
             ops_executed: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -656,11 +719,12 @@ impl Coordinator {
     /// (forced): optionally begin a split or merge, and on any epoch
     /// change (begun here, or an external [`ShardedTable::split_shards`]
     /// observed late) drain the workers before anything partitions under
-    /// the new router, then grow the pool toward the configured width
-    /// (the pool never shrinks on a merge — spare workers idle on empty
-    /// channels until the next split re-pins shards to them). The caller
-    /// holds the epoch gate. Returns the router to partition under, plus
-    /// whether a requested rescale actually began.
+    /// the new router, then resize the pool to the new topology's width —
+    /// grown toward the configured `n_workers` on a split, shrunk
+    /// alongside the shards on a merge so spare workers don't sit idling
+    /// on empty channels until the next split. The caller holds the
+    /// epoch gate. Returns the router to partition under, plus whether a
+    /// requested rescale actually began.
     fn cutover_locked(&self, gate: &mut u32, force: Option<Rescale>) -> (Router, bool) {
         let mut router = self.table.current_router();
         let mut drained = false;
@@ -697,10 +761,17 @@ impl Coordinator {
                 self.drain_workers();
             }
             *gate = router.epoch();
-            // Remap shard→worker affinity for the new topology.
+            // Remap shard→worker affinity for the new topology. Both
+            // directions are safe here: the pipeline just drained, so
+            // every channel is empty and nothing queued addresses the
+            // old affinity.
             let want = self.cfg.n_workers.min(router.n_shards()).max(1);
             let mut pool = self.pool.write().unwrap_or_else(|e| e.into_inner());
-            pool.grow_to(&self.table, want, &self.inflight);
+            if want < pool.len() {
+                pool.shrink_to(want);
+            } else {
+                pool.grow_to(&self.table, want, &self.inflight);
+            }
         }
         (router, began)
     }
@@ -815,6 +886,13 @@ impl Coordinator {
                 self.send_aux(&pool, pair % n_workers, Job::MergeMigrate { pair, stripes });
             }
         }
+        // Freeze interleaving: once the queue has sat idle for
+        // `freeze_after_idle` consecutive submits on a stable topology,
+        // each shard still holding mutable residue gets one Freeze job
+        // queued ahead of this batch on its affine worker — channel FIFO
+        // serializes it against the shard's mutating batches, which is
+        // exactly the quiesced-writer window request_freeze needs.
+        self.maybe_enqueue_freezes(&pool, n_workers);
         let mut per_worker: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
             (0..n_workers).map(|_| Vec::new()).collect();
         for (i, p) in parts.into_iter().enumerate() {
@@ -856,6 +934,90 @@ impl Coordinator {
         if pool.txs[w].send(job).is_err() {
             self.inflight.fetch_sub(1, Ordering::Relaxed);
         }
+    }
+
+    /// Evaluate [`ReshardPolicy::freeze_after_idle`] for one submit
+    /// (under the epoch gate) and enqueue `Job::Freeze` for every shard
+    /// with mutable residue once the idle streak matures. Disqualifying
+    /// submits — busy queue, rescale in progress, nothing to freeze —
+    /// reset the streak, so freezes only fire on genuinely quiet tables.
+    fn maybe_enqueue_freezes(&self, pool: &WorkerPool, n_workers: usize) {
+        let Some(policy) = self.cfg.reshard else {
+            return;
+        };
+        if policy.freeze_after_idle == 0 || !self.table.is_tiered() {
+            return;
+        }
+        let busy = !policy.queue_idle(self.pending_jobs_per_worker());
+        let rescaling = self.table.split_in_progress() || self.table.merge_in_progress();
+        // Residue = live entries not yet served frozen. Tombstone-only
+        // staleness is deliberately not a trigger: request_freeze would
+        // compact it, but churning rebuilds for dead fingerprints isn't
+        // worth the copy (erase-heavy phases re-trip this via residue
+        // anyway once promotions follow).
+        let residue: Vec<usize> = self
+            .table
+            .shards_snapshot()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.can_freeze() && s.len() > s.frozen_len())
+            .map(|(i, _)| i)
+            .collect();
+        if busy || rescaling || residue.is_empty() {
+            self.freeze_streak.store(0, Ordering::Relaxed);
+            return;
+        }
+        let streak = self.freeze_streak.load(Ordering::Relaxed) + 1;
+        if streak < policy.freeze_after_idle {
+            self.freeze_streak.store(streak, Ordering::Relaxed);
+            return;
+        }
+        self.freeze_streak.store(0, Ordering::Relaxed);
+        for i in residue {
+            self.send_aux(pool, i % n_workers, Job::Freeze { shard_idx: i });
+        }
+    }
+
+    /// Enqueue a `Job::Freeze` for every shard through its affine worker
+    /// and wait for the pool to drain — the deterministic counterpart of
+    /// the [`ReshardPolicy::freeze_after_idle`] trigger, for benches,
+    /// tests, and cooldown paths that know "now" is the quiet moment.
+    /// Returns false without enqueueing anything when the table is
+    /// untiered or a rescale is mid-flight (freezing a shard whose
+    /// entries are mid-migration would race the migrator's writes; the
+    /// policy path refuses under the same condition).
+    pub fn freeze_now(&self) -> bool {
+        let gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
+        if !self.table.is_tiered()
+            || self.table.split_in_progress()
+            || self.table.merge_in_progress()
+        {
+            return false;
+        }
+        {
+            let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
+            let n_workers = pool.len();
+            for i in 0..self.table.n_shards() {
+                self.send_aux(&pool, i % n_workers, Job::Freeze { shard_idx: i });
+            }
+        }
+        // Freeze jobs are enqueued; a cutover beginning after the gate
+        // drops drains the pool first, so they complete before any
+        // migration could touch the shards they address.
+        drop(gate);
+        self.drain_workers();
+        true
+    }
+
+    /// Live entries currently served from frozen read-optimized tiers,
+    /// summed across shards (0 when untiered).
+    pub fn frozen_len(&self) -> usize {
+        self.table.frozen_len()
+    }
+
+    /// Completed frozen-tier rebuilds across all shards (metrics).
+    pub fn freeze_events(&self) -> u64 {
+        self.table.freeze_events()
     }
 
     /// Old-table buckets one [`Job::Migrate`] advances — one policy batch
@@ -1847,5 +2009,119 @@ mod tests {
             std::thread::yield_now();
         }
         assert_eq!(c.pending_jobs_per_worker(), 0, "inflight gauge never drained");
+    }
+
+    #[test]
+    fn merge_cutover_shrinks_worker_pool_with_the_shards() {
+        // Enough workers for every shard, then a forced halving: the
+        // cutover must narrow the pool to the new shard count instead of
+        // leaving spare workers parked on empty channels — and a split
+        // back up must re-grow it, with correct traffic throughout.
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::P2,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 4,
+            max_batch: 64,
+            growth: None,
+            reshard: None,
+        });
+        assert_eq!(c.n_workers(), 4);
+        let ks = distinct_keys(512, 0xFA);
+        let w = c.run_stream(ks.iter().map(|&k| Op::Upsert(k, k ^ 7)));
+        assert!(w.iter().all(|&x| x == OpResult::Upserted(true)));
+        assert!(c.request_merge());
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.n_shards(), 2);
+        assert_eq!(c.n_workers(), 2, "pool kept spare workers after the merge");
+        assert!(c.request_merge());
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.n_shards(), 1);
+        assert_eq!(c.n_workers(), 1, "pool must track the halving to one shard");
+        let r = c.run_stream(ks.iter().map(|&k| Op::Query(k)));
+        for (i, &x) in r.iter().enumerate() {
+            assert_eq!(x, OpResult::Value(Some(ks[i] ^ 7)), "query {i} after shrink");
+        }
+        assert!(c.request_reshard());
+        assert!(c.finish_resharding());
+        assert_eq!(c.table.n_shards(), 2);
+        assert_eq!(c.n_workers(), 2, "pool never re-grew after the split");
+        assert_eq!(c.table.len(), ks.len());
+    }
+
+    #[test]
+    fn freeze_policy_builds_frozen_tier_and_serves_promotions() {
+        // freeze_after_idle arms tiered shards; freeze_now moves the
+        // quiet population into frozen tiers through the worker pool,
+        // reads keep answering, and writes promote back out with
+        // exactly-once residency.
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::DoubleMeta,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 4,
+            max_batch: 128,
+            growth: None,
+            reshard: Some(ReshardPolicy {
+                freeze_after_idle: 2,
+                ..Default::default()
+            }),
+        });
+        assert!(c.table.is_tiered(), "freeze_after_idle must arm tiered shards");
+        let ks = distinct_keys(2048, 0xFB);
+        let w = c.run_stream(ks.iter().map(|&k| Op::Upsert(k, k ^ 9)));
+        assert!(w.iter().all(|&x| x == OpResult::Upserted(true)));
+        assert_eq!(c.frozen_len(), 0, "nothing frozen before the trigger");
+        assert!(c.freeze_now(), "tiered stable topology must accept a freeze");
+        assert_eq!(c.frozen_len(), ks.len(), "whole population should freeze");
+        assert!(c.freeze_events() >= 4, "every shard should report a rebuild");
+        // Reads are served from the frozen tier, and a mixed round of
+        // writes promotes exactly the touched keys back to mutable.
+        let r = c.run_stream(ks.iter().map(|&k| Op::Query(k)));
+        for (i, &x) in r.iter().enumerate() {
+            assert_eq!(x, OpResult::Value(Some(ks[i] ^ 9)), "frozen query {i}");
+        }
+        let touched = &ks[..256];
+        let w2 = c.run_stream(touched.iter().map(|&k| Op::UpsertAdd(k, 1)));
+        assert!(
+            w2.iter().all(|&x| x == OpResult::Upserted(false)),
+            "promotion must merge, not re-insert"
+        );
+        assert_eq!(c.frozen_len(), ks.len() - touched.len());
+        let r2 = c.run_stream(touched.iter().map(|&k| Op::Query(k)));
+        for (i, &x) in r2.iter().enumerate() {
+            assert_eq!(x, OpResult::Value(Some((touched[i] ^ 9) + 1)), "promoted {i}");
+        }
+        // The idle-streak policy path: two quiet read-only submits in a
+        // row enqueue the refreeze that reabsorbs the promotions.
+        let probe = Batch {
+            ops: vec![(0, Op::Query(ks[0]))],
+        };
+        for _ in 0..4 {
+            let pending = c.submit(&probe);
+            let _ = c.collect(pending);
+            // Let the inflight gauge drain so the next submit sees idle.
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+            while c.pending_jobs_per_worker() > 0 && std::time::Instant::now() < deadline {
+                std::thread::yield_now();
+            }
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while c.frozen_len() < ks.len() && std::time::Instant::now() < deadline {
+            let pending = c.submit(&probe);
+            let _ = c.collect(pending);
+            std::thread::yield_now();
+        }
+        assert_eq!(
+            c.frozen_len(),
+            ks.len(),
+            "idle-streak policy never refroze the promotions"
+        );
+        assert_eq!(c.table.len(), ks.len(), "freeze cycle lost or duplicated keys");
+        let mut copies = std::collections::HashMap::new();
+        for shard in c.table.shards_snapshot() {
+            shard.for_each_entry(&mut |k, _| *copies.entry(k).or_insert(0u32) += 1);
+        }
+        assert!(copies.values().all(|&n| n == 1), "a key is resident in both tiers");
     }
 }

@@ -79,7 +79,23 @@
 //! compact too: [`crate::tables::GrowthPolicy::shrink_below`] arms a ½×
 //! low-watermark shrink through the growth machinery run in reverse.
 //! `warpspeed shrink` / [`crate::bench::shrink`] exhibits the full
-//! lifecycle.
+//! lifecycle. The worker pool tracks the topology in BOTH directions:
+//! cutovers grow it toward the configured width on a split and shrink
+//! it alongside the shards on a merge (channels drain first, so no
+//! queued job can address a popped worker).
+//!
+//! ## The frozen tier
+//!
+//! With [`ReshardPolicy::freeze_after_idle`] set, shards are
+//! [`crate::tables::TieredMap`]s and the coordinator watches for quiet:
+//! after that many consecutive idle-queue submits on a stable topology,
+//! every shard still holding mutable residue gets a `Freeze` job queued
+//! on its affine worker — channel FIFO is the quiesced-writer window the
+//! perfect-hash rebuild needs, while concurrent readers stay lock-free.
+//! [`Coordinator::freeze_now`] forces the same thing deterministically;
+//! rescales exclude freezes (cutovers drain the pool before migrating),
+//! and a write to a frozen key simply promotes it back to the mutable
+//! tier. `warpspeed freeze` / [`crate::bench::freeze`] exhibits it.
 //!
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches

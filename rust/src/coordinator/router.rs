@@ -88,8 +88,8 @@ use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use crate::gpusim::LockArray;
 use crate::hash::seeded;
 use crate::tables::{
-    build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, TableConfig, TableKind, UpsertOp,
-    UpsertResult,
+    build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, TableConfig, TableKind, TieredMap,
+    UpsertOp, UpsertResult,
 };
 
 /// Routing hash seed — distinct from all table seeds so shard choice is
@@ -281,6 +281,11 @@ pub struct ShardedTable {
     /// Growth policy each shard (and every future split child) is
     /// wrapped with; `None` = fixed-capacity shards.
     growth: Option<GrowthPolicy>,
+    /// Wrap every shard (and every future split child) in a
+    /// [`TieredMap`], giving it a frozen read-optimized tier the
+    /// coordinator's freeze jobs (and [`ConcurrentMap::request_freeze`])
+    /// can rebuild online.
+    tiered: bool,
     topo: RwLock<Topology>,
     /// Completed shard-count doublings over this table's lifetime.
     splits: AtomicU64,
@@ -293,7 +298,20 @@ pub struct ShardedTable {
 
 impl ShardedTable {
     pub fn new(kind: TableKind, total_slots: usize, n_shards: usize) -> Self {
-        Self::build(kind, total_slots, n_shards, None)
+        Self::build(kind, total_slots, n_shards, None, false)
+    }
+
+    /// Like [`ShardedTable::new`]/[`ShardedTable::new_growable`] but each
+    /// shard carries a frozen read-optimized tier ([`TieredMap`]): reads
+    /// serve frozen-first, writes to frozen keys promote them back, and
+    /// freeze cutovers ride the coordinator's shard-affine workers.
+    pub fn new_tiered(
+        kind: TableKind,
+        total_slots: usize,
+        n_shards: usize,
+        growth: Option<GrowthPolicy>,
+    ) -> Self {
+        Self::build(kind, total_slots, n_shards, growth, true)
     }
 
     /// Like [`ShardedTable::new`] but every shard is wrapped in a
@@ -307,7 +325,7 @@ impl ShardedTable {
         n_shards: usize,
         policy: GrowthPolicy,
     ) -> Self {
-        Self::build(kind, total_slots, n_shards, Some(policy))
+        Self::build(kind, total_slots, n_shards, Some(policy), false)
     }
 
     fn build(
@@ -315,12 +333,14 @@ impl ShardedTable {
         total_slots: usize,
         n_shards: usize,
         growth: Option<GrowthPolicy>,
+        tiered: bool,
     ) -> Self {
         let router = Router::new(n_shards);
         let per_shard = total_slots.div_ceil(n_shards);
         let this = Self {
             kind,
             growth,
+            tiered,
             topo: RwLock::new(Topology::Normal {
                 router,
                 shards: Vec::new(),
@@ -336,9 +356,14 @@ impl ShardedTable {
 
     fn build_shard(&self, slots: usize) -> Arc<dyn ConcurrentMap> {
         let cfg = TableConfig::for_kind(self.kind, slots);
-        match self.growth {
+        let base: Arc<dyn ConcurrentMap> = match self.growth {
             Some(policy) => Arc::new(GrowableMap::new(self.kind, cfg, policy)),
             None => build_table_with(self.kind, cfg),
+        };
+        if self.tiered {
+            Arc::new(TieredMap::new(base))
+        } else {
+            base
         }
     }
 
@@ -1352,6 +1377,24 @@ impl ShardedTable {
     /// fixed-capacity shards.
     pub fn shrink_events(&self) -> u64 {
         self.with_shards(|sh| sh.iter().map(|s| s.shrink_events()).sum())
+    }
+
+    /// Whether the shards carry a frozen tier (built via
+    /// [`ShardedTable::new_tiered`]) — what arms the coordinator's
+    /// freeze jobs.
+    pub fn is_tiered(&self) -> bool {
+        self.tiered
+    }
+
+    /// Live entries served from the shards' frozen tiers (0 for
+    /// untiered tables).
+    pub fn frozen_len(&self) -> usize {
+        self.with_shards(|sh| sh.iter().map(|s| s.frozen_len()).sum())
+    }
+
+    /// Freeze cutovers across every resident shard's lifetime.
+    pub fn freeze_events(&self) -> u64 {
+        self.with_shards(|sh| sh.iter().map(|s| s.freeze_events()).sum())
     }
 
     /// Capacity that would remain after a shard-count halving: the

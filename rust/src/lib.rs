@@ -89,6 +89,25 @@
 //! walks a cooled cache back to its provisioning; the `shrink` exhibit
 //! ([`bench::shrink`]) round-trips the whole lifecycle against a
 //! sequential oracle.
+//!
+//! # Tiered storage — the frozen read-optimized tier
+//!
+//! Where the lifecycle above ends — a cooled, compacted, read-mostly
+//! population — the frozen tier begins. [`tables::FrozenTable`] is an
+//! immutable CHD minimal-perfect-hash snapshot of that population: one
+//! displacement-array probe resolves each key to a unique bin, a fused
+//! fingerprint/rank cache line rejects negatives in ≤ 2 line touches
+//! and Elias-Fano-style ranks the hit into a dense pair store at
+//! effective load factor 1.0. [`tables::TieredMap`] serves reads
+//! frozen-first/mutable-second lock-free behind the unchanged
+//! [`tables::ConcurrentMap`] surface; a write to a frozen key promotes
+//! it back into the mutable tier (seed-then-invalidate under a stripe
+//! lock, with an epoch bump so no reader trusts a stale frozen miss).
+//! [`coordinator::ReshardPolicy::freeze_after_idle`] arms idle-streak
+//! freeze jobs on the coordinator's shard-affine workers,
+//! [`apps::caching::GpuCache::with_tiered`] freezes cache survivors at
+//! cooldown, and the `freeze` exhibit ([`bench::freeze`]) measures
+//! frozen vs mutable bulk launches against a sequential oracle.
 
 pub mod gpusim;
 pub mod hash;
@@ -104,3 +123,4 @@ pub mod runtime;
 pub mod cli;
 
 pub use tables::{ConcurrentMap, TableKind, UpsertOp, build_table, TableConfig, ConcurrencyMode};
+pub use tables::{FrozenTable, TieredMap};

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! warpspeed info
-//! warpspeed probes|bulk|grow|reshard|shrink|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
+//! warpspeed probes|bulk|grow|reshard|shrink|freeze|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
 //!           [--slots N] [--iters N] [--seed S]
 //! warpspeed all          # every exhibit in sequence
 //! warpspeed serve [--table p2m] [--slots N] [--shards N] [--grow] [--reshard] [--shrink]
@@ -37,13 +37,14 @@ fn main() {
             println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
             println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
             println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
-            println!("subcommands: probes bulk grow reshard shrink load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
+            println!("subcommands: probes bulk grow reshard shrink freeze load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
         }
         "probes" => print!("{}", bench::probes::run(&env)),
         "bulk" => print!("{}", bench::bulk::run(&env)),
         "grow" => print!("{}", bench::grow::run(&env)),
         "reshard" => print!("{}", bench::reshard::run(&env)),
         "shrink" => print!("{}", bench::shrink::run(&env)),
+        "freeze" => print!("{}", bench::freeze::run(&env)),
         "load" => print!("{}", bench::load::run(&env)),
         "aging" => print!("{}", bench::aging::run(&env)),
         "caching" => print!("{}", bench::caching::run(&env)),
@@ -62,6 +63,7 @@ fn main() {
                 ("grow", bench::grow::run),
                 ("reshard", bench::reshard::run),
                 ("shrink", bench::shrink::run),
+                ("freeze", bench::freeze::run),
                 ("load", bench::load::run),
                 ("aging", bench::aging::run),
                 ("caching", bench::caching::run),

@@ -1,0 +1,1184 @@
+//! Frozen read-optimized tier: immutable minimal-perfect-hash shard
+//! snapshots with write-back promotion (ROADMAP "Frozen read-optimized
+//! tier"; cf. Hegeman et al., "Compact Parallel Hash Tables on the GPU").
+//!
+//! A [`FrozenTable`] is built once from a quiesced snapshot of a shard's
+//! live pairs and never rearranged afterwards:
+//!
+//! * **CHD displacement array** (`disp`): one `(d0, d1)` pair per hash
+//!   bucket of ~[`LAMBDA`] keys, found by the classic
+//!   compress-hash-displace search over the same seeded-fmix64 family the
+//!   router's `route_hash` uses ([`crate::hash::seeded`]). A key's bin is
+//!   `f1 + d0·f2 + d1 (mod m)` — exactly one candidate bin per key, no
+//!   probe chain.
+//! * **Fingerprint + rank blocks** (`fpr`): one 128-byte line per 120
+//!   bins, packing a fingerprint byte per bin next to a cumulative
+//!   occupied-bin count for the block. This is the Elias–Fano index of
+//!   the occupied-bin sequence specialized to `l = 0` low bits (bins/key
+//!   < 2, so the EF lower-bits array is empty): the fingerprint bytes
+//!   double as the upper-bits occupancy vector, and the per-block
+//!   cumulative count is the EF select directory. One line answers both
+//!   "is the bin occupied with my fingerprint?" (the paper-style
+//!   one-probe negative lookup) and "what is its rank?" — the index into
+//!   the dense pair store.
+//! * **Dense pair store** (`pairs`): the n key-value pairs packed
+//!   back-to-back in rank order — effective load factor exactly 1.0, vs
+//!   the ~0.7 slack a mutable open-addressing shard carries.
+//!
+//! A scalar positive query therefore touches 3 cache lines (disp → fpr
+//! block → pair) and a fingerprint-rejected negative touches 2; the
+//! native bulk path amortizes the disp line across every batched key in
+//! the same CHD bucket, which is where the frozen tier's probes/op drops
+//! strictly below every mutable design (the `freeze` exhibit's headline).
+//!
+//! [`TieredMap`] composes a frozen tier with any mutable design behind
+//! the full [`ConcurrentMap`] surface: reads go frozen-first then
+//! mutable, writes to a frozen key *promote* it back into the mutable
+//! tier (seed the mutable copy, then kill the frozen fingerprint — the
+//! same seed-then-erase discipline shard migration uses) under a
+//! striped promotion lock, with an epoch bump so no retrying reader can
+//! miss a key that moved tiers mid-lookup.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::gpusim::mem::SimMem;
+use crate::gpusim::LockArray;
+use crate::hash::seeded;
+
+use super::{for_each_bucket_group, ConcurrentMap, SlotWriter, UpsertOp, UpsertResult};
+
+/// Base seed of the freeze hash family — a distinct member of the
+/// seeded-fmix64 family `route_hash` draws from, rotated per rebuild
+/// attempt so a pathological key set cannot pin the CHD search.
+pub const FREEZE_SEED: u64 = 0xF07E_0C0D_E5EE_D001;
+
+/// Average keys per CHD bucket (the classic CHD λ). 5 keeps the
+/// displacement array at ~1.6 bytes/key while the bounded search still
+/// terminates quickly.
+const LAMBDA: usize = 5;
+
+/// Fingerprint bins per 128-byte `fpr` block: 15 words of 8 fingerprint
+/// bytes, after the leading cumulative-rank word.
+const BINS_PER_BLOCK: usize = 120;
+
+/// Slots (8 bytes each) per `fpr` block — exactly one cache line.
+const BLOCK_SLOTS: usize = 16;
+
+/// Fingerprint byte of a never-occupied bin.
+const FP_EMPTY: u8 = 0x00;
+
+/// Fingerprint byte of a bin whose entry was promoted/erased after the
+/// freeze. Still counts in ranks (the dense pair store never moves) but
+/// can never match a live fingerprint (keys map into `1..=0xFE`).
+const FP_TOMB: u8 = 0xFF;
+
+/// CHD rebuild attempts (seed rotations) before giving up. Each single-
+/// key bucket is guaranteed placeable by the `d1` sweep, so failure
+/// requires a multi-key bucket to defeat `16·m` trials — rotating the
+/// seed makes 64 consecutive failures astronomically unlikely.
+const MAX_ATTEMPTS: u32 = 64;
+
+/// Promotion-lock stripes in the [`TieredMap`] (bin index mod stripes).
+const PROMO_STRIPES: usize = 256;
+
+/// Count of non-zero bytes in a word (SWAR): a bin's fingerprint byte is
+/// non-zero iff the bin is occupied (live or tombstoned), which is what
+/// rank counts — the dense pair store keeps slots of killed entries.
+#[inline(always)]
+fn nonzero_bytes(x: u64) -> usize {
+    const HI: u64 = 0x8080_8080_8080_8080;
+    const LO: u64 = 0x0101_0101_0101_0101;
+    // (b | 0x80) - 1 never borrows across bytes; its high bit survives
+    // iff b != 0 (or b itself has the high bit).
+    ((x | (x | HI).wrapping_sub(LO)) & HI).count_ones() as usize
+}
+
+/// Immutable minimal-perfect-hash snapshot of a key population. See the
+/// module docs for the layout; built by [`FrozenTable::freeze`].
+pub struct FrozenTable {
+    /// Entries at freeze time == dense pair-store capacity.
+    n: usize,
+    /// Bins (candidate positions). `m == n` on the first CHD attempt —
+    /// a *minimal* perfect hash — growing by small slack on retries.
+    m: usize,
+    /// CHD displacement buckets (≈ n / λ).
+    b: usize,
+    /// Rotated member of the route-hash seed family this build used.
+    seed: u64,
+    /// One `(d0 << 32) | d1` displacement word per CHD bucket.
+    disp: SimMem,
+    /// Fused fingerprint + rank blocks (one line per 120 bins).
+    fpr: SimMem,
+    /// Dense pair store: key at `2·rank`, value at `2·rank + 1` (never
+    /// line-straddling: both slots share a 16-slot line).
+    pairs: SimMem,
+    /// Entries not yet killed by promotion/erase.
+    live: AtomicUsize,
+}
+
+impl FrozenTable {
+    /// Build a frozen snapshot of `entries`. Keys must be distinct user
+    /// keys (the quiesced `for_each_entry` of any table guarantees both);
+    /// duplicates panic — they would make the CHD search diverge.
+    pub fn freeze(entries: &[(u64, u64)]) -> Self {
+        let n = entries.len();
+        if n == 0 {
+            return Self {
+                n: 0,
+                m: 0,
+                b: 0,
+                seed: FREEZE_SEED,
+                disp: SimMem::new(1),
+                fpr: SimMem::new(1),
+                pairs: SimMem::new(2),
+                live: AtomicUsize::new(0),
+            };
+        }
+        for attempt in 0..MAX_ATTEMPTS {
+            let seed = seeded(attempt as u64 + 1, FREEZE_SEED);
+            // Minimal (m == n) for the first attempts, then add ~6% slack
+            // per group of failures to loosen the placement.
+            let m = n + (attempt as usize / 4) * (n / 16 + 1);
+            if let Some(t) = Self::try_build(entries, seed, m) {
+                return t;
+            }
+        }
+        panic!("FrozenTable: CHD build failed {MAX_ATTEMPTS} seed rotations for {n} keys");
+    }
+
+    /// Build from a quiesced table (the caller must exclude writers, as
+    /// for [`ConcurrentMap::for_each_entry`]).
+    pub fn freeze_from(src: &dyn ConcurrentMap) -> Self {
+        let mut entries = Vec::with_capacity(src.len());
+        src.for_each_entry(&mut |k, v| entries.push((k, v)));
+        Self::freeze(&entries)
+    }
+
+    /// The key's bin under displacement pair `(d0, d1)` — the CHD
+    /// `h1 + d0·h2 + d1` form (cf. the precomputed-map exemplar), with
+    /// `f2` forced odd so `d0` multiplies by a unit mod 2^64.
+    #[inline(always)]
+    fn place(g: u64, d0: u64, d1: u64, m: usize) -> usize {
+        let f1 = g >> 32;
+        let f2 = ((g >> 16) & 0xFFFF_FFFF) | 1;
+        (f1.wrapping_add(d0.wrapping_mul(f2)).wrapping_add(d1) % m as u64) as usize
+    }
+
+    /// Fingerprint byte of hash `g`, remapped off the two sentinels.
+    #[inline(always)]
+    fn fp_of(g: u64) -> u8 {
+        match (g >> 24) as u8 {
+            FP_EMPTY => 1,
+            FP_TOMB => 0xFE,
+            x => x,
+        }
+    }
+
+    /// One CHD construction attempt at a fixed seed and bin count.
+    fn try_build(entries: &[(u64, u64)], seed: u64, m: usize) -> Option<Self> {
+        let n = entries.len();
+        let b = n.div_ceil(LAMBDA).max(1);
+        let gs: Vec<u64> = entries.iter().map(|&(k, _)| seeded(k, seed)).collect();
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); b];
+        for (i, &g) in gs.iter().enumerate() {
+            buckets[(g % b as u64) as usize].push(i as u32);
+        }
+        // Same key ⇒ same g ⇒ same bucket, so a per-bucket scan suffices
+        // to reject duplicates (which no seed rotation could place).
+        for bk in &buckets {
+            for w in 0..bk.len() {
+                for x in w + 1..bk.len() {
+                    assert_ne!(
+                        entries[bk[w] as usize].0,
+                        entries[bk[x] as usize].0,
+                        "FrozenTable::freeze: duplicate key in snapshot"
+                    );
+                }
+            }
+        }
+        // Largest buckets first (the CHD order): they need the most free
+        // bins; the guaranteed-placeable singles mop up the remainder.
+        let mut order: Vec<u32> = (0..b as u32).collect();
+        order.sort_unstable_by_key(|&i| std::cmp::Reverse(buckets[i as usize].len()));
+        let mut bins: Vec<u32> = vec![u32::MAX; m];
+        let mut disp_host: Vec<u64> = vec![0; b];
+        let mut claimed: Vec<usize> = Vec::with_capacity(LAMBDA * 4);
+        'buckets: for &bi in &order {
+            let keys = &buckets[bi as usize];
+            if keys.is_empty() {
+                continue;
+            }
+            // Flat displacement sweep: d0 = d / m ∈ [0, 16), d1 = d % m.
+            // d0 == 0 makes d1 a pure rotation, so a single-key bucket
+            // always lands in any remaining free bin.
+            for d in 0..16 * m as u64 {
+                let d0 = d / m as u64;
+                let d1 = d % m as u64;
+                claimed.clear();
+                let mut ok = true;
+                for &ei in keys {
+                    let pos = Self::place(gs[ei as usize], d0, d1, m);
+                    if bins[pos] != u32::MAX || claimed.contains(&pos) {
+                        ok = false;
+                        break;
+                    }
+                    claimed.push(pos);
+                }
+                if ok {
+                    for (&ei, &pos) in keys.iter().zip(claimed.iter()) {
+                        bins[pos] = ei;
+                    }
+                    disp_host[bi as usize] = (d0 << 32) | d1;
+                    continue 'buckets;
+                }
+            }
+            return None; // rotate the seed / add slack
+        }
+        // Materialize the device arrays: displacements, fused
+        // fingerprint+rank blocks, and the dense rank-ordered pair store.
+        let disp = SimMem::new(b);
+        for (i, &d) in disp_host.iter().enumerate() {
+            disp.store_relaxed(i, d);
+        }
+        let n_blocks = m.div_ceil(BINS_PER_BLOCK).max(1);
+        let fpr = SimMem::new(n_blocks * BLOCK_SLOTS);
+        let pairs = SimMem::new(2 * n);
+        let mut rank = 0u64;
+        for blk in 0..n_blocks {
+            let base = blk * BLOCK_SLOTS;
+            fpr.store_relaxed(base, rank);
+            for w in 0..BLOCK_SLOTS - 1 {
+                let mut word = 0u64;
+                for byte in 0..8 {
+                    let bin = blk * BINS_PER_BLOCK + w * 8 + byte;
+                    if bin >= m {
+                        break;
+                    }
+                    let ei = bins[bin];
+                    if ei != u32::MAX {
+                        word |= (Self::fp_of(gs[ei as usize]) as u64) << (8 * byte);
+                        let (k, v) = entries[ei as usize];
+                        pairs.store_relaxed(2 * rank as usize, k);
+                        pairs.store_relaxed(2 * rank as usize + 1, v);
+                        rank += 1;
+                    }
+                }
+                fpr.store_relaxed(base + 1 + w, word);
+            }
+        }
+        debug_assert_eq!(rank as usize, n);
+        Some(Self {
+            n,
+            m,
+            b,
+            seed,
+            disp,
+            fpr,
+            pairs,
+            live: AtomicUsize::new(n),
+        })
+    }
+
+    /// Entries the snapshot was built over (== pair-store capacity).
+    pub fn entries(&self) -> usize {
+        self.n
+    }
+
+    /// Bins in the perfect-hash range (`m == entries` when minimal).
+    pub fn bins(&self) -> usize {
+        self.m
+    }
+
+    /// Entries killed by promotion/erase since the freeze.
+    pub fn tombstones(&self) -> usize {
+        self.n - self.live.load(Ordering::Acquire)
+    }
+
+    /// Full lookup: `Some((bin, value))` iff `key` is frozen-live. The
+    /// bin is what promotion locks stripe over and what `kill` targets.
+    fn lookup(&self, key: u64) -> Option<(usize, u64)> {
+        if self.n == 0 {
+            return None;
+        }
+        let g = seeded(key, self.seed);
+        let dw = self.disp.load_acquire((g % self.b as u64) as usize);
+        self.lookup_with_disp(key, g, dw)
+    }
+
+    /// Lookup with the displacement word already in hand (the bulk path
+    /// loads it once per bucket group).
+    fn lookup_with_disp(&self, key: u64, g: u64, dw: u64) -> Option<(usize, u64)> {
+        let pos = Self::place(g, dw >> 32, dw & 0xFFFF_FFFF, self.m);
+        let blk = pos / BINS_PER_BLOCK;
+        let within = pos % BINS_PER_BLOCK;
+        let base = blk * BLOCK_SLOTS;
+        let w = within / 8;
+        let byte = within % 8;
+        let word = self.fpr.load_acquire(base + 1 + w);
+        let fpb = ((word >> (8 * byte)) & 0xFF) as u8;
+        if fpb != Self::fp_of(g) {
+            // Empty bin, tombstone, or foreign fingerprint: done after
+            // ONE probe beyond the displacement word.
+            return None;
+        }
+        // Rank = block's cumulative count + occupied bins before `pos`
+        // inside the block — all reads land on the same 128-byte line.
+        let mut rank = self.fpr.load_acquire(base) as usize;
+        for i in 0..w {
+            rank += nonzero_bytes(self.fpr.load_acquire(base + 1 + i));
+        }
+        if byte > 0 {
+            rank += nonzero_bytes(word & ((1u64 << (8 * byte)) - 1));
+        }
+        let (k, v) = self.pairs.load_pair(2 * rank, true);
+        // ~1/254 fingerprint false positives fail here (key mismatch).
+        if k == key {
+            Some((pos, v))
+        } else {
+            None
+        }
+    }
+
+    /// Kill the entry at `bin` (promotion/erase): CAS its fingerprint
+    /// byte to the tombstone. Returns false if the bin was already dead.
+    fn kill(&self, bin: usize) -> bool {
+        let idx = (bin / BINS_PER_BLOCK) * BLOCK_SLOTS + 1 + (bin % BINS_PER_BLOCK) / 8;
+        let shift = 8 * (bin % 8);
+        loop {
+            let cur = self.fpr.load_acquire(idx);
+            let fpb = ((cur >> shift) & 0xFF) as u8;
+            if fpb == FP_EMPTY || fpb == FP_TOMB {
+                return false;
+            }
+            // FP_TOMB is all-ones, so OR-ing it in via CAS both kills the
+            // byte and keeps its non-zero rank contribution.
+            if self.fpr.cas(idx, cur, cur | ((FP_TOMB as u64) << shift)).is_ok() {
+                self.live.fetch_sub(1, Ordering::AcqRel);
+                return true;
+            }
+        }
+    }
+
+    /// Quiesced walk over live entries (not probe-counted), in rank
+    /// order. Tombstoned bins advance the rank but are not visited.
+    fn scan_live(&self, f: &mut dyn FnMut(u64, u64)) {
+        if self.n == 0 {
+            return;
+        }
+        let mut rank = 0usize;
+        for bin in 0..self.m {
+            let word = self
+                .fpr
+                .snapshot_raw((bin / BINS_PER_BLOCK) * BLOCK_SLOTS + 1 + (bin % BINS_PER_BLOCK) / 8);
+            let fpb = ((word >> (8 * (bin % 8))) & 0xFF) as u8;
+            if fpb == FP_EMPTY {
+                continue;
+            }
+            if fpb != FP_TOMB {
+                f(self.pairs.snapshot_raw(2 * rank), self.pairs.snapshot_raw(2 * rank + 1));
+            }
+            rank += 1;
+        }
+    }
+}
+
+impl ConcurrentMap for FrozenTable {
+    /// The snapshot is immutable: writes are always rejected. Mutating a
+    /// frozen key is [`TieredMap`]'s job (promotion back to the mutable
+    /// tier), never an in-place frozen write.
+    fn upsert(&self, _key: u64, _val: u64, _op: &UpsertOp) -> UpsertResult {
+        UpsertResult::Full
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        self.lookup(key).map(|(_, v)| v)
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        match self.lookup(key) {
+            Some((bin, _)) => self.kill(bin),
+            None => false,
+        }
+    }
+
+    /// Native bulk query: group the batch by CHD bucket so one
+    /// displacement-word read serves every key that hashes there; the
+    /// fused fingerprint+rank blocks and dense pairs then amortize
+    /// naturally across the batch via probe-line dedup.
+    fn query_bulk(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        if self.n == 0 {
+            out.extend(keys.iter().map(|_| None));
+            return;
+        }
+        let base = out.len();
+        out.resize(base + keys.len(), None);
+        let gs: Vec<u64> = keys.iter().map(|&k| seeded(k, self.seed)).collect();
+        let buckets: Vec<usize> = gs.iter().map(|&g| (g % self.b as u64) as usize).collect();
+        let mut w = SlotWriter::new(&mut out[base..]);
+        for_each_bucket_group(&buckets, |bucket, idxs| {
+            let dw = self.disp.load_acquire(bucket);
+            for &i in idxs {
+                let i = i as usize;
+                w.set(i, self.lookup_with_disp(keys[i], gs[i], dw).map(|(_, v)| v));
+            }
+        });
+        w.finish("FrozenTable::query_bulk");
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.b.max(1)
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        if self.b == 0 {
+            0
+        } else {
+            (seeded(key, self.seed) % self.b as u64) as usize
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        self.n
+    }
+
+    fn len(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    fn device_bytes(&self) -> usize {
+        self.disp.bytes() + self.fpr.bytes() + self.pairs.bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "FrozenHT"
+    }
+
+    /// Frozen entries never move (they only die), so fused RMW reads are
+    /// as stable as it gets.
+    fn is_stable(&self) -> bool {
+        true
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        let mut c = 0;
+        self.scan_live(&mut |k, _| {
+            if k == key {
+                c += 1;
+            }
+        });
+        c
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        self.scan_live(f);
+    }
+}
+
+/// Two-tier map: an immutable [`FrozenTable`] in front of any mutable
+/// design. Reads serve frozen-first / mutable-second without locks (the
+/// frozen tier pointer is behind an `RwLock` read guard held only for an
+/// `Arc` clone, the same discipline the sharded router's topology reads
+/// use); a write that targets a frozen key *promotes* it: seed the
+/// merged value into the mutable tier, then kill the frozen fingerprint
+/// (seed-then-erase, so no interleaved reader ever misses the key), then
+/// bump the epoch so a reader that raced the tier move retries instead
+/// of returning a stale miss. Promotions of bins in the same stripe
+/// serialize through a [`LockArray`]; readers never take it.
+///
+/// [`TieredMap::request_freeze`] rebuilds the frozen tier from both
+/// tiers' live entries and then erases the moved keys from the mutable
+/// tier — quiesced-writer semantics like `for_each_entry` (concurrent
+/// *readers* are fine; the coordinator runs it on a shard's affine
+/// worker, where batches already serialize).
+pub struct TieredMap {
+    mutable: Arc<dyn ConcurrentMap>,
+    frozen: RwLock<Arc<FrozenTable>>,
+    /// Bumped (Release) after every tier-membership change a retrying
+    /// reader could otherwise miss across: promotions, erases of frozen
+    /// keys, and freeze cutovers (after their mutable-erase phase).
+    epoch: AtomicU64,
+    promo_locks: LockArray,
+    freezes: AtomicU64,
+    promotions: AtomicU64,
+}
+
+impl TieredMap {
+    /// Wrap a mutable table with an (initially empty) frozen tier.
+    pub fn new(mutable: Arc<dyn ConcurrentMap>) -> Self {
+        Self {
+            mutable,
+            frozen: RwLock::new(Arc::new(FrozenTable::freeze(&[]))),
+            epoch: AtomicU64::new(0),
+            promo_locks: LockArray::padded(PROMO_STRIPES),
+            freezes: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+        }
+    }
+
+    /// The current frozen tier (an `Arc` clone; the read guard is not
+    /// held across the caller's probes).
+    pub fn frozen_snapshot(&self) -> Arc<FrozenTable> {
+        self.frozen.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// The mutable tier (for benches asserting promotion landed).
+    pub fn mutable_tier(&self) -> &Arc<dyn ConcurrentMap> {
+        &self.mutable
+    }
+
+    /// Keys promoted frozen→mutable over the map's lifetime.
+    pub fn promoted(&self) -> u64 {
+        self.promotions.load(Ordering::Relaxed)
+    }
+
+    /// Promote the frozen entry at `bin` by seeding `merge(old)` into the
+    /// mutable tier, then killing the fingerprint. Caller identified
+    /// `key` as frozen-live; this re-checks under the stripe lock.
+    /// Returns `None` when the key is no longer frozen-live (a racing
+    /// promoter/eraser won — the caller retries against the mutable
+    /// tier), `Some(result)` otherwise.
+    fn promote(
+        &self,
+        frozen: &FrozenTable,
+        key: u64,
+        bin: usize,
+        merge: impl FnOnce(u64) -> u64,
+    ) -> Option<UpsertResult> {
+        let stripe = bin % PROMO_STRIPES;
+        self.promo_locks.lock(stripe);
+        let r = match frozen.lookup(key) {
+            Some((bin2, old)) => {
+                match self.mutable.upsert(key, merge(old), &UpsertOp::Overwrite) {
+                    // Mutable tier saturated: the write is rejected and
+                    // the frozen entry stays live and readable.
+                    UpsertResult::Full => Some(UpsertResult::Full),
+                    _ => {
+                        frozen.kill(bin2);
+                        self.promotions.fetch_add(1, Ordering::Relaxed);
+                        self.epoch.fetch_add(1, Ordering::Release);
+                        Some(UpsertResult::Updated)
+                    }
+                }
+            }
+            None => None,
+        };
+        self.promo_locks.unlock(stripe);
+        r
+    }
+}
+
+impl ConcurrentMap for TieredMap {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        let frozen = self.frozen_snapshot();
+        if let Some((bin, _)) = frozen.lookup(key) {
+            let merged = |old: u64| match op {
+                UpsertOp::AddAssign => old.wrapping_add(val),
+                UpsertOp::AddAssignF64 => (f64::from_bits(old) + f64::from_bits(val)).to_bits(),
+                other => other.merge(old, val).unwrap_or(val),
+            };
+            if let Some(r) = self.promote(&frozen, key, bin, merged) {
+                return r;
+            }
+            // Raced a concurrent promoter/eraser: fall through — the key
+            // is now the mutable tier's problem (or absent).
+        }
+        self.mutable.upsert(key, val, op)
+    }
+
+    fn query(&self, key: u64) -> Option<u64> {
+        loop {
+            let e = self.epoch.load(Ordering::Acquire);
+            let frozen = self.frozen_snapshot();
+            if let Some((_, v)) = frozen.lookup(key) {
+                return Some(v); // a live frozen hit is valid on its own
+            }
+            if let Some(v) = self.mutable.query(key) {
+                return Some(v);
+            }
+            // A full miss is only trustworthy if no promotion / freeze
+            // cutover moved the key between our two tier probes.
+            if self.epoch.load(Ordering::Acquire) == e {
+                return None;
+            }
+        }
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let frozen = self.frozen_snapshot();
+        if let Some((bin, _)) = frozen.lookup(key) {
+            let stripe = bin % PROMO_STRIPES;
+            self.promo_locks.lock(stripe);
+            let killed = match frozen.lookup(key) {
+                Some((bin2, _)) => {
+                    let k = frozen.kill(bin2);
+                    if k {
+                        self.epoch.fetch_add(1, Ordering::Release);
+                    }
+                    Some(k)
+                }
+                None => None,
+            };
+            self.promo_locks.unlock(stripe);
+            if let Some(k) = killed {
+                return k;
+            }
+        }
+        self.mutable.erase(key)
+    }
+
+    /// Bulk upsert: classify each pair against the frozen tier once —
+    /// same key ⇒ same class, so in-batch duplicate order survives the
+    /// partition — then run the (rare) frozen-resident promotions in
+    /// arrival order and hand the rest to the mutable tier's native bulk
+    /// path in one slice.
+    fn upsert_bulk(&self, pairs: &[(u64, u64)], op: &UpsertOp, out: &mut Vec<UpsertResult>) {
+        let frozen = self.frozen_snapshot();
+        if frozen.len() == 0 {
+            self.mutable.upsert_bulk(pairs, op, out);
+            return;
+        }
+        let base = out.len();
+        out.resize(base + pairs.len(), UpsertResult::Full);
+        let mut cold: Vec<(u64, u64)> = Vec::with_capacity(pairs.len());
+        let mut cold_pos: Vec<u32> = Vec::with_capacity(pairs.len());
+        let mut w = SlotWriter::new(&mut out[base..]);
+        for (i, &(k, v)) in pairs.iter().enumerate() {
+            if frozen.lookup(k).is_some() {
+                w.set(i, self.upsert(k, v, op));
+            } else {
+                cold.push((k, v));
+                cold_pos.push(i as u32);
+            }
+        }
+        let mut cres = Vec::with_capacity(cold.len());
+        self.mutable.upsert_bulk(&cold, op, &mut cres);
+        for (j, r) in cres.into_iter().enumerate() {
+            w.set(cold_pos[j] as usize, r);
+        }
+        w.finish("TieredMap::upsert_bulk");
+    }
+
+    /// Bulk query: frozen tier first over the whole batch (its native
+    /// grouped path), mutable tier over the misses, with the same
+    /// epoch-retry protocol as the scalar path — frozen/mutable hits
+    /// stand on their own, only a full miss needs the epoch re-check.
+    fn query_bulk(&self, keys: &[u64], out: &mut Vec<Option<u64>>) {
+        let mut ftmp: Vec<Option<u64>> = Vec::with_capacity(keys.len());
+        let mut miss_keys: Vec<u64> = Vec::new();
+        let mut miss_idx: Vec<u32> = Vec::new();
+        let mut mtmp: Vec<Option<u64>> = Vec::new();
+        loop {
+            let e = self.epoch.load(Ordering::Acquire);
+            let frozen = self.frozen_snapshot();
+            ftmp.clear();
+            if frozen.len() > 0 {
+                frozen.query_bulk(keys, &mut ftmp);
+            } else {
+                ftmp.resize(keys.len(), None);
+            }
+            miss_keys.clear();
+            miss_idx.clear();
+            for (i, r) in ftmp.iter().enumerate() {
+                if r.is_none() {
+                    miss_keys.push(keys[i]);
+                    miss_idx.push(i as u32);
+                }
+            }
+            let mut unresolved = false;
+            if !miss_keys.is_empty() {
+                mtmp.clear();
+                self.mutable.query_bulk(&miss_keys, &mut mtmp);
+                for (j, r) in mtmp.iter().enumerate() {
+                    if r.is_some() {
+                        ftmp[miss_idx[j] as usize] = *r;
+                    } else {
+                        unresolved = true;
+                    }
+                }
+            }
+            if unresolved && self.epoch.load(Ordering::Acquire) != e {
+                continue; // a tier move raced the batch: retry it
+            }
+            out.append(&mut ftmp);
+            return;
+        }
+    }
+
+    /// Bulk erase, partitioned like [`TieredMap::upsert_bulk`] (same
+    /// order-safety argument: classification is per-key stable).
+    fn erase_bulk(&self, keys: &[u64], out: &mut Vec<bool>) {
+        let frozen = self.frozen_snapshot();
+        if frozen.len() == 0 {
+            self.mutable.erase_bulk(keys, out);
+            return;
+        }
+        let base = out.len();
+        out.resize(base + keys.len(), false);
+        let mut cold: Vec<u64> = Vec::with_capacity(keys.len());
+        let mut cold_pos: Vec<u32> = Vec::with_capacity(keys.len());
+        let mut w = SlotWriter::new(&mut out[base..]);
+        for (i, &k) in keys.iter().enumerate() {
+            if frozen.lookup(k).is_some() {
+                w.set(i, self.erase(k));
+            } else {
+                cold.push(k);
+                cold_pos.push(i as u32);
+            }
+        }
+        let mut cres = Vec::with_capacity(cold.len());
+        self.mutable.erase_bulk(&cold, &mut cres);
+        for (j, r) in cres.into_iter().enumerate() {
+            w.set(cold_pos[j] as usize, r);
+        }
+        w.finish("TieredMap::erase_bulk");
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.mutable.num_buckets()
+    }
+
+    fn primary_bucket(&self, key: u64) -> usize {
+        self.mutable.primary_bucket(key)
+    }
+
+    fn capacity(&self) -> usize {
+        self.mutable.capacity() + self.frozen_snapshot().capacity()
+    }
+
+    fn len(&self) -> usize {
+        self.mutable.len() + self.frozen_snapshot().len()
+    }
+
+    fn device_bytes(&self) -> usize {
+        self.mutable.device_bytes() + self.frozen_snapshot().device_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "TieredHT"
+    }
+
+    fn is_stable(&self) -> bool {
+        self.mutable.is_stable()
+    }
+
+    fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
+        if self.mutable.fetch_add_in_place(key, v) {
+            return true;
+        }
+        if !self.mutable.is_stable() {
+            return false;
+        }
+        let frozen = self.frozen_snapshot();
+        match frozen.lookup(key) {
+            Some((bin, _)) => match self.promote(&frozen, key, bin, |old| old.wrapping_add(v)) {
+                Some(r) => !matches!(r, UpsertResult::Full),
+                // Raced a promoter: the key (if it survived) is mutable now.
+                None => self.mutable.fetch_add_in_place(key, v),
+            },
+            None => false,
+        }
+    }
+
+    fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
+        if self.mutable.fetch_add_f64_in_place(key, v) {
+            return true;
+        }
+        if !self.mutable.is_stable() {
+            return false;
+        }
+        let frozen = self.frozen_snapshot();
+        match frozen.lookup(key) {
+            Some((bin, _)) => {
+                let merge = |old: u64| (f64::from_bits(old) + v).to_bits();
+                match self.promote(&frozen, key, bin, merge) {
+                    Some(r) => !matches!(r, UpsertResult::Full),
+                    None => self.mutable.fetch_add_f64_in_place(key, v),
+                }
+            }
+            None => false,
+        }
+    }
+
+    fn count_copies(&self, key: u64) -> usize {
+        self.mutable.count_copies(key) + self.frozen_snapshot().count_copies(key)
+    }
+
+    fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
+        self.frozen_snapshot().for_each_entry(f);
+        self.mutable.for_each_entry(f);
+    }
+
+    fn can_grow(&self) -> bool {
+        self.mutable.can_grow()
+    }
+
+    fn request_grow(&self) -> bool {
+        self.mutable.request_grow()
+    }
+
+    fn can_shrink(&self) -> bool {
+        self.mutable.can_shrink()
+    }
+
+    fn request_shrink(&self) -> bool {
+        self.mutable.request_shrink()
+    }
+
+    fn shrink_events(&self) -> u64 {
+        self.mutable.shrink_events()
+    }
+
+    fn migration_in_progress(&self) -> bool {
+        self.mutable.migration_in_progress()
+    }
+
+    fn drive_migration(&self, max_buckets: usize) -> usize {
+        self.mutable.drive_migration(max_buckets)
+    }
+
+    /// Split/merge stripe claims must see BOTH tiers: a frozen entry that
+    /// re-routes is collected here and then removed by the migrator's
+    /// seed-then-erase `erase(key)` — which lands on the fingerprint-kill
+    /// path above, exactly like a promotion without the re-seed.
+    fn collect_stripe_range(&self, keep: &dyn Fn(u64) -> bool, out: &mut Vec<(u64, u64)>) {
+        self.frozen_snapshot().for_each_entry(&mut |k, v| {
+            if keep(k) {
+                out.push((k, v));
+            }
+        });
+        self.mutable.collect_stripe_range(keep, out);
+    }
+
+    fn can_freeze(&self) -> bool {
+        true
+    }
+
+    fn request_freeze(&self) -> usize {
+        self.mutable.quiesce_migration();
+        let old = self.frozen_snapshot();
+        let mut entries: Vec<(u64, u64)> = Vec::with_capacity(old.len() + self.mutable.len());
+        old.for_each_entry(&mut |k, v| entries.push((k, v)));
+        let frozen_live = entries.len();
+        self.mutable.for_each_entry(&mut |k, v| entries.push((k, v)));
+        if entries.len() == frozen_live && old.tombstones() == 0 {
+            return 0; // already fully frozen and dense: nothing to gain
+        }
+        let next = Arc::new(FrozenTable::freeze(&entries));
+        *self.frozen.write().unwrap_or_else(|e| e.into_inner()) = next;
+        // Seed-then-erase: the movers are now live in BOTH tiers (same
+        // value, so interleaved readers are consistent); drop them from
+        // the mutable tier, then bump the epoch so a reader still holding
+        // the OLD frozen Arc retries instead of missing a moved key.
+        for &(k, _) in &entries[frozen_live..] {
+            self.mutable.erase(k);
+        }
+        self.freezes.fetch_add(1, Ordering::Relaxed);
+        self.epoch.fetch_add(1, Ordering::Release);
+        entries.len()
+    }
+
+    fn frozen_len(&self) -> usize {
+        self.frozen_snapshot().len()
+    }
+
+    fn freeze_events(&self) -> u64 {
+        self.freezes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::probes::{self, ProbeScope};
+    use crate::quickprop::{self, ensure};
+    use crate::tables::{build_table, TableKind};
+    use crate::workloads::keys::distinct_keys;
+
+    fn pairs_of(ks: &[u64]) -> Vec<(u64, u64)> {
+        ks.iter().map(|&k| (k, k.wrapping_mul(3))).collect()
+    }
+
+    #[test]
+    fn freeze_is_a_minimal_perfect_hash() {
+        let ks = distinct_keys(10_000, 0x51);
+        let f = FrozenTable::freeze(&pairs_of(&ks));
+        // Minimal: the first CHD attempt (m == n) must succeed for a
+        // random key set, giving effective load factor exactly 1.0.
+        assert_eq!(f.bins(), ks.len());
+        assert_eq!(f.capacity(), ks.len());
+        assert_eq!(f.len(), ks.len());
+        assert!((f.load_factor() - 1.0).abs() < 1e-12);
+        for &k in &ks {
+            assert_eq!(f.query(k), Some(k.wrapping_mul(3)));
+        }
+        let present: std::collections::HashSet<u64> = ks.iter().copied().collect();
+        for &k in &distinct_keys(10_000, 0x52) {
+            if !present.contains(&k) {
+                assert_eq!(f.query(k), None);
+            }
+        }
+    }
+
+    #[test]
+    fn freeze_empty_and_tiny() {
+        let f = FrozenTable::freeze(&[]);
+        assert_eq!(f.query(1), None);
+        assert_eq!(f.len(), 0);
+        let mut out = Vec::new();
+        f.query_bulk(&[1, 2, 3], &mut out);
+        assert_eq!(out, vec![None, None, None]);
+        let one = FrozenTable::freeze(&[(42, 7)]);
+        assert_eq!(one.query(42), Some(7));
+        assert_eq!(one.query(43), None);
+    }
+
+    #[test]
+    fn frozen_bulk_matches_scalar_including_duplicates() {
+        let ks = distinct_keys(4000, 0x53);
+        let f = FrozenTable::freeze(&pairs_of(&ks));
+        let mut batch: Vec<u64> = ks[..1000].to_vec();
+        batch.extend_from_slice(&ks[..50]); // duplicates
+        batch.extend_from_slice(&distinct_keys(500, 0x54)); // mostly misses
+        let mut bulk = Vec::new();
+        f.query_bulk(&batch, &mut bulk);
+        for (i, &k) in batch.iter().enumerate() {
+            assert_eq!(bulk[i], f.query(k), "key #{i}");
+        }
+    }
+
+    #[test]
+    fn frozen_erase_kills_exactly_once() {
+        let ks = distinct_keys(2000, 0x55);
+        let f = FrozenTable::freeze(&pairs_of(&ks));
+        assert!(f.erase(ks[7]));
+        assert!(!f.erase(ks[7]), "double erase must report absent");
+        assert_eq!(f.query(ks[7]), None);
+        assert_eq!(f.count_copies(ks[7]), 0);
+        assert_eq!(f.len(), ks.len() - 1);
+        assert_eq!(f.tombstones(), 1);
+        // Ranks of survivors are unaffected by the tombstone.
+        for &k in &ks[8..] {
+            assert_eq!(f.query(k), Some(k.wrapping_mul(3)));
+        }
+        assert_eq!(f.upsert(ks[7], 1, &UpsertOp::Overwrite), UpsertResult::Full);
+    }
+
+    #[test]
+    fn scalar_probe_shape_negative_2_lines_positive_3() {
+        let _measure = probes::measurement_section();
+        probes::set_enabled(true);
+        let ks = distinct_keys(5000, 0x56);
+        let f = FrozenTable::freeze(&pairs_of(&ks));
+        for &k in &ks[..200] {
+            let s = ProbeScope::begin();
+            assert!(f.query(k).is_some());
+            assert_eq!(s.finish(), 3, "positive: disp + fpr block + pair");
+        }
+        let present: std::collections::HashSet<u64> = ks.iter().copied().collect();
+        let negs: Vec<u64> = distinct_keys(5000, 0x57)
+            .into_iter()
+            .filter(|k| !present.contains(k))
+            .take(400)
+            .collect();
+        let mut two = 0usize;
+        for &k in &negs {
+            let s = ProbeScope::begin();
+            assert!(f.query(k).is_none());
+            let lines = s.finish();
+            // 3 only on a ~1/254 fingerprint false positive.
+            assert!(lines <= 3, "negative touched {lines} lines");
+            if lines == 2 {
+                two += 1;
+            }
+        }
+        assert!(
+            two as f64 >= 0.95 * negs.len() as f64,
+            "only {two}/{} negatives were fingerprint-rejected in one probe",
+            negs.len()
+        );
+    }
+
+    #[test]
+    fn negative_lookups_never_lie_property() {
+        // Fingerprints may cost a wasted pair probe but must never turn
+        // a miss into a hit (or vice versa) for ANY generated key set.
+        quickprop::check_vec(
+            &quickprop::Config { cases: 60, seed: 0xF02E, size: 300 },
+            |g| g.user_key(),
+            |ks| {
+                let mut ks = ks.to_vec();
+                ks.sort_unstable();
+                ks.dedup();
+                let f = FrozenTable::freeze(&pairs_of(&ks));
+                for &k in &ks {
+                    ensure(f.query(k) == Some(k.wrapping_mul(3)), format!("lost key {k}"))?;
+                }
+                for i in 0..500u64 {
+                    let probe = seeded(i, 0xABCD);
+                    if crate::gpusim::mem::is_user_key(probe) && ks.binary_search(&probe).is_err()
+                    {
+                        ensure(f.query(probe).is_none(), format!("phantom hit {probe}"))?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tiered_promotion_moves_key_to_mutable_tier() {
+        let tm = TieredMap::new(build_table(TableKind::P2Meta, 8192));
+        let ks = distinct_keys(3000, 0x58);
+        for &k in &ks {
+            tm.upsert(k, k, &UpsertOp::Overwrite);
+        }
+        assert_eq!(tm.request_freeze(), ks.len());
+        assert_eq!(tm.frozen_len(), ks.len());
+        assert_eq!(tm.mutable_tier().len(), 0);
+        assert_eq!(tm.freeze_events(), 1);
+        // Overwrite a frozen key: must promote, not reject.
+        assert_eq!(tm.upsert(ks[0], 99, &UpsertOp::Overwrite), UpsertResult::Updated);
+        assert_eq!(tm.query(ks[0]), Some(99));
+        assert_eq!(tm.count_copies(ks[0]), 1, "promotion must not duplicate");
+        assert_eq!(tm.mutable_tier().len(), 1);
+        assert_eq!(tm.promoted(), 1);
+        // AddAssign against a frozen key merges the frozen value.
+        assert_eq!(tm.upsert(ks[1], 5, &UpsertOp::AddAssign), UpsertResult::Updated);
+        assert_eq!(tm.query(ks[1]), Some(ks[1].wrapping_add(5)));
+        // InsertIfUnique promotes but keeps the frozen value.
+        assert_eq!(tm.upsert(ks[2], 1234, &UpsertOp::InsertIfUnique), UpsertResult::Updated);
+        assert_eq!(tm.query(ks[2]), Some(ks[2]));
+        // Erase of a frozen key is a fingerprint kill.
+        assert!(tm.erase(ks[3]));
+        assert_eq!(tm.query(ks[3]), None);
+        assert!(!tm.erase(ks[3]));
+        // fetch_add_in_place promotes with the sum.
+        assert!(tm.fetch_add_in_place(ks[4], 10));
+        assert_eq!(tm.query(ks[4]), Some(ks[4].wrapping_add(10)));
+        assert_eq!(tm.len(), ks.len() - 1);
+    }
+
+    #[test]
+    fn tiered_refreeze_compacts_tombstones_and_reabsorbs_promotions() {
+        let tm = TieredMap::new(build_table(TableKind::Double, 4096));
+        let ks = distinct_keys(1500, 0x59);
+        for &k in &ks {
+            tm.upsert(k, 1, &UpsertOp::Overwrite);
+        }
+        tm.request_freeze();
+        for &k in &ks[..300] {
+            tm.upsert(k, 2, &UpsertOp::Overwrite); // promote
+        }
+        for &k in &ks[300..400] {
+            tm.erase(k);
+        }
+        assert_eq!(tm.frozen_snapshot().tombstones(), 400);
+        let refrozen = tm.request_freeze();
+        assert_eq!(refrozen, 1400, "re-freeze absorbs promoted + survivors");
+        assert_eq!(tm.frozen_len(), 1400);
+        assert_eq!(tm.mutable_tier().len(), 0);
+        assert_eq!(tm.frozen_snapshot().tombstones(), 0);
+        assert!((tm.frozen_snapshot().load_factor() - 1.0).abs() < 1e-12);
+        for (i, &k) in ks.iter().enumerate() {
+            let want = if i < 300 {
+                Some(2)
+            } else if i < 400 {
+                None
+            } else {
+                Some(1)
+            };
+            assert_eq!(tm.query(k), want, "key #{i}");
+            assert_eq!(tm.count_copies(k), want.map_or(0, |_| 1));
+        }
+        // Idle re-freeze of an already dense, fully frozen map is a no-op.
+        assert_eq!(tm.request_freeze(), 0);
+        assert_eq!(tm.freeze_events(), 2);
+    }
+
+    #[test]
+    fn tiered_bulk_paths_match_scalar_semantics() {
+        let tm = TieredMap::new(build_table(TableKind::Iceberg, 8192));
+        let ks = distinct_keys(2000, 0x5A);
+        let seedp: Vec<(u64, u64)> = ks.iter().map(|&k| (k, 1)).collect();
+        let mut ures = Vec::new();
+        tm.upsert_bulk(&seedp, &UpsertOp::Overwrite, &mut ures);
+        assert!(ures.iter().all(|r| *r == UpsertResult::Inserted));
+        tm.request_freeze();
+        // Mixed batch: frozen keys (promote), fresh keys (insert), and an
+        // in-batch duplicate whose second op must see the first's effect.
+        let fresh = distinct_keys(500, 0x5B);
+        let mut batch: Vec<(u64, u64)> = Vec::new();
+        batch.push((ks[0], 5));
+        batch.extend(fresh.iter().map(|&k| (k, 2)));
+        batch.push((ks[0], 7)); // duplicate, AddAssign stacks: 1+5+7
+        ures.clear();
+        tm.upsert_bulk(&batch, &UpsertOp::AddAssign, &mut ures);
+        assert_eq!(ures[0], UpsertResult::Updated);
+        assert_eq!(*ures.last().unwrap(), UpsertResult::Updated);
+        assert_eq!(tm.query(ks[0]), Some(13));
+        let mut qin: Vec<u64> = ks[..800].to_vec();
+        qin.extend_from_slice(&fresh);
+        qin.extend_from_slice(&distinct_keys(300, 0x5C));
+        let mut bulk = Vec::new();
+        tm.query_bulk(&qin, &mut bulk);
+        for (i, &k) in qin.iter().enumerate() {
+            assert_eq!(bulk[i], tm.query(k), "query_bulk key #{i}");
+        }
+        let mut eres = Vec::new();
+        let edel: Vec<u64> = vec![ks[1], fresh[0], ks[1]];
+        tm.erase_bulk(&edel, &mut eres);
+        assert_eq!(eres, vec![true, true, false], "duplicate erase: first wins");
+    }
+
+    #[test]
+    fn concurrent_reads_during_freeze_promote_refreeze() {
+        use std::sync::atomic::AtomicBool;
+        let tm = Arc::new(TieredMap::new(build_table(TableKind::DoubleMeta, 16384)));
+        let ks = Arc::new(distinct_keys(4000, 0x5D));
+        for &k in ks.iter() {
+            tm.upsert(k, k, &UpsertOp::Overwrite);
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|t| {
+                let (tm, ks, stop) = (tm.clone(), ks.clone(), stop.clone());
+                std::thread::spawn(move || {
+                    let mut i = t * 97;
+                    let mut bulk = Vec::new();
+                    while !stop.load(Ordering::Acquire) {
+                        let k = ks[i % ks.len()];
+                        // Values only move tiers or get rewritten to k+1;
+                        // a key must never transiently vanish.
+                        let v = tm.query(k).expect("reader saw a lost key");
+                        assert!(v == k || v == k.wrapping_add(1), "torn value {v}");
+                        if i % 64 == 0 {
+                            bulk.clear();
+                            tm.query_bulk(&ks[..128], &mut bulk);
+                            assert!(bulk.iter().all(|r| r.is_some()));
+                        }
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+        // Writer side (this thread): freeze, promote a slice, re-freeze —
+        // request_freeze only excludes concurrent WRITERS, readers spin on.
+        for round in 0..3 {
+            tm.request_freeze();
+            for &k in &ks[round * 500..(round + 1) * 500] {
+                assert_eq!(
+                    tm.upsert(k, k.wrapping_add(1), &UpsertOp::Overwrite),
+                    UpsertResult::Updated
+                );
+            }
+        }
+        stop.store(true, Ordering::Release);
+        for r in readers {
+            r.join().unwrap();
+        }
+        for &k in ks.iter() {
+            assert_eq!(tm.count_copies(k), 1, "tier move duplicated key {k}");
+        }
+    }
+}

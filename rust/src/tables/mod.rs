@@ -30,11 +30,13 @@ pub mod p2;
 pub mod iceberg;
 pub mod cuckoo;
 pub mod chaining;
+pub mod frozen;
 pub mod growable;
 pub mod slabhash_like;
 pub mod warpcore_like;
 pub mod kernel_table;
 
+pub use frozen::{FrozenTable, TieredMap};
 pub use growable::{GrowableMap, GrowthPolicy};
 
 #[cfg(test)]
@@ -313,6 +315,32 @@ pub trait ConcurrentMap: Send + Sync {
             }
         };
         self.for_each_entry(&mut f);
+    }
+
+    /// True when the table has a frozen read-optimized tier it can
+    /// rebuild online ([`frozen::TieredMap`]). Plain designs have no
+    /// frozen tier.
+    fn can_freeze(&self) -> bool {
+        false
+    }
+
+    /// Rebuild the frozen tier from every live entry (both tiers),
+    /// leaving the mutable tier empty — quiesced-WRITER semantics like
+    /// [`ConcurrentMap::for_each_entry`]; concurrent readers are safe.
+    /// Returns the number of entries now frozen (0 for plain designs,
+    /// and for tiered ones that are already fully frozen and dense).
+    fn request_freeze(&self) -> usize {
+        0
+    }
+
+    /// Live entries currently served by the frozen tier.
+    fn frozen_len(&self) -> usize {
+        0
+    }
+
+    /// Freeze cutovers over the table's lifetime.
+    fn freeze_events(&self) -> u64 {
+        0
     }
 
     /// Routing-stripe migration iterator (shard split/merge): append a
