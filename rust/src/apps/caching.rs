@@ -11,14 +11,51 @@
 //! query-or-insert with in-place value access and no table-wide locking.
 //! CuckooHT is not stable and "is unable to run this benchmark" — we
 //! enforce the same restriction via [`ConcurrentMap::is_stable`].
+//!
+//! FIFO (the paper's quoted baseline) is now one of three eviction
+//! policies ([`EvictionPolicy`]): caches built over lifecycle-armed
+//! tables can instead admit entries with a TTL and reclaim expired
+//! residents before any live one is evicted (`Ttl`), or additionally
+//! rank the oldest residents by the frequency counter the table's own
+//! tag probes maintain and evict the coldest (`TtlFrequency`, the
+//! segcache-style policy) — hot old entries survive, cold ones leave,
+//! at zero extra cost on the hit path. `bench aging`'s eviction-policy
+//! appendix measures the three head-to-head under zipfian churn.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::tables::{ConcurrentMap, TieredMap, UpsertOp, UpsertResult};
 
-/// Fraction of table capacity the FIFO ring may occupy (paper §6.6).
+/// Fraction of table capacity the admission ring may occupy (paper
+/// §6.6; applies to every eviction policy).
 const RING_FRACTION: f64 = 0.85;
+
+/// Oldest residents examined per eviction under the TTL/frequency
+/// policies — a bounded ring-front sample, so victim choice costs O(1)
+/// probes instead of a table scan (segcache's merge window, shrunk to
+/// the testbed's scale).
+const VICTIM_SAMPLE: usize = 8;
+
+/// How [`GpuCache`] chooses a victim when residency exceeds the ring
+/// cap. The non-FIFO policies need a device table built with
+/// [`crate::tables::LifecycleConfig`] metadata (entry TTL + frequency
+/// counters packed next to the fingerprint bytes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// The paper's §6.6 baseline: evict the oldest admission.
+    #[default]
+    Fifo,
+    /// Admissions carry a TTL; an expired resident in the ring-front
+    /// sample is reclaimed before any live entry, falling back to the
+    /// oldest admission when nothing has expired.
+    Ttl,
+    /// TTL first, then lowest frequency within the ring-front sample
+    /// (ties go to the oldest) — the segcache-style policy: reads bump
+    /// the per-entry counter for free on the tag probe, so a hot old
+    /// resident outlives a cold newer one.
+    TtlFrequency,
+}
 
 /// Host-side backing store: the full dataset (simulating CPU DRAM).
 pub struct HostStore {
@@ -46,14 +83,21 @@ impl HostStore {
     }
 }
 
-/// FIFO cache of a [`HostStore`] in a device hash table.
+/// Cache of a [`HostStore`] in a device hash table — FIFO by default,
+/// TTL/frequency-aware via [`GpuCache::with_policy`].
 pub struct GpuCache {
     table: Arc<dyn ConcurrentMap>,
     store: HostStore,
-    /// FIFO ring of resident keys, capped at 85% of table capacity
-    /// (recomputed from the live capacity in growth mode).
+    /// Admission ring of resident keys in arrival order, capped at 85%
+    /// of table capacity (recomputed from the live capacity in growth
+    /// mode). FIFO evicts its front; the TTL/frequency policies pick a
+    /// victim from its front [`VICTIM_SAMPLE`].
     ring: VecDeque<u64>,
     ring_cap: usize,
+    /// Victim-selection policy; non-FIFO requires lifecycle metadata.
+    policy: EvictionPolicy,
+    /// Deadline (clock ticks) each non-FIFO admission is armed with.
+    admit_ttl: u64,
     /// Growth mode: the device table grows online instead of evicting —
     /// the ring cap follows the grown capacity, so saturation triggers
     /// a 2× growth rather than the Full-eviction-retry contortion.
@@ -66,6 +110,9 @@ pub struct GpuCache {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Evictions that reclaimed an already-expired resident (subset of
+    /// `evictions`; only the TTL/frequency policies ever count here).
+    pub expired_evictions: u64,
 }
 
 impl GpuCache {
@@ -107,6 +154,28 @@ impl GpuCache {
         Some(cache)
     }
 
+    /// Policy cache: like [`GpuCache::new`] but with an explicit
+    /// [`EvictionPolicy`]. Non-FIFO admissions are armed with a TTL of
+    /// `admit_ttl` clock ticks against the table's lifecycle clock (a
+    /// TTL beyond the deadline-ring horizon stores immortal, leaving
+    /// pure frequency ranking). Returns `None` for unstable tables, or
+    /// when a TTL/frequency policy is requested on a table built
+    /// without lifecycle metadata.
+    pub fn with_policy(
+        table: Arc<dyn ConcurrentMap>,
+        store: HostStore,
+        policy: EvictionPolicy,
+        admit_ttl: u64,
+    ) -> Option<Self> {
+        if policy != EvictionPolicy::Fifo && !table.supports_ttl() {
+            return None;
+        }
+        let mut cache = Self::with_mode(table, store, false)?;
+        cache.policy = policy;
+        cache.admit_ttl = admit_ttl;
+        Some(cache)
+    }
+
     fn with_mode(table: Arc<dyn ConcurrentMap>, store: HostStore, grow: bool) -> Option<Self> {
         if !table.is_stable() {
             return None;
@@ -117,12 +186,86 @@ impl GpuCache {
             store,
             ring: VecDeque::with_capacity(ring_cap + 1),
             ring_cap: ring_cap.max(1),
+            policy: EvictionPolicy::Fifo,
+            admit_ttl: 0,
             grow,
             freeze_on_cooldown: false,
             hits: 0,
             misses: 0,
             evictions: 0,
+            expired_evictions: 0,
         })
+    }
+
+    /// Install one admission, armed with the policy's TTL when the
+    /// policy uses one.
+    fn admit(&self, key: u64, val: u64) -> UpsertResult {
+        match self.policy {
+            EvictionPolicy::Fifo => self.table.upsert(key, val, &UpsertOp::InsertIfUnique),
+            _ => self
+                .table
+                .upsert_ttl(key, val, self.admit_ttl, &UpsertOp::InsertIfUnique),
+        }
+    }
+
+    /// Ring index of the next victim under the active policy. FIFO is
+    /// always the front; the TTL/frequency policies scan the front
+    /// [`VICTIM_SAMPLE`] — an expired resident wins outright (its slot
+    /// is already dead), otherwise `TtlFrequency` takes the lowest
+    /// frequency counter, oldest on ties.
+    fn pick_victim(&self) -> usize {
+        match self.policy {
+            EvictionPolicy::Fifo => 0,
+            EvictionPolicy::Ttl => self
+                .ring
+                .iter()
+                .take(VICTIM_SAMPLE)
+                .position(|&k| self.table.entry_frequency(k).is_none())
+                .unwrap_or(0),
+            EvictionPolicy::TtlFrequency => {
+                let mut best = 0usize;
+                let mut best_freq = u8::MAX;
+                for (i, &k) in self.ring.iter().take(VICTIM_SAMPLE).enumerate() {
+                    match self.table.entry_frequency(k) {
+                        // Expired (or concurrently removed): free win.
+                        None => return i,
+                        Some(f) if f < best_freq => {
+                            best_freq = f;
+                            best = i;
+                        }
+                        Some(_) => {}
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Account one successful admission in the ring. Under a TTL policy
+    /// an admission can revive an expired resident's corpse in place
+    /// (`upsert_ttl` over the corpse reports `Inserted`): such a key is
+    /// still in the ring and must keep its one slot — pushing again
+    /// would double-count residency and let a later eviction of the
+    /// stale slot erase the revived live entry.
+    fn ring_push(&mut self, key: u64) {
+        if self.policy != EvictionPolicy::Fifo && self.ring.contains(&key) {
+            return;
+        }
+        self.ring.push_back(key);
+    }
+
+    /// Drop one resident chosen by the eviction policy — removes it
+    /// from the ring, erases its device copy, counts the eviction (and
+    /// whether it was an expiry reclaim). Returns the evicted key.
+    fn evict_one(&mut self) -> Option<u64> {
+        let idx = self.pick_victim();
+        let old = self.ring.remove(idx)?;
+        if self.policy != EvictionPolicy::Fifo && self.table.entry_frequency(old).is_none() {
+            self.expired_evictions += 1;
+        }
+        self.table.erase(old);
+        self.evictions += 1;
+        Some(old)
     }
 
     /// Current admission bound: fixed at construction normally, tracking
@@ -189,17 +332,16 @@ impl GpuCache {
         self.misses += 1;
         let v = self.store.fetch(key)?;
         // Fused insert (stable tables need no lock to later read/modify
-        // the value in place).
-        match self.table.upsert(key, v, &UpsertOp::InsertIfUnique) {
+        // the value in place). An admission over an expired resident's
+        // corpse revives the slot in place and reports Inserted;
+        // `ring_push` keeps the revived key's existing ring position.
+        match self.admit(key, v) {
             UpsertResult::Inserted => {
-                self.ring.push_back(key);
+                self.ring_push(key);
                 if self.ring.len() > self.live_ring_cap() {
-                    if let Some(old) = self.ring.pop_front() {
-                        // Evicted keys "are returned to the CPU" — the
-                        // store already holds them; just drop from device.
-                        self.table.erase(old);
-                        self.evictions += 1;
-                    }
+                    // Evicted keys "are returned to the CPU" — the
+                    // store already holds them; just drop from device.
+                    self.evict_one();
                 }
             }
             UpsertResult::Updated => { /* raced with ourselves: fine */ }
@@ -208,14 +350,10 @@ impl GpuCache {
                 // the ring boundary): evict eagerly and retry once. A
                 // growable table only reports Full at its policy ceiling,
                 // where eviction is the correct fallback too.
-                if let Some(old) = self.ring.pop_front() {
-                    self.table.erase(old);
-                    self.evictions += 1;
-                    if self.table.upsert(key, v, &UpsertOp::InsertIfUnique)
-                        == UpsertResult::Inserted
-                    {
-                        self.ring.push_back(key);
-                    }
+                if self.evict_one().is_some()
+                    && self.admit(key, v) == UpsertResult::Inserted
+                {
+                    self.ring_push(key);
                 }
             }
         }
@@ -254,13 +392,22 @@ impl GpuCache {
             return;
         }
         let mut ins = Vec::with_capacity(miss_pairs.len());
-        self.table
-            .upsert_bulk(&miss_pairs, &UpsertOp::InsertIfUnique, &mut ins);
+        if self.policy == EvictionPolicy::Fifo {
+            self.table
+                .upsert_bulk(&miss_pairs, &UpsertOp::InsertIfUnique, &mut ins);
+        } else {
+            // TTL admissions carry per-entry deadlines the bulk upsert
+            // API has no slot for; install the (already rare, by
+            // definition of a miss) batch scalar-wise instead.
+            for &(k, v) in &miss_pairs {
+                ins.push(self.admit(k, v));
+            }
+        }
         let mut evict: Vec<u64> = Vec::new();
         for (j, r) in ins.iter().enumerate() {
             let (k, v) = miss_pairs[j];
             match r {
-                UpsertResult::Inserted => self.ring.push_back(k),
+                UpsertResult::Inserted => self.ring_push(k),
                 UpsertResult::Updated => { /* in-batch duplicate: resident */ }
                 UpsertResult::Full => {
                     // Bulk results were computed before any retries, so
@@ -272,20 +419,25 @@ impl GpuCache {
                     }
                     // Device table saturated mid-batch: evict eagerly and
                     // retry once (the scalar path's discipline).
-                    if let Some(old) = self.ring.pop_front() {
-                        self.table.erase(old);
-                        self.evictions += 1;
-                        if self.table.upsert(k, v, &UpsertOp::InsertIfUnique)
-                            == UpsertResult::Inserted
-                        {
-                            self.ring.push_back(k);
-                        }
+                    if self.evict_one().is_some()
+                        && self.admit(k, v) == UpsertResult::Inserted
+                    {
+                        self.ring_push(k);
                     }
                 }
             }
             while self.ring.len() > self.live_ring_cap() {
-                if let Some(old) = self.ring.pop_front() {
-                    evict.push(old);
+                match self.policy {
+                    // FIFO victims batch into one erase_bulk below.
+                    EvictionPolicy::Fifo => match self.ring.pop_front() {
+                        Some(old) => evict.push(old),
+                        None => break,
+                    },
+                    _ => {
+                        if self.evict_one().is_none() {
+                            break;
+                        }
+                    }
                 }
             }
         }
@@ -535,6 +687,143 @@ mod tests {
         // A second cooldown re-freezes the merged population.
         c.cooldown(c.resident());
         assert_eq!(c.frozen_resident(), 256 + 64, "refreeze must absorb new admissions");
+    }
+
+    fn lifecycle_table(
+        kind: TableKind,
+        slots: usize,
+        cfg: &crate::tables::LifecycleConfig,
+    ) -> Arc<dyn ConcurrentMap> {
+        crate::tables::build_table_with(
+            kind,
+            crate::tables::TableConfig::for_kind(kind, slots).with_lifecycle(cfg.clone()),
+        )
+    }
+
+    #[test]
+    fn ttl_policies_require_lifecycle_metadata() {
+        use crate::tables::LifecycleConfig;
+        let data = distinct_keys(100, 0xD2);
+        let plain = build_table(TableKind::Double, 256);
+        assert!(
+            GpuCache::with_policy(plain, store_of(&data), EvictionPolicy::Ttl, 4).is_none(),
+            "TTL policy on a lifecycle-less table must be refused"
+        );
+        let lc = LifecycleConfig::new(1);
+        let t = lifecycle_table(TableKind::Double, 256, &lc);
+        assert!(GpuCache::with_policy(
+            t,
+            store_of(&data),
+            EvictionPolicy::TtlFrequency,
+            4
+        )
+        .is_some());
+        // FIFO never needs the metadata.
+        let plain = build_table(TableKind::Double, 256);
+        assert!(
+            GpuCache::with_policy(plain, store_of(&data), EvictionPolicy::Fifo, 0).is_some()
+        );
+    }
+
+    #[test]
+    fn ttl_policy_reclaims_expired_residents_before_live_ones() {
+        use crate::tables::LifecycleConfig;
+        let lc = LifecycleConfig::new(1);
+        let t = lifecycle_table(TableKind::DoubleMeta, 256, &lc);
+        let cap = ((t.capacity() as f64) * 0.85) as usize;
+        let data = distinct_keys(cap + 20, 0xD3);
+        let mut c =
+            GpuCache::with_policy(t, store_of(&data), EvictionPolicy::Ttl, 2).unwrap();
+        let (mortal, fresh) = data.split_at(cap);
+        for &k in mortal {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert_eq!(c.resident(), cap);
+        assert_eq!(c.evictions, 0);
+        lc.clock.advance(3); // every resident is now a corpse
+        for &k in fresh {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert_eq!(
+            c.expired_evictions, 20,
+            "every eviction should have reclaimed an expired resident"
+        );
+        assert_eq!(c.evictions, 20);
+        assert_eq!(c.resident(), cap);
+        // The fresh admissions are live residents and hit.
+        c.misses = 0;
+        for &k in fresh {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert_eq!(c.misses, 0, "a fresh admission was evicted over a corpse");
+    }
+
+    #[test]
+    fn reviving_an_expired_resident_keeps_one_ring_slot() {
+        use crate::tables::LifecycleConfig;
+        let lc = LifecycleConfig::new(1);
+        let t = lifecycle_table(TableKind::DoubleMeta, 256, &lc);
+        let data = distinct_keys(8, 0xD5);
+        let mut c =
+            GpuCache::with_policy(Arc::clone(&t), store_of(&data), EvictionPolicy::Ttl, 2)
+                .unwrap();
+        for &k in &data {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        assert_eq!(c.resident(), 8);
+        lc.clock.advance(3); // every resident is a corpse now
+        // Re-requesting a corpse misses, revives the entry in place, and
+        // must NOT grow residency: the key already owns a ring slot.
+        c.misses = 0;
+        assert_eq!(c.get(data[3]), Some(data[3] ^ 0xCAFE));
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.resident(), 8, "revival duplicated a ring slot");
+        assert_eq!(c.evictions, 0);
+        assert!(t.entry_frequency(data[3]).is_some(), "revived entry must be live");
+    }
+
+    #[test]
+    fn frequency_policy_keeps_hot_old_entries_over_cold_ones() {
+        use crate::tables::LifecycleConfig;
+        let lc = LifecycleConfig::new(1);
+        // DoubleMeta: the odd-stride probe walk covers every bucket, so
+        // no admission below capacity can spuriously report `Full` and
+        // perturb the exact eviction counts this test pins down.
+        let t = lifecycle_table(TableKind::DoubleMeta, 256, &lc);
+        let cap = ((t.capacity() as f64) * 0.85) as usize;
+        let data = distinct_keys(cap + 1, 0xD4);
+        // TTL far beyond the deadline-ring horizon → admissions store
+        // immortal: pure frequency ranking, nothing ever expires.
+        let mut c = GpuCache::with_policy(
+            Arc::clone(&t),
+            store_of(&data),
+            EvictionPolicy::TtlFrequency,
+            1_000_000,
+        )
+        .unwrap();
+        for &k in &data[..cap] {
+            assert_eq!(c.get(k), Some(k ^ 0xCAFE));
+        }
+        // Heat the OLDEST resident: each hit's tag probe bumps its
+        // frequency counter for free.
+        for _ in 0..5 {
+            assert_eq!(c.get(data[0]), Some(data[0] ^ 0xCAFE));
+        }
+        assert!(t.entry_frequency(data[0]).unwrap_or(0) > 0);
+        assert_eq!(t.entry_frequency(data[1]), Some(0));
+        // One over-cap admission: the victim sample holds the hot
+        // oldest entry and its cold neighbors — the cold one must go.
+        assert_eq!(c.get(data[cap]), Some(data[cap] ^ 0xCAFE));
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.expired_evictions, 0, "nothing expired in this run");
+        assert!(
+            t.entry_frequency(data[0]).is_some(),
+            "the hot old resident must survive FIFO order"
+        );
+        assert!(
+            t.entry_frequency(data[1]).is_none(),
+            "the cold old resident should have been the victim"
+        );
     }
 
     #[test]

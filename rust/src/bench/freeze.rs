@@ -258,7 +258,7 @@ mod tests {
         };
         let out = run(&env);
         assert!(out.contains("frozen perfect-hash tier"));
-        assert!(out.contains("\"exhibit\":\"freeze\""));
+        assert!(out.contains("\"exhibit\": \"freeze\""));
         assert!(!out.contains("inf") && !out.contains("NaN"));
     }
 }

@@ -72,7 +72,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::{self, JoinHandle};
 
 use super::{Batch, Op, Router, ShardedTable};
-use crate::tables::{GrowthPolicy, TableKind, UpsertOp, UpsertResult};
+use crate::tables::{GrowthPolicy, LifecycleConfig, TableKind, UpsertOp, UpsertResult};
 
 /// Result of one operation, tagged with its sequence number.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -139,6 +139,16 @@ pub struct ReshardPolicy {
     /// (busy queue, rescale in progress) resets the streak, mirroring
     /// [`ReshardPolicy::merge_hysteresis`].
     pub freeze_after_idle: usize,
+    /// Buckets one background expiry-sweep job scans, with ONE such job
+    /// enqueued per submit, walking the shards round-robin ahead of the
+    /// batch on the target shard's affine worker — the bounded
+    /// interleaving shape the growth-migration jobs established, applied
+    /// to lifecycle reclamation ([`crate::tables::ConcurrentMap::sweep_expired`]).
+    /// `0` (the default) disables background sweeps; expire-on-read and
+    /// [`Coordinator::sweep_now`] still work. Only meaningful when the
+    /// shards carry a lifecycle config
+    /// ([`Coordinator::new_with_lifecycle`]).
+    pub sweep_buckets_per_submit: usize,
 }
 
 impl Default for ReshardPolicy {
@@ -153,6 +163,7 @@ impl Default for ReshardPolicy {
             migration_stripes: 64,
             max_shards: 1024,
             freeze_after_idle: 0,
+            sweep_buckets_per_submit: 0,
         }
     }
 }
@@ -324,6 +335,13 @@ enum Job {
     /// rescale cannot start under it because cutovers drain the pool
     /// first. Dropped harmlessly if a sealed merge retired the index.
     Freeze { shard_idx: usize },
+    /// Scan up to `buckets` buckets of shard `shard_idx` for expired
+    /// entries and reclaim them
+    /// ([`crate::tables::ConcurrentMap::sweep_expired`]) — lifecycle
+    /// reclamation riding the same shard-affine machinery as `Migrate`:
+    /// bounded, enqueued ahead of a batch, and dropped harmlessly if a
+    /// sealed merge retired the index.
+    Sweep { shard_idx: usize, buckets: usize },
     /// Epoch-cutover drain marker: the worker acks once every job queued
     /// before it has finished (channel FIFO).
     Barrier(Sender<()>),
@@ -448,6 +466,14 @@ impl WorkerPool {
                     }
                     inflight.fetch_sub(1, Ordering::Relaxed);
                 }
+                Job::Sweep { shard_idx, buckets } => {
+                    // Stale-index rule again; a retired shard's corpses
+                    // were dropped with it, nothing left to sweep.
+                    if let Some(shard) = table.try_shard_handle(shard_idx) {
+                        shard.sweep_expired(buckets);
+                    }
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
                 Job::Barrier(ack) => {
                     let _ = ack.send(());
                 }
@@ -506,12 +532,29 @@ pub struct Coordinator {
     /// ([`ReshardPolicy::freeze_after_idle`]); same locking discipline
     /// as `merge_streak`.
     freeze_streak: AtomicUsize,
+    /// Round-robin cursor over shards for the per-submit background
+    /// expiry-sweep job ([`ReshardPolicy::sweep_buckets_per_submit`]).
+    sweep_rr: AtomicUsize,
     /// Operations executed (metrics).
     pub ops_executed: std::sync::atomic::AtomicU64,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
+        Self::build(cfg, None)
+    }
+
+    /// Like [`Coordinator::new`] but every shard (and every future split
+    /// child) is built with the given entry-lifecycle config: the shards
+    /// expire on read, [`ShardedTable::upsert_ttl`] arms deadlines, and
+    /// the policy's [`ReshardPolicy::sweep_buckets_per_submit`] /
+    /// [`Coordinator::sweep_now`] reclamation paths have something to
+    /// sweep. Composes with growth, resharding, and tiering unchanged.
+    pub fn new_with_lifecycle(cfg: CoordinatorConfig, lifecycle: LifecycleConfig) -> Self {
+        Self::build(cfg, Some(lifecycle))
+    }
+
+    fn build(cfg: CoordinatorConfig, lifecycle: Option<LifecycleConfig>) -> Self {
         // A non-zero freeze_after_idle is the opt-in for tiered shards:
         // freezing needs somewhere to put the frozen tier, and untiered
         // runs shouldn't pay the TieredMap indirection.
@@ -519,15 +562,24 @@ impl Coordinator {
             .reshard
             .map(|p| p.freeze_after_idle > 0)
             .unwrap_or(false);
-        let table = Arc::new(if tiered {
-            ShardedTable::new_tiered(cfg.kind, cfg.total_slots, cfg.n_shards, cfg.growth)
-        } else {
-            match cfg.growth {
+        let table = Arc::new(match lifecycle {
+            Some(lc) => ShardedTable::new_lifecycle(
+                cfg.kind,
+                cfg.total_slots,
+                cfg.n_shards,
+                cfg.growth,
+                tiered,
+                lc,
+            ),
+            None if tiered => {
+                ShardedTable::new_tiered(cfg.kind, cfg.total_slots, cfg.n_shards, cfg.growth)
+            }
+            None => match cfg.growth {
                 Some(policy) => {
                     ShardedTable::new_growable(cfg.kind, cfg.total_slots, cfg.n_shards, policy)
                 }
                 None => ShardedTable::new(cfg.kind, cfg.total_slots, cfg.n_shards),
-            }
+            },
         });
         let inflight = Arc::new(AtomicUsize::new(0));
         // More workers than shards would park forever on empty channels
@@ -544,6 +596,7 @@ impl Coordinator {
             epoch_gate: Mutex::new(epoch),
             merge_streak: AtomicUsize::new(0),
             freeze_streak: AtomicUsize::new(0),
+            sweep_rr: AtomicUsize::new(0),
             ops_executed: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -784,7 +837,8 @@ impl Coordinator {
         if router.epoch() != *gate || rescaling {
             return None;
         }
-        let (len, capacity) = self.table.load_stats();
+        let stats = self.table.load_stats();
+        let (len, capacity) = (stats.len, stats.capacity);
         if router.n_shards() * 2 <= policy.max_shards
             && (policy.load_triggered(len, capacity)
                 || policy.queue_triggered(self.pending_jobs_per_worker()))
@@ -893,6 +947,11 @@ impl Coordinator {
         // serializes it against the shard's mutating batches, which is
         // exactly the quiesced-writer window request_freeze needs.
         self.maybe_enqueue_freezes(&pool, n_workers);
+        // Expiry-sweep interleaving: one bounded Sweep job per submit
+        // walks the shards round-robin ahead of the batch, so lifecycle
+        // reclamation proceeds at a fixed background rate without ever
+        // stalling the pool (the growth-migration shape again).
+        self.maybe_enqueue_sweep(&pool, n_workers);
         let mut per_worker: Vec<Vec<(usize, Vec<(u64, Op)>)>> =
             (0..n_workers).map(|_| Vec::new()).collect();
         for (i, p) in parts.into_iter().enumerate() {
@@ -1007,6 +1066,60 @@ impl Coordinator {
         drop(gate);
         self.drain_workers();
         true
+    }
+
+    /// Enqueue the per-submit background expiry-sweep job when the
+    /// policy arms it ([`ReshardPolicy::sweep_buckets_per_submit`]) and
+    /// the shards have a lifecycle to sweep. One shard per submit,
+    /// round-robin, bounded buckets — never more than one job of extra
+    /// queue depth per batch. The job itself is stale-index-safe, so no
+    /// rescale gating is needed here (expired entries are dead either
+    /// way; sweeping one mid-drain shard just reclaims them earlier).
+    fn maybe_enqueue_sweep(&self, pool: &WorkerPool, n_workers: usize) {
+        let buckets = self
+            .cfg
+            .reshard
+            .map(|p| p.sweep_buckets_per_submit)
+            .unwrap_or(0);
+        if buckets == 0 || !self.table.supports_ttl() {
+            return;
+        }
+        let n = self.table.n_shards();
+        let i = self.sweep_rr.fetch_add(1, Ordering::Relaxed) % n.max(1);
+        self.send_aux(pool, i % n_workers, Job::Sweep { shard_idx: i, buckets });
+    }
+
+    /// Enqueue a full-coverage `Job::Sweep` for every shard through its
+    /// affine worker and wait for the pool to drain — the deterministic
+    /// counterpart of [`ReshardPolicy::sweep_buckets_per_submit`], for
+    /// benches, tests, and cooldown paths that want every expired entry
+    /// reclaimed NOW. Returns false without enqueueing anything when the
+    /// shards carry no lifecycle config (nothing can ever expire).
+    pub fn sweep_now(&self) -> bool {
+        let gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
+        if !self.table.supports_ttl() {
+            return false;
+        }
+        {
+            let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
+            let n_workers = pool.len();
+            for (i, shard) in self.table.shards_snapshot().iter().enumerate() {
+                // 2× the bucket count covers every design's sweep ring
+                // (iceberg's front+back walk included) in one job.
+                let buckets = 2 * shard.num_buckets();
+                self.send_aux(&pool, i % n_workers, Job::Sweep { shard_idx: i, buckets });
+            }
+        }
+        drop(gate);
+        self.drain_workers();
+        true
+    }
+
+    /// Expired entries reclaimed by sweeps across the table's lifetime
+    /// (background jobs, [`Coordinator::sweep_now`], and the shards' own
+    /// internal sweeps combined; merge-dropped shards included).
+    pub fn swept_expired(&self) -> u64 {
+        self.table.swept_expired()
     }
 
     /// Live entries currently served from frozen read-optimized tiers,
@@ -2123,5 +2236,107 @@ mod tests {
             shard.for_each_entry(&mut |k, _| *copies.entry(k).or_insert(0u32) += 1);
         }
         assert!(copies.values().all(|&n| n == 1), "a key is resident in both tiers");
+    }
+
+    #[test]
+    fn sweep_now_reclaims_expired_entries_across_shards() {
+        let lc = LifecycleConfig::new(1);
+        let c = Coordinator::new_with_lifecycle(
+            CoordinatorConfig {
+                kind: TableKind::DoubleMeta,
+                total_slots: 16 * 1024,
+                n_shards: 4,
+                n_workers: 2,
+                max_batch: 64,
+                growth: None,
+                reshard: None,
+            },
+            lc.clone(),
+        );
+        assert!(c.table.supports_ttl(), "lifecycle config must reach the shards");
+        let ks = distinct_keys(900, 0xF0);
+        let (mortal, immortal) = ks.split_at(300);
+        for &k in mortal {
+            assert_eq!(
+                c.table.upsert_ttl(k, k ^ 3, 2, &UpsertOp::InsertIfUnique),
+                UpsertResult::Inserted
+            );
+        }
+        let w = c.run_stream(immortal.iter().map(|&k| Op::Upsert(k, k ^ 3)));
+        assert!(w.iter().all(|&x| x == OpResult::Upserted(true)));
+        lc.clock.advance(3);
+        // Expire-on-read through the batch path: mortals answer None,
+        // immortals still answer — but reads reclaim nothing (len is
+        // physical until a sweep).
+        let r = c.run_stream(ks.iter().map(|&k| Op::Query(k)));
+        for (i, &x) in r.iter().enumerate() {
+            let want = if i < 300 { None } else { Some(ks[i] ^ 3) };
+            assert_eq!(x, OpResult::Value(want), "query {i}");
+        }
+        assert_eq!(c.table.len(), ks.len(), "reads must not reclaim");
+        assert!(c.sweep_now(), "lifecycle shards must accept a sweep");
+        assert_eq!(c.swept_expired(), 300, "every corpse swept exactly once");
+        assert_eq!(c.table.len(), immortal.len());
+        assert_eq!(c.table.load_stats().swept_expired, 300);
+        // A second full sweep finds nothing left.
+        assert!(c.sweep_now());
+        assert_eq!(c.swept_expired(), 300);
+    }
+
+    #[test]
+    fn sweep_now_refuses_without_a_lifecycle() {
+        let c = coord();
+        assert!(!c.table.supports_ttl());
+        assert!(!c.sweep_now(), "no lifecycle, nothing can ever expire");
+        assert_eq!(c.swept_expired(), 0);
+    }
+
+    #[test]
+    fn background_sweep_jobs_ride_round_robin_between_batches() {
+        let lc = LifecycleConfig::new(1);
+        let c = Coordinator::new_with_lifecycle(
+            CoordinatorConfig {
+                kind: TableKind::P2Meta,
+                total_slots: 16 * 1024,
+                n_shards: 4,
+                n_workers: 4,
+                max_batch: 256,
+                growth: None,
+                reshard: Some(ReshardPolicy {
+                    // Large enough that one job covers a whole shard's
+                    // sweep ring: 4 submits = full-table coverage.
+                    sweep_buckets_per_submit: 1 << 20,
+                    ..Default::default()
+                }),
+            },
+            lc.clone(),
+        );
+        let ks = distinct_keys(1200, 0xF1);
+        let (mortal, immortal) = ks.split_at(600);
+        for &k in mortal {
+            c.table.upsert_ttl(k, 1, 2, &UpsertOp::InsertIfUnique);
+        }
+        for &k in immortal {
+            c.table.upsert(k, 1, &UpsertOp::InsertIfUnique);
+        }
+        lc.clock.advance(3);
+        assert_eq!(c.table.len(), ks.len());
+        // Each submit enqueues one round-robin sweep job ahead of its
+        // batch; 4 shards → a handful of probe rounds reclaims all 600
+        // corpses without any explicit sweep call.
+        let probe = Batch {
+            ops: vec![(0, Op::Query(immortal[0]))],
+        };
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while c.swept_expired() < 600 && std::time::Instant::now() < deadline {
+            let pending = c.submit(&probe);
+            let _ = c.collect(pending);
+            std::thread::yield_now();
+        }
+        assert_eq!(c.swept_expired(), 600, "background sweeps never reclaimed the corpses");
+        assert_eq!(c.table.len(), immortal.len());
+        // The probe key itself must have survived every sweep.
+        let r = c.run_stream(immortal.iter().map(|&k| Op::Query(k)));
+        assert!(r.iter().all(|&x| x == OpResult::Value(Some(1))));
     }
 }

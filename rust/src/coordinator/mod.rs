@@ -97,6 +97,21 @@
 //! and a write to a frozen key simply promotes it back to the mutable
 //! tier. `warpspeed freeze` / [`crate::bench::freeze`] exhibits it.
 //!
+//! ## Background expiry sweeps
+//!
+//! Shards built with an entry-lifecycle config
+//! ([`Coordinator::new_with_lifecycle`]) expire on read, but an entry
+//! nobody queries again would occupy its slot forever. With
+//! [`ReshardPolicy::sweep_buckets_per_submit`] set, each submit rides
+//! one bounded `Sweep` job ahead of the batch — shards are walked
+//! round-robin, each job scanning at most that many buckets on the
+//! shard's affine worker — so reclamation interleaves with traffic at a
+//! fixed background rate, exactly the shape the growth-migration jobs
+//! established. [`Coordinator::sweep_now`] is the deterministic
+//! counterpart (full coverage, drained before returning), and
+//! [`Coordinator::swept_expired`] / [`ShardedTable::load_stats`] report
+//! the running reclamation counters.
+//!
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches
 //!   the same shard (required for per-key linearization); across an
@@ -120,7 +135,7 @@ pub use exec::{
     default_workers, Coordinator, CoordinatorConfig, OpResult, PendingBatch, ReadOffload,
     ReshardPolicy,
 };
-pub use router::{Router, ShardedTable};
+pub use router::{LoadStats, Router, ShardedTable};
 
 /// One client operation (the paper's API surface, §5.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

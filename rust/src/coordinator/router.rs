@@ -88,8 +88,8 @@ use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use crate::gpusim::LockArray;
 use crate::hash::seeded;
 use crate::tables::{
-    build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, TableConfig, TableKind, TieredMap,
-    UpsertOp, UpsertResult,
+    build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, LifecycleConfig, TableConfig,
+    TableKind, TieredMap, UpsertOp, UpsertResult,
 };
 
 /// Routing hash seed — distinct from all table seeds so shard choice is
@@ -274,6 +274,21 @@ enum Topology {
     Merging(Arc<Merge>),
 }
 
+/// One-guard aggregate sample of the sharded table's load — what
+/// [`ShardedTable::load_stats`] returns and the coordinator's reshard
+/// triggers (and lifecycle metrics) consume once per submit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadStats {
+    /// Live + expired-but-unswept entries across every resident shard
+    /// (physical occupancy, like [`ConcurrentMap::len`]).
+    pub len: usize,
+    /// Total slots across every resident shard.
+    pub capacity: usize,
+    /// Expired entries reclaimed by sweeps over the table's lifetime,
+    /// merge-dropped shards included ([`ShardedTable::swept_expired`]).
+    pub swept_expired: u64,
+}
+
 /// A table design sharded across independent instances, with online
 /// shard-count rescaling (see the module docs for the protocol).
 pub struct ShardedTable {
@@ -286,6 +301,14 @@ pub struct ShardedTable {
     /// coordinator's freeze jobs (and [`ConcurrentMap::request_freeze`])
     /// can rebuild online.
     tiered: bool,
+    /// Entry-lifecycle config every shard (and every future split
+    /// child) is built with; `None` = immortal entries, no TTL surface.
+    lifecycle: Option<LifecycleConfig>,
+    /// Expired entries reclaimed by shards a sealed merge has since
+    /// dropped — banked at the flip so [`ShardedTable::swept_expired`]
+    /// stays monotonic across halvings (the children die with their
+    /// counters otherwise).
+    swept_carry: AtomicU64,
     topo: RwLock<Topology>,
     /// Completed shard-count doublings over this table's lifetime.
     splits: AtomicU64,
@@ -298,7 +321,23 @@ pub struct ShardedTable {
 
 impl ShardedTable {
     pub fn new(kind: TableKind, total_slots: usize, n_shards: usize) -> Self {
-        Self::build(kind, total_slots, n_shards, None, false)
+        Self::build(kind, total_slots, n_shards, None, false, None)
+    }
+
+    /// The fully general constructor: any growth/tiering combination,
+    /// with every shard (and every future split child) built with the
+    /// given entry-lifecycle config — arming the TTL surface
+    /// ([`ShardedTable::upsert_ttl`], expire-on-read queries) and the
+    /// coordinator's background `Job::Sweep` reclamation.
+    pub fn new_lifecycle(
+        kind: TableKind,
+        total_slots: usize,
+        n_shards: usize,
+        growth: Option<GrowthPolicy>,
+        tiered: bool,
+        lifecycle: LifecycleConfig,
+    ) -> Self {
+        Self::build(kind, total_slots, n_shards, growth, tiered, Some(lifecycle))
     }
 
     /// Like [`ShardedTable::new`]/[`ShardedTable::new_growable`] but each
@@ -311,7 +350,7 @@ impl ShardedTable {
         n_shards: usize,
         growth: Option<GrowthPolicy>,
     ) -> Self {
-        Self::build(kind, total_slots, n_shards, growth, true)
+        Self::build(kind, total_slots, n_shards, growth, true, None)
     }
 
     /// Like [`ShardedTable::new`] but every shard is wrapped in a
@@ -325,7 +364,7 @@ impl ShardedTable {
         n_shards: usize,
         policy: GrowthPolicy,
     ) -> Self {
-        Self::build(kind, total_slots, n_shards, Some(policy), false)
+        Self::build(kind, total_slots, n_shards, Some(policy), false, None)
     }
 
     fn build(
@@ -334,6 +373,7 @@ impl ShardedTable {
         n_shards: usize,
         growth: Option<GrowthPolicy>,
         tiered: bool,
+        lifecycle: Option<LifecycleConfig>,
     ) -> Self {
         let router = Router::new(n_shards);
         let per_shard = total_slots.div_ceil(n_shards);
@@ -341,6 +381,8 @@ impl ShardedTable {
             kind,
             growth,
             tiered,
+            lifecycle,
+            swept_carry: AtomicU64::new(0),
             topo: RwLock::new(Topology::Normal {
                 router,
                 shards: Vec::new(),
@@ -355,7 +397,10 @@ impl ShardedTable {
     }
 
     fn build_shard(&self, slots: usize) -> Arc<dyn ConcurrentMap> {
-        let cfg = TableConfig::for_kind(self.kind, slots);
+        let mut cfg = TableConfig::for_kind(self.kind, slots);
+        if let Some(lc) = &self.lifecycle {
+            cfg = cfg.with_lifecycle(lc.clone());
+        }
         let base: Arc<dyn ConcurrentMap> = match self.growth {
             Some(policy) => Arc::new(GrowableMap::new(self.kind, cfg, policy)),
             None => build_table_with(self.kind, cfg),
@@ -459,29 +504,63 @@ impl ShardedTable {
     // ---------------------------------------------------------------
 
     pub fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, None)
+    }
+
+    /// TTL-armed upsert, phase-aware like [`ShardedTable::upsert`]: the
+    /// deadline applies at whichever table the split/merge protocol
+    /// lands the write in. No-op deadline (plain upsert semantics) on
+    /// shards built without a lifecycle config.
+    pub fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, Some(ttl_ticks))
+    }
+
+    /// Apply an upsert to one shard, TTL-armed when `ttl` is set — the
+    /// one leaf every phase-aware upsert path funnels through.
+    #[inline]
+    fn apply_upsert(
+        t: &dyn ConcurrentMap,
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+        ttl: Option<u64>,
+    ) -> UpsertResult {
+        match ttl {
+            Some(q) => t.upsert_ttl(key, val, q, op),
+            None => t.upsert(key, val, op),
+        }
+    }
+
+    fn upsert_with_ttl(
+        &self,
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+        ttl: Option<u64>,
+    ) -> UpsertResult {
         let g = self.read_topo();
         match &*g {
             Topology::Normal { router, shards } => {
-                shards[router.shard_of(key)].upsert(key, val, op)
+                Self::apply_upsert(shards[router.shard_of(key)].as_ref(), key, val, op, ttl)
             }
             Topology::Splitting(s) => {
                 let pair = s.from.shard_of(key);
                 if s.from.splits_up(key) {
-                    self.upsert_moving(s, pair, key, val, op)
+                    self.upsert_moving(s, pair, key, val, op, ttl)
                 } else {
-                    Self::upsert_staying(s, pair, key, val, op)
+                    Self::upsert_staying(s, pair, key, val, op, ttl)
                 }
             }
             Topology::Merging(m) => {
                 let pair = m.to.shard_of(key);
                 if m.from.merges_down(key) {
-                    self.upsert_merging(m, pair, key, val, op)
+                    self.upsert_merging(m, pair, key, val, op, ttl)
                 } else {
                     // Stay-key upserts run lock-free against the parent:
                     // the merge's sealing sweep scans the CHILD, which a
                     // parent insert can never displace into (contrast
                     // `upsert_staying` on the split path).
-                    m.shards[pair].upsert(key, val, op)
+                    Self::apply_upsert(m.shards[pair].as_ref(), key, val, op, ttl)
                 }
             }
         }
@@ -563,11 +642,11 @@ impl ShardedTable {
                 out.reserve(pairs.len());
                 if idx >= n {
                     for &(k, v) in pairs {
-                        out.push(self.upsert_moving(s, idx - n, k, v, op));
+                        out.push(self.upsert_moving(s, idx - n, k, v, op, None));
                     }
                 } else {
                     for &(k, v) in pairs {
-                        out.push(Self::upsert_staying(s, idx, k, v, op));
+                        out.push(Self::upsert_staying(s, idx, k, v, op, None));
                     }
                 }
             }
@@ -578,7 +657,7 @@ impl ShardedTable {
                 out.reserve(pairs.len());
                 for &(k, v) in pairs {
                     out.push(if m.from.merges_down(k) {
-                        self.upsert_merging(m, idx, k, v, op)
+                        self.upsert_merging(m, idx, k, v, op, None)
                     } else {
                         m.shards[idx].upsert(k, v, op)
                     });
@@ -761,11 +840,12 @@ impl ShardedTable {
         key: u64,
         val: u64,
         op: &UpsertOp,
+        ttl: Option<u64>,
     ) -> UpsertResult {
         let st = stripe_of(key);
         s.pairs[pair].locks.lock(st);
         let r = if self.move_split_copy(s, pair, key) {
-            s.shards[pair + s.from.n_shards()].upsert(key, val, op)
+            Self::apply_upsert(s.shards[pair + s.from.n_shards()].as_ref(), key, val, op, ttl)
         } else {
             // Blocked seed: report Full (growable children grow inside
             // their own upsert, so this means pinned-at-ceiling).
@@ -779,10 +859,17 @@ impl ShardedTable {
     /// sweep holds every stripe to get a displacement-free parent scan
     /// (CuckooHT inserts can relocate movers between buckets), so parent
     /// inserts must be excluded while it runs.
-    fn upsert_staying(s: &Split, pair: usize, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    fn upsert_staying(
+        s: &Split,
+        pair: usize,
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+        ttl: Option<u64>,
+    ) -> UpsertResult {
         let st = stripe_of(key);
         s.pairs[pair].locks.lock(st);
-        let r = s.shards[pair].upsert(key, val, op);
+        let r = Self::apply_upsert(s.shards[pair].as_ref(), key, val, op, ttl);
         s.pairs[pair].locks.unlock(st);
         r
     }
@@ -827,11 +914,12 @@ impl ShardedTable {
         key: u64,
         val: u64,
         op: &UpsertOp,
+        ttl: Option<u64>,
     ) -> UpsertResult {
         let st = stripe_of(key);
         m.pairs[pair].locks.lock(st);
         let r = if self.move_merge_copy(m, pair, key) {
-            m.shards[pair].upsert(key, val, op)
+            Self::apply_upsert(m.shards[pair].as_ref(), key, val, op, ttl)
         } else {
             // Blocked seed: the parent is saturated (growable parents
             // grow inside their own upsert, so this means
@@ -1313,6 +1401,10 @@ impl ShardedTable {
         if m.pairs.len() == m.complete_pairs.fetch_add(1, Ordering::AcqRel) + 1 {
             let mut g = self.write_topo();
             if matches!(&*g, Topology::Merging(cur) if Arc::ptr_eq(cur, m)) {
+                // The children die with their sweep counters — bank them
+                // so `swept_expired` stays monotonic across the flip.
+                let swept: u64 = m.shards[n..].iter().map(|s| s.swept_expired()).sum();
+                self.swept_carry.fetch_add(swept, Ordering::Relaxed);
                 *g = Topology::Normal {
                     router: m.to,
                     // Dropping the child handles here is the reclaim.
@@ -1355,13 +1447,49 @@ impl ShardedTable {
         self.with_shards(|sh| sh.iter().map(|s| s.capacity()).sum())
     }
 
-    /// Aggregate `(len, capacity)` under ONE topology guard — the
-    /// reshard load-factor trigger's input, sampled once per submit.
-    pub fn load_stats(&self) -> (usize, usize) {
-        self.with_shards(|sh| {
-            sh.iter()
-                .fold((0, 0), |(l, c), s| (l + s.len(), c + s.capacity()))
-        })
+    /// Aggregate load metrics under ONE topology guard — the reshard
+    /// load-factor trigger's input, sampled once per submit, plus the
+    /// lifecycle sweep counter so one sample answers both "how full"
+    /// and "how much expiry reclamation has run".
+    pub fn load_stats(&self) -> LoadStats {
+        let (len, capacity, swept) = self.with_shards(|sh| {
+            sh.iter().fold((0, 0, 0u64), |(l, c, w), s| {
+                (l + s.len(), c + s.capacity(), w + s.swept_expired())
+            })
+        });
+        LoadStats {
+            len,
+            capacity,
+            swept_expired: swept + self.swept_carry.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Whether the shards were built with an entry-lifecycle config
+    /// ([`ShardedTable::new_lifecycle`]) — what arms the coordinator's
+    /// background sweep jobs and the [`ShardedTable::upsert_ttl`]
+    /// surface.
+    pub fn supports_ttl(&self) -> bool {
+        self.with_shards(|sh| sh.first().is_some_and(|s| s.supports_ttl()))
+    }
+
+    /// Sweep up to `max_buckets` buckets of EVERY resident shard for
+    /// expired entries, returning entries reclaimed (quiesce helper for
+    /// benches/tests; the coordinator's `Job::Sweep` sweeps one shard at
+    /// a time on its affine worker instead).
+    pub fn sweep_expired(&self, max_buckets: usize) -> usize {
+        // Snapshot first: sweeping inside `with_shards` would hold the
+        // topology read guard across the whole scan.
+        self.shards_snapshot()
+            .iter()
+            .map(|s| s.sweep_expired(max_buckets))
+            .sum()
+    }
+
+    /// Expired entries reclaimed by sweeps across every shard's lifetime,
+    /// including shards a sealed merge has dropped (banked at the flip).
+    pub fn swept_expired(&self) -> u64 {
+        self.swept_carry.load(Ordering::Relaxed)
+            + self.with_shards(|sh| sh.iter().map(|s| s.swept_expired()).sum::<u64>())
     }
 
     /// Total simulated device bytes across every resident shard — during

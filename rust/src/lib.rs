@@ -108,6 +108,26 @@
 //! [`apps::caching::GpuCache::with_tiered`] freezes cache survivors at
 //! cooldown, and the `freeze` exhibit ([`bench::freeze`]) measures
 //! frozen vs mutable bulk launches against a sequential oracle.
+//!
+//! # Entry lifecycle — TTL, frequency, and segcache-style eviction
+//!
+//! Every design can carry per-entry lifecycle metadata
+//! ([`tables::TableConfig::with_lifecycle`]): an 8-bit code packing a
+//! saturating frequency counter and a coarse TTL deadline on a
+//! 16-quantum ring, clocked by a deterministic logical
+//! [`tables::LifecycleClock`]. The code is colocated with the
+//! fingerprint/meta bytes, so the tag probe a lookup already performs
+//! bumps the frequency — the gpusim line counters show zero extra
+//! cache lines on the query hot path. `upsert_ttl` arms entries,
+//! queries expire on read (a corpse answers as a miss and is never
+//! resurrected), `sweep_expired` reclaims in bounded steps, and the
+//! coordinator rides round-robin `Sweep` jobs on its shard-affine
+//! workers ([`coordinator::ReshardPolicy`]
+//! `::sweep_buckets_per_submit`, [`coordinator::Coordinator::sweep_now`]).
+//! [`apps::caching::GpuCache::with_policy`] turns the metadata into
+//! eviction policy: FIFO (default), TTL-first, or segcache-style
+//! TTL-then-lowest-frequency; the `aging` exhibit ([`bench::aging`])
+//! compares the three under zipfian churn.
 
 pub mod gpusim;
 pub mod hash;

@@ -24,7 +24,7 @@
 //! so the per-group walk is the analog of the warp-cooperative chain
 //! traversal in SlabHash-style bulk kernels.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::alloc::{SlabAllocator, NIL};
 use crate::gpusim::mem::{is_user_key, SimMem, EMPTY};
@@ -32,6 +32,7 @@ use crate::gpusim::race::RaceEvent;
 use crate::gpusim::LockArray;
 use crate::hash::hash1;
 
+use super::lifecycle::LifecycleSlots;
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 
 /// KV pairs per chain node (7 pairs + next pointer = one cache line).
@@ -50,6 +51,13 @@ pub struct ChainingHt {
     mode: ConcurrencyMode,
     hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
     live: AtomicU64,
+    /// TTL + frequency codes, one per node pair. Modeled COLOCATED: the
+    /// 7 per-pair codes of a node pack into the node's 8-byte pad word
+    /// (slot 14), which sits inside the very cache line every chain walk
+    /// already loads — code reads/bumps cost zero extra lines.
+    life: Option<LifecycleSlots>,
+    sweep_cursor: AtomicUsize,
+    swept: AtomicU64,
 }
 
 impl ChainingHt {
@@ -61,6 +69,10 @@ impl ChainingHt {
         // Arena slack ×3 for chain-length skew plus growth under churn
         // (the paper's caching workload grows a 10% chaining table to 28%).
         let arena_nodes = nb * 3 + 16;
+        let life = cfg
+            .lifecycle
+            .clone()
+            .map(|lc| LifecycleSlots::colocated(lc, arena_nodes * NODE_PAIRS));
         Self {
             heads: SimMem::new(nb),
             nodes: SlabAllocator::new(arena_nodes, NODE_SLOTS),
@@ -70,7 +82,59 @@ impl ChainingHt {
             mode: cfg.mode,
             hook: cfg.hook,
             live: AtomicU64::new(0),
+            life,
+            sweep_cursor: AtomicUsize::new(0),
+            swept: AtomicU64::new(0),
         }
+    }
+
+    /// Flat lifecycle index of a node pair (node ids start at 1).
+    #[inline(always)]
+    fn lifeslot(&self, node: u64, pair: usize) -> usize {
+        (node as usize - 1) * NODE_PAIRS + pair
+    }
+
+    /// Lifecycle index recovered from a pair's key slot index (the raw
+    /// chain walks hand out `kidx`, not (node, pair)).
+    #[inline(always)]
+    fn lifeslot_of_kidx(&self, kidx: usize) -> usize {
+        (kidx / NODE_SLOTS) * NODE_PAIRS + (kidx % NODE_SLOTS) / 2
+    }
+
+    #[inline]
+    fn is_expired(&self, node: u64, pair: usize) -> bool {
+        self.life
+            .as_ref()
+            .is_some_and(|l| l.is_expired_at(self.lifeslot(node, pair)))
+    }
+
+    /// Query-hit bookkeeping: bump frequency; `false` = expired (miss).
+    #[inline]
+    fn hit_live(&self, node: u64, pair: usize) -> bool {
+        match &self.life {
+            Some(l) => l.on_hit(self.lifeslot(node, pair)),
+            None => true,
+        }
+    }
+
+    #[inline]
+    fn stamp_fresh(&self, node: u64, pair: usize, ttl: Option<u64>) {
+        if let Some(l) = &self.life {
+            l.fresh(self.lifeslot(node, pair), ttl);
+        }
+    }
+
+    /// Reclaim an expired pair in place as a fresh insert of `val`.
+    #[inline]
+    fn reclaim_if_expired(&self, node: u64, pair: usize, val: u64, ttl: Option<u64>) -> bool {
+        if !self.is_expired(node, pair) {
+            return false;
+        }
+        self.nodes
+            .mem()
+            .store_release(self.pair_kidx(node, pair) + 1, val);
+        self.stamp_fresh(node, pair, ttl);
+        true
     }
 
     #[inline(always)]
@@ -221,8 +285,9 @@ impl ChainingHt {
     }
 }
 
-impl ConcurrentMap for ChainingHt {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+impl ChainingHt {
+    /// Scalar upsert body, shared by `upsert` / `upsert_ttl`.
+    fn upsert_with_ttl(&self, key: u64, val: u64, op: &UpsertOp, ttl: Option<u64>) -> UpsertResult {
         debug_assert!(is_user_key(key));
         let bucket = self.bucket_of(key);
         if self.mode.locking() {
@@ -233,7 +298,15 @@ impl ConcurrentMap for ChainingHt {
         let res = 'done: {
             let (found, free) = self.walk(bucket, key, strong);
             if let Some((node, pair, old_v)) = found {
+                if self.reclaim_if_expired(node, pair, val, ttl) {
+                    break 'done UpsertResult::Inserted;
+                }
                 self.apply_existing(node, pair, old_v, val, op);
+                if ttl.is_some() {
+                    if let Some(l) = &self.life {
+                        l.refresh(self.lifeslot(node, pair), ttl);
+                    }
+                }
                 break 'done UpsertResult::Updated;
             }
             self.hook
@@ -244,6 +317,7 @@ impl ConcurrentMap for ChainingHt {
                 let kidx = self.pair_kidx(node, pair);
                 mem.store_relaxed(kidx + 1, val);
                 mem.store_release(kidx, key);
+                self.stamp_fresh(node, pair, ttl);
                 self.live.fetch_add(1, Ordering::Relaxed);
                 break 'done UpsertResult::Inserted;
             }
@@ -251,7 +325,10 @@ impl ConcurrentMap for ChainingHt {
             self.hook
                 .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket });
             match self.prepend_node(bucket, key, val, strong) {
-                Some(_) => UpsertResult::Inserted,
+                Some(node) => {
+                    self.stamp_fresh(node, 0, ttl);
+                    UpsertResult::Inserted
+                }
                 None => UpsertResult::Full,
             }
         };
@@ -261,10 +338,51 @@ impl ConcurrentMap for ChainingHt {
         res
     }
 
+    /// Tombstone a corpse iff still present AND still expired under the
+    /// bucket lock (sweep-vs-writer race guard).
+    fn erase_expired(&self, key: u64) -> bool {
+        let bucket = self.bucket_of(key);
+        if self.mode.locking() {
+            self.locks.lock(bucket);
+        }
+        let strong = self.mode.strong();
+        let mut killed = false;
+        if let (Some((node, pair, _)), _) = self.walk(bucket, key, strong) {
+            if self.is_expired(node, pair) {
+                if let Some(l) = &self.life {
+                    l.clear(self.lifeslot(node, pair));
+                }
+                self.nodes
+                    .mem()
+                    .store_release(self.pair_kidx(node, pair), EMPTY);
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                self.hook.on_event(RaceEvent::AfterDelete { key, bucket });
+                killed = true;
+            }
+        }
+        if self.mode.locking() {
+            self.locks.unlock(bucket);
+        }
+        killed
+    }
+}
+
+impl ConcurrentMap for ChainingHt {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, None)
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        if self.life.is_none() {
+            return self.upsert(key, val, op);
+        }
+        self.upsert_with_ttl(key, val, op, Some(ttl_ticks))
+    }
+
     fn query(&self, key: u64) -> Option<u64> {
         let bucket = self.bucket_of(key);
         let (found, _) = self.walk(bucket, key, self.mode.strong());
-        found.map(|(_, _, v)| v)
+        found.and_then(|(node, pair, v)| self.hit_live(node, pair).then_some(v))
     }
 
     fn erase(&self, key: u64) -> bool {
@@ -275,12 +393,16 @@ impl ConcurrentMap for ChainingHt {
         let strong = self.mode.strong();
         let (found, _) = self.walk(bucket, key, strong);
         let hit = if let Some((node, pair, _)) = found {
+            let was_live = !self.is_expired(node, pair);
+            if let Some(l) = &self.life {
+                l.clear(self.lifeslot(node, pair));
+            }
             self.nodes
                 .mem()
                 .store_release(self.pair_kidx(node, pair), EMPTY);
             self.live.fetch_sub(1, Ordering::Relaxed);
             self.hook.on_event(RaceEvent::AfterDelete { key, bucket });
-            true
+            was_live
         } else {
             false
         };
@@ -327,6 +449,10 @@ impl ConcurrentMap for ChainingHt {
                     .map(|&(_, n, p)| (n, p))
                     .or_else(|| found[j].map(|(n, p, _)| (n, p)));
                 if let Some((node, pair)) = loc {
+                    if self.reclaim_if_expired(node, pair, v, None) {
+                        slots.set(i as usize, UpsertResult::Inserted);
+                        continue;
+                    }
                     // Present (at scan time or placed by this group):
                     // merge with a FRESH value read — earlier ops of this
                     // very group may have updated it since the walk.
@@ -350,6 +476,7 @@ impl ConcurrentMap for ChainingHt {
                     let kidx = self.pair_kidx(node, pair);
                     mem.store_relaxed(kidx + 1, v);
                     mem.store_release(kidx, k);
+                    self.stamp_fresh(node, pair, None);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     local.push((k, node, pair));
                     slots.set(i as usize, UpsertResult::Inserted);
@@ -362,6 +489,7 @@ impl ConcurrentMap for ChainingHt {
                     .on_event(RaceEvent::PrimaryFullMovingOn { key: k, bucket: b });
                 match self.prepend_node(b, k, v, strong) {
                     Some(node) => {
+                        self.stamp_fresh(node, 0, None);
                         for p in 1..NODE_PAIRS {
                             free.push((node, p as u16));
                         }
@@ -395,7 +523,12 @@ impl ConcurrentMap for ChainingHt {
             group_keys.extend(group.iter().map(|&i| keys_in[i as usize]));
             self.walk_group(b, &group_keys, strong, &mut found);
             for (j, &i) in group.iter().enumerate() {
-                slots.set(i as usize, found[j].map(|(_, _, v)| v));
+                slots.set(
+                    i as usize,
+                    found[j].and_then(|(node, pair, v)| {
+                        self.hit_live(node, pair).then_some(v)
+                    }),
+                );
             }
         });
         slots.finish("ChainingHT::query_bulk");
@@ -432,12 +565,16 @@ impl ConcurrentMap for ChainingHt {
                 done.push(k);
                 slots.set(i as usize, match found[j] {
                     Some((node, pair, _)) => {
+                        let was_live = !self.is_expired(node, pair);
+                        if let Some(l) = &self.life {
+                            l.clear(self.lifeslot(node, pair));
+                        }
                         self.nodes
                             .mem()
                             .store_release(self.pair_kidx(node, pair), EMPTY);
                         self.live.fetch_sub(1, Ordering::Relaxed);
                         self.hook.on_event(RaceEvent::AfterDelete { key: k, bucket: b });
-                        true
+                        was_live
                     }
                     None => false,
                 });
@@ -473,6 +610,7 @@ impl ConcurrentMap for ChainingHt {
         self.heads.bytes()
             + self.locks.bytes()
             + self.nodes.live() as usize * NODE_SLOTS * 8
+            + self.life.as_ref().map_or(0, |l| l.device_bytes())
     }
 
     fn name(&self) -> &'static str {
@@ -488,6 +626,9 @@ impl ConcurrentMap for ChainingHt {
         let (found, _) = self.walk(bucket, key, self.mode.strong());
         match found {
             Some((node, pair, _)) => {
+                if self.is_expired(node, pair) {
+                    return false;
+                }
                 self.nodes.mem().fetch_add(self.pair_kidx(node, pair) + 1, v);
                 true
             }
@@ -500,6 +641,9 @@ impl ConcurrentMap for ChainingHt {
         let (found, _) = self.walk(bucket, key, self.mode.strong());
         match found {
             Some((node, pair, _)) => {
+                if self.is_expired(node, pair) {
+                    return false;
+                }
                 self.nodes
                     .mem()
                     .fetch_add_f64(self.pair_kidx(node, pair) + 1, v);
@@ -513,7 +657,12 @@ impl ConcurrentMap for ChainingHt {
         let mem = self.nodes.mem();
         for b in 0..self.num_buckets {
             self.walk_chain_raw(b, &mut |kidx, k| {
-                if is_user_key(k) {
+                if is_user_key(k)
+                    && !self
+                        .life
+                        .as_ref()
+                        .is_some_and(|l| l.is_expired_at(self.lifeslot_of_kidx(kidx)))
+                {
                     f(k, mem.snapshot_raw(kidx + 1));
                 }
             });
@@ -539,7 +688,13 @@ impl ConcurrentMap for ChainingHt {
         let mem = self.nodes.mem();
         for b in range {
             self.walk_chain_raw(b, &mut |kidx, k| {
-                if is_user_key(k) {
+                // Expired corpses are never migrated (no resurrection).
+                if is_user_key(k)
+                    && !self
+                        .life
+                        .as_ref()
+                        .is_some_and(|l| l.is_expired_at(self.lifeslot_of_kidx(kidx)))
+                {
                     out.push((k, mem.snapshot_raw(kidx + 1)));
                 }
             });
@@ -558,11 +713,62 @@ impl ConcurrentMap for ChainingHt {
         let mem = self.nodes.mem();
         for b in 0..self.num_buckets {
             self.walk_chain_raw(b, &mut |kidx, k| {
-                if is_user_key(k) && keep(k) {
+                // Expired corpses are never migrated (no resurrection).
+                if is_user_key(k)
+                    && keep(k)
+                    && !self
+                        .life
+                        .as_ref()
+                        .is_some_and(|l| l.is_expired_at(self.lifeslot_of_kidx(kidx)))
+                {
                     out.push((k, mem.snapshot_raw(kidx + 1)));
                 }
             });
         }
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.life.is_some()
+    }
+
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let Some(l) = &self.life else { return 0 };
+        let nb = self.num_buckets;
+        let n = max_buckets.min(nb);
+        if n == 0 {
+            return 0;
+        }
+        let start = self.sweep_cursor.fetch_add(n, Ordering::Relaxed) % nb;
+        let mut victims: Vec<u64> = Vec::new();
+        for off in 0..n {
+            let b = (start + off) % nb;
+            self.walk_chain_raw(b, &mut |kidx, k| {
+                if is_user_key(k) && l.is_expired_at(self.lifeslot_of_kidx(kidx)) {
+                    victims.push(k);
+                }
+            });
+        }
+        let mut reclaimed = 0;
+        for k in victims {
+            if self.erase_expired(k) {
+                reclaimed += 1;
+            }
+        }
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.swept.load(Ordering::Relaxed)
+    }
+
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let l = self.life.as_ref()?;
+        let bucket = self.bucket_of(key);
+        let (found, _) = self.walk(bucket, key, self.mode.strong());
+        let (node, pair, _) = found?;
+        let ls = self.lifeslot(node, pair);
+        (!l.is_expired_at(ls)).then(|| l.freq_at(ls))
     }
 }
 
@@ -573,6 +779,14 @@ mod tests {
 
     fn table(slots: usize) -> ChainingHt {
         ChainingHt::new(TableConfig::new(slots).with_geometry(NODE_PAIRS, 4))
+    }
+
+    fn table_ttl(slots: usize, cfg: &crate::tables::LifecycleConfig) -> ChainingHt {
+        ChainingHt::new(
+            TableConfig::new(slots)
+                .with_geometry(NODE_PAIRS, 4)
+                .with_lifecycle(cfg.clone()),
+        )
     }
 
     #[test]
@@ -632,6 +846,66 @@ mod tests {
     #[test]
     fn bulk_concurrent_no_duplicates() {
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(table(8192)));
+    }
+
+    #[test]
+    fn ttl_semantics() {
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        check_ttl_semantics(&table_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn sweep_matches_expiry_oracle() {
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&table_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn bulk_ttl_parity() {
+        let cfg = crate::tables::LifecycleConfig::new(2);
+        check_bulk_ttl_parity(&table_ttl(2048, &cfg), &table_ttl(2048, &cfg), &cfg, 0x56);
+    }
+
+    #[test]
+    fn expired_pairs_recycle_without_new_nodes() {
+        // Mortal keys in deep chains: once expired, upserts of NEW keys
+        // cannot reuse those pairs (different key, chain walk finds no
+        // free slot) but a sweep turns corpses into EMPTY pairs that the
+        // next insert wave reuses without allocating nodes.
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        let t = table_ttl(64, &cfg);
+        let ks = keys(60, 0x57);
+        for &k in &ks {
+            assert_ne!(
+                t.upsert_ttl(k, 1, 2, &UpsertOp::InsertIfUnique),
+                UpsertResult::Full
+            );
+        }
+        let live_nodes = t.nodes.live();
+        cfg.clock.advance(2);
+        let mut reclaimed = 0;
+        for _ in 0..(2 * t.num_buckets()).div_ceil(8) {
+            reclaimed += t.sweep_expired(8);
+        }
+        assert_eq!(reclaimed, ks.len(), "all mortals must be swept");
+        assert_eq!(t.nodes.live(), live_nodes, "sweep never unlinks nodes");
+        // Reinsert a fresh wave into the recycled pairs: no node growth.
+        let ks2 = keys(60, 0x58);
+        for &k in &ks2 {
+            assert_ne!(
+                t.upsert(k, 2, &UpsertOp::InsertIfUnique),
+                UpsertResult::Full
+            );
+        }
+        assert_eq!(t.nodes.live(), live_nodes, "swept pairs must be reused");
+    }
+
+    #[test]
+    fn lifecycle_off_is_free() {
+        let t = table(1024);
+        assert!(!t.supports_ttl());
+        assert_eq!(t.sweep_expired(64), 0);
+        assert_eq!(t.entry_frequency(42), None);
     }
 
     #[test]

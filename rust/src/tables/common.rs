@@ -348,11 +348,19 @@ impl Pairs {
 
     /// Iterate all live pairs (quiesced snapshot; used for BSP export).
     pub fn for_each_live(&self, mut f: impl FnMut(u64, u64)) {
+        self.for_each_live_indexed(|_, _, k, v| f(k, v));
+    }
+
+    /// [`Pairs::for_each_live`] with the `(bucket, slot)` coordinates of
+    /// each pair, so lifecycle-aware callers can consult the entry's
+    /// expiry code (stored per flat slot `bucket * bucket_size + slot`)
+    /// and skip expired entries during migration/freeze collection.
+    pub fn for_each_live_indexed(&self, mut f: impl FnMut(usize, usize, u64, u64)) {
         for b in 0..self.num_buckets {
             for s in 0..self.bucket_size {
                 let k = self.mem.snapshot_raw(self.kidx(b, s));
                 if is_user_key(k) {
-                    f(k, self.mem.snapshot_raw(self.kidx(b, s) + 1));
+                    f(b, s, k, self.mem.snapshot_raw(self.kidx(b, s) + 1));
                 }
             }
         }

@@ -29,9 +29,10 @@
 //! ascending primary bucket so the most-frequently-hit bucket and lock
 //! lines are walked sequentially (cache-warm) instead of at random.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::common::{bucket_count_for, Pairs, KEY_EMPTY};
+use super::lifecycle::LifecycleSlots;
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 use crate::gpusim::mem::is_user_key;
 use crate::gpusim::race::RaceEvent;
@@ -57,18 +58,70 @@ pub struct CuckooHt {
     mode: ConcurrencyMode,
     hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
     live: AtomicU64,
+    /// TTL + frequency codes (standalone side array — cuckoo has no
+    /// metadata yard to colocate into). Codes travel with entries during
+    /// displacement via [`LifecycleSlots::move_code`].
+    life: Option<LifecycleSlots>,
+    sweep_cursor: AtomicUsize,
+    swept: AtomicU64,
 }
 
 impl CuckooHt {
     pub fn new(cfg: TableConfig) -> Self {
         let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        let life = cfg
+            .lifecycle
+            .clone()
+            .map(|lc| LifecycleSlots::standalone(lc, nb * cfg.bucket_size));
         Self {
             pairs: Pairs::new(nb, cfg.bucket_size, cfg.tile_size),
             locks: LockArray::new(nb),
             mode: cfg.mode,
             hook: cfg.hook,
             live: AtomicU64::new(0),
+            life,
+            sweep_cursor: AtomicUsize::new(0),
+            swept: AtomicU64::new(0),
         }
+    }
+
+    #[inline(always)]
+    fn lifeslot(&self, b: usize, slot: usize) -> usize {
+        b * self.pairs.bucket_size + slot
+    }
+
+    #[inline]
+    fn is_expired(&self, b: usize, slot: usize) -> bool {
+        self.life
+            .as_ref()
+            .is_some_and(|l| l.is_expired_at(self.lifeslot(b, slot)))
+    }
+
+    /// Query-hit bookkeeping: bump frequency; `false` = expired (miss).
+    #[inline]
+    fn hit_live(&self, b: usize, slot: usize) -> bool {
+        match &self.life {
+            Some(l) => l.on_hit(self.lifeslot(b, slot)),
+            None => true,
+        }
+    }
+
+    #[inline]
+    fn stamp_fresh(&self, b: usize, slot: usize, ttl: Option<u64>) {
+        if let Some(l) = &self.life {
+            l.fresh(self.lifeslot(b, slot), ttl);
+        }
+    }
+
+    /// Reclaim an expired pair in place as a fresh insert of `val`.
+    #[inline]
+    fn reclaim_if_expired(&self, b: usize, slot: usize, val: u64, ttl: Option<u64>) -> bool {
+        if !self.is_expired(b, slot) {
+            return false;
+        }
+        self.pairs.value_store(b, slot, val);
+        self.stamp_fresh(b, slot, ttl);
+        true
     }
 
     #[inline(always)]
@@ -164,6 +217,13 @@ impl CuckooHt {
             if locking {
                 // Both buckets are exclusively ours: copy then clear.
                 self.pairs.set_pair_locked(m.dst_bucket, m.dst_slot, k, v);
+                if let Some(l) = &self.life {
+                    // TTL deadline + frequency travel with the entry.
+                    l.move_code(
+                        self.lifeslot(m.src_bucket, m.src_slot),
+                        self.lifeslot(m.dst_bucket, m.dst_slot),
+                    );
+                }
                 self.pairs
                     .mem()
                     .store_release(self.pairs.kidx(m.src_bucket, m.src_slot), KEY_EMPTY);
@@ -174,6 +234,12 @@ impl CuckooHt {
                     return false;
                 }
                 self.pairs.publish(m.dst_bucket, m.dst_slot, k, v);
+                if let Some(l) = &self.life {
+                    l.move_code(
+                        self.lifeslot(m.src_bucket, m.src_slot),
+                        self.lifeslot(m.dst_bucket, m.dst_slot),
+                    );
+                }
                 self.pairs
                     .mem()
                     .store_release(self.pairs.kidx(m.src_bucket, m.src_slot), KEY_EMPTY);
@@ -214,13 +280,22 @@ impl CuckooHt {
         key: u64,
         val: u64,
         op: &UpsertOp,
+        ttl: Option<u64>,
     ) -> Option<UpsertResult> {
         let strong = self.mode.strong();
         let locking = self.mode.locking();
         // Update path: key already present?
         for b in bs {
             if let Some((slot, old_v)) = self.pairs.scan_bucket(b, key, strong).found {
+                if self.reclaim_if_expired(b, slot, val, ttl) {
+                    return Some(UpsertResult::Inserted);
+                }
                 self.apply_existing(b, slot, old_v, val, op);
+                if ttl.is_some() {
+                    if let Some(l) = &self.life {
+                        l.refresh(self.lifeslot(b, slot), ttl);
+                    }
+                }
                 return Some(UpsertResult::Updated);
             }
         }
@@ -236,10 +311,12 @@ impl CuckooHt {
                 if locking {
                     // Exclusive ownership of all three buckets.
                     self.pairs.set_pair_locked(b, slot, key, val);
+                    self.stamp_fresh(b, slot, ttl);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     return Some(UpsertResult::Inserted);
                 } else if self.pairs.try_claim(b, slot, true) {
                     self.pairs.publish(b, slot, key, val);
+                    self.stamp_fresh(b, slot, ttl);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     return Some(UpsertResult::Inserted);
                 }
@@ -267,10 +344,9 @@ impl CuckooHt {
         // claim loop; partial chains still freed some space somewhere.
         true
     }
-}
 
-impl ConcurrentMap for CuckooHt {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    /// Scalar upsert attempt loop, shared by `upsert` / `upsert_ttl`.
+    fn upsert_with_ttl(&self, key: u64, val: u64, op: &UpsertOp, ttl: Option<u64>) -> UpsertResult {
         debug_assert!(crate::gpusim::mem::is_user_key(key));
         let bs = self.buckets_of(key);
         let locking = self.mode.locking();
@@ -279,7 +355,7 @@ impl ConcurrentMap for CuckooHt {
             if locking {
                 self.locks.lock_three(bs);
             }
-            let done = self.upsert_in_buckets(bs, key, val, op);
+            let done = self.upsert_in_buckets(bs, key, val, op, ttl);
             if locking {
                 self.locks.unlock_three(bs);
             }
@@ -295,6 +371,51 @@ impl ConcurrentMap for CuckooHt {
         UpsertResult::Full
     }
 
+    /// Tombstone a corpse iff it is still present AND still expired under
+    /// the triple lock (sweep-vs-writer race guard).
+    fn erase_expired(&self, key: u64) -> bool {
+        let bs = self.buckets_of(key);
+        let locking = self.mode.locking();
+        if locking {
+            self.locks.lock_three(bs);
+        }
+        let strong = self.mode.strong();
+        let mut killed = false;
+        for b in bs {
+            if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                if self.is_expired(b, slot) {
+                    if let Some(l) = &self.life {
+                        l.clear(self.lifeslot(b, slot));
+                    }
+                    self.pairs
+                        .mem()
+                        .store_release(self.pairs.kidx(b, slot), KEY_EMPTY);
+                    self.live.fetch_sub(1, Ordering::Relaxed);
+                    self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+                    killed = true;
+                }
+                break;
+            }
+        }
+        if locking {
+            self.locks.unlock_three(bs);
+        }
+        killed
+    }
+}
+
+impl ConcurrentMap for CuckooHt {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, None)
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        if self.life.is_none() {
+            return self.upsert(key, val, op);
+        }
+        self.upsert_with_ttl(key, val, op, Some(ttl_ticks))
+    }
+
     fn query(&self, key: u64) -> Option<u64> {
         let bs = self.buckets_of(key);
         let locking = self.mode.locking();
@@ -306,8 +427,8 @@ impl ConcurrentMap for CuckooHt {
         let strong = self.mode.strong();
         let mut out = None;
         for b in bs {
-            if let Some((_, v)) = self.pairs.scan_bucket(b, key, strong).found {
-                out = Some(v);
+            if let Some((slot, v)) = self.pairs.scan_bucket(b, key, strong).found {
+                out = self.hit_live(b, slot).then_some(v);
                 break;
             }
         }
@@ -327,13 +448,17 @@ impl ConcurrentMap for CuckooHt {
         let mut hit = false;
         for b in bs {
             if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                let was_live = !self.is_expired(b, slot);
+                if let Some(l) = &self.life {
+                    l.clear(self.lifeslot(b, slot));
+                }
                 // No probe-sequence invariant: reset straight to EMPTY.
                 self.pairs
                     .mem()
                     .store_release(self.pairs.kidx(b, slot), KEY_EMPTY);
                 self.live.fetch_sub(1, Ordering::Relaxed);
                 self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
-                hit = true;
+                hit = was_live;
                 break;
             }
         }
@@ -366,7 +491,7 @@ impl ConcurrentMap for CuckooHt {
                 debug_assert!(crate::gpusim::mem::is_user_key(k));
                 let mut res = UpsertResult::Full;
                 for _attempt in 0..MAX_ATTEMPTS {
-                    if let Some(r) = self.upsert_in_buckets(bs, k, v, op) {
+                    if let Some(r) = self.upsert_in_buckets(bs, k, v, op, None) {
                         res = r;
                         break;
                     }
@@ -410,8 +535,8 @@ impl ConcurrentMap for CuckooHt {
                 let k = keys_in[i as usize];
                 let mut v = None;
                 for b in bs {
-                    if let Some((_, val)) = self.pairs.scan_bucket(b, k, strong).found {
-                        v = Some(val);
+                    if let Some((slot, val)) = self.pairs.scan_bucket(b, k, strong).found {
+                        v = self.hit_live(b, slot).then_some(val);
                         break;
                     }
                 }
@@ -443,6 +568,10 @@ impl ConcurrentMap for CuckooHt {
                 let mut hit = false;
                 for b in bs {
                     if let Some((slot, _)) = self.pairs.scan_bucket(b, k, strong).found {
+                        let was_live = !self.is_expired(b, slot);
+                        if let Some(l) = &self.life {
+                            l.clear(self.lifeslot(b, slot));
+                        }
                         // No probe-sequence invariant: reset straight to
                         // EMPTY (same as the scalar path).
                         self.pairs
@@ -450,7 +579,7 @@ impl ConcurrentMap for CuckooHt {
                             .store_release(self.pairs.kidx(b, slot), KEY_EMPTY);
                         self.live.fetch_sub(1, Ordering::Relaxed);
                         self.hook.on_event(RaceEvent::AfterDelete { key: k, bucket: b });
-                        hit = true;
+                        hit = was_live;
                         break;
                     }
                 }
@@ -480,7 +609,9 @@ impl ConcurrentMap for CuckooHt {
     }
 
     fn device_bytes(&self) -> usize {
-        self.pairs.device_bytes() + self.locks.bytes()
+        self.pairs.device_bytes()
+            + self.locks.bytes()
+            + self.life.as_ref().map_or(0, |l| l.device_bytes())
     }
 
     fn name(&self) -> &'static str {
@@ -496,11 +627,79 @@ impl ConcurrentMap for CuckooHt {
     }
 
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
-        self.pairs.for_each_live(|k, v| f(k, v));
+        match &self.life {
+            Some(l) => {
+                let bsz = self.pairs.bucket_size;
+                self.pairs.for_each_live_indexed(|b, s, k, v| {
+                    if !l.is_expired_at(b * bsz + s) {
+                        f(k, v);
+                    }
+                });
+            }
+            None => self.pairs.for_each_live(|k, v| f(k, v)),
+        }
     }
 
     fn count_copies(&self, key: u64) -> usize {
         self.pairs.count_copies(key)
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.life.is_some()
+    }
+
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let Some(l) = &self.life else { return 0 };
+        let nb = self.pairs.num_buckets;
+        let n = max_buckets.min(nb);
+        if n == 0 {
+            return 0;
+        }
+        let start = self.sweep_cursor.fetch_add(n, Ordering::Relaxed) % nb;
+        let mut victims: Vec<u64> = Vec::new();
+        for off in 0..n {
+            let b = (start + off) % nb;
+            for s in 0..self.pairs.bucket_size {
+                let k = self.pairs.key_at(b, s, false);
+                if is_user_key(k) && l.is_expired_at(self.lifeslot(b, s)) {
+                    victims.push(k);
+                }
+            }
+        }
+        let mut reclaimed = 0;
+        for k in victims {
+            if self.erase_expired(k) {
+                reclaimed += 1;
+            }
+        }
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.swept.load(Ordering::Relaxed)
+    }
+
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let l = self.life.as_ref()?;
+        let bs = self.buckets_of(key);
+        let locking = self.mode.locking();
+        if locking {
+            self.locks.lock_three(bs);
+        }
+        let strong = self.mode.strong();
+        let mut out = None;
+        for b in bs {
+            if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                let ls = self.lifeslot(b, slot);
+                out = (!l.is_expired_at(ls)).then(|| l.freq_at(ls));
+                break;
+            }
+        }
+        if locking {
+            self.locks.unlock_three(bs);
+        }
+        out
     }
 }
 
@@ -511,6 +710,14 @@ mod tests {
 
     fn table(slots: usize) -> CuckooHt {
         CuckooHt::new(TableConfig::new(slots).with_geometry(8, 4))
+    }
+
+    fn table_ttl(slots: usize, cfg: &crate::tables::LifecycleConfig) -> CuckooHt {
+        CuckooHt::new(
+            TableConfig::new(slots)
+                .with_geometry(8, 4)
+                .with_lifecycle(cfg.clone()),
+        )
     }
 
     #[test]
@@ -671,6 +878,62 @@ mod tests {
     #[test]
     fn bulk_concurrent_no_duplicates() {
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(table(8192)));
+    }
+
+    #[test]
+    fn ttl_semantics() {
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        check_ttl_semantics(&table_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn sweep_matches_expiry_oracle() {
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&table_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn bulk_ttl_parity() {
+        let cfg = crate::tables::LifecycleConfig::new(2);
+        check_bulk_ttl_parity(&table_ttl(2048, &cfg), &table_ttl(2048, &cfg), &cfg, 0x46);
+    }
+
+    #[test]
+    fn displacement_preserves_ttl_and_frequency() {
+        // Displace hard at high load; survivors must keep their lifecycle
+        // codes (move_code travels with the entry).
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        let t = table_ttl(1024, &cfg);
+        let ks = keys((1024.0 * 0.85) as usize, 0x47);
+        let mut ins = vec![];
+        for &k in &ks {
+            if t.upsert_ttl(k, k ^ 3, 4 * 4, &UpsertOp::InsertIfUnique) == UpsertResult::Inserted {
+                ins.push(k);
+            }
+        }
+        assert!(ins.len() as f64 > ks.len() as f64 * 0.95);
+        // Two queries per key: frequency should read 2 afterwards even
+        // for keys that were displaced between the queries' insertions.
+        for &k in &ins {
+            assert_eq!(t.query(k), Some(k ^ 3));
+            assert_eq!(t.query(k), Some(k ^ 3));
+        }
+        for &k in &ins {
+            assert_eq!(t.entry_frequency(k), Some(2), "frequency lost in move");
+        }
+        // And deadlines traveled too: everything expires on schedule.
+        cfg.clock.advance(4 * 4);
+        for &k in &ins {
+            assert_eq!(t.query(k), None, "deadline lost in move");
+        }
+    }
+
+    #[test]
+    fn lifecycle_off_is_free() {
+        let t = table(1024);
+        assert!(!t.supports_ttl());
+        assert_eq!(t.sweep_expired(64), 0);
+        assert_eq!(t.entry_frequency(42), None);
     }
 
     #[test]

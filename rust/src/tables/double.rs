@@ -22,9 +22,10 @@
 //! DoubleHT (Table 5.1: 80-probe negative queries; the (M) variant exits
 //! after ~19 tag blocks).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::common::{bucket_count_for, FreeSlots, Pairs};
+use super::lifecycle::LifecycleSlots;
 use super::meta::{MetaArray, MetaScan};
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 use crate::gpusim::race::RaceEvent;
@@ -42,6 +43,15 @@ pub struct DoubleHt {
     /// Linear-probing mode (stride 1) — the classic design-space baseline
     /// the paper lists in §2.2; suffers clustering at high load factors.
     linear: bool,
+    /// TTL + frequency codes, one per slot (flat `bucket * bucket_size +
+    /// slot`). Colocated in the padded MetaArray bucket region for the
+    /// (M) variant (tag probe already pays for the line), standalone for
+    /// the plain variant.
+    life: Option<LifecycleSlots>,
+    /// Round-robin bucket cursor for the bounded background sweep.
+    sweep_cursor: AtomicUsize,
+    /// Entries reclaimed by `sweep_expired` (metrics).
+    swept: AtomicU64,
 }
 
 impl DoubleHt {
@@ -54,7 +64,20 @@ impl DoubleHt {
     pub fn with_strategy(cfg: TableConfig, with_meta: bool, linear: bool) -> Self {
         let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
         let pairs = Pairs::new(nb, cfg.bucket_size, cfg.tile_size);
-        let meta = with_meta.then(|| MetaArray::new(nb, cfg.bucket_size));
+        let meta = with_meta.then(|| {
+            if cfg.lifecycle.is_some() {
+                MetaArray::with_lifecycle_region(nb, cfg.bucket_size)
+            } else {
+                MetaArray::new(nb, cfg.bucket_size)
+            }
+        });
+        let life = cfg.lifecycle.clone().map(|lc| {
+            if with_meta {
+                LifecycleSlots::colocated(lc, nb * cfg.bucket_size)
+            } else {
+                LifecycleSlots::standalone(lc, nb * cfg.bucket_size)
+            }
+        });
         Self {
             pairs,
             meta,
@@ -64,7 +87,74 @@ impl DoubleHt {
             hook: cfg.hook,
             live: AtomicU64::new(0),
             linear,
+            life,
+            sweep_cursor: AtomicUsize::new(0),
+            swept: AtomicU64::new(0),
         }
+    }
+
+    #[inline(always)]
+    fn lifeslot(&self, b: usize, slot: usize) -> usize {
+        b * self.pairs.bucket_size + slot
+    }
+
+    /// Expire-on-read check for a located pair. Colocated codes ride the
+    /// meta bucket region's line set (deduped against the tag probe that
+    /// found the pair); the standalone array touches its own line.
+    #[inline]
+    fn is_expired(&self, b: usize, slot: usize) -> bool {
+        match &self.life {
+            Some(l) => {
+                if let Some(meta) = &self.meta {
+                    meta.touch_lifecycle(b, slot);
+                }
+                l.is_expired_at(self.lifeslot(b, slot))
+            }
+            None => false,
+        }
+    }
+
+    /// Query-hit bookkeeping: bump the frequency counter in place.
+    /// `false` = the entry is expired and the caller reports a miss.
+    #[inline]
+    fn hit_live(&self, b: usize, slot: usize) -> bool {
+        match &self.life {
+            Some(l) => {
+                if let Some(meta) = &self.meta {
+                    meta.touch_lifecycle(b, slot);
+                }
+                l.on_hit(self.lifeslot(b, slot))
+            }
+            None => true,
+        }
+    }
+
+    /// Stamp a just-published slot's lifecycle code (frequency 0, the
+    /// requested TTL). Runs after `publish`: a lock-free reader racing
+    /// the stamp may transiently judge the new entry by the slot's stale
+    /// code — benign, concurrent insert/query has no ordering guarantee.
+    #[inline]
+    fn stamp_fresh(&self, b: usize, slot: usize, ttl: Option<u64>) {
+        if let Some(l) = &self.life {
+            if let Some(meta) = &self.meta {
+                meta.touch_lifecycle(b, slot);
+            }
+            l.fresh(self.lifeslot(b, slot), ttl);
+        }
+    }
+
+    /// If the located pair is expired, reclaim it in place as a fresh
+    /// insert of `val` (value overwritten, frequency reset, new TTL).
+    /// The single-copy invariant holds because the probe walk always
+    /// finds the existing copy before any free slot is claimed.
+    #[inline]
+    fn reclaim_if_expired(&self, b: usize, slot: usize, val: u64, ttl: Option<u64>) -> bool {
+        if !self.is_expired(b, slot) {
+            return false;
+        }
+        self.pairs.value_store(b, slot, val);
+        self.stamp_fresh(b, slot, ttl);
+        true
     }
 
     #[inline(always)]
@@ -95,22 +185,23 @@ impl DoubleHt {
         }
     }
 
-    /// Claim any reusable slot in bucket `b` and publish `key → val`.
-    /// Retries while other keys race for the same slots.
-    fn claim_in_bucket(&self, b: usize, key: u64, val: u64, tag: u16) -> bool {
+    /// Claim any reusable slot in bucket `b` and publish `key → val`,
+    /// returning the claimed slot. Retries while other keys race for the
+    /// same slots.
+    fn claim_in_bucket(&self, b: usize, key: u64, val: u64, tag: u16) -> Option<usize> {
         let strong = self.mode.strong();
         loop {
             let (slot, via_meta) = if let Some(meta) = &self.meta {
                 let ms = meta.scan(b, tag, strong);
                 match ms.reusable() {
                     Some(s) => (s, true),
-                    None => return false,
+                    None => return None,
                 }
             } else {
                 let r = self.pairs.scan_bucket(b, key, strong);
                 match r.reusable() {
                     Some(s) => (s, false),
-                    None => return false,
+                    None => return None,
                 }
             };
             self.hook
@@ -122,11 +213,11 @@ impl DoubleHt {
                     let ok = self.pairs.try_claim(b, slot, true);
                     debug_assert!(ok, "tag claimed but pair slot busy");
                     self.pairs.publish(b, slot, key, val);
-                    return true;
+                    return Some(slot);
                 }
             } else if self.pairs.try_claim(b, slot, true) {
                 self.pairs.publish(b, slot, key, val);
-                return true;
+                return Some(slot);
             }
             // Lost the race for this slot — rescan the bucket.
         }
@@ -176,64 +267,104 @@ impl DoubleHt {
 
     /// Scalar upsert body. The caller holds the key's primary-bucket lock
     /// (in locking modes) — shared by the scalar API and as the bulk
-    /// path's correctness fallback.
-    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    /// path's correctness fallback. `ttl = Some(ticks)` is the
+    /// `upsert_ttl` path: inserts stamp the deadline, updates refresh it
+    /// (frequency preserved). `ttl = None` is the plain path: inserts
+    /// are immortal, updates leave the existing lifecycle untouched.
+    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp, ttl: Option<u64>) -> UpsertResult {
         let strong = self.mode.strong();
         match self.find(key, strong) {
             Ok((b, slot, old_v)) => {
+                if self.reclaim_if_expired(b, slot, val, ttl) {
+                    return UpsertResult::Inserted;
+                }
                 self.apply_existing(b, slot, old_v, val, op);
+                if ttl.is_some() {
+                    if let Some(l) = &self.life {
+                        l.refresh(self.lifeslot(b, slot), ttl);
+                    }
+                }
                 UpsertResult::Updated
             }
             Err(target) => {
                 // Claim in the earliest bucket with space; if the claim
                 // races away, fall forward along the sequence.
                 let tag = self.meta.as_ref().map(|_| tag16(key)).unwrap_or(0);
-                let mut done = false;
+                let mut done = None;
                 if let Some(tb) = target {
-                    if self.claim_in_bucket(tb, key, val, tag) {
-                        done = true;
+                    if let Some(slot) = self.claim_in_bucket(tb, key, val, tag) {
+                        done = Some((tb, slot));
                     }
                 }
-                if !done {
+                if done.is_none() {
                     for b in self.bucket_seq(key) {
                         if Some(b) == target {
                             continue;
                         }
-                        if self.claim_in_bucket(b, key, val, tag) {
-                            done = true;
+                        if let Some(slot) = self.claim_in_bucket(b, key, val, tag) {
+                            done = Some((b, slot));
                             break;
                         }
                     }
                 }
-                if done {
-                    self.live.fetch_add(1, Ordering::Relaxed);
-                    UpsertResult::Inserted
-                } else {
-                    UpsertResult::Full
+                match done {
+                    Some((b, slot)) => {
+                        self.stamp_fresh(b, slot, ttl);
+                        self.live.fetch_add(1, Ordering::Relaxed);
+                        UpsertResult::Inserted
+                    }
+                    None => UpsertResult::Full,
                 }
             }
         }
     }
 
-    /// Scalar erase body; caller holds the primary-bucket lock.
+    /// Scalar erase body; caller holds the primary-bucket lock. An
+    /// expired entry is physically reclaimed but reported absent.
     fn erase_under_lock(&self, key: u64) -> bool {
         match self.find(key, self.mode.strong()) {
             Ok((b, slot, _)) => {
+                let was_live = !self.is_expired(b, slot);
                 self.kill_at(b, slot, key);
-                true
+                was_live
             }
             Err(_) => false,
         }
     }
 
-    /// Tombstone a located pair (+ its tag) and account the deletion.
+    /// Tombstone a located pair (+ its tag + lifecycle code) and account
+    /// the deletion.
     fn kill_at(&self, b: usize, slot: usize, key: u64) {
         self.pairs.kill(b, slot);
         if let Some(meta) = &self.meta {
             meta.kill(b, slot);
         }
+        if let Some(l) = &self.life {
+            l.clear(self.lifeslot(b, slot));
+        }
         self.live.fetch_sub(1, Ordering::Relaxed);
         self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+    }
+
+    /// The sweep's guarded reclaim: kill `key` only if it is (still)
+    /// expired, under the primary-bucket lock so it cannot race an
+    /// upsert that just reclaimed or refreshed the entry.
+    fn erase_expired(&self, key: u64) -> bool {
+        let primary = self.primary_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(primary);
+        }
+        let hit = match self.find(key, self.mode.strong()) {
+            Ok((b, slot, _)) if self.is_expired(b, slot) => {
+                self.kill_at(b, slot, key);
+                true
+            }
+            _ => false,
+        };
+        if self.mode.locking() {
+            self.locks.unlock(primary);
+        }
+        hit
     }
 
     /// Claim + publish from a group's shared free-slot list (shared
@@ -302,7 +433,7 @@ impl DoubleHt {
             if fallback_keys.contains(&k) {
                 // An earlier fallback put it somewhere the shared scan
                 // cannot see — stay on the scalar path for this key.
-                out.set(i as usize, self.upsert_under_lock(k, v, op));
+                out.set(i as usize, self.upsert_under_lock(k, v, op, None));
                 continue;
             }
             let hit = if self.meta.is_some() {
@@ -311,6 +442,13 @@ impl DoubleHt {
                 found[j]
             };
             if let Some((slot, _)) = hit {
+                if self.reclaim_if_expired(b, slot, v, None) {
+                    // Reclaimed a corpse in place: logically an insert,
+                    // and the slot is live for later ops of this group.
+                    local.push((k, slot));
+                    out.set(i as usize, UpsertResult::Inserted);
+                    continue;
+                }
                 // Re-read the value: the shared scan's snapshot may
                 // predate earlier merges by this very group.
                 let (_, old) = self.pairs.pair_at(b, slot, strong);
@@ -324,6 +462,7 @@ impl DoubleHt {
             // the primary is the first bucket).
             if had_empty {
                 if let Some(slot) = self.claim_from(b, &mut free, k, v) {
+                    self.stamp_fresh(b, slot, None);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     local.push((k, slot));
                     out.set(i as usize, UpsertResult::Inserted);
@@ -331,7 +470,7 @@ impl DoubleHt {
                 }
             }
             // Aged or contended primary: full scalar walk.
-            out.set(i as usize, self.upsert_under_lock(k, v, op));
+            out.set(i as usize, self.upsert_under_lock(k, v, op, None));
             fallback_keys.push(k);
         }
     }
@@ -344,7 +483,23 @@ impl ConcurrentMap for DoubleHt {
         if self.mode.locking() {
             self.locks.lock(primary);
         }
-        let res = self.upsert_under_lock(key, val, op);
+        let res = self.upsert_under_lock(key, val, op, None);
+        if self.mode.locking() {
+            self.locks.unlock(primary);
+        }
+        res
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        if self.life.is_none() {
+            return self.upsert(key, val, op);
+        }
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let primary = self.primary_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(primary);
+        }
+        let res = self.upsert_under_lock(key, val, op, Some(ttl_ticks));
         if self.mode.locking() {
             self.locks.unlock(primary);
         }
@@ -354,7 +509,7 @@ impl ConcurrentMap for DoubleHt {
     fn query(&self, key: u64) -> Option<u64> {
         let strong = self.mode.strong();
         match self.find(key, strong) {
-            Ok((_, _, v)) => Some(v),
+            Ok((b, slot, v)) => self.hit_live(b, slot).then_some(v),
             Err(_) => None,
         }
     }
@@ -389,7 +544,7 @@ impl ConcurrentMap for DoubleHt {
             if group.len() == 1 {
                 let (k, v) = pairs_in[group[0] as usize];
                 debug_assert!(crate::gpusim::mem::is_user_key(k));
-                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op));
+                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op, None));
             } else {
                 self.upsert_group(
                     b,
@@ -435,7 +590,8 @@ impl ConcurrentMap for DoubleHt {
                     slots.set(
                         i as usize,
                         match self.pairs.scan_slots(b, per_tag[j].match_slots(), k, strong) {
-                            Some((_, v)) => Some(v),
+                            // Expire-on-read, same as the scalar path.
+                            Some((slot, v)) => self.hit_live(b, slot).then_some(v),
                             // Scan-time EMPTY in the primary bucket ⇒ the
                             // key is at or before it ⇒ table-wide miss.
                             None if free.had_empty() => None,
@@ -452,7 +608,7 @@ impl ConcurrentMap for DoubleHt {
                     slots.set(
                         i as usize,
                         match found[j] {
-                            Some((_, v)) => Some(v),
+                            Some((slot, v)) => self.hit_live(b, slot).then_some(v),
                             None if free.had_empty() => None,
                             None => self.query(keys_in[i as usize]),
                         },
@@ -514,8 +670,11 @@ impl ConcurrentMap for DoubleHt {
                         i as usize,
                         match hit {
                             Some((slot, _)) => {
+                                // Expired entries reclaim but report
+                                // absent, same as the scalar path.
+                                let was_live = !self.is_expired(b, slot);
                                 self.kill_at(b, slot, k);
-                                true
+                                was_live
                             }
                             None if meta_free.had_empty() => false,
                             None => self.erase_under_lock(k),
@@ -549,6 +708,7 @@ impl ConcurrentMap for DoubleHt {
     fn device_bytes(&self) -> usize {
         self.pairs.device_bytes()
             + self.meta.as_ref().map_or(0, |m| m.device_bytes())
+            + self.life.as_ref().map_or(0, |l| l.device_bytes())
             + self.locks.bytes()
     }
 
@@ -566,30 +726,87 @@ impl ConcurrentMap for DoubleHt {
 
     fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
         match self.find(key, self.mode.strong()) {
-            Ok((b, slot, _)) => {
+            Ok((b, slot, _)) if !self.is_expired(b, slot) => {
                 self.pairs.value_fetch_add(b, slot, v);
                 true
             }
-            Err(_) => false,
+            _ => false,
         }
     }
 
     fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
         match self.find(key, self.mode.strong()) {
-            Ok((b, slot, _)) => {
+            Ok((b, slot, _)) if !self.is_expired(b, slot) => {
                 self.pairs.value_fetch_add_f64(b, slot, v);
                 true
             }
-            Err(_) => false,
+            _ => false,
         }
     }
 
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
-        self.pairs.for_each_live(|k, v| f(k, v));
+        // Expired entries are skipped: a migration or freeze collecting
+        // through here must not resurrect corpses.
+        match &self.life {
+            Some(l) => self.pairs.for_each_live_indexed(|b, s, k, v| {
+                if !l.is_expired_at(b * self.pairs.bucket_size + s) {
+                    f(k, v)
+                }
+            }),
+            None => self.pairs.for_each_live(|k, v| f(k, v)),
+        }
     }
 
     fn count_copies(&self, key: u64) -> usize {
         self.pairs.count_copies(key)
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.life.is_some()
+    }
+
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let Some(life) = &self.life else { return 0 };
+        if max_buckets == 0 {
+            return 0;
+        }
+        let nb = self.pairs.num_buckets;
+        let start = self.sweep_cursor.fetch_add(max_buckets, Ordering::Relaxed) % nb;
+        // Lock-free collection pass first, guarded kills second: the
+        // per-key re-check under the primary lock makes a racing
+        // refresh/reclaim win over the sweep.
+        let mut victims: Vec<u64> = Vec::new();
+        for i in 0..max_buckets.min(nb) {
+            let b = (start + i) % nb;
+            for s in 0..self.pairs.bucket_size {
+                let k = self.pairs.key_at(b, s, false);
+                if crate::gpusim::mem::is_user_key(k) && life.is_expired_at(self.lifeslot(b, s)) {
+                    victims.push(k);
+                }
+            }
+        }
+        let mut reclaimed = 0;
+        for k in victims {
+            if self.erase_expired(k) {
+                reclaimed += 1;
+            }
+        }
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.swept.load(Ordering::Relaxed)
+    }
+
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let life = self.life.as_ref()?;
+        match self.find(key, self.mode.strong()) {
+            Ok((b, slot, _)) if !self.is_expired(b, slot) => {
+                Some(life.freq_at(self.lifeslot(b, slot)))
+            }
+            _ => None,
+        }
     }
 }
 
@@ -724,5 +941,65 @@ mod tests {
     fn bulk_concurrent_no_duplicates() {
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
+    }
+
+    use crate::tables::lifecycle::LifecycleConfig;
+
+    fn plain_ttl(slots: usize, cfg: &LifecycleConfig) -> DoubleHt {
+        DoubleHt::new(TableConfig::new(slots).with_lifecycle(cfg.clone()), false)
+    }
+
+    fn meta_ttl(slots: usize, cfg: &LifecycleConfig) -> DoubleHt {
+        DoubleHt::new(
+            TableConfig::new(slots)
+                .with_geometry(32, 4)
+                .with_lifecycle(cfg.clone()),
+            true,
+        )
+    }
+
+    #[test]
+    fn ttl_semantics_plain_and_meta() {
+        let cfg = LifecycleConfig::new(4);
+        check_ttl_semantics(&plain_ttl(1024, &cfg), &cfg);
+        let cfg = LifecycleConfig::new(4);
+        check_ttl_semantics(&meta_ttl(1024, &cfg), &cfg);
+    }
+
+    #[test]
+    fn sweep_matches_expiry_oracle() {
+        let cfg = LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&plain_ttl(1024, &cfg), &cfg);
+        let cfg = LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&meta_ttl(1024, &cfg), &cfg);
+    }
+
+    #[test]
+    fn bulk_ttl_parity_both_variants() {
+        let cfg = LifecycleConfig::new(1);
+        check_bulk_ttl_parity(&plain_ttl(2048, &cfg), &plain_ttl(2048, &cfg), &cfg, 0xD6);
+        let cfg = LifecycleConfig::new(1);
+        check_bulk_ttl_parity(&meta_ttl(2048, &cfg), &meta_ttl(2048, &cfg), &cfg, 0xD7);
+    }
+
+    #[test]
+    fn meta_frequency_bumps_add_zero_probe_lines() {
+        // Acceptance criterion: the (M) variant's colocated codes ride
+        // the padded tag-region line, so the lifecycle twin's query hot
+        // path touches exactly the plain twin's line set.
+        let cfg = LifecycleConfig::new(1);
+        check_query_line_parity(&meta(4096), &meta_ttl(4096, &cfg), &cfg, 0xD8);
+    }
+
+    #[test]
+    fn lifecycle_off_is_free() {
+        // No LifecycleConfig ⇒ no lifecycle array, no TTL support, no
+        // device-byte overhead.
+        let t = plain(1024);
+        assert!(!t.supports_ttl());
+        assert_eq!(t.sweep_expired(64), 0);
+        let t2 = plain_ttl(1024, &LifecycleConfig::new(1));
+        assert!(t2.supports_ttl());
+        assert!(t2.device_bytes() > t.device_bytes());
     }
 }

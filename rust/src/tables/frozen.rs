@@ -38,6 +38,27 @@
 //! same seed-then-erase discipline shard migration uses) under a
 //! striped promotion lock, with an epoch bump so no retrying reader can
 //! miss a key that moved tiers mid-lookup.
+//!
+//! ## Entry lifecycle across the tiers
+//!
+//! The frozen snapshot carries no lifecycle metadata — **a freeze drops
+//! TTL and frequency state**. Concretely:
+//!
+//! * [`TieredMap::request_freeze`] collects live entries only (the
+//!   designs' `for_each_entry` skips expired corpses), so an expired
+//!   key is never resurrected into a snapshot; its corpse stays in the
+//!   mutable tier until a sweep reclaims it.
+//! * A live mortal that freezes becomes immortal until a later
+//!   `upsert_ttl` promotes and re-arms it (the same documented TTL drop
+//!   growth migration has).
+//! * "Expiring" a frozen entry IS the fingerprint tombstone: TTL'd
+//!   writes and erases of frozen keys land on the promotion/kill path,
+//!   which CASes the entry's fingerprint byte to `FP_TOMB` — the frozen
+//!   tier's only mutation.
+//! * [`ConcurrentMap::sweep_expired`] targets the mutable tier alone
+//!   (the frozen tier cannot hold corpses), and `entry_frequency`
+//!   reports a frozen-live key as `Some(0)`: resident but unheated —
+//!   no counter is maintained for it.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
@@ -534,22 +555,30 @@ impl TieredMap {
 
     /// Promote the frozen entry at `bin` by seeding `merge(old)` into the
     /// mutable tier, then killing the fingerprint. Caller identified
-    /// `key` as frozen-live; this re-checks under the stripe lock.
-    /// Returns `None` when the key is no longer frozen-live (a racing
-    /// promoter/eraser won — the caller retries against the mutable
-    /// tier), `Some(result)` otherwise.
+    /// `key` as frozen-live; this re-checks under the stripe lock. When
+    /// `ttl` is given the seed is a TTL upsert — the promoted entry is
+    /// born mortal with a fresh deadline (frozen entries themselves
+    /// carry no lifecycle state to preserve). Returns `None` when the
+    /// key is no longer frozen-live (a racing promoter/eraser won — the
+    /// caller retries against the mutable tier), `Some(result)`
+    /// otherwise.
     fn promote(
         &self,
         frozen: &FrozenTable,
         key: u64,
         bin: usize,
+        ttl: Option<u64>,
         merge: impl FnOnce(u64) -> u64,
     ) -> Option<UpsertResult> {
         let stripe = bin % PROMO_STRIPES;
         self.promo_locks.lock(stripe);
         let r = match frozen.lookup(key) {
             Some((bin2, old)) => {
-                match self.mutable.upsert(key, merge(old), &UpsertOp::Overwrite) {
+                let seeded_r = match ttl {
+                    Some(q) => self.mutable.upsert_ttl(key, merge(old), q, &UpsertOp::Overwrite),
+                    None => self.mutable.upsert(key, merge(old), &UpsertOp::Overwrite),
+                };
+                match seeded_r {
                     // Mutable tier saturated: the write is rejected and
                     // the frozen entry stays live and readable.
                     UpsertResult::Full => Some(UpsertResult::Full),
@@ -566,10 +595,11 @@ impl TieredMap {
         self.promo_locks.unlock(stripe);
         r
     }
-}
 
-impl ConcurrentMap for TieredMap {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    /// The shared body of `upsert` / `upsert_ttl`: promote-then-mutable,
+    /// with the TTL (when given) stamped on whichever copy the write
+    /// produces — the promotion seed or the mutable-tier upsert.
+    fn upsert_with_ttl(&self, key: u64, val: u64, op: &UpsertOp, ttl: Option<u64>) -> UpsertResult {
         let frozen = self.frozen_snapshot();
         if let Some((bin, _)) = frozen.lookup(key) {
             let merged = |old: u64| match op {
@@ -577,13 +607,49 @@ impl ConcurrentMap for TieredMap {
                 UpsertOp::AddAssignF64 => (f64::from_bits(old) + f64::from_bits(val)).to_bits(),
                 other => other.merge(old, val).unwrap_or(val),
             };
-            if let Some(r) = self.promote(&frozen, key, bin, merged) {
+            if let Some(r) = self.promote(&frozen, key, bin, ttl, merged) {
                 return r;
             }
             // Raced a concurrent promoter/eraser: fall through — the key
             // is now the mutable tier's problem (or absent).
         }
-        self.mutable.upsert(key, val, op)
+        match ttl {
+            Some(q) => self.mutable.upsert_ttl(key, val, q, op),
+            None => self.mutable.upsert(key, val, op),
+        }
+    }
+}
+
+impl ConcurrentMap for TieredMap {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, None)
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, Some(ttl_ticks))
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.mutable.supports_ttl()
+    }
+
+    /// The frozen tier cannot hold corpses (freezes collect live entries
+    /// only), so the sweep targets the mutable tier alone.
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        self.mutable.sweep_expired(max_buckets)
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.mutable.swept_expired()
+    }
+
+    /// Frozen-live keys report `Some(0)`: resident, but the snapshot
+    /// maintains no counters (module docs) — promotion restarts heat.
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        if self.frozen_snapshot().lookup(key).is_some() {
+            return Some(0);
+        }
+        self.mutable.entry_frequency(key)
     }
 
     fn query(&self, key: u64) -> Option<u64> {
@@ -771,7 +837,7 @@ impl ConcurrentMap for TieredMap {
         }
         let frozen = self.frozen_snapshot();
         match frozen.lookup(key) {
-            Some((bin, _)) => match self.promote(&frozen, key, bin, |old| old.wrapping_add(v)) {
+            Some((bin, _)) => match self.promote(&frozen, key, bin, None, |old| old.wrapping_add(v)) {
                 Some(r) => !matches!(r, UpsertResult::Full),
                 // Raced a promoter: the key (if it survived) is mutable now.
                 None => self.mutable.fetch_add_in_place(key, v),
@@ -791,7 +857,7 @@ impl ConcurrentMap for TieredMap {
         match frozen.lookup(key) {
             Some((bin, _)) => {
                 let merge = |old: u64| (f64::from_bits(old) + v).to_bits();
-                match self.promote(&frozen, key, bin, merge) {
+                match self.promote(&frozen, key, bin, None, merge) {
                     Some(r) => !matches!(r, UpsertResult::Full),
                     None => self.mutable.fetch_add_f64_in_place(key, v),
                 }
@@ -1179,6 +1245,133 @@ mod tests {
         }
         for &k in ks.iter() {
             assert_eq!(tm.count_copies(k), 1, "tier move duplicated key {k}");
+        }
+    }
+
+    use crate::tables::lifecycle::LifecycleConfig;
+    use crate::tables::{build_table_with, TableConfig};
+
+    fn tiered_ttl(kind: TableKind, slots: usize, cfg: &LifecycleConfig) -> TieredMap {
+        TieredMap::new(build_table_with(
+            kind,
+            TableConfig::for_kind(kind, slots).with_lifecycle(cfg.clone()),
+        ))
+    }
+
+    #[test]
+    fn expiry_during_freeze_never_resurrects() {
+        // Mortals expire before the freeze: the snapshot must exclude
+        // them (no resurrection), their corpses stay in the mutable tier
+        // until swept, and live keys freeze intact.
+        let cfg = LifecycleConfig::new(1);
+        let tm = tiered_ttl(TableKind::P2Meta, 4096, &cfg);
+        let ks = distinct_keys(900, 0x5E);
+        let (mortal, immortal) = ks.split_at(300);
+        for &k in mortal {
+            tm.upsert_ttl(k, k ^ 1, 2, &UpsertOp::InsertIfUnique);
+        }
+        for &k in immortal {
+            tm.upsert(k, k ^ 2, &UpsertOp::InsertIfUnique);
+        }
+        cfg.clock.advance(3);
+        let frozen_n = tm.request_freeze();
+        assert_eq!(frozen_n, immortal.len(), "freeze absorbed corpses");
+        assert_eq!(tm.frozen_len(), immortal.len());
+        for &k in mortal {
+            assert_eq!(tm.query(k), None, "expired key visible post-freeze");
+            assert_eq!(
+                tm.frozen_snapshot().count_copies(k),
+                0,
+                "corpse resurrected into the snapshot"
+            );
+        }
+        // The corpses still occupy mutable-tier slots; the tiered sweep
+        // (mutable tier only) reclaims them all.
+        let reclaimed = tm.sweep_expired(2 * tm.num_buckets());
+        assert_eq!(reclaimed, mortal.len(), "sweep missed mutable-tier corpses");
+        assert_eq!(tm.swept_expired(), mortal.len() as u64);
+        assert_eq!(tm.mutable_tier().len(), 0);
+        for &k in mortal {
+            assert_eq!(tm.count_copies(k), 0, "corpse survived the sweep");
+        }
+        for &k in immortal {
+            assert_eq!(tm.query(k), Some(k ^ 2));
+            assert_eq!(tm.count_copies(k), 1);
+        }
+    }
+
+    #[test]
+    fn ttl_upsert_promotes_and_arms_the_mutable_copy() {
+        // Freezing drops TTL (module docs): a frozen key is immortal
+        // until a TTL'd write promotes it — then the promoted copy
+        // carries the fresh deadline and expires on schedule.
+        let cfg = LifecycleConfig::new(4);
+        let tm = tiered_ttl(TableKind::Double, 4096, &cfg);
+        assert!(tm.supports_ttl());
+        let ks = distinct_keys(400, 0x5F);
+        for &k in &ks {
+            tm.upsert_ttl(k, k ^ 3, 2 * cfg.quantum, &UpsertOp::InsertIfUnique);
+        }
+        tm.request_freeze();
+        cfg.clock.advance(32 * cfg.quantum);
+        assert_eq!(
+            tm.query(ks[0]),
+            Some(ks[0] ^ 3),
+            "frozen entries must be immortal"
+        );
+        assert_eq!(tm.entry_frequency(ks[0]), Some(0), "frozen-live heat is 0");
+        // AddAssign promotion with a TTL: merges the frozen value and
+        // arms the promoted copy.
+        assert_eq!(
+            tm.upsert_ttl(ks[0], 5, 2 * cfg.quantum, &UpsertOp::AddAssign),
+            UpsertResult::Updated
+        );
+        assert_eq!(tm.query(ks[0]), Some((ks[0] ^ 3).wrapping_add(5)));
+        assert_eq!(tm.count_copies(ks[0]), 1, "TTL promotion duplicated the key");
+        assert_eq!(tm.mutable_tier().len(), 1);
+        // Heat accrues on the mutable copy now.
+        assert!(tm.entry_frequency(ks[0]).unwrap() > 0, "post-promotion lookups must heat");
+        cfg.clock.advance(3 * cfg.quantum);
+        assert_eq!(tm.query(ks[0]), None, "promoted TTL not honored");
+        // The rest of the snapshot is untouched. `len` is physical, so
+        // the expired promoted copy counts until the sweep reclaims it.
+        assert_eq!(tm.query(ks[1]), Some(ks[1] ^ 3));
+        assert_eq!(tm.sweep_expired(2 * tm.num_buckets()), 1);
+        assert_eq!(tm.len(), ks.len() - 1);
+    }
+
+    #[test]
+    fn refreeze_excludes_entries_that_expired_since_the_last_freeze() {
+        // Freeze → promote some keys mortal → let them expire → refreeze:
+        // the new snapshot must drop the corpses AND the old snapshot's
+        // survivors must carry over.
+        let cfg = LifecycleConfig::new(1);
+        let tm = tiered_ttl(TableKind::Chaining, 4096, &cfg);
+        let ks = distinct_keys(600, 0x60);
+        for &k in &ks {
+            tm.upsert(k, 1, &UpsertOp::Overwrite);
+        }
+        tm.request_freeze();
+        for &k in &ks[..100] {
+            assert_eq!(
+                tm.upsert_ttl(k, 2, 2, &UpsertOp::Overwrite),
+                UpsertResult::Updated,
+                "promotion with TTL"
+            );
+        }
+        cfg.clock.advance(3); // the 100 promoted keys are corpses now
+        let refrozen = tm.request_freeze();
+        assert_eq!(refrozen, ks.len() - 100, "refreeze absorbed corpses");
+        for &k in &ks[..100] {
+            assert_eq!(tm.query(k), None);
+            assert_eq!(
+                tm.frozen_snapshot().count_copies(k),
+                0,
+                "corpse resurrected by the refreeze"
+            );
+        }
+        for &k in &ks[100..] {
+            assert_eq!(tm.query(k), Some(1));
         }
     }
 }

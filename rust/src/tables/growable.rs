@@ -56,6 +56,27 @@
 //! a shrink that would immediately need to re-grow is refused outright.
 //! Keep `shrink_below` under half the grow trigger and the two
 //! watermarks can never chase each other.
+//!
+//! ## Entry lifecycle across a migration
+//!
+//! When the wrapped design carries lifecycle metadata
+//! ([`TableConfig::with_lifecycle`]), growth interacts with expiry in
+//! three deliberate ways:
+//!
+//! * **Expired corpses never migrate.** The migration collectors
+//!   ([`ConcurrentMap::collect_primary_range`] and the designs' raw
+//!   walks) skip expired entries, so a dead key is never resurrected
+//!   into the successor; the foreground move path and the finalize step
+//!   physically purge any corpse they encounter so stragglers cannot
+//!   pin the old table non-empty.
+//! * **A moved entry re-enters the successor immortal** with a zeroed
+//!   frequency counter: the seed is a plain insert-if-unique, and the
+//!   packed lifecycle code does not travel with it. A live mortal that
+//!   migrates therefore stops expiring until its next `upsert_ttl`
+//!   re-arms it (TTL-preserving migration is an open ROADMAP item).
+//! * **`upsert_ttl` mid-migration lands in the successor** like every
+//!   other upsert — the refresh/reclaim semantics apply against the
+//!   successor copy after any old-table copy has been moved over.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
@@ -165,6 +186,11 @@ pub struct GrowableMap {
     shrink_aborted: AtomicU64,
     /// Pairs moved old→successor over this table's lifetime.
     migrated: AtomicU64,
+    /// Expiry reclaims performed by tables already retired by a phase
+    /// flip — their instance counters die with them, so the wrapper
+    /// banks the count at the flip ([`ConcurrentMap::swept_expired`]
+    /// stays monotone across growths).
+    swept_carry: AtomicU64,
 }
 
 impl GrowableMap {
@@ -181,6 +207,7 @@ impl GrowableMap {
             shrinks: AtomicU64::new(0),
             shrink_aborted: AtomicU64::new(0),
             migrated: AtomicU64::new(0),
+            swept_carry: AtomicU64::new(0),
         }
     }
 
@@ -385,18 +412,34 @@ impl GrowableMap {
                 return false;
             }
             m.old.erase(key);
+        } else {
+            // The query is expire-on-read: `None` may hide an expired
+            // corpse still occupying its old-table slot. Erase reclaims
+            // it physically (reporting false, as for any dead key), so
+            // the caller's successor write cannot leave a second
+            // physical copy behind — and the corpse never migrates.
+            m.old.erase(key);
         }
         true
     }
 
     /// Upsert during migration, under the key's old-bucket lock: move any
     /// old-table copy over, then apply the policy against the successor
-    /// exactly once.
-    fn upsert_migrating(m: &Migration, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    /// exactly once (with `ttl`'s stamp/refresh semantics when given).
+    fn upsert_migrating(
+        m: &Migration,
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+        ttl: Option<u64>,
+    ) -> UpsertResult {
         let ob = m.old.primary_bucket(key);
         m.locks.lock(ob);
         let r = if Self::move_old_copy(m, key) {
-            m.new.upsert(key, val, op)
+            match ttl {
+                Some(t) => m.new.upsert_ttl(key, val, t, op),
+                None => m.new.upsert(key, val, op),
+            }
         } else {
             // Seed blocked: report Full and let the caller pump/grow.
             UpsertResult::Full
@@ -470,9 +513,19 @@ impl GrowableMap {
         {
             return;
         }
+        // `len` is physical: expired corpses the collectors skipped (no
+        // resurrection) still occupy old-table slots and would pin the
+        // scan open forever. A full-ring sweep reclaims them before the
+        // emptiness check (2× num_buckets covers every design's sweep
+        // ring, including Iceberg's combined front+back ring).
+        if !m.old.is_empty() && m.old.supports_ttl() {
+            m.old.sweep_expired(2 * m.old.num_buckets());
+        }
         if m.old.is_empty() {
             let mut g = self.write_phase();
             if matches!(&*g, Phase::Migrating(cur) if Arc::ptr_eq(cur, m)) {
+                self.swept_carry
+                    .fetch_add(m.old.swept_expired(), Ordering::Relaxed);
                 *g = Phase::Normal(Arc::clone(&m.new));
             }
             return;
@@ -509,10 +562,17 @@ impl GrowableMap {
         m.done.store(0, Ordering::Release);
         m.cursor.store(0, Ordering::Release);
     }
-}
 
-impl ConcurrentMap for GrowableMap {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    /// The grow/pump retry loop shared by [`ConcurrentMap::upsert`] and
+    /// [`ConcurrentMap::upsert_ttl`] — identical phase handling, with
+    /// `ttl` threaded to the live table's TTL path when given.
+    fn upsert_with_ttl(
+        &self,
+        key: u64,
+        val: u64,
+        op: &UpsertOp,
+        ttl: Option<u64>,
+    ) -> UpsertResult {
         enum Next {
             Done(UpsertResult, bool),
             Grow(usize),
@@ -526,7 +586,10 @@ impl ConcurrentMap for GrowableMap {
                 let g = self.read_phase();
                 match &*g {
                     Phase::Normal(t) => {
-                        let r = t.upsert(key, val, op);
+                        let r = match ttl {
+                            Some(q) => t.upsert_ttl(key, val, q, op),
+                            None => t.upsert(key, val, op),
+                        };
                         if r == UpsertResult::Full {
                             Next::Grow(t.capacity())
                         } else {
@@ -534,7 +597,7 @@ impl ConcurrentMap for GrowableMap {
                         }
                     }
                     Phase::Migrating(m) => {
-                        let r = Self::upsert_migrating(m, key, val, op);
+                        let r = Self::upsert_migrating(m, key, val, op, ttl);
                         if r == UpsertResult::Full {
                             Next::Pump
                         } else {
@@ -581,6 +644,65 @@ impl ConcurrentMap for GrowableMap {
             }
         }
     }
+}
+
+impl ConcurrentMap for GrowableMap {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, None)
+    }
+
+    /// TTL upserts ride the same grow/pump loop: the stamp/refresh lands
+    /// on whichever table is live for writes (the successor during a
+    /// migration). No-op TTL (plain upsert) when the wrapped design was
+    /// built without lifecycle metadata — `supports_ttl` reports that.
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, Some(ttl_ticks))
+    }
+
+    fn supports_ttl(&self) -> bool {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.supports_ttl(),
+            Phase::Migrating(m) => m.new.supports_ttl(),
+        }
+    }
+
+    /// Sweeps BOTH tables during a migration (each gets the bucket
+    /// budget): corpses in the draining old table are exactly the
+    /// entries the collectors refuse to move, so sweeping there is what
+    /// lets the migration finish without the finalize-time purge.
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.sweep_expired(max_buckets),
+            Phase::Migrating(m) => {
+                m.old.sweep_expired(max_buckets) + m.new.sweep_expired(max_buckets)
+            }
+        }
+    }
+
+    fn swept_expired(&self) -> u64 {
+        let carry = self.swept_carry.load(Ordering::Relaxed);
+        let g = self.read_phase();
+        carry
+            + match &*g {
+                Phase::Normal(t) => t.swept_expired(),
+                Phase::Migrating(m) => m.old.swept_expired() + m.new.swept_expired(),
+            }
+    }
+
+    /// Old-then-new, like `query`: a key's lifecycle code lives wherever
+    /// its entry currently resides. Advisory (no lock) — a concurrent
+    /// move can slide the entry between the two probes.
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let g = self.read_phase();
+        match &*g {
+            Phase::Normal(t) => t.entry_frequency(key),
+            Phase::Migrating(m) => {
+                m.old.entry_frequency(key).or_else(|| m.new.entry_frequency(key))
+            }
+        }
+    }
 
     fn query(&self, key: u64) -> Option<u64> {
         let g = self.read_phase();
@@ -620,7 +742,7 @@ impl ConcurrentMap for GrowableMap {
                 Phase::Migrating(m) => {
                     out.reserve(pairs.len());
                     for &(k, v) in pairs {
-                        out.push(Self::upsert_migrating(m, k, v, op));
+                        out.push(Self::upsert_migrating(m, k, v, op, None));
                     }
                     Self::successor_needs_pumping(m, &self.policy)
                 }
@@ -1406,5 +1528,175 @@ mod tests {
         assert!(t.capacity() <= 512, "ceiling breached: {}", t.capacity());
         assert!(full > 0, "a capped table must eventually reject");
         assert!(t.grow_events() >= 1, "growth below the ceiling must run");
+    }
+
+    use crate::tables::lifecycle::LifecycleConfig;
+
+    fn growable_ttl(
+        kind: TableKind,
+        slots: usize,
+        batch: usize,
+        cfg: &LifecycleConfig,
+    ) -> GrowableMap {
+        GrowableMap::new(
+            kind,
+            TableConfig::for_kind(kind, slots).with_lifecycle(cfg.clone()),
+            GrowthPolicy {
+                migration_batch: batch,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn ttl_surface_forwards_through_the_wrapper() {
+        let cfg = LifecycleConfig::new(4);
+        let t = growable_ttl(TableKind::Double, 4096, 16, &cfg);
+        check_ttl_semantics(&t, &cfg);
+        assert_eq!(t.grow_events(), 0, "TTL churn below the trigger must not grow");
+        // Without lifecycle the wrapper reports no TTL support and
+        // upsert_ttl degrades to a plain upsert.
+        let plain = growable(TableKind::Double, 4096, 16);
+        assert!(!plain.supports_ttl());
+        let k = keys(1, 0x6B0)[0];
+        assert_eq!(
+            plain.upsert_ttl(k, 9, 2 * cfg.quantum, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        cfg.clock.advance(32 * cfg.quantum);
+        assert_eq!(plain.query(k), Some(9), "no-lifecycle entries are immortal");
+    }
+
+    #[test]
+    fn sweep_forwards_and_matches_the_oracle() {
+        let cfg = LifecycleConfig::new(1);
+        let t = growable_ttl(TableKind::P2Meta, 4096, 16, &cfg);
+        check_sweep_vs_oracle(&t, &cfg);
+    }
+
+    #[test]
+    fn expiry_churn_across_growth_never_resurrects() {
+        // Mortals expire BEFORE the growth starts: the migration must
+        // neither move the corpses into the successor (no resurrection)
+        // nor let them pin the old table non-empty (finalize purges).
+        for kind in [TableKind::Double, TableKind::Chaining, TableKind::IcebergMeta] {
+            let cfg = LifecycleConfig::new(1);
+            let t = growable_ttl(kind, 256, 4, &cfg);
+            let all = keys(t.capacity() * 5 / 2, 0x6B1 ^ kind as u64);
+            let (mortal, rest) = all.split_at(64);
+            let (immortal, wave) = rest.split_at(64);
+            for &k in mortal {
+                assert_eq!(
+                    t.upsert_ttl(k, k ^ 1, 2, &UpsertOp::InsertIfUnique),
+                    UpsertResult::Inserted,
+                    "{kind:?}"
+                );
+            }
+            for &k in immortal {
+                t.upsert(k, k ^ 2, &UpsertOp::InsertIfUnique);
+            }
+            cfg.clock.advance(3); // every mortal is now a corpse
+            for &k in wave {
+                assert_eq!(
+                    t.upsert(k, k ^ 3, &UpsertOp::InsertIfUnique),
+                    UpsertResult::Inserted,
+                    "{kind:?}: growable table rejected an insert"
+                );
+            }
+            quiesce(&t);
+            assert!(t.grow_events() >= 1, "{kind:?}: wave never forced a growth");
+            for &k in mortal {
+                assert_eq!(t.query(k), None, "{kind:?}: expired key resurrected");
+                assert_eq!(
+                    t.count_copies(k),
+                    0,
+                    "{kind:?}: corpse migrated or left behind"
+                );
+            }
+            assert!(
+                t.swept_expired() >= mortal.len() as u64,
+                "{kind:?}: sweep carry lost reclaims across the flip ({} < {})",
+                t.swept_expired(),
+                mortal.len()
+            );
+            for &k in immortal {
+                assert_eq!(t.query(k), Some(k ^ 2), "{kind:?}: immortal lost");
+                assert_eq!(t.count_copies(k), 1, "{kind:?}");
+            }
+            for &k in wave {
+                assert_eq!(t.query(k), Some(k ^ 3), "{kind:?}: wave key lost");
+                assert_eq!(t.count_copies(k), 1, "{kind:?}");
+            }
+            assert_eq!(t.len(), immortal.len() + wave.len(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn ttl_ops_mid_migration_land_in_the_successor() {
+        let cfg = LifecycleConfig::new(4);
+        let t = growable_ttl(TableKind::Double, 2048, 4, &cfg);
+        let ks = keys(1000, 0x6B2);
+        for &k in &ks[..997] {
+            t.upsert(k, k ^ 1, &UpsertOp::InsertIfUnique);
+        }
+        // One pre-made corpse: expired before the migration starts.
+        t.upsert_ttl(ks[997], 7, 2 * cfg.quantum, &UpsertOp::InsertIfUnique);
+        cfg.clock.advance(3 * cfg.quantum);
+        assert!(t.request_grow(), "manual grow must start");
+        t.drive_migration(8);
+        assert!(t.migration_in_progress());
+        // Refresh an existing immortal with a TTL: Updated, and the
+        // entry (now in the successor) expires on schedule.
+        assert_eq!(
+            t.upsert_ttl(ks[0], 11, 2 * cfg.quantum, &UpsertOp::Overwrite),
+            UpsertResult::Updated
+        );
+        assert_eq!(t.query(ks[0]), Some(11));
+        assert_eq!(t.count_copies(ks[0]), 1, "refresh left two copies");
+        // Fresh mortal insert mid-migration.
+        assert_eq!(
+            t.upsert_ttl(ks[998], 13, 2 * cfg.quantum, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        // Upsert over the pre-made corpse mid-migration: the move path
+        // purges the old-table corpse, so the reclaim is a single copy.
+        assert_eq!(
+            t.upsert_ttl(ks[997], 21, 2 * cfg.quantum, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted,
+            "corpse must reclaim as a fresh insert"
+        );
+        assert_eq!(t.query(ks[997]), Some(21));
+        assert_eq!(t.count_copies(ks[997]), 1, "corpse copy left in the old table");
+        quiesce(&t);
+        cfg.clock.advance(3 * cfg.quantum);
+        for &k in [ks[0], ks[997], ks[998]].iter() {
+            assert_eq!(t.query(k), None, "successor TTL not honored");
+        }
+        // The wrapper's sweep reaches the (now single) live table.
+        let reclaimed = t.sweep_expired(2 * t.num_buckets());
+        assert_eq!(reclaimed, 3, "sweep missed successor corpses");
+    }
+
+    #[test]
+    fn migration_drops_ttl_as_documented() {
+        // A live mortal that migrates re-enters the successor immortal
+        // (module docs; TTL-preserving migration is a ROADMAP item).
+        // This test pins the documented semantics.
+        let cfg = LifecycleConfig::new(4);
+        let t = growable_ttl(TableKind::P2, 1024, 16, &cfg);
+        let k = keys(1, 0x6B3)[0];
+        t.upsert_ttl(k, 5, 2 * cfg.quantum, &UpsertOp::InsertIfUnique);
+        assert!(t.request_grow());
+        quiesce(&t);
+        cfg.clock.advance(32 * cfg.quantum);
+        assert_eq!(
+            t.query(k),
+            Some(5),
+            "migrated entries are immortal until re-armed"
+        );
+        // Re-arming restores expiry.
+        t.upsert_ttl(k, 5, 2 * cfg.quantum, &UpsertOp::Overwrite);
+        cfg.clock.advance(3 * cfg.quantum);
+        assert_eq!(t.query(k), None);
     }
 }

@@ -17,9 +17,10 @@
 //! are always mutually exclusive (§4.1) while back-yard slot claims use
 //! CAS against inserts hashed from other front-yard buckets.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::common::{bucket_count_for, FreeSlots, Pairs};
+use super::lifecycle::LifecycleSlots;
 use super::meta::{MetaArray, MetaScan};
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 use crate::gpusim::race::RaceEvent;
@@ -40,6 +41,14 @@ pub struct IcebergHt {
     mode: ConcurrencyMode,
     hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
     live: AtomicU64,
+    /// TTL + frequency codes spanning BOTH yards: front slots first
+    /// (flat `fb * front.bucket_size + slot`), back slots after the
+    /// front region. Colocated in the two padded MetaArray regions for
+    /// the (M) variant, standalone for the plain variant.
+    life: Option<LifecycleSlots>,
+    /// Sweep cursor over the combined front+back bucket ring.
+    sweep_cursor: AtomicUsize,
+    swept: AtomicU64,
 }
 
 impl IcebergHt {
@@ -50,8 +59,29 @@ impl IcebergHt {
         let nb = bucket_count_for(back_slots.max(BACK_BUCKET), BACK_BUCKET);
         let front = Pairs::new(nf, cfg.bucket_size, cfg.tile_size);
         let back = Pairs::new(nb, BACK_BUCKET, cfg.tile_size.min(BACK_BUCKET));
-        let fmeta = with_meta.then(|| MetaArray::new(nf, cfg.bucket_size));
-        let bmeta = with_meta.then(|| MetaArray::new(nb, BACK_BUCKET));
+        let with_life = cfg.lifecycle.is_some();
+        let fmeta = with_meta.then(|| {
+            if with_life {
+                MetaArray::with_lifecycle_region(nf, cfg.bucket_size)
+            } else {
+                MetaArray::new(nf, cfg.bucket_size)
+            }
+        });
+        let bmeta = with_meta.then(|| {
+            if with_life {
+                MetaArray::with_lifecycle_region(nb, BACK_BUCKET)
+            } else {
+                MetaArray::new(nb, BACK_BUCKET)
+            }
+        });
+        let total_slots = nf * cfg.bucket_size + nb * BACK_BUCKET;
+        let life = cfg.lifecycle.clone().map(|lc| {
+            if with_meta {
+                LifecycleSlots::colocated(lc, total_slots)
+            } else {
+                LifecycleSlots::standalone(lc, total_slots)
+            }
+        });
         Self {
             front,
             back,
@@ -61,7 +91,80 @@ impl IcebergHt {
             mode: cfg.mode,
             hook: cfg.hook,
             live: AtomicU64::new(0),
+            life,
+            sweep_cursor: AtomicUsize::new(0),
+            swept: AtomicU64::new(0),
         }
+    }
+
+    /// Flat lifecycle index of a slot in either yard (front region
+    /// first, back region after it).
+    #[inline(always)]
+    fn lifeslot_in(&self, pairs: &Pairs, b: usize, slot: usize) -> usize {
+        let base = if std::ptr::eq(pairs, &self.front) {
+            0
+        } else {
+            self.front.num_buckets * self.front.bucket_size
+        };
+        base + b * pairs.bucket_size + slot
+    }
+
+    /// Expire-on-read check for a located pair in either yard.
+    #[inline]
+    fn is_expired_in(&self, pairs: &Pairs, b: usize, slot: usize) -> bool {
+        match &self.life {
+            Some(l) => {
+                if let Some(m) = self.meta_for(pairs) {
+                    m.touch_lifecycle(b, slot);
+                }
+                l.is_expired_at(self.lifeslot_in(pairs, b, slot))
+            }
+            None => false,
+        }
+    }
+
+    /// Query-hit bookkeeping: bump frequency; `false` = expired (miss).
+    #[inline]
+    fn hit_live_in(&self, pairs: &Pairs, b: usize, slot: usize) -> bool {
+        match &self.life {
+            Some(l) => {
+                if let Some(m) = self.meta_for(pairs) {
+                    m.touch_lifecycle(b, slot);
+                }
+                l.on_hit(self.lifeslot_in(pairs, b, slot))
+            }
+            None => true,
+        }
+    }
+
+    /// Stamp a just-published slot (benign post-publish race, as in
+    /// `DoubleHt::stamp_fresh`).
+    #[inline]
+    fn stamp_fresh_in(&self, pairs: &Pairs, b: usize, slot: usize, ttl: Option<u64>) {
+        if let Some(l) = &self.life {
+            if let Some(m) = self.meta_for(pairs) {
+                m.touch_lifecycle(b, slot);
+            }
+            l.fresh(self.lifeslot_in(pairs, b, slot), ttl);
+        }
+    }
+
+    /// Reclaim an expired pair in place as a fresh insert of `val`.
+    #[inline]
+    fn reclaim_if_expired_in(
+        &self,
+        pairs: &Pairs,
+        b: usize,
+        slot: usize,
+        val: u64,
+        ttl: Option<u64>,
+    ) -> bool {
+        if !self.is_expired_in(pairs, b, slot) {
+            return false;
+        }
+        pairs.value_store(b, slot, val);
+        self.stamp_fresh_in(pairs, b, slot, ttl);
+        true
     }
 
     #[inline(always)]
@@ -95,6 +198,8 @@ impl IcebergHt {
         }
     }
 
+    /// Claim + publish a free slot in a bucket of either yard; returns
+    /// the claimed slot so the caller can stamp lifecycle metadata.
     fn claim_in(
         &self,
         pairs: &Pairs,
@@ -103,18 +208,18 @@ impl IcebergHt {
         key: u64,
         val: u64,
         tag: u16,
-    ) -> bool {
+    ) -> Option<usize> {
         let strong = self.mode.strong();
         loop {
             let slot = if let Some(m) = meta {
                 match m.scan(b, tag, strong).reusable() {
                     Some(s) => s,
-                    None => return false,
+                    None => return None,
                 }
             } else {
                 match pairs.scan_bucket(b, key, strong).reusable() {
                     Some(s) => s,
-                    None => return false,
+                    None => return None,
                 }
             };
             self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
@@ -123,11 +228,11 @@ impl IcebergHt {
                     let ok = pairs.try_claim(b, slot, true);
                     debug_assert!(ok);
                     pairs.publish(b, slot, key, val);
-                    return true;
+                    return Some(slot);
                 }
             } else if pairs.try_claim(b, slot, true) {
                 pairs.publish(b, slot, key, val);
-                return true;
+                return Some(slot);
             }
         }
     }
@@ -184,17 +289,26 @@ impl IcebergHt {
     /// Scalar upsert body; the caller holds the front-yard bucket lock
     /// (in locking modes). Shared by the scalar API and the bulk
     /// fallback.
-    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp, ttl: Option<u64>) -> UpsertResult {
         let fb = self.front_bucket(key);
         let strong = self.mode.strong();
         let res = 'done: {
             if let Some((pairs, b, slot, old_v)) = self.locate(key, strong) {
+                if self.reclaim_if_expired_in(pairs, b, slot, val, ttl) {
+                    break 'done UpsertResult::Inserted;
+                }
                 self.apply_existing(pairs, b, slot, old_v, val, op);
+                if ttl.is_some() {
+                    if let Some(l) = &self.life {
+                        l.refresh(self.lifeslot_in(pairs, b, slot), ttl);
+                    }
+                }
                 break 'done UpsertResult::Updated;
             }
             let tag = if self.fmeta.is_some() { tag16(key) } else { 0 };
             // Front yard first.
-            if self.claim_in(&self.front, &self.fmeta, fb, key, val, tag) {
+            if let Some(slot) = self.claim_in(&self.front, &self.fmeta, fb, key, val, tag) {
+                self.stamp_fresh_in(&self.front, fb, slot, ttl);
                 self.live.fetch_add(1, Ordering::Relaxed);
                 break 'done UpsertResult::Inserted;
             }
@@ -206,7 +320,8 @@ impl IcebergHt {
             let (_, _, f2) = self.find_in(&self.back, &self.bmeta, bb2, key, tag, strong);
             let order = if f1 <= f2 { [bb1, bb2] } else { [bb2, bb1] };
             for bb in order {
-                if self.claim_in(&self.back, &self.bmeta, bb, key, val, tag) {
+                if let Some(slot) = self.claim_in(&self.back, &self.bmeta, bb, key, val, tag) {
+                    self.stamp_fresh_in(&self.back, bb, slot, ttl);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     break 'done UpsertResult::Inserted;
                 }
@@ -217,11 +332,14 @@ impl IcebergHt {
     }
 
     /// Scalar erase body; caller holds the front-yard bucket lock.
+    /// Returns whether a LIVE pair was erased (an expired corpse is
+    /// still tombstoned, but reports `false`).
     fn erase_under_lock(&self, key: u64) -> bool {
         match self.locate(key, self.mode.strong()) {
             Some((pairs, b, slot, _)) => {
+                let was_live = !self.is_expired_in(pairs, b, slot);
                 self.kill_in(pairs, b, slot, key);
-                true
+                was_live
             }
             None => false,
         }
@@ -233,8 +351,32 @@ impl IcebergHt {
         if let Some(m) = self.meta_for(pairs) {
             m.kill(b, slot);
         }
+        if let Some(l) = &self.life {
+            l.clear(self.lifeslot_in(pairs, b, slot));
+        }
         self.live.fetch_sub(1, Ordering::Relaxed);
         self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+    }
+
+    /// Sweep reclaim: tombstone `key` iff it is still present AND still
+    /// expired under the front-yard lock (guards against a concurrent
+    /// writer having reclaimed the slot between scan and kill).
+    fn erase_expired(&self, key: u64) -> bool {
+        let fb = self.front_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(fb);
+        }
+        let mut killed = false;
+        if let Some((pairs, b, slot, _)) = self.locate(key, self.mode.strong()) {
+            if self.is_expired_in(pairs, b, slot) {
+                self.kill_in(pairs, b, slot, key);
+                killed = true;
+            }
+        }
+        if self.mode.locking() {
+            self.locks.unlock(fb);
+        }
+        killed
     }
 
     /// Find `key` in the back yard only (both candidate buckets).
@@ -281,7 +423,23 @@ impl ConcurrentMap for IcebergHt {
         if self.mode.locking() {
             self.locks.lock(fb);
         }
-        let res = self.upsert_under_lock(key, val, op);
+        let res = self.upsert_under_lock(key, val, op, None);
+        if self.mode.locking() {
+            self.locks.unlock(fb);
+        }
+        res
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        if self.life.is_none() {
+            return self.upsert(key, val, op);
+        }
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let fb = self.front_bucket(key);
+        if self.mode.locking() {
+            self.locks.lock(fb);
+        }
+        let res = self.upsert_under_lock(key, val, op, Some(ttl_ticks));
         if self.mode.locking() {
             self.locks.unlock(fb);
         }
@@ -289,7 +447,8 @@ impl ConcurrentMap for IcebergHt {
     }
 
     fn query(&self, key: u64) -> Option<u64> {
-        self.locate(key, self.mode.strong()).map(|(_, _, _, v)| v)
+        self.locate(key, self.mode.strong())
+            .and_then(|(pairs, b, slot, v)| self.hit_live_in(pairs, b, slot).then_some(v))
     }
 
     fn erase(&self, key: u64) -> bool {
@@ -323,7 +482,7 @@ impl ConcurrentMap for IcebergHt {
             if group.len() == 1 {
                 let (k, v) = pairs_in[group[0] as usize];
                 debug_assert!(crate::gpusim::mem::is_user_key(k));
-                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op));
+                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op, None));
             } else {
                 // One shared scan of the group's common front-yard bucket
                 // (one tag-block probe for the metadata variant).
@@ -350,7 +509,7 @@ impl ConcurrentMap for IcebergHt {
                         continue;
                     }
                     if fallback_keys.contains(&k) {
-                        slots.set(i as usize, self.upsert_under_lock(k, v, op));
+                        slots.set(i as usize, self.upsert_under_lock(k, v, op, None));
                         continue;
                     }
                     let front_hit = if self.fmeta.is_some() {
@@ -359,6 +518,11 @@ impl ConcurrentMap for IcebergHt {
                         found[j]
                     };
                     if let Some((slot, _)) = front_hit {
+                        if self.reclaim_if_expired_in(&self.front, fb, slot, v, None) {
+                            local.push((k, slot));
+                            slots.set(i as usize, UpsertResult::Inserted);
+                            continue;
+                        }
                         // Fresh value read: the shared scan may predate
                         // merges applied earlier in this group.
                         let (_, old) = self.front.pair_at(fb, slot, strong);
@@ -370,6 +534,10 @@ impl ConcurrentMap for IcebergHt {
                     // the back yard (no early exit exists for iceberg).
                     let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
                     if let Some((bb, slot, old)) = self.locate_back(k, tag, strong) {
+                        if self.reclaim_if_expired_in(&self.back, bb, slot, v, None) {
+                            slots.set(i as usize, UpsertResult::Inserted);
+                            continue;
+                        }
                         self.apply_existing(&self.back, bb, slot, old, v, op);
                         slots.set(i as usize, UpsertResult::Updated);
                         continue;
@@ -377,12 +545,13 @@ impl ConcurrentMap for IcebergHt {
                     // Absent: front yard first, from the shared free
                     // list; overflow to the back yard via the fallback.
                     if let Some(slot) = self.claim_front_from(fb, &mut free, k, v) {
+                        self.stamp_fresh_in(&self.front, fb, slot, None);
                         self.live.fetch_add(1, Ordering::Relaxed);
                         local.push((k, slot));
                         slots.set(i as usize, UpsertResult::Inserted);
                         continue;
                     }
-                    slots.set(i as usize, self.upsert_under_lock(k, v, op));
+                    slots.set(i as usize, self.upsert_under_lock(k, v, op, None));
                     fallback_keys.push(k);
                 }
             }
@@ -421,18 +590,27 @@ impl ConcurrentMap for IcebergHt {
             for (j, &i) in group.iter().enumerate() {
                 let k = keys_in[i as usize];
                 let front_hit = if self.fmeta.is_some() {
-                    self.front
-                        .scan_slots(fb, per_tag[j].match_slots(), k, strong)
-                        .map(|(_, v)| v)
+                    self.front.scan_slots(fb, per_tag[j].match_slots(), k, strong)
                 } else {
-                    found[j].map(|(_, v)| v)
+                    found[j]
                 };
                 slots.set(
                     i as usize,
-                    front_hit.or_else(|| {
-                        let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
-                        self.locate_back(k, tag, strong).map(|(_, _, v)| v)
-                    }),
+                    front_hit
+                        .and_then(|(slot, v)| {
+                            self.hit_live_in(&self.front, fb, slot).then_some(v)
+                        })
+                        .or_else(|| {
+                            if front_hit.is_some() {
+                                // Expired front-yard hit: a key lives in
+                                // at most one yard, so don't fall back.
+                                return None;
+                            }
+                            let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
+                            self.locate_back(k, tag, strong).and_then(|(bb, slot, v)| {
+                                self.hit_live_in(&self.back, bb, slot).then_some(v)
+                            })
+                        }),
                 );
             }
         });
@@ -484,14 +662,16 @@ impl ConcurrentMap for IcebergHt {
                         found[j]
                     };
                     let hit = if let Some((slot, _)) = front_hit {
+                        let was_live = !self.is_expired_in(&self.front, fb, slot);
                         self.kill_in(&self.front, fb, slot, k);
-                        true
+                        was_live
                     } else {
                         let tag = if self.fmeta.is_some() { tag16(k) } else { 0 };
                         match self.locate_back(k, tag, strong) {
                             Some((bb, slot, _)) => {
+                                let was_live = !self.is_expired_in(&self.back, bb, slot);
                                 self.kill_in(&self.back, bb, slot, k);
-                                true
+                                was_live
                             }
                             None => false,
                         }
@@ -529,6 +709,7 @@ impl ConcurrentMap for IcebergHt {
             + self.fmeta.as_ref().map_or(0, |m| m.device_bytes())
             + self.bmeta.as_ref().map_or(0, |m| m.device_bytes())
             + self.locks.bytes()
+            + self.life.as_ref().map_or(0, |l| l.device_bytes())
     }
 
     fn name(&self) -> &'static str {
@@ -546,6 +727,9 @@ impl ConcurrentMap for IcebergHt {
     fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
         match self.locate(key, self.mode.strong()) {
             Some((pairs, b, slot, _)) => {
+                if self.is_expired_in(pairs, b, slot) {
+                    return false;
+                }
                 pairs.value_fetch_add(b, slot, v);
                 true
             }
@@ -556,6 +740,9 @@ impl ConcurrentMap for IcebergHt {
     fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
         match self.locate(key, self.mode.strong()) {
             Some((pairs, b, slot, _)) => {
+                if self.is_expired_in(pairs, b, slot) {
+                    return false;
+                }
                 pairs.value_fetch_add_f64(b, slot, v);
                 true
             }
@@ -564,12 +751,82 @@ impl ConcurrentMap for IcebergHt {
     }
 
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
-        self.front.for_each_live(|k, v| f(k, v));
-        self.back.for_each_live(|k, v| f(k, v));
+        match &self.life {
+            Some(l) => {
+                let fbs = self.front.bucket_size;
+                let back_base = self.front.num_buckets * fbs;
+                let bbs = self.back.bucket_size;
+                self.front.for_each_live_indexed(|b, s, k, v| {
+                    if !l.is_expired_at(b * fbs + s) {
+                        f(k, v);
+                    }
+                });
+                self.back.for_each_live_indexed(|b, s, k, v| {
+                    if !l.is_expired_at(back_base + b * bbs + s) {
+                        f(k, v);
+                    }
+                });
+            }
+            None => {
+                self.front.for_each_live(|k, v| f(k, v));
+                self.back.for_each_live(|k, v| f(k, v));
+            }
+        }
     }
 
     fn count_copies(&self, key: u64) -> usize {
         self.front.count_copies(key) + self.back.count_copies(key)
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.life.is_some()
+    }
+
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let Some(l) = &self.life else { return 0 };
+        // The sweep ring spans BOTH yards: buckets [0, nf) are the front
+        // yard, [nf, nf + nb) the back yard.
+        let nf = self.front.num_buckets;
+        let total = nf + self.back.num_buckets;
+        let n = max_buckets.min(total);
+        if n == 0 {
+            return 0;
+        }
+        let start = self.sweep_cursor.fetch_add(n, Ordering::Relaxed) % total;
+        let mut victims: Vec<u64> = Vec::new();
+        for off in 0..n {
+            let rb = (start + off) % total;
+            let (pairs, b, base, bs) = if rb < nf {
+                (&self.front, rb, 0, self.front.bucket_size)
+            } else {
+                (&self.back, rb - nf, nf * self.front.bucket_size, self.back.bucket_size)
+            };
+            for s in 0..bs {
+                let k = pairs.key_at(b, s, false);
+                if crate::gpusim::mem::is_user_key(k) && l.is_expired_at(base + b * bs + s) {
+                    victims.push(k);
+                }
+            }
+        }
+        let mut reclaimed = 0;
+        for k in victims {
+            if self.erase_expired(k) {
+                reclaimed += 1;
+            }
+        }
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.swept.load(Ordering::Relaxed)
+    }
+
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let l = self.life.as_ref()?;
+        let (pairs, b, slot, _) = self.locate(key, self.mode.strong())?;
+        let ls = self.lifeslot_in(pairs, b, slot);
+        (!l.is_expired_at(ls)).then(|| l.freq_at(ls))
     }
 }
 
@@ -584,6 +841,24 @@ mod tests {
 
     fn meta(slots: usize) -> IcebergHt {
         IcebergHt::new(TableConfig::new(slots).with_geometry(32, 4), true)
+    }
+
+    fn plain_ttl(slots: usize, cfg: &crate::tables::LifecycleConfig) -> IcebergHt {
+        IcebergHt::new(
+            TableConfig::new(slots)
+                .with_geometry(32, 8)
+                .with_lifecycle(cfg.clone()),
+            false,
+        )
+    }
+
+    fn meta_ttl(slots: usize, cfg: &crate::tables::LifecycleConfig) -> IcebergHt {
+        IcebergHt::new(
+            TableConfig::new(slots)
+                .with_geometry(32, 4)
+                .with_lifecycle(cfg.clone()),
+            true,
+        )
     }
 
     #[test]
@@ -667,6 +942,72 @@ mod tests {
     fn bulk_concurrent_no_duplicates() {
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
+    }
+
+    #[test]
+    fn ttl_semantics_plain_and_meta() {
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        check_ttl_semantics(&plain_ttl(2048, &cfg), &cfg);
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        check_ttl_semantics(&meta_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn sweep_matches_expiry_oracle() {
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&plain_ttl(2048, &cfg), &cfg);
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&meta_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn sweep_reclaims_backyard_corpses() {
+        // Tiny front yard: mortal keys overflow into the back yard, and
+        // the combined-ring sweep must still reclaim them.
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        let t = plain_ttl(256, &cfg);
+        let front_cap = t.front.num_buckets * t.front.bucket_size;
+        let ks = keys(front_cap + 40, 0x37);
+        for &k in &ks {
+            t.upsert_ttl(k, 1, 2, &UpsertOp::InsertIfUnique);
+        }
+        assert!(
+            ks.iter().any(|&k| t.back.count_copies(k) == 1),
+            "setup must push mortals into the back yard"
+        );
+        cfg.clock.advance(2);
+        let total = t.front.num_buckets + t.back.num_buckets;
+        let mut reclaimed = 0;
+        for _ in 0..(2 * total).div_ceil(8) {
+            reclaimed += t.sweep_expired(8);
+        }
+        assert_eq!(reclaimed, t.swept_expired() as usize);
+        for &k in &ks {
+            assert_eq!(t.count_copies(k), 0, "corpse survived the sweep");
+        }
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn bulk_ttl_parity_both_variants() {
+        let cfg = crate::tables::LifecycleConfig::new(2);
+        check_bulk_ttl_parity(&plain_ttl(2048, &cfg), &plain_ttl(2048, &cfg), &cfg, 0x38);
+        let cfg = crate::tables::LifecycleConfig::new(2);
+        check_bulk_ttl_parity(&meta_ttl(2048, &cfg), &meta_ttl(2048, &cfg), &cfg, 0x39);
+    }
+
+    #[test]
+    fn meta_frequency_bumps_add_zero_probe_lines() {
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        check_query_line_parity(&meta(4096), &meta_ttl(4096, &cfg), &cfg, 0x3A);
+    }
+
+    #[test]
+    fn lifecycle_off_is_free() {
+        let t = plain(2048);
+        assert!(!t.supports_ttl());
+        assert_eq!(t.sweep_expired(64), 0);
+        assert_eq!(t.entry_frequency(77), None);
     }
 
     #[test]

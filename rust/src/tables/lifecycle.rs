@@ -1,0 +1,449 @@
+//! Entry-lifecycle metadata: a logical TTL clock plus one 8-bit
+//! lifecycle code per slot (segcache-style; pelikan packs a comparable
+//! 12-bit tag + 8-bit frequency per item).
+//!
+//! # Clock model
+//!
+//! Wall time is useless inside the deterministic gpusim testbed, so the
+//! clock is a shared `AtomicU64` of *logical ticks* advanced explicitly
+//! by the workload driver ([`LifecycleClock::advance`]). TTLs are
+//! expressed in ticks and quantized: [`LifecycleConfig::quantum`] ticks
+//! form one TTL quantum, and a code stores its expiry deadline as a
+//! quantum index modulo 16 (a sequence-number ring, compared with a
+//! half-window test like TCP sequence arithmetic).
+//!
+//! # Code layout (8 bits per slot)
+//!
+//! ```text
+//!   bit 7      : has_ttl (0 = immortal)
+//!   bits 6..4  : saturating frequency counter, 0..=7
+//!   bits 3..0  : expiry deadline, in quanta mod 16 (TTL entries only)
+//! ```
+//!
+//! `0x00` — immortal, never touched — is the natural zero-initialized
+//! state, so tables without TTL traffic pay nothing. The 4-bit ring
+//! bounds representable TTLs at [`TTL_HORIZON_QUANTA`] quanta: longer
+//! TTLs round *up* to immortal (an entry never expires early). An
+//! expired entry reads as expired for the 9 quanta after its deadline;
+//! a sweep (or any write that reclaims the slot) must run within that
+//! window or the ring wraps and the corpse transiently reads live again
+//! — the background sweep cadence is what bounds this, exactly like
+//! segcache's eager segment expiry.
+//!
+//! # Line accounting
+//!
+//! Frequency bumps must not add cache-line probes to the query hot path
+//! (the paper's one-line-metadata argument). Two storage modes:
+//!
+//! * **Colocated** ([`LifecycleSlots::colocated`]): the codes live in
+//!   spare bytes of a line the operation already touched — the padded
+//!   tail of a [`super::meta::MetaArray`] bucket region, or ChainingHT's
+//!   free pad word inside each 128-byte node. Accounting is carried by
+//!   the host structure's own touch; reads/bumps here add zero lines.
+//! * **Standalone** ([`LifecycleSlots::standalone`]): designs with no
+//!   spare metadata bytes (plain Double/P2, Cuckoo, the baselines) keep
+//!   codes in their own array and honestly touch its lines.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::gpusim::probes;
+
+/// Deterministic logical clock shared by every table built from one
+/// [`LifecycleConfig`] (clone the config → share the clock).
+#[derive(Debug, Default)]
+pub struct LifecycleClock {
+    ticks: AtomicU64,
+}
+
+impl LifecycleClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Advance the clock by `n` ticks, returning the new now.
+    #[inline]
+    pub fn advance(&self, n: u64) -> u64 {
+        self.ticks.fetch_add(n, Ordering::Relaxed) + n
+    }
+}
+
+/// Lifecycle wiring for one table: the shared clock plus the tick→
+/// quantum coarsening. Cloning shares the clock (the point: a sharded
+/// table's shards must agree on "now").
+#[derive(Clone, Debug)]
+pub struct LifecycleConfig {
+    pub clock: Arc<LifecycleClock>,
+    /// Ticks per TTL quantum (≥ 1). Coarser quanta stretch the 7-quantum
+    /// TTL horizon at the price of coarser expiry.
+    pub quantum: u64,
+}
+
+impl LifecycleConfig {
+    pub fn new(quantum: u64) -> Self {
+        Self {
+            clock: LifecycleClock::new(),
+            quantum: quantum.max(1),
+        }
+    }
+
+    #[inline]
+    pub fn now_quantum(&self) -> u64 {
+        self.clock.now() / self.quantum
+    }
+
+    /// TTL in ticks → quanta, rounded up so an entry never expires
+    /// before its requested TTL; `None` = beyond the ring horizon
+    /// (stored immortal).
+    #[inline]
+    pub fn ttl_quanta(&self, ttl_ticks: u64) -> Option<u64> {
+        let q = ttl_ticks.div_ceil(self.quantum).max(1);
+        (q <= TTL_HORIZON_QUANTA).then_some(q)
+    }
+}
+
+/// Longest representable TTL, in quanta (the live half of the mod-16
+/// deadline ring minus the current quantum).
+pub const TTL_HORIZON_QUANTA: u64 = 7;
+
+/// Frequency-counter ceiling (3 bits, saturating).
+pub const FREQ_MAX: u8 = 7;
+
+const TTL_BIT: u8 = 0x80;
+const FREQ_MASK: u8 = 0x70;
+const FREQ_SHIFT: u32 = 4;
+const DEADLINE_MASK: u8 = 0x0F;
+
+/// Code for a freshly (re)inserted entry: frequency 0, deadline
+/// `now + ttl_quanta` when a TTL within the horizon was requested.
+#[inline]
+pub fn encode_fresh(now_quantum: u64, ttl_quanta: Option<u64>) -> u8 {
+    match ttl_quanta {
+        Some(q) => TTL_BIT | ((now_quantum.wrapping_add(q) & 0xF) as u8),
+        None => 0,
+    }
+}
+
+/// Half-window ring comparison: expired iff the entry carries a TTL and
+/// `now` sits in the 9-quantum window at/after its deadline.
+#[inline]
+pub fn is_expired(code: u8, now_quantum: u64) -> bool {
+    code & TTL_BIT != 0 && (now_quantum.wrapping_sub((code & DEADLINE_MASK) as u64) & 0xF) <= 8
+}
+
+#[inline]
+pub fn freq_of(code: u8) -> u8 {
+    (code & FREQ_MASK) >> FREQ_SHIFT
+}
+
+/// Saturating frequency bump, deadline and TTL bit preserved.
+#[inline]
+pub fn bumped(code: u8) -> u8 {
+    if freq_of(code) >= FREQ_MAX {
+        code
+    } else {
+        code + (1 << FREQ_SHIFT)
+    }
+}
+
+static NEXT_LIFE_MEM_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Per-slot lifecycle codes for one table region, packed 8 per
+/// `AtomicU64`. Slot indexing is the owner's flat slot index
+/// (`bucket * bucket_size + slot` for the open-addressing designs).
+pub struct LifecycleSlots {
+    cfg: LifecycleConfig,
+    words: Box<[AtomicU64]>,
+    n_slots: usize,
+    /// `None` = colocated (lines carried by the host structure's touch);
+    /// `Some(mem_id)` = standalone array with its own device lines.
+    mem_id: Option<u64>,
+}
+
+impl LifecycleSlots {
+    /// Codes riding spare bytes of lines the owner already touches
+    /// (MetaArray bucket-region tail, ChainingHT node pad word). Zero
+    /// extra lines on any path — the owner's layout reserves the bytes
+    /// and its own `touch` covers them.
+    pub fn colocated(cfg: LifecycleConfig, n_slots: usize) -> Self {
+        Self::build(cfg, n_slots, None)
+    }
+
+    /// Codes in their own array with honest line accounting (1 byte per
+    /// slot, 128 codes per line).
+    pub fn standalone(cfg: LifecycleConfig, n_slots: usize) -> Self {
+        Self::build(
+            cfg,
+            n_slots,
+            Some(NEXT_LIFE_MEM_ID.fetch_add(1, Ordering::Relaxed)),
+        )
+    }
+
+    fn build(cfg: LifecycleConfig, n_slots: usize, mem_id: Option<u64>) -> Self {
+        let nw = n_slots.div_ceil(8).max(1);
+        let mut v = Vec::with_capacity(nw);
+        v.resize_with(nw, || AtomicU64::new(0));
+        Self {
+            cfg,
+            words: v.into_boxed_slice(),
+            n_slots,
+            mem_id,
+        }
+    }
+
+    #[inline]
+    pub fn cfg(&self) -> &LifecycleConfig {
+        &self.cfg
+    }
+
+    /// Device bytes this region adds (0 when colocated: the owner's
+    /// layout already reserves — and reports — the bytes).
+    pub fn device_bytes(&self) -> usize {
+        match self.mem_id {
+            Some(_) => self.n_slots,
+            None => 0,
+        }
+    }
+
+    #[inline]
+    fn touch(&self, slot: usize) {
+        if let Some(id) = self.mem_id {
+            if probes::enabled() {
+                let line = (slot / crate::gpusim::LINE_BYTES) as u64;
+                probes::touch((0x4000_0000_0000 | id) << 16 | line);
+            }
+        }
+    }
+
+    #[inline]
+    fn cell(&self, slot: usize) -> (&AtomicU64, u32) {
+        debug_assert!(slot < self.n_slots, "lifecycle slot {slot} out of range");
+        (&self.words[slot / 8], (slot % 8) as u32 * 8)
+    }
+
+    #[inline]
+    pub fn code(&self, slot: usize) -> u8 {
+        self.touch(slot);
+        let (w, sh) = self.cell(slot);
+        (w.load(Ordering::Acquire) >> sh) as u8
+    }
+
+    #[inline]
+    pub fn set(&self, slot: usize, code: u8) {
+        self.touch(slot);
+        let (w, sh) = self.cell(slot);
+        let mask = 0xFFu64 << sh;
+        let mut cur = w.load(Ordering::Acquire);
+        loop {
+            let new = (cur & !mask) | ((code as u64) << sh);
+            match w.compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn clear(&self, slot: usize) {
+        self.set(slot, 0);
+    }
+
+    /// Stamp a freshly claimed (or reclaimed) slot: frequency 0 plus the
+    /// requested TTL deadline.
+    #[inline]
+    pub fn fresh(&self, slot: usize, ttl_ticks: Option<u64>) {
+        let q = ttl_ticks.and_then(|t| self.cfg.ttl_quanta(t));
+        self.set(slot, encode_fresh(self.cfg.now_quantum(), q));
+    }
+
+    #[inline]
+    pub fn is_expired_at(&self, slot: usize) -> bool {
+        is_expired(self.code(slot), self.cfg.now_quantum())
+    }
+
+    #[inline]
+    pub fn freq_at(&self, slot: usize) -> u8 {
+        freq_of(self.code(slot))
+    }
+
+    /// Query-hit hook: `false` when the entry is expired (the caller
+    /// reports a miss); otherwise bumps the saturating frequency counter
+    /// in place and returns `true`. One CAS on the same word the code
+    /// read loaded — no additional line in either storage mode.
+    #[inline]
+    pub fn on_hit(&self, slot: usize) -> bool {
+        self.touch(slot);
+        let (w, sh) = self.cell(slot);
+        let now_q = self.cfg.now_quantum();
+        let mask = 0xFFu64 << sh;
+        let mut cur = w.load(Ordering::Acquire);
+        loop {
+            let code = (cur >> sh) as u8;
+            if is_expired(code, now_q) {
+                return false;
+            }
+            let b = bumped(code);
+            if b == code {
+                return true; // saturated: no write needed
+            }
+            let new = (cur & !mask) | ((b as u64) << sh);
+            match w.compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return true,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Refresh a live entry's TTL in place (upsert-with-TTL on an
+    /// existing key), preserving its frequency.
+    #[inline]
+    pub fn refresh(&self, slot: usize, ttl_ticks: Option<u64>) {
+        let q = ttl_ticks.and_then(|t| self.cfg.ttl_quanta(t));
+        let freq_bits = self.code(slot) & FREQ_MASK;
+        self.set(slot, encode_fresh(self.cfg.now_quantum(), q) | freq_bits);
+    }
+
+    /// Move a code with its entry (CuckooHT displacement under lock).
+    #[inline]
+    pub fn move_code(&self, from: usize, to: usize) {
+        let c = self.code(from);
+        self.set(to, c);
+        self.clear(from);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let c = LifecycleClock::new();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.advance(5), 5);
+        assert_eq!(c.advance(3), 8);
+        assert_eq!(c.now(), 8);
+    }
+
+    #[test]
+    fn ttl_quantization_rounds_up_and_caps_at_horizon() {
+        let cfg = LifecycleConfig::new(10);
+        assert_eq!(cfg.ttl_quanta(1), Some(1));
+        assert_eq!(cfg.ttl_quanta(10), Some(1));
+        assert_eq!(cfg.ttl_quanta(11), Some(2));
+        assert_eq!(cfg.ttl_quanta(70), Some(7));
+        assert_eq!(cfg.ttl_quanta(71), None, "beyond horizon → immortal");
+    }
+
+    #[test]
+    fn ring_expiry_half_window() {
+        for start in [0u64, 7, 13, 100, u64::MAX - 3] {
+            for ttl in 1..=TTL_HORIZON_QUANTA {
+                let code = encode_fresh(start, Some(ttl));
+                for dt in 0..ttl {
+                    assert!(
+                        !is_expired(code, start.wrapping_add(dt)),
+                        "start {start} ttl {ttl} dt {dt}"
+                    );
+                }
+                for dt in ttl..ttl + 9 {
+                    assert!(is_expired(code, start.wrapping_add(dt)), "start {start} ttl {ttl} dt {dt}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn immortal_never_expires() {
+        let code = encode_fresh(3, None);
+        for q in 0..64u64 {
+            assert!(!is_expired(code, q));
+        }
+        // Frequency bumps never turn an immortal entry mortal.
+        let mut c = code;
+        for _ in 0..20 {
+            c = bumped(c);
+        }
+        assert!(!is_expired(c, 11));
+        assert_eq!(freq_of(c), FREQ_MAX);
+    }
+
+    #[test]
+    fn bump_saturates_and_preserves_deadline() {
+        let code = encode_fresh(2, Some(5));
+        let mut c = code;
+        for i in 1..=10 {
+            c = bumped(c);
+            assert_eq!(freq_of(c), (i as u8).min(FREQ_MAX));
+            assert_eq!(c & DEADLINE_MASK, code & DEADLINE_MASK);
+            assert_eq!(c & TTL_BIT, TTL_BIT);
+        }
+    }
+
+    #[test]
+    fn slots_hit_bump_and_expire() {
+        let cfg = LifecycleConfig::new(1);
+        let clock = Arc::clone(&cfg.clock);
+        let s = LifecycleSlots::standalone(cfg, 64);
+        s.fresh(3, Some(2));
+        assert!(s.on_hit(3));
+        assert!(s.on_hit(3));
+        assert_eq!(s.freq_at(3), 2);
+        clock.advance(2);
+        assert!(s.is_expired_at(3));
+        assert!(!s.on_hit(3), "expired hit must report miss");
+        assert_eq!(s.freq_at(3), 2, "expired hit must not bump");
+        s.fresh(3, None);
+        assert!(!s.is_expired_at(3));
+        assert_eq!(s.freq_at(3), 0, "reclaim resets frequency");
+    }
+
+    #[test]
+    fn refresh_extends_deadline_and_keeps_freq() {
+        let cfg = LifecycleConfig::new(1);
+        let clock = Arc::clone(&cfg.clock);
+        let s = LifecycleSlots::colocated(cfg, 8);
+        s.fresh(0, Some(1));
+        assert!(s.on_hit(0));
+        s.refresh(0, Some(5));
+        clock.advance(3);
+        assert!(!s.is_expired_at(0), "refreshed TTL outlives the original");
+        assert_eq!(s.freq_at(0), 1, "refresh preserves frequency");
+        clock.advance(2);
+        assert!(s.is_expired_at(0));
+    }
+
+    #[test]
+    fn move_code_carries_lifecycle() {
+        let cfg = LifecycleConfig::new(1);
+        let s = LifecycleSlots::standalone(cfg, 16);
+        s.fresh(1, Some(4));
+        assert!(s.on_hit(1));
+        s.move_code(1, 9);
+        assert_eq!(s.freq_at(9), 1);
+        assert!(!s.is_expired_at(9));
+        assert_eq!(s.code(1), 0);
+    }
+
+    #[test]
+    fn standalone_slots_touch_their_own_lines_colocated_do_not() {
+        let _measure = probes::measurement_section();
+        probes::set_enabled(true);
+        let cfg = LifecycleConfig::new(1);
+        let st = LifecycleSlots::standalone(cfg.clone(), 256);
+        let sc = probes::ProbeScope::begin();
+        st.code(0);
+        st.code(200); // second line of the standalone array
+        assert_eq!(sc.finish(), 2);
+        let co = LifecycleSlots::colocated(cfg, 256);
+        let sc = probes::ProbeScope::begin();
+        co.code(0);
+        co.code(200);
+        assert_eq!(sc.finish(), 0, "colocated codes ride the host's lines");
+    }
+}

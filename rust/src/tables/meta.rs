@@ -33,6 +33,13 @@ pub struct MetaArray {
     words: Box<[AtomicU64]>,
     bucket_size: usize,
     words_per_bucket: usize,
+    /// Words per bucket *region* — `words_per_bucket` plus, when a
+    /// lifecycle region is reserved, one byte per slot of
+    /// entry-lifecycle codes ([`super::lifecycle`]), the whole region
+    /// padded to a power-of-two word count so buckets never straddle an
+    /// extra cache line (32 slots: 64B tags + 32B codes → 128B = still
+    /// exactly one line per bucket scan).
+    stride: usize,
     mem_id: u64,
 }
 
@@ -71,44 +78,81 @@ fn lane_set(word: u64, lane: usize, tag: u16) -> u64 {
 
 impl MetaArray {
     pub fn new(num_buckets: usize, bucket_size: usize) -> Self {
+        Self::build(num_buckets, bucket_size, false)
+    }
+
+    /// Like [`MetaArray::new`] but each bucket region additionally
+    /// reserves one byte per slot for entry-lifecycle codes
+    /// ([`super::lifecycle::LifecycleSlots::colocated`] holds the live
+    /// words; this layout reserves the device bytes and lines). The
+    /// region is padded to a power-of-two word count so a bucket's tag
+    /// block and its lifecycle bytes always share the same line set —
+    /// [`MetaArray::touch_bucket`] covers both, which is what makes a
+    /// lifecycle read/bump after a tag scan cost zero extra lines.
+    pub fn with_lifecycle_region(num_buckets: usize, bucket_size: usize) -> Self {
+        Self::build(num_buckets, bucket_size, true)
+    }
+
+    fn build(num_buckets: usize, bucket_size: usize, lifecycle: bool) -> Self {
         let wpb = bucket_size.div_ceil(LANES);
-        let mut v = Vec::with_capacity(num_buckets * wpb);
+        let stride = if lifecycle {
+            (wpb + bucket_size.div_ceil(8)).next_power_of_two()
+        } else {
+            wpb
+        };
+        let mut v = Vec::with_capacity(num_buckets * stride);
         // Pad lanes (beyond bucket_size in the last word) are initialized
         // to TAG_EMPTY but masked out of every scan, so they are never
         // matched or claimed.
-        v.resize_with(num_buckets * wpb, || AtomicU64::new(0));
+        v.resize_with(num_buckets * stride, || AtomicU64::new(0));
         Self {
             words: v.into_boxed_slice(),
             bucket_size,
             words_per_bucket: wpb,
+            stride,
             mem_id: NEXT_META_MEM_ID.fetch_add(1, Ordering::Relaxed),
         }
     }
 
     pub fn device_bytes(&self) -> usize {
-        // Device cost is the logical 2 bytes per slot (padding is a host
-        // artifact of word packing).
-        self.words.len() / self.words_per_bucket * self.bucket_size * 2
+        if self.stride > self.words_per_bucket {
+            // Lifecycle region reserved: the padded region is the real
+            // device footprint (tags + codes + alignment padding).
+            self.words.len() * 8
+        } else {
+            // Device cost is the logical 2 bytes per slot (padding is a
+            // host artifact of word packing).
+            self.words.len() / self.words_per_bucket * self.bucket_size * 2
+        }
     }
 
     #[inline(always)]
     fn word_idx(&self, bucket: usize, word: usize) -> usize {
-        bucket * self.words_per_bucket + word
+        bucket * self.stride + word
     }
 
-    /// Probe-account the metadata lines this bucket's tags occupy
-    /// (16 words = 64 tags per 128-byte line; a 32-slot bucket = 1 probe).
+    /// Probe-account the metadata lines this bucket's region occupies
+    /// (16 words = 64 tags per 128-byte line; a 32-slot bucket = 1 probe,
+    /// with or without its lifecycle bytes — the power-of-two region
+    /// padding keeps both inside the same line set).
     #[inline(always)]
     fn touch_bucket(&self, bucket: usize) {
         if !probes::enabled() {
             return;
         }
         let first = self.word_idx(bucket, 0) * 8 / crate::gpusim::LINE_BYTES;
-        let last =
-            self.word_idx(bucket, self.words_per_bucket - 1) * 8 / crate::gpusim::LINE_BYTES;
+        let last = self.word_idx(bucket, self.stride - 1) * 8 / crate::gpusim::LINE_BYTES;
         for line in first..=last {
             probes::touch((0x2000_0000_0000 | self.mem_id) << 16 | line as u64);
         }
+    }
+
+    /// Probe-account a lifecycle-code access for slot `slot` of `bucket`
+    /// — the same region lines [`MetaArray::touch_bucket`] records, so
+    /// inside one op scope this adds nothing after a tag scan.
+    #[inline(always)]
+    pub fn touch_lifecycle(&self, bucket: usize, _slot: usize) {
+        self.touch_bucket(bucket);
     }
 
     /// Read all tags of a bucket (one metadata probe), returning the
@@ -429,6 +473,28 @@ mod tests {
         assert!(free.had_empty());
         assert_eq!(free.next_free(), Some(9), "tombstone handed out first");
         assert_eq!(free.next_free(), scalar.first_empty);
+    }
+
+    #[test]
+    fn lifecycle_region_keeps_bucket_scans_at_one_line() {
+        let _measure = probes::measurement_section();
+        probes::set_enabled(true);
+        let m = MetaArray::with_lifecycle_region(8, 32);
+        assert!(m.try_claim(3, 5, 0x42, false));
+        let s = ProbeScope::begin();
+        let sc = m.scan(3, 0x42, true);
+        m.touch_lifecycle(3, 5); // the lifecycle read/bump after the scan
+        assert_eq!(s.finish(), 1, "tags + lifecycle codes share one line");
+        assert_eq!(sc.n_matches, 1);
+        // Every bucket region is line-aligned: no bucket ever straddles.
+        for b in 0..8 {
+            let s = ProbeScope::begin();
+            m.scan(b, 1, true);
+            assert_eq!(s.finish(), 1, "bucket {b} straddles a line");
+        }
+        // The reserved region is charged to the device footprint.
+        assert_eq!(m.device_bytes(), 8 * 128);
+        assert!(MetaArray::new(8, 32).device_bytes() < m.device_bytes());
     }
 
     #[test]

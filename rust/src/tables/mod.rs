@@ -25,6 +25,7 @@
 
 pub mod common;
 pub mod meta;
+pub mod lifecycle;
 pub mod double;
 pub mod p2;
 pub mod iceberg;
@@ -38,6 +39,7 @@ pub mod kernel_table;
 
 pub use frozen::{FrozenTable, TieredMap};
 pub use growable::{GrowableMap, GrowthPolicy};
+pub use lifecycle::{LifecycleClock, LifecycleConfig};
 
 #[cfg(test)]
 pub(crate) mod test_support;
@@ -343,6 +345,66 @@ pub trait ConcurrentMap: Send + Sync {
         0
     }
 
+    /// True when this instance was built with entry-lifecycle metadata
+    /// ([`TableConfig::with_lifecycle`]): TTL upserts are honored,
+    /// queries expire-on-read, and lookups maintain per-entry frequency
+    /// counters. Designs without lifecycle support (and instances built
+    /// without it) report `false` and treat every entry as immortal.
+    fn supports_ttl(&self) -> bool {
+        false
+    }
+
+    /// Upsert with a time-to-live of `ttl_ticks` logical clock ticks
+    /// ([`lifecycle::LifecycleClock`]). Semantics beyond
+    /// [`ConcurrentMap::upsert`]:
+    ///
+    /// * a fresh insert stamps the entry's lifecycle code with the TTL
+    ///   deadline (TTLs beyond the ring horizon are stored immortal —
+    ///   an entry never expires *early*);
+    /// * an update refreshes the existing entry's deadline in place,
+    ///   preserving its frequency counter;
+    /// * an upsert that lands on an *expired* entry of the same key
+    ///   reclaims it as a fresh insert (value overwritten, lifecycle
+    ///   reset, `Inserted` returned).
+    ///
+    /// The default ignores the TTL — non-lifecycle designs store the
+    /// entry immortally, which is the conservative reading (data is
+    /// never lost early).
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        let _ = ttl_ticks;
+        self.upsert(key, val, op)
+    }
+
+    /// Advance the background expiry sweep by up to `max_buckets`
+    /// buckets: physically reclaim entries whose TTL deadline has
+    /// passed (queries already treat them as absent — expire-on-read —
+    /// but the slots stay occupied until swept or overwritten). Returns
+    /// the number of entries reclaimed. A per-instance cursor makes
+    /// repeated bounded calls cover the whole table round-robin — the
+    /// coordinator's `Job::Sweep` unit of work. No-op (0) without
+    /// lifecycle support.
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let _ = max_buckets;
+        0
+    }
+
+    /// Entries reclaimed by [`ConcurrentMap::sweep_expired`] over the
+    /// table's lifetime (metrics).
+    fn swept_expired(&self) -> u64 {
+        0
+    }
+
+    /// Approximate access-frequency counter of `key`'s entry (0..=7,
+    /// bumped saturating on every successful lookup), or `None` when
+    /// the key is absent, expired, or the instance has no lifecycle
+    /// metadata. Reads without bumping — usable as a residency probe
+    /// and as the eviction-policy input
+    /// ([`crate::apps::caching::GpuCache`]).
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let _ = key;
+        None
+    }
+
     /// Routing-stripe migration iterator (shard split/merge): append a
     /// snapshot of every live `(key, value)` whose key satisfies `keep`
     /// — a pure routing predicate (stripe-range membership plus, for
@@ -497,6 +559,12 @@ pub struct TableConfig {
     pub max_probes: usize,
     /// Adversarial-schedule hook (Noop in production).
     pub hook: Arc<dyn RaceHook>,
+    /// Entry-lifecycle metadata (TTL + frequency counters). `None`
+    /// (the default) builds the table without lifecycle slots: zero
+    /// memory overhead, every entry immortal, `upsert_ttl` degrades to
+    /// plain `upsert`. Cloned configs (growth successors) share the
+    /// same logical clock through the embedded `Arc`.
+    pub lifecycle: Option<LifecycleConfig>,
 }
 
 impl TableConfig {
@@ -508,6 +576,7 @@ impl TableConfig {
             mode: ConcurrencyMode::Concurrent,
             max_probes: 128,
             hook: Arc::new(NoopHook),
+            lifecycle: None,
         }
     }
 
@@ -540,6 +609,11 @@ impl TableConfig {
 
     pub fn with_hook(mut self, hook: Arc<dyn RaceHook>) -> Self {
         self.hook = hook;
+        self
+    }
+
+    pub fn with_lifecycle(mut self, cfg: LifecycleConfig) -> Self {
+        self.lifecycle = Some(cfg);
         self
     }
 }

@@ -13,9 +13,10 @@
 //! variant answers most negatives from the two 64-byte tag blocks
 //! (Table 5.1: 8.01 → 2.01 aging negative probes).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::common::{bucket_count_for, FreeSlots, Pairs};
+use super::lifecycle::LifecycleSlots;
 use super::meta::{MetaArray, MetaScan};
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
 use crate::gpusim::race::RaceEvent;
@@ -39,6 +40,12 @@ pub struct P2Ht {
     /// the shortcut duplicate-check (and negative-query early exit) sound
     /// even under churn — deletions never clear the bit.
     overflow: Box<[AtomicU64]>,
+    /// TTL + frequency codes (flat `bucket * bucket_size + slot`);
+    /// colocated in the padded MetaArray region for the (M) variant,
+    /// standalone for the plain variant.
+    life: Option<LifecycleSlots>,
+    sweep_cursor: AtomicUsize,
+    swept: AtomicU64,
 }
 
 /// Per-bucket view produced by one scan, shared by the plain and metadata
@@ -59,7 +66,20 @@ impl P2Ht {
     pub fn with_shortcut(cfg: TableConfig, with_meta: bool, shortcut: bool) -> Self {
         let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
         let pairs = Pairs::new(nb, cfg.bucket_size, cfg.tile_size);
-        let meta = with_meta.then(|| MetaArray::new(nb, cfg.bucket_size));
+        let meta = with_meta.then(|| {
+            if cfg.lifecycle.is_some() {
+                MetaArray::with_lifecycle_region(nb, cfg.bucket_size)
+            } else {
+                MetaArray::new(nb, cfg.bucket_size)
+            }
+        });
+        let life = cfg.lifecycle.clone().map(|lc| {
+            if with_meta {
+                LifecycleSlots::colocated(lc, nb * cfg.bucket_size)
+            } else {
+                LifecycleSlots::standalone(lc, nb * cfg.bucket_size)
+            }
+        });
         let shortcut_limit = if shortcut {
             (cfg.bucket_size as f64 * SHORTCUT_FILL) as usize
         } else {
@@ -76,7 +96,67 @@ impl P2Ht {
             live: AtomicU64::new(0),
             shortcut_limit,
             overflow: ov.into_boxed_slice(),
+            life,
+            sweep_cursor: AtomicUsize::new(0),
+            swept: AtomicU64::new(0),
         }
+    }
+
+    #[inline(always)]
+    fn lifeslot(&self, b: usize, slot: usize) -> usize {
+        b * self.pairs.bucket_size + slot
+    }
+
+    /// Expire-on-read check for a located pair (see `DoubleHt`: colocated
+    /// codes dedup against the tag probe, standalone touches its line).
+    #[inline]
+    fn is_expired(&self, b: usize, slot: usize) -> bool {
+        match &self.life {
+            Some(l) => {
+                if let Some(meta) = &self.meta {
+                    meta.touch_lifecycle(b, slot);
+                }
+                l.is_expired_at(self.lifeslot(b, slot))
+            }
+            None => false,
+        }
+    }
+
+    /// Query-hit bookkeeping: bump frequency; `false` = expired (miss).
+    #[inline]
+    fn hit_live(&self, b: usize, slot: usize) -> bool {
+        match &self.life {
+            Some(l) => {
+                if let Some(meta) = &self.meta {
+                    meta.touch_lifecycle(b, slot);
+                }
+                l.on_hit(self.lifeslot(b, slot))
+            }
+            None => true,
+        }
+    }
+
+    /// Stamp a just-published slot's lifecycle code (benign post-publish
+    /// race with lock-free readers, as in `DoubleHt`).
+    #[inline]
+    fn stamp_fresh(&self, b: usize, slot: usize, ttl: Option<u64>) {
+        if let Some(l) = &self.life {
+            if let Some(meta) = &self.meta {
+                meta.touch_lifecycle(b, slot);
+            }
+            l.fresh(self.lifeslot(b, slot), ttl);
+        }
+    }
+
+    /// Reclaim an expired pair in place as a fresh insert of `val`.
+    #[inline]
+    fn reclaim_if_expired(&self, b: usize, slot: usize, val: u64, ttl: Option<u64>) -> bool {
+        if !self.is_expired(b, slot) {
+            return false;
+        }
+        self.pairs.value_store(b, slot, val);
+        self.stamp_fresh(b, slot, ttl);
+        true
     }
 
     #[inline(always)]
@@ -141,20 +221,20 @@ impl P2Ht {
         }
     }
 
-    /// Claim + publish into bucket `b`; retries CAS races, returns false
-    /// when the bucket fills up first.
-    fn claim_in_bucket(&self, b: usize, key: u64, val: u64, tag: u16) -> bool {
+    /// Claim + publish into bucket `b`, returning the claimed slot;
+    /// retries CAS races, `None` when the bucket fills up first.
+    fn claim_in_bucket(&self, b: usize, key: u64, val: u64, tag: u16) -> Option<usize> {
         let strong = self.mode.strong();
         loop {
             let slot = if let Some(meta) = &self.meta {
                 match meta.scan(b, tag, strong).reusable() {
                     Some(s) => s,
-                    None => return false,
+                    None => return None,
                 }
             } else {
                 match self.pairs.scan_bucket(b, key, strong).reusable() {
                     Some(s) => s,
-                    None => return false,
+                    None => return None,
                 }
             };
             self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
@@ -163,18 +243,19 @@ impl P2Ht {
                     let ok = self.pairs.try_claim(b, slot, true);
                     debug_assert!(ok);
                     self.pairs.publish(b, slot, key, val);
-                    return true;
+                    return Some(slot);
                 }
             } else if self.pairs.try_claim(b, slot, true) {
                 self.pairs.publish(b, slot, key, val);
-                return true;
+                return Some(slot);
             }
         }
     }
 
     /// Scalar upsert body; the caller holds b1's lock (in locking modes).
-    /// Shared by the scalar API and the bulk path's fallback.
-    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    /// Shared by the scalar API and the bulk path's fallback. `ttl`
+    /// semantics as in `DoubleHt::upsert_under_lock`.
+    fn upsert_under_lock(&self, key: u64, val: u64, op: &UpsertOp, ttl: Option<u64>) -> UpsertResult {
         let [b1, b2] = self.buckets_of(key);
         let tag = self.tag_of(key);
         let strong = self.mode.strong();
@@ -182,7 +263,16 @@ impl P2Ht {
         'done: {
             let v1 = self.view(b1, key, tag, strong);
             if let Some((slot, old_v)) = v1.found {
+                if self.reclaim_if_expired(b1, slot, val, ttl) {
+                    res = UpsertResult::Inserted;
+                    break 'done;
+                }
                 self.apply_existing(b1, slot, old_v, val, op);
+                if ttl.is_some() {
+                    if let Some(l) = &self.life {
+                        l.refresh(self.lifeslot(b1, slot), ttl);
+                    }
+                }
                 res = UpsertResult::Updated;
                 break 'done;
             }
@@ -191,20 +281,28 @@ impl P2Ht {
             // bucket. Sound only while b1's sticky overflow bit is clear
             // (no key of b1 can live in b2, so the duplicate check needs
             // only b1) and b1 still has a reusable slot.
-            if v1.fill < self.shortcut_limit
-                && !self.overflowed(b1)
-                && v1.reusable.is_some()
-                && self.claim_in_bucket(b1, key, val, tag)
-            {
-                self.live.fetch_add(1, Ordering::Relaxed);
-                res = UpsertResult::Inserted;
-                break 'done;
+            if v1.fill < self.shortcut_limit && !self.overflowed(b1) && v1.reusable.is_some() {
+                if let Some(slot) = self.claim_in_bucket(b1, key, val, tag) {
+                    self.stamp_fresh(b1, slot, ttl);
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    res = UpsertResult::Inserted;
+                    break 'done;
+                }
             }
             self.hook
                 .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: b1 });
             let v2 = self.view(b2, key, tag, strong);
             if let Some((slot, old_v)) = v2.found {
+                if self.reclaim_if_expired(b2, slot, val, ttl) {
+                    res = UpsertResult::Inserted;
+                    break 'done;
+                }
                 self.apply_existing(b2, slot, old_v, val, op);
+                if ttl.is_some() {
+                    if let Some(l) = &self.life {
+                        l.refresh(self.lifeslot(b2, slot), ttl);
+                    }
+                }
                 res = UpsertResult::Updated;
                 break 'done;
             }
@@ -217,7 +315,8 @@ impl P2Ht {
                     // no shortcut can race past the duplicate check.
                     self.set_overflowed(b1);
                 }
-                if self.claim_in_bucket(b, key, val, tag) {
+                if let Some(slot) = self.claim_in_bucket(b, key, val, tag) {
+                    self.stamp_fresh(b, slot, ttl);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     res = UpsertResult::Inserted;
                     break 'done;
@@ -227,7 +326,8 @@ impl P2Ht {
         res
     }
 
-    /// Scalar erase body; caller holds b1's lock.
+    /// Scalar erase body; caller holds b1's lock. Expired entries are
+    /// physically reclaimed but reported absent.
     fn erase_under_lock(&self, key: u64) -> bool {
         let [b1, b2] = self.buckets_of(key);
         let strong = self.mode.strong();
@@ -235,21 +335,52 @@ impl P2Ht {
         let buckets: &[usize] = if self.overflowed(b1) { &[b1, b2] } else { &[b1] };
         for &b in buckets {
             if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                let was_live = !self.is_expired(b, slot);
                 self.kill_at(b, slot, key);
-                return true;
+                return was_live;
             }
         }
         false
     }
 
-    /// Tombstone a located pair (+ its tag) and account the deletion.
+    /// Tombstone a located pair (+ its tag + lifecycle code) and account
+    /// the deletion.
     fn kill_at(&self, b: usize, slot: usize, key: u64) {
         self.pairs.kill(b, slot);
         if let Some(meta) = &self.meta {
             meta.kill(b, slot);
         }
+        if let Some(l) = &self.life {
+            l.clear(self.lifeslot(b, slot));
+        }
         self.live.fetch_sub(1, Ordering::Relaxed);
         self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+    }
+
+    /// The sweep's guarded reclaim: kill `key` only if still expired,
+    /// under b1's lock so it cannot race a refresh/reclaim.
+    fn erase_expired(&self, key: u64) -> bool {
+        let [b1, b2] = self.buckets_of(key);
+        if self.mode.locking() {
+            self.locks.lock(b1);
+        }
+        let strong = self.mode.strong();
+        let tag = self.tag_of(key);
+        let buckets: &[usize] = if self.overflowed(b1) { &[b1, b2] } else { &[b1] };
+        let mut hit = false;
+        for &b in buckets {
+            if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                if self.is_expired(b, slot) {
+                    self.kill_at(b, slot, key);
+                    hit = true;
+                }
+                break;
+            }
+        }
+        if self.mode.locking() {
+            self.locks.unlock(b1);
+        }
+        hit
     }
 
     /// Claim + publish from a group's shared free-slot list (shared
@@ -276,7 +407,23 @@ impl ConcurrentMap for P2Ht {
         if self.mode.locking() {
             self.locks.lock(b1);
         }
-        let res = self.upsert_under_lock(key, val, op);
+        let res = self.upsert_under_lock(key, val, op, None);
+        if self.mode.locking() {
+            self.locks.unlock(b1);
+        }
+        res
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        if self.life.is_none() {
+            return self.upsert(key, val, op);
+        }
+        debug_assert!(crate::gpusim::mem::is_user_key(key));
+        let b1 = self.buckets_of(key)[0];
+        if self.mode.locking() {
+            self.locks.lock(b1);
+        }
+        let res = self.upsert_under_lock(key, val, op, Some(ttl_ticks));
         if self.mode.locking() {
             self.locks.unlock(b1);
         }
@@ -287,14 +434,16 @@ impl ConcurrentMap for P2Ht {
         let strong = self.mode.strong();
         let [b1, b2] = self.buckets_of(key);
         let tag = self.tag_of(key);
-        if let Some((_, v)) = self.view(b1, key, tag, strong).found {
-            return Some(v);
+        if let Some((slot, v)) = self.view(b1, key, tag, strong).found {
+            return self.hit_live(b1, slot).then_some(v);
         }
         if !self.overflowed(b1) {
             // No key of b1 has ever been placed in its alternate.
             return None;
         }
-        self.view(b2, key, tag, strong).found.map(|(_, v)| v)
+        self.view(b2, key, tag, strong)
+            .found
+            .and_then(|(slot, v)| self.hit_live(b2, slot).then_some(v))
     }
 
     fn erase(&self, key: u64) -> bool {
@@ -328,7 +477,7 @@ impl ConcurrentMap for P2Ht {
             if group.len() == 1 {
                 let (k, v) = pairs_in[group[0] as usize];
                 debug_assert!(crate::gpusim::mem::is_user_key(k));
-                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op));
+                slots.set(group[0] as usize, self.upsert_under_lock(k, v, op, None));
             } else {
                 // One shared scan of the group's common primary bucket.
                 let (mut free, fill) = if let Some(meta) = &self.meta {
@@ -353,7 +502,7 @@ impl ConcurrentMap for P2Ht {
                         continue;
                     }
                     if fallback_keys.contains(&k) {
-                        slots.set(i as usize, self.upsert_under_lock(k, v, op));
+                        slots.set(i as usize, self.upsert_under_lock(k, v, op, None));
                         continue;
                     }
                     let hit = if self.meta.is_some() {
@@ -362,6 +511,11 @@ impl ConcurrentMap for P2Ht {
                         found[j]
                     };
                     if let Some((slot, _)) = hit {
+                        if self.reclaim_if_expired(b1, slot, v, None) {
+                            local.push((k, slot));
+                            slots.set(i as usize, UpsertResult::Inserted);
+                            continue;
+                        }
                         // Fresh value read: the shared scan may predate
                         // merges applied earlier in this very group.
                         let (_, old) = self.pairs.pair_at(b1, slot, strong);
@@ -376,6 +530,7 @@ impl ConcurrentMap for P2Ht {
                     // fill guard tracks this group's own inserts.
                     if !self.overflowed(b1) && local_fill < self.shortcut_limit {
                         if let Some(slot) = self.claim_from(b1, &mut free, k, v) {
+                            self.stamp_fresh(b1, slot, None);
                             self.live.fetch_add(1, Ordering::Relaxed);
                             local_fill += 1;
                             local.push((k, slot));
@@ -384,7 +539,7 @@ impl ConcurrentMap for P2Ht {
                         }
                     }
                     // Overflowed / crowded primary: full two-choice walk.
-                    slots.set(i as usize, self.upsert_under_lock(k, v, op));
+                    slots.set(i as usize, self.upsert_under_lock(k, v, op, None));
                     fallback_keys.push(k);
                 }
             }
@@ -420,14 +575,17 @@ impl ConcurrentMap for P2Ht {
                     slots.set(
                         i as usize,
                         match self.pairs.scan_slots(b1, per_tag[j].match_slots(), k, strong) {
-                            Some((_, v)) => Some(v),
+                            // Expire-on-read, same as the scalar path.
+                            Some((slot, v)) => self.hit_live(b1, slot).then_some(v),
                             // No key of b1 has ever overflowed into its
                             // alternate: a miss in b1 is a table miss.
                             None if !self.overflowed(b1) => None,
-                            None => self
-                                .view(self.buckets_of(k)[1], k, tags[j], strong)
-                                .found
-                                .map(|(_, v)| v),
+                            None => {
+                                let b2 = self.buckets_of(k)[1];
+                                self.view(b2, k, tags[j], strong)
+                                    .found
+                                    .and_then(|(slot, v)| self.hit_live(b2, slot).then_some(v))
+                            }
                         },
                     );
                 }
@@ -440,12 +598,14 @@ impl ConcurrentMap for P2Ht {
                     slots.set(
                         i as usize,
                         match found[j] {
-                            Some((_, v)) => Some(v),
+                            Some((slot, v)) => self.hit_live(b1, slot).then_some(v),
                             None if !self.overflowed(b1) => None,
-                            None => self
-                                .view(self.buckets_of(k)[1], k, 0, strong)
-                                .found
-                                .map(|(_, v)| v),
+                            None => {
+                                let b2 = self.buckets_of(k)[1];
+                                self.view(b2, k, 0, strong)
+                                    .found
+                                    .and_then(|(slot, v)| self.hit_live(b2, slot).then_some(v))
+                            }
                         },
                     );
                 }
@@ -502,8 +662,11 @@ impl ConcurrentMap for P2Ht {
                         i as usize,
                         match hit {
                             Some((slot, _)) => {
+                                // Expired entries reclaim but report
+                                // absent, same as the scalar path.
+                                let was_live = !self.is_expired(b1, slot);
                                 self.kill_at(b1, slot, k);
-                                true
+                                was_live
                             }
                             // Miss in b1 with the overflow bit clear: the
                             // key cannot be in b2, and under b1's lock it
@@ -540,6 +703,7 @@ impl ConcurrentMap for P2Ht {
     fn device_bytes(&self) -> usize {
         self.pairs.device_bytes()
             + self.meta.as_ref().map_or(0, |m| m.device_bytes())
+            + self.life.as_ref().map_or(0, |l| l.device_bytes())
             + self.locks.bytes()
     }
 
@@ -560,6 +724,9 @@ impl ConcurrentMap for P2Ht {
         let tag = self.tag_of(key);
         for b in self.buckets_of(key) {
             if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                if self.is_expired(b, slot) {
+                    return false;
+                }
                 self.pairs.value_fetch_add(b, slot, v);
                 return true;
             }
@@ -572,6 +739,9 @@ impl ConcurrentMap for P2Ht {
         let tag = self.tag_of(key);
         for b in self.buckets_of(key) {
             if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                if self.is_expired(b, slot) {
+                    return false;
+                }
                 self.pairs.value_fetch_add_f64(b, slot, v);
                 return true;
             }
@@ -580,11 +750,70 @@ impl ConcurrentMap for P2Ht {
     }
 
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
-        self.pairs.for_each_live(|k, v| f(k, v));
+        // Expired entries are skipped — no resurrection through
+        // migration/freeze collection.
+        match &self.life {
+            Some(l) => self.pairs.for_each_live_indexed(|b, s, k, v| {
+                if !l.is_expired_at(b * self.pairs.bucket_size + s) {
+                    f(k, v)
+                }
+            }),
+            None => self.pairs.for_each_live(|k, v| f(k, v)),
+        }
     }
 
     fn count_copies(&self, key: u64) -> usize {
         self.pairs.count_copies(key)
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.life.is_some()
+    }
+
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let Some(life) = &self.life else { return 0 };
+        if max_buckets == 0 {
+            return 0;
+        }
+        let nb = self.pairs.num_buckets;
+        let start = self.sweep_cursor.fetch_add(max_buckets, Ordering::Relaxed) % nb;
+        let mut victims: Vec<u64> = Vec::new();
+        for i in 0..max_buckets.min(nb) {
+            let b = (start + i) % nb;
+            for s in 0..self.pairs.bucket_size {
+                let k = self.pairs.key_at(b, s, false);
+                if crate::gpusim::mem::is_user_key(k) && life.is_expired_at(self.lifeslot(b, s)) {
+                    victims.push(k);
+                }
+            }
+        }
+        let mut reclaimed = 0;
+        for k in victims {
+            if self.erase_expired(k) {
+                reclaimed += 1;
+            }
+        }
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.swept.load(Ordering::Relaxed)
+    }
+
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let life = self.life.as_ref()?;
+        let strong = self.mode.strong();
+        let tag = self.tag_of(key);
+        for b in self.buckets_of(key) {
+            if let Some((slot, _)) = self.view(b, key, tag, strong).found {
+                if self.is_expired(b, slot) {
+                    return None;
+                }
+                return Some(life.freq_at(self.lifeslot(b, slot)));
+            }
+        }
+        None
     }
 }
 
@@ -698,5 +927,55 @@ mod tests {
     fn bulk_concurrent_no_duplicates() {
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(plain(8192)));
         check_bulk_concurrent_no_duplicates(std::sync::Arc::new(meta(8192)));
+    }
+
+    use crate::tables::lifecycle::LifecycleConfig;
+
+    fn plain_ttl(slots: usize, cfg: &LifecycleConfig) -> P2Ht {
+        P2Ht::new(
+            TableConfig::new(slots)
+                .with_geometry(32, 8)
+                .with_lifecycle(cfg.clone()),
+            false,
+        )
+    }
+
+    fn meta_ttl(slots: usize, cfg: &LifecycleConfig) -> P2Ht {
+        P2Ht::new(
+            TableConfig::new(slots)
+                .with_geometry(32, 4)
+                .with_lifecycle(cfg.clone()),
+            true,
+        )
+    }
+
+    #[test]
+    fn ttl_semantics_plain_and_meta() {
+        let cfg = LifecycleConfig::new(3);
+        check_ttl_semantics(&plain_ttl(2048, &cfg), &cfg);
+        let cfg = LifecycleConfig::new(3);
+        check_ttl_semantics(&meta_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn sweep_matches_expiry_oracle() {
+        let cfg = LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&plain_ttl(2048, &cfg), &cfg);
+        let cfg = LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&meta_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn bulk_ttl_parity_both_variants() {
+        let cfg = LifecycleConfig::new(1);
+        check_bulk_ttl_parity(&plain_ttl(2048, &cfg), &plain_ttl(2048, &cfg), &cfg, 0x28);
+        let cfg = LifecycleConfig::new(1);
+        check_bulk_ttl_parity(&meta_ttl(2048, &cfg), &meta_ttl(2048, &cfg), &cfg, 0x29);
+    }
+
+    #[test]
+    fn meta_frequency_bumps_add_zero_probe_lines() {
+        let cfg = LifecycleConfig::new(1);
+        check_query_line_parity(&meta(4096), &meta_ttl(4096, &cfg), &cfg, 0x2A);
     }
 }

@@ -15,10 +15,12 @@
 //! excluded from every performance benchmark exactly as the paper
 //! excludes SlabHash ("fail the correctness test").
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::common::{bucket_count_for, Pairs};
+use super::lifecycle::LifecycleSlots;
 use super::{ConcurrencyMode, ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
+use crate::gpusim::mem::is_user_key;
 use crate::gpusim::race::RaceEvent;
 use crate::hash::{hash1, hash2};
 
@@ -27,16 +29,28 @@ pub struct SlabHashLike {
     mode: ConcurrencyMode,
     hook: std::sync::Arc<dyn crate::gpusim::race::RaceHook>,
     live: AtomicU64,
+    /// TTL + frequency codes (standalone side array; this baseline has
+    /// no metadata path to colocate into).
+    life: Option<LifecycleSlots>,
+    sweep_cursor: AtomicUsize,
+    swept: AtomicU64,
 }
 
 impl SlabHashLike {
     pub fn new(cfg: TableConfig) -> Self {
         let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        let life = cfg
+            .lifecycle
+            .clone()
+            .map(|lc| LifecycleSlots::standalone(lc, nb * cfg.bucket_size));
         Self {
             pairs: Pairs::new(nb, cfg.bucket_size, cfg.tile_size),
             mode: cfg.mode,
             hook: cfg.hook,
             live: AtomicU64::new(0),
+            life,
+            sweep_cursor: AtomicUsize::new(0),
+            swept: AtomicU64::new(0),
         }
     }
 
@@ -46,36 +60,76 @@ impl SlabHashLike {
         [(hash1(key) & mask) as usize, (hash2(key) & mask) as usize]
     }
 
-    /// Claim + publish in one bucket; `None` = bucket full, `Some(true)` =
-    /// inserted, `Some(false)` = key already present.
-    fn try_bucket(&self, b: usize, key: u64, val: u64, strong: bool) -> Option<bool> {
+    #[inline(always)]
+    fn lifeslot(&self, b: usize, slot: usize) -> usize {
+        b * self.pairs.bucket_size + slot
+    }
+
+    #[inline]
+    fn is_expired(&self, b: usize, slot: usize) -> bool {
+        self.life
+            .as_ref()
+            .is_some_and(|l| l.is_expired_at(self.lifeslot(b, slot)))
+    }
+
+    #[inline]
+    fn stamp_fresh(&self, b: usize, slot: usize, ttl: Option<u64>) {
+        if let Some(l) = &self.life {
+            l.fresh(self.lifeslot(b, slot), ttl);
+        }
+    }
+
+    /// Claim + publish in one bucket; `None` = bucket full,
+    /// `Some(Ok(slot))` = inserted there, `Some(Err(slot))` = key
+    /// already present at `slot`.
+    fn try_bucket(
+        &self,
+        b: usize,
+        key: u64,
+        val: u64,
+        strong: bool,
+    ) -> Option<Result<usize, usize>> {
         loop {
             let r = self.pairs.scan_bucket(b, key, strong);
-            if r.found.is_some() {
-                return Some(false);
+            if let Some((slot, _)) = r.found {
+                return Some(Err(slot));
             }
             let slot = r.reusable()?;
             self.hook.on_event(RaceEvent::BeforeClaim { key, bucket: b });
             if self.pairs.try_claim(b, slot, true) {
                 self.pairs.publish(b, slot, key, val);
-                return Some(true);
+                return Some(Ok(slot));
             }
         }
     }
-}
 
-impl ConcurrentMap for SlabHashLike {
-    /// `insertPairUnique` semantics: query-then-claim per bucket, atomics
-    /// only, NO key-level serialization. Racy by construction.
-    fn upsert(&self, key: u64, val: u64, _op: &UpsertOp) -> UpsertResult {
+    /// `insertPairUnique` body shared by `upsert` / `upsert_ttl`. On a
+    /// present key the value is NOT merged (SlabHash fidelity) — but an
+    /// EXPIRED resident is reclaimed in place as a fresh insert, and a
+    /// live one has its deadline refreshed when a TTL is supplied.
+    fn upsert_with_ttl(&self, key: u64, val: u64, ttl: Option<u64>) -> UpsertResult {
         let strong = self.mode.strong();
         let [b1, b2] = self.buckets_of(key);
+        let present = |b: usize, slot: usize| -> UpsertResult {
+            if self.is_expired(b, slot) {
+                self.pairs.value_store(b, slot, val);
+                self.stamp_fresh(b, slot, ttl);
+                return UpsertResult::Inserted;
+            }
+            if ttl.is_some() {
+                if let Some(l) = &self.life {
+                    l.refresh(self.lifeslot(b, slot), ttl);
+                }
+            }
+            UpsertResult::Updated
+        };
         match self.try_bucket(b1, key, val, strong) {
-            Some(true) => {
+            Some(Ok(slot)) => {
+                self.stamp_fresh(b1, slot, ttl);
                 self.live.fetch_add(1, Ordering::Relaxed);
                 return UpsertResult::Inserted;
             }
-            Some(false) => return UpsertResult::Updated,
+            Some(Err(slot)) => return present(b1, slot),
             None => {}
         }
         // Primary full → move to the alternate. THIS is the §4.1 window:
@@ -84,20 +138,64 @@ impl ConcurrentMap for SlabHashLike {
         self.hook
             .on_event(RaceEvent::PrimaryFullMovingOn { key, bucket: b1 });
         match self.try_bucket(b2, key, val, strong) {
-            Some(true) => {
+            Some(Ok(slot)) => {
+                self.stamp_fresh(b2, slot, ttl);
                 self.live.fetch_add(1, Ordering::Relaxed);
                 UpsertResult::Inserted
             }
-            Some(false) => UpsertResult::Updated,
+            Some(Err(slot)) => present(b2, slot),
             None => UpsertResult::Full,
         }
+    }
+
+    /// Sweep reclaim: atomicCAS delete iff still present and expired.
+    fn erase_expired(&self, key: u64) -> bool {
+        let strong = self.mode.strong();
+        for b in self.buckets_of(key) {
+            if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                if !self.is_expired(b, slot) {
+                    return false;
+                }
+                let kidx = self.pairs.kidx(b, slot);
+                if self
+                    .pairs
+                    .mem()
+                    .cas(kidx, key, super::common::KEY_TOMBSTONE)
+                    .is_ok()
+                {
+                    if let Some(l) = &self.life {
+                        l.clear(self.lifeslot(b, slot));
+                    }
+                    self.live.fetch_sub(1, Ordering::Relaxed);
+                    self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+impl ConcurrentMap for SlabHashLike {
+    /// `insertPairUnique` semantics: query-then-claim per bucket, atomics
+    /// only, NO key-level serialization. Racy by construction.
+    fn upsert(&self, key: u64, val: u64, _op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, None)
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, _op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, self.life.is_some().then_some(ttl_ticks))
     }
 
     fn query(&self, key: u64) -> Option<u64> {
         let strong = self.mode.strong();
         for b in self.buckets_of(key) {
-            if let Some((_, v)) = self.pairs.scan_bucket(b, key, strong).found {
-                return Some(v);
+            if let Some((slot, v)) = self.pairs.scan_bucket(b, key, strong).found {
+                let live = match &self.life {
+                    Some(l) => l.on_hit(self.lifeslot(b, slot)),
+                    None => true,
+                };
+                return live.then_some(v);
             }
         }
         None
@@ -107,6 +205,7 @@ impl ConcurrentMap for SlabHashLike {
         let strong = self.mode.strong();
         for b in self.buckets_of(key) {
             if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                let was_live = !self.is_expired(b, slot);
                 // atomicCAS delete, no lock.
                 let kidx = self.pairs.kidx(b, slot);
                 if self
@@ -115,9 +214,12 @@ impl ConcurrentMap for SlabHashLike {
                     .cas(kidx, key, super::common::KEY_TOMBSTONE)
                     .is_ok()
                 {
+                    if let Some(l) = &self.life {
+                        l.clear(self.lifeslot(b, slot));
+                    }
                     self.live.fetch_sub(1, Ordering::Relaxed);
                     self.hook.on_event(RaceEvent::AfterDelete { key, bucket: b });
-                    return true;
+                    return was_live;
                 }
             }
         }
@@ -141,7 +243,7 @@ impl ConcurrentMap for SlabHashLike {
     }
 
     fn device_bytes(&self) -> usize {
-        self.pairs.device_bytes()
+        self.pairs.device_bytes() + self.life.as_ref().map_or(0, |l| l.device_bytes())
     }
 
     fn name(&self) -> &'static str {
@@ -153,11 +255,69 @@ impl ConcurrentMap for SlabHashLike {
     }
 
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
-        self.pairs.for_each_live(|k, v| f(k, v));
+        match &self.life {
+            Some(l) => {
+                let bsz = self.pairs.bucket_size;
+                self.pairs.for_each_live_indexed(|b, s, k, v| {
+                    if !l.is_expired_at(b * bsz + s) {
+                        f(k, v);
+                    }
+                });
+            }
+            None => self.pairs.for_each_live(|k, v| f(k, v)),
+        }
     }
 
     fn count_copies(&self, key: u64) -> usize {
         self.pairs.count_copies(key)
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.life.is_some()
+    }
+
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let Some(l) = &self.life else { return 0 };
+        let nb = self.pairs.num_buckets;
+        let n = max_buckets.min(nb);
+        if n == 0 {
+            return 0;
+        }
+        let start = self.sweep_cursor.fetch_add(n, Ordering::Relaxed) % nb;
+        let mut victims: Vec<u64> = Vec::new();
+        for off in 0..n {
+            let b = (start + off) % nb;
+            for s in 0..self.pairs.bucket_size {
+                let k = self.pairs.key_at(b, s, false);
+                if is_user_key(k) && l.is_expired_at(self.lifeslot(b, s)) {
+                    victims.push(k);
+                }
+            }
+        }
+        let mut reclaimed = 0;
+        for k in victims {
+            if self.erase_expired(k) {
+                reclaimed += 1;
+            }
+        }
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.swept.load(Ordering::Relaxed)
+    }
+
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let l = self.life.as_ref()?;
+        let strong = self.mode.strong();
+        for b in self.buckets_of(key) {
+            if let Some((slot, _)) = self.pairs.scan_bucket(b, key, strong).found {
+                let ls = self.lifeslot(b, slot);
+                return (!l.is_expired_at(ls)).then(|| l.freq_at(ls));
+            }
+        }
+        None
     }
 }
 
@@ -182,6 +342,79 @@ mod tests {
         // 2-choice without displacement tops out well below the stable
         // designs — 70% is reliably reachable, 90% is not.
         check_fill_to(&table(8192), 0.70);
+    }
+
+    fn table_ttl(slots: usize, cfg: &crate::tables::LifecycleConfig) -> SlabHashLike {
+        SlabHashLike::new(
+            TableConfig::new(slots)
+                .with_geometry(8, 4)
+                .with_lifecycle(cfg.clone()),
+        )
+    }
+
+    #[test]
+    fn ttl_expire_reclaim_and_refresh() {
+        // Tailored TTL suite: the shared check_ttl_semantics asserts
+        // merge-on-update, which insertPairUnique deliberately lacks —
+        // everything else (expire-on-read, reclaim, refresh, frequency)
+        // must still hold.
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        let q = cfg.quantum;
+        let t = table_ttl(2048, &cfg);
+        let ks = keys(4, 0x61);
+        assert_eq!(
+            t.upsert_ttl(ks[0], 1, 3 * q, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        assert_eq!(t.query(ks[0]), Some(1));
+        cfg.clock.advance(3 * q);
+        assert_eq!(t.query(ks[0]), None, "expire-on-read");
+        assert_eq!(t.entry_frequency(ks[0]), None);
+        // Reclaim in place: fresh insert, single physical copy.
+        assert_eq!(
+            t.upsert(ks[0], 7, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        assert_eq!(t.query(ks[0]), Some(7));
+        assert_eq!(t.count_copies(ks[0]), 1);
+        // Refresh extends the deadline and keeps the counter.
+        assert_eq!(
+            t.upsert_ttl(ks[1], 9, 2 * q, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        assert!(t.query(ks[1]).is_some());
+        assert_eq!(
+            t.upsert_ttl(ks[1], 9, 5 * q, &UpsertOp::InsertIfUnique),
+            UpsertResult::Updated
+        );
+        cfg.clock.advance(3 * q);
+        assert!(t.query(ks[1]).is_some(), "refreshed TTL outlives original");
+        assert_eq!(t.entry_frequency(ks[1]), Some(2));
+        cfg.clock.advance(2 * q);
+        assert_eq!(t.query(ks[1]), None);
+        // Erase of a corpse reports absent but reclaims the slot.
+        assert!(!t.erase(ks[1]));
+        assert_eq!(t.count_copies(ks[1]), 0);
+    }
+
+    #[test]
+    fn sweep_matches_expiry_oracle() {
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&table_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn bulk_ttl_parity() {
+        let cfg = crate::tables::LifecycleConfig::new(2);
+        check_bulk_ttl_parity(&table_ttl(2048, &cfg), &table_ttl(2048, &cfg), &cfg, 0x62);
+    }
+
+    #[test]
+    fn lifecycle_off_is_free() {
+        let t = table(1024);
+        assert!(!t.supports_ttl());
+        assert_eq!(t.sweep_expired(64), 0);
+        assert_eq!(t.entry_frequency(42), None);
     }
 
     // The demonstration that it is NOT correct lives in the adversarial

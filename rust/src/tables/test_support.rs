@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread;
 
+use super::lifecycle::{LifecycleConfig, FREQ_MAX, TTL_HORIZON_QUANTA};
 use super::{ConcurrentMap, UpsertOp, UpsertResult};
 use crate::prng::Xoshiro256pp;
 
@@ -385,6 +386,223 @@ pub fn check_bulk_concurrent_no_duplicates(t: Arc<dyn ConcurrentMap>) {
         assert_eq!(t.query(k), Some(i as u64));
     }
     assert_eq!(t.len(), ks.len());
+}
+
+/// The full TTL/frequency contract, run against any design built with a
+/// [`LifecycleConfig`]: expire-on-read (scalar + bulk), reclaim-in-place
+/// on upsert-over-corpse with the single-copy invariant, erase-on-expired
+/// reporting absent, TTL refresh preserving frequency, counter
+/// saturation, and beyond-horizon TTLs rounding up to immortal.
+pub fn check_ttl_semantics(t: &dyn ConcurrentMap, cfg: &LifecycleConfig) {
+    assert!(t.supports_ttl(), "{}: built with lifecycle", t.name());
+    let q = cfg.quantum;
+    let ks = keys(8, 0x77D1);
+    assert_eq!(
+        t.upsert_ttl(ks[0], 1, 3 * q, &UpsertOp::InsertIfUnique),
+        UpsertResult::Inserted
+    );
+    assert_eq!(t.query(ks[0]), Some(1), "live TTL entry hits");
+    assert_eq!(t.upsert(ks[1], 2, &UpsertOp::InsertIfUnique), UpsertResult::Inserted);
+    cfg.clock.advance(3 * q);
+    // Expire-on-read: scalar and bulk agree, and nothing bumps a corpse.
+    assert_eq!(t.query(ks[0]), None, "expired entry must read absent");
+    let mut out = Vec::new();
+    t.query_bulk(&[ks[0], ks[1]], &mut out);
+    assert_eq!(out, vec![None, Some(2)], "bulk expire-on-read parity");
+    assert_eq!(t.entry_frequency(ks[0]), None);
+    if t.is_stable() {
+        assert!(!t.fetch_add_in_place(ks[0], 1), "no in-place add on a corpse");
+    }
+    // Upsert over the corpse reclaims in place: a fresh insert (no merge
+    // with the dead value), exactly one physical copy.
+    assert_eq!(t.upsert(ks[0], 7, &UpsertOp::AddAssign), UpsertResult::Inserted);
+    assert_eq!(t.query(ks[0]), Some(7), "reclaim is a fresh insert, not a merge");
+    assert_eq!(t.count_copies(ks[0]), 1, "reclaim reuses the existing slot");
+    // upsert_ttl on a live entry refreshes the deadline, keeps frequency.
+    assert_eq!(
+        t.upsert_ttl(ks[2], 9, 2 * q, &UpsertOp::Overwrite),
+        UpsertResult::Inserted
+    );
+    assert_eq!(t.query(ks[2]), Some(9));
+    assert_eq!(t.entry_frequency(ks[2]), Some(1));
+    assert_eq!(
+        t.upsert_ttl(ks[2], 10, 5 * q, &UpsertOp::Overwrite),
+        UpsertResult::Updated
+    );
+    cfg.clock.advance(3 * q);
+    assert_eq!(t.query(ks[2]), Some(10), "refreshed TTL outlives the original");
+    assert_eq!(t.entry_frequency(ks[2]), Some(2), "refresh keeps the counter");
+    cfg.clock.advance(2 * q);
+    assert_eq!(t.query(ks[2]), None);
+    // Erase on an expired entry physically reclaims but reports absent.
+    assert!(!t.erase(ks[2]), "erase of a corpse reports absent");
+    assert_eq!(t.count_copies(ks[2]), 0, "erase reclaims the corpse");
+    // Frequency counter: read-without-bump, bump-per-hit, saturation.
+    assert_eq!(
+        t.upsert_ttl(ks[3], 1, 7 * q, &UpsertOp::InsertIfUnique),
+        UpsertResult::Inserted
+    );
+    assert_eq!(t.entry_frequency(ks[3]), Some(0));
+    assert_eq!(t.entry_frequency(ks[3]), Some(0), "frequency read must not bump");
+    for _ in 0..12 {
+        assert!(t.query(ks[3]).is_some());
+    }
+    assert_eq!(t.entry_frequency(ks[3]), Some(FREQ_MAX), "counter saturates");
+    // Beyond-horizon TTLs round up to immortal (never expire early).
+    assert_eq!(
+        t.upsert_ttl(ks[4], 4, (TTL_HORIZON_QUANTA + 5) * q, &UpsertOp::InsertIfUnique),
+        UpsertResult::Inserted
+    );
+    cfg.clock.advance(10 * q);
+    assert_eq!(t.query(ks[4]), Some(4), "beyond-horizon TTL must not expire early");
+    // No resurrection anywhere after all that clock motion.
+    assert_eq!(t.query(ks[0]), Some(7), "reclaimed entry is immortal");
+    assert_eq!(t.query(ks[1]), Some(2), "immortal neighbor untouched");
+    assert_eq!(t.query(ks[2]), None);
+}
+
+/// Background-sweep contract: after expiry, a sequence of bounded
+/// `sweep_expired` calls reclaims exactly the expired set (oracle = the
+/// insert schedule), leaves every live key intact, and a second full
+/// pass finds nothing.
+pub fn check_sweep_vs_oracle(t: &dyn ConcurrentMap, cfg: &LifecycleConfig) {
+    let ks = keys(120, 0x5EEB);
+    for (i, &k) in ks.iter().enumerate() {
+        let r = if i % 3 == 0 {
+            t.upsert_ttl(k, i as u64, 2 * cfg.quantum, &UpsertOp::InsertIfUnique)
+        } else {
+            t.upsert(k, i as u64, &UpsertOp::InsertIfUnique)
+        };
+        assert_eq!(r, UpsertResult::Inserted);
+    }
+    let mortals = ks.len().div_ceil(3);
+    assert_eq!(t.len(), ks.len());
+    cfg.clock.advance(2 * cfg.quantum);
+    // len() stays physical: corpses occupy slots until swept.
+    assert_eq!(t.len(), ks.len());
+    let full_cover = (2 * t.num_buckets()).div_ceil(8);
+    let mut reclaimed = 0;
+    for _ in 0..full_cover {
+        reclaimed += t.sweep_expired(8);
+    }
+    assert_eq!(reclaimed, mortals, "{}: sweep ≠ expiry oracle", t.name());
+    assert_eq!(t.swept_expired() as usize, mortals);
+    assert_eq!(t.len(), ks.len() - mortals, "sweep frees physical slots");
+    for (i, &k) in ks.iter().enumerate() {
+        if i % 3 == 0 {
+            assert_eq!(t.query(k), None);
+            assert_eq!(t.count_copies(k), 0, "swept corpse lingers");
+        } else {
+            assert_eq!(t.query(k), Some(i as u64), "sweep must not touch live keys");
+        }
+    }
+    let mut again = 0;
+    for _ in 0..full_cover {
+        again += t.sweep_expired(8);
+    }
+    assert_eq!(again, 0, "second sweep pass must find nothing");
+}
+
+/// Bulk-vs-scalar TTL parity: two twins share one clock; TTL upserts are
+/// applied identically to both, then `query_bulk`/`erase_bulk` on one
+/// must agree op-for-op with scalar `query`/`erase` on the other across
+/// interleaved clock advances.
+pub fn check_bulk_ttl_parity(
+    bulk_t: &dyn ConcurrentMap,
+    scalar_t: &dyn ConcurrentMap,
+    cfg: &LifecycleConfig,
+    seed: u64,
+) {
+    let mut rng = Xoshiro256pp::new(seed);
+    let universe = keys(96, seed ^ 0x77E1);
+    let draw = |rng: &mut Xoshiro256pp| universe[rng.next_below(96) as usize];
+    for round in 0..60 {
+        let len = 1 + rng.next_below(48) as usize;
+        match rng.next_below(5) {
+            0 | 1 => {
+                for _ in 0..len {
+                    let k = draw(&mut rng);
+                    let v = rng.next_below(1_000);
+                    let ttl = (1 + rng.next_below(6)) * cfg.quantum;
+                    let a = bulk_t.upsert_ttl(k, v, ttl, &UpsertOp::Overwrite);
+                    let b = scalar_t.upsert_ttl(k, v, ttl, &UpsertOp::Overwrite);
+                    assert_eq!(a, b, "{}: round {round} upsert_ttl {k:#x}", bulk_t.name());
+                }
+            }
+            2 => {
+                let ks: Vec<u64> = (0..len).map(|_| draw(&mut rng)).collect();
+                let mut bulk_res = Vec::new();
+                bulk_t.query_bulk(&ks, &mut bulk_res);
+                for (i, &k) in ks.iter().enumerate() {
+                    assert_eq!(
+                        bulk_res[i],
+                        scalar_t.query(k),
+                        "{}: round {round} query #{i} key {k:#x}",
+                        bulk_t.name()
+                    );
+                }
+            }
+            3 => {
+                let ks: Vec<u64> = (0..len).map(|_| draw(&mut rng)).collect();
+                let mut bulk_res = Vec::new();
+                bulk_t.erase_bulk(&ks, &mut bulk_res);
+                for (i, &k) in ks.iter().enumerate() {
+                    assert_eq!(
+                        bulk_res[i],
+                        scalar_t.erase(k),
+                        "{}: round {round} erase #{i} key {k:#x}",
+                        bulk_t.name()
+                    );
+                }
+            }
+            _ => {
+                cfg.clock.advance(cfg.quantum);
+            }
+        }
+    }
+}
+
+/// The acceptance criterion's line-count proof: the lifecycle twin's
+/// query hot path must touch exactly as many cache lines as the plain
+/// twin's — colocated codes ride lines the tag probe already pays for,
+/// so frequency bumps are free. (Run only on colocated designs; the
+/// standalone code array honestly adds its own line.)
+pub fn check_query_line_parity(
+    plain: &dyn ConcurrentMap,
+    life: &dyn ConcurrentMap,
+    cfg: &LifecycleConfig,
+    seed: u64,
+) {
+    use crate::gpusim::probes::{self, ProbeScope};
+    let ks = keys(200, seed);
+    for (i, &k) in ks.iter().enumerate() {
+        assert_eq!(
+            plain.upsert(k, i as u64, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+        assert_eq!(
+            life.upsert_ttl(k, i as u64, TTL_HORIZON_QUANTA * cfg.quantum, &UpsertOp::InsertIfUnique),
+            UpsertResult::Inserted
+        );
+    }
+    let _measure = probes::measurement_section();
+    probes::set_enabled(true);
+    let count = |t: &dyn ConcurrentMap| {
+        let mut lines = 0usize;
+        for &k in &ks {
+            let s = ProbeScope::begin();
+            assert!(t.query(k).is_some());
+            lines += s.finish();
+        }
+        lines
+    };
+    let base = count(plain);
+    let with_life = count(life);
+    assert_eq!(
+        with_life, base,
+        "{}: frequency bumps must not add probe lines",
+        life.name()
+    );
 }
 
 /// Random op stream checked against `std::collections::HashMap`.

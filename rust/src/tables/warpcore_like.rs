@@ -15,25 +15,38 @@
 //! reports it 24%/2%/11% faster than DoubleHT at 90% load for
 //! insert/query/delete, which is the overhead budget of real concurrency.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::common::{bucket_count_for, Pairs};
+use super::lifecycle::LifecycleSlots;
 use super::{ConcurrentMap, TableConfig, UpsertOp, UpsertResult};
+use crate::gpusim::mem::is_user_key;
 use crate::hash::{hash1, stride};
 
 pub struct WarpcoreLike {
     pairs: Pairs,
     max_probes: usize,
     live: AtomicU64,
+    /// TTL + frequency codes (standalone side array).
+    life: Option<LifecycleSlots>,
+    sweep_cursor: AtomicUsize,
+    swept: AtomicU64,
 }
 
 impl WarpcoreLike {
     pub fn new(cfg: TableConfig) -> Self {
         let nb = bucket_count_for(cfg.slots, cfg.bucket_size);
+        let life = cfg
+            .lifecycle
+            .clone()
+            .map(|lc| LifecycleSlots::standalone(lc, nb * cfg.bucket_size));
         Self {
             pairs: Pairs::new(nb, cfg.bucket_size, cfg.tile_size),
             max_probes: cfg.max_probes.min(nb),
             live: AtomicU64::new(0),
+            life,
+            sweep_cursor: AtomicUsize::new(0),
+            swept: AtomicU64::new(0),
         }
     }
 
@@ -45,21 +58,50 @@ impl WarpcoreLike {
         (0..self.max_probes as u64)
             .map(move |i| (h.wrapping_add(i.wrapping_mul(s)) & mask) as usize)
     }
-}
 
-impl ConcurrentMap for WarpcoreLike {
-    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+    #[inline(always)]
+    fn lifeslot(&self, b: usize, slot: usize) -> usize {
+        b * self.pairs.bucket_size + slot
+    }
+
+    #[inline]
+    fn is_expired(&self, b: usize, slot: usize) -> bool {
+        self.life
+            .as_ref()
+            .is_some_and(|l| l.is_expired_at(self.lifeslot(b, slot)))
+    }
+
+    #[inline]
+    fn stamp_fresh(&self, b: usize, slot: usize, ttl: Option<u64>) {
+        if let Some(l) = &self.life {
+            l.fresh(self.lifeslot(b, slot), ttl);
+        }
+    }
+
+    /// Upsert body shared by `upsert` / `upsert_ttl`.
+    fn upsert_with_ttl(&self, key: u64, val: u64, op: &UpsertOp, ttl: Option<u64>) -> UpsertResult {
         // Relaxed loads throughout — BSP assumption.
         for b in self.bucket_seq(key) {
             loop {
                 let r = self.pairs.scan_bucket(b, key, false);
                 if let Some((slot, old_v)) = r.found {
+                    if self.is_expired(b, slot) {
+                        // Reclaim the corpse in place: fresh insert.
+                        self.pairs.value_store(b, slot, val);
+                        self.stamp_fresh(b, slot, ttl);
+                        return UpsertResult::Inserted;
+                    }
                     if let Some(newv) = op.merge(old_v, val) {
                         if newv != old_v {
                             self.pairs.value_store(b, slot, newv);
                         }
                     } else {
                         self.pairs.value_fetch_add(b, slot, val);
+                    }
+                    if ttl.is_some() {
+                        if let Some(l) = &self.life {
+                            l.refresh(self.lifeslot(b, slot), ttl);
+                        }
                     }
                     return UpsertResult::Updated;
                 }
@@ -71,6 +113,7 @@ impl ConcurrentMap for WarpcoreLike {
                     let kidx = self.pairs.kidx(b, slot);
                     self.pairs.mem().store_relaxed(kidx, key);
                     self.pairs.mem().store_relaxed(kidx + 1, val);
+                    self.stamp_fresh(b, slot, ttl);
                     self.live.fetch_add(1, Ordering::Relaxed);
                     return UpsertResult::Inserted;
                 }
@@ -79,11 +122,53 @@ impl ConcurrentMap for WarpcoreLike {
         UpsertResult::Full
     }
 
+    /// Sweep reclaim: tombstone iff still present and still expired.
+    /// Tombstoned slots are NOT reusable (Warpcore fidelity) — sweeping
+    /// reclaims the key for readers but not the slot, exactly the aged
+    /// capacity loss the paper shows for this baseline.
+    fn erase_expired(&self, key: u64) -> bool {
+        for b in self.bucket_seq(key) {
+            let r = self.pairs.scan_bucket(b, key, false);
+            if let Some((slot, _)) = r.found {
+                if !self.is_expired(b, slot) {
+                    return false;
+                }
+                if let Some(l) = &self.life {
+                    l.clear(self.lifeslot(b, slot));
+                }
+                self.pairs.kill(b, slot);
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                return true;
+            }
+            if r.has_empty() {
+                return false;
+            }
+        }
+        false
+    }
+}
+
+impl ConcurrentMap for WarpcoreLike {
+    fn upsert(&self, key: u64, val: u64, op: &UpsertOp) -> UpsertResult {
+        self.upsert_with_ttl(key, val, op, None)
+    }
+
+    fn upsert_ttl(&self, key: u64, val: u64, ttl_ticks: u64, op: &UpsertOp) -> UpsertResult {
+        if self.life.is_none() {
+            return self.upsert(key, val, op);
+        }
+        self.upsert_with_ttl(key, val, op, Some(ttl_ticks))
+    }
+
     fn query(&self, key: u64) -> Option<u64> {
         for b in self.bucket_seq(key) {
             let r = self.pairs.scan_bucket(b, key, false);
-            if let Some((_, v)) = r.found {
-                return Some(v);
+            if let Some((slot, v)) = r.found {
+                let live = match &self.life {
+                    Some(l) => l.on_hit(self.lifeslot(b, slot)),
+                    None => true,
+                };
+                return live.then_some(v);
             }
             if r.has_empty() {
                 return None;
@@ -96,9 +181,13 @@ impl ConcurrentMap for WarpcoreLike {
         for b in self.bucket_seq(key) {
             let r = self.pairs.scan_bucket(b, key, false);
             if let Some((slot, _)) = r.found {
+                let was_live = !self.is_expired(b, slot);
+                if let Some(l) = &self.life {
+                    l.clear(self.lifeslot(b, slot));
+                }
                 self.pairs.kill(b, slot);
                 self.live.fetch_sub(1, Ordering::Relaxed);
-                return true;
+                return was_live;
             }
             if r.has_empty() {
                 return false;
@@ -124,7 +213,7 @@ impl ConcurrentMap for WarpcoreLike {
     }
 
     fn device_bytes(&self) -> usize {
-        self.pairs.device_bytes()
+        self.pairs.device_bytes() + self.life.as_ref().map_or(0, |l| l.device_bytes())
     }
 
     fn name(&self) -> &'static str {
@@ -135,12 +224,90 @@ impl ConcurrentMap for WarpcoreLike {
         true
     }
 
+    fn fetch_add_in_place(&self, key: u64, v: u64) -> bool {
+        for b in self.bucket_seq(key) {
+            let r = self.pairs.scan_bucket(b, key, false);
+            if let Some((slot, _)) = r.found {
+                if self.is_expired(b, slot) {
+                    return false;
+                }
+                self.pairs.value_fetch_add(b, slot, v);
+                return true;
+            }
+            if r.has_empty() {
+                return false;
+            }
+        }
+        false
+    }
+
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
-        self.pairs.for_each_live(|k, v| f(k, v));
+        match &self.life {
+            Some(l) => {
+                let bsz = self.pairs.bucket_size;
+                self.pairs.for_each_live_indexed(|b, s, k, v| {
+                    if !l.is_expired_at(b * bsz + s) {
+                        f(k, v);
+                    }
+                });
+            }
+            None => self.pairs.for_each_live(|k, v| f(k, v)),
+        }
     }
 
     fn count_copies(&self, key: u64) -> usize {
         self.pairs.count_copies(key)
+    }
+
+    fn supports_ttl(&self) -> bool {
+        self.life.is_some()
+    }
+
+    fn sweep_expired(&self, max_buckets: usize) -> usize {
+        let Some(l) = &self.life else { return 0 };
+        let nb = self.pairs.num_buckets;
+        let n = max_buckets.min(nb);
+        if n == 0 {
+            return 0;
+        }
+        let start = self.sweep_cursor.fetch_add(n, Ordering::Relaxed) % nb;
+        let mut victims: Vec<u64> = Vec::new();
+        for off in 0..n {
+            let b = (start + off) % nb;
+            for s in 0..self.pairs.bucket_size {
+                let k = self.pairs.key_at(b, s, false);
+                if is_user_key(k) && l.is_expired_at(self.lifeslot(b, s)) {
+                    victims.push(k);
+                }
+            }
+        }
+        let mut reclaimed = 0;
+        for k in victims {
+            if self.erase_expired(k) {
+                reclaimed += 1;
+            }
+        }
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    fn swept_expired(&self) -> u64 {
+        self.swept.load(Ordering::Relaxed)
+    }
+
+    fn entry_frequency(&self, key: u64) -> Option<u8> {
+        let l = self.life.as_ref()?;
+        for b in self.bucket_seq(key) {
+            let r = self.pairs.scan_bucket(b, key, false);
+            if let Some((slot, _)) = r.found {
+                let ls = self.lifeslot(b, slot);
+                return (!l.is_expired_at(ls)).then(|| l.freq_at(ls));
+            }
+            if r.has_empty() {
+                return None;
+            }
+        }
+        None
     }
 }
 
@@ -153,6 +320,10 @@ mod tests {
         WarpcoreLike::new(TableConfig::new(slots))
     }
 
+    fn table_ttl(slots: usize, cfg: &crate::tables::LifecycleConfig) -> WarpcoreLike {
+        WarpcoreLike::new(TableConfig::new(slots).with_lifecycle(cfg.clone()))
+    }
+
     #[test]
     fn bsp_crud_works() {
         check_basic_crud(&table(2048));
@@ -161,6 +332,64 @@ mod tests {
     #[test]
     fn bsp_fill() {
         check_fill_to(&table(8192), 0.90);
+    }
+
+    #[test]
+    fn ttl_semantics() {
+        let cfg = crate::tables::LifecycleConfig::new(4);
+        check_ttl_semantics(&table_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn sweep_matches_expiry_oracle() {
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        check_sweep_vs_oracle(&table_ttl(2048, &cfg), &cfg);
+    }
+
+    #[test]
+    fn bulk_ttl_parity() {
+        let cfg = crate::tables::LifecycleConfig::new(2);
+        check_bulk_ttl_parity(&table_ttl(2048, &cfg), &table_ttl(2048, &cfg), &cfg, 0x79);
+    }
+
+    #[test]
+    fn sweep_does_not_recover_slots() {
+        // Warpcore fidelity: sweeping corpses tombstones them, and
+        // tombstones are never reused — aged capacity loss persists even
+        // with TTL-driven reclamation.
+        let cfg = crate::tables::LifecycleConfig::new(1);
+        let t = table_ttl(64, &cfg);
+        let ks = keys(40, 0x7A);
+        let mut inserted = 0usize;
+        for &k in &ks {
+            if t.upsert_ttl(k, 1, 2, &UpsertOp::InsertIfUnique) == UpsertResult::Inserted {
+                inserted += 1;
+            }
+        }
+        cfg.clock.advance(2);
+        for _ in 0..(2 * t.num_buckets()).div_ceil(8) {
+            t.sweep_expired(8);
+        }
+        assert_eq!(t.len(), 0);
+        let fresh = keys(40, 0x7B);
+        let mut reinserted = 0usize;
+        for &k in &fresh {
+            if t.upsert(k, 1, &UpsertOp::InsertIfUnique) == UpsertResult::Inserted {
+                reinserted += 1;
+            }
+        }
+        assert!(
+            reinserted < inserted,
+            "swept tombstones must not restore capacity ({reinserted} vs {inserted})"
+        );
+    }
+
+    #[test]
+    fn lifecycle_off_is_free() {
+        let t = table(1024);
+        assert!(!t.supports_ttl());
+        assert_eq!(t.sweep_expired(64), 0);
+        assert_eq!(t.entry_frequency(42), None);
     }
 
     #[test]
