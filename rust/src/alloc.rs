@@ -71,6 +71,7 @@ impl SlabAllocator {
     }
 
     /// Total arena bytes (for the space-efficiency benchmark).
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn arena_bytes(&self) -> usize {
         self.mem.bytes()
     }

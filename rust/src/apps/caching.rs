@@ -454,6 +454,7 @@ impl GpuCache {
 
     /// Residents currently served from the frozen read-optimized tier
     /// (0 for untiered caches).
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn frozen_resident(&self) -> usize {
         self.table.frozen_len()
     }

@@ -111,6 +111,7 @@ pub struct ContractionResult {
 
 impl ContractionResult {
     /// Materialize the output as (key, value) pairs.
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn to_pairs(&self) -> Vec<(u64, f64)> {
         let mut out = Vec::new();
         self.output

@@ -13,12 +13,6 @@ use crate::workloads::keys::distinct_keys;
 
 use super::{mops, report, BenchEnv};
 
-pub struct LoadCurves {
-    pub load_factors: Vec<f64>,
-    /// Per design: (name, insert Mops at each lf, query Mops, delete Mops).
-    pub curves: Vec<(String, Vec<f64>, Vec<f64>, Vec<f64>)>,
-}
-
 pub fn measure(
     kind: TableKind,
     slots: usize,

@@ -5,10 +5,12 @@
 //! architecture: the coordinator can offload BSP query batches to the
 //! compiled artifact with zero Python at serve time.
 
+use crate::coordinator::ReadOffload;
 use crate::gpusim::probes;
 use crate::prng::Xoshiro256pp;
-use crate::runtime::{artifacts_dir, BulkQueryEngine};
+use crate::runtime::{artifacts_dir, BulkQueryEngine, EngineOffload};
 use crate::tables::kernel_table::KernelTable;
+use crate::tables::{build_table, TableKind, UpsertOp};
 
 use super::{mops, report, BenchEnv};
 
@@ -68,6 +70,34 @@ pub fn run(env: &BenchEnv) -> String {
             }
         }
     });
+    // Coordinator-facing adapter: capture a quiesced *live* u64 table into
+    // the engine's compiled geometry and serve the same batches through the
+    // [`ReadOffload`] guard layer (shard identity + staleness + u32-domain
+    // checks) — the path the executor's `with_offload` hook routes read
+    // runs over.
+    let live = build_table(TableKind::Double, engine.nb * engine.b);
+    for &k in &present {
+        live.upsert(u64::from(k), u64::from(k ^ 0xABCD), &UpsertOp::InsertIfUnique);
+    }
+    let (off_mops, off_found, off_served) = match EngineOffload::capture(engine, live.as_ref()) {
+        Some(off) => {
+            let mut found = 0u64;
+            let mut served = true;
+            let m = mops(total, || {
+                for q in &batches {
+                    let q64: Vec<u64> = q.iter().map(|&k| u64::from(k)).collect();
+                    let mut got = Vec::with_capacity(q64.len());
+                    if off.query_run(live.as_ref(), &q64, &mut got) {
+                        found += got.iter().filter(|v| v.is_some()).count() as u64;
+                    } else {
+                        served = false;
+                    }
+                }
+            });
+            (m, found, served)
+        }
+        None => (f64::NAN, 0, false),
+    };
     probes::set_enabled(true);
     let rows = vec![
         vec![
@@ -80,16 +110,22 @@ pub fn run(env: &BenchEnv) -> String {
             report::fmt_f(ref_mops, 2),
             ref_found.to_string(),
         ],
+        vec![
+            "EngineOffload (capture + guards)".into(),
+            report::fmt_f(off_mops, 2),
+            if off_served { off_found.to_string() } else { "declined".into() },
+        ],
     ];
     let mut out = report::table(
         "AOT bulk-query path vs Rust reference",
         &["path", "Mops/s", "found"],
         &rows,
     );
+    let parity = pjrt_found == ref_found && (!off_served || off_found == ref_found);
     out.push_str(&format!(
-        "parity: {} (found counts {})\n",
-        if pjrt_found == ref_found { "EXACT" } else { "MISMATCH" },
-        if pjrt_found == ref_found { "agree" } else { "DIFFER" },
+        "parity: {} (PJRT {pjrt_found}, reference {ref_found}, offload {})\n",
+        if parity { "EXACT" } else { "MISMATCH" },
+        if off_served { off_found.to_string() } else { "declined".into() },
     ));
     out
 }

@@ -88,6 +88,7 @@ impl Batcher {
         }
     }
 
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }

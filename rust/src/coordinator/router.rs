@@ -444,19 +444,7 @@ impl ShardedTable {
         self.current_router().n_shards()
     }
 
-    /// Handle to shard `idx`. Indices are append-only across *splits*,
-    /// so an index from an earlier epoch usually still resolves — but a
-    /// sealed MERGE retires its child indices (the list shrinks for the
-    /// first time). Callers holding an index across an epoch boundary
-    /// (queued index-addressed jobs) must use
-    /// [`ShardedTable::try_shard_handle`] instead; this panics on a
-    /// retired index like any out-of-bounds access.
-    pub fn shard_handle(&self, idx: usize) -> Arc<dyn ConcurrentMap> {
-        self.try_shard_handle(idx)
-            .unwrap_or_else(|| panic!("shard index {idx} was retired by a merge"))
-    }
-
-    /// Bounds-checked [`ShardedTable::shard_handle`]: `None` when `idx`
+    /// Handle to shard `idx`, bounds-checked: `None` when `idx`
     /// is beyond the current topology's shard list — i.e. a child index
     /// that a sealed merge has retired since the caller obtained it.
     pub fn try_shard_handle(&self, idx: usize) -> Option<Arc<dyn ConcurrentMap>> {

@@ -78,12 +78,14 @@ pub fn op_cycles(cfg: WarpConfig, p: &OpProfile) -> f64 {
 }
 
 /// Cache lines per bucket for a geometry (16 bytes per KV pair).
+#[cfg(test)] // only probes_for (itself test-only) consumes this
 pub fn lines_per_bucket(bucket_size: u32) -> f64 {
     (bucket_size as usize * 16).div_ceil(super::mem::LINE_BYTES) as f64
 }
 
 /// Probes implied by a geometry when an op scans `buckets_scanned` whole
 /// buckets — what the sweep uses when no measured probe count exists.
+#[cfg(test)] // test-only surface (warpspeed-analyze WS3)
 pub fn probes_for(cfg: WarpConfig, buckets_scanned: f64) -> f64 {
     buckets_scanned * lines_per_bucket(cfg.bucket_size)
 }
@@ -101,6 +103,7 @@ pub fn device_mops(cfg: WarpConfig, p: &OpProfile) -> f64 {
 
 /// All (bucket, tile) combinations the paper's sweep explores: power-of-two
 /// tiles 1..32, buckets 1..64, tile <= bucket (a tile never spans buckets).
+#[cfg(test)] // test-only surface (warpspeed-analyze WS3)
 pub fn sweep_space() -> Vec<WarpConfig> {
     let mut v = Vec::new();
     for b in [1u32, 2, 4, 8, 16, 32, 64] {

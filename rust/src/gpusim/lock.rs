@@ -174,6 +174,7 @@ impl LockArray {
     }
 
     /// Is the bucket currently locked? (introspection for tests)
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn is_locked(&self, bucket: usize) -> bool {
         let word = self.word_of(bucket);
         let bit = 1u64 << (bucket % 64);
@@ -289,7 +290,12 @@ mod tests {
         let counter = Arc::new(std::sync::atomic::AtomicU64::new(0));
         let shared = Arc::new(std::cell::UnsafeCell::new(0u64));
         struct SendPtr(Arc<std::cell::UnsafeCell<u64>>);
+        // SAFETY: the UnsafeCell is only dereferenced while holding
+        // stripe 0 of the LockArray under test (and once after all
+        // threads are joined), so access is externally synchronized.
         unsafe impl Send for SendPtr {}
+        // SAFETY: as above — shared references never alias a mutation
+        // outside the lock's critical section.
         unsafe impl Sync for SendPtr {}
         let shared = Arc::new(SendPtr(shared));
         let mut hs = vec![];
@@ -300,7 +306,9 @@ mod tests {
             hs.push(thread::spawn(move || {
                 for _ in 0..2000 {
                     l.lock(0);
-                    // Non-atomic RMW protected by the lock.
+                    // SAFETY: non-atomic RMW on the UnsafeCell while
+                    // stripe 0 is held — the mutual exclusion being tested
+                    // is exactly what makes this race-free.
                     unsafe {
                         let p = shared.0.get();
                         *p += 1;
@@ -313,6 +321,8 @@ mod tests {
         for h in hs {
             h.join().unwrap();
         }
+        // SAFETY: all writer threads are joined; this is the only
+        // remaining access to the cell.
         assert_eq!(unsafe { *shared.0.get() }, 8000);
         assert_eq!(counter.load(Ordering::Relaxed), 8000);
     }

@@ -142,15 +142,6 @@ impl SimMem {
         self.slots[idx]
             .compare_exchange(current, new, Ordering::AcqRel, Ordering::Acquire)
     }
-
-    /// `atomicExch`.
-    #[inline(always)]
-    pub fn exchange(&self, idx: usize, new: u64) -> u64 {
-        self.touch(idx);
-        probes::count_atomic();
-        self.slots[idx].swap(new, Ordering::AcqRel)
-    }
-
     /// `atomicAdd` on a slot interpreted as u64.
     #[inline(always)]
     pub fn fetch_add(&self, idx: usize, v: u64) -> u64 {

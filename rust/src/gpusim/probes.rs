@@ -109,6 +109,7 @@ pub(crate) fn count_migrated_pair() {
 
 /// Reset the calling thread's migrated-pair counter, returning the
 /// previous value.
+#[cfg(test)] // test-only surface (warpspeed-analyze WS3)
 pub fn take_migrated_pairs() -> u64 {
     MIGRATED_PAIRS.with(|c| c.replace(0))
 }
@@ -122,6 +123,7 @@ pub(crate) fn count_grow_event() {
 
 /// Reset the calling thread's growth-event counter, returning the
 /// previous value.
+#[cfg(test)] // test-only surface (warpspeed-analyze WS3)
 pub fn take_grow_events() -> u64 {
     GROW_EVENTS.with(|c| c.replace(0))
 }
@@ -135,6 +137,7 @@ pub(crate) fn count_shrink_event() {
 
 /// Reset the calling thread's shrink-event counter, returning the
 /// previous value.
+#[cfg(test)] // test-only surface (warpspeed-analyze WS3)
 pub fn take_shrink_events() -> u64 {
     SHRINK_EVENTS.with(|c| c.replace(0))
 }

@@ -78,6 +78,7 @@ impl Fig41Schedule {
     }
 
     /// Events observed, for assertions.
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn events(&self) -> Vec<RaceEvent> {
         self.log.lock().unwrap().clone()
     }

@@ -132,6 +132,7 @@
 pub mod gpusim;
 pub mod hash;
 pub mod prng;
+#[cfg(test)] // property-test harness, consumed only by #[cfg(test)] mods
 pub mod quickprop;
 pub mod alloc;
 pub mod tables;

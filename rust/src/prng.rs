@@ -80,6 +80,7 @@ impl Xoshiro256pp {
     }
 
     /// Fisher–Yates shuffle.
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         if xs.is_empty() {
             return;

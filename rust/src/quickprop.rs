@@ -61,11 +61,6 @@ impl Gen {
         let n = self.usize_below(self.size + 1);
         (0..n).map(|_| f(self)).collect()
     }
-
-    /// One of the provided choices.
-    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
-        &xs[self.usize_below(xs.len())]
-    }
 }
 
 /// Outcome of a property over one case.

@@ -167,15 +167,6 @@ impl FrozenTable {
         }
         panic!("FrozenTable: CHD build failed {MAX_ATTEMPTS} seed rotations for {n} keys");
     }
-
-    /// Build from a quiesced table (the caller must exclude writers, as
-    /// for [`ConcurrentMap::for_each_entry`]).
-    pub fn freeze_from(src: &dyn ConcurrentMap) -> Self {
-        let mut entries = Vec::with_capacity(src.len());
-        src.for_each_entry(&mut |k, v| entries.push((k, v)));
-        Self::freeze(&entries)
-    }
-
     /// The key's bin under displacement pair `(d0, d1)` — the CHD
     /// `h1 + d0·h2 + d1` form (cf. the precomputed-map exemplar), with
     /// `f2` forced odd so `d0` multiplies by a unit mod 2^64.
@@ -544,6 +535,7 @@ impl TieredMap {
     }
 
     /// The mutable tier (for benches asserting promotion landed).
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn mutable_tier(&self) -> &Arc<dyn ConcurrentMap> {
         &self.mutable
     }

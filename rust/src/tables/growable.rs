@@ -229,6 +229,7 @@ impl GrowableMap {
     /// the ½× successor mid-drain (see [`GrowableMap::finalize`]'s abort
     /// arm): the table returned to its pre-shrink capacity instead of
     /// wedging upserts at `Full`.
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn shrink_aborts(&self) -> u64 {
         self.shrink_aborted.load(Ordering::Relaxed)
     }

@@ -323,6 +323,7 @@ impl MetaArray {
     }
 
     /// Raw tag read (tests).
+    #[cfg(test)] // test-only surface (warpspeed-analyze WS3)
     pub fn tag_at(&self, bucket: usize, slot: usize) -> u16 {
         let idx = self.word_idx(bucket, slot / LANES);
         lane_get(self.words[idx].load(Ordering::Acquire), slot % LANES)

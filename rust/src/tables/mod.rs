@@ -474,17 +474,6 @@ impl TableKind {
         TableKind::P2bhtStatic,
     ];
 
-    /// Stable designs (everything but cuckoo among the concurrent set).
-    pub const STABLE: [TableKind; 7] = [
-        TableKind::Double,
-        TableKind::DoubleMeta,
-        TableKind::Iceberg,
-        TableKind::IcebergMeta,
-        TableKind::P2,
-        TableKind::P2Meta,
-        TableKind::Chaining,
-    ];
-
     pub fn paper_name(&self) -> &'static str {
         match self {
             TableKind::Double => "DoubleHT",

@@ -241,6 +241,23 @@ impl ConcurrentMap for WarpcoreLike {
         false
     }
 
+    fn fetch_add_f64_in_place(&self, key: u64, v: f64) -> bool {
+        for b in self.bucket_seq(key) {
+            let r = self.pairs.scan_bucket(b, key, false);
+            if let Some((slot, _)) = r.found {
+                if self.is_expired(b, slot) {
+                    return false;
+                }
+                self.pairs.value_fetch_add_f64(b, slot, v);
+                return true;
+            }
+            if r.has_empty() {
+                return false;
+            }
+        }
+        false
+    }
+
     fn for_each_entry(&self, f: &mut dyn FnMut(u64, u64)) {
         match &self.life {
             Some(l) => {

@@ -1,0 +1,215 @@
+"""warpspeed-analyze driver: loads the tree, runs every pass, applies the
+suppression baseline, prints human + JSON findings.
+
+Usage (via scripts/analyze/run.sh):
+    run.sh                  analyze the repo tree; exit 1 on unsuppressed findings
+    run.sh --json PATH      additionally write findings as JSON to PATH
+    run.sh --self-test      run every pass against its known-bad/known-good
+                            fixtures and assert each fires exactly as specified
+    run.sh --file F.rs ...  analyze specific file(s) only (per-file passes;
+                            tree-level cross-checks are skipped)
+    run.sh --no-baseline    ignore baseline.txt (show every finding)
+    run.sh --list-passes    print the pass table and exit
+
+Suppression baseline (baseline.txt): one finding family per line,
+    CODE path ctx — justification
+e.g.
+    WS1 rust/src/gpusim/lock.rs fn=lock_two — the ordered-acquisition primitive itself
+A baseline entry without a justification (no ` — ...` part) is an error:
+documented exceptions require the documentation. Entries that no longer
+match any finding are reported as stale (warning, not failure) so the
+baseline shrinks as code improves.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(os.path.dirname(HERE))
+sys.path.insert(0, HERE)
+
+from passes import ALL_PASSES, Finding, Tree  # noqa: E402
+
+BASELINE = os.path.join(HERE, "baseline.txt")
+FIXTURES = os.path.join(HERE, "fixtures")
+
+
+def rust_files(root):
+    out = []
+    skip_dirs = {".git", "target", "artifacts"}
+    fixtures_dir = os.path.relpath(FIXTURES, root)
+    for dirpath, dirnames, filenames in os.walk(root):
+        rel_dir = os.path.relpath(dirpath, root)
+        dirnames[:] = [
+            d
+            for d in dirnames
+            if d not in skip_dirs
+            and os.path.normpath(os.path.join(rel_dir, d)) != os.path.normpath(fixtures_dir)
+        ]
+        for f in filenames:
+            if f.endswith(".rs"):
+                out.append(os.path.normpath(os.path.join(rel_dir, f)))
+    return sorted(out)
+
+
+def load_baseline(path):
+    """Returns ({(code, path, ctx): justification}, errors)."""
+    entries, errors = {}, []
+    if not os.path.isfile(path):
+        return entries, errors
+    with open(path, encoding="utf-8") as fh:
+        for ln, raw in enumerate(fh, 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if " — " not in line:
+                errors.append(
+                    f"baseline.txt:{ln}: entry has no ` — justification` part "
+                    f"(documented exceptions require the documentation)"
+                )
+                continue
+            head, just = line.split(" — ", 1)
+            parts = head.split(None, 2)
+            if len(parts) != 3 or not just.strip():
+                errors.append(f"baseline.txt:{ln}: expected `CODE path ctx — justification`")
+                continue
+            entries[tuple(parts)] = just.strip()
+    return entries, errors
+
+
+def run_tree(files, root, passes):
+    tree = Tree(root, files)
+    findings = []
+    for p in passes:
+        findings.extend(p.run(tree))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+def print_findings(findings, suppressed, stale, as_json=None):
+    for f in findings:
+        print(f"{f.path}:{f.line}: [{f.code}] {f.msg}  ({f.ctx})")
+    for key in stale:
+        print(f"warning: stale baseline entry (no matching finding): {' '.join(key)}")
+    n_files = None
+    summary = (
+        f"warpspeed-analyze: {len(findings)} finding(s), "
+        f"{len(suppressed)} suppressed by baseline, {len(stale)} stale baseline entr(ies)"
+    )
+    print(summary)
+    if as_json:
+        payload = {
+            "findings": [f._asdict() for f in findings],
+            "suppressed": [
+                {**f._asdict(), "justification": j} for f, j in suppressed
+            ],
+            "stale_baseline": [" ".join(k) for k in stale],
+        }
+        with open(as_json, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"json findings written to {as_json}")
+    return n_files
+
+
+def self_test():
+    """Each pass must fire on its known-bad fixture (and only that pass
+    must fire there), and stay silent on its known-good fixture."""
+    failures = []
+    for p in ALL_PASSES:
+        for flavor in ("bad", "good"):
+            fname = f"{p.code.lower()}_{flavor}.rs"
+            fpath = os.path.join(FIXTURES, fname)
+            if not os.path.isfile(fpath):
+                failures.append(f"{p.code}: missing fixture {fname}")
+                continue
+            rel = os.path.relpath(fpath, ROOT)
+            tree = Tree(ROOT, [rel], fixture_mode=True)
+            # Run ALL passes over the fixture: the bad fixture must trip
+            # exactly its own pass, the good one must be clean everywhere.
+            found = []
+            for q in ALL_PASSES:
+                found.extend(q.run(tree))
+            codes = sorted({f.code for f in found})
+            if flavor == "bad":
+                if p.code not in codes:
+                    failures.append(
+                        f"{p.code}: bad fixture {fname} did not trip its pass (tripped: {codes or 'nothing'})"
+                    )
+                elif codes != [p.code]:
+                    failures.append(
+                        f"{p.code}: bad fixture {fname} tripped foreign passes {codes}"
+                    )
+                else:
+                    print(f"ok  {p.code} bad  fixture trips exactly {p.code} ({len(found)} finding(s))")
+            else:
+                if found:
+                    failures.append(
+                        f"{p.code}: good fixture {fname} is not clean: "
+                        + "; ".join(f"[{f.code}] {f.msg}" for f in found[:3])
+                    )
+                else:
+                    print(f"ok  {p.code} good fixture clean")
+    if failures:
+        for f in failures:
+            print(f"SELF-TEST FAIL {f}")
+        return 1
+    print(f"self-test passed: {len(ALL_PASSES)} passes x (bad fires exactly, good clean)")
+    return 0
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(prog="warpspeed-analyze")
+    ap.add_argument("--json", metavar="PATH", help="write JSON findings to PATH")
+    ap.add_argument("--self-test", action="store_true")
+    ap.add_argument("--list-passes", action="store_true")
+    ap.add_argument("--no-baseline", action="store_true")
+    ap.add_argument("--file", action="append", default=[], help="analyze only this file")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for p in ALL_PASSES:
+            print(f"{p.code}  {p.name}: {p.describe}")
+        return 0
+
+    if args.self_test:
+        return self_test()
+
+    if args.file:
+        files = [os.path.relpath(os.path.abspath(f), ROOT) for f in args.file]
+        tree = Tree(ROOT, files, fixture_mode=True)
+        findings = []
+        for p in ALL_PASSES:
+            findings.extend(p.run(tree))
+        findings.sort(key=lambda f: (f.path, f.line, f.code))
+        print_findings(findings, [], [], as_json=args.json)
+        return 1 if findings else 0
+
+    files = rust_files(ROOT)
+    findings = run_tree(files, ROOT, ALL_PASSES)
+
+    baseline, berrors = ({}, []) if args.no_baseline else load_baseline(BASELINE)
+    if berrors:
+        for e in berrors:
+            print(f"FAIL {e}")
+        return 1
+    kept, suppressed = [], []
+    matched = set()
+    for f in findings:
+        key = (f.code, f.path, f.ctx)
+        if key in baseline:
+            suppressed.append((f, baseline[key]))
+            matched.add(key)
+        else:
+            kept.append(f)
+    stale = [k for k in baseline if k not in matched]
+
+    print_findings(kept, suppressed, stale, as_json=args.json)
+    if not kept:
+        print(f"warpspeed-analyze clean: {len(files)} .rs files, {len(ALL_PASSES)} passes")
+    return 1 if kept else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,8 @@
+//! WS0 known-bad: unclosed delimiter (truncated-file class).
+//! The `{` below is never closed; the string and comment braces `{` "}"
+//! must NOT confuse the balance check.
+
+struct Truncated {
+    a: u64,
+    // a comment with a stray } that the lexer must ignore
+    b: &'static str, // initialized from "}" at runtime

@@ -1,0 +1,15 @@
+//! WS0 known-good: balanced delimiters, with every confusable form the
+//! lexer must see through — strings, raw strings, chars, comments.
+
+struct Balanced {
+    a: u64,
+    b: &'static str,
+}
+
+fn build() -> Balanced {
+    let _raw = r#"unbalanced in text only: { ( ["#;
+    let _s = "also } ) ] only in text";
+    let _c = '{';
+    /* block comment with { ( [ and even /* nested */ still fine */
+    Balanced { a: 1, b: "x" }
+}

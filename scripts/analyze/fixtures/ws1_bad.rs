@@ -1,0 +1,22 @@
+//! WS1 known-bad: raw multi-stripe acquisition and stripe re-acquire.
+
+struct Shard {
+    locks: LockArray,
+}
+
+impl Shard {
+    fn migrate(&self, a: usize, b: usize) {
+        self.locks.lock(a);
+        // BAD: second raw acquisition while `a` is held — must use lock_two.
+        self.locks.lock(b);
+        self.locks.unlock(b);
+        self.locks.unlock(a);
+    }
+
+    fn double_acquire(&self, a: usize) {
+        self.locks.lock(a);
+        // BAD: re-acquiring a held stripe self-deadlocks the spin lock.
+        self.locks.lock(a);
+        self.locks.unlock(a);
+    }
+}

@@ -1,0 +1,20 @@
+//! WS1 known-good: single-stripe pairing, sorted primitives for pairs,
+//! and a std-Mutex `.lock()` (no stripe argument) that is out of scope.
+
+struct Shard {
+    locks: LockArray,
+    log: std::sync::Mutex<Vec<u64>>,
+}
+
+impl Shard {
+    fn touch(&self, a: usize) {
+        self.locks.lock(a);
+        self.log.lock().unwrap().push(a as u64);
+        self.locks.unlock(a);
+    }
+
+    fn move_pair(&self, a: usize, b: usize) {
+        self.locks.lock_two(a, b);
+        self.locks.unlock_two(a, b);
+    }
+}

@@ -1,0 +1,16 @@
+//! WS2 known-bad: unguarded recording toggle, and a native bulk path
+//! that walks groups without routing outputs through SlotWriter.
+
+fn bench_pass() {
+    // BAD: toggles the process-global flag without measurement_section().
+    probes::set_enabled(false);
+    probes::set_enabled(true);
+}
+
+fn query_bulk(keys: &[u64], out: &mut Vec<u64>) {
+    // BAD: group walk writes outputs ad hoc — a skipped slot silently
+    // keeps its prefill value (the sentinel bug class).
+    for_each_bucket_group(keys, |g| {
+        out.push(g);
+    });
+}

@@ -1,0 +1,16 @@
+//! WS2 known-good: toggle under the section guard; bulk path routes
+//! every output through SlotWriter and reaches finish().
+
+fn measure_pass() {
+    let _guard = probes::measurement_section();
+    probes::set_enabled(false);
+    probes::set_enabled(true);
+}
+
+fn query_bulk(keys: &[u64], out: &mut [u64]) {
+    let mut w = SlotWriter::new(out);
+    for_each_bucket_group(keys, |i, g| {
+        w.set(i, g);
+    });
+    w.finish();
+}

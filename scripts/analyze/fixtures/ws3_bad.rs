@@ -1,0 +1,24 @@
+//! WS3 known-bad: dead pub surface and test-only pub surface.
+
+/// BAD: never referenced anywhere — dead surface.
+pub fn orphan_helper() -> u64 {
+    41
+}
+
+/// BAD: never referenced anywhere — dead surface.
+pub struct OrphanConfig {
+    cases: u64,
+}
+
+/// BAD: referenced only from the test module below.
+pub fn test_only_probe() -> u64 {
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn uses_probe() {
+        assert_eq!(super::test_only_probe(), 7);
+    }
+}

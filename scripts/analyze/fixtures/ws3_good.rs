@@ -1,0 +1,15 @@
+//! WS3 known-good: pub surface with a non-test consumer, and the
+//! `#[cfg(test)]` remedy applied to genuinely test-only surface.
+
+pub fn used_helper() -> u64 {
+    41
+}
+
+fn caller() -> u64 {
+    used_helper() + 1
+}
+
+#[cfg(test)] // the remedy the pass recommends for test-only surface
+pub fn gated_probe() -> u64 {
+    caller() - 35
+}

@@ -1,0 +1,6 @@
+//! WS4 known-bad: an `unsafe` block with no adjacent safety comment
+//! discharging its obligation.
+
+fn read_shared(p: *const u64) -> u64 {
+    unsafe { *p }
+}

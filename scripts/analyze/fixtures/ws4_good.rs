@@ -1,0 +1,8 @@
+//! WS4 known-good: every `unsafe` site discharges its obligation in an
+//! adjacent `// SAFETY:` comment.
+
+fn read_shared(p: *const u64) -> u64 {
+    // SAFETY: callers pass a pointer derived from a live &u64, valid and
+    // unaliased for the duration of this call.
+    unsafe { *p }
+}

@@ -1,0 +1,6 @@
+//! WS5 known-bad: a process-global atomic counter — concurrent measured
+//! tests race each other's counter windows through it.
+
+use std::sync::atomic::AtomicU64;
+
+static PROBE_COUNT: AtomicU64 = AtomicU64::new(0);

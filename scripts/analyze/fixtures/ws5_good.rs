@@ -1,0 +1,10 @@
+//! WS5 known-good: measurement counters are thread_local!; non-Atomic
+//! statics are out of scope.
+
+use std::sync::atomic::AtomicU64;
+
+thread_local! {
+    static PROBE_COUNT: AtomicU64 = AtomicU64::new(0);
+}
+
+static MODULE_NAME: &str = "probes";

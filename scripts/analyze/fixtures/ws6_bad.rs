@@ -1,0 +1,12 @@
+//! WS6 known-bad: partial override of an all-or-nothing cluster — the
+//! missing half silently falls back to the trait default.
+
+struct PartialGrow;
+
+impl ConcurrentMap for PartialGrow {
+    fn can_grow(&self) -> bool {
+        true
+    }
+    // BAD: advertises growth but never overrides request_grow, so the
+    // default (refuse) wins and growth can never actually happen.
+}

@@ -1,0 +1,13 @@
+//! WS6 known-good: the growth cluster overridden as a set.
+
+struct FullGrow;
+
+impl ConcurrentMap for FullGrow {
+    fn can_grow(&self) -> bool {
+        true
+    }
+
+    fn request_grow(&self) -> bool {
+        false
+    }
+}

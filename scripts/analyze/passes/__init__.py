@@ -1,0 +1,193 @@
+"""Pass registry + the shared `Tree` the passes analyze.
+
+A `Tree` wraps the file set once: sources, token streams, fn spans,
+`#[cfg(test)]` regions and the mod-declaration graph are lexed/parsed a
+single time and shared by every pass. `fixture_mode` (self-test and
+`--file` runs) drops the path-based scoping so a pass exercises its rule
+on a fixture that lives outside the directory the rule normally guards.
+
+Finding fields:
+    code  pass code (WS0..WS6)
+    path  repo-relative file
+    line  1-based line of the finding
+    ctx   stable suppression context (`fn=name`, `impl=Type`, ...) — the
+          baseline keys on (code, path, ctx), never on line numbers
+    msg   human diagnostic
+"""
+
+import os
+import sys
+from collections import namedtuple
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import rustlex  # noqa: E402
+
+Finding = namedtuple("Finding", ["code", "path", "line", "ctx", "msg"])
+
+
+class Tree:
+    def __init__(self, root, files, fixture_mode=False):
+        self.root = root
+        self.files = files
+        self.fixture_mode = fixture_mode
+        self._src = {}
+        self._lexed = {}
+        self._code = {}
+        self._fns = {}
+        self._test_regions = {}
+        self._mod_info = None
+
+    def src(self, path):
+        if path not in self._src:
+            with open(os.path.join(self.root, path), encoding="utf-8") as fh:
+                self._src[path] = fh.read()
+        return self._src[path]
+
+    def lexed(self, path):
+        if path not in self._lexed:
+            self._lexed[path] = rustlex.lex(self.src(path))
+        return self._lexed[path]
+
+    def code(self, path):
+        if path not in self._code:
+            self._code[path] = rustlex.code_tokens(self.lexed(path)[0])
+        return self._code[path]
+
+    def fns(self, path):
+        if path not in self._fns:
+            self._fns[path] = rustlex.fn_spans(self.code(path))
+        return self._fns[path]
+
+    def test_regions(self, path):
+        if path not in self._test_regions:
+            self._test_regions[path] = rustlex.cfg_test_regions(self.code(path))
+        return self._test_regions[path]
+
+    def in_test_region(self, path, idx):
+        return rustlex.in_regions(self.test_regions(path), idx)
+
+    # ---- mod-declaration graph (shared by WS0 and WS3) ----
+
+    ModInfo = namedtuple("ModInfo", ["declared", "cfg_test_files", "errors"])
+
+    def mod_info(self):
+        """Resolve every `mod x;` under rust/src.
+
+        declared: {relpath: True} for files reachable from a declaration;
+        cfg_test_files: files whose declaration is `#[cfg(test)]`-gated
+        (their entire contents are test code);
+        errors: (path, line, msg) for unresolvable declarations.
+        """
+        if self._mod_info is not None:
+            return self._mod_info
+        declared, cfg_test_files, errors = {}, set(), []
+        src_prefix = os.path.join("rust", "src")
+        for path in self.files:
+            if not path.startswith(src_prefix):
+                continue
+            code = self.code(path)
+            dirpath = os.path.dirname(os.path.join(self.root, path))
+            fname = os.path.basename(path)
+            base = (
+                dirpath
+                if fname in ("mod.rs", "lib.rs", "main.rs")
+                else os.path.join(dirpath, os.path.splitext(fname)[0])
+            )
+            n = len(code)
+            for i, t in enumerate(code):
+                # `#[path = "..."]` declarations (cfg-gated source swaps).
+                if (
+                    t.text == "#"
+                    and i + 5 < n
+                    and code[i + 1].text == "["
+                    and code[i + 2].text == "path"
+                    and code[i + 3].text == "="
+                    and code[i + 4].kind == "str"
+                ):
+                    target = code[i + 4].text.strip('"')
+                    cand = os.path.normpath(os.path.join(dirpath, target))
+                    if os.path.isfile(cand):
+                        declared[os.path.relpath(cand, self.root)] = True
+                if t.kind != "ident" or t.text != "mod":
+                    continue
+                if i + 2 >= n or code[i + 1].kind != "ident" or code[i + 2].text != ";":
+                    continue
+                # Reject `mod` used as a path segment or inline body.
+                prev = code[i - 1].text if i > 0 else ""
+                if prev in (":", "."):
+                    continue
+                name = code[i + 1].text
+                cands = [
+                    os.path.join(base, name + ".rs"),
+                    os.path.join(base, name, "mod.rs"),
+                ]
+                hits = [c for c in cands if os.path.isfile(c)]
+                if not hits:
+                    errors.append((path, t.line, f"`mod {name};` resolves to no file"))
+                    continue
+                gated = self._decl_is_cfg_test(code, i)
+                for h in hits:
+                    rel = os.path.relpath(h, self.root)
+                    declared[rel] = True
+                    if gated:
+                        cfg_test_files.add(rel)
+        self._mod_info = Tree.ModInfo(declared, cfg_test_files, errors)
+        return self._mod_info
+
+    @staticmethod
+    def _decl_is_cfg_test(code, mod_idx):
+        """Walk attribute groups immediately preceding a `mod` declaration
+        (skipping visibility) looking for `#[cfg(test)]`."""
+        i = mod_idx - 1
+        # skip `pub`, `pub(crate)`, `pub(in ...)`
+        while i >= 0 and (
+            code[i].text in ("pub", "crate", "in", "super", "self")
+            or code[i].text in ("(", ")")
+        ):
+            i -= 1
+        # walk zero or more `#[...]` groups backwards
+        while i >= 0 and code[i].text == "]":
+            depth = 0
+            j = i
+            while j >= 0:
+                if code[j].text == "]":
+                    depth += 1
+                elif code[j].text == "[":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j -= 1
+            if j <= 0 or code[j - 1].text != "#":
+                return False
+            attr = [c.text for c in code[j : i + 1]]
+            if "cfg" in attr and "test" in attr:
+                return True
+            i = j - 2
+        return False
+
+    def is_test_file(self, path):
+        """Whole-file test code: integration tests, or a module whose
+        `mod` declaration is #[cfg(test)]-gated (e.g. test_support)."""
+        if path.startswith(os.path.join("rust", "tests")):
+            return True
+        if self.fixture_mode:
+            return False
+        return path in self.mod_info().cfg_test_files
+
+
+def _load_passes():
+    from . import ws0_sweep, ws1_locks, ws2_guards, ws3_dead, ws4_unsafe, ws5_counters, ws6_traits
+
+    return [
+        ws0_sweep.PASS,
+        ws1_locks.PASS,
+        ws2_guards.PASS,
+        ws3_dead.PASS,
+        ws4_unsafe.PASS,
+        ws5_counters.PASS,
+        ws6_traits.PASS,
+    ]
+
+
+ALL_PASSES = _load_passes()

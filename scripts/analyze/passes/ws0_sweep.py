@@ -1,0 +1,139 @@
+"""WS0 — the original static sweep as pass zero.
+
+1. Comment/string/raw-string-aware delimiter balance ({} () []) per .rs
+   file (the truncated-file / mismatched-brace class a compiler catches).
+2. `mod x;` <-> file cross-check, both directions (every declaration
+   resolves; every non-root file under rust/src is declared).
+3. [[bench]]/[[bin]]/[[example]] <-> file cross-check in rust/Cargo.toml,
+   both directions.
+
+Checks 2 and 3 are tree-level and skipped in fixture mode; check 1 is the
+per-file rule the fixtures exercise.
+"""
+
+import os
+import re
+
+from . import Finding
+
+CODE = "WS0"
+PAIRS = {"}": "{", ")": "(", "]": "["}
+
+
+def _check_balance(tree, path, out):
+    tokens, lex_errors = tree.lexed(path)
+    for e in lex_errors:
+        out.append(Finding(CODE, path, e.line, f"file={os.path.basename(path)}", e.msg))
+    stack = []
+    for t in tokens:
+        if t.kind != "op":
+            continue
+        if t.text in "{([":
+            stack.append(t)
+        elif t.text in "})]":
+            if not stack or stack[-1].text != PAIRS[t.text]:
+                out.append(
+                    Finding(
+                        CODE,
+                        path,
+                        t.line,
+                        f"file={os.path.basename(path)}",
+                        f"unmatched `{t.text}`",
+                    )
+                )
+                return
+            stack.pop()
+    for t in stack:
+        out.append(
+            Finding(CODE, path, t.line, f"file={os.path.basename(path)}", f"unclosed `{t.text}`")
+        )
+
+
+def _check_mod_tree(tree, out):
+    declared, _, errors = tree.mod_info()
+    for path, line, msg in errors:
+        out.append(Finding(CODE, path, line, f"file={os.path.basename(path)}", msg))
+    src_prefix = os.path.join("rust", "src")
+    for path in tree.files:
+        if not path.startswith(src_prefix):
+            continue
+        fname = os.path.basename(path)
+        if fname in ("lib.rs", "main.rs"):
+            continue
+        if path not in declared:
+            out.append(
+                Finding(
+                    CODE,
+                    path,
+                    1,
+                    f"file={fname}",
+                    "source file not declared by any `mod`",
+                )
+            )
+
+
+def _check_cargo_targets(tree, out):
+    manifest = os.path.join(tree.root, "rust", "Cargo.toml")
+    if not os.path.isfile(manifest):
+        return
+    with open(manifest, encoding="utf-8") as fh:
+        toml = fh.read()
+    blocks = re.findall(r"\[\[(bench|bin|example)\]\]\s*((?:(?!\[)[^\n]*\n)*)", toml)
+    declared_benches = set()
+    for kind, body in blocks:
+        name = re.search(r'name\s*=\s*"([^"]+)"', body)
+        path = re.search(r'path\s*=\s*"([^"]+)"', body)
+        if not name:
+            out.append(
+                Finding(CODE, "rust/Cargo.toml", 1, f"target={kind}", f"[[{kind}]] block without a name")
+            )
+            continue
+        if kind == "bench":
+            declared_benches.add(name.group(1))
+            src = path.group(1) if path else f"benches/{name.group(1)}.rs"
+        elif path:
+            src = path.group(1)
+        else:
+            continue  # default-path bins are found by cargo's own rules
+        full = os.path.normpath(os.path.join(tree.root, "rust", src))
+        if not os.path.isfile(full):
+            out.append(
+                Finding(
+                    CODE,
+                    "rust/Cargo.toml",
+                    1,
+                    f"target={name.group(1)}",
+                    f"[[{kind}]] `{name.group(1)}` names missing file {src}",
+                )
+            )
+    bench_dir = os.path.join(tree.root, "rust", "benches")
+    if os.path.isdir(bench_dir):
+        for f in sorted(os.listdir(bench_dir)):
+            if f.endswith(".rs") and os.path.splitext(f)[0] not in declared_benches:
+                out.append(
+                    Finding(
+                        CODE,
+                        f"rust/benches/{f}",
+                        1,
+                        f"file={f}",
+                        "bench file has no [[bench]] entry in rust/Cargo.toml",
+                    )
+                )
+
+
+class Ws0Pass:
+    code = CODE
+    name = "sweep"
+    describe = "delimiter balance per file + mod<->file and cargo-target<->file cross-checks"
+
+    def run(self, tree):
+        out = []
+        for path in tree.files:
+            _check_balance(tree, path, out)
+        if not tree.fixture_mode:
+            _check_mod_tree(tree, out)
+            _check_cargo_targets(tree, out)
+        return out
+
+
+PASS = Ws0Pass()

@@ -1,0 +1,191 @@
+"""WS1 — lock discipline on `LockArray` stripes.
+
+The repo's locks are spinning `fetch_or` bits: re-acquiring a held stripe
+self-deadlocks, and acquiring a second stripe through raw `.lock()` while
+one is held deadlocks against any thread doing the same in the opposite
+order. The documented discipline (gpusim/lock.rs) is: multi-stripe
+acquisition goes through `lock_two`/`lock_three`, which sort and dedup
+their indices — callers never sequence raw `.lock()` calls.
+
+Per function body (closures included, nested `fn`s analyzed separately),
+a linear held-set scan over `.lock/.lock_two/.lock_three/.unlock/...`
+calls on the same receiver enforces:
+
+  * no acquisition of a (receiver, args) pair already held (re-acquire);
+  * no acquisition on a receiver that already holds a different stripe
+    (multi-stripe must use the sorted primitives);
+  * every acquisition has a lexically matching release in the same
+    function, and vice versa (the migration/sealing code keeps this
+    invariant everywhere today; a helper that legitimately splits the
+    pair belongs in the baseline with its justification).
+
+`try_lock` is excluded (conditional acquisition). `#[cfg(test)]` regions
+are skipped: tests deliberately hold multiple stripes to probe the lock
+array itself. Limitations (documented, fixture-pinned): the scan is
+linear, so a branch that releases on one path only is seen release-once.
+"""
+
+from . import Finding
+import rustlex
+
+CODE = "WS1"
+ACQ = {"lock", "lock_two", "lock_three"}
+REL = {"unlock", "unlock_two", "unlock_three"}
+# Identifiers that terminate the backward receiver walk: they belong to
+# the surrounding statement, not the method-call chain.
+_STMT_KWS = {
+    "for", "in", "if", "else", "while", "loop", "match", "return", "let",
+    "break", "continue", "move", "await", "mut", "ref",
+}
+
+
+def _receiver(code, dot_idx):
+    """Longest `ident(.ident|[..])*` chain ending just before `code[dot_idx]`
+    (the `.` of the method call)."""
+    parts = []
+    i = dot_idx - 1
+    while i >= 0:
+        t = code[i]
+        if t.kind in ("ident", "num"):
+            if t.text in _STMT_KWS:
+                break
+            parts.append(t.text)
+            i -= 1
+        elif t.text == "]":
+            depth = 0
+            while i >= 0:
+                if code[i].text == "]":
+                    depth += 1
+                elif code[i].text == "[":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                parts.append(code[i].text)
+                i -= 1
+            parts.append("[")
+            i -= 1
+        elif t.text == ".":
+            parts.append(".")
+            i -= 1
+        else:
+            break
+    return "".join(reversed(parts))
+
+
+def _args_text(code, open_paren):
+    depth = 0
+    parts = []
+    for i in range(open_paren, len(code)):
+        t = code[i]
+        if t.text == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif t.text == ")":
+            depth -= 1
+            if depth == 0:
+                return "".join(parts), i
+        parts.append(t.text)
+    return "".join(parts), len(code)
+
+
+def _scan_fn(path, code, span, spans, out):
+    idxs = rustlex.direct_indices(span, spans)
+    held = {}  # (recv, args) -> (kind, line)
+    ctx = f"fn={span.name}"
+    pos = 0
+    while pos < len(idxs):
+        i = idxs[pos]
+        t = code[i]
+        if (
+            t.kind == "ident"
+            and t.text in ACQ | REL
+            and i > 0
+            and code[i - 1].text == "."
+            and i + 1 < len(code)
+            and code[i + 1].text == "("
+        ):
+            recv = _receiver(code, i - 1)
+            args, _ = _args_text(code, i + 1)
+            if not args.strip():
+                # `.lock()` with no stripe index is a std Mutex/stdin lock,
+                # not a LockArray acquisition (those always take indices).
+                pos += 1
+                continue
+            key = (recv, args)
+            if t.text in ACQ:
+                if key in held:
+                    out.append(
+                        Finding(
+                            CODE,
+                            path,
+                            t.line,
+                            ctx,
+                            f"`{recv}.{t.text}({args})` re-acquires stripe(s) already held "
+                            f"since line {held[key][1]} — the spinning lock self-deadlocks",
+                        )
+                    )
+                elif any(k[0] == recv for k in held):
+                    prev = next(k for k in held if k[0] == recv)
+                    out.append(
+                        Finding(
+                            CODE,
+                            path,
+                            t.line,
+                            ctx,
+                            f"`{recv}.{t.text}({args})` acquires while `{prev[1]}` is held on the "
+                            f"same LockArray — multi-stripe acquisition must go through "
+                            f"lock_two/lock_three (sorted canonical order)",
+                        )
+                    )
+                held[key] = (t.text, t.line)
+            else:
+                if key in held:
+                    del held[key]
+                else:
+                    out.append(
+                        Finding(
+                            CODE,
+                            path,
+                            t.line,
+                            ctx,
+                            f"`{recv}.{t.text}({args})` releases with no lexically matching "
+                            f"acquisition in this function",
+                        )
+                    )
+        pos += 1
+    for (recv, args), (kind, line) in held.items():
+        out.append(
+            Finding(
+                CODE,
+                path,
+                line,
+                ctx,
+                f"`{recv}.{kind}({args})` has no lexically matching release in this function",
+            )
+        )
+
+
+class Ws1Pass:
+    code = CODE
+    name = "lock-discipline"
+    describe = "LockArray stripes: no re-acquire, multi-stripe via lock_two/three, lexical pairing"
+
+    def run(self, tree):
+        out = []
+        for path in tree.files:
+            if tree.is_test_file(path):
+                continue
+            code = tree.code(path)
+            if not any(t.kind == "ident" and t.text in ACQ | REL for t in code):
+                continue
+            spans = tree.fns(path)
+            regions = tree.test_regions(path)
+            for span in spans:
+                if rustlex.in_regions(regions, span.open):
+                    continue
+                _scan_fn(path, code, span, spans, out)
+        return out
+
+
+PASS = Ws1Pass()

@@ -1,0 +1,123 @@
+"""WS2 — measurement-guard and bulk-output discipline.
+
+(a) `probes::set_enabled(..)` toggles a process-global recording flag;
+    PR 2's counter races came from tests/benches toggling it outside the
+    `measurement_section()` mutex. Rule: every `set_enabled(` call must be
+    preceded, in the same function body, by a `measurement_section()`
+    acquisition. (A helper whose guard is held by its only caller belongs
+    in the baseline with that justification.)
+
+(b) Native bulk paths (a `*_bulk` fn that walks bucket/triple groups)
+    must route results through `SlotWriter` and reach `.finish()` — the
+    PR 3 prefill-sentinel class, where a skipped output slot silently
+    reads as a legitimate Full/miss. Rule: a `fn {upsert,query,erase}_bulk`
+    containing a group walk (`for_each_bucket_group`, `for_each_triple_group`,
+    `walk_group`) must mention `SlotWriter` and call `finish`; and any
+    function constructing `SlotWriter::new` must call `.finish(` at least
+    once.
+"""
+
+import os
+
+from . import Finding
+import rustlex
+
+CODE = "WS2"
+BULK_FNS = {"upsert_bulk", "query_bulk", "erase_bulk"}
+GROUP_WALKS = {"for_each_bucket_group", "for_each_triple_group", "walk_group"}
+
+
+def _is_call(code, i):
+    return (
+        code[i].kind == "ident"
+        and i + 1 < len(code)
+        and code[i + 1].text == "("
+        and (i == 0 or code[i - 1].text != "fn")
+    )
+
+
+def _check_guards(tree, path, out):
+    code = tree.code(path)
+    if not any(t.kind == "ident" and t.text == "set_enabled" for t in code):
+        return
+    spans = tree.fns(path)
+    for span in spans:
+        idxs = rustlex.direct_indices(span, spans)
+        guard_seen = False
+        for i in idxs:
+            t = code[i]
+            if t.kind != "ident":
+                continue
+            if t.text == "measurement_section" and _is_call(code, i):
+                guard_seen = True
+            elif t.text == "set_enabled" and _is_call(code, i) and not guard_seen:
+                out.append(
+                    Finding(
+                        CODE,
+                        path,
+                        t.line,
+                        f"fn={span.name}",
+                        "probes::set_enabled toggled without holding measurement_section() "
+                        "earlier in the same function — concurrent measure passes race the "
+                        "process-global recording flag",
+                    )
+                )
+
+
+def _check_bulk(tree, path, out):
+    code = tree.code(path)
+    spans = tree.fns(path)
+    for span in spans:
+        body = code[span.open : span.close + 1]
+        idents = {t.text for t in body if t.kind == "ident"}
+        has_writer_new = any(
+            t.kind == "ident"
+            and t.text == "SlotWriter"
+            and i + 3 < len(body)
+            and body[i + 1].text == ":"
+            and body[i + 2].text == ":"
+            and body[i + 3].text == "new"
+            for i, t in enumerate(body)
+        )
+        if span.name in BULK_FNS and idents & GROUP_WALKS:
+            if "SlotWriter" not in idents or "finish" not in idents:
+                out.append(
+                    Finding(
+                        CODE,
+                        path,
+                        span.line,
+                        f"fn={span.name}",
+                        f"native bulk path `{span.name}` walks groups but does not route "
+                        "outputs through SlotWriter and reach finish() — a skipped slot "
+                        "silently reads as a legitimate result (prefill-sentinel bug class)",
+                    )
+                )
+        elif has_writer_new and "finish" not in idents:
+            out.append(
+                Finding(
+                    CODE,
+                    path,
+                    span.line,
+                    f"fn={span.name}",
+                    "SlotWriter constructed but finish() is never called — the "
+                    "unwritten-slot debug check can never fire",
+                )
+            )
+
+
+class Ws2Pass:
+    code = CODE
+    name = "guard-discipline"
+    describe = "set_enabled under measurement_section(); native bulk via SlotWriter + finish()"
+
+    def run(self, tree):
+        out = []
+        tables_prefix = os.path.join("rust", "src", "tables")
+        for path in tree.files:
+            _check_guards(tree, path, out)
+            if tree.fixture_mode or path.startswith(tables_prefix):
+                _check_bulk(tree, path, out)
+        return out
+
+
+PASS = Ws2Pass()

@@ -1,0 +1,146 @@
+"""WS3 — dead pub surface (the `Batch::read_only()` bug class).
+
+A `pub` item that nothing outside test code ever references is either
+dead weight or — worse — a feature that was meant to be consulted and
+silently is not (PR 2 found exactly that: a read-only dispatch hint,
+defined and tested, never wired into the executor). Without rustc,
+`#[warn(dead_code)]` never runs, and `pub` would silence it anyway.
+
+Rule: for every `pub` `fn`/`struct`/`enum`/`trait`/`const`/`static`/`type`
+declared in library code (rust/src, minus whole-file test modules,
+`#[cfg(test)]` regions, and items carrying their own `#[cfg(test)]`
+attribute), count identifier references across the whole
+tree (benches, examples, and integration tests included):
+
+  * zero references at all        -> dead pub item;
+  * only test-code references     -> test-only surface: scope it
+                                     `#[cfg(test)]`, wire it in, or
+                                     baseline it with a justification.
+
+Lexical limitation (documented): references are matched by identifier
+token, so an item sharing its name with anything referenced elsewhere
+(`new`, `len`, ...) is never flagged — collisions cause false negatives,
+not false positives.
+"""
+
+import os
+
+from . import Finding, Tree
+
+CODE = "WS3"
+ITEM_KWS = {"fn", "struct", "enum", "trait", "const", "static", "type"}
+MODIFIERS = {"unsafe", "async", "extern"}
+
+
+def _collect_decls(tree, path):
+    """(idx, line, kind, name) for every pub item declared in `path`."""
+    code = tree.code(path)
+    decls = []
+    n = len(code)
+    i = 0
+    while i < n:
+        t = code[i]
+        if t.kind != "ident" or t.text != "pub":
+            i += 1
+            continue
+        j = i + 1
+        if j < n and code[j].text == "(":  # pub(crate) / pub(in ...)
+            depth = 0
+            while j < n:
+                if code[j].text == "(":
+                    depth += 1
+                elif code[j].text == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            j += 1
+        # modifiers: `pub const fn` is a fn; `pub const NAME` is a const
+        kind = None
+        while j < n and code[j].kind in ("ident", "str"):
+            tx = code[j].text
+            if tx in MODIFIERS or code[j].kind == "str":
+                j += 1
+                continue
+            if tx == "const":
+                if j + 1 < n and code[j + 1].text == "fn":
+                    j += 1
+                    continue
+                kind = "const"
+                j += 1
+                break
+            if tx in ITEM_KWS:
+                kind = tx
+                j += 1
+                break
+            break
+        if kind is None or j >= n or code[j].kind != "ident":
+            i += 1
+            continue
+        if (
+            not tree.in_test_region(path, i)
+            and not code[j].text.startswith("_")
+            # A `#[cfg(test)]` attribute on the item itself is the remedy
+            # this pass recommends — recognize it (same walker the mod
+            # graph uses for `#[cfg(test)] mod x;`).
+            and not Tree._decl_is_cfg_test(code, i)
+        ):
+            decls.append((j, code[j].line, kind, code[j].text))
+        i = j + 1
+    return decls
+
+
+class Ws3Pass:
+    code = CODE
+    name = "dead-surface"
+    describe = "pub items never referenced outside test code (dead or test-only surface)"
+
+    def run(self, tree):
+        src_prefix = os.path.join("rust", "src")
+        decl_files = [
+            p
+            for p in tree.files
+            if (tree.fixture_mode or p.startswith(src_prefix)) and not tree.is_test_file(p)
+        ]
+        decls = {}  # name -> list of (path, idx, line, kind)
+        for path in decl_files:
+            for idx, line, kind, name in _collect_decls(tree, path):
+                decls.setdefault(name, []).append((path, idx, line, kind))
+        if not decls:
+            return []
+
+        # uses[name] = [is_test_context, ...] for every non-declaration
+        # occurrence anywhere in the tree.
+        decl_sites = {(p, i) for sites in decls.values() for (p, i, _, _) in sites}
+        uses = {name: [] for name in decls}
+        for path in tree.files:
+            file_is_test = tree.is_test_file(path)
+            code = tree.code(path)
+            for i, t in enumerate(code):
+                if t.kind != "ident" or t.text not in uses:
+                    continue
+                if (path, i) in decl_sites:
+                    continue
+                uses[t.text].append(file_is_test or tree.in_test_region(path, i))
+
+        out = []
+        for name, sites in decls.items():
+            refs = uses[name]
+            if refs and not all(refs):
+                continue  # at least one non-test reference: live surface
+            for path, _idx, line, kind in sites:
+                if not refs:
+                    msg = (
+                        f"pub {kind} `{name}` is never referenced anywhere else in the tree "
+                        "— dead surface: wire it in or remove it"
+                    )
+                else:
+                    msg = (
+                        f"pub {kind} `{name}` is only referenced from test code "
+                        "— scope it #[cfg(test)], wire it in, or baseline with a justification"
+                    )
+                out.append(Finding(CODE, path, line, f"{kind}={name}", msg))
+        return out
+
+
+PASS = Ws3Pass()

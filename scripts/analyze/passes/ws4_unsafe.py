@@ -1,0 +1,60 @@
+"""WS4 — unsafe audit: every `unsafe` site carries a `// SAFETY:` comment.
+
+`unsafe` in this codebase is rare and deliberate (Send/Sync assertions on
+test scaffolding, lock-protected non-atomic RMW in the gpusim testbed).
+Each such site must state its obligation discharge in an adjacent
+`// SAFETY:` comment — the same contract `clippy::undocumented_unsafe_blocks`
+enforces once a toolchain exists (see clippy.toml / workspace lints).
+
+Rule: an `unsafe` keyword token (block, fn, impl, trait) requires a
+comment containing `SAFETY:` starting within the three lines above it or
+on the same line.
+"""
+
+import rustlex
+from . import Finding
+
+CODE = "WS4"
+WINDOW = 3  # lines above the unsafe token the SAFETY comment may start on
+
+
+class Ws4Pass:
+    code = CODE
+    name = "unsafe-audit"
+    describe = "every `unsafe` site requires an adjacent // SAFETY: comment"
+
+    def run(self, tree):
+        out = []
+        for path in tree.files:
+            tokens, _ = tree.lexed(path)
+            safety_lines = {
+                t.line for t in tokens if t.kind == "comment" and "SAFETY:" in t.text
+            }
+            if not any(t.kind == "ident" and t.text == "unsafe" for t in tokens):
+                continue
+            code = rustlex.code_tokens(tokens)
+            spans = tree.fns(path)
+            code_idx = -1
+            for t in tokens:
+                if t.kind != "comment":
+                    code_idx += 1
+                if t.kind != "ident" or t.text != "unsafe":
+                    continue
+                if any(t.line - WINDOW <= sl <= t.line for sl in safety_lines):
+                    continue
+                fn = rustlex.innermost_fn(spans, code_idx)
+                ctx = f"fn={fn.name}" if fn else "item=module"
+                out.append(
+                    Finding(
+                        CODE,
+                        path,
+                        t.line,
+                        ctx,
+                        "`unsafe` without an adjacent `// SAFETY:` comment documenting "
+                        "why the obligation holds",
+                    )
+                )
+        return out
+
+
+PASS = Ws4Pass()

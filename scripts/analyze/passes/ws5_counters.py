@@ -1,0 +1,73 @@
+"""WS5 — counter discipline in gpusim/ (the PR 2 race class).
+
+The gpusim probe counters were originally process-global atomics; any
+concurrently running measured test inflated another test's counter
+window, and swap-resets stole counts. The fix made every measurement
+counter `thread_local!` (a measuring thread sees exactly what it
+issued). This pass keeps that invariant: a new `static NAME: Atomic*`
+outside `thread_local!` in gpusim/ is presumed to be a counter racing
+across threads until proven otherwise.
+
+Rule: in rust/src/gpusim/, every module- or fn-scoped `static` whose type
+mentions `Atomic` must live inside a `thread_local!` block. Deliberate
+process-globals (monotonic ID allocators, the measurement-section-guarded
+recording flag) are baselined with their justification — which is exactly
+the documentation such a global should have.
+"""
+
+import os
+
+import rustlex
+from . import Finding
+
+CODE = "WS5"
+
+
+class Ws5Pass:
+    code = CODE
+    name = "counter-discipline"
+    describe = "gpusim statics with Atomic types must be thread_local! (or baselined with why)"
+
+    def run(self, tree):
+        out = []
+        gpusim_prefix = os.path.join("rust", "src", "gpusim")
+        for path in tree.files:
+            if not (tree.fixture_mode or path.startswith(gpusim_prefix)):
+                continue
+            code = tree.code(path)
+            tl_spans = rustlex.macro_spans(code, "thread_local")
+            n = len(code)
+            for i, t in enumerate(code):
+                if t.kind != "ident" or t.text != "static":
+                    continue
+                if rustlex.in_regions(tl_spans, i):
+                    continue
+                j = i + 1
+                if j < n and code[j].text == "mut":
+                    j += 1
+                if j >= n or code[j].kind != "ident":
+                    continue
+                name = code[j].text
+                if j + 1 >= n or code[j + 1].text != ":":
+                    continue  # `static` in another grammatical position
+                k = j + 2
+                ty = []
+                while k < n and code[k].text not in ("=", ";"):
+                    ty.append(code[k].text)
+                    k += 1
+                if any("Atomic" in x for x in ty):
+                    out.append(
+                        Finding(
+                            CODE,
+                            path,
+                            t.line,
+                            f"static={name}",
+                            f"process-global `static {name}` with an Atomic type in gpusim/ — "
+                            "measurement counters must be thread_local! so concurrent tests "
+                            "cannot race each other's counter windows",
+                        )
+                    )
+        return out
+
+
+PASS = Ws5Pass()

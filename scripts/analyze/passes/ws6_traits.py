@@ -1,0 +1,86 @@
+"""WS6 — ConcurrentMap override-set conformance across the designs.
+
+The trait's provided defaults make partial overrides compile silently,
+but several method families only make sense overridden together: a
+design that overrides `upsert_ttl` without `sweep_expired` stores TTLs
+it can never reclaim; one that overrides `fetch_add_in_place` without
+`fetch_add_f64_in_place` silently drops the SpTC f64 fast path to the
+locked fallback. rustc cannot express "override these as a set" — this
+pass can.
+
+Clusters (all-or-nothing per `impl ConcurrentMap for X` block):
+
+  lifecycle  supports_ttl, upsert_ttl, sweep_expired, swept_expired,
+             entry_frequency
+  bulk       upsert_bulk, query_bulk, erase_bulk
+  inplace    fetch_add_in_place, fetch_add_f64_in_place
+  growth     can_grow, request_grow
+  shrink     can_shrink, request_shrink, shrink_events
+  freeze     can_freeze, request_freeze, frozen_len, freeze_events
+  migration  migration_in_progress, drive_migration
+
+A deliberate partial surface (e.g. a read-only tier with a native query
+path only) is baselined per impl with its justification.
+"""
+
+import rustlex
+from . import Finding
+
+CODE = "WS6"
+
+CLUSTERS = {
+    "lifecycle": {
+        "supports_ttl",
+        "upsert_ttl",
+        "sweep_expired",
+        "swept_expired",
+        "entry_frequency",
+    },
+    "bulk": {"upsert_bulk", "query_bulk", "erase_bulk"},
+    "inplace": {"fetch_add_in_place", "fetch_add_f64_in_place"},
+    "growth": {"can_grow", "request_grow"},
+    "shrink": {"can_shrink", "request_shrink", "shrink_events"},
+    "freeze": {"can_freeze", "request_freeze", "frozen_len", "freeze_events"},
+    "migration": {"migration_in_progress", "drive_migration"},
+}
+
+
+class Ws6Pass:
+    code = CODE
+    name = "trait-surface"
+    describe = "ConcurrentMap override clusters are all-or-nothing per design"
+
+    def run(self, tree):
+        out = []
+        for path in tree.files:
+            if tree.is_test_file(path):
+                continue
+            code = tree.code(path)
+            if not any(t.kind == "ident" and t.text == "ConcurrentMap" for t in code):
+                continue
+            regions = tree.test_regions(path)
+            for blk in rustlex.impl_blocks(code):
+                if blk.trait_name != "ConcurrentMap":
+                    continue
+                if rustlex.in_regions(regions, blk.open):
+                    continue  # test mocks may legitimately stub a partial surface
+                methods = {n for n, _ in rustlex.fns_at_depth_one(code, blk.open, blk.close)}
+                for cname, cluster in CLUSTERS.items():
+                    present = sorted(methods & cluster)
+                    missing = sorted(cluster - methods)
+                    if present and missing:
+                        out.append(
+                            Finding(
+                                CODE,
+                                path,
+                                blk.line,
+                                f"impl={blk.type_name}",
+                                f"`{blk.type_name}` overrides {present} but not {missing} — "
+                                f"the `{cname}` surface must be overridden together "
+                                "(partial overrides silently fall back to trait defaults)",
+                            )
+                        )
+        return out
+
+
+PASS = Ws6Pass()

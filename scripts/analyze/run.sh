@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# warpspeed-analyze — toolchain-free static analysis suite (python3 only).
+#
+# Entry point for CI and the cargo-less build containers. See
+# scripts/analyze/README.md for the pass catalogue and suppression rules.
+#
+#   scripts/analyze/run.sh               # analyze the tree, exit 1 on findings
+#   scripts/analyze/run.sh --self-test   # fixture self-tests for every pass
+#   scripts/analyze/run.sh --json out.json
+#   scripts/analyze/run.sh --file some_file.rs
+set -euo pipefail
+exec python3 "$(dirname "$0")/driver.py" "$@"

@@ -1,0 +1,362 @@
+"""Shared comment/string/raw-string-aware Rust lexer + lightweight item parser.
+
+This is the foundation every `warpspeed-analyze` pass builds on. It is
+deliberately NOT a full Rust grammar: the passes check *lexical*
+invariants (call pairing, adjacency of comments, override sets), so a
+token stream with accurate line numbers plus a brace-matched span finder
+for `fn` bodies / `impl` blocks / `#[cfg(test)]` regions is all that is
+needed — and all that can be kept honest without a compiler to test
+against.
+
+Token kinds:
+    ident     identifiers and keywords (including `fn`, `unsafe`, ...)
+    num       numeric literals (dots NOT consumed, so `0..n` lexes sanely)
+    str       string literals ("...", b"...", r#"..."#) — one token each
+    char      char literals ('x', '\\n')
+    lifetime  lifetime ticks ('a, '_, 'static)
+    op        any other single punctuation character
+    comment   // line and /* block */ comments — one token each, text kept
+
+Lex errors (unterminated string/comment, unmatched delimiter) are
+reported via `LexError` entries so pass zero can turn them into findings
+instead of the lexer crashing the whole run.
+"""
+
+import re
+from collections import namedtuple
+
+Token = namedtuple("Token", ["kind", "text", "line"])
+LexError = namedtuple("LexError", ["line", "msg"])
+
+_IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+_IDENT_CONT = _IDENT_START | set("0123456789")
+_RAW_OPEN = re.compile(r'r(#*)"')
+_CHAR_LIT = re.compile(r"'(\\.|[^\\'])'")
+
+
+def lex(src):
+    """Tokenize Rust source. Returns (tokens, errors)."""
+    toks = []
+    errors = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if c == "/" and nxt == "/":
+            j = src.find("\n", i)
+            j = n if j == -1 else j
+            toks.append(Token("comment", src[i:j], line))
+            i = j
+            continue
+        if c == "/" and nxt == "*":
+            depth, j, start_line = 1, i + 2, line
+            while j < n and depth:
+                if src[j] == "\n":
+                    line += 1
+                    j += 1
+                elif src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            if depth:
+                errors.append(LexError(start_line, "unterminated block comment"))
+            toks.append(Token("comment", src[i:j], start_line))
+            i = j
+            continue
+        if c == "r" and (nxt == '"' or nxt == "#"):
+            m = _RAW_OPEN.match(src, i)
+            if m:
+                hashes = len(m.group(1))
+                close = '"' + "#" * hashes
+                j = src.find(close, m.end())
+                start_line = line
+                if j == -1:
+                    errors.append(LexError(start_line, "unterminated raw string"))
+                    j = n
+                else:
+                    j += len(close)
+                line += src.count("\n", i, j)
+                toks.append(Token("str", src[i:j], start_line))
+                i = j
+                continue
+        if c == "b" and nxt == '"':
+            i += 1  # fall through to the plain-string scanner below
+            c, nxt = src[i], src[i + 1] if i + 1 < n else ""
+        if c == '"':
+            j, start_line = i + 1, line
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == "\n":
+                    line += 1
+                if src[j] == '"':
+                    break
+                j += 1
+            if j >= n:
+                errors.append(LexError(start_line, "unterminated string literal"))
+                j = n - 1
+            toks.append(Token("str", src[i : j + 1], start_line))
+            i = j + 1
+            continue
+        if c == "'":
+            m = _CHAR_LIT.match(src, i)
+            if m:
+                toks.append(Token("char", m.group(0), line))
+                i = m.end()
+                continue
+            j = i + 1
+            while j < n and src[j] in _IDENT_CONT:
+                j += 1
+            toks.append(Token("lifetime", src[i:j], line))
+            i = j
+            continue
+        if c in _IDENT_START:
+            j = i + 1
+            while j < n and src[j] in _IDENT_CONT:
+                j += 1
+            toks.append(Token("ident", src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i + 1
+            # Dots are excluded so `0..n` yields num, op, op, ident.
+            while j < n and (src[j] in _IDENT_CONT):
+                j += 1
+            toks.append(Token("num", src[i:j], line))
+            i = j
+            continue
+        toks.append(Token("op", c, line))
+        i += 1
+    return toks, errors
+
+
+def code_tokens(tokens):
+    """Tokens with comments removed — what the structural passes scan."""
+    return [t for t in tokens if t.kind != "comment"]
+
+
+FnSpan = namedtuple("FnSpan", ["name", "line", "open", "close"])
+
+
+def fn_spans(code):
+    """Every `fn name ... { body }` span, nested ones included.
+
+    `open`/`close` are indices into `code` of the body braces. Bodyless
+    declarations (trait methods `fn f(...);`) are skipped.
+    """
+    spans = []
+    n = len(code)
+    for i, t in enumerate(code):
+        if t.kind != "ident" or t.text != "fn":
+            continue
+        if i + 1 >= n or code[i + 1].kind != "ident":
+            continue
+        name = code[i + 1].text
+        paren = 0
+        j = i + 2
+        body_open = None
+        while j < n:
+            tx = code[j].text
+            if code[j].kind == "op":
+                if tx in "([":
+                    paren += 1
+                elif tx in ")]":
+                    paren -= 1
+                elif tx == "{" and paren == 0:
+                    body_open = j
+                    break
+                elif tx == ";" and paren == 0:
+                    break  # bodyless declaration
+            j += 1
+        if body_open is None:
+            continue
+        depth = 0
+        k = body_open
+        while k < n:
+            if code[k].kind == "op":
+                if code[k].text == "{":
+                    depth += 1
+                elif code[k].text == "}":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            k += 1
+        spans.append(FnSpan(name, t.line, body_open, k))
+    return spans
+
+
+def innermost_fn(spans, idx):
+    """The tightest FnSpan whose body contains token index `idx`."""
+    best = None
+    for s in spans:
+        if s.open < idx < s.close:
+            if best is None or s.open > best.open:
+                best = s
+    return best
+
+
+def direct_indices(span, spans):
+    """Token indices inside `span`'s body that are not inside a nested fn."""
+    nested = [s for s in spans if s is not span and span.open < s.open and s.close < span.close]
+    out = []
+    i = span.open + 1
+    while i < span.close:
+        inner = next((s for s in nested if s.open <= i <= s.close), None)
+        if inner is not None:
+            i = inner.close + 1
+            continue
+        out.append(i)
+        i += 1
+    return out
+
+
+def match_brace(code, open_idx):
+    """Index of the `}` matching `code[open_idx] == '{'` (or len(code))."""
+    depth = 0
+    for k in range(open_idx, len(code)):
+        if code[k].kind == "op":
+            if code[k].text == "{":
+                depth += 1
+            elif code[k].text == "}":
+                depth -= 1
+                if depth == 0:
+                    return k
+    return len(code)
+
+
+def cfg_test_regions(code):
+    """Spans (open, close) of `#[cfg(test)] mod ... { ... }` bodies, plus
+    fn bodies directly under `#[cfg(test)]` / `#[test]` attributes."""
+    regions = []
+    n = len(code)
+    for i, t in enumerate(code):
+        is_cfg_test = (
+            t.text == "#"
+            and i + 5 < n
+            and code[i + 1].text == "["
+            and code[i + 2].text == "cfg"
+            and code[i + 3].text == "("
+            and code[i + 4].text == "test"
+        )
+        is_test_attr = (
+            t.text == "#"
+            and i + 3 < n
+            and code[i + 1].text == "["
+            and code[i + 2].text == "test"
+            and code[i + 3].text == "]"
+        )
+        if not (is_cfg_test or is_test_attr):
+            continue
+        # Scan forward past the attribute (and any further attributes) to
+        # the gated item; only `mod`/`fn` bodies become regions.
+        j = i
+        while j < n and not (code[j].kind == "ident" and code[j].text in ("mod", "fn")):
+            if code[j].kind == "op" and code[j].text in (";", "}"):
+                break
+            j += 1
+        if j >= n or code[j].kind != "ident":
+            continue
+        while j < n and code[j].text != "{":
+            if code[j].text == ";":
+                break  # `#[cfg(test)] mod x;` — file-level, handled by caller
+            j += 1
+        if j < n and code[j].text == "{":
+            regions.append((j, match_brace(code, j)))
+    return regions
+
+
+def in_regions(regions, idx):
+    return any(a <= idx <= b for a, b in regions)
+
+
+def macro_spans(code, macro_name):
+    """Spans (open, close) of `macro_name! { ... }` invocations."""
+    spans = []
+    n = len(code)
+    for i, t in enumerate(code):
+        if (
+            t.kind == "ident"
+            and t.text == macro_name
+            and i + 2 < n
+            and code[i + 1].text == "!"
+            and code[i + 2].text == "{"
+        ):
+            spans.append((i + 2, match_brace(code, i + 2)))
+    return spans
+
+
+ImplBlock = namedtuple("ImplBlock", ["trait_name", "type_name", "line", "open", "close"])
+
+
+def impl_blocks(code):
+    """Every `impl [Trait for] Type { ... }` block (trait_name None for
+    inherent impls)."""
+    blocks = []
+    n = len(code)
+    for i, t in enumerate(code):
+        if t.kind != "ident" or t.text != "impl":
+            continue
+        # Header runs to the first `{` at paren depth 0 (no `;`-terminated
+        # impls exist).
+        paren = 0
+        j = i + 1
+        while j < n:
+            tx = code[j].text
+            if code[j].kind == "op":
+                if tx in "([":
+                    paren += 1
+                elif tx in ")]":
+                    paren -= 1
+                elif tx == "{" and paren == 0:
+                    break
+                elif tx == ";" and paren == 0:
+                    break
+            j += 1
+        if j >= n or code[j].text != "{":
+            continue
+        header = code[i + 1 : j]
+        idents = [h.text for h in header if h.kind == "ident"]
+        trait_name = None
+        type_name = idents[-1] if idents else "?"
+        if "for" in idents:
+            k = idents.index("for")
+            pre = [x for x in idents[:k] if x not in ("where", "unsafe")]
+            if pre:
+                trait_name = pre[-1]
+            post = idents[k + 1 :]
+            if post:
+                type_name = post[0]
+        blocks.append(ImplBlock(trait_name, type_name, t.line, j, match_brace(code, j)))
+    return blocks
+
+
+def fns_at_depth_one(code, open_idx, close_idx):
+    """Names of `fn`s declared directly inside a brace block (methods of an
+    impl, not fns nested deeper)."""
+    names = []
+    depth = 0
+    i = open_idx
+    while i <= close_idx and i < len(code):
+        t = code[i]
+        if t.kind == "op":
+            if t.text == "{":
+                depth += 1
+            elif t.text == "}":
+                depth -= 1
+        elif t.kind == "ident" and t.text == "fn" and depth == 1:
+            if i + 1 < len(code) and code[i + 1].kind == "ident":
+                names.append((code[i + 1].text, code[i + 1].line))
+        i += 1
+    return names

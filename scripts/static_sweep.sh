@@ -1,252 +1,7 @@
 #!/usr/bin/env bash
-# Toolchain-free static sweep — the verification gate used manually in
-# PRs 2–4, committed so every environment (including cargo-less
-# containers) has a runnable check:
-#
-#   1. comment/string-aware delimiter balance ({} () []) over every
-#      tracked .rs file — catches the truncated-file / mismatched-brace
-#      class of error a compiler would, without needing one;
-#   2. mod-declaration ↔ file cross-check — every `mod foo;` / `pub mod
-#      foo;` must resolve to foo.rs or foo/mod.rs, and every non-root
-#      source file must be reachable from a mod declaration;
-#   3. [[bench]] / [[bin]] / [[example]] ↔ file cross-check — every
-#      target named in rust/Cargo.toml must have its source file, and
-#      every rust/benches/*.rs must be declared.
-#
-# Exit 0 = clean. Any finding prints a path:line diagnostic and exits 1.
-# Requires only bash + python3 (both on GitHub's ubuntu runners and in
-# the build containers).
-
+# Superseded: the static sweep is now pass WS0 of the warpspeed-analyze
+# suite (scripts/analyze/), which adds the repo-specific concurrency and
+# discipline passes WS1–WS6 on the same toolchain-free footing. This
+# wrapper forwards so existing habits, docs, and scripts keep working.
 set -euo pipefail
-cd "$(dirname "$0")/.."
-
-python3 - <<'PYEOF'
-import os
-import re
-import sys
-
-failures = []
-ROOT = os.getcwd()
-
-
-def rust_files():
-    out = []
-    for dirpath, dirnames, filenames in os.walk(ROOT):
-        dirnames[:] = [d for d in dirnames if d not in (".git", "target", "artifacts")]
-        for f in filenames:
-            if f.endswith(".rs"):
-                out.append(os.path.relpath(os.path.join(dirpath, f), ROOT))
-    return sorted(out)
-
-
-def check_balance(path):
-    """Comment- and string-aware {} () [] balance for one Rust file."""
-    with open(path, encoding="utf-8") as fh:
-        src = fh.read()
-    stack = []  # (char, line)
-    pairs = {"}": "{", ")": "(", "]": "["}
-    line = 1
-    i = 0
-    n = len(src)
-    state = "code"  # code | line_comment | block_comment | string | char | raw_string
-    block_depth = 0
-    raw_hashes = 0
-    while i < n:
-        c = src[i]
-        nxt = src[i + 1] if i + 1 < n else ""
-        if c == "\n":
-            line += 1
-            if state == "line_comment":
-                state = "code"
-            i += 1
-            continue
-        if state == "line_comment":
-            i += 1
-            continue
-        if state == "block_comment":
-            if c == "/" and nxt == "*":
-                block_depth += 1
-                i += 2
-                continue
-            if c == "*" and nxt == "/":
-                block_depth -= 1
-                i += 2
-                if block_depth == 0:
-                    state = "code"
-                continue
-            i += 1
-            continue
-        if state == "string":
-            if c == "\\":
-                i += 2
-                continue
-            if c == '"':
-                state = "code"
-            i += 1
-            continue
-        if state == "raw_string":
-            if c == '"' and src[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
-                state = "code"
-                i += 1 + raw_hashes
-                continue
-            i += 1
-            continue
-        # state == code
-        if c == "/" and nxt == "/":
-            state = "line_comment"
-            i += 2
-            continue
-        if c == "/" and nxt == "*":
-            state = "block_comment"
-            block_depth = 1
-            i += 2
-            continue
-        if c == "r" and (nxt == '"' or nxt == "#"):
-            m = re.match(r'r(#*)"', src[i:])
-            if m:
-                raw_hashes = len(m.group(1))
-                state = "raw_string"
-                i += len(m.group(0))
-                continue
-        if c == "b" and nxt == '"':
-            state = "string"
-            i += 2
-            continue
-        if c == '"':
-            state = "string"
-            i += 1
-            continue
-        if c == "'":
-            # Char literal vs lifetime: a lifetime ('a, '_, 'static) has
-            # no closing quote right after its identifier.
-            m = re.match(r"'(\\.|[^\\'])'", src[i:])
-            if m:
-                i += len(m.group(0))
-                continue
-            i += 1  # lifetime tick
-            continue
-        if c in "{([":
-            stack.append((c, line))
-            i += 1
-            continue
-        if c in "})]":
-            if not stack or stack[-1][0] != pairs[c]:
-                failures.append(f"{path}:{line}: unmatched '{c}'")
-                return
-            stack.pop()
-            i += 1
-            continue
-        i += 1
-    for ch, ln in stack:
-        failures.append(f"{path}:{ln}: unclosed '{ch}'")
-    if state == "block_comment":
-        failures.append(f"{path}: unterminated block comment")
-    if state in ("string", "raw_string"):
-        failures.append(f"{path}: unterminated string literal")
-
-
-def strip_comments_and_strings(src):
-    """Crude but sufficient: blank out comments and string contents so
-    mod-declaration scans don't trip on examples in docs."""
-    src = re.sub(r'r(#*)".*?"\1', '""', src, flags=re.S)
-    src = re.sub(r'"(\\.|[^"\\])*"', '""', src)
-    src = re.sub(r"//[^\n]*", "", src)
-    src = re.sub(r"/\*.*?\*/", "", src, flags=re.S)
-    return src
-
-
-def check_mod_tree():
-    """Every `mod x;` resolves to a file; every non-root file under
-    rust/src is declared by some `mod x;`."""
-    src_root = os.path.join(ROOT, "rust", "src")
-    declared = set()  # files reachable from a mod declaration
-    for dirpath, dirnames, filenames in os.walk(src_root):
-        if "target" in dirpath:
-            continue
-        for f in filenames:
-            if not f.endswith(".rs"):
-                continue
-            path = os.path.join(dirpath, f)
-            with open(path, encoding="utf-8") as fh:
-                raw = fh.read()
-            # `#[path = "..."]` mod declarations (cfg-gated source swaps
-            # like runtime/engine_stub.rs) — collect before string
-            # stripping erases the literal.
-            for m in re.finditer(r'#\[path\s*=\s*"([^"]+)"\]', raw):
-                cand = os.path.normpath(os.path.join(dirpath, m.group(1)))
-                if os.path.isfile(cand):
-                    declared.add(os.path.relpath(cand, ROOT))
-            body = strip_comments_and_strings(raw)
-            # Declarations like `mod foo;` / `pub(crate) mod foo;` (inline
-            # `mod foo { ... }` bodies don't reference another file).
-            for m in re.finditer(r"(?:pub(?:\([^)]*\))?\s+)?mod\s+([A-Za-z0-9_]+)\s*;", body):
-                name = m.group(1)
-                base = dirpath if f in ("mod.rs", "lib.rs", "main.rs") else os.path.join(
-                    dirpath, os.path.splitext(f)[0]
-                )
-                cand = [os.path.join(base, name + ".rs"), os.path.join(base, name, "mod.rs")]
-                hits = [c for c in cand if os.path.isfile(c)]
-                if not hits:
-                    rel = os.path.relpath(path, ROOT)
-                    failures.append(f"{rel}: `mod {name};` resolves to no file")
-                declared.update(os.path.relpath(h, ROOT) for h in hits)
-    for dirpath, dirnames, filenames in os.walk(src_root):
-        for f in filenames:
-            if not f.endswith(".rs"):
-                continue
-            rel = os.path.relpath(os.path.join(dirpath, f), ROOT)
-            if f in ("lib.rs", "main.rs"):
-                continue
-            if rel not in declared:
-                failures.append(f"{rel}: source file not declared by any `mod`")
-
-
-def check_cargo_targets():
-    """[[bench]]/[[bin]]/[[example]] names ↔ files, both directions."""
-    manifest = os.path.join(ROOT, "rust", "Cargo.toml")
-    with open(manifest, encoding="utf-8") as fh:
-        toml = fh.read()
-    # Parse [[section]] blocks with name/path keys (no toml lib needed).
-    blocks = re.findall(
-        r"\[\[(bench|bin|example)\]\]\s*((?:(?!\[)[^\n]*\n)*)", toml
-    )
-    declared_benches = set()
-    for kind, body in blocks:
-        name = re.search(r'name\s*=\s*"([^"]+)"', body)
-        path = re.search(r'path\s*=\s*"([^"]+)"', body)
-        if not name:
-            failures.append(f"rust/Cargo.toml: [[{kind}]] block without a name")
-            continue
-        if kind == "bench":
-            declared_benches.add(name.group(1))
-            src = path.group(1) if path else f"benches/{name.group(1)}.rs"
-        elif path:
-            src = path.group(1)
-        else:
-            continue  # default-path bins are found by cargo's own rules
-        full = os.path.normpath(os.path.join(ROOT, "rust", src))
-        if not os.path.isfile(full):
-            failures.append(
-                f"rust/Cargo.toml: [[{kind}]] `{name.group(1)}` names missing file {src}"
-            )
-    bench_dir = os.path.join(ROOT, "rust", "benches")
-    if os.path.isdir(bench_dir):
-        for f in sorted(os.listdir(bench_dir)):
-            if f.endswith(".rs") and os.path.splitext(f)[0] not in declared_benches:
-                failures.append(
-                    f"rust/benches/{f}: bench file has no [[bench]] entry in rust/Cargo.toml"
-                )
-
-
-files = rust_files()
-for f in files:
-    check_balance(f)
-check_mod_tree()
-check_cargo_targets()
-
-if failures:
-    for msg in failures:
-        print(f"FAIL {msg}")
-    sys.exit(1)
-print(f"static sweep clean: {len(files)} .rs files balanced; mod tree and cargo targets consistent")
-PYEOF
+exec bash "$(dirname "$0")/analyze/run.sh" "$@"
