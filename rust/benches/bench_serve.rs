@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_serve` — loopback TCP serving exhibit:
+//! pipelined memcached-style clients vs the real server, reporting
+//! throughput and p50/p99/p999 latency per connection count.
+use warpspeed::bench::{serve, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", serve::run(&env));
+}

@@ -24,6 +24,7 @@ pub mod report;
 pub mod reshard;
 pub mod runtime;
 pub mod scaling;
+pub mod serve;
 pub mod shrink;
 pub mod space;
 pub mod sptc;

@@ -1,0 +1,220 @@
+//! `serve` exhibit: loopback load generation against the real TCP
+//! server — latency distribution, not just Mops.
+//!
+//! An in-process [`Server`] binds ephemeral ports; N client threads
+//! each drive one connection with a pipelined 50/50 set/get mix at a
+//! fixed pipeline depth, timestamping every request when it is
+//! buffered for send and completing it when its response's final line
+//! arrives. That measures what a networked caller actually sees —
+//! parse + batch + admission + coordinator round trip + encode, with
+//! pipelining amortizing syscalls exactly as the protocol contract
+//! (`docs/PROTOCOL.md` §pipelining) recommends.
+//!
+//! Reported per (connections, depth) point: throughput (kops/s) and
+//! p50/p99/p999 latency in microseconds, as a human table plus one
+//! JSON row per point for the CI bench-trajectory artifact. The
+//! harness asserts exact response accounting (every request answered,
+//! no error lines) — the admission cap is sized so `busy` would be a
+//! bug, not noise.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{default_workers, Coordinator, CoordinatorConfig};
+use crate::server::{Server, ServerConfig};
+use crate::tables::TableKind;
+
+use super::report::{self, JsonVal};
+use super::BenchEnv;
+
+/// One client connection's worth of pipelined traffic; returns the
+/// per-request latencies (ns) and the number of get hits observed.
+fn pump(addr: SocketAddr, ops: usize, depth: usize, keyspace: u64, seed: u64) -> (Vec<u64>, u64) {
+    let mut sock = TcpStream::connect(addr).expect("connect to loopback server");
+    sock.set_nodelay(true).expect("nodelay");
+    let mut rng = seed | 1;
+    let mut next_key = move || {
+        // xorshift64* — the crate's stock generator shape.
+        rng ^= rng << 13;
+        rng ^= rng >> 7;
+        rng ^= rng << 17;
+        rng
+    };
+    let mut lat = Vec::with_capacity(ops);
+    let mut hits = 0u64;
+    let mut outstanding: std::collections::VecDeque<(Instant, bool)> =
+        std::collections::VecDeque::with_capacity(depth);
+    let mut sent = 0usize;
+    let mut wbuf = Vec::new();
+    let mut rbuf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let mut in_value = false; // next response line is a VALUE data line
+    while lat.len() < ops {
+        // Fill the pipeline.
+        wbuf.clear();
+        while sent < ops && outstanding.len() < depth {
+            let r = next_key();
+            let key = r % keyspace;
+            let is_get = r & (1 << 40) != 0;
+            if is_get {
+                wbuf.extend_from_slice(format!("get {key}\r\n").as_bytes());
+            } else {
+                let val = (r >> 8).to_string();
+                wbuf.extend_from_slice(
+                    format!("set {key} 0 0 {}\r\n{val}\r\n", val.len()).as_bytes(),
+                );
+            }
+            outstanding.push_back((Instant::now(), is_get));
+            sent += 1;
+        }
+        if !wbuf.is_empty() {
+            sock.write_all(&wbuf).expect("pipelined write");
+        }
+        // Drain whatever responses have arrived (at least one line).
+        let n = sock.read(&mut tmp).expect("read responses");
+        assert!(n > 0, "server closed mid-run");
+        rbuf.extend_from_slice(&tmp[..n]);
+        while let Some(lf) = rbuf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = rbuf.drain(..=lf).collect();
+            let line = std::str::from_utf8(&line).expect("ascii response").trim_end();
+            if in_value {
+                // The data line under a VALUE header: same response.
+                in_value = false;
+                continue;
+            }
+            let front_is_get = outstanding.front().map(|&(_, g)| g);
+            let done = match line {
+                "STORED" => {
+                    assert_eq!(front_is_get, Some(false), "response/request misalignment");
+                    true
+                }
+                "END" => {
+                    assert_eq!(front_is_get, Some(true), "response/request misalignment");
+                    true
+                }
+                l if l.starts_with("VALUE ") => {
+                    hits += 1;
+                    in_value = true;
+                    false
+                }
+                l => panic!("unexpected response line: {l:?}"),
+            };
+            if done {
+                let (t0, _) = outstanding.pop_front().expect("spurious response");
+                lat.push(t0.elapsed().as_nanos() as u64);
+            }
+        }
+    }
+    let _ = sock.write_all(b"quit\r\n");
+    (lat, hits)
+}
+
+fn percentile(sorted: &[u64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx] as f64 / 1_000.0 // ns → µs
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let mut out = String::new();
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        kind: TableKind::P2Meta,
+        total_slots: env.slots.max(1 << 14),
+        n_shards: 8,
+        n_workers: default_workers(),
+        max_batch: 256,
+        growth: None,
+        reshard: None,
+    }));
+    let server = Server::start(
+        coord,
+        None,
+        ServerConfig {
+            data_addr: "127.0.0.1:0".into(),
+            admin_addr: "127.0.0.1:0".into(),
+            window: 64,
+            // Sized so the harness can never trip `busy`: latency here
+            // measures the pipeline, not the overload path (the e2e
+            // tests own that).
+            max_inflight_ops: 1 << 20,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind loopback server");
+    let addr = server.data_addr();
+    let keyspace = (env.slots.max(1 << 14) / 4) as u64;
+    let per_conn = env.iterations.max(10) * 100;
+    let depth = 16usize;
+
+    let mut rows = Vec::new();
+    let mut json = String::new();
+    for conns in [1usize, 2, 4] {
+        let wall = Instant::now();
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let seed = env.seed ^ ((c as u64 + 1) * 0x9E37_79B9_7F4A_7C15);
+                std::thread::spawn(move || pump(addr, per_conn, depth, keyspace, seed))
+            })
+            .collect();
+        let mut lat: Vec<u64> = Vec::with_capacity(conns * per_conn);
+        let mut hits = 0u64;
+        for h in handles {
+            let (l, hh) = h.join().expect("client thread");
+            lat.extend(l);
+            hits += hh;
+        }
+        let secs = wall.elapsed().as_secs_f64().max(1e-9);
+        let total = conns * per_conn;
+        assert_eq!(lat.len(), total, "every request must be answered exactly once");
+        lat.sort_unstable();
+        let kops = report::finite(total as f64 / secs / 1e3);
+        let (p50, p99, p999) =
+            (percentile(&lat, 0.50), percentile(&lat, 0.99), percentile(&lat, 0.999));
+        rows.push(vec![
+            conns.to_string(),
+            depth.to_string(),
+            total.to_string(),
+            format!("{kops:.1}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{p999:.1}"),
+            hits.to_string(),
+        ]);
+        json.push_str(&report::json_row(&[
+            ("exhibit", JsonVal::Str("serve".into())),
+            ("conns", JsonVal::Int(conns as u64)),
+            ("depth", JsonVal::Int(depth as u64)),
+            ("ops", JsonVal::Int(total as u64)),
+            ("kops", JsonVal::Num(kops)),
+            ("p50_us", JsonVal::Num(p50)),
+            ("p99_us", JsonVal::Num(p99)),
+            ("p999_us", JsonVal::Num(p999)),
+        ]));
+        json.push('\n');
+    }
+
+    // One admin round trip so the exhibit also exercises that port and
+    // shows the counters a real deployment would watch.
+    let mut admin = TcpStream::connect(server.admin_addr()).expect("connect admin");
+    admin.write_all(b"stats\r\nquit\r\n").expect("admin stats");
+    let mut stats_text = String::new();
+    admin.read_to_string(&mut stats_text).expect("read stats");
+    assert!(stats_text.contains("STAT ops_executed "), "admin stats must report the run");
+    let served: u64 = server.stats().cmd_get.load(std::sync::atomic::Ordering::Relaxed)
+        + server.stats().cmd_set.load(std::sync::atomic::Ordering::Relaxed);
+    // 1 + 2 + 4 connections ran per_conn requests each.
+    assert_eq!(served as usize, 7 * per_conn, "server-side command accounting");
+
+    server.shutdown();
+    out.push_str(&report::table(
+        "serve: loopback TCP latency/throughput (pipelined memcached-style clients)",
+        &["conns", "depth", "ops", "kops", "p50_us", "p99_us", "p999_us", "get_hits"],
+        &rows,
+    ));
+    out.push_str(&json);
+    out
+}

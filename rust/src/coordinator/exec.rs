@@ -285,6 +285,11 @@ pub trait ReadOffload: Send + Sync {
 enum OpClass {
     Put,
     Add,
+    /// TTL-armed overwrite. No bulk entry point exists for TTL writes
+    /// (the lifecycle path is scalar and phase-aware), so a Ttl run
+    /// dispatches element-wise — it still forms its own run so it never
+    /// breaks an adjacent Put/Get run's bulk grouping.
+    Ttl,
     Get,
     Del,
 }
@@ -295,6 +300,7 @@ impl OpClass {
         match op {
             Op::Upsert(..) => OpClass::Put,
             Op::UpsertAdd(..) => OpClass::Add,
+            Op::UpsertTtl(..) => OpClass::Ttl,
             Op::Query(_) => OpClass::Get,
             Op::Erase(_) => OpClass::Del,
         }
@@ -617,6 +623,13 @@ impl Coordinator {
         self.inflight.load(Ordering::Relaxed) / self.n_workers().max(1)
     }
 
+    /// Total jobs enqueued but not yet finished across the pool — the
+    /// aggregate counterpart of [`Coordinator::pending_jobs_per_worker`],
+    /// surfaced as `STAT inflight_jobs` on the admin port.
+    pub fn inflight_jobs(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
     /// Attach a read-run offload. Only whole query runs are routed to it;
     /// mutating runs always execute in-process.
     pub fn with_offload(mut self, offload: Arc<dyn ReadOffload>) -> Self {
@@ -678,6 +691,24 @@ impl Coordinator {
                                 UpsertResult::Full => OpResult::Rejected,
                             },
                         )
+                    }));
+                }
+                OpClass::Ttl => {
+                    // Scalar dispatch: `upsert_ttl` self-routes (it is
+                    // phase-aware across splits/merges), so `shard_idx`
+                    // is not forwarded. Result mapping matches the Put
+                    // run above — a surviving Full means the shard is
+                    // pinned at its capacity ceiling.
+                    out.extend(run.iter().map(|&(seq, op)| {
+                        let Op::UpsertTtl(k, v, ttl) = op else {
+                            unreachable!("run-splitting broke class homogeneity")
+                        };
+                        let r = match table.upsert_ttl(k, v, ttl, &UpsertOp::Overwrite) {
+                            UpsertResult::Inserted => OpResult::Upserted(true),
+                            UpsertResult::Updated => OpResult::Upserted(false),
+                            UpsertResult::Full => OpResult::Rejected,
+                        };
+                        (seq, r)
                     }));
                 }
                 OpClass::Get => {
@@ -2281,6 +2312,56 @@ mod tests {
         // A second full sweep finds nothing left.
         assert!(c.sweep_now());
         assert_eq!(c.swept_expired(), 300);
+    }
+
+    #[test]
+    fn upsert_ttl_ops_keep_per_key_order_and_expire() {
+        let lc = LifecycleConfig::new(1);
+        let c = Coordinator::new_with_lifecycle(
+            CoordinatorConfig {
+                kind: TableKind::DoubleMeta,
+                total_slots: 16 * 1024,
+                n_shards: 4,
+                n_workers: 2,
+                max_batch: 64,
+                growth: None,
+                reshard: None,
+            },
+            lc.clone(),
+        );
+        let ks = distinct_keys(200, 0xF7);
+        // Mixed-class stream touching each key three times in order:
+        // immortal put, TTL overwrite, read-back. The Ttl run must not
+        // disturb per-key ordering against the adjacent Put/Get runs.
+        let mut ops = Vec::new();
+        for &k in &ks {
+            ops.push(Op::Upsert(k, 1));
+            ops.push(Op::UpsertTtl(k, k ^ 5, 2));
+            ops.push(Op::Query(k));
+        }
+        let r = c.run_stream(ops);
+        for (i, chunk) in r.chunks(3).enumerate() {
+            assert_eq!(chunk[0], OpResult::Upserted(true), "key {i}: first put inserts");
+            assert_eq!(chunk[1], OpResult::Upserted(false), "key {i}: ttl put updates");
+            assert_eq!(chunk[2], OpResult::Value(Some(ks[i] ^ 5)), "key {i}: read-your-write");
+        }
+        // The TTL overwrite re-armed every key's deadline: all expire.
+        lc.clock.advance(3);
+        let r = c.run_stream(ks.iter().map(|&k| Op::Query(k)));
+        assert!(r.iter().all(|&x| x == OpResult::Value(None)), "ttl must expire");
+    }
+
+    #[test]
+    fn upsert_ttl_degrades_to_immortal_without_a_lifecycle() {
+        let c = coord();
+        assert!(!c.table.supports_ttl());
+        let ks = distinct_keys(64, 0xF8);
+        let r = c.run_stream(ks.iter().map(|&k| Op::UpsertTtl(k, k ^ 9, 1)));
+        assert!(r.iter().all(|&x| x == OpResult::Upserted(true)));
+        let r = c.run_stream(ks.iter().map(|&k| Op::Query(k)));
+        for (i, &x) in r.iter().enumerate() {
+            assert_eq!(x, OpResult::Value(Some(ks[i] ^ 9)), "no lifecycle: entry is immortal");
+        }
     }
 
     #[test]

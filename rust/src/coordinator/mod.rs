@@ -11,6 +11,13 @@
 //! persistent-kernel execution model (WarpCore-style): sustained traffic
 //! pays no per-batch thread-spawn cost.
 //!
+//! Two front ends feed this pipeline: the TCP serving tier
+//! ([`crate::server`] — memcached-style text protocol, one batch per
+//! session read turn, admission-gated; `warpspeed serve --tcp`) and the
+//! single-process stdin debug loop (`warpspeed serve`). Both are thin:
+//! they translate wire requests into [`Op`]s and batches and never touch
+//! the table behind the coordinator's back.
+//!
 //! ## The batch pipeline
 //!
 //! Operations flow through four batch-shaped stages, mirroring how a GPU
@@ -144,6 +151,14 @@ pub enum Op {
     Upsert(u64, u64),
     /// Upsert with AddAssign (accumulate) semantics.
     UpsertAdd(u64, u64),
+    /// Overwrite upsert that also arms a TTL of `.2` lifecycle ticks
+    /// ([`ShardedTable::upsert_ttl`]). Exists so TTL'd writes from the
+    /// serving tier ride the same batch pipeline as everything else —
+    /// per-key ordering against concurrent gets/deletes of the same key
+    /// only holds inside the batch path, so the server must not call
+    /// `upsert_ttl` on the table directly. On tables built without
+    /// lifecycle support this degrades to a plain immortal upsert.
+    UpsertTtl(u64, u64, u64),
     Query(u64),
     Erase(u64),
 }
@@ -152,7 +167,11 @@ impl Op {
     #[inline]
     pub fn key(&self) -> u64 {
         match self {
-            Op::Upsert(k, _) | Op::UpsertAdd(k, _) | Op::Query(k) | Op::Erase(k) => *k,
+            Op::Upsert(k, _)
+            | Op::UpsertAdd(k, _)
+            | Op::UpsertTtl(k, _, _)
+            | Op::Query(k)
+            | Op::Erase(k) => *k,
         }
     }
 

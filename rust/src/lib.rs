@@ -128,6 +128,19 @@
 //! eviction policy: FIFO (default), TTL-first, or segcache-style
 //! TTL-then-lowest-frequency; the `aging` exhibit ([`bench::aging`])
 //! compares the three under zipfian churn.
+//!
+//! # Serving — the TCP tier
+//!
+//! [`server`] puts the whole stack behind sockets: a memcached-style
+//! text data protocol (`get`/`gets`/`set`/`delete`/`incr`, TTL via the
+//! `set` exptime field riding `Op::UpsertTtl`) plus a separate admin
+//! port (`stats`/`version`/`tick`). Each connection's pipelined
+//! requests become one coordinator batch per read turn, admission is
+//! globally bounded (overload answers `SERVER_ERROR busy` instead of
+//! queueing), and a slow client backpressures only itself. The wire
+//! grammar lives in `docs/PROTOCOL.md`; `warpspeed serve --tcp` starts
+//! it and the `serve` exhibit ([`bench::serve`]) drives loopback load
+//! for p50/p99/p999 latency.
 
 pub mod gpusim;
 pub mod hash;
@@ -141,6 +154,7 @@ pub mod apps;
 pub mod bench;
 pub mod coordinator;
 pub mod runtime;
+pub mod server;
 pub mod cli;
 
 pub use tables::{ConcurrentMap, TableKind, UpsertOp, build_table, TableConfig, ConcurrencyMode};

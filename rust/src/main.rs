@@ -3,22 +3,30 @@
 //!
 //! ```text
 //! warpspeed info
-//! warpspeed probes|bulk|grow|reshard|shrink|freeze|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime
+//! warpspeed probes|bulk|grow|reshard|shrink|freeze|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime|serve-bench
 //!           [--slots N] [--iters N] [--seed S]
 //! warpspeed all          # every exhibit in sequence
-//! warpspeed serve [--table p2m] [--slots N] [--shards N] [--grow] [--reshard] [--shrink]
+//! warpspeed serve --tcp [--host H] [--port P] [--admin-port P] [--window N]
+//!           [--max-inflight N] [--max-conns N] [--ttl [--quantum N] [--tick-ms MS]]
+//!           [--table p2m] [--slots N] [--shards N] [--workers N] [--batch N]
+//!           [--grow] [--reshard] [--shrink]
+//! warpspeed serve        # debug fallback: stdin/stdout line protocol
 //! ```
 //!
-//! The serve protocol (stdin/stdout, one op per line):
+//! `serve --tcp` is the real server: the memcached-style TCP data
+//! protocol plus the admin port, specified in `docs/PROTOCOL.md` and
+//! operated per README §Serving. Plain `serve` (no `--tcp`) remains
+//! the single-process stdin/stdout debug loop, one op per line:
 //! `put <key> <val>` | `add <key> <val>` | `get <key>` | `del <key>` |
-//! `quit`.
+//! `quit` — handy under a pipe, not a network server.
 
 use std::io::{BufRead, Write};
 
 use warpspeed::bench::{self, BenchEnv};
 use warpspeed::cli::Args;
 use warpspeed::coordinator::{default_workers, Coordinator, CoordinatorConfig, Op, OpResult};
-use warpspeed::tables::TableKind;
+use warpspeed::server::{Server, ServerConfig};
+use warpspeed::tables::{LifecycleClock, TableKind};
 
 fn env_from(args: &Args) -> BenchEnv {
     let mut env = BenchEnv::default();
@@ -37,7 +45,7 @@ fn main() {
             println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
             println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
             println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
-            println!("subcommands: probes bulk grow reshard shrink freeze load aging caching scaling ycsb sptc sweep space adversarial ablations runtime all serve");
+            println!("subcommands: probes bulk grow reshard shrink freeze load aging caching scaling ycsb sptc sweep space adversarial ablations runtime serve-bench all serve");
         }
         "probes" => print!("{}", bench::probes::run(&env)),
         "bulk" => print!("{}", bench::bulk::run(&env)),
@@ -56,6 +64,7 @@ fn main() {
         "adversarial" => print!("{}", bench::adversarial::run(&env)),
         "ablations" => print!("{}", bench::ablations::run(&env)),
         "runtime" => print!("{}", bench::runtime::run(&env)),
+        "serve-bench" => print!("{}", bench::serve::run(&env)),
         "all" => {
             for (name, f) in [
                 ("probes", bench::probes::run as fn(&BenchEnv) -> String),
@@ -75,6 +84,7 @@ fn main() {
                 ("adversarial", bench::adversarial::run),
                 ("ablations", bench::ablations::run),
                 ("runtime", bench::runtime::run),
+                ("serve-bench", bench::serve::run),
             ] {
                 eprintln!("[warpspeed] running {name}…");
                 match std::panic::catch_unwind(|| f(&env)) {
@@ -97,6 +107,14 @@ fn serve(args: &Args) {
         .get("table")
         .and_then(TableKind::from_name)
         .unwrap_or(TableKind::P2Meta);
+    // `--ttl` builds lifecycle-capable shards (an 8-bit TTL/frequency
+    // code per slot) clocked by a shared deterministic LifecycleClock:
+    // `--quantum` sets ticks per TTL quantum, `--tick-ms` (default
+    // 1000, 0 = never) advances the clock from wall time; the admin
+    // `tick` command advances it manually either way.
+    let lifecycle = args
+        .get_bool("ttl")
+        .then(|| warpspeed::tables::LifecycleConfig::new(args.get_u64("quantum", 1)));
     let cfg = CoordinatorConfig {
         kind,
         total_slots: args.get_usize("slots", 1 << 20),
@@ -121,14 +139,22 @@ fn serve(args: &Args) {
                 ..Default::default()
             }),
     };
-    let coord = Coordinator::new(cfg);
+    let clock = lifecycle.as_ref().map(|lc| lc.clock.clone());
+    let coord = match lifecycle {
+        Some(lc) => Coordinator::new_with_lifecycle(cfg, lc),
+        None => Coordinator::new(cfg),
+    };
     eprintln!(
-        "[warpspeed] serving {} over {} shards (slots={}, workers={})",
+        "[warpspeed] serving {} over {} shards (slots={}, workers={}, ttl={})",
         kind.paper_name(),
         coord.config().n_shards,
         coord.config().total_slots,
-        coord.n_workers() // requested --workers, clamped to the shard count
+        coord.n_workers(), // requested --workers, clamped to the shard count
+        clock.is_some(),
     );
+    if args.get_bool("tcp") {
+        return serve_tcp(args, coord, clock);
+    }
     let stdin = std::io::stdin();
     let mut out = std::io::stdout().lock();
     for line in stdin.lock().lines() {
@@ -163,4 +189,41 @@ fn serve(args: &Args) {
         "[warpspeed] served {} ops",
         coord.ops_executed.load(std::sync::atomic::Ordering::Relaxed)
     );
+}
+
+/// `serve --tcp`: bind the data + admin ports and serve until killed.
+/// Prints `READY <data_addr> <admin_addr>` on stdout once listening so
+/// scripts (the CI smoke among them) can wait for it.
+fn serve_tcp(args: &Args, coord: Coordinator, clock: Option<std::sync::Arc<LifecycleClock>>) {
+    let host = args.get("host").unwrap_or("127.0.0.1").to_string();
+    let cfg = ServerConfig {
+        data_addr: format!("{host}:{}", args.get_u64("port", 9650)),
+        admin_addr: format!("{host}:{}", args.get_u64("admin-port", 9651)),
+        window: args.get_usize("window", 64),
+        max_inflight_ops: args.get_usize("max-inflight", 16 * 1024),
+        max_connections: args.get_usize("max-conns", 1024),
+        ..ServerConfig::default()
+    };
+    let server = match Server::start(std::sync::Arc::new(coord), clock.clone(), cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("[warpspeed] bind failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    // Wall-clock lifecycle ticking; the admin `tick` command remains
+    // available for deterministic control regardless.
+    let tick_ms = args.get_u64("tick-ms", 1000);
+    if let Some(clock) = clock.filter(|_| tick_ms > 0) {
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_millis(tick_ms));
+            clock.advance(1);
+        });
+    }
+    println!("READY {} {}", server.data_addr(), server.admin_addr());
+    let _ = std::io::stdout().flush();
+    // Foreground server: runs until the process is killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }

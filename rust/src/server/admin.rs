@@ -1,0 +1,217 @@
+//! Admin protocol: the out-of-band port where operators look without
+//! touching the data path.
+//!
+//! Three commands (`docs/PROTOCOL.md` §admin): `stats` dumps every
+//! serving-tier counter plus the coordinator/table gauges as
+//! `STAT <name> <value>` lines ending in `END`; `version` reports the
+//! build; `tick [n]` advances the deterministic [`LifecycleClock`] —
+//! the operations/testing hook that makes TTL expiry scriptable from
+//! the outside (wall-clock ticking, when wanted, is the `--tick-ms`
+//! flag's job). Admin sessions are plain line-per-reply exchanges — no
+//! batching, no admission gate — so `stats` stays answerable while the
+//! data path is saturated.
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::coordinator::Coordinator;
+use crate::tables::LifecycleClock;
+
+use super::session::{retryable, write_all_retry, AdmissionGate};
+use super::ServerStats;
+
+/// Every `STAT` name/value pair, in emission order: serving-tier
+/// counters first ([`ServerStats::snapshot`]), then admission-gate,
+/// coordinator, and table gauges. The e2e tests and the README's
+/// worked example both key off these names — change them in lockstep
+/// with `docs/PROTOCOL.md`.
+pub fn stat_lines(
+    coord: &Coordinator,
+    stats: &ServerStats,
+    gate: &AdmissionGate,
+    clock: Option<&LifecycleClock>,
+) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = Vec::new();
+    for (name, v) in stats.snapshot() {
+        out.push((name.to_string(), v.to_string()));
+    }
+    out.push(("inflight_ops".into(), gate.in_flight().to_string()));
+    out.push(("admission_cap".into(), gate.cap().to_string()));
+    let relaxed = Ordering::Relaxed;
+    out.push(("ops_executed".into(), coord.ops_executed.load(relaxed).to_string()));
+    out.push(("n_workers".into(), coord.n_workers().to_string()));
+    out.push(("inflight_jobs".into(), coord.inflight_jobs().to_string()));
+    out.push((
+        "pending_jobs_per_worker".into(),
+        coord.pending_jobs_per_worker().to_string(),
+    ));
+    let table = &coord.table;
+    let ls = table.load_stats();
+    out.push(("n_shards".into(), table.n_shards().to_string()));
+    out.push(("epoch".into(), table.epoch().to_string()));
+    out.push(("len".into(), ls.len.to_string()));
+    out.push(("capacity".into(), ls.capacity.to_string()));
+    let lf = if ls.capacity == 0 { 0.0 } else { ls.len as f64 / ls.capacity as f64 };
+    out.push(("load_factor".into(), format!("{lf:.4}")));
+    let (min_len, max_len) = table.balance();
+    out.push(("shard_min_len".into(), min_len.to_string()));
+    out.push(("shard_max_len".into(), max_len.to_string()));
+    out.push(("swept_expired".into(), ls.swept_expired.to_string()));
+    out.push(("split_events".into(), table.split_events().to_string()));
+    out.push(("merge_events".into(), table.merge_events().to_string()));
+    out.push(("shrink_events".into(), table.shrink_events().to_string()));
+    out.push(("freeze_events".into(), table.freeze_events().to_string()));
+    out.push(("frozen_len".into(), table.frozen_len().to_string()));
+    out.push(("moved_keys".into(), table.moved_keys().to_string()));
+    if let Some(clock) = clock {
+        out.push(("lifecycle_tick".into(), clock.now().to_string()));
+    }
+    out
+}
+
+/// Drive one admin connection until EOF, `quit`, or server stop.
+/// Generic over the streams for the same reason as
+/// [`super::session::serve_session`].
+pub fn serve_admin<R: Read, W: Write>(
+    mut rd: R,
+    mut wr: W,
+    coord: &Coordinator,
+    stats: &ServerStats,
+    gate: &AdmissionGate,
+    clock: Option<&LifecycleClock>,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut rdbuf = [0u8; 1024];
+    loop {
+        let Some(lf) = buf.iter().position(|&b| b == b'\n') else {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match rd.read(&mut rdbuf) {
+                Ok(0) => return Ok(()),
+                Ok(n) => buf.extend_from_slice(&rdbuf[..n]),
+                Err(e) if retryable(&e) => {}
+                Err(e) => return Err(e),
+            }
+            continue;
+        };
+        let line: Vec<u8> = buf.drain(..=lf).collect();
+        let line = String::from_utf8_lossy(&line);
+        let toks: Vec<&str> = line.split_ascii_whitespace().collect();
+        let mut out = String::new();
+        match toks.as_slice() {
+            [] => continue,
+            ["quit"] => return Ok(()),
+            ["stats"] => {
+                for (name, value) in stat_lines(coord, stats, gate, clock) {
+                    out.push_str(&format!("STAT {name} {value}\r\n"));
+                }
+                out.push_str("END\r\n");
+            }
+            ["version"] => {
+                out.push_str(&format!("VERSION warpspeed/{}\r\n", env!("CARGO_PKG_VERSION")));
+            }
+            ["tick", rest @ ..] => match clock {
+                None => out.push_str("SERVER_ERROR ttl disabled\r\n"),
+                Some(clock) => {
+                    let n = match rest {
+                        [] => Some(1u64),
+                        [n] => n.parse::<u64>().ok().filter(|&n| n > 0),
+                        _ => None,
+                    };
+                    match n {
+                        Some(n) => {
+                            clock.advance(n);
+                            out.push_str(&format!("TICK {}\r\n", clock.now()));
+                        }
+                        None => out.push_str("CLIENT_ERROR bad tick count\r\n"),
+                    }
+                }
+            },
+            _ => out.push_str("ERROR\r\n"),
+        }
+        write_all_retry(&mut wr, out.as_bytes(), stop)?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
+    use crate::tables::{LifecycleConfig, TableKind};
+    use std::io::Cursor;
+
+    fn coord(lifecycle: Option<LifecycleConfig>) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            kind: if lifecycle.is_some() { TableKind::DoubleMeta } else { TableKind::Double },
+            total_slots: 8 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 64,
+            growth: None,
+            reshard: None,
+        };
+        match lifecycle {
+            Some(lc) => Coordinator::new_with_lifecycle(cfg, lc),
+            None => Coordinator::new(cfg),
+        }
+    }
+
+    fn run_admin(c: &Coordinator, clock: Option<&LifecycleClock>, script: &str) -> String {
+        let stats = ServerStats::default();
+        let gate = AdmissionGate::new(128);
+        let mut wr = Vec::new();
+        let stop = AtomicBool::new(false);
+        serve_admin(Cursor::new(script.as_bytes().to_vec()), &mut wr, c, &stats, &gate, clock, &stop)
+            .unwrap();
+        String::from_utf8(wr).unwrap()
+    }
+
+    #[test]
+    fn stats_emits_every_documented_counter_then_end() {
+        let c = coord(None);
+        let out = run_admin(&c, None, "stats\r\nquit\r\n");
+        for name in [
+            "curr_connections", "total_connections", "rejected_connections", "cmd_get",
+            "cmd_set", "cmd_delete", "cmd_incr", "get_hits", "get_misses", "busy_rejections",
+            "parse_errors", "bytes_read", "bytes_written", "inflight_ops", "admission_cap",
+            "ops_executed", "n_workers", "inflight_jobs", "pending_jobs_per_worker", "n_shards",
+            "epoch", "len", "capacity", "load_factor", "shard_min_len", "shard_max_len",
+            "swept_expired", "split_events", "merge_events", "shrink_events", "freeze_events",
+            "frozen_len", "moved_keys",
+        ] {
+            assert!(out.contains(&format!("STAT {name} ")), "missing STAT {name} in:\n{out}");
+        }
+        assert!(!out.contains("lifecycle_tick"), "no clock, no tick stat");
+        assert!(out.ends_with("END\r\n"));
+        assert!(out.contains("STAT admission_cap 128\r\n"));
+        assert!(out.contains("STAT n_shards 4\r\n"));
+    }
+
+    #[test]
+    fn version_tick_and_unknown() {
+        let lc = LifecycleConfig::new(1);
+        let clock = lc.clock.clone();
+        let c = coord(Some(lc));
+        let out = run_admin(
+            &c,
+            Some(clock.as_ref()),
+            "version\r\ntick\r\ntick 4\r\ntick x\r\nbogus\r\nstats\r\nquit\r\n",
+        );
+        assert!(out.starts_with(&format!("VERSION warpspeed/{}\r\n", env!("CARGO_PKG_VERSION"))));
+        assert!(out.contains("TICK 1\r\n"), "bare tick advances by 1");
+        assert!(out.contains("TICK 5\r\n"), "tick 4 advances to 5");
+        assert!(out.contains("CLIENT_ERROR bad tick count\r\n"));
+        assert!(out.contains("ERROR\r\n"));
+        assert!(out.contains("STAT lifecycle_tick 5\r\n"));
+        assert_eq!(clock.now(), 5);
+    }
+
+    #[test]
+    fn tick_without_lifecycle_is_refused() {
+        let c = coord(None);
+        let out = run_admin(&c, None, "tick\r\nquit\r\n");
+        assert_eq!(out, "SERVER_ERROR ttl disabled\r\n");
+    }
+}

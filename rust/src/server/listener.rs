@@ -1,0 +1,228 @@
+//! Listener plumbing: bind the data and admin ports, accept
+//! connections onto per-session threads, and tear everything down
+//! without abandoning a socket mid-response.
+//!
+//! Threading model (pelikan's shape, minus the event loop): one accept
+//! thread per port, one thread per live connection. Sessions are
+//! synchronous — the coordinator's worker pool is where concurrency
+//! lives, and the admission gate bounds how much of it any number of
+//! connections can claim. Accept loops poll non-blocking listeners so
+//! [`Server::shutdown`] can stop them promptly; session sockets get
+//! short read/write timeouts for the same reason (the session loops
+//! treat a timeout as "check the stop flag, try again").
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::Coordinator;
+use crate::tables::LifecycleClock;
+
+use super::admin::serve_admin;
+use super::session::{serve_session, AdmissionGate, SessionConfig};
+use super::ServerStats;
+
+/// How long a blocked accept/read/write waits before re-checking the
+/// stop flag.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Everything an operator can turn (`warpspeed serve --tcp` maps its
+/// flags onto this; see README §Serving).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Data-protocol bind address; port 0 picks a free port.
+    pub data_addr: String,
+    /// Admin-protocol bind address.
+    pub admin_addr: String,
+    /// Pipelined requests per session batched into one coordinator
+    /// submit ([`SessionConfig::window`]).
+    pub window: usize,
+    /// Aggregate admitted-but-unanswered op cap across all sessions
+    /// ([`AdmissionGate`]); beyond it, windows answer busy.
+    pub max_inflight_ops: usize,
+    /// Live data connections beyond which new ones are refused with
+    /// `SERVER_ERROR too many connections`.
+    pub max_connections: usize,
+    /// Command-line length cap before forced resync.
+    pub max_line: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            data_addr: "127.0.0.1:9650".into(),
+            admin_addr: "127.0.0.1:9651".into(),
+            window: 64,
+            max_inflight_ops: 16 * 1024,
+            max_connections: 1024,
+            max_line: 1024,
+        }
+    }
+}
+
+/// A running server: two listeners + their session threads. Dropping
+/// it does NOT stop the threads — call [`Server::shutdown`].
+pub struct Server {
+    data_addr: SocketAddr,
+    admin_addr: SocketAddr,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    accepts: Vec<JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind both ports and start accepting. `clock` arms the admin
+    /// `tick` command (pass the coordinator's lifecycle clock, or
+    /// `None` when serving without TTL).
+    pub fn start(
+        coord: Arc<Coordinator>,
+        clock: Option<Arc<LifecycleClock>>,
+        cfg: ServerConfig,
+    ) -> std::io::Result<Server> {
+        let data = TcpListener::bind(&cfg.data_addr)?;
+        let admin = TcpListener::bind(&cfg.admin_addr)?;
+        data.set_nonblocking(true)?;
+        admin.set_nonblocking(true)?;
+        let data_addr = data.local_addr()?;
+        let admin_addr = admin.local_addr()?;
+        let stats = Arc::new(ServerStats::default());
+        let gate = Arc::new(AdmissionGate::new(cfg.max_inflight_ops));
+        let stop = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let scfg = SessionConfig { window: cfg.window, max_line: cfg.max_line };
+
+        let accepts = vec![
+            {
+                let (coord, stats, gate, stop, sessions, scfg) = (
+                    coord.clone(),
+                    stats.clone(),
+                    gate.clone(),
+                    stop.clone(),
+                    sessions.clone(),
+                    scfg.clone(),
+                );
+                let max_conns = cfg.max_connections;
+                std::thread::spawn(move || {
+                    accept_loop(data, &stop, &sessions, move |sock, stop| {
+                        data_session(sock, &coord, &gate, &stats, &scfg, max_conns, stop)
+                    })
+                })
+            },
+            {
+                let (coord, stats, gate, stop, sessions) =
+                    (coord, stats.clone(), gate, stop.clone(), sessions.clone());
+                std::thread::spawn(move || {
+                    accept_loop(admin, &stop, &sessions, move |sock, stop| {
+                        let _ = serve_admin(
+                            &sock,
+                            &sock,
+                            &coord,
+                            &stats,
+                            &gate,
+                            clock.as_deref(),
+                            stop,
+                        );
+                    })
+                })
+            },
+        ];
+        Ok(Server { data_addr, admin_addr, stats, stop, accepts, sessions })
+    }
+
+    /// Where the data protocol actually listens (resolves port 0).
+    pub fn data_addr(&self) -> SocketAddr {
+        self.data_addr
+    }
+
+    /// Where the admin protocol actually listens.
+    pub fn admin_addr(&self) -> SocketAddr {
+        self.admin_addr
+    }
+
+    /// The serving-tier counters (shared with every session).
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.stats.clone()
+    }
+
+    /// Stop accepting, let every session finish its current window,
+    /// join all threads. Sessions see the stop flag at their next
+    /// read/write timeout, so this returns within a few poll periods.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.accepts.drain(..) {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.sessions.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Poll a non-blocking listener, spawning `handle` per connection and
+/// reaping finished session threads as a side effect of accepting.
+fn accept_loop<F>(
+    listener: TcpListener,
+    stop: &Arc<AtomicBool>,
+    sessions: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    handle: F,
+) where
+    F: Fn(TcpStream, &AtomicBool) + Clone + Send + 'static,
+{
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                let handle = handle.clone();
+                let stop = stop.clone();
+                let h = std::thread::spawn(move || {
+                    if prepare(&sock).is_ok() {
+                        handle(sock, &stop);
+                    }
+                });
+                let mut guard = sessions.lock().unwrap();
+                guard.retain(|h| !h.is_finished());
+                guard.push(h);
+            }
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+}
+
+/// Accepted sockets inherit the listener's non-blocking mode on some
+/// platforms: force blocking + short timeouts so the session loops see
+/// `WouldBlock`/`TimedOut` (their stop-check points) instead of
+/// spinning or hanging.
+fn prepare(sock: &TcpStream) -> std::io::Result<()> {
+    sock.set_nonblocking(false)?;
+    sock.set_read_timeout(Some(POLL))?;
+    sock.set_write_timeout(Some(POLL))?;
+    sock.set_nodelay(true)
+}
+
+/// One data connection: enforce the connection cap, run the session,
+/// keep the connection gauges honest on every exit path.
+fn data_session(
+    sock: TcpStream,
+    coord: &Arc<Coordinator>,
+    gate: &Arc<AdmissionGate>,
+    stats: &Arc<ServerStats>,
+    scfg: &SessionConfig,
+    max_conns: usize,
+    stop: &AtomicBool,
+) {
+    let relaxed = Ordering::Relaxed;
+    stats.total_connections.fetch_add(1, relaxed);
+    if stats.curr_connections.load(relaxed) >= max_conns as u64 {
+        stats.rejected_connections.fetch_add(1, relaxed);
+        let mut sock = sock;
+        let _ = sock.write_all(b"SERVER_ERROR too many connections\r\n");
+        return;
+    }
+    stats.curr_connections.fetch_add(1, relaxed);
+    let _ = serve_session(&sock, &sock, coord, gate, stats, scfg, stop);
+    stats.curr_connections.fetch_sub(1, relaxed);
+}

@@ -1,0 +1,81 @@
+//! L4 serving tier: a TCP front end over the [`crate::coordinator`],
+//! structured the way pelikan splits segcache — data protocol, session
+//! loop, admin protocol, and listener are separate modules with one
+//! job each:
+//!
+//! * [`protocol`] — memcached-style text framing: incremental parser
+//!   over torn reads, request/response types, exact wire encoding. The
+//!   grammar is specified in `docs/PROTOCOL.md`.
+//! * [`session`] — one synchronous loop per connection: parse a bounded
+//!   window of pipelined requests, translate it into ONE coordinator
+//!   batch, admit it through the global [`session::AdmissionGate`],
+//!   answer in order. Backpressure is structural: a session never reads
+//!   its socket while its window executes, and an overloaded gate
+//!   answers `SERVER_ERROR busy` instead of queueing.
+//! * [`admin`] — the out-of-band port: `stats` (server counters +
+//!   coordinator/table gauges), `version`, and the deterministic
+//!   lifecycle `tick` hook.
+//! * [`listener`] — socket plumbing: bind, accept, per-connection
+//!   threads, connection cap, graceful [`listener::Server::shutdown`].
+//!
+//! The tier is deliberately thin: it owns no table state, only byte
+//! buffers and counters. Everything that touches keys goes through
+//! [`crate::coordinator::Coordinator::submit`]/`collect` so the batch
+//! pipeline — run-splitting, shard-affine workers, migration/sweep
+//! interleaving — serves network traffic exactly as it serves the
+//! bench exhibits ([`crate::bench::serve`] measures it end to end).
+
+pub mod admin;
+pub mod listener;
+pub mod protocol;
+pub mod session;
+
+pub use listener::{Server, ServerConfig};
+
+use std::sync::atomic::AtomicU64;
+
+/// Monotonic serving-tier counters, shared by every session and
+/// surfaced as `STAT` lines on the admin port (see `docs/PROTOCOL.md`
+/// for the meaning of each).
+#[derive(Default)]
+pub struct ServerStats {
+    pub total_connections: AtomicU64,
+    pub curr_connections: AtomicU64,
+    /// Connections refused at the [`ServerConfig::max_connections`] cap.
+    pub rejected_connections: AtomicU64,
+    pub cmd_get: AtomicU64,
+    pub cmd_set: AtomicU64,
+    pub cmd_delete: AtomicU64,
+    pub cmd_incr: AtomicU64,
+    /// Per-key get results (a 3-key `get` counts three times).
+    pub get_hits: AtomicU64,
+    pub get_misses: AtomicU64,
+    /// Requests answered `SERVER_ERROR busy` at the admission gate.
+    pub busy_rejections: AtomicU64,
+    /// Requests answered `ERROR`/`CLIENT_ERROR` (malformed input).
+    pub parse_errors: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+}
+
+impl ServerStats {
+    /// Name/value pairs in stable order for `STAT` emission.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        vec![
+            ("curr_connections", self.curr_connections.load(Relaxed)),
+            ("total_connections", self.total_connections.load(Relaxed)),
+            ("rejected_connections", self.rejected_connections.load(Relaxed)),
+            ("cmd_get", self.cmd_get.load(Relaxed)),
+            ("cmd_set", self.cmd_set.load(Relaxed)),
+            ("cmd_delete", self.cmd_delete.load(Relaxed)),
+            ("cmd_incr", self.cmd_incr.load(Relaxed)),
+            ("get_hits", self.get_hits.load(Relaxed)),
+            ("get_misses", self.get_misses.load(Relaxed)),
+            ("busy_rejections", self.busy_rejections.load(Relaxed)),
+            ("parse_errors", self.parse_errors.load(Relaxed)),
+            ("bytes_read", self.bytes_read.load(Relaxed)),
+            ("bytes_written", self.bytes_written.load(Relaxed)),
+        ]
+    }
+}

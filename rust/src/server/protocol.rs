@@ -1,0 +1,498 @@
+//! Data-protocol parser: memcached-style text framing over a byte
+//! stream, resilient to arbitrary read boundaries.
+//!
+//! [`ProtocolReader`] owns the unconsumed byte tail of a socket. The
+//! session pushes whatever `read()` returned and pulls complete
+//! requests; a request split across any number of reads ("torn" reads,
+//! including mid-data-block) simply stays pending until its last byte
+//! arrives. The full wire grammar — commands, error taxonomy, resync
+//! rules — is specified in `docs/PROTOCOL.md`; this module is its
+//! implementation and the unit tests below pin the corner cases.
+//!
+//! Framing rules that shape the code:
+//!
+//! * Lines end in `\r\n`; a bare `\n` is accepted on receive (the
+//!   server always *sends* `\r\n`).
+//! * Keys and values are decimal `u64` (≤ [`MAX_NUM_DIGITS`] digits) —
+//!   the store is a `u64 → u64` map, not a byte cache.
+//! * A line longer than the configured maximum is answered with
+//!   `CLIENT_ERROR line too long` and the stream is discarded up to the
+//!   next `\n` (resync; the connection stays open).
+//! * A malformed `set` *header* line consumes the header plus the one
+//!   following line — the orphaned data block the client is about to
+//!   send — so a pipelined stream stays aligned after the error.
+
+/// Hard cap on digits in any decimal number token (`u64::MAX` has 20).
+pub const MAX_NUM_DIGITS: usize = 20;
+
+/// Hard cap on keys in one `get`/`gets` request, so a single line can
+/// never fan out into an unbounded batch.
+pub const MAX_GET_KEYS: usize = 64;
+
+/// One parsed data-port request (see `docs/PROTOCOL.md`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// `set <key> <flags> <exptime> <bytes>` + data block. `ttl` is the
+    /// exptime in lifecycle ticks; 0 means immortal.
+    Set { key: u64, val: u64, ttl: u64 },
+    /// `get`/`gets` with one or more keys.
+    Get { keys: Vec<u64> },
+    /// `delete <key>`.
+    Delete { key: u64 },
+    /// `incr <key> <delta>`.
+    Incr { key: u64, delta: u64 },
+    /// `quit` — close the connection after responding to everything
+    /// parsed before it.
+    Quit,
+}
+
+/// One response frame, encoded with [`Response::encode`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    Stored,
+    Deleted,
+    NotFound,
+    /// `incr` result: the post-increment value on its own line.
+    Counter(u64),
+    /// `get` result: one `VALUE <key> 0 <bytes>` + data line per hit
+    /// (misses are silently omitted), terminated by `END`.
+    Values(Vec<(u64, u64)>),
+    /// `ERROR` — unknown command.
+    Error,
+    /// `CLIENT_ERROR <msg>` — the client sent something malformed.
+    ClientError(&'static str),
+    /// `SERVER_ERROR <msg>` — the server cannot satisfy a well-formed
+    /// request (overload, table full, TTL not armed).
+    ServerError(&'static str),
+}
+
+impl Response {
+    /// Append the wire encoding (all lines `\r\n`-terminated).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Response::Stored => out.extend_from_slice(b"STORED\r\n"),
+            Response::Deleted => out.extend_from_slice(b"DELETED\r\n"),
+            Response::NotFound => out.extend_from_slice(b"NOT_FOUND\r\n"),
+            Response::Counter(v) => {
+                out.extend_from_slice(v.to_string().as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Response::Values(hits) => {
+                for &(k, v) in hits {
+                    let data = v.to_string();
+                    out.extend_from_slice(
+                        format!("VALUE {} 0 {}\r\n", k, data.len()).as_bytes(),
+                    );
+                    out.extend_from_slice(data.as_bytes());
+                    out.extend_from_slice(b"\r\n");
+                }
+                out.extend_from_slice(b"END\r\n");
+            }
+            Response::Error => out.extend_from_slice(b"ERROR\r\n"),
+            Response::ClientError(msg) => {
+                out.extend_from_slice(b"CLIENT_ERROR ");
+                out.extend_from_slice(msg.as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Response::ServerError(msg) => {
+                out.extend_from_slice(b"SERVER_ERROR ");
+                out.extend_from_slice(msg.as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+        }
+    }
+}
+
+/// One parser step: a complete request, or an error frame that already
+/// consumed the offending bytes and must be answered in stream order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Step {
+    Ok(Request),
+    Bad(Response),
+}
+
+/// Incremental request parser over the unconsumed socket tail.
+pub struct ProtocolReader {
+    buf: Vec<u8>,
+    /// Resync mode: swallow everything up to and including the next
+    /// `\n` before parsing again (armed by oversized lines and by
+    /// malformed `set` headers, whose orphaned data block follows).
+    discarding: bool,
+    max_line: usize,
+}
+
+impl ProtocolReader {
+    pub fn new(max_line: usize) -> Self {
+        ProtocolReader { buf: Vec::new(), discarding: false, max_line }
+    }
+
+    /// Append freshly read socket bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pull the next complete request or error frame; `None` means the
+    /// buffer holds only an incomplete tail and the session must read
+    /// more bytes before anything can be answered.
+    pub fn next(&mut self) -> Option<Step> {
+        loop {
+            if self.discarding {
+                match find_lf(&self.buf) {
+                    Some(i) => {
+                        self.buf.drain(..=i);
+                        self.discarding = false;
+                        continue;
+                    }
+                    None => {
+                        self.buf.clear();
+                        return None;
+                    }
+                }
+            }
+            let Some(lf) = find_lf(&self.buf) else {
+                if self.buf.len() > self.max_line {
+                    self.buf.clear();
+                    self.discarding = true;
+                    return Some(Step::Bad(Response::ClientError("line too long")));
+                }
+                return None;
+            };
+            if lf > self.max_line {
+                self.buf.drain(..=lf);
+                return Some(Step::Bad(Response::ClientError("line too long")));
+            }
+            // `None` from `parse_line` means a complete `set` header
+            // whose data block has not fully arrived: nothing was
+            // consumed, the session must read more bytes.
+            return self.parse_line(lf);
+        }
+    }
+
+    /// Parse the command line ending at byte `lf` (the `\n` index).
+    /// Returns `None` only for a well-formed `set` whose data block is
+    /// still in flight (nothing consumed); otherwise consumes exactly
+    /// the frame's bytes and returns its step.
+    fn parse_line(&mut self, lf: usize) -> Option<Step> {
+        let mut end = lf;
+        if end > 0 && self.buf[end - 1] == b'\r' {
+            end -= 1;
+        }
+        let Ok(line) = std::str::from_utf8(&self.buf[..end]) else {
+            self.buf.drain(..=lf);
+            return Some(Step::Bad(Response::ClientError("malformed line")));
+        };
+        let toks: Vec<String> = line.split_ascii_whitespace().map(str::to_owned).collect();
+        let step = match toks.split_first() {
+            // Blank line: answer ERROR rather than silently eating it,
+            // so a desynced client notices immediately.
+            None => Step::Bad(Response::Error),
+            Some((cmd, rest)) => match cmd.as_str() {
+                "set" => return self.parse_set(lf, rest),
+                "get" | "gets" => parse_get(rest),
+                "delete" => match rest {
+                    [k] => match parse_u64(k) {
+                        Some(key) => Step::Ok(Request::Delete { key }),
+                        None => Step::Bad(Response::ClientError("bad key")),
+                    },
+                    _ => Step::Bad(Response::ClientError("bad key")),
+                },
+                "incr" => match rest {
+                    [k, d] => match (parse_u64(k), parse_u64(d)) {
+                        (Some(key), Some(delta)) => Step::Ok(Request::Incr { key, delta }),
+                        (None, _) => Step::Bad(Response::ClientError("bad key")),
+                        _ => Step::Bad(Response::ClientError("bad delta")),
+                    },
+                    _ => Step::Bad(Response::ClientError("bad delta")),
+                },
+                "quit" if rest.is_empty() => Step::Ok(Request::Quit),
+                _ => Step::Bad(Response::Error),
+            },
+        };
+        self.buf.drain(..=lf);
+        Some(step)
+    }
+
+    /// `set <key> <flags> <exptime> <bytes>` + `<data>\r\n`. Consumes
+    /// nothing until the whole frame (header + data block) is buffered;
+    /// a bad header consumes the header and arms discard of the
+    /// orphaned data line that follows it.
+    fn parse_set(&mut self, lf: usize, rest: &[String]) -> Option<Step> {
+        let hdr = match rest {
+            [k, f, e, n] => match (parse_u64(k), parse_u64(f), parse_u64(e), parse_u64(n)) {
+                (Some(key), Some(flags), Some(ttl), Some(nbytes)) => {
+                    Some((key, flags, ttl, nbytes as usize))
+                }
+                _ => None,
+            },
+            _ => None,
+        };
+        let reject = |this: &mut Self, msg: &'static str| {
+            this.buf.drain(..=lf);
+            this.discarding = true;
+            Some(Step::Bad(Response::ClientError(msg)))
+        };
+        let Some((key, flags, ttl, nbytes)) = hdr else {
+            return reject(self, "bad set header");
+        };
+        if flags != 0 {
+            return reject(self, "flags must be 0");
+        }
+        if nbytes == 0 || nbytes > MAX_NUM_DIGITS {
+            return reject(self, "value too large");
+        }
+        // Header is well-formed: wait for data + at least one
+        // terminator byte before consuming anything.
+        let data_start = lf + 1;
+        if self.buf.len() < data_start + nbytes + 1 {
+            return None;
+        }
+        let consumed = match self.buf[data_start + nbytes] {
+            b'\n' => data_start + nbytes + 1,
+            b'\r' => match self.buf.get(data_start + nbytes + 1) {
+                None => return None,
+                Some(b'\n') => data_start + nbytes + 2,
+                Some(_) => {
+                    self.buf.drain(..data_start + nbytes);
+                    self.discarding = true;
+                    return Some(Step::Bad(Response::ClientError("bad data chunk")));
+                }
+            },
+            _ => {
+                self.buf.drain(..data_start + nbytes);
+                self.discarding = true;
+                return Some(Step::Bad(Response::ClientError("bad data chunk")));
+            }
+        };
+        let val = std::str::from_utf8(&self.buf[data_start..data_start + nbytes])
+            .ok()
+            .and_then(parse_u64);
+        self.buf.drain(..consumed);
+        Some(match val {
+            Some(val) => Step::Ok(Request::Set { key, val, ttl }),
+            None => Step::Bad(Response::ClientError("bad value")),
+        })
+    }
+}
+
+fn parse_get(rest: &[String]) -> Step {
+    if rest.is_empty() {
+        return Step::Bad(Response::ClientError("bad key"));
+    }
+    if rest.len() > MAX_GET_KEYS {
+        return Step::Bad(Response::ClientError("too many keys"));
+    }
+    let mut keys = Vec::with_capacity(rest.len());
+    for t in rest {
+        match parse_u64(t) {
+            Some(k) => keys.push(k),
+            None => return Step::Bad(Response::ClientError("bad key")),
+        }
+    }
+    Step::Ok(Request::Get { keys })
+}
+
+#[inline]
+fn find_lf(buf: &[u8]) -> Option<usize> {
+    buf.iter().position(|&b| b == b'\n')
+}
+
+/// Strict decimal `u64`: 1–20 ASCII digits, checked overflow. Leading
+/// zeros are accepted (`007` → 7).
+fn parse_u64(tok: &str) -> Option<u64> {
+    if tok.is_empty() || tok.len() > MAX_NUM_DIGITS {
+        return None;
+    }
+    if !tok.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    tok.parse::<u64>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Feed `input` in chunks of `step` bytes, draining every step.
+    fn parse_chunked(input: &[u8], step: usize) -> Vec<Step> {
+        let mut r = ProtocolReader::new(1024);
+        let mut out = Vec::new();
+        for chunk in input.chunks(step.max(1)) {
+            r.push(chunk);
+            while let Some(s) = r.next() {
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    fn set(key: u64, val: u64, ttl: u64) -> Step {
+        Step::Ok(Request::Set { key, val, ttl })
+    }
+
+    #[test]
+    fn torn_reads_reassemble_every_frame() {
+        let input = b"set 7 0 0 3\r\n123\r\nget 7 8\r\ndelete 9\r\nincr 7 5\r\nquit\r\n";
+        let want = vec![
+            set(7, 123, 0),
+            Step::Ok(Request::Get { keys: vec![7, 8] }),
+            Step::Ok(Request::Delete { key: 9 }),
+            Step::Ok(Request::Incr { key: 7, delta: 5 }),
+            Step::Ok(Request::Quit),
+        ];
+        // Byte-by-byte is the worst torn read; every other chunking must
+        // agree with it AND with the whole-buffer parse (the oracle).
+        for step in [1, 2, 3, 5, 7, input.len()] {
+            assert_eq!(parse_chunked(input, step), want, "chunk size {step}");
+        }
+    }
+
+    #[test]
+    fn incomplete_frames_return_none_without_consuming() {
+        let mut r = ProtocolReader::new(1024);
+        r.push(b"set 7 0 0 3\r\n12");
+        assert_eq!(r.next(), None, "data block still in flight");
+        r.push(b"3\r");
+        assert_eq!(r.next(), None, "terminator half-arrived");
+        r.push(b"\n");
+        assert_eq!(r.next(), Some(set(7, 123, 0)));
+        assert_eq!(r.next(), None);
+    }
+
+    #[test]
+    fn pipelined_mixed_stream_matches_sequential_oracle() {
+        // A long pipelined stream; the oracle is the one-frame-at-a-time
+        // parse of each request in isolation.
+        let mut input = Vec::new();
+        let mut oracle = Vec::new();
+        for i in 0..50u64 {
+            input.extend_from_slice(format!("set {i} 0 0 2\r\n4{}\r\n", i % 10).as_bytes());
+            oracle.push(set(i, 40 + i % 10, 0));
+            input.extend_from_slice(format!("get {i}\r\n").as_bytes());
+            oracle.push(Step::Ok(Request::Get { keys: vec![i] }));
+            if i % 3 == 0 {
+                input.extend_from_slice(format!("delete {i}\r\n").as_bytes());
+                oracle.push(Step::Ok(Request::Delete { key: i }));
+            }
+        }
+        for step in [1, 4, 9, 64, input.len()] {
+            assert_eq!(parse_chunked(&input, step), oracle, "chunk size {step}");
+        }
+    }
+
+    #[test]
+    fn oversized_key_and_value_are_rejected() {
+        // 21 digits overflows the token cap.
+        let out = parse_chunked(b"get 123456789012345678901\r\n", 1);
+        assert_eq!(out, vec![Step::Bad(Response::ClientError("bad key"))]);
+        // u64 overflow with 20 digits is also caught (checked parse).
+        let out = parse_chunked(b"delete 99999999999999999999\r\n", 1);
+        assert_eq!(out, vec![Step::Bad(Response::ClientError("bad key"))]);
+        // A 21-byte data block can never be a u64: rejected at the
+        // header, orphaned data line discarded, stream stays aligned.
+        let out = parse_chunked(b"set 1 0 0 21\r\n111111111111111111111\r\nget 1\r\n", 3);
+        assert_eq!(
+            out,
+            vec![
+                Step::Bad(Response::ClientError("value too large")),
+                Step::Ok(Request::Get { keys: vec![1] }),
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_utf8_is_a_client_error_not_a_crash() {
+        let out = parse_chunked(b"get \xff\xfe\r\nget 5\r\n", 1);
+        assert_eq!(
+            out,
+            vec![
+                Step::Bad(Response::ClientError("malformed line")),
+                Step::Ok(Request::Get { keys: vec![5] }),
+            ]
+        );
+    }
+
+    #[test]
+    fn oversized_line_resyncs_at_next_lf() {
+        let mut input = vec![b'x'; 2000];
+        input.extend_from_slice(b"\r\nget 3\r\n");
+        let out = parse_chunked(&input, 128);
+        assert_eq!(
+            out,
+            vec![
+                Step::Bad(Response::ClientError("line too long")),
+                Step::Ok(Request::Get { keys: vec![3] }),
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_set_header_discards_the_orphaned_data_line() {
+        for bad in [
+            "set x 0 0 3",  // non-numeric key
+            "set 1 2 0 3",  // flags must be 0
+            "set 1 0 0",    // wrong arity
+        ] {
+            let input = format!("{bad}\r\n123\r\nget 9\r\n");
+            let out = parse_chunked(input.as_bytes(), 2);
+            assert_eq!(out.len(), 2, "{bad}: data line must be swallowed");
+            assert!(matches!(out[0], Step::Bad(Response::ClientError(_))), "{bad}");
+            assert_eq!(out[1], Step::Ok(Request::Get { keys: vec![9] }), "{bad}");
+        }
+    }
+
+    #[test]
+    fn wrong_byte_count_is_a_bad_data_chunk() {
+        // bytes=3 but the client sent 5 digits: the frame is torn at
+        // data+terminator, the parser resyncs at the next LF.
+        let out = parse_chunked(b"set 1 0 0 3\r\n12345\r\nget 2\r\n", 4);
+        assert_eq!(
+            out,
+            vec![
+                Step::Bad(Response::ClientError("bad data chunk")),
+                Step::Ok(Request::Get { keys: vec![2] }),
+            ]
+        );
+    }
+
+    #[test]
+    fn non_numeric_data_block_is_a_bad_value() {
+        let out = parse_chunked(b"set 1 0 0 3\r\nabc\r\nget 2\r\n", 1);
+        assert_eq!(
+            out,
+            vec![
+                Step::Bad(Response::ClientError("bad value")),
+                Step::Ok(Request::Get { keys: vec![2] }),
+            ]
+        );
+    }
+
+    #[test]
+    fn bare_lf_accepted_and_ttl_parses() {
+        let out = parse_chunked(b"set 4 0 9 2\n55\nquit\n", 1);
+        assert_eq!(out, vec![set(4, 55, 9), Step::Ok(Request::Quit)]);
+    }
+
+    #[test]
+    fn get_key_fanout_is_bounded() {
+        let mut line = String::from("get");
+        for i in 0..(MAX_GET_KEYS + 1) {
+            line.push_str(&format!(" {i}"));
+        }
+        line.push_str("\r\n");
+        let out = parse_chunked(line.as_bytes(), 16);
+        assert_eq!(out, vec![Step::Bad(Response::ClientError("too many keys"))]);
+    }
+
+    #[test]
+    fn responses_encode_exact_wire_bytes() {
+        let mut buf = Vec::new();
+        Response::Values(vec![(7, 123), (9, 5)]).encode(&mut buf);
+        Response::Counter(40).encode(&mut buf);
+        Response::ServerError("busy").encode(&mut buf);
+        Response::Stored.encode(&mut buf);
+        assert_eq!(
+            buf,
+            b"VALUE 7 0 3\r\n123\r\nVALUE 9 0 1\r\n5\r\nEND\r\n40\r\nSERVER_ERROR busy\r\nSTORED\r\n"
+        );
+    }
+}

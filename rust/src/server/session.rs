@@ -1,0 +1,610 @@
+//! Data-port session: the bounded bridge between one socket and the
+//! coordinator's batch pipeline.
+//!
+//! One session = one connection = one synchronous loop:
+//!
+//! 1. parse up to [`SessionConfig::window`] pipelined requests out of
+//!    the [`ProtocolReader`];
+//! 2. translate them into ONE [`Batch`] (per-key order inside the
+//!    window is the arrival order, which the coordinator preserves);
+//! 3. admit the batch through the shared [`AdmissionGate`] — the
+//!    explicit session→coordinator bound — and execute it;
+//! 4. write every response, in request order, then go back to reading.
+//!
+//! Backpressure falls out of the shape rather than being bolted on:
+//! while a window executes, the session does not read its socket, so a
+//! client that keeps pipelining fills the kernel receive buffer and
+//! then its own TCP send window — per-connection flow control with no
+//! unbounded queue anywhere. A *slow reader* blocks only its own
+//! response write (after its gate permits are released), never another
+//! session and never the coordinator's background jobs; the tests below
+//! pin that. When the gate itself is full — aggregate inflight ops
+//! across all sessions at the cap — the window is refused with
+//! `SERVER_ERROR busy` per request instead of queueing, so overload is
+//! visible to clients immediately (`docs/PROTOCOL.md` §backpressure).
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::coordinator::{Batch, Coordinator, Op, OpResult};
+
+use super::protocol::{ProtocolReader, Request, Response, Step};
+use super::ServerStats;
+
+/// Global cap on operations admitted to the coordinator but not yet
+/// answered, shared by every session. `try_acquire` never blocks —
+/// overload is reported, not queued.
+pub struct AdmissionGate {
+    cap: usize,
+    inflight: AtomicUsize,
+}
+
+impl AdmissionGate {
+    pub fn new(cap: usize) -> Self {
+        AdmissionGate { cap, inflight: AtomicUsize::new(0) }
+    }
+
+    /// Reserve `n` operation slots; false means the window must be
+    /// refused. Lock-free CAS loop: concurrent sessions race, nobody
+    /// waits.
+    pub fn try_acquire(&self, n: usize) -> bool {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur.saturating_add(n) > self.cap {
+                return false;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + n,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn release(&self, n: usize) {
+        self.inflight.fetch_sub(n, Ordering::Release);
+    }
+
+    /// Currently admitted, unanswered operations (`STAT inflight_ops`).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The configured cap (`STAT admission_cap`).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Per-session knobs (the server copies one into every session).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Max pipelined requests translated into one batch per turn.
+    pub window: usize,
+    /// Max command-line length in bytes before forced resync.
+    pub max_line: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { window: 64, max_line: 1024 }
+    }
+}
+
+/// How one parsed request maps back to its responses.
+enum Plan {
+    /// Answer directly (parse error, `ttl disabled`) — no ops.
+    Direct(Response),
+    /// `set`: one op at `base`.
+    Set { base: usize },
+    /// `delete`: one op at `base`.
+    Delete { base: usize },
+    /// `get`: `keys.len()` query ops starting at `base`.
+    Get { base: usize, keys: Vec<u64> },
+    /// `incr`: add op at `base`, read-back query at `base + 1` (adjacent
+    /// same-key ops in one batch — atomic w.r.t. other batches).
+    Incr { base: usize },
+}
+
+/// Drive one connection until EOF, `quit`, a fatal I/O error, or server
+/// stop. Generic over the byte streams so the deterministic tests below
+/// can substitute scripted readers and blocking writers for sockets.
+pub fn serve_session<R: Read, W: Write>(
+    mut rd: R,
+    mut wr: W,
+    coord: &Coordinator,
+    gate: &AdmissionGate,
+    stats: &ServerStats,
+    cfg: &SessionConfig,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    let ttl_enabled = coord.table.supports_ttl();
+    let mut reader = ProtocolReader::new(cfg.max_line);
+    let mut rdbuf = vec![0u8; 4096];
+    let mut out = Vec::new();
+    loop {
+        // Parse at most one window; anything beyond it stays buffered
+        // (here or in the kernel) until this window is answered.
+        let mut steps = Vec::new();
+        let mut quit = false;
+        while steps.len() < cfg.window && !quit {
+            match reader.next() {
+                Some(s) => {
+                    quit = matches!(s, Step::Ok(Request::Quit));
+                    steps.push(s);
+                }
+                None => break,
+            }
+        }
+        if steps.is_empty() {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match rd.read(&mut rdbuf) {
+                Ok(0) => return Ok(()),
+                Ok(n) => {
+                    stats.bytes_read.fetch_add(n as u64, Ordering::Relaxed);
+                    reader.push(&rdbuf[..n]);
+                }
+                Err(e) if retryable(&e) => continue,
+                Err(e) => return Err(e),
+            }
+            continue;
+        }
+        let (plans, ops) = build_batch(steps, ttl_enabled, stats);
+        let results = if ops.is_empty() {
+            Some(Vec::new())
+        } else if gate.try_acquire(ops.len()) {
+            let n = ops.len();
+            let results = coord.execute(&Batch { ops });
+            gate.release(n);
+            Some(results)
+        } else {
+            None
+        };
+        out.clear();
+        encode_responses(&plans, results.as_deref(), stats, &mut out);
+        write_all_retry(&mut wr, &out, stop)?;
+        stats.bytes_written.fetch_add(out.len() as u64, Ordering::Relaxed);
+        if quit {
+            return Ok(());
+        }
+    }
+}
+
+/// Translate one parsed window into response plans + coordinator ops.
+/// `seq` is the op's index, so `Coordinator::execute`'s seq-sorted
+/// result vector can be indexed directly.
+fn build_batch(
+    steps: Vec<Step>,
+    ttl_enabled: bool,
+    stats: &ServerStats,
+) -> (Vec<Plan>, Vec<(u64, Op)>) {
+    let mut plans = Vec::with_capacity(steps.len());
+    let mut ops: Vec<(u64, Op)> = Vec::new();
+    for step in steps {
+        let req = match step {
+            Step::Bad(resp) => {
+                stats.parse_errors.fetch_add(1, Ordering::Relaxed);
+                plans.push(Plan::Direct(resp));
+                continue;
+            }
+            Step::Ok(req) => req,
+        };
+        match req {
+            Request::Quit => {} // answered by closing; never reaches the table
+            Request::Set { key, val, ttl } => {
+                stats.cmd_set.fetch_add(1, Ordering::Relaxed);
+                if ttl > 0 && !ttl_enabled {
+                    plans.push(Plan::Direct(Response::ServerError("ttl disabled")));
+                    continue;
+                }
+                let base = ops.len();
+                let op = if ttl > 0 { Op::UpsertTtl(key, val, ttl) } else { Op::Upsert(key, val) };
+                ops.push((base as u64, op));
+                plans.push(Plan::Set { base });
+            }
+            Request::Get { keys } => {
+                stats.cmd_get.fetch_add(1, Ordering::Relaxed);
+                let base = ops.len();
+                for &k in &keys {
+                    ops.push((ops.len() as u64, Op::Query(k)));
+                }
+                plans.push(Plan::Get { base, keys });
+            }
+            Request::Delete { key } => {
+                stats.cmd_delete.fetch_add(1, Ordering::Relaxed);
+                let base = ops.len();
+                ops.push((base as u64, Op::Erase(key)));
+                plans.push(Plan::Delete { base });
+            }
+            Request::Incr { key, delta } => {
+                stats.cmd_incr.fetch_add(1, Ordering::Relaxed);
+                let base = ops.len();
+                ops.push((base as u64, Op::UpsertAdd(key, delta)));
+                ops.push((base as u64 + 1, Op::Query(key)));
+                plans.push(Plan::Incr { base });
+            }
+        }
+    }
+    (plans, ops)
+}
+
+/// Encode every plan's response in request order. `results` is the
+/// seq-sorted output of `Coordinator::execute`; `None` means the gate
+/// refused the window — every table-touching request answers busy.
+fn encode_responses(
+    plans: &[Plan],
+    results: Option<&[(u64, OpResult)]>,
+    stats: &ServerStats,
+    out: &mut Vec<u8>,
+) {
+    for plan in plans {
+        let resp = match (plan, results) {
+            (Plan::Direct(r), _) => r.clone(),
+            (_, None) => {
+                stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                Response::ServerError("busy")
+            }
+            (&Plan::Set { base }, Some(rs)) => match rs[base].1 {
+                OpResult::Rejected => Response::ServerError("full"),
+                _ => Response::Stored,
+            },
+            (&Plan::Delete { base }, Some(rs)) => match rs[base].1 {
+                OpResult::Erased(true) => Response::Deleted,
+                _ => Response::NotFound,
+            },
+            (Plan::Get { base, keys }, Some(rs)) => {
+                let mut hits = Vec::new();
+                for (j, &k) in keys.iter().enumerate() {
+                    match rs[base + j].1 {
+                        OpResult::Value(Some(v)) => {
+                            stats.get_hits.fetch_add(1, Ordering::Relaxed);
+                            hits.push((k, v));
+                        }
+                        _ => {
+                            stats.get_misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Response::Values(hits)
+            }
+            (&Plan::Incr { base }, Some(rs)) => match (rs[base].1, rs[base + 1].1) {
+                (OpResult::Rejected, _) => Response::ServerError("full"),
+                (_, OpResult::Value(Some(v))) => Response::Counter(v),
+                _ => Response::NotFound,
+            },
+        };
+        resp.encode(out);
+    }
+}
+
+/// `write_all` + flush that survives socket write timeouts: retry while
+/// the server is live, abort once it is stopping (so shutdown never
+/// hangs on a wedged client). Shared with the admin loop.
+pub(super) fn write_all_retry<W: Write>(
+    wr: &mut W,
+    mut buf: &[u8],
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    while !buf.is_empty() {
+        match wr.write(buf) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "socket closed")),
+            Ok(n) => buf = &buf[n..],
+            Err(e) if retryable(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Err(io::Error::new(io::ErrorKind::ConnectionAborted, "server stop"));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    loop {
+        match wr.flush() {
+            Ok(()) => return Ok(()),
+            Err(e) if retryable(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Err(io::Error::new(io::ErrorKind::ConnectionAborted, "server stop"));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+pub(super) fn retryable(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, ReshardPolicy};
+    use crate::tables::{LifecycleConfig, TableKind};
+    use std::sync::{Arc, Condvar, Mutex};
+
+    fn coord(kind: TableKind, lifecycle: Option<LifecycleConfig>) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            kind,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 256,
+            growth: None,
+            reshard: lifecycle.as_ref().map(|_| ReshardPolicy {
+                sweep_buckets_per_submit: 64,
+                ..Default::default()
+            }),
+        };
+        match lifecycle {
+            Some(lc) => Coordinator::new_with_lifecycle(cfg, lc),
+            None => Coordinator::new(cfg),
+        }
+    }
+
+    /// Scripted reader: serves fixed chunks, then either EOF or
+    /// endless `WouldBlock` (a connected-but-silent client). Counts
+    /// chunks served so tests can prove reads stopped.
+    struct ScriptReader {
+        chunks: Vec<Vec<u8>>,
+        next: usize,
+        off: usize,
+        eof_at_end: bool,
+        served: Arc<AtomicUsize>,
+    }
+
+    impl Read for ScriptReader {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.next >= self.chunks.len() {
+                if self.eof_at_end {
+                    return Ok(0);
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "idle"));
+            }
+            let chunk = &self.chunks[self.next];
+            let n = buf.len().min(chunk.len() - self.off);
+            buf[..n].copy_from_slice(&chunk[self.off..self.off + n]);
+            self.off += n;
+            if self.off == chunk.len() {
+                self.next += 1;
+                self.off = 0;
+                self.served.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(n)
+        }
+    }
+
+    /// Writer that blocks (condvar) until the test releases it — a
+    /// deterministic "slow reader" whose TCP window never drains.
+    #[derive(Clone)]
+    struct GateWriter {
+        inner: Arc<(Mutex<GateWriterState>, Condvar)>,
+    }
+
+    struct GateWriterState {
+        open: bool,
+        blocked: bool,
+        written: Vec<u8>,
+    }
+
+    impl GateWriter {
+        fn new() -> Self {
+            GateWriter {
+                inner: Arc::new((
+                    Mutex::new(GateWriterState { open: false, blocked: false, written: Vec::new() }),
+                    Condvar::new(),
+                )),
+            }
+        }
+
+        fn wait_until_blocked(&self) {
+            let (m, cv) = &*self.inner;
+            let mut st = m.lock().unwrap();
+            while !st.blocked {
+                st = cv.wait(st).unwrap();
+            }
+        }
+
+        fn open(&self) {
+            let (m, cv) = &*self.inner;
+            m.lock().unwrap().open = true;
+            cv.notify_all();
+        }
+
+        fn written(&self) -> Vec<u8> {
+            self.inner.0.lock().unwrap().written.clone()
+        }
+    }
+
+    impl Write for GateWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            let (m, cv) = &*self.inner;
+            let mut st = m.lock().unwrap();
+            while !st.open {
+                st.blocked = true;
+                cv.notify_all();
+                st = cv.wait(st).unwrap();
+            }
+            st.written.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn run_script(
+        c: &Coordinator,
+        gate: &AdmissionGate,
+        script: &str,
+        window: usize,
+    ) -> String {
+        let stats = ServerStats::default();
+        let rd = ScriptReader {
+            chunks: vec![script.as_bytes().to_vec()],
+            next: 0,
+            off: 0,
+            eof_at_end: true,
+            served: Arc::new(AtomicUsize::new(0)),
+        };
+        let mut wr = Vec::new();
+        let stop = AtomicBool::new(false);
+        serve_session(
+            rd,
+            &mut wr,
+            c,
+            gate,
+            &stats,
+            &SessionConfig { window, max_line: 1024 },
+            &stop,
+        )
+        .unwrap();
+        String::from_utf8(wr).unwrap()
+    }
+
+    #[test]
+    fn session_answers_in_request_order() {
+        let c = coord(TableKind::Double, None);
+        let gate = AdmissionGate::new(1 << 16);
+        let out = run_script(
+            &c,
+            &gate,
+            "set 7 0 0 3\r\n123\r\nget 7 8\r\nincr 7 7\r\ndelete 7\r\ndelete 7\r\nbogus\r\nquit\r\n",
+            8,
+        );
+        assert_eq!(
+            out,
+            "STORED\r\nVALUE 7 0 3\r\n123\r\nEND\r\n130\r\nDELETED\r\nNOT_FOUND\r\nERROR\r\n"
+        );
+        assert_eq!(gate.in_flight(), 0, "all permits released");
+    }
+
+    #[test]
+    fn overloaded_gate_answers_busy_per_request_exactly_once() {
+        let c = coord(TableKind::Double, None);
+        // Cap below the window's op count: the whole window is refused,
+        // one response per request, none of them executed.
+        let gate = AdmissionGate::new(2);
+        let out = run_script(
+            &c,
+            &gate,
+            "set 1 0 0 1\r\n5\r\nget 1 2 3\r\ndelete 1\r\nquit\r\n",
+            8,
+        );
+        assert_eq!(
+            out,
+            "SERVER_ERROR busy\r\nSERVER_ERROR busy\r\nSERVER_ERROR busy\r\n",
+            "3 requests → 3 busy lines (5 ops > cap 2); quit still honored"
+        );
+        assert_eq!(c.ops_executed.load(Ordering::Relaxed), 0, "nothing reached the table");
+        assert_eq!(gate.in_flight(), 0);
+        // A smaller window that fits the cap still executes.
+        let out = run_script(&c, &gate, "set 1 0 0 1\r\n5\r\nquit\r\n", 8);
+        assert_eq!(out, "STORED\r\n");
+    }
+
+    #[test]
+    fn parse_errors_keep_their_reply_even_when_busy() {
+        let c = coord(TableKind::Double, None);
+        let gate = AdmissionGate::new(0);
+        let out = run_script(&c, &gate, "get x\r\nget 1\r\nquit\r\n", 8);
+        assert_eq!(out, "CLIENT_ERROR bad key\r\nSERVER_ERROR busy\r\n");
+    }
+
+    #[test]
+    fn ttl_set_without_lifecycle_is_refused() {
+        let c = coord(TableKind::Double, None);
+        let gate = AdmissionGate::new(1 << 16);
+        let out = run_script(&c, &gate, "set 5 0 9 1\r\n7\r\nget 5\r\nquit\r\n", 8);
+        assert_eq!(out, "SERVER_ERROR ttl disabled\r\nEND\r\n");
+    }
+
+    #[test]
+    fn admission_gate_accounting() {
+        let g = AdmissionGate::new(10);
+        assert!(g.try_acquire(7));
+        assert!(!g.try_acquire(4), "7 + 4 > 10");
+        assert!(g.try_acquire(3));
+        assert_eq!(g.in_flight(), 10);
+        g.release(7);
+        assert!(g.try_acquire(4));
+        g.release(7);
+        assert_eq!(g.in_flight(), 0);
+        assert!(!AdmissionGate::new(0).try_acquire(1), "zero cap refuses everything");
+    }
+
+    /// The tentpole backpressure property, deterministically: session A
+    /// writes to a client that never drains its socket. A must (1) stop
+    /// reading its own socket after at most one window, (2) hold no
+    /// admission permits while wedged, and (3) leave session B and the
+    /// coordinator's background sweep jobs completely unaffected.
+    #[test]
+    fn slow_reader_stalls_only_its_own_session() {
+        let lc = LifecycleConfig::new(1);
+        let clock = lc.clock.clone();
+        let c = Arc::new(coord(TableKind::DoubleMeta, Some(lc)));
+        let gate = Arc::new(AdmissionGate::new(1 << 16));
+        let stats = Arc::new(ServerStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // 64 pipelined gets, one per chunk, window 4: the session could
+        // consume them all — unless backpressure stops it.
+        let served = Arc::new(AtomicUsize::new(0));
+        let chunks: Vec<Vec<u8>> = (0..64).map(|i| format!("get {i}\r\n").into_bytes()).collect();
+        let rd = ScriptReader { chunks, next: 0, off: 0, eof_at_end: false, served: served.clone() };
+        let wr = GateWriter::new();
+        let a = {
+            let (c, gate, stats, stop, wr) =
+                (c.clone(), gate.clone(), stats.clone(), stop.clone(), wr.clone());
+            std::thread::spawn(move || {
+                serve_session(
+                    rd,
+                    wr,
+                    &c,
+                    &gate,
+                    &stats,
+                    &SessionConfig { window: 4, max_line: 1024 },
+                    &stop,
+                )
+            })
+        };
+        wr.wait_until_blocked();
+        // (1) reads stopped: one window parsed, plus at most the
+        // lookahead the 4K read buffer could have soaked up in chunks
+        // already requested before the first write blocked. With
+        // one-request chunks the bound is window + 1.
+        let consumed = served.load(Ordering::Relaxed);
+        assert!(consumed <= 5, "wedged session kept reading: {consumed} chunks");
+        // (2) no permits held while wedged.
+        assert_eq!(gate.in_flight(), 0);
+        // (3) another session on the same coordinator runs to
+        // completion, and TTL sweeps still execute.
+        let mut script = String::new();
+        let mut want = String::new();
+        for i in 0..500 {
+            script.push_str(&format!("set {i} 0 2 1\r\n7\r\n"));
+            want.push_str("STORED\r\n");
+        }
+        script.push_str("quit\r\n");
+        let out = run_script(&c, &gate, &script, 16);
+        assert_eq!(out, want, "session B unaffected by wedged session A");
+        clock.advance(3);
+        assert!(c.sweep_now(), "sweep jobs run while A is wedged");
+        assert_eq!(c.swept_expired(), 500, "every TTL'd entry reclaimed");
+        // Un-wedge A: its responses drain, then stop ends the session.
+        wr.open();
+        stop.store(true, Ordering::Relaxed);
+        a.join().unwrap().unwrap();
+        let drained = wr.written();
+        let drained = String::from_utf8(drained).unwrap();
+        assert!(drained.ends_with("END\r\n"), "A's buffered responses flushed on drain");
+    }
+}

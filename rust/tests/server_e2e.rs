@@ -1,0 +1,200 @@
+//! End-to-end serving-tier tests: a real `TcpStream` client against an
+//! in-process [`Server`] on ephemeral loopback ports, asserting EXACT
+//! response bytes for every command in `docs/PROTOCOL.md` — data
+//! protocol, admin protocol, TTL via admin `tick`, pipelining, resync
+//! after errors, the overload path, and the connection cap.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use warpspeed::coordinator::{Coordinator, CoordinatorConfig};
+use warpspeed::server::{Server, ServerConfig};
+use warpspeed::tables::{LifecycleClock, LifecycleConfig, TableKind};
+
+fn start(ttl: bool, server_cfg: ServerConfig) -> (Server, Option<Arc<LifecycleClock>>) {
+    let cfg = CoordinatorConfig {
+        kind: if ttl { TableKind::P2Meta } else { TableKind::Double },
+        total_slots: 16 * 1024,
+        n_shards: 4,
+        n_workers: 2,
+        max_batch: 256,
+        growth: None,
+        reshard: None,
+    };
+    let (coord, clock) = if ttl {
+        let lc = LifecycleConfig::new(1);
+        let clock = lc.clock.clone();
+        (Coordinator::new_with_lifecycle(cfg, lc), Some(clock))
+    } else {
+        (Coordinator::new(cfg), None)
+    };
+    let server = Server::start(Arc::new(coord), clock.clone(), server_cfg).expect("bind");
+    (server, clock)
+}
+
+fn loopback() -> ServerConfig {
+    ServerConfig {
+        data_addr: "127.0.0.1:0".into(),
+        admin_addr: "127.0.0.1:0".into(),
+        ..ServerConfig::default()
+    }
+}
+
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let sock = TcpStream::connect(addr).expect("connect");
+    sock.set_nodelay(true).unwrap();
+    // Generous: only hit when a response goes missing (test failure).
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    sock
+}
+
+/// Send `req`, then read and assert EXACTLY `want` — byte-for-byte,
+/// `\r\n` included.
+fn roundtrip(sock: &mut TcpStream, req: &str, want: &str) {
+    sock.write_all(req.as_bytes()).expect("send");
+    let mut got = vec![0u8; want.len()];
+    sock.read_exact(&mut got).expect("full response");
+    assert_eq!(
+        String::from_utf8_lossy(&got),
+        want,
+        "exact response mismatch for request {req:?}"
+    );
+}
+
+/// After `quit`, the server closes: EOF, no trailing bytes.
+fn assert_closed(sock: &mut TcpStream) {
+    sock.write_all(b"quit\r\n").expect("send quit");
+    let mut rest = Vec::new();
+    sock.read_to_end(&mut rest).expect("EOF after quit");
+    assert_eq!(rest, b"", "no bytes may follow the final response");
+}
+
+#[test]
+fn data_protocol_exact_responses() {
+    let (server, _) = start(false, loopback());
+    let mut c = connect(server.data_addr());
+
+    roundtrip(&mut c, "set 7 0 0 4\r\n1234\r\n", "STORED\r\n");
+    roundtrip(&mut c, "get 7\r\n", "VALUE 7 0 4\r\n1234\r\nEND\r\n");
+    roundtrip(&mut c, "gets 7\r\n", "VALUE 7 0 4\r\n1234\r\nEND\r\n");
+    // Multi-key get: misses are omitted, END always arrives.
+    roundtrip(&mut c, "get 7 8\r\n", "VALUE 7 0 4\r\n1234\r\nEND\r\n");
+    roundtrip(&mut c, "get 8\r\n", "END\r\n");
+    // incr: in-place add + read-back in one batch.
+    roundtrip(&mut c, "incr 7 6\r\n", "1240\r\n");
+    roundtrip(&mut c, "incr 99 5\r\n", "5\r\n"); // absent key: created at delta
+    roundtrip(&mut c, "delete 7\r\n", "DELETED\r\n");
+    roundtrip(&mut c, "delete 7\r\n", "NOT_FOUND\r\n");
+    roundtrip(&mut c, "get 7\r\n", "END\r\n");
+    // Error taxonomy + resync: the connection survives each of these.
+    roundtrip(&mut c, "bogus\r\n", "ERROR\r\n");
+    roundtrip(&mut c, "set 7 1 0 3\r\n123\r\n", "CLIENT_ERROR flags must be 0\r\n");
+    roundtrip(&mut c, "get 99\r\n", "VALUE 99 0 1\r\n5\r\nEND\r\n");
+    roundtrip(&mut c, "set 1 0 0 3\r\n12345\r\n", "CLIENT_ERROR bad data chunk\r\n");
+    roundtrip(&mut c, "get 99\r\n", "VALUE 99 0 1\r\n5\r\nEND\r\n");
+    // TTL'd set on a server without --ttl.
+    roundtrip(&mut c, "set 5 0 9 1\r\n7\r\n", "SERVER_ERROR ttl disabled\r\n");
+    assert_closed(&mut c);
+
+    // Counters reflect the session. cmd_set counts well-formed set
+    // requests only (the flags/data-chunk rejects are parse_errors);
+    // the ttl-disabled set parsed fine, so it counts.
+    let stats = server.stats();
+    let relaxed = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(stats.cmd_set.load(relaxed), 2);
+    assert_eq!(stats.cmd_get.load(relaxed), 7);
+    assert_eq!(stats.cmd_delete.load(relaxed), 2);
+    assert_eq!(stats.cmd_incr.load(relaxed), 2);
+    assert_eq!(stats.parse_errors.load(relaxed), 3);
+    assert_eq!(stats.total_connections.load(relaxed), 1);
+    assert_eq!(stats.curr_connections.load(relaxed), 0);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_burst_answers_in_order() {
+    let (server, _) = start(false, loopback());
+    let mut c = connect(server.data_addr());
+    let mut req = String::new();
+    let mut want = String::new();
+    for i in 0..100u64 {
+        req.push_str(&format!("set {i} 0 0 2\r\n9{}\r\n", i % 10));
+        want.push_str("STORED\r\n");
+        req.push_str(&format!("get {i}\r\n"));
+        want.push_str(&format!("VALUE {i} 0 2\r\n9{}\r\nEND\r\n", i % 10));
+        if i % 5 == 0 {
+            req.push_str(&format!("delete {i}\r\n"));
+            want.push_str("DELETED\r\n");
+        }
+    }
+    // One write: 220 pipelined requests cross multiple session windows.
+    roundtrip(&mut c, &req, &want);
+    assert_closed(&mut c);
+    server.shutdown();
+}
+
+#[test]
+fn ttl_set_expires_after_admin_ticks() {
+    let (server, clock) = start(true, loopback());
+    let clock = clock.expect("ttl server has a clock");
+    let mut c = connect(server.data_addr());
+    let mut a = connect(server.admin_addr());
+
+    roundtrip(&mut c, "set 5 0 2 3\r\n111\r\n", "STORED\r\n"); // expires at tick 2
+    roundtrip(&mut c, "set 6 0 0 3\r\n222\r\n", "STORED\r\n"); // immortal
+    roundtrip(&mut c, "get 5 6\r\n", "VALUE 5 0 3\r\n111\r\nVALUE 6 0 3\r\n222\r\nEND\r\n");
+    roundtrip(&mut a, "tick 3\r\n", "TICK 3\r\n");
+    assert_eq!(clock.now(), 3);
+    roundtrip(&mut c, "get 5 6\r\n", "VALUE 6 0 3\r\n222\r\nEND\r\n");
+    // Admin stats reflect both protocols' traffic.
+    a.write_all(b"stats\r\n").unwrap();
+    let mut text = String::new();
+    let mut buf = [0u8; 4096];
+    while !text.contains("END\r\n") {
+        let n = a.read(&mut buf).expect("stats bytes");
+        assert!(n > 0);
+        text.push_str(std::str::from_utf8(&buf[..n]).unwrap());
+    }
+    for needle in [
+        "STAT cmd_set 2\r\n",
+        "STAT cmd_get 2\r\n",
+        "STAT get_hits 3\r\n",
+        "STAT get_misses 1\r\n",
+        "STAT lifecycle_tick 3\r\n",
+        "STAT n_shards 4\r\n",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in stats:\n{text}");
+    }
+    roundtrip(&mut a, "version\r\n", &format!("VERSION warpspeed/{}\r\n", env!("CARGO_PKG_VERSION")));
+    assert_closed(&mut c);
+    server.shutdown();
+}
+
+#[test]
+fn overloaded_server_answers_busy() {
+    // Admission cap 0: every table-touching window is refused, one
+    // busy line per request, parse errors keep their own reply.
+    let (server, _) = start(false, ServerConfig { max_inflight_ops: 0, ..loopback() });
+    let mut c = connect(server.data_addr());
+    roundtrip(&mut c, "set 1 0 0 1\r\n5\r\n", "SERVER_ERROR busy\r\n");
+    roundtrip(&mut c, "get 1 2 3\r\n", "SERVER_ERROR busy\r\n");
+    roundtrip(&mut c, "bogus\r\n", "ERROR\r\n");
+    let stats = server.stats();
+    assert_eq!(stats.busy_rejections.load(std::sync::atomic::Ordering::Relaxed), 2);
+    assert_closed(&mut c);
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_refuses_with_a_reason() {
+    let (server, _) = start(false, ServerConfig { max_connections: 0, ..loopback() });
+    let mut c = connect(server.data_addr());
+    let mut text = String::new();
+    c.read_to_string(&mut text).expect("refusal then close");
+    assert_eq!(text, "SERVER_ERROR too many connections\r\n");
+    let stats = server.stats();
+    assert_eq!(stats.rejected_connections.load(std::sync::atomic::Ordering::Relaxed), 1);
+    server.shutdown();
+}
