@@ -1,0 +1,8 @@
+//! `cargo bench --bench bench_hotkey` — zipfian hot keys against the
+//! front cache, oracle-checked, off vs on.
+use warpspeed::bench::{hotkey, BenchEnv};
+
+fn main() {
+    let env = BenchEnv::default();
+    print!("{}", hotkey::run(&env));
+}

@@ -1,0 +1,270 @@
+//! Hot-key exhibit — zipfian skew against the front cache, with oracle
+//! parity under concurrent write churn (paper §6's skewed workloads).
+//!
+//! Pure hash routing sends a zipfian head to one shard; this exhibit
+//! measures exactly that and what the hot-key subsystem buys back. Each
+//! design preloads a universe, then drives a θ=0.99 scrambled-zipfian
+//! 80/15/5 query/upsert/erase mix through explicit submit/collect
+//! batches — writes ride the SAME zipfian, so the hottest cached keys
+//! are also the most-written and every answer doubles as an
+//! invalidation proof: all results replay against a sequential oracle
+//! and a single stale front-cache hit shows up as a mismatch. Midway
+//! the topology is forced through a split and a merge, so parity also
+//! covers replica coherence across epoch flips.
+//!
+//! Reported per design × {cache off, cache on}: front-cache hit rate,
+//! the hottest shard's routed-traffic share and queue depth (sampled
+//! just before the forced flip, while the skew counters still hold the
+//! whole first half), per-batch p50/p99 latency, oracle mismatches
+//! (must be 0), and Mops/s. JSON rows follow the human table for the CI
+//! bench-trajectory artifact.
+
+use std::time::Instant;
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, HotKeyPolicy, Op, OpResult};
+use crate::gpusim::probes;
+use crate::prng::{Xoshiro256pp, Zipfian};
+use crate::tables::{GrowthPolicy, TableKind};
+use crate::workloads::keys::distinct_keys;
+
+use super::{report, BenchEnv, MIN_ELAPSED_SECS};
+
+/// One design's zipfian run (one cache setting).
+pub struct HotKeyOutcome {
+    pub cache_on: bool,
+    pub ops: usize,
+    /// Front-cache hits / queries issued (0 with the cache off).
+    pub hit_rate: f64,
+    /// Hottest shard's share of routed ops, sampled pre-flip
+    /// (`1/n_shards` = balanced, `1.0` = everything on one shard).
+    pub tail_share: f64,
+    /// Deepest per-shard queue observed at the pre-flip sample.
+    pub max_pending: u64,
+    /// Fill tickets aborted by write-path invalidation — nonzero here
+    /// is the staleness protocol *working*, not failing.
+    pub aborted_fills: u64,
+    /// Results diverging from the sequential oracle replay (must be 0:
+    /// this is the "front cache is never stale" bar).
+    pub mismatches: u64,
+    pub mops: f64,
+    /// Per-batch submit→collect latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx] as f64 / 1_000.0 // ns → µs
+}
+
+pub fn measure(kind: TableKind, slots: usize, seed: u64, cache: bool) -> HotKeyOutcome {
+    const BATCH: usize = 256;
+    let c = Coordinator::new(CoordinatorConfig {
+        kind,
+        total_slots: slots,
+        n_shards: 8,
+        n_workers: 4,
+        max_batch: BATCH,
+        // Growable shards: the forced split's children must be able to
+        // absorb the continuing write frontier.
+        growth: Some(GrowthPolicy::default()),
+        reshard: None, // the flip is forced at a fixed point below
+        hotkey: cache.then(|| HotKeyPolicy {
+            // Denser sampling than the serving default so the sketch
+            // locks onto the head within one exhibit-sized run.
+            sample_every: 2,
+            ..HotKeyPolicy::default()
+        }),
+    });
+    // Preload the whole universe so queries hit resident keys and the
+    // zipfian head is established before measurement starts.
+    let universe = distinct_keys((slots / 2).max(256), seed ^ kind as u64);
+    let mut oracle: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    for &k in &universe {
+        oracle.insert(k, k ^ 9);
+    }
+    c.run_stream(universe.iter().map(|&k| Op::Upsert(k, k ^ 9)));
+
+    // The op stream: 80/15/5 query/upsert/erase, every key drawn from
+    // the same θ=0.99 scrambled zipfian, with oracle-expected results.
+    let n_ops = (slots * 4).max(8 * BATCH);
+    let mut zipf = Zipfian::new(universe.len() as u64, seed ^ 0x217F);
+    let mut rng = Xoshiro256pp::new(seed ^ 0x40F);
+    let mut ops: Vec<Op> = Vec::with_capacity(n_ops);
+    let mut expected: Vec<OpResult> = Vec::with_capacity(n_ops);
+    let mut queries = 0u64;
+    for _ in 0..n_ops {
+        let k = universe[zipf.next_scrambled() as usize];
+        let dice = rng.next_below(20);
+        if dice < 16 {
+            queries += 1;
+            ops.push(Op::Query(k));
+            expected.push(OpResult::Value(oracle.get(&k).copied()));
+        } else if dice < 19 {
+            let v = rng.next_u64();
+            ops.push(Op::Upsert(k, v));
+            expected.push(OpResult::Upserted(oracle.insert(k, v).is_none()));
+        } else {
+            ops.push(Op::Erase(k));
+            expected.push(OpResult::Erased(oracle.remove(&k).is_some()));
+        }
+    }
+
+    // Drive explicit batches so each submit→collect round trip is
+    // timed; force a split at the halfway batch and a merge at 3/4, so
+    // the replica protocol is exercised across both epoch directions.
+    let batches: Vec<Vec<(u64, Op)>> = ops
+        .chunks(BATCH)
+        .enumerate()
+        .map(|(b, ch)| {
+            ch.iter()
+                .enumerate()
+                .map(|(i, &op)| ((b * BATCH + i) as u64, op))
+                .collect()
+        })
+        .collect();
+    let split_at = batches.len() / 2;
+    let merge_at = batches.len() * 3 / 4;
+    let mut got: Vec<OpResult> = Vec::with_capacity(n_ops);
+    let mut lat: Vec<u64> = Vec::with_capacity(batches.len());
+    let mut tail_share = 0.0;
+    let mut max_pending = 0;
+    let mut mismatches = 0u64;
+    let wall = Instant::now();
+    for (b, ops) in batches.iter().enumerate() {
+        if b == split_at {
+            // Sample the skew gauges while they still hold the whole
+            // first half — the cutover resets the per-shard counters.
+            let ls = c.load_stats();
+            let routed: u64 = ls.shards.iter().map(|s| s.ops).sum();
+            tail_share = if routed == 0 { 0.0 } else { ls.max_ops() as f64 / routed as f64 };
+            max_pending = ls.max_pending();
+            if !c.request_reshard() {
+                mismatches += 1; // forced split refused
+            }
+        }
+        if b == merge_at {
+            if !c.finish_resharding() {
+                mismatches += 1; // split never sealed
+            }
+            if !c.request_merge() {
+                mismatches += 1; // forced merge refused
+            }
+        }
+        let t0 = Instant::now();
+        let pending = c.submit(&crate::coordinator::Batch { ops: ops.clone() });
+        got.extend(c.collect(pending).into_iter().map(|(_, r)| r));
+        lat.push(t0.elapsed().as_nanos() as u64);
+    }
+    let secs = wall.elapsed().as_secs_f64().max(MIN_ELAPSED_SECS);
+    mismatches += got.iter().zip(&expected).filter(|(g, e)| g != e).count() as u64;
+    mismatches += got.len().abs_diff(expected.len()) as u64;
+    if !c.finish_resharding() {
+        mismatches += 1;
+    }
+    if !c.finish_migrations() {
+        mismatches += 1;
+    }
+    if c.table.len() != oracle.len() {
+        mismatches += 1; // lost or duplicated keys
+    }
+    let st = c.hotkey_stats().unwrap_or_default();
+    if cache && c.hot_keys(1).is_empty() {
+        mismatches += 1; // sampler never locked onto the zipfian head
+    }
+    lat.sort_unstable();
+    HotKeyOutcome {
+        cache_on: cache,
+        ops: n_ops,
+        hit_rate: if queries == 0 { 0.0 } else { st.hits as f64 / queries as f64 },
+        tail_share,
+        max_pending,
+        aborted_fills: st.aborted_fills,
+        mismatches,
+        mops: report::finite(n_ops as f64 / secs / 1e6),
+        p50_us: percentile(&lat, 0.50),
+        p99_us: percentile(&lat, 0.99),
+    }
+}
+
+pub fn run(env: &BenchEnv) -> String {
+    let _measure = probes::measurement_section();
+    probes::set_enabled(false);
+    let slots = (env.slots / 8).max(2048);
+    let mut rows = Vec::new();
+    let mut json = String::new();
+    for kind in TableKind::CONCURRENT {
+        for cache in [false, true] {
+            let r = measure(kind, slots, env.seed, cache);
+            rows.push(vec![
+                kind.paper_name().to_string(),
+                if cache { "on" } else { "off" }.to_string(),
+                r.ops.to_string(),
+                format!("{:.3}", r.hit_rate),
+                format!("{:.3}", r.tail_share),
+                r.max_pending.to_string(),
+                r.mismatches.to_string(),
+                format!("{:.1}", r.p50_us),
+                format!("{:.1}", r.p99_us),
+                report::fmt_f(r.mops, 2),
+            ]);
+            json.push_str(&report::json_row(&[
+                ("exhibit", report::JsonVal::Str("hotkey".into())),
+                ("table", report::JsonVal::Str(kind.paper_name().into())),
+                ("cache", report::JsonVal::Str(if cache { "on" } else { "off" }.into())),
+                ("nominal_slots", report::JsonVal::Int(slots as u64)),
+                ("ops", report::JsonVal::Int(r.ops as u64)),
+                ("hit_rate", report::JsonVal::Num(r.hit_rate)),
+                ("tail_share", report::JsonVal::Num(r.tail_share)),
+                ("max_pending", report::JsonVal::Int(r.max_pending)),
+                ("aborted_fills", report::JsonVal::Int(r.aborted_fills)),
+                ("mismatches", report::JsonVal::Int(r.mismatches)),
+                ("p50_us", report::JsonVal::Num(r.p50_us)),
+                ("p99_us", report::JsonVal::Num(r.p99_us)),
+                ("mops", report::JsonVal::Num(r.mops)),
+            ]));
+            json.push('\n');
+        }
+    }
+    probes::set_enabled(true);
+    let mut out = report::table(
+        "Hot keys — zipfian θ=0.99 mix, front cache off vs on (oracle-checked)",
+        &["table", "cache", "ops", "hit", "tail", "maxq", "mism", "p50_us", "p99_us", "Mops"],
+        &rows,
+    );
+    out.push('\n');
+    out.push_str(&json);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hotkey_bench_cache_on_matches_oracle_and_hits() {
+        let r = measure(TableKind::P2Meta, 2048, 0x7, true);
+        assert_eq!(r.mismatches, 0, "stale front-cache answer or lost op");
+        assert!(r.hit_rate > 0.05, "zipfian head never hit the cache: {}", r.hit_rate);
+        assert!(r.tail_share > 1.0 / 8.0, "θ=0.99 must skew an 8-shard table");
+        assert!(r.mops > 0.0);
+    }
+
+    #[test]
+    fn hotkey_bench_cache_off_baseline_matches_oracle() {
+        let r = measure(TableKind::P2Meta, 2048, 0x7, false);
+        assert_eq!(r.mismatches, 0);
+        assert_eq!(r.hit_rate, 0.0, "no cache, no hits");
+    }
+
+    #[test]
+    fn hotkey_bench_holds_for_a_relocating_design() {
+        // CuckooHT relocates keys on insert — the hardest design for
+        // any protocol that reasons about per-key answers.
+        let r = measure(TableKind::Cuckoo, 1024, 0x8, true);
+        assert_eq!(r.mismatches, 0);
+    }
+}

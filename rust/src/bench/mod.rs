@@ -18,6 +18,7 @@ pub mod bulk;
 pub mod caching;
 pub mod freeze;
 pub mod grow;
+pub mod hotkey;
 pub mod load;
 pub mod probes;
 pub mod report;

@@ -61,6 +61,7 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> ReshardOutcome {
             max_shards: 16,
             ..Default::default()
         }),
+        hotkey: None,
     });
     let shards_before = c.table.n_shards();
     // Mixed traffic to 2× the provisioning: 70% fresh inserts (the load

@@ -129,6 +129,7 @@ pub fn run(env: &BenchEnv) -> String {
         max_batch: 256,
         growth: None,
         reshard: None,
+        hotkey: None,
     }));
     let server = Server::start(
         coord,

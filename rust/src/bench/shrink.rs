@@ -80,6 +80,7 @@ pub fn measure(kind: TableKind, slots: usize, seed: u64) -> ShrinkOutcome {
             max_shards: 4,
             ..Default::default()
         }),
+        hotkey: None,
     });
     let shards_before = c.table.n_shards();
     let cap_before = c.table.capacity();

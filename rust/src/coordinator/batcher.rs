@@ -36,8 +36,15 @@ impl Batch {
     /// Partition into per-shard sub-batches, preserving arrival order
     /// within each shard.
     pub fn partition(&self, router: &super::Router) -> Vec<Vec<(u64, Op)>> {
+        Self::partition_ops(&self.ops, router)
+    }
+
+    /// [`Batch::partition`] over a borrowed op slice — the executor's
+    /// hot-key screening pass partitions its filtered subset (cache
+    /// hits removed) without rebuilding a `Batch`.
+    pub fn partition_ops(ops: &[(u64, Op)], router: &super::Router) -> Vec<Vec<(u64, Op)>> {
         let mut parts = vec![Vec::new(); router.n_shards()];
-        for &(seq, op) in &self.ops {
+        for &(seq, op) in ops {
             parts[router.shard_of(op.key())].push((seq, op));
         }
         parts

@@ -66,13 +66,16 @@
 //! pool never shrinks — after a merge, spare workers idle on empty
 //! channels until a later split re-pins shards to them.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::{self, JoinHandle};
 
-use super::{Batch, Op, Router, ShardedTable};
-use crate::tables::{GrowthPolicy, LifecycleConfig, TableKind, UpsertOp, UpsertResult};
+use super::hotkey::{FillTicket, FrontCacheStats, HotKeyPolicy, HotKeys, Lookup};
+use super::{Batch, LoadStats, Op, Router, ShardedTable};
+use crate::tables::{
+    GrowthPolicy, LifecycleClock, LifecycleConfig, TableKind, UpsertOp, UpsertResult,
+};
 
 /// Result of one operation, tagged with its sequence number.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +103,12 @@ pub struct ReshardPolicy {
     /// count doubles (backlog = not enough parallelism). `0` disables
     /// the queue-depth trigger.
     pub trigger_queue_depth: usize,
+    /// A single shard's routed-but-unexecuted backlog
+    /// ([`LoadStats`]`::shards[i].pending`) at which the shard count
+    /// doubles even though the AGGREGATE queue looks healthy — the
+    /// hot-shard signal: zipfian traffic can melt one shard while the
+    /// per-worker mean stays low. `0` (the default) disables it.
+    pub trigger_shard_pending: usize,
     /// Aggregate load factor BELOW which the shard count halves (merge
     /// split pairs back) once traffic cools. `0.0` (the default)
     /// disables policy-triggered merges; [`Coordinator::request_merge`]
@@ -156,6 +165,7 @@ impl Default for ReshardPolicy {
         Self {
             trigger_load_factor: 0.80,
             trigger_queue_depth: 0,
+            trigger_shard_pending: 0,
             merge_below_load_factor: 0.0,
             merge_hysteresis: 4,
             min_shards: 1,
@@ -177,6 +187,13 @@ impl ReshardPolicy {
 
     pub fn queue_triggered(&self, pending_jobs_per_worker: usize) -> bool {
         self.trigger_queue_depth > 0 && pending_jobs_per_worker >= self.trigger_queue_depth
+    }
+
+    /// Hot-shard trigger: the MAX per-shard routed-but-unexecuted
+    /// backlog (from [`Coordinator::load_stats`]'s per-shard rows)
+    /// crossing the bar — skew the aggregate triggers cannot see.
+    pub fn shard_pending_triggered(&self, max_shard_pending: u64) -> bool {
+        self.trigger_shard_pending > 0 && max_shard_pending >= self.trigger_shard_pending as u64
     }
 
     /// Merge (halving) low-load trigger. Fires only when load is below
@@ -239,6 +256,13 @@ pub struct CoordinatorConfig {
     /// the shard count (and with it worker parallelism) when the policy
     /// trigger fires; `None` keeps the topology fixed at `n_shards`.
     pub reshard: Option<ReshardPolicy>,
+    /// Hot-key sampling + front cache ([`super::hotkey`]). `Some` makes
+    /// `submit` sample read keys into a SpaceSaving sketch, replicate
+    /// the hottest into a small lock-free front cache consulted before
+    /// shard routing (hits never route), and invalidate replicas at
+    /// write-submit time so reads are never stale. `None` (the default)
+    /// disables the subsystem; the submit path pays nothing.
+    pub hotkey: Option<HotKeyPolicy>,
 }
 
 impl Default for CoordinatorConfig {
@@ -251,6 +275,7 @@ impl Default for CoordinatorConfig {
             max_batch: 1024,
             growth: None,
             reshard: None,
+            hotkey: None,
         }
     }
 }
@@ -353,6 +378,38 @@ enum Job {
     Barrier(Sender<()>),
 }
 
+/// Per-shard routed/completed operation counters — the skew signal.
+/// `submit` bumps `routed[i]` as it enqueues shard `i`'s sub-batch
+/// (under the epoch gate); the owning worker bumps `completed[i]` after
+/// executing it; `routed - completed` is the shard's queue depth.
+/// Sized once at construction (shard count can only grow to the
+/// configured reshard ceiling; a forced split past it simply stops
+/// accounting — every access is `.get`-guarded) and zeroed at each
+/// epoch cutover, AFTER the drain, so rows always describe the current
+/// routing epoch.
+struct ShardCounters {
+    routed: Box<[AtomicU64]>,
+    completed: Box<[AtomicU64]>,
+}
+
+impl ShardCounters {
+    fn new(n: usize) -> Self {
+        Self {
+            routed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            completed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Zero every row. Only called inside the epoch-cutover gate after
+    /// the drain — nothing is in flight, so routed/completed cannot
+    /// tear against each other.
+    fn reset(&self) {
+        for c in self.routed.iter().chain(self.completed.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
 /// Long-lived shard-affine workers. Spawned at coordinator construction
 /// and resized at reshard cutovers — grown toward the configured width
 /// on a split, shrunk alongside the shards on a merge (rather than
@@ -365,12 +422,17 @@ struct WorkerPool {
 }
 
 impl WorkerPool {
-    fn spawn(table: &Arc<ShardedTable>, n_workers: usize, inflight: &Arc<AtomicUsize>) -> Self {
+    fn spawn(
+        table: &Arc<ShardedTable>,
+        n_workers: usize,
+        inflight: &Arc<AtomicUsize>,
+        counters: &Arc<ShardCounters>,
+    ) -> Self {
         let mut pool = Self {
             txs: Vec::new(),
             handles: Vec::new(),
         };
-        pool.grow_to(table, n_workers.max(1), inflight);
+        pool.grow_to(table, n_workers.max(1), inflight, counters);
         pool
     }
 
@@ -378,15 +440,22 @@ impl WorkerPool {
     /// called at construction and inside the epoch-cutover gate, after
     /// the drain — affinity `i % n_workers` must never change while
     /// index-addressed batches are in flight.
-    fn grow_to(&mut self, table: &Arc<ShardedTable>, n: usize, inflight: &Arc<AtomicUsize>) {
+    fn grow_to(
+        &mut self,
+        table: &Arc<ShardedTable>,
+        n: usize,
+        inflight: &Arc<AtomicUsize>,
+        counters: &Arc<ShardCounters>,
+    ) {
         while self.txs.len() < n {
             let w = self.txs.len();
             let (tx, rx) = mpsc::channel::<Job>();
             let table = Arc::clone(table);
             let inflight = Arc::clone(inflight);
+            let counters = Arc::clone(counters);
             let handle = thread::Builder::new()
                 .name(format!("warpspeed-worker-{w}"))
-                .spawn(move || Self::serve(table, inflight, rx))
+                .spawn(move || Self::serve(table, inflight, counters, rx))
                 .expect("failed to spawn coordinator worker");
             self.txs.push(tx);
             self.handles.push(handle);
@@ -408,7 +477,12 @@ impl WorkerPool {
     }
 
     /// Worker loop: drain jobs until the channel disconnects.
-    fn serve(table: Arc<ShardedTable>, inflight: Arc<AtomicUsize>, rx: Receiver<Job>) {
+    fn serve(
+        table: Arc<ShardedTable>,
+        inflight: Arc<AtomicUsize>,
+        counters: Arc<ShardCounters>,
+        rx: Receiver<Job>,
+    ) {
         while let Ok(job) = rx.recv() {
             match job {
                 Job::Batch {
@@ -435,6 +509,9 @@ impl WorkerPool {
                                 offload.as_deref(),
                                 &mut out,
                             );
+                        }
+                        if let Some(c) = counters.completed.get(*shard_idx) {
+                            c.fetch_add(part.len() as u64, Ordering::Relaxed);
                         }
                     }
                     // A dropped receiver just means the submitter went
@@ -511,6 +588,14 @@ pub struct PendingBatch {
     rx: Receiver<Vec<(u64, OpResult)>>,
     jobs: usize,
     ops: usize,
+    /// Results answered at submit time from the front cache (the ops
+    /// never routed); merged back by sequence number at collect.
+    direct: Vec<(u64, OpResult)>,
+    /// Fill tickets for queries that found their hot-key slot armed:
+    /// collect redeems each against the query's own routed answer
+    /// (under the epoch gate — the stamp check aborts any ticket a
+    /// write submitted since has invalidated).
+    fills: Vec<(u64, FillTicket)>,
 }
 
 pub struct Coordinator {
@@ -541,6 +626,17 @@ pub struct Coordinator {
     /// Round-robin cursor over shards for the per-submit background
     /// expiry-sweep job ([`ReshardPolicy::sweep_buckets_per_submit`]).
     sweep_rr: AtomicUsize,
+    /// Hot-key sampler + front cache ([`CoordinatorConfig::hotkey`]);
+    /// `None` when the subsystem is disabled. All mutations run under
+    /// the epoch gate (submit's screening pass, collect's fill commits).
+    hot: Option<HotKeys>,
+    /// Lifecycle clock handle (when built with a lifecycle config) —
+    /// front-cache fills are tick-stamped against it so a cached value
+    /// can never outlive its entry's TTL.
+    clock: Option<Arc<LifecycleClock>>,
+    /// Per-shard routed/completed op counters (reset at epoch
+    /// cutovers) — merged into [`Coordinator::load_stats`] rows.
+    shard_counters: Arc<ShardCounters>,
     /// Operations executed (metrics).
     pub ops_executed: std::sync::atomic::AtomicU64,
 }
@@ -588,10 +684,25 @@ impl Coordinator {
             },
         });
         let inflight = Arc::new(AtomicUsize::new(0));
+        // Counter rows for every shard index this topology can reach
+        // (the configured reshard ceiling; forced splits past it just
+        // stop accounting — every access is `.get`-guarded).
+        let max_shards = cfg
+            .reshard
+            .map(|p| p.max_shards.max(cfg.n_shards))
+            .unwrap_or(cfg.n_shards);
+        let shard_counters = Arc::new(ShardCounters::new(max_shards));
+        let clock = table.lifecycle_clock();
+        let hot = cfg.hotkey.map(HotKeys::new);
         // More workers than shards would park forever on empty channels
         // (shard i is pinned to worker i % n_workers), so clamp; reshard
         // cutovers grow the pool back toward cfg.n_workers.
-        let pool = WorkerPool::spawn(&table, cfg.n_workers.min(cfg.n_shards), &inflight);
+        let pool = WorkerPool::spawn(
+            &table,
+            cfg.n_workers.min(cfg.n_shards),
+            &inflight,
+            &shard_counters,
+        );
         let epoch = table.epoch();
         Self {
             table,
@@ -603,6 +714,9 @@ impl Coordinator {
             merge_streak: AtomicUsize::new(0),
             freeze_streak: AtomicUsize::new(0),
             sweep_rr: AtomicUsize::new(0),
+            hot,
+            clock,
+            shard_counters,
             ops_executed: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -845,6 +959,10 @@ impl Coordinator {
                 self.drain_workers();
             }
             *gate = router.epoch();
+            // Shard indices just changed meaning: zero the per-shard
+            // skew counters so rows always describe the current epoch
+            // (safe: the pipeline is drained, routed == completed).
+            self.shard_counters.reset();
             // Remap shard→worker affinity for the new topology. Both
             // directions are safe here: the pipeline just drained, so
             // every channel is empty and nothing queued addresses the
@@ -854,7 +972,7 @@ impl Coordinator {
             if want < pool.len() {
                 pool.shrink_to(want);
             } else {
-                pool.grow_to(&self.table, want, &self.inflight);
+                pool.grow_to(&self.table, want, &self.inflight, &self.shard_counters);
             }
         }
         (router, began)
@@ -868,11 +986,15 @@ impl Coordinator {
         if router.epoch() != *gate || rescaling {
             return None;
         }
-        let stats = self.table.load_stats();
+        // The coordinator-level sample: per-shard rows carry routed/
+        // pending, so the skew trigger sees the hot shard the aggregate
+        // triggers average away.
+        let stats = self.load_stats();
         let (len, capacity) = (stats.len, stats.capacity);
         if router.n_shards() * 2 <= policy.max_shards
             && (policy.load_triggered(len, capacity)
-                || policy.queue_triggered(self.pending_jobs_per_worker()))
+                || policy.queue_triggered(self.pending_jobs_per_worker())
+                || policy.shard_pending_triggered(stats.max_pending()))
         {
             self.merge_streak.store(0, Ordering::Relaxed);
             return Some(Rescale::Split);
@@ -931,8 +1053,46 @@ impl Coordinator {
         // moving keys into their parent behind the migration's back.
         let mut gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
         let (router, _) = self.cutover_locked(&mut gate, None);
-        let parts = batch.partition(&router);
+        // Hot-key screening pass (gate-held, one linear walk, only when
+        // the subsystem is armed): sample read keys into the sketch,
+        // bump cached keys' stamps on writes BEFORE they enqueue (the
+        // invalidation that keeps replicas from ever serving stale),
+        // answer front-cache hits directly (the op never routes), and
+        // arm fill tickets for designated misses.
+        let mut direct: Vec<(u64, OpResult)> = Vec::new();
+        let mut fills: Vec<(u64, FillTicket)> = Vec::new();
+        let screened: Option<Vec<(u64, Op)>> = self.hot.as_ref().map(|hot| {
+            let now = self.clock.as_deref().map(|c| c.now());
+            let mut kept = Vec::with_capacity(batch.ops.len());
+            for &(seq, op) in &batch.ops {
+                match op {
+                    Op::Query(k) => {
+                        hot.observe_read(k);
+                        match hot.cache.lookup(k, now) {
+                            Lookup::Hit(v) => direct.push((seq, OpResult::Value(Some(v)))),
+                            Lookup::Armed(stamp) => {
+                                let tick = now.unwrap_or(0);
+                                fills.push((seq, FillTicket { key: k, stamp, tick }));
+                                kept.push((seq, op));
+                            }
+                            Lookup::Cold => kept.push((seq, op)),
+                        }
+                    }
+                    _ => {
+                        hot.cache.invalidate(op.key());
+                        kept.push((seq, op));
+                    }
+                }
+            }
+            kept
+        });
+        // read_only over the ORIGINAL batch stays valid for the
+        // screened subset: screening only removes queries.
         let read_only = batch.read_only();
+        let parts = match &screened {
+            Some(ops) => Batch::partition_ops(ops, &router),
+            None => batch.partition(&router),
+        };
         let pool = self.pool.read().unwrap_or_else(|e| e.into_inner());
         let n_workers = pool.len();
         // Growth interleaving: every migrating shard gets one bounded
@@ -987,6 +1147,12 @@ impl Coordinator {
             (0..n_workers).map(|_| Vec::new()).collect();
         for (i, p) in parts.into_iter().enumerate() {
             if !p.is_empty() {
+                // Skew accounting: routed-per-shard, bumped under the
+                // gate; the owning worker bumps completed after
+                // executing the part.
+                if let Some(c) = self.shard_counters.routed.get(i) {
+                    c.fetch_add(p.len() as u64, Ordering::Relaxed);
+                }
                 per_worker[i % n_workers].push((i, p));
             }
         }
@@ -1013,6 +1179,8 @@ impl Coordinator {
             rx,
             jobs,
             ops: batch.len(),
+            direct,
+            fills,
         }
     }
 
@@ -1164,6 +1332,47 @@ impl Coordinator {
         self.table.freeze_events()
     }
 
+    /// The coordinator-level load sample: [`ShardedTable::load_stats`]'s
+    /// per-shard rows merged with this coordinator's routed/completed
+    /// op counters, so `ops`/`pending` (and [`LoadStats::ops_skew`] /
+    /// [`LoadStats::max_pending`]) are live. Counters reset at each
+    /// epoch cutover — rows describe the current routing epoch.
+    pub fn load_stats(&self) -> LoadStats {
+        let mut ls = self.table.load_stats();
+        for (i, row) in ls.shards.iter_mut().enumerate() {
+            let routed = self
+                .shard_counters
+                .routed
+                .get(i)
+                .map_or(0, |c| c.load(Ordering::Relaxed));
+            let done = self
+                .shard_counters
+                .completed
+                .get(i)
+                .map_or(0, |c| c.load(Ordering::Relaxed));
+            row.ops = routed;
+            // Worker bumps lag submit bumps while a part is in flight;
+            // saturate rather than underflow on the torn read.
+            row.pending = routed.saturating_sub(done);
+        }
+        ls
+    }
+
+    /// Hot-key subsystem counters (front-cache hits/misses/fills/
+    /// invalidations + sampler feed); `None` when built without
+    /// [`CoordinatorConfig::hotkey`]. Surfaced as the `front_cache_*`
+    /// admin stats.
+    pub fn hotkey_stats(&self) -> Option<FrontCacheStats> {
+        self.hot.as_ref().map(|h| h.stats())
+    }
+
+    /// The sampler's current `n` hottest keys with their sketch
+    /// estimates, hottest first (empty when hot-key tracking is off) —
+    /// diagnostics for operators and the `bench hotkey` exhibit.
+    pub fn hot_keys(&self, n: usize) -> Vec<(u64, u64)> {
+        self.hot.as_ref().map_or_else(Vec::new, |h| h.top_keys(n))
+    }
+
     /// Old-table buckets one [`Job::Migrate`] advances — one policy batch
     /// per submitted traffic batch.
     fn migration_buckets_per_batch(&self) -> usize {
@@ -1198,19 +1407,59 @@ impl Coordinator {
     }
 
     /// Wait for a submitted batch and merge its results back into
-    /// arrival order.
+    /// arrival order (front-cache hits answered at submit included).
     pub fn collect(&self, pending: PendingBatch) -> Vec<(u64, OpResult)> {
-        let mut results: Vec<(u64, OpResult)> = Vec::with_capacity(pending.ops);
-        for _ in 0..pending.jobs {
-            results.extend(pending.rx.recv().expect(
+        let PendingBatch {
+            rx,
+            jobs,
+            ops,
+            direct,
+            fills,
+        } = pending;
+        let mut results: Vec<(u64, OpResult)> = direct;
+        results.reserve(ops.saturating_sub(results.len()));
+        for _ in 0..jobs {
+            results.extend(rx.recv().expect(
                 "coordinator worker panicked mid-batch (its reply channel dropped) — \
                  see the worker thread's panic message for the root cause",
             ));
         }
         results.sort_unstable_by_key(|&(seq, _)| seq);
+        self.commit_fills(&fills, &results);
         self.ops_executed
             .fetch_add(results.len() as u64, std::sync::atomic::Ordering::Relaxed);
         results
+    }
+
+    /// Redeem the batch's front-cache fill tickets against its own
+    /// routed answers. Fill commits are cache MUTATIONS, so they take
+    /// the epoch gate like every other mutator — the brief serialization
+    /// with in-flight submits is the price of the protocol's simplicity
+    /// (a gate-free filler reintroduces the stalled-writer seqlock
+    /// race). Per ticket, the stamp check rejects anything a write
+    /// submitted since has invalidated, and a clock tick since submit
+    /// drops the fill outright (the value's validity tick has passed).
+    fn commit_fills(&self, fills: &[(u64, FillTicket)], results: &[(u64, OpResult)]) {
+        let Some(hot) = &self.hot else { return };
+        if fills.is_empty() {
+            return;
+        }
+        let _gate = self.epoch_gate.lock().unwrap_or_else(|e| e.into_inner());
+        let now = self.clock.as_deref().map(|c| c.now());
+        for &(seq, t) in fills {
+            if now.is_some_and(|n| n != t.tick) {
+                continue;
+            }
+            let Ok(i) = results.binary_search_by_key(&seq, |&(s, _)| s) else {
+                continue;
+            };
+            // Only a present value fills the slot — a miss leaves it
+            // armed (no negative caching: absence is cheap to re-answer
+            // and a stale "absent" would be as wrong as a stale value).
+            if let (_, OpResult::Value(Some(v))) = results[i] {
+                hot.cache.commit_fill(t, v);
+            }
+        }
     }
 
     /// Execute a batch synchronously: submit + collect.
@@ -1269,6 +1518,7 @@ mod tests {
             max_batch: 64,
             growth: None,
             reshard: None,
+            hotkey: None,
         })
     }
 
@@ -1361,6 +1611,7 @@ mod tests {
             max_batch: 128,
             growth: None,
             reshard: None,
+            hotkey: None,
         })
         .with_offload(std::sync::Arc::clone(&mirror) as std::sync::Arc<dyn super::ReadOffload>);
         let ks = distinct_keys(300, 0xE5);
@@ -1404,6 +1655,7 @@ mod tests {
             max_batch: 64,
             growth: None,
             reshard: None,
+            hotkey: None,
         })
         .with_offload(std::sync::Arc::new(Decline));
         let ks = distinct_keys(100, 0xE6);
@@ -1511,6 +1763,7 @@ mod tests {
             max_batch: 64,
             growth: None,
             reshard: None,
+            hotkey: None,
         })
         .with_offload(std::sync::Arc::clone(&counter) as std::sync::Arc<dyn super::ReadOffload>);
         let ks = distinct_keys(128, 0xE9);
@@ -1564,6 +1817,7 @@ mod tests {
                 max_batch: 64,
                 growth,
                 reshard: None,
+                hotkey: None,
             })
         };
         let ks = distinct_keys(2048, 0xEA); // 4× the provisioning
@@ -1612,6 +1866,7 @@ mod tests {
                 ..Default::default()
             }),
             reshard: None,
+            hotkey: None,
         });
         let ks = distinct_keys(3 * 1024, 0xEB);
         // Insert 3× the provisioning, then keep issuing read batches: the
@@ -1765,6 +2020,7 @@ mod tests {
                 max_shards: 8,
                 ..Default::default()
             }),
+            hotkey: None,
         });
         let ks = distinct_keys(4096, 0xF1);
         let r = c.run_stream(ks.iter().map(|&k| Op::Upsert(k, k ^ 6)));
@@ -1824,6 +2080,7 @@ mod tests {
                 max_shards: 8,
                 ..Default::default()
             }),
+            hotkey: None,
         });
         // ~35% load: above the 0.25 merge watermark, below the 0.6
         // split trigger.
@@ -1950,6 +2207,7 @@ mod tests {
                 max_shards: 8,
                 ..Default::default()
             }),
+            hotkey: None,
         });
         assert_eq!(c.n_workers(), 2);
         assert_eq!(c.table.epoch(), 0);
@@ -2022,6 +2280,7 @@ mod tests {
             max_batch: 100,
             growth: Some(crate::tables::GrowthPolicy::default()),
             reshard: None, // splits requested manually at fixed points
+            hotkey: None,
         });
         let ks = distinct_keys(128, 0xEE);
         let mut oracle = std::collections::HashMap::new();
@@ -2114,6 +2373,7 @@ mod tests {
             max_batch: 64,
             growth: None,
             reshard: None,
+            hotkey: None,
         })
         .with_offload(Arc::new(GatedOffload {
             gate: Mutex::new(gate),
@@ -2169,6 +2429,7 @@ mod tests {
             max_batch: 64,
             growth: None,
             reshard: None,
+            hotkey: None,
         });
         assert_eq!(c.n_workers(), 4);
         let ks = distinct_keys(512, 0xFA);
@@ -2210,6 +2471,7 @@ mod tests {
                 freeze_after_idle: 2,
                 ..Default::default()
             }),
+            hotkey: None,
         });
         assert!(c.table.is_tiered(), "freeze_after_idle must arm tiered shards");
         let ks = distinct_keys(2048, 0xFB);
@@ -2281,6 +2543,7 @@ mod tests {
                 max_batch: 64,
                 growth: None,
                 reshard: None,
+                hotkey: None,
             },
             lc.clone(),
         );
@@ -2326,6 +2589,7 @@ mod tests {
                 max_batch: 64,
                 growth: None,
                 reshard: None,
+                hotkey: None,
             },
             lc.clone(),
         );
@@ -2389,6 +2653,7 @@ mod tests {
                     sweep_buckets_per_submit: 1 << 20,
                     ..Default::default()
                 }),
+                hotkey: None,
             },
             lc.clone(),
         );
@@ -2419,5 +2684,216 @@ mod tests {
         // The probe key itself must have survived every sweep.
         let r = c.run_stream(immortal.iter().map(|&k| Op::Query(k)));
         assert!(r.iter().all(|&x| x == OpResult::Value(Some(1))));
+    }
+
+    /// Hot-key coordinator with an eager policy: every read sampled,
+    /// designation after two observations — so tests can script the
+    /// cold → armed → live → invalidated lifecycle batch by batch.
+    fn hot_coord() -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 16 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 64,
+            growth: None,
+            reshard: None,
+            hotkey: Some(HotKeyPolicy {
+                sample_every: 1,
+                promote_min_count: 2,
+                ..HotKeyPolicy::default()
+            }),
+        })
+    }
+
+    fn one(c: &Coordinator, op: Op) -> OpResult {
+        c.execute(&Batch { ops: vec![(0, op)] })[0].1
+    }
+
+    #[test]
+    fn front_cache_serves_hot_reads_and_writes_invalidate() {
+        let c = hot_coord();
+        let k = distinct_keys(1, 0xA0)[0];
+        assert_eq!(one(&c, Op::Upsert(k, 7)), OpResult::Upserted(true));
+        // Read 1: below the promotion bar — routes, no slot.
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(7)));
+        // Read 2: estimate hits 2 — designated, armed, and this same
+        // query's routed answer fills the slot at collect.
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(7)));
+        // Read 3: answered from the front cache, never routed.
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(7)));
+        let st = c.hotkey_stats().expect("hotkey subsystem armed");
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.fills, 1);
+        assert_eq!(st.live, 1);
+        // A write to the cached key invalidates at submit: the very
+        // next read must see the new value (routed), and the one after
+        // hits the refreshed replica.
+        assert_eq!(one(&c, Op::Upsert(k, 9)), OpResult::Upserted(false));
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(9)));
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(9)));
+        let st = c.hotkey_stats().unwrap();
+        assert_eq!(st.invalidations, 1);
+        assert_eq!(st.fills, 2);
+        assert_eq!(st.hits, 2);
+        // Erase is a write too: invalidate, then reads see absence.
+        assert_eq!(one(&c, Op::Erase(k)), OpResult::Erased(true));
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(None));
+        // Absence never fills (no negative caching): slot stays armed.
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(None));
+        assert_eq!(c.hotkey_stats().unwrap().live, 0);
+        assert_eq!(c.hot_keys(1)[0].0, k, "sampler tracked the hot key");
+    }
+
+    #[test]
+    fn front_cache_hits_bypass_shard_routing() {
+        let c = hot_coord();
+        let k = distinct_keys(1, 0xA1)[0];
+        one(&c, Op::Upsert(k, 1));
+        one(&c, Op::Query(k));
+        one(&c, Op::Query(k)); // fills
+        let routed_before: u64 = c.load_stats().shards.iter().map(|s| s.ops).sum();
+        for _ in 0..10 {
+            assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(1)));
+        }
+        let ls = c.load_stats();
+        let routed_after: u64 = ls.shards.iter().map(|s| s.ops).sum();
+        assert_eq!(routed_after, routed_before, "hits must not route");
+        assert_eq!(c.hotkey_stats().unwrap().hits, 10);
+        // The skewed single-key stream shows up in the per-shard rows.
+        assert!(ls.ops_skew() > 1.0, "one hot shard took everything");
+        assert_eq!(ls.max_ops(), routed_before);
+    }
+
+    #[test]
+    fn per_shard_rows_account_routed_and_completed() {
+        let c = coord();
+        let ks = distinct_keys(100, 0xA2);
+        c.run_stream(ks.iter().map(|&k| Op::Upsert(k, 1)));
+        let ls = c.load_stats();
+        assert_eq!(ls.shards.len(), 4);
+        let total_ops: u64 = ls.shards.iter().map(|s| s.ops).sum();
+        assert_eq!(total_ops, 100, "every op routed to exactly one row");
+        assert_eq!(ls.max_pending(), 0, "collect drained every queue");
+        let total_len: usize = ls.shards.iter().map(|s| s.len).sum();
+        assert_eq!(total_len, ls.len);
+        assert_eq!(ls.len, 100);
+        // Hash routing balances 100 keys over 4 shards well enough that
+        // no shard dominates outright.
+        assert!(ls.ops_skew() >= 1.0 && ls.ops_skew() < 4.0);
+    }
+
+    #[test]
+    fn shard_pending_trigger_predicate() {
+        let p = ReshardPolicy {
+            trigger_shard_pending: 5,
+            ..Default::default()
+        };
+        assert!(!p.shard_pending_triggered(4));
+        assert!(p.shard_pending_triggered(5));
+        let off = ReshardPolicy::default();
+        assert!(!off.shard_pending_triggered(u64::MAX), "0 disables");
+    }
+
+    #[test]
+    fn front_cache_fills_and_hits_respect_lifecycle_ticks() {
+        let lc = LifecycleConfig::new(1);
+        let c = Coordinator::new_with_lifecycle(
+            CoordinatorConfig {
+                kind: TableKind::P2Meta,
+                total_slots: 16 * 1024,
+                n_shards: 2,
+                n_workers: 2,
+                max_batch: 64,
+                growth: None,
+                reshard: None,
+                hotkey: Some(HotKeyPolicy {
+                    sample_every: 1,
+                    promote_min_count: 2,
+                    ..HotKeyPolicy::default()
+                }),
+            },
+            lc.clone(),
+        );
+        let k = distinct_keys(1, 0xA3)[0];
+        one(&c, Op::Upsert(k, 5));
+        one(&c, Op::Query(k));
+        one(&c, Op::Query(k)); // fills at tick 0
+        assert!(matches!(one(&c, Op::Query(k)), OpResult::Value(Some(5))));
+        assert_eq!(c.hotkey_stats().unwrap().hits, 1);
+        // Clock advance makes the replica tick-stale: the next read
+        // must route (its entry could have expired), then refill.
+        lc.clock.advance(1);
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(5)));
+        assert_eq!(c.hotkey_stats().unwrap().hits, 1, "tick-stale: no hit");
+        assert_eq!(one(&c, Op::Query(k)), OpResult::Value(Some(5)), "refilled");
+        assert_eq!(c.hotkey_stats().unwrap().hits, 2);
+        // A fill whose batch straddles a tick is dropped at collect:
+        // the value's validity tick has already passed.
+        lc.clock.advance(1);
+        let fills_before = c.hotkey_stats().unwrap().fills;
+        let pending = c.submit(&Batch { ops: vec![(0, Op::Query(k))] });
+        lc.clock.advance(1);
+        let r = c.collect(pending);
+        assert_eq!(r[0].1, OpResult::Value(Some(5)));
+        assert_eq!(
+            c.hotkey_stats().unwrap().fills,
+            fills_before,
+            "tick-straddling fill must be dropped"
+        );
+        // A TTL'd entry that expires is never served from the cache:
+        // cache warm at the current tick, expiry tick arrives, reads
+        // route and observe the expiry.
+        let k2 = distinct_keys(2, 0xA4)[1];
+        one(&c, Op::UpsertTtl(k2, 8, 2));
+        one(&c, Op::Query(k2));
+        one(&c, Op::Query(k2)); // fills at current tick
+        assert!(matches!(one(&c, Op::Query(k2)), OpResult::Value(Some(8))));
+        lc.clock.advance(2); // past the TTL
+        assert_eq!(one(&c, Op::Query(k2)), OpResult::Value(None), "expired, not cached");
+    }
+
+    #[test]
+    fn front_cache_stays_coherent_across_reshard_epochs() {
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::P2Meta,
+            total_slots: 16 * 1024,
+            n_shards: 2,
+            n_workers: 2,
+            max_batch: 64,
+            growth: Some(crate::tables::GrowthPolicy::default()),
+            reshard: None, // splits/merges forced manually
+            hotkey: Some(HotKeyPolicy {
+                sample_every: 1,
+                promote_min_count: 2,
+                ..HotKeyPolicy::default()
+            }),
+        });
+        let ks = distinct_keys(64, 0xA5);
+        c.run_stream(ks.iter().map(|&k| Op::Upsert(k, 1)));
+        let hot = ks[0];
+        one(&c, Op::Query(hot));
+        one(&c, Op::Query(hot)); // fills
+        assert!(matches!(one(&c, Op::Query(hot)), OpResult::Value(Some(1))));
+        // Split the topology: the cutover resets per-shard counters but
+        // the replica stays valid (splits are value-preserving).
+        assert!(c.request_reshard());
+        assert!(c.finish_resharding());
+        assert_eq!(one(&c, Op::Query(hot)), OpResult::Value(Some(1)));
+        // Write under the new epoch: invalidation still reaches the slot.
+        one(&c, Op::Upsert(hot, 2));
+        assert_eq!(one(&c, Op::Query(hot)), OpResult::Value(Some(2)));
+        assert_eq!(one(&c, Op::Query(hot)), OpResult::Value(Some(2)));
+        // Merge back down and check again.
+        assert!(c.request_merge());
+        assert!(c.finish_resharding());
+        one(&c, Op::Upsert(hot, 3));
+        assert_eq!(one(&c, Op::Query(hot)), OpResult::Value(Some(3)));
+        // Full-table parity after the round trip.
+        let r = c.run_stream(ks[1..].iter().map(|&k| Op::Query(k)));
+        assert!(r.iter().all(|&x| x == OpResult::Value(Some(1))));
+        // Counters were reset at the cutovers: rows reflect only the
+        // current epoch's traffic and nothing is left pending.
+        assert_eq!(c.load_stats().max_pending(), 0);
     }
 }

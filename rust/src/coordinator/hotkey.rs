@@ -1,0 +1,679 @@
+//! Hot-key sampling and the lock-free front cache.
+//!
+//! Zipfian traffic concentrates on a handful of keys, and pure hash
+//! routing concentrates those keys on a handful of shards — one worker
+//! melts while the rest idle (the WarpSpeed evaluation stresses skewed
+//! workloads for exactly this reason; pelikan ships a dedicated
+//! `hotkey` sampler against the same failure mode). This module gives
+//! the coordinator two cooperating pieces:
+//!
+//! * [`SpaceSaving`] — a tiny top-k frequency sketch fed with a 1-in-N
+//!   sample of the keys seen by read ops at submit time. Linear scan
+//!   over ≤ [`HotKeyPolicy::sampler_capacity`] entries: at this size a
+//!   cache-resident scan beats a heap, and the classic SpaceSaving
+//!   guarantee holds (a key with true frequency above the minimum
+//!   counter is always resident).
+//! * [`FrontCache`] — a small direct-mapped array of key→value slots
+//!   holding replicas of the hottest read keys, consulted at submit
+//!   time BEFORE shard routing. A hit answers the query immediately and
+//!   the op never routes, so hot-read traffic stops landing on the hot
+//!   shard at all.
+//!
+//! ## The staleness protocol
+//!
+//! A replica that can go stale is worse than no replica, so the cache
+//! borrows the shape of the [`crate::tables::TieredMap`] frozen-read
+//! protocol: a per-slot **stamp** plays the epoch, and every write-path
+//! touch bumps it. Each slot packs `(stamp << 2) | phase` into one
+//! atomic word, with three phases:
+//!
+//! * `INVALID` — slot designates a hot key but holds no usable value;
+//! * `ARMED`   — a fill is outstanding: some in-flight batch carries a
+//!   ticket ([`FillTicket`]) to populate the slot from the shard's own
+//!   answer;
+//! * `LIVE`    — `key`/`val`/`tick` are valid and may answer queries.
+//!
+//! **Every mutation of the cache happens under the coordinator's epoch
+//! gate** (submit: sample / invalidate / hit / arm; collect: fill
+//! commit), so mutators never race each other — the gate is already on
+//! both paths and the cache rides it for free. Correctness then reduces
+//! to two stamp rules:
+//!
+//! * a write to key `k` submitted through the coordinator bumps `k`'s
+//!   slot stamp ([`FrontCache::invalidate`]) *at submit time, under the
+//!   gate*, before the write is even enqueued;
+//! * a fill commits only if the slot still shows the exact
+//!   `(stamp, ARMED)` word its ticket was issued under
+//!   ([`FrontCache::commit_fill`]) — any write submitted between the
+//!   query that armed the slot and its collect-time fill bumped the
+//!   stamp, so the stale fill aborts.
+//!
+//! Hence a `LIVE` slot observed at submit time was filled from a query
+//! that was FIFO-ordered after every previously submitted write to that
+//! key, which is exactly the value the shard itself would return — the
+//! per-key linearization the batch pipeline guarantees is preserved,
+//! and topology changes (growth migration, split/merge, freeze/promote)
+//! need no extra handling because they are value-preserving: only
+//! coordinator-path writes change a key's value, and they all
+//! invalidate. The one documented hole is mutating the
+//! [`crate::coordinator::ShardedTable`] directly behind a serving
+//! coordinator's back — the same class of foul as calling
+//! `split_shards` under live traffic, and called out in
+//! `docs/ARCHITECTURE.md`.
+//!
+//! Reads validate like a seqlock (load state, read fields, re-load
+//! state, accept only if unchanged and the key matches), and `val` is
+//! only ever stored while the slot is `ARMED`, never while `LIVE`, so a
+//! validated read can never observe a torn or re-owned slot. All slot
+//! stores are `Release` and loads `Acquire`: today's readers sit under
+//! the gate too, but the validation must stay sound if a future caller
+//! reads the cache off-gate.
+//!
+//! TTL interaction: a cached value must not outlive its entry's expiry.
+//! Fills record the [`crate::tables::LifecycleClock`] tick the queried
+//! value was valid at, and a hit requires the slot tick to equal the
+//! clock's CURRENT tick — within one tick nothing expires (expiry is
+//! deterministic in the tick), so equal tick ⇒ the shard would return
+//! the same value. When the clock advances, every cached entry goes
+//! tick-stale and re-arms on its next lookup. Tables without a
+//! lifecycle config skip the check entirely.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::hash::fmix64;
+
+/// Phase bits of a slot's state word (`(stamp << 2) | phase`).
+const INVALID: u64 = 0;
+const ARMED: u64 = 1;
+const LIVE: u64 = 2;
+
+#[inline]
+fn phase(state: u64) -> u64 {
+    state & 0b11
+}
+
+#[inline]
+fn stamp(state: u64) -> u64 {
+    state >> 2
+}
+
+#[inline]
+fn word(stamp: u64, phase: u64) -> u64 {
+    (stamp << 2) | phase
+}
+
+/// Knobs for the hot-key sampler and front cache
+/// ([`crate::coordinator::CoordinatorConfig::hotkey`]; `None` disables
+/// the whole subsystem and the submit path pays nothing).
+#[derive(Clone, Copy, Debug)]
+pub struct HotKeyPolicy {
+    /// Keys the [`SpaceSaving`] sketch tracks. The sketch is a linear
+    /// scan — keep this small (the default 64 fits in two cache lines'
+    /// worth of entries and already captures a zipfian head).
+    pub sampler_capacity: usize,
+    /// Sample 1 in this many read ops into the sketch (1 = every read).
+    /// Sampling keeps the per-op submit cost at a counter increment for
+    /// the unsampled majority.
+    pub sample_every: usize,
+    /// Front-cache slots (rounded up to a power of two; direct-mapped
+    /// by `fmix64(key)`). Each slot is four atomics — 256 slots is 8KiB.
+    pub cache_slots: usize,
+    /// Sketch estimate at which a sampled key gets designated a front-
+    /// cache slot (evicting a colder resident). With 1-in-N sampling an
+    /// estimate of `c` means roughly `c * sample_every` observed reads.
+    pub promote_min_count: u64,
+    /// Halve every sketch counter after this many *sampled*
+    /// observations — the decay that lets yesterday's hot key cool off
+    /// and drop out. `0` disables decay.
+    pub decay_every: u64,
+}
+
+impl Default for HotKeyPolicy {
+    fn default() -> Self {
+        Self {
+            sampler_capacity: 64,
+            sample_every: 8,
+            cache_slots: 256,
+            promote_min_count: 4,
+            decay_every: 4096,
+        }
+    }
+}
+
+/// SpaceSaving top-k frequency sketch (Metwally et al.): at most `cap`
+/// `(key, count)` entries; an unseen key overwrites the minimum-count
+/// entry and inherits its count + 1, so estimates only ever
+/// over-approximate and the true top keys cannot be evicted by tail
+/// noise once established.
+pub struct SpaceSaving {
+    cap: usize,
+    decay_every: u64,
+    /// Sampled observations since the last decay.
+    since_decay: u64,
+    /// Total sampled observations (metrics).
+    observed: u64,
+    entries: Vec<(u64, u64)>,
+}
+
+impl SpaceSaving {
+    pub fn new(cap: usize, decay_every: u64) -> Self {
+        Self {
+            cap: cap.max(1),
+            decay_every,
+            since_decay: 0,
+            observed: 0,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one sampled observation of `k`; returns its new estimate.
+    pub fn observe(&mut self, k: u64) -> u64 {
+        self.observed += 1;
+        self.since_decay += 1;
+        if self.decay_every > 0 && self.since_decay >= self.decay_every {
+            self.since_decay = 0;
+            self.entries.retain_mut(|e| {
+                e.1 /= 2;
+                e.1 > 0
+            });
+        }
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == k) {
+            e.1 += 1;
+            return e.1;
+        }
+        if self.entries.len() < self.cap {
+            self.entries.push((k, 1));
+            return 1;
+        }
+        let min = self
+            .entries
+            .iter_mut()
+            .min_by_key(|e| e.1)
+            .expect("cap >= 1, entries full");
+        *min = (k, min.1 + 1);
+        min.1
+    }
+
+    /// Current estimate for `k` (0 when not resident).
+    pub fn estimate(&self, k: u64) -> u64 {
+        self.entries.iter().find(|e| e.0 == k).map_or(0, |e| e.1)
+    }
+
+    /// The `n` hottest resident keys, hottest first.
+    pub fn top(&self, n: usize) -> Vec<(u64, u64)> {
+        let mut v = self.entries.clone();
+        v.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+
+    /// Total sampled observations fed to the sketch.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+}
+
+/// Outcome of a front-cache consult for one query
+/// ([`FrontCache::lookup`]).
+pub enum Lookup {
+    /// Slot is live and current: answer the query with this value
+    /// without routing it.
+    Hit(u64),
+    /// The key owns a slot but it holds no usable value; the slot is
+    /// now armed at this stamp — route the query and carry a
+    /// [`FillTicket`] so its answer can populate the slot at collect.
+    Armed(u64),
+    /// The key has no slot (or another key owns the one it maps to);
+    /// route normally, nothing to fill.
+    Cold,
+}
+
+/// Collect-time instruction to populate an armed slot from a routed
+/// query's own result. Issued by [`FrontCache::lookup`] under the epoch
+/// gate; redeemed by [`FrontCache::commit_fill`] under the same gate.
+/// The `stamp` is the staleness check: any write to `key` submitted in
+/// between bumps the slot stamp and the commit aborts.
+#[derive(Clone, Copy, Debug)]
+pub struct FillTicket {
+    pub key: u64,
+    pub stamp: u64,
+    /// Lifecycle tick at ticket issue (0 without a lifecycle clock) —
+    /// the value the fill stores in the slot's tick field.
+    pub tick: u64,
+}
+
+/// One direct-mapped slot. `state` packs `(stamp << 2) | phase`;
+/// `key == 0` means the slot has never been designated (user keys are
+/// never 0 — the gpusim `EMPTY` sentinel).
+struct Slot {
+    state: AtomicU64,
+    key: AtomicU64,
+    val: AtomicU64,
+    tick: AtomicU64,
+}
+
+/// Lock-free replica cache for the hottest read keys — see the module
+/// docs for the staleness protocol. All mutators (`lookup`'s arm/
+/// retire edges, `invalidate`, `designate`, `commit_fill`) must run
+/// under the coordinator's epoch gate; reads validate seqlock-style.
+pub struct FrontCache {
+    slots: Box<[Slot]>,
+    mask: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    fills: AtomicU64,
+    aborted_fills: AtomicU64,
+    invalidations: AtomicU64,
+    evictions: AtomicU64,
+    designations: AtomicU64,
+}
+
+impl FrontCache {
+    pub fn new(slots: usize) -> Self {
+        let n = slots.max(1).next_power_of_two();
+        Self {
+            slots: (0..n)
+                .map(|_| Slot {
+                    state: AtomicU64::new(word(0, INVALID)),
+                    key: AtomicU64::new(0),
+                    val: AtomicU64::new(0),
+                    tick: AtomicU64::new(0),
+                })
+                .collect(),
+            mask: n - 1,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            fills: AtomicU64::new(0),
+            aborted_fills: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            designations: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn slot_of(&self, k: u64) -> &Slot {
+        &self.slots[fmix64(k) as usize & self.mask]
+    }
+
+    /// Consult the cache for query key `k` (gate-held). `now` is the
+    /// lifecycle clock's current tick (`None` without a lifecycle):
+    /// a live slot filled at an older tick is tick-stale — its entry
+    /// may have expired since — so it retires and re-arms instead of
+    /// answering.
+    pub fn lookup(&self, k: u64, now: Option<u64>) -> Lookup {
+        let slot = self.slot_of(k);
+        if slot.key.load(Ordering::Acquire) != k {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Lookup::Cold;
+        }
+        let s = slot.state.load(Ordering::Acquire);
+        match phase(s) {
+            LIVE => {
+                let tick = slot.tick.load(Ordering::Acquire);
+                if now.is_some_and(|n| tick != n) {
+                    let next = stamp(s) + 1;
+                    slot.state.store(word(next, ARMED), Ordering::Release);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    Lookup::Armed(next)
+                } else {
+                    let v = slot.val.load(Ordering::Acquire);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    Lookup::Hit(v)
+                }
+            }
+            ARMED => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Lookup::Armed(stamp(s))
+            }
+            _ => {
+                // INVALID, key already designated: arm at the same stamp
+                // (stamps only need to grow on transitions that could
+                // strand an outstanding ticket — arming cannot, since no
+                // ARMED ticket at this stamp can predate this word).
+                slot.state.store(word(stamp(s), ARMED), Ordering::Release);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Lookup::Armed(stamp(s))
+            }
+        }
+    }
+
+    /// Write-path invalidation (gate-held, at SUBMIT time — before the
+    /// write is enqueued): if `k` owns its slot, bump the stamp so every
+    /// outstanding fill ticket for it aborts and readers stop hitting.
+    pub fn invalidate(&self, k: u64) {
+        let slot = self.slot_of(k);
+        if slot.key.load(Ordering::Acquire) != k {
+            return;
+        }
+        let s = slot.state.load(Ordering::Acquire);
+        if phase(s) != INVALID {
+            slot.state.store(word(stamp(s) + 1, INVALID), Ordering::Release);
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Designate `k` a hot key (gate-held, from the sampler): claim its
+    /// direct-mapped slot unless the resident key is at least as hot by
+    /// the sketch's estimate. The stamp bumps BEFORE the key store, so
+    /// a seqlock reader that catches the old resident's state word with
+    /// the new key (or vice versa) fails validation.
+    pub fn designate(&self, k: u64, estimate: u64, sampler: &SpaceSaving) {
+        let slot = self.slot_of(k);
+        let resident = slot.key.load(Ordering::Acquire);
+        if resident == k {
+            return;
+        }
+        if resident != 0 && sampler.estimate(resident) >= estimate {
+            return;
+        }
+        let s = slot.state.load(Ordering::Acquire);
+        slot.state.store(word(stamp(s) + 1, INVALID), Ordering::Release);
+        slot.key.store(k, Ordering::Release);
+        if resident != 0 {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.designations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Redeem a fill ticket with the routed query's answer (gate-held,
+    /// at collect): commits only if the slot still shows the exact
+    /// `(stamp, ARMED)` word the ticket was issued under — any write
+    /// submitted since bumped the stamp and the fill aborts. `val` is
+    /// stored before the `LIVE` flip (never while `LIVE`), which is
+    /// what keeps seqlock validation sufficient for readers.
+    pub fn commit_fill(&self, t: FillTicket, val: u64) -> bool {
+        let slot = self.slot_of(t.key);
+        let armed = word(t.stamp, ARMED);
+        if slot.state.load(Ordering::Acquire) == armed && slot.key.load(Ordering::Acquire) == t.key
+        {
+            slot.val.store(val, Ordering::Release);
+            slot.tick.store(t.tick, Ordering::Release);
+            slot.state.store(word(t.stamp, LIVE), Ordering::Release);
+            self.fills.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            self.aborted_fills.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Slots currently `LIVE` (gauge; scans the array).
+    pub fn live(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| phase(s.state.load(Ordering::Acquire)) == LIVE)
+            .count()
+    }
+}
+
+/// Counter snapshot of the hot-key subsystem
+/// ([`crate::coordinator::Coordinator::hotkey_stats`]; surfaced as the
+/// `front_cache_*` admin stats).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontCacheStats {
+    /// Queries answered from the cache without routing.
+    pub hits: u64,
+    /// Queries consulted but not answered (cold, armed, or tick-stale).
+    pub misses: u64,
+    /// Fill tickets committed (slot went LIVE).
+    pub fills: u64,
+    /// Fill tickets aborted by an intervening stamp bump.
+    pub aborted_fills: u64,
+    /// Write-path stamp bumps on cached keys.
+    pub invalidations: u64,
+    /// Designations that displaced a colder resident key.
+    pub evictions: u64,
+    /// Slots currently LIVE.
+    pub live: usize,
+    /// Read ops fed past the 1-in-N sampler into the sketch.
+    pub sampled: u64,
+}
+
+/// The coordinator-facing bundle: policy + sampler + cache, with the
+/// gate discipline baked into its API (every method is documented
+/// gate-held; the sampler's mutex is never contended — it exists only
+/// to keep the bundle `Sync`).
+pub struct HotKeys {
+    policy: HotKeyPolicy,
+    sampler: Mutex<SpaceSaving>,
+    pub cache: FrontCache,
+    /// Read ops seen pre-sampling; under-gate counter, atomic for `Sync`.
+    seen: AtomicU64,
+}
+
+impl HotKeys {
+    pub fn new(policy: HotKeyPolicy) -> Self {
+        Self {
+            policy,
+            sampler: Mutex::new(SpaceSaving::new(policy.sampler_capacity, policy.decay_every)),
+            cache: FrontCache::new(policy.cache_slots),
+            seen: AtomicU64::new(0),
+        }
+    }
+
+    /// Feed one read op (gate-held): 1-in-N sampling into the sketch,
+    /// and designation of the key into the front cache once its
+    /// estimate crosses the promotion bar.
+    pub fn observe_read(&self, k: u64) {
+        let n = self.seen.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.policy.sample_every.max(1) as u64 != 0 {
+            return;
+        }
+        let mut sampler = self.sampler.lock().unwrap_or_else(|e| e.into_inner());
+        let est = sampler.observe(k);
+        if est >= self.policy.promote_min_count.max(1) {
+            self.cache.designate(k, est, &sampler);
+        }
+    }
+
+    /// Counter snapshot (hits/misses/fills/… + live-slot gauge).
+    pub fn stats(&self) -> FrontCacheStats {
+        let relaxed = Ordering::Relaxed;
+        FrontCacheStats {
+            hits: self.cache.hits.load(relaxed),
+            misses: self.cache.misses.load(relaxed),
+            fills: self.cache.fills.load(relaxed),
+            aborted_fills: self.cache.aborted_fills.load(relaxed),
+            invalidations: self.cache.invalidations.load(relaxed),
+            evictions: self.cache.evictions.load(relaxed),
+            live: self.cache.live(),
+            sampled: self
+                .sampler
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .observed(),
+        }
+    }
+
+    /// The sketch's `n` hottest keys, hottest first (diagnostics; the
+    /// `bench hotkey` exhibit prints these against the known zipf head).
+    pub fn top_keys(&self, n: usize) -> Vec<(u64, u64)> {
+        self.sampler.lock().unwrap_or_else(|e| e.into_inner()).top(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spacesaving_tracks_heavy_hitters() {
+        let mut s = SpaceSaving::new(4, 0);
+        for _ in 0..10 {
+            s.observe(100);
+        }
+        for _ in 0..6 {
+            s.observe(200);
+        }
+        for k in 0..4 {
+            s.observe(300 + k); // tail noise cycling through the min slot
+        }
+        assert!(s.estimate(100) >= 10, "heavy hitter survives tail churn");
+        assert!(s.estimate(200) >= 6);
+        let top = s.top(2);
+        assert_eq!(top[0].0, 100);
+        assert_eq!(top[1].0, 200);
+        assert_eq!(s.observed(), 20);
+    }
+
+    #[test]
+    fn spacesaving_eviction_inherits_min_count() {
+        let mut s = SpaceSaving::new(2, 0);
+        s.observe(1);
+        s.observe(1);
+        s.observe(2);
+        // Table full: key 3 replaces the min (key 2, count 1) at 1+1=2.
+        assert_eq!(s.observe(3), 2);
+        assert_eq!(s.estimate(2), 0, "evicted");
+        assert_eq!(s.estimate(3), 2, "over-approximate inherit");
+    }
+
+    #[test]
+    fn spacesaving_decay_halves_and_drops_zeros() {
+        let mut s = SpaceSaving::new(8, 4);
+        s.observe(1);
+        s.observe(1);
+        s.observe(1);
+        s.observe(2);
+        // 4 sampled observations: next observe decays first (1:3→1, 2:1→0 drops).
+        s.observe(1);
+        assert_eq!(s.estimate(1), 2, "halved then incremented");
+        assert_eq!(s.estimate(2), 0, "decayed to zero and dropped");
+    }
+
+    fn designated(cache: &FrontCache, sk: &SpaceSaving, k: u64) {
+        cache.designate(k, u64::MAX, sk);
+    }
+
+    #[test]
+    fn arm_fill_hit_cycle() {
+        let cache = FrontCache::new(8);
+        let sk = SpaceSaving::new(4, 0);
+        let k = 42;
+        designated(&cache, &sk, k);
+        // First lookup arms.
+        let Lookup::Armed(stamp) = cache.lookup(k, None) else {
+            panic!("designated key should arm");
+        };
+        // Fill commits, next lookup hits.
+        assert!(cache.commit_fill(FillTicket { key: k, stamp, tick: 0 }, 7));
+        assert_eq!(cache.live(), 1);
+        let Lookup::Hit(v) = cache.lookup(k, None) else {
+            panic!("filled slot should hit");
+        };
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn invalidate_aborts_outstanding_fill() {
+        let cache = FrontCache::new(8);
+        let sk = SpaceSaving::new(4, 0);
+        let k = 42;
+        designated(&cache, &sk, k);
+        let Lookup::Armed(stamp) = cache.lookup(k, None) else {
+            panic!()
+        };
+        // A write to k submitted before the fill lands: stamp bumps…
+        cache.invalidate(k);
+        // …so the stale fill aborts and nothing ever hits stale.
+        assert!(!cache.commit_fill(FillTicket { key: k, stamp, tick: 0 }, 7));
+        assert_eq!(cache.live(), 0);
+        assert!(matches!(cache.lookup(k, None), Lookup::Armed(_)));
+    }
+
+    #[test]
+    fn invalidate_retires_live_slot() {
+        let cache = FrontCache::new(8);
+        let sk = SpaceSaving::new(4, 0);
+        let k = 9;
+        designated(&cache, &sk, k);
+        let Lookup::Armed(stamp) = cache.lookup(k, None) else {
+            panic!()
+        };
+        assert!(cache.commit_fill(FillTicket { key: k, stamp, tick: 0 }, 1));
+        cache.invalidate(k);
+        assert!(matches!(cache.lookup(k, None), Lookup::Armed(_)), "live slot retired");
+    }
+
+    #[test]
+    fn unrelated_key_is_cold_and_invalidate_ignores_foreign_slot() {
+        let cache = FrontCache::new(1); // every key maps to slot 0
+        let sk = SpaceSaving::new(4, 0);
+        designated(&cache, &sk, 5);
+        let Lookup::Armed(stamp) = cache.lookup(5, None) else {
+            panic!()
+        };
+        assert!(cache.commit_fill(FillTicket { key: 5, stamp, tick: 0 }, 50));
+        // Key 6 shares the slot but does not own it: cold, and a write
+        // to 6 must NOT disturb 5's live replica.
+        assert!(matches!(cache.lookup(6, None), Lookup::Cold));
+        cache.invalidate(6);
+        assert!(matches!(cache.lookup(5, None), Lookup::Hit(50)));
+    }
+
+    #[test]
+    fn designate_respects_hotter_resident() {
+        let cache = FrontCache::new(1);
+        let mut sk = SpaceSaving::new(4, 0);
+        for _ in 0..5 {
+            sk.observe(5);
+        }
+        sk.observe(6);
+        cache.designate(5, sk.estimate(5), &sk);
+        // 6 is colder: designation refused, 5 keeps the slot.
+        cache.designate(6, sk.estimate(6), &sk);
+        assert!(matches!(cache.lookup(5, None), Lookup::Armed(_)));
+        assert!(matches!(cache.lookup(6, None), Lookup::Cold));
+        // 6 heats past 5: displacement allowed.
+        for _ in 0..10 {
+            sk.observe(6);
+        }
+        cache.designate(6, sk.estimate(6), &sk);
+        assert!(matches!(cache.lookup(6, None), Lookup::Armed(_)));
+    }
+
+    #[test]
+    fn tick_stale_live_slot_rearms() {
+        let cache = FrontCache::new(8);
+        let sk = SpaceSaving::new(4, 0);
+        let k = 3;
+        designated(&cache, &sk, k);
+        let Lookup::Armed(stamp) = cache.lookup(k, Some(1)) else {
+            panic!()
+        };
+        assert!(cache.commit_fill(FillTicket { key: k, stamp, tick: 1 }, 30));
+        assert!(matches!(cache.lookup(k, Some(1)), Lookup::Hit(30)), "same tick: hit");
+        // Clock advanced: the entry may have expired in the shard, so
+        // the replica must not answer — it retires and re-arms.
+        let Lookup::Armed(s2) = cache.lookup(k, Some(2)) else {
+            panic!("tick-stale slot must re-arm, not hit");
+        };
+        assert!(s2 > stamp);
+    }
+
+    #[test]
+    fn stats_roll_up() {
+        let hot = HotKeys::new(HotKeyPolicy {
+            sample_every: 1,
+            promote_min_count: 2,
+            ..HotKeyPolicy::default()
+        });
+        for _ in 0..3 {
+            hot.observe_read(7);
+        }
+        // Estimate hit 2 on the second read: designated.
+        let Lookup::Armed(stamp) = hot.cache.lookup(7, None) else {
+            panic!("sampler should have designated key 7")
+        };
+        hot.cache.commit_fill(FillTicket { key: 7, stamp, tick: 0 }, 70);
+        assert!(matches!(hot.cache.lookup(7, None), Lookup::Hit(70)));
+        let st = hot.stats();
+        assert_eq!(st.sampled, 3);
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.fills, 1);
+        assert_eq!(st.live, 1);
+        assert_eq!(hot.top_keys(1), vec![(7, 3)]);
+    }
+}

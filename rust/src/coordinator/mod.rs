@@ -119,6 +119,23 @@
 //! [`Coordinator::swept_expired`] / [`ShardedTable::load_stats`] report
 //! the running reclamation counters.
 //!
+//! ## Hot keys and the front cache
+//!
+//! Pure hash routing sends zipfian traffic's head to one shard — it
+//! melts while the rest idle. With [`CoordinatorConfig`]`::hotkey` set
+//! ([`hotkey::HotKeyPolicy`]), submit samples read keys into a
+//! SpaceSaving sketch and replicates the hottest into a small
+//! lock-free front cache consulted BEFORE shard routing: hits are
+//! answered at submit and never route, writes to a cached key bump its
+//! slot's stamp at submit time (under the same epoch gate every
+//! cutover uses) so replicas are never stale, and fills ride the
+//! query's own batch as stamp-checked tickets redeemed at collect.
+//! [`Coordinator::load_stats`] grows per-shard routed/pending rows so
+//! the [`ReshardPolicy`] skew trigger and the admin `stats` surface
+//! see the imbalance directly. `warpspeed hotkey` /
+//! [`crate::bench::hotkey`] exhibits it; `docs/ARCHITECTURE.md` places
+//! it in the layer map.
+//!
 //! Invariants (property-tested):
 //! * routing is a pure function of the key — the same key always reaches
 //!   the same shard (required for per-key linearization); across an
@@ -135,6 +152,7 @@
 
 pub mod batcher;
 pub mod exec;
+pub mod hotkey;
 pub mod router;
 
 pub use batcher::{Batch, Batcher};
@@ -142,7 +160,8 @@ pub use exec::{
     default_workers, Coordinator, CoordinatorConfig, OpResult, PendingBatch, ReadOffload,
     ReshardPolicy,
 };
-pub use router::{LoadStats, Router, ShardedTable};
+pub use hotkey::{FrontCacheStats, HotKeyPolicy};
+pub use router::{LoadStats, Router, ShardLoad, ShardedTable};
 
 /// One client operation (the paper's API surface, §5.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

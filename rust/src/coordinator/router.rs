@@ -88,8 +88,8 @@ use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use crate::gpusim::LockArray;
 use crate::hash::seeded;
 use crate::tables::{
-    build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, LifecycleConfig, TableConfig,
-    TableKind, TieredMap, UpsertOp, UpsertResult,
+    build_table_with, ConcurrentMap, GrowableMap, GrowthPolicy, LifecycleClock, LifecycleConfig,
+    TableConfig, TableKind, TieredMap, UpsertOp, UpsertResult,
 };
 
 /// Routing hash seed — distinct from all table seeds so shard choice is
@@ -274,10 +274,14 @@ enum Topology {
     Merging(Arc<Merge>),
 }
 
-/// One-guard aggregate sample of the sharded table's load — what
-/// [`ShardedTable::load_stats`] returns and the coordinator's reshard
-/// triggers (and lifecycle metrics) consume once per submit.
-#[derive(Clone, Copy, Debug, Default)]
+/// One-guard sample of the sharded table's load — aggregates plus one
+/// [`ShardLoad`] row per resident shard, so the reshard triggers and
+/// the admin `stats` surface can see *skew*, not just totals.
+/// [`ShardedTable::load_stats`] fills `len`/`capacity`; the table does
+/// not see routing, so `ops`/`pending` are zero in its rows —
+/// [`crate::coordinator::Coordinator::load_stats`] merges its
+/// routed/completed counters in.
+#[derive(Clone, Debug, Default)]
 pub struct LoadStats {
     /// Live + expired-but-unswept entries across every resident shard
     /// (physical occupancy, like [`ConcurrentMap::len`]).
@@ -287,6 +291,50 @@ pub struct LoadStats {
     /// Expired entries reclaimed by sweeps over the table's lifetime,
     /// merge-dropped shards included ([`ShardedTable::swept_expired`]).
     pub swept_expired: u64,
+    /// Per-shard rows, indexed by shard.
+    pub shards: Vec<ShardLoad>,
+}
+
+/// One shard's row in [`LoadStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardLoad {
+    /// The shard's occupancy ([`ConcurrentMap::len`]).
+    pub len: usize,
+    /// The shard's slot count.
+    pub capacity: usize,
+    /// Ops routed to this shard since the last epoch cutover (zero from
+    /// [`ShardedTable::load_stats`]; filled by the coordinator).
+    pub ops: u64,
+    /// Ops routed but not yet executed — the shard's queue depth (zero
+    /// from [`ShardedTable::load_stats`]; filled by the coordinator).
+    pub pending: u64,
+}
+
+impl LoadStats {
+    /// Routed-traffic skew: the hottest shard's share of routed ops,
+    /// normalized so `1.0` = perfectly balanced and `n_shards` = every
+    /// op on one shard. `0.0` when no ops have routed this epoch.
+    pub fn ops_skew(&self) -> f64 {
+        let total: u64 = self.shards.iter().map(|s| s.ops).sum();
+        if total == 0 || self.shards.is_empty() {
+            return 0.0;
+        }
+        let max = self.shards.iter().map(|s| s.ops).max().unwrap_or(0);
+        max as f64 * self.shards.len() as f64 / total as f64
+    }
+
+    /// The deepest per-shard queue ([`ShardLoad::pending`]) — what
+    /// [`crate::coordinator::ReshardPolicy::shard_pending_triggered`]
+    /// and the `shard_max_pending` admin stat consume.
+    pub fn max_pending(&self) -> u64 {
+        self.shards.iter().map(|s| s.pending).max().unwrap_or(0)
+    }
+
+    /// The most ops routed to any single shard this epoch (the
+    /// `shard_max_ops` admin stat).
+    pub fn max_ops(&self) -> u64 {
+        self.shards.iter().map(|s| s.ops).max().unwrap_or(0)
+    }
 }
 
 /// A table design sharded across independent instances, with online
@@ -1440,16 +1488,32 @@ impl ShardedTable {
     /// lifecycle sweep counter so one sample answers both "how full"
     /// and "how much expiry reclamation has run".
     pub fn load_stats(&self) -> LoadStats {
-        let (len, capacity, swept) = self.with_shards(|sh| {
-            sh.iter().fold((0, 0, 0u64), |(l, c, w), s| {
-                (l + s.len(), c + s.capacity(), w + s.swept_expired())
-            })
+        let (shards, swept) = self.with_shards(|sh| {
+            let rows: Vec<ShardLoad> = sh
+                .iter()
+                .map(|s| ShardLoad {
+                    len: s.len(),
+                    capacity: s.capacity(),
+                    ops: 0,
+                    pending: 0,
+                })
+                .collect();
+            let swept: u64 = sh.iter().map(|s| s.swept_expired()).sum();
+            (rows, swept)
         });
         LoadStats {
-            len,
-            capacity,
+            len: shards.iter().map(|s| s.len).sum(),
+            capacity: shards.iter().map(|s| s.capacity).sum(),
             swept_expired: swept + self.swept_carry.load(Ordering::Relaxed),
+            shards,
         }
+    }
+
+    /// The lifecycle clock the shards were built against (`None` for
+    /// immortal tables) — the coordinator tick-stamps front-cache fills
+    /// with it so a cached replica can never outlive its entry's TTL.
+    pub fn lifecycle_clock(&self) -> Option<Arc<LifecycleClock>> {
+        self.lifecycle.as_ref().map(|lc| lc.clock.clone())
     }
 
     /// Whether the shards were built with an entry-lifecycle config

@@ -141,6 +141,26 @@
 //! grammar lives in `docs/PROTOCOL.md`; `warpspeed serve --tcp` starts
 //! it and the `serve` exhibit ([`bench::serve`]) drives loopback load
 //! for p50/p99/p999 latency.
+//!
+//! # Hot keys — sampling + the lock-free front cache
+//!
+//! Hashing spreads keys uniformly but zipfian traffic concentrates
+//! *ops*: the few hottest keys melt whichever shards own them.
+//! [`coordinator::HotKeyPolicy`] arms a SpaceSaving sampler over the
+//! keys seen at submit and a lock-free front cache of stamp-validated
+//! replica slots ([`coordinator::hotkey`]): LIVE hits answer at submit
+//! and never route, writes invalidate under the submit gate before
+//! they are partitioned (so readers can never go backwards — per-key
+//! FIFO holds through the cache, including across split/merge epoch
+//! flips), and lifecycle-tick-stamped fills keep TTL expiry honest.
+//! Per-shard routed/completed counters surface skew through
+//! [`coordinator::LoadStats`], the admin `shard_skew` gauges, and
+//! `ReshardPolicy::trigger_shard_pending`; the `hotkey` exhibit
+//! ([`bench::hotkey`]) replays the zipfian mix, cache off vs on,
+//! against a sequential oracle.
+//!
+//! The full layer map — who sits on whom, and the invariants each
+//! layer owes the one above — is `docs/ARCHITECTURE.md`.
 
 pub mod gpusim;
 pub mod hash;

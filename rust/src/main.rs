@@ -3,13 +3,13 @@
 //!
 //! ```text
 //! warpspeed info
-//! warpspeed probes|bulk|grow|reshard|shrink|freeze|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime|serve-bench
+//! warpspeed probes|bulk|grow|reshard|shrink|freeze|load|aging|caching|scaling|ycsb|sptc|sweep|space|adversarial|runtime|serve-bench|hotkey
 //!           [--slots N] [--iters N] [--seed S]
 //! warpspeed all          # every exhibit in sequence
 //! warpspeed serve --tcp [--host H] [--port P] [--admin-port P] [--window N]
 //!           [--max-inflight N] [--max-conns N] [--ttl [--quantum N] [--tick-ms MS]]
 //!           [--table p2m] [--slots N] [--shards N] [--workers N] [--batch N]
-//!           [--grow] [--reshard] [--shrink]
+//!           [--grow] [--reshard] [--shrink] [--hotkey]
 //! warpspeed serve        # debug fallback: stdin/stdout line protocol
 //! ```
 //!
@@ -45,7 +45,7 @@ fn main() {
             println!("WarpSpeed reproduction — concurrent GPU-model hash tables");
             println!("designs: {:?}", TableKind::CONCURRENT.map(|k| k.paper_name()));
             println!("bench env: slots={} iters={} seed={:#x}", env.slots, env.iterations, env.seed);
-            println!("subcommands: probes bulk grow reshard shrink freeze load aging caching scaling ycsb sptc sweep space adversarial ablations runtime serve-bench all serve");
+            println!("subcommands: probes bulk grow reshard shrink freeze load aging caching scaling ycsb sptc sweep space adversarial ablations runtime serve-bench hotkey all serve");
         }
         "probes" => print!("{}", bench::probes::run(&env)),
         "bulk" => print!("{}", bench::bulk::run(&env)),
@@ -65,6 +65,7 @@ fn main() {
         "ablations" => print!("{}", bench::ablations::run(&env)),
         "runtime" => print!("{}", bench::runtime::run(&env)),
         "serve-bench" => print!("{}", bench::serve::run(&env)),
+        "hotkey" => print!("{}", bench::hotkey::run(&env)),
         "all" => {
             for (name, f) in [
                 ("probes", bench::probes::run as fn(&BenchEnv) -> String),
@@ -85,6 +86,7 @@ fn main() {
                 ("ablations", bench::ablations::run),
                 ("runtime", bench::runtime::run),
                 ("serve-bench", bench::serve::run),
+                ("hotkey", bench::hotkey::run),
             ] {
                 eprintln!("[warpspeed] running {name}…");
                 match std::panic::catch_unwind(|| f(&env)) {
@@ -138,6 +140,12 @@ fn serve(args: &Args) {
                 merge_below_load_factor: if args.get_bool("shrink") { 0.25 } else { 0.0 },
                 ..Default::default()
             }),
+        // `--hotkey` arms the hot-key sampler + front cache: zipfian
+        // read heads answer at submit instead of melting one shard, and
+        // the admin `stats` grows the front_cache_* counter group.
+        hotkey: args
+            .get_bool("hotkey")
+            .then(warpspeed::coordinator::HotKeyPolicy::default),
     };
     let clock = lifecycle.as_ref().map(|lc| lc.clock.clone());
     let coord = match lifecycle {

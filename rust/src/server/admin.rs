@@ -46,7 +46,11 @@ pub fn stat_lines(
         coord.pending_jobs_per_worker().to_string(),
     ));
     let table = &coord.table;
-    let ls = table.load_stats();
+    // The coordinator's view of load: the table's len/capacity rows
+    // with the routed/pending traffic counters merged in, so the skew
+    // gauges below see the same per-shard numbers the
+    // [`crate::coordinator::ReshardPolicy`] triggers consume.
+    let ls = coord.load_stats();
     out.push(("n_shards".into(), table.n_shards().to_string()));
     out.push(("epoch".into(), table.epoch().to_string()));
     out.push(("len".into(), ls.len.to_string()));
@@ -63,6 +67,20 @@ pub fn stat_lines(
     out.push(("freeze_events".into(), table.freeze_events().to_string()));
     out.push(("frozen_len".into(), table.frozen_len().to_string()));
     out.push(("moved_keys".into(), table.moved_keys().to_string()));
+    // Skew gauges over the per-shard rows: ops routed to the hottest
+    // shard this epoch, its queue depth, and the normalized skew ratio
+    // (1.0 = balanced, n_shards = everything on one shard).
+    out.push(("shard_max_ops".into(), ls.max_ops().to_string()));
+    out.push(("shard_max_pending".into(), ls.max_pending().to_string()));
+    out.push(("shard_skew".into(), format!("{:.4}", ls.ops_skew())));
+    if let Some(hk) = coord.hotkey_stats() {
+        out.push(("front_cache_hits".into(), hk.hits.to_string()));
+        out.push(("front_cache_misses".into(), hk.misses.to_string()));
+        out.push(("front_cache_fills".into(), hk.fills.to_string()));
+        out.push(("front_cache_invalidations".into(), hk.invalidations.to_string()));
+        out.push(("front_cache_evictions".into(), hk.evictions.to_string()));
+        out.push(("front_cache_live".into(), hk.live.to_string()));
+    }
     if let Some(clock) = clock {
         out.push(("lifecycle_tick".into(), clock.now().to_string()));
     }
@@ -151,6 +169,7 @@ mod tests {
             max_batch: 64,
             growth: None,
             reshard: None,
+            hotkey: None,
         };
         match lifecycle {
             Some(lc) => Coordinator::new_with_lifecycle(cfg, lc),
@@ -179,14 +198,41 @@ mod tests {
             "ops_executed", "n_workers", "inflight_jobs", "pending_jobs_per_worker", "n_shards",
             "epoch", "len", "capacity", "load_factor", "shard_min_len", "shard_max_len",
             "swept_expired", "split_events", "merge_events", "shrink_events", "freeze_events",
-            "frozen_len", "moved_keys",
+            "frozen_len", "moved_keys", "shard_max_ops", "shard_max_pending", "shard_skew",
         ] {
             assert!(out.contains(&format!("STAT {name} ")), "missing STAT {name} in:\n{out}");
         }
         assert!(!out.contains("lifecycle_tick"), "no clock, no tick stat");
+        assert!(!out.contains("front_cache_"), "no hotkey policy, no front-cache stats");
         assert!(out.ends_with("END\r\n"));
         assert!(out.contains("STAT admission_cap 128\r\n"));
         assert!(out.contains("STAT n_shards 4\r\n"));
+        assert!(out.contains("STAT shard_skew 0.0000\r\n"), "no traffic yet");
+    }
+
+    #[test]
+    fn stats_emits_front_cache_group_when_hotkey_armed() {
+        let c = Coordinator::new(CoordinatorConfig {
+            kind: TableKind::Double,
+            total_slots: 8 * 1024,
+            n_shards: 4,
+            n_workers: 2,
+            max_batch: 64,
+            growth: None,
+            reshard: None,
+            hotkey: Some(crate::coordinator::HotKeyPolicy::default()),
+        });
+        let out = run_admin(&c, None, "stats\r\nquit\r\n");
+        for name in [
+            "front_cache_hits", "front_cache_misses", "front_cache_fills",
+            "front_cache_invalidations", "front_cache_evictions", "front_cache_live",
+        ] {
+            assert!(out.contains(&format!("STAT {name} ")), "missing STAT {name} in:\n{out}");
+        }
+        // Conditional group sits between the skew gauges and END.
+        let skew_at = out.find("STAT shard_skew").unwrap();
+        let fc_at = out.find("STAT front_cache_hits").unwrap();
+        assert!(skew_at < fc_at);
     }
 
     #[test]

@@ -342,6 +342,7 @@ mod tests {
                 sweep_buckets_per_submit: 64,
                 ..Default::default()
             }),
+            hotkey: None,
         };
         match lifecycle {
             Some(lc) => Coordinator::new_with_lifecycle(cfg, lc),

@@ -229,6 +229,7 @@ fn persistent_pool_ordering_across_batches_and_clean_shutdown() {
             max_batch: 32,
             growth: None,
             reshard: None,
+            hotkey: None,
         });
         let ks = distinct_keys(256, 0x9D0 ^ kind as u64);
         for round in 0..3u64 {
@@ -279,6 +280,7 @@ fn coordinator_bulk_dispatch_matches_oracle_for_all_designs() {
             max_batch: 128,
             growth: None,
             reshard: None,
+            hotkey: None,
         });
         let ks = distinct_keys(64, 0xC0DE ^ kind as u64);
         let mut oracle: HashMap<u64, u64> = HashMap::new();

@@ -18,6 +18,7 @@ fn coordinator_serves_ycsb_consistently() {
         max_batch: 256,
         growth: None,
         reshard: None,
+        hotkey: None,
     });
     let universe = distinct_keys(8 * 1024, 0xE2E);
     let load_results = coord.run_stream(universe.iter().map(|&k| Op::Upsert(k, k ^ 3)));
@@ -107,6 +108,7 @@ fn coordinator_reshards_under_ycsb_traffic() {
             max_shards: 16,
             ..Default::default()
         }),
+        hotkey: None,
     });
     assert_eq!(coord.n_workers(), 2, "pool clamps to the initial shard count");
     let universe = distinct_keys(12 * 1024, 0x12E5);

@@ -22,6 +22,7 @@ fn start(ttl: bool, server_cfg: ServerConfig) -> (Server, Option<Arc<LifecycleCl
         max_batch: 256,
         growth: None,
         reshard: None,
+        hotkey: None,
     };
     let (coord, clock) = if ttl {
         let lc = LifecycleConfig::new(1);
